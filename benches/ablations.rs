@@ -1,0 +1,153 @@
+//! ABLATIONS — design choices the paper motivates but does not sweep:
+//!
+//!   1. partitioning scheme: balanced-random (paper §3) vs iid vs
+//!      contiguous — quality and capacity-violation rate;
+//!   2. compressor choice: greedy vs stochastic greedy (ε sweep) vs
+//!      threshold greedy (β = 1 + 2ε) — quality vs oracle-eval cost;
+//!   3. lazy vs naive greedy: oracle evaluations saved by the Minoux
+//!      heap (the reason the tree's O(nk) constant is small);
+//!   4. best-of-all-rounds vs final-round-only solution tracking
+//!      (Algorithm 1 line 11 matters).
+//!
+//! ```bash
+//! cargo bench --bench ablations [-- --quick]
+//! ```
+
+mod common;
+
+use std::sync::Arc;
+
+use hss::algorithms::{Compressor, LazyGreedy, StochasticGreedy, ThresholdGreedy};
+use hss::bench::{BenchArgs, Table};
+use hss::coordinator::tree::PartitionMode;
+use hss::coordinator::TreeBuilder;
+use hss::objectives::Problem;
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(3);
+    let engine = common::maybe_engine();
+    let name = if bargs.quick { "csn-2k" } else { "csn-20k" };
+    let k = 50usize;
+    let mu = 200usize;
+    let problem = common::problem_for(name, k, 2, &engine)?;
+    let central = common::centralized_cached(&problem, name)?;
+    let compressor = common::compressor(&engine);
+
+    // ---- 1. partitioning ---------------------------------------------------
+    let mut t1 = Table::new(
+        "ablation: partitioning scheme (tree, mu=200)",
+        &["mode", "ratio", "violations", "rounds"],
+    );
+    for (label, mode) in [
+        ("balanced-random (paper)", PartitionMode::Balanced),
+        ("iid multinomial", PartitionMode::Iid),
+        ("contiguous", PartitionMode::Contiguous),
+    ] {
+        let mut viols = 0usize;
+        let mut vals = hss::util::stats::Summary::new();
+        let mut rounds = 0usize;
+        for t in 0..bargs.trials {
+            match TreeBuilder::new(mu)
+                .compressor(compressor.clone())
+                .partition_mode(mode)
+                .build()
+                .run(&problem, 31 + t as u64)
+            {
+                Ok(res) => {
+                    vals.push(res.best.value / central.value);
+                    rounds = res.rounds;
+                }
+                Err(hss::Error::CapacityExceeded { .. }) => viols += 1,
+                Err(e) => return Err(e),
+            }
+        }
+        t1.row(vec![
+            label.into(),
+            if vals.is_empty() { "-".into() } else { format!("{:.4}", vals.mean()) },
+            format!("{viols}/{}", bargs.trials),
+            rounds.to_string(),
+        ]);
+    }
+    t1.print();
+    t1.save_json("ablation_partitioning")?;
+
+    // ---- 2. compressor choice ----------------------------------------------
+    let mut t2 = Table::new(
+        "ablation: compression subprocedure (tree, mu=200)",
+        &["compressor", "beta", "ratio", "oracle_evals"],
+    );
+    let compressors: Vec<(String, Arc<dyn Compressor>)> = vec![
+        ("greedy".into(), Arc::new(LazyGreedy::new())),
+        ("stochastic eps=0.5".into(), Arc::new(StochasticGreedy::new(0.5))),
+        ("stochastic eps=0.2".into(), Arc::new(StochasticGreedy::new(0.2))),
+        ("stochastic eps=0.1".into(), Arc::new(StochasticGreedy::new(0.1))),
+        ("threshold eps=0.2".into(), Arc::new(ThresholdGreedy::new(0.2))),
+        ("threshold eps=0.05".into(), Arc::new(ThresholdGreedy::new(0.05))),
+    ];
+    for (label, comp) in compressors {
+        let evals0 = problem.eval_count();
+        let (ratio, _) = common::mean_over_trials(bargs.trials, 77, |seed| {
+            Ok(TreeBuilder::new(mu)
+                .compressor(comp.clone())
+                .build()
+                .run(&problem, seed)?
+                .best
+                .value
+                / central.value)
+        })?;
+        let evals = (problem.eval_count() - evals0) / bargs.trials as u64;
+        t2.row(vec![
+            label,
+            comp.beta().map(|b| format!("{b:.2}")).unwrap_or("-".into()),
+            format!("{ratio:.4}"),
+            evals.to_string(),
+        ]);
+        println!("{}", t2.rows.last().unwrap().join("  "));
+    }
+    t2.print();
+    t2.save_json("ablation_compressor")?;
+
+    // ---- 3. lazy vs naive oracle evaluations --------------------------------
+    let mut t3 = Table::new(
+        "ablation: lazy (Minoux) heap vs naive greedy — oracle evals per machine",
+        &["mu", "naive=mu*k", "lazy", "saved"],
+    );
+    for mu in [200usize, 400, 800] {
+        let cands: Vec<u32> = (0..mu as u32).collect();
+        let p = Problem::exemplar(problem.dataset.clone(), k, 2);
+        LazyGreedy::new().compress(&p, &cands, 1)?;
+        let lazy = p.eval_count();
+        let naive = (mu * k) as u64;
+        t3.row(vec![
+            mu.to_string(),
+            naive.to_string(),
+            lazy.to_string(),
+            format!("{:.1}x", naive as f64 / lazy as f64),
+        ]);
+    }
+    t3.print();
+    t3.save_json("ablation_lazy")?;
+
+    // ---- 4. best-of-all-rounds vs final-only ---------------------------------
+    let mut t4 = Table::new(
+        "ablation: Algorithm 1 line 11 (best over all machines/rounds)",
+        &["mu", "best_of_all", "final_round_only", "gap_%"],
+    );
+    for mu in [2 * k, 200, 400] {
+        let res = TreeBuilder::new(mu)
+            .compressor(compressor.clone())
+            .build()
+            .run(&problem, 13)?;
+        let final_only = res.final_round_best.value;
+        let gap = 100.0 * (res.best.value - final_only) / res.best.value;
+        t4.row(vec![
+            mu.to_string(),
+            format!("{:.5}", res.best.value),
+            format!("{final_only:.5}"),
+            format!("{gap:.3}"),
+        ]);
+    }
+    t4.print();
+    t4.save_json("ablation_best_tracking")?;
+    Ok(())
+}

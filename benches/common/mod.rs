@@ -1,0 +1,99 @@
+//! Shared helpers for the bench binaries (each regenerates one paper
+//! table/figure — see DESIGN.md §6 for the experiment index).
+
+use std::sync::Arc;
+
+use hss::algorithms::Compressor;
+use hss::config::dataset_objective;
+use hss::coordinator::baselines;
+use hss::error::Result;
+use hss::objectives::Problem;
+use hss::runtime::accel::XlaGreedy;
+use hss::runtime::{Engine, EngineHandle};
+
+/// Start the XLA engine if artifacts are built.
+pub fn maybe_engine() -> Option<EngineHandle> {
+    let dir = hss::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("note: artifacts/ not built — running pure-rust oracles");
+        return None;
+    }
+    match Engine::start(&dir) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("note: engine failed to start ({e}); pure-rust oracles");
+            None
+        }
+    }
+}
+
+/// Build the problem for a registry dataset with the Table 2 objective.
+pub fn problem_for(name: &str, k: usize, seed: u64, engine: &Option<EngineHandle>) -> Result<Problem> {
+    let ds = hss::data::registry::load(name, seed)?;
+    let mut p = match dataset_objective(name) {
+        "logdet" => Problem::logdet(ds, k, seed),
+        _ => Problem::exemplar(ds, k, seed),
+    };
+    if let Some(e) = engine {
+        p = p.with_engine(e.clone());
+    }
+    Ok(p)
+}
+
+/// The per-machine compressor for a problem: XLA-fused when available.
+pub fn compressor(engine: &Option<EngineHandle>) -> Arc<dyn Compressor> {
+    match engine {
+        Some(e) => Arc::new(XlaGreedy::new(e.clone())),
+        None => Arc::new(hss::algorithms::LazyGreedy::new()),
+    }
+}
+
+/// Stochastic-greedy compressor (ε) for the problem.
+pub fn stochastic_compressor(engine: &Option<EngineHandle>, eps: f64) -> Arc<dyn Compressor> {
+    match engine {
+        Some(e) => Arc::new(XlaGreedy::stochastic(e.clone(), eps)),
+        None => Arc::new(hss::algorithms::StochasticGreedy::new(eps)),
+    }
+}
+
+/// Centralized greedy, cached on disk per (dataset, k, seed) — it is the
+/// denominator of every ratio and expensive at paper scale.
+pub fn centralized_cached(problem: &Problem, name: &str) -> Result<hss::algorithms::Solution> {
+    let dir = std::path::PathBuf::from("bench_results/.central_cache");
+    std::fs::create_dir_all(&dir).ok();
+    let key = dir.join(format!("{name}_k{}_s{}.json", problem.k, problem.seed));
+    if let Ok(text) = std::fs::read_to_string(&key) {
+        if let Ok(v) = hss::util::json::Json::parse(&text) {
+            if let (Some(items), Some(value)) = (v.get("items"), v.get("value").and_then(|x| x.as_f64())) {
+                let items: Vec<u32> = items
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_usize().map(|u| u as u32))
+                    .collect();
+                if !items.is_empty() {
+                    return Ok(hss::algorithms::Solution { items, value });
+                }
+            }
+        }
+    }
+    let sol = baselines::centralized(problem)?;
+    let doc = hss::util::json::obj(vec![
+        ("value", hss::util::json::num(sol.value)),
+        (
+            "items",
+            hss::util::json::arr(sol.items.iter().map(|&i| hss::util::json::num(i as f64))),
+        ),
+    ]);
+    std::fs::write(&key, doc.to_string()).ok();
+    Ok(sol)
+}
+
+/// Mean of a closure over `trials` seeds.
+pub fn mean_over_trials<F: FnMut(u64) -> Result<f64>>(trials: usize, base_seed: u64, mut f: F) -> Result<(f64, f64)> {
+    let mut s = hss::util::stats::Summary::new();
+    for t in 0..trials {
+        s.push(f(base_seed + 1000 * t as u64)?);
+    }
+    Ok((s.mean(), s.stddev()))
+}

@@ -1,0 +1,118 @@
+//! FIGURE 2 (a)-(d) — approximation ratio vs capacity, k = 50.
+//!
+//! Four panels (paper §4.3):
+//!   (a) active-set selection, WEBSCOPE-100K   (logdet)
+//!   (b) exemplar clustering,  CSN-20K         (exemplar)
+//!   (c) active-set selection, PARKINSONS      (logdet)
+//!   (d) exemplar clustering,  TINY-10K        (exemplar, d = 3072)
+//!
+//! Series: TREE, RANDGREEDI (undefined below its min capacity — printed
+//! as "-"), RANDOM; all ratios vs centralized GREEDY. The vertical
+//! reference is √(nk), the two-round minimum capacity.
+//!
+//! Expected shape: TREE ≈ 1.0 down to µ = 2k; RANDGREEDI matches TREE
+//! above √(nk) and is infeasible below; RANDOM far below both.
+//!
+//! ```bash
+//! cargo bench --bench fig2_capacity [-- --plot b] [-- --full] [-- --quick]
+//! ```
+
+mod common;
+
+use hss::bench::{BenchArgs, Table};
+use hss::coordinator::{baselines, TreeBuilder};
+
+struct Panel {
+    id: char,
+    dataset: &'static str,
+    quick_dataset: &'static str,
+}
+
+const PANELS: [Panel; 4] = [
+    Panel { id: 'a', dataset: "webscope-100k", quick_dataset: "webscope-10k" },
+    Panel { id: 'b', dataset: "csn-20k", quick_dataset: "csn-2k" },
+    Panel { id: 'c', dataset: "parkinsons", quick_dataset: "parkinsons-1k" },
+    Panel { id: 'd', dataset: "tiny-10k", quick_dataset: "tiny-2k" },
+];
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(2);
+    let engine = common::maybe_engine();
+    let full = bargs.args.flag("full");
+    let k = bargs.args.usize("k", 50)?;
+    let only = bargs.args.get("plot").map(|s| s.chars().next().unwrap());
+
+    for panel in PANELS {
+        if let Some(p) = only {
+            if p != panel.id {
+                continue;
+            }
+        }
+        // default: paper-scale for the cheap panels, scaled for the two
+        // expensive ones (webscope-100k centralized logdet is fine; tiny-10k
+        // d=3072 is the heavy one)
+        let name = if full {
+            panel.dataset
+        } else if bargs.quick || panel.id == 'd' || panel.id == 'a' {
+            panel.quick_dataset
+        } else {
+            panel.dataset
+        };
+        let problem = common::problem_for(name, k, 3, &engine)?;
+        let n = problem.n();
+        let sqrt_nk = ((n * k) as f64).sqrt() as usize;
+        println!(
+            "\npanel ({}) {} — n = {n}, k = {k}, sqrt(nk) = {sqrt_nk}, objective = {}",
+            panel.id,
+            name,
+            problem.objective.name()
+        );
+
+        let compressor = common::compressor(&engine);
+        let central = common::centralized_cached(&problem, name)?;
+
+        // geometric capacity sweep from 2k past 2·sqrt(nk)
+        let mut capacities = vec![];
+        let mut mu = 2 * k;
+        while mu <= (2 * sqrt_nk).max(4 * k) && mu < n {
+            capacities.push(mu);
+            mu = (mu as f64 * 1.7).round() as usize;
+        }
+
+        let mut table = Table::new(
+            &format!("Fig 2({}) {} k={k} (ratio vs centralized; sqrt(nk)={sqrt_nk})", panel.id, name),
+            &["mu", "tree", "tree_rounds", "randgreedi", "random"],
+        );
+
+        for &mu in &capacities {
+            let mut rounds = 0usize;
+            let (tree_val, _) = common::mean_over_trials(bargs.trials, 101, |seed| {
+                let res = TreeBuilder::new(mu)
+                    .compressor(compressor.clone())
+                    .build()
+                    .run(&problem, seed)?;
+                rounds = res.rounds;
+                Ok(res.best.value)
+            })?;
+            let rg = match baselines::rand_greedi(&problem, mu, compressor.as_ref(), 5) {
+                Ok(r) => format!("{:.4}", r.solution.value / central.value),
+                Err(hss::Error::CapacityExceeded { .. }) => "-".into(),
+                Err(e) => return Err(e),
+            };
+            let (rand_val, _) = common::mean_over_trials(bargs.trials, 303, |seed| {
+                Ok(baselines::random_subset(&problem, seed)?.value)
+            })?;
+            table.row(vec![
+                mu.to_string(),
+                format!("{:.4}", tree_val / central.value),
+                rounds.to_string(),
+                rg,
+                format!("{:.4}", rand_val / central.value),
+            ]);
+            println!("{}", table.rows.last().unwrap().join("  "));
+        }
+        table.print();
+        table.save_json(&format!("fig2{}_capacity_{name}", panel.id))?;
+    }
+    Ok(())
+}

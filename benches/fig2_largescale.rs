@@ -1,0 +1,97 @@
+//! FIGURE 2 (e)-(f) — large-scale experiments with GREEDY and
+//! STOCHASTIC GREEDY as pruning subprocedures (paper §4.4).
+//!
+//!   (e) active-set selection, WEBSCOPE (45M in the paper; scaled
+//!       surrogate here — see DESIGN.md §4)
+//!   (f) exemplar clustering, TINY (1M in the paper; scaled surrogate)
+//!
+//! Capacity is a small *percentage* of the ground set (0.05% / 0.1%);
+//! series: TREE@0.05%, TREE@0.1%, STOCHASTIC-TREE(ε=0.5)@0.05%,
+//! STOCHASTIC-TREE(ε=0.2)@0.05%, RANDOM — ratio vs centralized greedy,
+//! swept over k.
+//!
+//! Expected shape (paper Fig 2e/f): all TREE variants ≈ 1.0 on logdet;
+//! a slight stochastic-greedy quality dip on exemplar clustering.
+//!
+//! ```bash
+//! cargo bench --bench fig2_largescale [-- --plot e] [-- --quick]
+//! ```
+
+mod common;
+
+use hss::bench::{BenchArgs, Table};
+use hss::coordinator::{baselines, TreeBuilder};
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(1);
+    let engine = common::maybe_engine();
+    let only = bargs.args.get("plot").map(|s| s.chars().next().unwrap());
+
+    let panels: Vec<(char, &str)> = vec![
+        ('e', if bargs.quick { "webscope-10k" } else { "webscope-large" }),
+        ('f', if bargs.quick { "tiny-2k-d64" } else { "tiny-large" }),
+    ];
+    let ks: Vec<usize> = if bargs.args.flag("full") {
+        vec![25, 50, 100]
+    } else if bargs.quick {
+        vec![25]
+    } else {
+        vec![25, 50]
+    };
+
+    for (id, name) in panels {
+        if let Some(p) = only {
+            if p != id {
+                continue;
+            }
+        }
+        let spec_n = hss::data::registry::spec(name)?.n();
+        // capacity tiers as percentage of n; must exceed max k
+        let pct_small = ((spec_n as f64) * 0.0005) as usize;
+        let pct_big = ((spec_n as f64) * 0.001) as usize;
+        let kmax = *ks.iter().max().unwrap();
+        let cap_small = pct_small.max(2 * kmax);
+        let cap_big = pct_big.max(4 * kmax);
+        println!(
+            "\npanel ({id}) {name}: n = {spec_n}, capacities {cap_small} (~0.05%) / {cap_big} (~0.1%)"
+        );
+
+        let mut table = Table::new(
+            &format!("Fig 2({id}) {name} — ratio vs centralized greedy"),
+            &["k", "tree@0.05%", "tree@0.1%", "stoch(0.5)@0.05%", "stoch(0.2)@0.05%", "random"],
+        );
+
+        // centralized once at kmax; greedy prefixes give every smaller k
+        let p_max = common::problem_for(name, kmax, 3, &engine)?;
+        let central_full = common::centralized_cached(&p_max, name)?;
+
+        for &k in &ks {
+            let problem = common::problem_for(name, k, 3, &engine)?;
+            let prefix: Vec<u32> = central_full.items.iter().copied().take(k).collect();
+            let central_k = problem.value(&prefix);
+
+            let greedy = common::compressor(&engine);
+            let st05 = common::stochastic_compressor(&engine, 0.5);
+            let st02 = common::stochastic_compressor(&engine, 0.2);
+
+            let run = |cap: usize, c: std::sync::Arc<dyn hss::algorithms::Compressor>| -> hss::Result<f64> {
+                let res = TreeBuilder::new(cap).compressor(c).build().run(&problem, 17)?;
+                Ok(res.best.value / central_k)
+            };
+
+            let row = vec![
+                k.to_string(),
+                format!("{:.4}", run(cap_small, greedy.clone())?),
+                format!("{:.4}", run(cap_big, greedy.clone())?),
+                format!("{:.4}", run(cap_small, st05)?),
+                format!("{:.4}", run(cap_small, st02)?),
+                format!("{:.4}", baselines::random_subset(&problem, 5)?.value / central_k),
+            ];
+            table.row(row);
+            println!("{}", table.rows.last().unwrap().join("  "));
+        }
+        table.print();
+        table.save_json(&format!("fig2{id}_largescale_{name}"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! HOT-PATH microbenchmarks — the §Perf instrumentation.
+//!
+//! Measures each layer of the stack in isolation:
+//!   1. per-machine compression latency: pure lazy greedy vs fused XLA
+//!      greedy vs per-step XLA, across µ tiers;
+//!   2. artifact variants: pallas vs jnp distance kernel inside PJRT;
+//!   3. engine overhead: upload + dispatch vs device compute
+//!      (roofline context: the dist matmul's FLOP count / time);
+//!   4. end-to-end tree wall time at several capacities.
+//!
+//! ```bash
+//! cargo bench --bench hotpath [-- --quick]
+//! ```
+
+mod common;
+
+use std::sync::Arc;
+
+use hss::algorithms::{Compressor, LazyGreedy};
+use hss::bench::{fmt_ms, BenchArgs, BenchRunner, Table};
+use hss::coordinator::TreeBuilder;
+use hss::objectives::Problem;
+use hss::runtime::accel::XlaGreedy;
+use hss::runtime::manifest::Query;
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(3);
+    let runner = if bargs.quick { BenchRunner::quick() } else { BenchRunner { warmup: 1, samples: bargs.trials } };
+    let Some(engine) = common::maybe_engine() else {
+        eprintln!("hotpath bench requires artifacts (make artifacts)");
+        return Ok(());
+    };
+
+    let k = 50usize;
+    let ds = hss::data::registry::load("csn-20k", 1)?;
+    let problem = Problem::exemplar(ds.clone(), k, 1).with_engine(engine.clone());
+
+    // ---- 1. per-machine compression latency ------------------------------
+    let mut t1 = Table::new(
+        "per-machine compression (csn-20k, k=50): pure vs fused XLA",
+        &["mu", "pure_greedy", "xla_fused", "speedup"],
+    );
+    for mu in [128usize, 256, 512, 1024, 2048] {
+        let cands: Vec<u32> = (0..mu as u32).collect();
+        let pure = LazyGreedy::new();
+        let xla = XlaGreedy::new(engine.clone());
+        let sp = runner.time(|| {
+            pure.compress(&problem, &cands, 1).unwrap();
+        });
+        let sx = runner.time(|| {
+            xla.compress(&problem, &cands, 1).unwrap();
+        });
+        t1.row(vec![
+            mu.to_string(),
+            fmt_ms(&sp),
+            fmt_ms(&sx),
+            format!("{:.2}x", sp.mean() / sx.mean()),
+        ]);
+        println!("{}", t1.rows.last().unwrap().join("  "));
+    }
+    t1.print();
+    t1.save_json("hotpath_machine")?;
+
+    // ---- 2. pallas vs jnp artifact inside PJRT ---------------------------
+    let mut t2 = Table::new(
+        "artifact variants: pallas vs jnp (same computation, same PJRT client)",
+        &["kind", "shape", "jnp", "pallas", "jnp/pallas"],
+    );
+    for (kind, min_mu, d) in [("dist", 1024usize, 17usize), ("rbf", 1024, 22), ("exgreedy", 1024, 17)] {
+        let q = |pallas| Query {
+            kind,
+            min_m: if kind == "rbf" { 1024 } else { 2048 },
+            min_mu,
+            min_d: d,
+            min_k: if kind == "exgreedy" { k } else { 0 },
+            pallas: Some(pallas),
+        };
+        let (Ok(art_j), Ok(art_p)) = (engine.select(&q(false)), engine.select(&q(true))) else {
+            continue; // variant not in the artifact set
+        };
+        let cands: Vec<u32> = (0..min_mu as u32).collect();
+        let run_art = |art: &hss::runtime::Artifact| -> hss::Result<f64> {
+            let x = ds.gather_padded(&cands, art.mu, art.d);
+            let t0 = std::time::Instant::now();
+            match kind {
+                "dist" => {
+                    let w = ds.gather_padded(&problem.eval_ids, art.m, art.d);
+                    engine.dist(art, 0xbe9c, &w, x)?;
+                }
+                "rbf" => {
+                    let a = ds.gather_padded(&cands, art.m, art.d);
+                    engine.rbf(art, a, x)?;
+                }
+                _ => {
+                    let w = ds.gather_padded(&problem.eval_ids, art.m, art.d);
+                    let mut sm = vec![0.0f32; art.k * art.mu];
+                    for t in 0..art.k {
+                        sm[t * art.mu..t * art.mu + min_mu].fill(1.0);
+                    }
+                    engine.exgreedy(art, 0xbe9d, &w, x, sm)?;
+                }
+            }
+            Ok(t0.elapsed().as_secs_f64() * 1e3)
+        };
+        // warm both once (compile), then time
+        run_art(&art_j)?;
+        run_art(&art_p)?;
+        let mut sj = hss::util::stats::Summary::new();
+        let mut sp = hss::util::stats::Summary::new();
+        for _ in 0..runner.samples {
+            sj.push(run_art(&art_j)?);
+            sp.push(run_art(&art_p)?);
+        }
+        t2.row(vec![
+            kind.into(),
+            format!("m{}xu{}xd{}", art_j.m, art_j.mu, art_j.d),
+            fmt_ms(&sj),
+            fmt_ms(&sp),
+            format!("{:.2}x", sp.mean() / sj.mean()),
+        ]);
+        println!("{}", t2.rows.last().unwrap().join("  "));
+    }
+    t2.print();
+    t2.save_json("hotpath_variants")?;
+
+    // ---- 3. roofline context for the dist matmul -------------------------
+    let art = engine.select(&Query {
+        kind: "dist", min_m: 2048, min_mu: 2048, min_d: 17, min_k: 0, pallas: Some(false),
+    })?;
+    let w = ds.gather_padded(&problem.eval_ids, art.m, art.d);
+    let cands: Vec<u32> = (0..2048).collect();
+    let x = ds.gather_padded(&cands, art.mu, art.d);
+    engine.dist(&art, 0xf00f, &w, x.clone())?; // warm
+    let s = runner.time(|| {
+        engine.dist(&art, 0xf00f, &w, x.clone()).unwrap();
+    });
+    let flops = 2.0 * art.m as f64 * art.mu as f64 * art.d as f64;
+    println!(
+        "\ndist m{}xu{}xd{}: {:.2} ms -> {:.2} GFLOP/s (cross-term matmul only)",
+        art.m, art.mu, art.d,
+        s.median(),
+        flops / (s.median() / 1e3) / 1e9
+    );
+
+    // ---- 4. end-to-end tree wall time -------------------------------------
+    let mut t4 = Table::new(
+        "end-to-end tree (csn-20k, k=50): wall time by capacity and substrate",
+        &["mu", "pure_s", "xla_s", "speedup"],
+    );
+    let caps: &[usize] = if bargs.quick { &[400] } else { &[200, 400, 800] };
+    for &mu in caps {
+        let pure_p = Problem::exemplar(ds.clone(), k, 1);
+        let t0 = std::time::Instant::now();
+        TreeBuilder::new(mu).build().run(&pure_p, 3)?;
+        let pure_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        TreeBuilder::new(mu)
+            .compressor(Arc::new(XlaGreedy::new(engine.clone())))
+            .build()
+            .run(&problem, 3)?;
+        let xla_s = t0.elapsed().as_secs_f64();
+        t4.row(vec![
+            mu.to_string(),
+            format!("{pure_s:.2}"),
+            format!("{xla_s:.2}"),
+            format!("{:.2}x", pure_s / xla_s),
+        ]);
+        println!("{}", t4.rows.last().unwrap().join("  "));
+    }
+    t4.print();
+    t4.save_json("hotpath_tree")?;
+
+    let (calls, compiles, exec_ns, upload, hits) = engine.stats().snapshot();
+    println!(
+        "\nengine totals: {calls} calls, {compiles} compiles, {:.2} s device, {:.0} MB uploaded, {hits} cache hits",
+        exec_ns as f64 / 1e9,
+        upload as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! TABLE 1 — distributed-algorithm cost profile: minimum capacity,
+//! rounds, oracle evaluations, machines.
+//!
+//! Regenerates the paper's comparison empirically on this testbed:
+//! * measured rounds vs the Prop 3.1 formula across a capacity sweep;
+//! * oracle evaluations vs the O(nk) claim;
+//! * machines provisioned vs the O(n/µ) claim;
+//! * the two-round baselines' minimum-capacity wall (√(nk)): RANDGREEDI
+//!   hard-fails below it, TREE keeps working down to µ = 2k.
+//!
+//! ```bash
+//! cargo bench --bench table1_rounds [-- --quick]
+//! ```
+
+mod common;
+
+use hss::bench::{BenchArgs, Table};
+use hss::coordinator::{baselines, planner, TreeBuilder};
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(3);
+    let engine = common::maybe_engine();
+    let default_ds = if bargs.quick { "csn-2k" } else { "csn-20k" };
+    let dataset = bargs.args.get_or("dataset", default_ds).to_string();
+    let k = bargs.args.usize("k", 50)?;
+    let seed = 1u64;
+
+    let problem = common::problem_for(&dataset, k, seed, &engine)?;
+    let n = problem.n();
+    let sqrt_nk = ((n * k) as f64).sqrt();
+    let min_two_round = baselines::two_round_min_capacity(n, k);
+    println!(
+        "dataset {dataset}: n = {n}, k = {k}, sqrt(nk) = {sqrt_nk:.0}, \
+         two-round min capacity = {min_two_round}"
+    );
+
+    let mut table = Table::new(
+        "Table 1 (empirical): capacity / rounds / oracle evals / machines",
+        &[
+            "mu", "algo", "feasible", "rounds", "bound", "evals", "evals/nk",
+            "machines", "n/mu", "ratio",
+        ],
+    );
+
+    let mut default_mus: Vec<usize> = [2 * k, 4 * k, 200, 400, 800, 1600, 3200]
+        .into_iter()
+        .filter(|&mu| mu < 2 * n)
+        .collect();
+    default_mus.sort_unstable();
+    default_mus.dedup();
+    let capacities = bargs.args.usize_list("mus", &default_mus)?;
+    let compressor = common::compressor(&engine);
+    let central = common::centralized_cached(&problem, &dataset)?;
+
+    for &mu in &capacities {
+        if mu <= k {
+            continue;
+        }
+        // TREE
+        let evals0 = problem.eval_count();
+        let res = TreeBuilder::new(mu)
+            .compressor(compressor.clone())
+            .build()
+            .run(&problem, seed)?;
+        let evals = problem.eval_count() - evals0;
+        table.row(vec![
+            mu.to_string(),
+            "tree".into(),
+            "yes".into(),
+            res.rounds.to_string(),
+            planner::round_bound(n, k, mu).to_string(),
+            res.oracle_evals.to_string(),
+            format!("{:.2}", evals as f64 / (n * k) as f64),
+            res.total_machines.to_string(),
+            n.div_ceil(mu).to_string(),
+            format!("{:.4}", res.best.value / central.value),
+        ]);
+
+        // RANDGREEDI at the same capacity
+        match baselines::rand_greedi(&problem, mu, compressor.as_ref(), seed) {
+            Ok(rg) => table.row(vec![
+                mu.to_string(),
+                "randgreedi".into(),
+                "yes".into(),
+                "2".into(),
+                "2".into(),
+                "-".into(),
+                "-".into(),
+                rg.machines.to_string(),
+                n.div_ceil(mu).to_string(),
+                format!("{:.4}", rg.solution.value / central.value),
+            ]),
+            Err(hss::Error::CapacityExceeded { got, .. }) => table.row(vec![
+                mu.to_string(),
+                "randgreedi".into(),
+                format!("NO ({got}>{mu})"),
+                "-".into(),
+                "2".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+            Err(e) => return Err(e),
+        }
+    }
+
+    table.print();
+    table.save_json("table1_rounds")?;
+
+    // O(nk) check across n at fixed µ (scaling columns of Table 1)
+    let mut scale = Table::new(
+        "Table 1 (scaling): oracle evaluations are O(nk) for TREE",
+        &["n", "evals", "evals/nk", "machines", "rounds"],
+    );
+    let ns: &[usize] = if bargs.quick {
+        &[1_000, 2_000, 4_000]
+    } else {
+        &[2_000, 4_000, 8_000, 16_000]
+    };
+    for &n in ns {
+        let ds = std::sync::Arc::new(hss::data::synthetic::csn_like(n, 9));
+        let mut p = hss::objectives::Problem::exemplar(ds, k, 9);
+        if let Some(e) = &engine {
+            p = p.with_engine(e.clone());
+        }
+        let res = TreeBuilder::new(200)
+            .compressor(compressor.clone())
+            .build()
+            .run(&p, 2)?;
+        scale.row(vec![
+            n.to_string(),
+            res.oracle_evals.to_string(),
+            format!("{:.3}", res.oracle_evals as f64 / (n * k) as f64),
+            res.total_machines.to_string(),
+            res.rounds.to_string(),
+        ]);
+    }
+    scale.print();
+    scale.save_json("table1_scaling")?;
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! TABLE 3 — relative error (%) w.r.t. centralized GREEDY for three
+//! fixed capacities µ ∈ {200, 400, 800} and k ∈ {50, 100}, plus the
+//! RANDOM column, across the four evaluation datasets.
+//!
+//! Paper shape to reproduce: TREE ≤ ~0.4% error everywhere; RANDOM
+//! 20-60%.
+//!
+//! ```bash
+//! cargo bench --bench table3_relerr            # scaled datasets
+//! cargo bench --bench table3_relerr -- --full  # paper-scale datasets
+//! cargo bench --bench table3_relerr -- --quick # smallest/fastest
+//! ```
+
+mod common;
+
+use hss::bench::{BenchArgs, Table};
+use hss::coordinator::{baselines, TreeBuilder};
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(2);
+    let engine = common::maybe_engine();
+    let full = bargs.args.flag("full");
+
+    // Paper datasets (Table 2). Default trims the two expensive ones for
+    // the single-core budget; --full restores the paper grid.
+    let datasets: Vec<&str> = if full {
+        vec!["webscope-100k", "csn-20k", "parkinsons", "tiny-10k"]
+    } else if bargs.quick {
+        vec!["webscope-10k", "csn-2k", "parkinsons-1k", "tiny-2k"]
+    } else {
+        vec!["webscope-10k", "csn-20k", "parkinsons", "tiny-2k"]
+    };
+    let ks: Vec<usize> = if bargs.quick { vec![50] } else { vec![50, 100] };
+    let mus = [200usize, 400, 800];
+    let trials = bargs.trials;
+
+    let mut table = Table::new(
+        "Table 3: relative error (%) vs centralized GREEDY",
+        &["dataset", "k", "mu200", "mu400", "mu800", "random"],
+    );
+
+    for name in &datasets {
+        for &k in &ks {
+            let problem = common::problem_for(name, k, 7, &engine)?;
+            let compressor = common::compressor(&engine);
+            let central = common::centralized_cached(&problem, name)?;
+            let mut cells = vec![name.to_string(), k.to_string()];
+            for &mu in &mus {
+                if mu <= k {
+                    cells.push("-".into());
+                    continue;
+                }
+                let (mean_val, _) = common::mean_over_trials(trials, 11, |seed| {
+                    Ok(TreeBuilder::new(mu)
+                        .compressor(compressor.clone())
+                        .build()
+                        .run(&problem, seed)?
+                        .best
+                        .value)
+                })?;
+                let rel_err = 100.0 * (1.0 - mean_val / central.value);
+                cells.push(format!("{rel_err:.3}"));
+            }
+            let (rand_val, _) = common::mean_over_trials(trials, 23, |seed| {
+                Ok(baselines::random_subset(&problem, seed)?.value)
+            })?;
+            cells.push(format!("{:.2}", 100.0 * (1.0 - rand_val / central.value)));
+            table.row(cells);
+            // stream rows as they land (long bench)
+            println!("{}", table.rows.last().unwrap().join("  "));
+        }
+    }
+
+    table.print();
+    table.save_json("table3_relerr")?;
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Exemplar-based clustering (paper §4.2) on the Tiny-Images surrogate:
+//! pick k exemplars that minimize quantization error, distributed over
+//! fixed-capacity machines with the XLA-accelerated oracle.
+//!
+//! ```bash
+//! cargo run --release --example exemplar_clustering \
+//!     [-- --dataset tiny-2k --k 50 --capacity 200 --no-engine]
+//! ```
+
+use std::sync::Arc;
+
+use hss::coordinator::baselines;
+use hss::prelude::*;
+use hss::runtime::accel::XlaGreedy;
+
+fn main() -> Result<()> {
+    let args = hss::util::cli::Args::from_env()?;
+    let name = args.get_or("dataset", "tiny-2k-d64");
+    let k = args.usize("k", 50)?;
+    let capacity = args.usize("capacity", 200)?;
+    let seed = args.u64("seed", 11)?;
+
+    let dataset = hss::data::registry::load(name, seed)?;
+    println!(
+        "dataset {name}: n = {}, d = {} (unit-norm image-like vectors)",
+        dataset.n, dataset.d
+    );
+    let mut problem = Problem::exemplar(dataset.clone(), k, seed);
+
+    // Attach the XLA engine (AOT artifacts) unless --no-engine.
+    let engine = if args.flag("no-engine") {
+        None
+    } else {
+        match Engine::start_default() {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("engine unavailable ({e}); using the pure-rust oracle");
+                None
+            }
+        }
+    };
+    if let Some(e) = &engine {
+        problem = problem.with_engine(e.clone());
+    }
+
+    let tree = match &engine {
+        Some(e) => TreeBuilder::new(capacity)
+            .compressor(Arc::new(XlaGreedy::new(e.clone())))
+            .build(),
+        None => TreeBuilder::new(capacity).build(),
+    };
+
+    let t0 = std::time::Instant::now();
+    let result = tree.run(&problem, seed)?;
+    let tree_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let central = baselines::centralized(&problem)?;
+
+    println!("\nselected {} exemplars (ids): {:?}", result.best.items.len(),
+             &result.best.items[..result.best.items.len().min(10)]);
+    println!("tree        f(S) = {:.5}  in {:.0} ms, {} rounds, {} machines",
+             result.best.value, tree_ms, result.rounds, result.total_machines);
+    println!("centralized f(S) = {:.5}", central.value);
+    println!("relative error: {:.3}%",
+             100.0 * (1.0 - result.best.value / central.value));
+
+    // Quantization-error view (the k-medoid objective the reduction came
+    // from): L(S) = L(e0) − f(S).
+    let l_e0 = problem
+        .eval_ids
+        .iter()
+        .map(|&i| hss::linalg::sq_norm(dataset.row(i)))
+        .sum::<f64>()
+        / problem.eval_ids.len() as f64;
+    println!(
+        "quantization error: {:.5} -> {:.5} (baseline e0 only -> with exemplars)",
+        l_e0,
+        l_e0 - result.best.value
+    );
+    if let Some(e) = &engine {
+        let (calls, compiles, exec_ns, upload, hits) = e.stats().snapshot();
+        println!(
+            "engine: {calls} executions, {compiles} XLA compiles, {:.0} ms device time, \
+             {:.1} MB uploaded, {hits} buffer-cache hits",
+            exec_ns as f64 / 1e6,
+            upload as f64 / 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Hereditary constraints beyond cardinality (paper §3.2 / Theorem 3.5):
+//! distributed summarization under a knapsack budget, a partition
+//! matroid (diversity across groups), and their intersection.
+//!
+//! ```bash
+//! cargo run --release --example hereditary_constraints [-- --n 2000 --capacity 120]
+//! ```
+
+use std::sync::Arc;
+
+use hss::constraints::{Constraint, Intersection};
+use hss::coordinator::{baselines, TreeBuilder};
+use hss::prelude::*;
+
+fn main() -> Result<()> {
+    let args = hss::util::cli::Args::from_env()?;
+    let n = args.usize("n", 2_000)?;
+    let capacity = args.usize("capacity", 120)?;
+    let k = 20;
+
+    let ds = Arc::new(hss::data::synthetic::csn_like(n, 3));
+
+    // Knapsack: each item costs its squared norm ("transmission energy");
+    // budget caps the total.
+    let budget = 400.0;
+    let knapsack: Arc<dyn Constraint> =
+        Arc::new(Knapsack::from_row_norms(&ds, budget, k));
+
+    // Partition matroid: items belong to 8 "sensor groups" (id mod 8);
+    // at most 3 exemplars per group for coverage diversity.
+    let matroid: Arc<dyn Constraint> =
+        Arc::new(PartitionMatroid::round_robin(n, 8, 3, k));
+
+    let both: Arc<dyn Constraint> = Arc::new(Intersection::new(vec![
+        Arc::new(Knapsack::from_row_norms(&ds, budget, k)),
+        Arc::new(PartitionMatroid::round_robin(n, 8, 3, k)),
+    ]));
+
+    println!("n = {n}, k = {k}, µ = {capacity} — Thm 3.5: E[f(S)] ≥ (α/r)·f(OPT)\n");
+    for (label, cons) in [
+        ("cardinality only", None),
+        ("knapsack(b=400)", Some(knapsack)),
+        ("partition-matroid(8×3)", Some(matroid)),
+        ("knapsack ∩ matroid", Some(both)),
+    ] {
+        let mut p = Problem::exemplar(ds.clone(), k, 3);
+        if let Some(c) = cons {
+            p = p.with_constraint(c);
+        }
+        let central = baselines::centralized(&p)?;
+        let tree = TreeBuilder::new(capacity).build().run(&p, 9)?;
+        assert!(p.constraint.is_feasible(&tree.best.items, &p.dataset));
+        println!(
+            "{label:<24} tree f(S) = {:.4} ({} items, {} rounds) | centralized {:.4} | ratio {:.3}",
+            tree.best.value,
+            tree.best.items.len(),
+            tree.rounds,
+            central.value,
+            tree.best.value / central.value
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""AOT compiler: lower every configured L2 graph to HLO text + manifest.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The emitted ``manifest.json`` is the contract with the rust runtime
+(rust/src/runtime/manifest.rs): artifact name, kind, fixed shapes and
+input/output specs. The runtime selects the smallest artifact whose
+shapes dominate a request and pads accordingly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import ArtifactConfig
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(dt)]
+
+
+def lower_config(cfg: ArtifactConfig, out_dir: str) -> dict:
+    """Lower one artifact; returns its manifest entry."""
+    fn, args = model.build(cfg)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = cfg.name + ".hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *args)
+    return {
+        "name": cfg.name,
+        "kind": cfg.kind,
+        "file": fname,
+        "m": cfg.m,
+        "mu": cfg.mu,
+        "d": cfg.d,
+        "k": cfg.k,
+        "h2": cfg.h2,
+        "use_pallas": cfg.use_pallas,
+        "inputs": [
+            {"shape": list(a.shape), "dtype": _dtype_tag(a.dtype)} for a in args
+        ],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": _dtype_tag(o.dtype)}
+            for o in out_shapes
+        ],
+    }
+
+
+def default_configs() -> list[ArtifactConfig]:
+    """The artifact set covering every experiment in DESIGN.md §6.
+
+    mu tiers are powers of two; the runtime pads each machine's partition
+    up to the next tier. m = 2048 is the evaluation-subsample size used
+    throughout (paper uses 10000; scaled for the single-core CPU testbed,
+    same Chernoff-bound argument — see EXPERIMENTS.md).
+    """
+    cfgs: list[ArtifactConfig] = []
+    M = 2048
+    mu_tiers = [128, 256, 512, 1024, 2048]
+
+    def jnp_cfg(**kw):
+        cfgs.append(ArtifactConfig(use_pallas=False, **kw))
+
+    def pallas_cfg(**kw):
+        cfgs.append(ArtifactConfig(use_pallas=True, **kw))
+
+    # --- exemplar fused greedy (the workhorse) --------------------------
+    for u in mu_tiers:
+        for k in (50, 100):
+            jnp_cfg(kind="exgreedy", m=M, mu=u, d=32, k=k)  # csn-like
+    for u in mu_tiers:
+        jnp_cfg(kind="exgreedy", m=M, mu=u, d=3072, k=50)  # tiny-10k
+    for u in (256, 512, 1024):
+        jnp_cfg(kind="exgreedy", m=M, mu=u, d=3072, k=100)
+    # m=512 eval subsample for very high-dimensional data (Problem::exemplar
+    # drops to 512 eval rows when d >= 1024 — 4x less padded compute)
+    for u in mu_tiers:
+        for k in (50, 100):
+            jnp_cfg(kind="exgreedy", m=512, mu=u, d=3072, k=k)
+    jnp_cfg(kind="dist", m=512, mu=2048, d=3072)
+    for u in (512, 1024):
+        jnp_cfg(kind="exgreedy", m=M, mu=u, d=64, k=50)  # tiny-1m
+    pallas_cfg(kind="exgreedy", m=M, mu=1024, d=32, k=50)  # ablation twin
+
+    # --- distance matrix + per-step artifacts (hereditary / flexible) ---
+    for u in mu_tiers:
+        jnp_cfg(kind="dist", m=M, mu=u, d=32)
+        jnp_cfg(kind="exstep", m=M, mu=u)
+        jnp_cfg(kind="exupd", m=M, mu=u)
+    jnp_cfg(kind="dist", m=M, mu=2048, d=3072)
+    jnp_cfg(kind="dist", m=M, mu=1024, d=64)
+    pallas_cfg(kind="dist", m=M, mu=1024, d=32)
+    pallas_cfg(kind="dist", m=M, mu=2048, d=3072)
+    pallas_cfg(kind="dist", m=M, mu=1024, d=64)
+
+    # --- RBF Gram blocks (log-det / active-set path) ---------------------
+    for u in mu_tiers + [4096]:  # 4096: webscope-100k sweep beyond sqrt(nk)
+        jnp_cfg(kind="rbf", m=u, mu=u, d=32)
+    pallas_cfg(kind="rbf", m=1024, mu=1024, d=32)
+    return cfgs
+
+
+def smoke_configs() -> list[ArtifactConfig]:
+    """Tiny shapes for CI / pytest round-trip tests."""
+    return [
+        ArtifactConfig(kind="dist", m=64, mu=32, d=16, use_pallas=True,
+                       block_m=32, block_n=16, block_d=8),
+        ArtifactConfig(kind="dist", m=64, mu=32, d=16, use_pallas=False),
+        ArtifactConfig(kind="rbf", m=32, mu=32, d=16, use_pallas=True,
+                       block_m=16, block_n=16, block_d=8),
+        ArtifactConfig(kind="exstep", m=64, mu=32, use_pallas=False),
+        ArtifactConfig(kind="exupd", m=64, mu=32, use_pallas=False),
+        ArtifactConfig(kind="exgreedy", m=64, mu=32, d=16, k=4,
+                       use_pallas=False),
+        ArtifactConfig(kind="exgreedy", m=64, mu=32, d=16, k=4,
+                       use_pallas=True, block_m=32, block_n=16, block_d=8),
+    ]
+
+
+CONFIG_SETS = {"default": default_configs, "smoke": smoke_configs}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--set", dest="cfg_set", default="default",
+                   choices=sorted(CONFIG_SETS))
+    p.add_argument("--only", default=None,
+                   help="comma-separated artifact-name substrings to build")
+    args = p.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfgs = CONFIG_SETS[args.cfg_set]()
+    if args.only:
+        keys = args.only.split(",")
+        cfgs = [c for c in cfgs if any(s in c.name for s in keys)]
+
+    entries = []
+    for i, cfg in enumerate(cfgs):
+        entry = lower_config(cfg, args.out_dir)
+        entries.append(entry)
+        print(f"[{i + 1}/{len(cfgs)}] {cfg.name}", file=sys.stderr)
+
+    manifest = {"version": MANIFEST_VERSION, "set": args.cfg_set,
+                "eval_m": 2048 if args.cfg_set == "default" else 64,
+                "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

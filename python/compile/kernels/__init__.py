@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the oracle-evaluation hot spot.
+
+The paper's framework performs O(nk) oracle evaluations; for the two
+objective families used in its evaluation (exemplar-based clustering and
+log-det active-set selection) the hot spot is a pairwise
+distance / kernel-matrix block. Both kernels tile that block for the MXU
+(matmul path) and accumulate over the feature dimension.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT client
+cannot execute Mosaic custom-calls. See DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import exemplar, rbf, ref
+
+__all__ = ["exemplar", "rbf", "ref"]

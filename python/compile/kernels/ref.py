@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis, python/tests/test_kernels.py) and double as the ``jnp``
+artifact variants emitted by aot.py — the XLA-fused formulation a
+downstream user would write without Pallas. Keeping both lets the rust
+benches ablate pallas-vs-jnp on identical inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dist_matrix_ref(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Squared-euclidean distance matrix ``[m, mu]`` (float32)."""
+    wn = jnp.sum(w * w, axis=-1)
+    xn = jnp.sum(x * x, axis=-1)
+    cross = jax.lax.dot_general(
+        w, x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return wn[:, None] + xn[None, :] - 2.0 * cross
+
+
+def rbf_matrix_ref(a: jax.Array, b: jax.Array, h2: float = 0.25) -> jax.Array:
+    """RBF Gram matrix ``exp(-d2/h2)``, ``[p, q]`` (float32)."""
+    d2 = jnp.maximum(dist_matrix_ref(a, b), 0.0)
+    return jnp.exp(-d2 / h2)
+
+
+def exemplar_gains_ref(d2: jax.Array, curmin: jax.Array, mask: jax.Array) -> jax.Array:
+    """Marginal gains (unnormalized sums) of every candidate.
+
+    gain_j = sum_i max(0, curmin_i - d2[i, j]); masked-out candidates get
+    -inf so argmax never picks padding / already-selected items.
+    """
+    gains = jnp.sum(jnp.maximum(curmin[:, None] - d2, 0.0), axis=0)
+    return jnp.where(mask > 0, gains, -jnp.inf)

@@ -1,0 +1,216 @@
+"""Layer-2 JAX compute graphs for the oracle hot path.
+
+Each public ``make_*`` returns a function with *fixed* shapes (taken from
+an :class:`ArtifactConfig`) suitable for ``jax.jit(...).lower()`` — the
+AOT layer (aot.py) lowers every configured variant to HLO text once, and
+the rust coordinator executes them via PJRT forever after. Python never
+runs on the request path.
+
+Shape/padding contract with the rust side (runtime/manifest.rs):
+  * all tensors are float32 (indices int32);
+  * the evaluation subsample ``w`` is padded with zero rows — a zero row
+    has curmin == ||w||^2 == 0 so it never contributes gain (this is
+    exactly "a point already covered by the auxiliary element e0");
+  * candidate partitions ``x`` are padded with zero rows and ``mask`` /
+    ``stepmask`` entries 0; masked candidates read gain -inf;
+  * gains are *sums* over eval rows — the rust side normalizes by the
+    true eval-set size;
+  * argmax uses jnp.argmax first-max tie-breaking, matching the rust
+    pure-path (strictly-greater scan) so both are the same 1-nice GREEDY.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import exemplar as k_exemplar
+from .kernels import rbf as k_rbf
+from .kernels import ref as k_ref
+
+NEG_INF = jnp.float32(-3.0e38)  # sentinel for masked gains (finite: survives arithmetic)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactConfig:
+    """Fixed-shape configuration for one AOT artifact."""
+
+    kind: str  # dist | rbf | exstep | exupd | exgreedy
+    m: int = 0  # eval-subsample rows (exemplar family)
+    mu: int = 0  # machine capacity / candidate rows
+    d: int = 0  # feature dimension
+    k: int = 0  # greedy budget (exgreedy only)
+    h2: float = 0.25  # RBF bandwidth^2 (paper: h = 0.5)
+    use_pallas: bool = True
+    block_m: int = 256
+    block_n: int = 256
+    block_d: int = 512
+
+    @property
+    def name(self) -> str:
+        v = "pallas" if self.use_pallas else "jnp"
+        base = f"{self.kind}_{v}"
+        if self.kind in ("dist", "exgreedy"):
+            base += f"_m{self.m}_u{self.mu}_d{self.d}"
+        elif self.kind == "rbf":
+            base += f"_p{self.m}_q{self.mu}_d{self.d}"
+        else:  # exstep / exupd operate on a precomputed d2
+            base += f"_m{self.m}_u{self.mu}"
+        if self.kind == "exgreedy":
+            base += f"_k{self.k}"
+        return base
+
+
+def _dist(cfg: ArtifactConfig, w, x):
+    if cfg.use_pallas:
+        wn = jnp.sum(w * w, axis=-1)
+        xn = jnp.sum(x * x, axis=-1)
+        return k_exemplar.dist_matrix(
+            w, x, wn, xn,
+            block_m=cfg.block_m, block_n=cfg.block_n, block_d=cfg.block_d,
+        )
+    return k_ref.dist_matrix_ref(w, x)
+
+
+def make_dist(cfg: ArtifactConfig) -> tuple[Callable, list]:
+    """(w[m,d], x[mu,d]) -> (d2[m,mu],)"""
+
+    def fn(w, x):
+        return (_dist(cfg, w, x),)
+
+    args = [
+        jax.ShapeDtypeStruct((cfg.m, cfg.d), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.mu, cfg.d), jnp.float32),
+    ]
+    return fn, args
+
+
+def make_rbf(cfg: ArtifactConfig) -> tuple[Callable, list]:
+    """(a[p,d], b[q,d]) -> (K[p,q],) — RBF Gram block for the log-det path."""
+
+    def fn(a, b):
+        if cfg.use_pallas:
+            an = jnp.sum(a * a, axis=-1)
+            bn = jnp.sum(b * b, axis=-1)
+            k = k_rbf.rbf_matrix(
+                a, b, an, bn, h2=cfg.h2,
+                block_p=cfg.block_m, block_q=cfg.block_n, block_d=cfg.block_d,
+            )
+        else:
+            k = k_ref.rbf_matrix_ref(a, b, cfg.h2)
+        return (k,)
+
+    args = [
+        jax.ShapeDtypeStruct((cfg.m, cfg.d), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.mu, cfg.d), jnp.float32),
+    ]
+    return fn, args
+
+
+def _masked_gains(d2, curmin, mask):
+    gains = jnp.sum(jnp.maximum(curmin[:, None] - d2, 0.0), axis=0)
+    return jnp.where(mask > 0, gains, NEG_INF)
+
+
+def make_exstep(cfg: ArtifactConfig) -> tuple[Callable, list]:
+    """One greedy step on a precomputed distance matrix.
+
+    (d2[m,mu], curmin[m], mask[mu]) ->
+        (gains[mu], best[], best_gain[], new_curmin[m])
+
+    The rust coordinator may override the argmax choice (hereditary
+    constraints) — it then calls the ``exupd`` artifact instead of using
+    ``new_curmin``.
+    """
+
+    def fn(d2, curmin, mask):
+        gains = _masked_gains(d2, curmin, mask)
+        best = jnp.argmax(gains).astype(jnp.int32)
+        best_gain = gains[best]
+        new_curmin = jnp.minimum(curmin, d2[:, best])
+        return gains, best, best_gain, new_curmin
+
+    args = [
+        jax.ShapeDtypeStruct((cfg.m, cfg.mu), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.m,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.mu,), jnp.float32),
+    ]
+    return fn, args
+
+
+def make_exupd(cfg: ArtifactConfig) -> tuple[Callable, list]:
+    """(d2[m,mu], curmin[m], idx[]) -> (new_curmin[m],) — commit item idx."""
+
+    def fn(d2, curmin, idx):
+        col = jax.lax.dynamic_slice_in_dim(d2, idx, 1, axis=1)[:, 0]
+        return (jnp.minimum(curmin, col),)
+
+    args = [
+        jax.ShapeDtypeStruct((cfg.m, cfg.mu), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.m,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+    return fn, args
+
+
+def make_exgreedy(cfg: ArtifactConfig) -> tuple[Callable, list]:
+    """Whole-machine greedy: k steps fused into one executable.
+
+    (w[m,d], x[mu,d], stepmask[k,mu]) ->
+        (idxs[k] int32, step_gains[k], curmin[m])
+
+    ``stepmask`` row t restricts the candidates available at step t: all
+    ones (plain GREEDY), or a random subset per step (STOCHASTIC GREEDY,
+    Mirzasoleiman et al. 2015 — the rust side draws the subsets). The
+    availability mask (no re-selection) is maintained inside the scan.
+    A step whose best gain is the masked sentinel is a no-op: the rust
+    side truncates the solution at the first sentinel gain.
+    """
+
+    def fn(w, x, stepmask):
+        d2 = _dist(cfg, w, x)
+        curmin0 = jnp.sum(w * w, axis=-1)  # distance to auxiliary e0 = 0
+        avail0 = jnp.ones((cfg.mu,), jnp.float32)
+
+        def step(carry, smask):
+            curmin, avail = carry
+            gains = _masked_gains(d2, curmin, smask * avail)
+            best = jnp.argmax(gains).astype(jnp.int32)
+            best_gain = gains[best]
+            ok = best_gain > NEG_INF / 2
+            new_curmin = jnp.where(
+                ok, jnp.minimum(curmin, d2[:, best]), curmin
+            )
+            new_avail = jnp.where(
+                ok, avail.at[best].set(0.0), avail
+            )
+            return (new_curmin, new_avail), (best, best_gain)
+
+        (curmin, _), (idxs, gains) = jax.lax.scan(
+            step, (curmin0, avail0), stepmask
+        )
+        return idxs, gains, curmin
+
+    args = [
+        jax.ShapeDtypeStruct((cfg.m, cfg.d), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.mu, cfg.d), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.k, cfg.mu), jnp.float32),
+    ]
+    return fn, args
+
+
+MAKERS = {
+    "dist": make_dist,
+    "rbf": make_rbf,
+    "exstep": make_exstep,
+    "exupd": make_exupd,
+    "exgreedy": make_exgreedy,
+}
+
+
+def build(cfg: ArtifactConfig) -> tuple[Callable, list]:
+    """Resolve a config to (traceable_fn, example_args)."""
+    return MAKERS[cfg.kind](cfg)

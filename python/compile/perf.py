@@ -1,0 +1,107 @@
+"""L1 performance model: VMEM footprint and MXU-utilization estimates.
+
+Pallas interpret mode gives CPU-numpy timings only — not a TPU proxy —
+so the kernel is optimized *structurally*: we budget VMEM per grid step
+and estimate the fraction of work landing on the MXU, per DESIGN.md §9.
+Run as a module to print the table recorded in EXPERIMENTS.md §Perf:
+
+    cd python && python -m compile.perf
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# TPU-v4-ish budget figures (per core), used for *ratio* reporting only.
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128  # systolic array edge
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    name: str
+    block_m: int
+    block_n: int
+    block_d: int
+    m: int
+    mu: int
+    d: int
+
+    def vmem_bytes(self) -> int:
+        """f32 VMEM resident per grid step (double-buffered inputs).
+
+        Blocks live in VMEM while the MXU consumes them; Pallas
+        double-buffers the HBM→VMEM pipeline, hence the 2x on inputs.
+        """
+        inputs = self.block_m * self.block_d + self.block_n * self.block_d
+        norms = self.block_m + self.block_n
+        out = self.block_m * self.block_n
+        return 4 * (2 * (inputs + norms) + out)
+
+    def mxu_alignment(self) -> float:
+        """Fraction of each dot's operands filling the 128x128 MXU tiles."""
+        fill_m = min(self.block_m, MXU_DIM) / MXU_DIM
+        fill_n = min(self.block_n, MXU_DIM) / MXU_DIM
+        fill_d = min(self.block_d, MXU_DIM) / MXU_DIM
+        return fill_m * fill_n * fill_d
+
+    def mxu_flop_fraction(self) -> float:
+        """Share of kernel FLOPs on the MXU (dot) vs the VPU (norms,
+        scale-add, exp). Per output tile: dot = 2·bm·bn·bd; VPU ≈ 3·bm·bn
+        per d-step amortized."""
+        dot = 2.0 * self.block_m * self.block_n * self.block_d
+        vpu = 3.0 * self.block_m * self.block_n
+        return dot / (dot + vpu)
+
+    def grid(self) -> tuple[int, int, int]:
+        return (
+            self.m // self.block_m,
+            self.mu // self.block_n,
+            self.d // self.block_d,
+        )
+
+    def hbm_traffic_bytes(self) -> int:
+        """Bytes moved HBM→VMEM for one kernel invocation: every (i,j)
+        output tile re-reads its W and X blocks for each d-step."""
+        gi, gj, gd = self.grid()
+        w_reads = gi * gj * gd * self.block_m * self.block_d
+        x_reads = gi * gj * gd * self.block_n * self.block_d
+        out = self.m * self.mu
+        return 4 * (w_reads + x_reads + out)
+
+    def arithmetic_intensity(self) -> float:
+        flops = 2.0 * self.m * self.mu * self.d
+        return flops / self.hbm_traffic_bytes()
+
+
+def default_configs() -> list[BlockConfig]:
+    return [
+        BlockConfig("dist d32 (csn/webscope)", 256, 256, 32, 2048, 1024, 32),
+        BlockConfig("dist d64 (tiny-large)", 256, 256, 64, 2048, 1024, 64),
+        BlockConfig("dist d3072 (tiny)", 256, 256, 512, 512, 2048, 3072),
+        BlockConfig("rbf d32 (logdet gram)", 256, 256, 32, 1024, 1024, 32),
+        # block-size ablation on the heavy shape
+        BlockConfig("dist d3072 bm128", 128, 128, 512, 512, 2048, 3072),
+        BlockConfig("dist d3072 bd1024", 256, 256, 1024, 512, 2048, 3072),
+        BlockConfig("dist d3072 bm512", 512, 512, 512, 512, 2048, 3072),
+    ]
+
+
+def report(cfgs: list[BlockConfig] | None = None) -> str:
+    cfgs = cfgs or default_configs()
+    lines = [
+        f"{'config':<26} {'VMEM/step':>10} {'of 16MiB':>9} {'MXU-fill':>9} "
+        f"{'MXU-flops':>10} {'AI flop/B':>10} {'grid':>14}"
+    ]
+    for c in cfgs:
+        v = c.vmem_bytes()
+        lines.append(
+            f"{c.name:<26} {v / 1024:>8.0f}KB {v / VMEM_BYTES:>8.1%} "
+            f"{c.mxu_alignment():>8.1%} {c.mxu_flop_fraction():>9.1%} "
+            f"{c.arithmetic_intensity():>10.1f} {str(c.grid()):>14}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes and block configurations; every case asserts allclose
+against the reference implementation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import exemplar, rbf, ref
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+def _norms(a):
+    return jnp.sum(jnp.asarray(a) ** 2, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# dist_matrix
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16]),
+    bd=st.sampled_from([4, 8, 16]),
+    gm=st.integers(1, 3),
+    gn=st.integers(1, 3),
+    gd=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dist_matches_ref_shapes(bm, bn, bd, gm, gn, gd, seed):
+    rng = np.random.default_rng(seed)
+    m, mu, d = bm * gm, bn * gn, bd * gd
+    w, x = _rand(rng, m, d), _rand(rng, mu, d)
+    got = exemplar.dist_matrix(
+        jnp.asarray(w), jnp.asarray(x), _norms(w), _norms(x),
+        block_m=bm, block_n=bn, block_d=bd,
+    )
+    want = ref.dist_matrix_ref(jnp.asarray(w), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_dist_zero_rows_give_row_norms():
+    """Padding contract: a zero eval row has d2[i, j] == ||x_j||^2."""
+    rng = np.random.default_rng(0)
+    w = _rand(rng, 16, 8)
+    w[3] = 0.0
+    x = _rand(rng, 8, 8)
+    got = np.asarray(
+        exemplar.dist_matrix(jnp.asarray(w), jnp.asarray(x),
+                             _norms(w), _norms(x),
+                             block_m=8, block_n=8, block_d=8)
+    )
+    np.testing.assert_allclose(got[3], np.sum(x * x, -1), rtol=1e-5, atol=1e-5)
+
+
+def test_dist_self_distance_near_zero():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 16, 32)
+    got = np.asarray(
+        exemplar.dist_matrix(jnp.asarray(x), jnp.asarray(x),
+                             _norms(x), _norms(x),
+                             block_m=8, block_n=8, block_d=16)
+    )
+    assert np.all(np.abs(np.diag(got)) < 1e-4)
+
+
+def test_dist_rejects_indivisible_blocks():
+    rng = np.random.default_rng(2)
+    w, x = _rand(rng, 10, 8), _rand(rng, 8, 8)
+    with pytest.raises(ValueError):
+        exemplar.dist_matrix(jnp.asarray(w), jnp.asarray(x),
+                             _norms(w), _norms(x),
+                             block_m=4, block_n=4, block_d=8)
+
+
+def test_dist_rejects_dim_mismatch():
+    rng = np.random.default_rng(3)
+    with pytest.raises(ValueError):
+        exemplar.dist_matrix(
+            jnp.asarray(_rand(rng, 8, 8)), jnp.asarray(_rand(rng, 8, 4)),
+            jnp.zeros(8), jnp.zeros(8))
+
+
+# ---------------------------------------------------------------------------
+# rbf_matrix
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bp=st.sampled_from([8, 16]),
+    bq=st.sampled_from([8, 16]),
+    bd=st.sampled_from([4, 8]),
+    gp=st.integers(1, 3),
+    gq=st.integers(1, 3),
+    gd=st.integers(1, 4),
+    h2=st.sampled_from([0.25, 1.0, 4.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_matches_ref_shapes(bp, bq, bd, gp, gq, gd, h2, seed):
+    rng = np.random.default_rng(seed)
+    p, q, d = bp * gp, bq * gq, bd * gd
+    a, b = _rand(rng, p, d), _rand(rng, q, d)
+    got = rbf.rbf_matrix(
+        jnp.asarray(a), jnp.asarray(b), _norms(a), _norms(b),
+        h2=h2, block_p=bp, block_q=bq, block_d=bd,
+    )
+    want = ref.rbf_matrix_ref(jnp.asarray(a), jnp.asarray(b), h2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_rbf_diagonal_is_one():
+    rng = np.random.default_rng(4)
+    a = _rand(rng, 16, 8)
+    got = np.asarray(
+        rbf.rbf_matrix(jnp.asarray(a), jnp.asarray(a), _norms(a), _norms(a),
+                       h2=0.25, block_p=8, block_q=8, block_d=8)
+    )
+    np.testing.assert_allclose(np.diag(got), np.ones(16), rtol=1e-5, atol=1e-5)
+
+
+def test_rbf_values_in_unit_interval():
+    rng = np.random.default_rng(5)
+    a, b = _rand(rng, 16, 8), _rand(rng, 8, 8)
+    got = np.asarray(
+        rbf.rbf_matrix(jnp.asarray(a), jnp.asarray(b), _norms(a), _norms(b),
+                       h2=0.25, block_p=8, block_q=8, block_d=8)
+    )
+    assert np.all(got >= 0.0) and np.all(got <= 1.0 + 1e-6)
+
+
+def test_rbf_symmetry():
+    rng = np.random.default_rng(6)
+    a = _rand(rng, 16, 8)
+    got = np.asarray(
+        rbf.rbf_matrix(jnp.asarray(a), jnp.asarray(a), _norms(a), _norms(a),
+                       h2=0.25, block_p=8, block_q=8, block_d=4)
+    )
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-5)

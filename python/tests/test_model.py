@@ -1,0 +1,234 @@
+"""L2 correctness: the AOT-able graphs vs straightforward numpy loops.
+
+Verifies the exact semantics the rust coordinator relies on: padding
+contract, masking sentinel, first-max tie-breaking, fused-greedy ==
+step-by-step greedy == naive python greedy.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.model import ArtifactConfig
+
+
+def _data(seed, m, mu, d):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, d)).astype(np.float32)
+    x = rng.normal(size=(mu, d)).astype(np.float32)
+    return w, x
+
+
+def _naive_greedy(w, x, k, avail=None):
+    """Reference greedy: first-max tie-break, curmin starts at ||w||^2."""
+    d2 = ((w[:, None, :] - x[None, :, :]) ** 2).sum(-1).astype(np.float64)
+    cm = (w.astype(np.float64) ** 2).sum(-1)
+    sel, gains = [], []
+    avail = np.ones(len(x), bool) if avail is None else avail.copy()
+    for _ in range(k):
+        g = np.maximum(cm[:, None] - d2, 0).sum(0)
+        g[~avail] = -np.inf
+        j = int(np.argmax(g))
+        sel.append(j)
+        gains.append(g[j])
+        avail[j] = False
+        cm = np.minimum(cm, d2[:, j])
+    return sel, gains, cm
+
+
+# ---------------------------------------------------------------------------
+# exstep
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.sampled_from([16, 64]),
+       mu=st.sampled_from([8, 32]), d=st.sampled_from([4, 16]))
+def test_exstep_first_pick_matches_naive(seed, m, mu, d):
+    w, x = _data(seed, m, mu, d)
+    cfg = ArtifactConfig(kind="exstep", m=m, mu=mu)
+    fn, _ = model.build(cfg)
+    d2 = ((w[:, None, :] - x[None, :, :]) ** 2).sum(-1).astype(np.float32)
+    cm = (w * w).sum(-1)
+    mask = np.ones(mu, np.float32)
+    gains, best, best_gain, newcm = jax.jit(fn)(d2, cm, mask)
+    sel, ref_gains, _ = _naive_greedy(w, x, 1)
+    assert int(best) == sel[0]
+    np.testing.assert_allclose(float(best_gain), ref_gains[0], rtol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(newcm), np.minimum(cm, d2[:, sel[0]]), rtol=1e-5)
+
+
+def test_exstep_mask_excludes_candidates():
+    w, x = _data(7, 32, 16, 8)
+    cfg = ArtifactConfig(kind="exstep", m=32, mu=16)
+    fn, _ = model.build(cfg)
+    d2 = ((w[:, None, :] - x[None, :, :]) ** 2).sum(-1).astype(np.float32)
+    cm = (w * w).sum(-1)
+    mask = np.ones(16, np.float32)
+    _, best_all, _, _ = jax.jit(fn)(d2, cm, mask)
+    mask[int(best_all)] = 0.0
+    gains, best2, _, _ = jax.jit(fn)(d2, cm, mask)
+    assert int(best2) != int(best_all)
+    assert float(np.asarray(gains)[int(best_all)]) <= float(model.NEG_INF)
+
+
+def test_exstep_tie_break_is_first_max():
+    """Duplicate candidates must resolve to the lower index (1-nice)."""
+    w = np.ones((8, 4), np.float32)
+    x = np.zeros((6, 4), np.float32)
+    x[2] = 1.0
+    x[5] = 1.0  # same item as index 2
+    cfg = ArtifactConfig(kind="exstep", m=8, mu=6)
+    fn, _ = model.build(cfg)
+    d2 = ((w[:, None, :] - x[None, :, :]) ** 2).sum(-1).astype(np.float32)
+    cm = (w * w).sum(-1)
+    _, best, _, _ = jax.jit(fn)(d2, cm, np.ones(6, np.float32))
+    assert int(best) == 2
+
+
+# ---------------------------------------------------------------------------
+# exupd
+# ---------------------------------------------------------------------------
+
+
+def test_exupd_commits_chosen_column():
+    w, x = _data(11, 32, 16, 8)
+    cfg = ArtifactConfig(kind="exupd", m=32, mu=16)
+    fn, _ = model.build(cfg)
+    d2 = ((w[:, None, :] - x[None, :, :]) ** 2).sum(-1).astype(np.float32)
+    cm = (w * w).sum(-1)
+    for idx in (0, 7, 15):
+        (newcm,) = jax.jit(fn)(d2, cm, np.int32(idx))
+        np.testing.assert_allclose(
+            np.asarray(newcm), np.minimum(cm, d2[:, idx]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# exgreedy (fused whole-machine greedy)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_exgreedy_matches_naive(seed):
+    m, mu, d, k = 64, 32, 16, 6
+    w, x = _data(seed, m, mu, d)
+    cfg = ArtifactConfig(kind="exgreedy", m=m, mu=mu, d=d, k=k,
+                         use_pallas=False)
+    fn, _ = model.build(cfg)
+    sm = np.ones((k, mu), np.float32)
+    idxs, gains, curmin = jax.jit(fn)(w, x, sm)
+    sel, ref_gains, ref_cm = _naive_greedy(w, x, k)
+    assert list(np.asarray(idxs)) == sel
+    np.testing.assert_allclose(np.asarray(gains), ref_gains, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(curmin), ref_cm, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_exgreedy_pallas_matches_jnp():
+    m, mu, d, k = 64, 32, 16, 5
+    w, x = _data(3, m, mu, d)
+    sm = np.ones((k, mu), np.float32)
+    outs = []
+    for use_pallas in (False, True):
+        cfg = ArtifactConfig(kind="exgreedy", m=m, mu=mu, d=d, k=k,
+                             use_pallas=use_pallas,
+                             block_m=32, block_n=16, block_d=8)
+        fn, _ = model.build(cfg)
+        outs.append(jax.jit(fn)(w, x, sm))
+    assert list(np.asarray(outs[0][0])) == list(np.asarray(outs[1][0]))
+    np.testing.assert_allclose(np.asarray(outs[0][1]), np.asarray(outs[1][1]),
+                               rtol=1e-4)
+
+
+def test_exgreedy_padding_rows_never_selected():
+    """Zero-padded candidates with mask 0 must not appear in the solution."""
+    m, mu, d, k = 32, 16, 8, 5
+    w, x = _data(9, m, mu, d)
+    x[10:] = 0.0  # padding
+    sm = np.ones((k, mu), np.float32)
+    sm[:, 10:] = 0.0
+    cfg = ArtifactConfig(kind="exgreedy", m=m, mu=mu, d=d, k=k,
+                         use_pallas=False)
+    fn, _ = model.build(cfg)
+    idxs, gains, _ = jax.jit(fn)(w, x, sm)
+    assert all(int(i) < 10 for i in np.asarray(idxs))
+
+
+def test_exgreedy_exhausted_candidates_yield_sentinel():
+    """k > #available: surplus steps report the NEG_INF sentinel gain."""
+    m, mu, d, k = 32, 8, 8, 6
+    w, x = _data(13, m, mu, d)
+    sm = np.ones((k, mu), np.float32)
+    sm[:, 4:] = 0.0  # only 4 real candidates
+    cfg = ArtifactConfig(kind="exgreedy", m=m, mu=mu, d=d, k=k,
+                         use_pallas=False)
+    fn, _ = model.build(cfg)
+    idxs, gains, _ = jax.jit(fn)(w, x, sm)
+    gains = np.asarray(gains)
+    assert np.all(gains[:4] > float(model.NEG_INF) / 2)
+    assert np.all(gains[4:] <= float(model.NEG_INF) / 2)
+
+
+def test_exgreedy_stepmask_restricts_candidates():
+    """Stochastic-greedy contract: step t can only pick from stepmask[t]."""
+    m, mu, d, k = 32, 16, 8, 4
+    w, x = _data(17, m, mu, d)
+    rng = np.random.default_rng(17)
+    sm = np.zeros((k, mu), np.float32)
+    allowed = []
+    for t in range(k):
+        pick = rng.choice(mu, size=6, replace=False)
+        sm[t, pick] = 1.0
+        allowed.append(set(int(p) for p in pick))
+    cfg = ArtifactConfig(kind="exgreedy", m=m, mu=mu, d=d, k=k,
+                         use_pallas=False)
+    fn, _ = model.build(cfg)
+    idxs, gains, _ = jax.jit(fn)(w, x, sm)
+    for t, i in enumerate(np.asarray(idxs)):
+        assert int(i) in allowed[t]
+
+
+def test_exgreedy_monotone_objective():
+    """f(S_t) is non-decreasing: all step gains >= 0."""
+    m, mu, d, k = 64, 32, 8, 10
+    w, x = _data(21, m, mu, d)
+    cfg = ArtifactConfig(kind="exgreedy", m=m, mu=mu, d=d, k=k,
+                         use_pallas=False)
+    fn, _ = model.build(cfg)
+    _, gains, _ = jax.jit(fn)(w, x, np.ones((k, mu), np.float32))
+    assert np.all(np.asarray(gains) >= 0.0)
+
+
+def test_exgreedy_gains_diminish():
+    """Greedy step gains are non-increasing (submodularity signature)."""
+    m, mu, d, k = 64, 32, 8, 10
+    w, x = _data(23, m, mu, d)
+    cfg = ArtifactConfig(kind="exgreedy", m=m, mu=mu, d=d, k=k,
+                         use_pallas=False)
+    fn, _ = model.build(cfg)
+    _, gains, _ = jax.jit(fn)(w, x, np.ones((k, mu), np.float32))
+    g = np.asarray(gains)
+    assert np.all(g[:-1] >= g[1:] - 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# config naming
+# ---------------------------------------------------------------------------
+
+
+def test_config_names_unique_across_default_set():
+    from compile import aot
+    names = [c.name for c in aot.default_configs()]
+    assert len(names) == len(set(names))
+
+
+def test_config_name_encodes_variant():
+    a = ArtifactConfig(kind="dist", m=8, mu=8, d=4, use_pallas=True)
+    b = ArtifactConfig(kind="dist", m=8, mu=8, d=4, use_pallas=False)
+    assert a.name != b.name
+    assert "pallas" in a.name and "jnp" in b.name

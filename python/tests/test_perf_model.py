@@ -1,0 +1,41 @@
+"""Sanity checks on the L1 performance model (compile/perf.py)."""
+
+from compile import perf
+
+
+def test_all_default_configs_fit_vmem():
+    for c in perf.default_configs():
+        assert c.vmem_bytes() < perf.VMEM_BYTES, c.name
+
+
+def test_blocks_divide_shapes():
+    for c in perf.default_configs():
+        assert c.m % c.block_m == 0, c.name
+        assert c.mu % c.block_n == 0, c.name
+        assert c.d % c.block_d == 0, c.name
+
+
+def test_mxu_alignment_full_for_128_multiples():
+    c = perf.BlockConfig("t", 256, 256, 128, 512, 512, 128)
+    assert c.mxu_alignment() == 1.0
+    small = perf.BlockConfig("s", 64, 64, 16, 64, 64, 16)
+    assert small.mxu_alignment() < 0.1
+
+
+def test_mxu_flop_fraction_grows_with_depth():
+    shallow = perf.BlockConfig("s", 256, 256, 32, 512, 512, 32)
+    deep = perf.BlockConfig("d", 256, 256, 512, 512, 512, 512)
+    assert deep.mxu_flop_fraction() > shallow.mxu_flop_fraction()
+    assert deep.mxu_flop_fraction() > 0.99
+
+
+def test_arithmetic_intensity_increases_with_block_size():
+    small = perf.BlockConfig("s", 128, 128, 512, 512, 2048, 3072)
+    big = perf.BlockConfig("b", 512, 512, 512, 512, 2048, 3072)
+    assert big.arithmetic_intensity() > small.arithmetic_intensity()
+
+
+def test_report_renders_all_rows():
+    r = perf.report()
+    assert len(r.splitlines()) == len(perf.default_configs()) + 1
+    assert "MXU" in r

@@ -1,0 +1,165 @@
+//! Lazy GREEDY (Minoux 1978) — the paper's default β-nice compressor
+//! (β = 1 with consistent tie-breaking).
+
+use crate::algorithms::{lazy_greedy_core, Compressor, Solution};
+use crate::error::Result;
+use crate::objectives::Problem;
+
+/// Classic greedy with the lazy-evaluation priority queue. Supports any
+/// objective and any hereditary constraint; tie-breaking is by lowest
+/// candidate index (consistency property (1) of Definition 3.2).
+#[derive(Debug, Default, Clone)]
+pub struct LazyGreedy;
+
+impl LazyGreedy {
+    pub fn new() -> Self {
+        LazyGreedy
+    }
+}
+
+impl Compressor for LazyGreedy {
+    fn name(&self) -> String {
+        "greedy".into()
+    }
+
+    fn beta(&self) -> Option<f64> {
+        Some(1.0)
+    }
+
+    fn compress(&self, problem: &Problem, candidates: &[u32], _seed: u64) -> Result<Solution> {
+        lazy_greedy_core(problem, candidates, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::{Knapsack, PartitionMatroid};
+    use crate::data::synthetic;
+    use crate::objectives::coverage::CoverageData;
+    use std::sync::Arc;
+
+    #[test]
+    fn selects_top_k_on_modular() {
+        let w: Vec<f64> = vec![5.0, 1.0, 9.0, 3.0, 7.0, 2.0];
+        let p = Problem::modular(w, 3, 0);
+        let sol = LazyGreedy::new()
+            .compress(&p, &[0, 1, 2, 3, 4, 5], 0)
+            .unwrap();
+        let mut items = sol.items.clone();
+        items.sort_unstable();
+        assert_eq!(items, vec![0, 2, 4]);
+        assert_eq!(sol.value, 21.0);
+    }
+
+    #[test]
+    fn respects_cardinality() {
+        let ds = Arc::new(synthetic::csn_like(200, 1));
+        let p = Problem::exemplar(ds, 7, 1);
+        let cands: Vec<u32> = (0..200).collect();
+        let sol = LazyGreedy::new().compress(&p, &cands, 0).unwrap();
+        assert_eq!(sol.items.len(), 7);
+        // no duplicates
+        let set: std::collections::HashSet<_> = sol.items.iter().collect();
+        assert_eq!(set.len(), 7);
+    }
+
+    #[test]
+    fn solution_value_matches_problem_value() {
+        let ds = Arc::new(synthetic::csn_like(150, 2));
+        let p = Problem::exemplar(ds, 5, 2);
+        let cands: Vec<u32> = (0..150).collect();
+        let sol = LazyGreedy::new().compress(&p, &cands, 0).unwrap();
+        let v = p.value(&sol.items);
+        assert!((sol.value - v).abs() < 1e-9, "{} vs {v}", sol.value);
+    }
+
+    #[test]
+    fn respects_knapsack() {
+        let ds = Arc::new(synthetic::csn_like(60, 3));
+        let weights: Vec<f64> = (0..60).map(|i| 1.0 + (i % 4) as f64).collect();
+        let knap = Arc::new(Knapsack::new(weights.clone(), 6.0, 10));
+        let p = Problem::exemplar(ds, 10, 3).with_constraint(knap);
+        let cands: Vec<u32> = (0..60).collect();
+        let sol = LazyGreedy::new().compress(&p, &cands, 0).unwrap();
+        let used: f64 = sol.items.iter().map(|&i| weights[i as usize]).sum();
+        assert!(used <= 6.0 + 1e-9, "knapsack violated: {used}");
+        assert!(!sol.items.is_empty());
+    }
+
+    #[test]
+    fn respects_partition_matroid() {
+        let ds = Arc::new(synthetic::csn_like(60, 4));
+        let matroid = Arc::new(PartitionMatroid::round_robin(60, 3, 1, 10));
+        let p = Problem::exemplar(ds, 10, 4).with_constraint(matroid.clone());
+        let cands: Vec<u32> = (0..60).collect();
+        let sol = LazyGreedy::new().compress(&p, &cands, 0).unwrap();
+        assert!(sol.items.len() <= 3); // 3 groups × cap 1
+        let groups: std::collections::HashSet<u32> =
+            sol.items.iter().map(|&i| matroid.group(i)).collect();
+        assert_eq!(groups.len(), sol.items.len());
+    }
+
+    #[test]
+    fn greedy_is_optimal_on_modular_coverage() {
+        // disjoint covers: greedy == optimum
+        let data = CoverageData {
+            covers: (0..8).map(|i| vec![i as u32]).collect(),
+            weights: vec![1.0, 5.0, 3.0, 8.0, 2.0, 9.0, 4.0, 7.0],
+        };
+        let p = Problem::coverage(data, 3, 0);
+        let sol = LazyGreedy::new()
+            .compress(&p, &(0..8).collect::<Vec<_>>(), 0)
+            .unwrap();
+        assert_eq!(sol.value, 9.0 + 8.0 + 7.0);
+    }
+
+    #[test]
+    fn achieves_1_minus_1_over_e_on_random_coverage() {
+        use crate::util::check::{forall, gens};
+        // exhaustive OPT on small instances, greedy ≥ (1-1/e)·OPT
+        forall(17, 25, |rng| gens::coverage(rng, 10, 8), |inst| {
+            let data = CoverageData {
+                covers: inst.covers.clone(),
+                weights: inst.weights.clone(),
+            };
+            let k = 3.min(inst.n);
+            let p = Problem::coverage(data.clone(), k, 0);
+            let cands: Vec<u32> = (0..inst.n as u32).collect();
+            let sol = LazyGreedy::new().compress(&p, &cands, 0).unwrap();
+            // brute-force OPT over all k-subsets
+            let mut opt = 0.0f64;
+            let n = inst.n;
+            let idx: Vec<u32> = (0..n as u32).collect();
+            fn rec(
+                idx: &[u32],
+                k: usize,
+                start: usize,
+                cur: &mut Vec<u32>,
+                data: &CoverageData,
+                opt: &mut f64,
+            ) {
+                if cur.len() == k || start == idx.len() {
+                    let v = crate::objectives::coverage::coverage_value(data, cur);
+                    if v > *opt {
+                        *opt = v;
+                    }
+                    if cur.len() == k {
+                        return;
+                    }
+                }
+                for i in start..idx.len() {
+                    cur.push(idx[i]);
+                    rec(idx, k, i + 1, cur, data, opt);
+                    cur.pop();
+                }
+            }
+            rec(&idx, k, 0, &mut Vec::new(), &data, &mut opt);
+            let bound = (1.0 - (-1.0f64).exp()) * opt;
+            if sol.value + 1e-9 < bound {
+                return Err(format!("greedy {} < (1-1/e)OPT {}", sol.value, bound));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,241 @@
+//! Single-machine β-nice compression algorithms (Definition 3.2).
+//!
+//! These are the `A` plugged into Algorithm 1: given a machine's
+//! partition they return at most `k` feasible items. GREEDY (lazy
+//! variant, Minoux 1978) is 1-nice; THRESHOLD GREEDY (Badanidiyuru &
+//! Vondrák 2014) is (1+2ε)-nice; STOCHASTIC GREEDY (Mirzasoleiman et
+//! al. 2015) has no proven β but performs well empirically (paper §4.4).
+
+mod greedy;
+mod random_sel;
+mod stochastic;
+mod threshold;
+
+pub use greedy::LazyGreedy;
+pub use random_sel::RandomCompressor;
+pub use stochastic::StochasticGreedy;
+pub use threshold::ThresholdGreedy;
+
+use crate::error::Result;
+use crate::objectives::Problem;
+
+/// A feasible solution with its (f64, recomputable) objective value.
+#[derive(Debug, Clone, Default)]
+pub struct Solution {
+    pub items: Vec<u32>,
+    pub value: f64,
+}
+
+impl Solution {
+    pub fn empty() -> Self {
+        Solution::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// A single-machine compression algorithm: selects a feasible subset of
+/// `candidates` with at most `problem.k` items.
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> String;
+
+    /// β-niceness parameter, if proven (GREEDY: 1; threshold: 1+2ε).
+    /// Used by [`crate::analysis::bounds`] to instantiate Theorem 3.3.
+    fn beta(&self) -> Option<f64>;
+
+    /// Compress `candidates` (global ids) down to ≤ k feasible items.
+    /// `seed` derandomizes any internal randomness per machine.
+    fn compress(&self, problem: &Problem, candidates: &[u32], seed: u64) -> Result<Solution>;
+}
+
+/// Shared helper: run plain greedy with a lazy (Minoux) priority queue
+/// over an oracle, respecting the problem's hereditary constraint.
+/// `step_filter(step) -> Option<allowed>`: if Some, only candidate local
+/// indices in `allowed` may be selected at that step (stochastic greedy's
+/// per-step subsample); if None all candidates are eligible.
+pub(crate) fn lazy_greedy_core(
+    problem: &Problem,
+    candidates: &[u32],
+    step_filter: Option<&mut dyn FnMut(usize) -> Vec<usize>>,
+) -> Result<Solution> {
+    let mut oracle = problem.oracle(candidates);
+    lazy_greedy_over(oracle.as_mut(), problem, candidates, step_filter)
+}
+
+/// Same as [`lazy_greedy_core`] but over an externally-constructed oracle
+/// (the XLA-accelerated paths build their own).
+pub(crate) fn lazy_greedy_over(
+    oracle: &mut dyn crate::objectives::Oracle,
+    problem: &Problem,
+    candidates: &[u32],
+    mut step_filter: Option<&mut dyn FnMut(usize) -> Vec<usize>>,
+) -> Result<Solution> {
+    use std::cmp::Ordering as CmpOrd;
+    use std::collections::BinaryHeap;
+
+    /// Heap entry ordered by upper bound (max-heap); ties by lower index
+    /// for the consistent tie-breaking that makes GREEDY 1-nice.
+    struct Entry {
+        ub: f64,
+        j: usize,
+        stamp: usize,
+    }
+    impl PartialEq for Entry {
+        fn eq(&self, other: &Self) -> bool {
+            self.ub == other.ub && self.j == other.j
+        }
+    }
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, other: &Self) -> Option<CmpOrd> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, other: &Self) -> CmpOrd {
+            // max-heap on ub, then min on index (first-max tie-break)
+            self.ub
+                .partial_cmp(&other.ub)
+                .unwrap_or(CmpOrd::Equal)
+                .then_with(|| other.j.cmp(&self.j))
+        }
+    }
+
+    let k = problem.k.min(problem.constraint.max_cardinality());
+    let mut selected_local: Vec<usize> = Vec::with_capacity(k);
+    let mut selected: Vec<u32> = Vec::with_capacity(k);
+
+    if let Some(filter) = step_filter.as_mut() {
+        // Restricted mode (stochastic greedy): exactly k sampling steps,
+        // each scanning only that step's subsample — no lazy heap, since
+        // the eligible set changes every step.
+        for step in 0..k {
+            let allowed = filter(step);
+            let mut best: Option<(f64, usize)> = None;
+            for j in allowed {
+                if selected_local.contains(&j)
+                    || !problem
+                        .constraint
+                        .can_add(&selected, candidates[j], &problem.dataset)
+                {
+                    continue;
+                }
+                let g = oracle.gain(j);
+                let better = match best {
+                    None => true,
+                    Some((bg, bj)) => g > bg || (g == bg && j < bj),
+                };
+                if better {
+                    best = Some((g, j));
+                }
+            }
+            if let Some((g, j)) = best {
+                if g > 0.0 {
+                    oracle.commit(j);
+                    selected_local.push(j);
+                    selected.push(candidates[j]);
+                }
+            }
+        }
+        return Ok(Solution { value: oracle.value(), items: selected });
+    }
+
+    // Lazy (Minoux) greedy: initial bulk pass builds the heap of upper
+    // bounds; thereafter stale bounds are refreshed on demand.
+    let gains = oracle.bulk_gains();
+    let mut heap: BinaryHeap<Entry> = gains
+        .into_iter()
+        .enumerate()
+        .map(|(j, ub)| Entry { ub, j, stamp: 0 })
+        .collect();
+
+    while selected.len() < k {
+        let Some(top) = heap.pop() else { break };
+        if !problem
+            .constraint
+            .can_add(&selected, candidates[top.j], &problem.dataset)
+        {
+            // infeasible now; with accretive hereditary constraints it
+            // stays infeasible, so drop it
+            continue;
+        }
+        if top.stamp == selected.len() {
+            // fresh bound: this is the true argmax
+            if top.ub <= 0.0 {
+                break; // no positive marginal gain anywhere
+            }
+            oracle.commit(top.j);
+            selected_local.push(top.j);
+            selected.push(candidates[top.j]);
+        } else {
+            let g = oracle.gain(top.j);
+            heap.push(Entry { ub: g, j: top.j, stamp: selected.len() });
+        }
+    }
+
+    Ok(Solution { value: oracle.value(), items: selected })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectives::coverage::CoverageData;
+
+    /// Naive reference greedy used to validate the lazy implementation.
+    pub(crate) fn naive_greedy(problem: &Problem, candidates: &[u32]) -> Solution {
+        let mut oracle = problem.oracle(candidates);
+        let mut selected: Vec<u32> = Vec::new();
+        let mut taken = vec![false; candidates.len()];
+        while selected.len() < problem.k {
+            let mut best: Option<(f64, usize)> = None;
+            for j in 0..candidates.len() {
+                if taken[j]
+                    || !problem.constraint.can_add(&selected, candidates[j], &problem.dataset)
+                {
+                    continue;
+                }
+                let g = oracle.gain(j);
+                if best.map(|(bg, _)| g > bg).unwrap_or(true) {
+                    best = Some((g, j));
+                }
+            }
+            match best {
+                Some((g, j)) if g > 0.0 => {
+                    oracle.commit(j);
+                    taken[j] = true;
+                    selected.push(candidates[j]);
+                }
+                _ => break,
+            }
+        }
+        Solution { value: oracle.value(), items: selected }
+    }
+
+    #[test]
+    fn lazy_matches_naive_on_coverage() {
+        use crate::util::check::{forall, gens};
+        forall(31, 30, |rng| gens::coverage(rng, 14, 12), |inst| {
+            let data = CoverageData {
+                covers: inst.covers.clone(),
+                weights: inst.weights.clone(),
+            };
+            let p = Problem::coverage(data, 4, 1);
+            let cands: Vec<u32> = (0..inst.n as u32).collect();
+            let lazy = lazy_greedy_core(&p, &cands, None).unwrap();
+            let naive = naive_greedy(&p, &cands);
+            if lazy.items != naive.items {
+                return Err(format!("{:?} vs {:?}", lazy.items, naive.items));
+            }
+            if (lazy.value - naive.value).abs() > 1e-9 {
+                return Err("value mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

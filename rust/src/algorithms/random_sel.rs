@@ -1,0 +1,75 @@
+//! RANDOM baseline: a uniformly random feasible subset of size ≤ k
+//! (the paper's Table 3 "RANDOM" column and Figure 2 baseline).
+
+use crate::algorithms::{Compressor, Solution};
+use crate::error::Result;
+use crate::objectives::Problem;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default, Clone)]
+pub struct RandomCompressor;
+
+impl RandomCompressor {
+    pub fn new() -> Self {
+        RandomCompressor
+    }
+}
+
+impl Compressor for RandomCompressor {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn beta(&self) -> Option<f64> {
+        None
+    }
+
+    fn compress(&self, problem: &Problem, candidates: &[u32], seed: u64) -> Result<Solution> {
+        let mut rng = Rng::seed_from(seed ^ 0xBA5E11E5);
+        let mut order: Vec<u32> = candidates.to_vec();
+        rng.shuffle(&mut order);
+        let k = problem.k.min(problem.constraint.max_cardinality());
+        let mut items = Vec::with_capacity(k);
+        for &c in &order {
+            if items.len() >= k {
+                break;
+            }
+            if problem.constraint.can_add(&items, c, &problem.dataset) {
+                items.push(c);
+            }
+        }
+        let value = problem.value(&items);
+        Ok(Solution { items, value })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::LazyGreedy;
+    use crate::data::synthetic;
+    use std::sync::Arc;
+
+    #[test]
+    fn picks_k_distinct_feasible_items() {
+        let ds = Arc::new(synthetic::csn_like(100, 12));
+        let p = Problem::exemplar(ds, 10, 12);
+        let cands: Vec<u32> = (0..100).collect();
+        let sol = RandomCompressor::new().compress(&p, &cands, 5).unwrap();
+        assert_eq!(sol.items.len(), 10);
+        let set: std::collections::HashSet<_> = sol.items.iter().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_worse_than_greedy() {
+        let ds = Arc::new(synthetic::csn_like(500, 13));
+        let p = Problem::exemplar(ds, 10, 13);
+        let cands: Vec<u32> = (0..500).collect();
+        let r1 = RandomCompressor::new().compress(&p, &cands, 1).unwrap();
+        let r2 = RandomCompressor::new().compress(&p, &cands, 1).unwrap();
+        assert_eq!(r1.items, r2.items);
+        let g = LazyGreedy::new().compress(&p, &cands, 0).unwrap();
+        assert!(g.value >= r1.value, "greedy {} < random {}", g.value, r1.value);
+    }
+}

@@ -1,0 +1,129 @@
+//! STOCHASTIC GREEDY (Mirzasoleiman et al. 2015, "Lazier than lazy
+//! greedy"): at each of the k steps, scan a uniform random subsample of
+//! `s = ⌈(n/k)·ln(1/ε)⌉` remaining candidates and take the best. Expected
+//! approximation `1 − 1/e − ε` centralized; used by the paper (§4.4) as a
+//! pruning subprocedure without a proven β.
+
+use crate::algorithms::{lazy_greedy_core, Compressor, Solution};
+use crate::error::Result;
+use crate::objectives::Problem;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct StochasticGreedy {
+    pub epsilon: f64,
+}
+
+impl StochasticGreedy {
+    pub fn new(epsilon: f64) -> Self {
+        assert!(epsilon > 0.0 && epsilon < 1.0, "epsilon in (0,1)");
+        StochasticGreedy { epsilon }
+    }
+
+    /// Per-step sample size for `n` candidates and budget `k`.
+    pub fn sample_size(&self, n: usize, k: usize) -> usize {
+        if n == 0 || k == 0 {
+            return 0;
+        }
+        let s = ((n as f64 / k as f64) * (1.0 / self.epsilon).ln()).ceil() as usize;
+        s.clamp(1, n)
+    }
+}
+
+impl Compressor for StochasticGreedy {
+    fn name(&self) -> String {
+        format!("stochastic-greedy(eps={})", self.epsilon)
+    }
+
+    fn beta(&self) -> Option<f64> {
+        None // not proven β-nice (paper §3)
+    }
+
+    fn compress(&self, problem: &Problem, candidates: &[u32], seed: u64) -> Result<Solution> {
+        let n = candidates.len();
+        let s = self.sample_size(n, problem.k);
+        let mut rng = Rng::seed_from(seed ^ 0x570C4_A57C);
+        let mut filter = move |_step: usize| -> Vec<usize> {
+            rng.sample_indices(n, s).into_iter().map(|i| i as usize).collect()
+        };
+        lazy_greedy_core(problem, candidates, Some(&mut filter))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::LazyGreedy;
+    use crate::data::synthetic;
+    use std::sync::Arc;
+
+    #[test]
+    fn sample_size_formula() {
+        let sg = StochasticGreedy::new(0.5);
+        // (100/10)·ln2 ≈ 6.93 -> 7
+        assert_eq!(sg.sample_size(100, 10), 7);
+        let sg = StochasticGreedy::new(0.2);
+        assert_eq!(sg.sample_size(100, 10), 17); // 10·ln5 ≈ 16.09 -> 17
+        assert_eq!(sg.sample_size(5, 10), 1.max((0.5f64).ln().abs() as usize));
+        assert_eq!(sg.sample_size(0, 10), 0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = Arc::new(synthetic::csn_like(300, 5));
+        let p = Problem::exemplar(ds, 8, 5);
+        let cands: Vec<u32> = (0..300).collect();
+        let sg = StochasticGreedy::new(0.5);
+        let a = sg.compress(&p, &cands, 42).unwrap();
+        let b = sg.compress(&p, &cands, 42).unwrap();
+        assert_eq!(a.items, b.items);
+        let c = sg.compress(&p, &cands, 43).unwrap();
+        // different sample — almost surely a different trajectory
+        assert!(a.items != c.items || a.value == c.value);
+    }
+
+    #[test]
+    fn close_to_full_greedy_in_value() {
+        let ds = Arc::new(synthetic::csn_like(400, 6));
+        let p = Problem::exemplar(ds, 10, 6);
+        let cands: Vec<u32> = (0..400).collect();
+        let full = LazyGreedy::new().compress(&p, &cands, 0).unwrap();
+        let sg = StochasticGreedy::new(0.2).compress(&p, &cands, 1).unwrap();
+        assert!(
+            sg.value >= 0.8 * full.value,
+            "stochastic {} vs greedy {}",
+            sg.value,
+            full.value
+        );
+    }
+
+    #[test]
+    fn uses_fewer_oracle_evals_than_full_greedy() {
+        let ds = Arc::new(synthetic::csn_like(500, 7));
+        let cands: Vec<u32> = (0..500).collect();
+
+        let p1 = Problem::exemplar(ds.clone(), 10, 7);
+        LazyGreedy::new().compress(&p1, &cands, 0).unwrap();
+        let full_evals = p1.eval_count();
+
+        let p2 = Problem::exemplar(ds, 10, 7);
+        StochasticGreedy::new(0.5).compress(&p2, &cands, 0).unwrap();
+        let sg_evals = p2.eval_count();
+
+        assert!(
+            sg_evals < full_evals,
+            "stochastic {sg_evals} >= full {full_evals}"
+        );
+    }
+
+    #[test]
+    fn respects_k() {
+        let ds = Arc::new(synthetic::csn_like(100, 8));
+        let p = Problem::exemplar(ds, 5, 8);
+        let cands: Vec<u32> = (0..100).collect();
+        let sol = StochasticGreedy::new(0.5).compress(&p, &cands, 3).unwrap();
+        assert!(sol.items.len() <= 5);
+        let set: std::collections::HashSet<_> = sol.items.iter().collect();
+        assert_eq!(set.len(), sol.items.len());
+    }
+}

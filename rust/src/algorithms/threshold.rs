@@ -1,0 +1,117 @@
+//! THRESHOLD GREEDY (Badanidiyuru & Vondrák 2014): descending-threshold
+//! passes. `(1 + 2ε)`-nice (paper §3), `O(n/ε · log(n/ε))` oracle calls.
+
+use crate::algorithms::{Compressor, Solution};
+use crate::error::Result;
+use crate::objectives::Problem;
+
+#[derive(Debug, Clone)]
+pub struct ThresholdGreedy {
+    pub epsilon: f64,
+}
+
+impl ThresholdGreedy {
+    pub fn new(epsilon: f64) -> Self {
+        assert!(epsilon > 0.0 && epsilon < 1.0);
+        ThresholdGreedy { epsilon }
+    }
+}
+
+impl Compressor for ThresholdGreedy {
+    fn name(&self) -> String {
+        format!("threshold-greedy(eps={})", self.epsilon)
+    }
+
+    fn beta(&self) -> Option<f64> {
+        Some(1.0 + 2.0 * self.epsilon)
+    }
+
+    fn compress(&self, problem: &Problem, candidates: &[u32], _seed: u64) -> Result<Solution> {
+        let mut oracle = problem.oracle(candidates);
+        let k = problem.k.min(problem.constraint.max_cardinality());
+        let n = candidates.len();
+        let mut selected: Vec<u32> = Vec::with_capacity(k);
+        let mut taken = vec![false; n];
+        if n == 0 || k == 0 {
+            return Ok(Solution::empty());
+        }
+
+        // d = max singleton gain
+        let singleton = oracle.bulk_gains();
+        let d = singleton.iter().cloned().fold(0.0f64, f64::max);
+        if d <= 0.0 {
+            return Ok(Solution::empty());
+        }
+        let floor = (self.epsilon / n as f64) * d;
+        let mut tau = d;
+        while tau >= floor && selected.len() < k {
+            for j in 0..n {
+                if selected.len() >= k {
+                    break;
+                }
+                if taken[j]
+                    || !problem
+                        .constraint
+                        .can_add(&selected, candidates[j], &problem.dataset)
+                {
+                    continue;
+                }
+                let g = oracle.gain(j);
+                if g >= tau {
+                    oracle.commit(j);
+                    taken[j] = true;
+                    selected.push(candidates[j]);
+                }
+            }
+            tau *= 1.0 - self.epsilon;
+        }
+        Ok(Solution { value: oracle.value(), items: selected })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::LazyGreedy;
+    use crate::data::synthetic;
+    use std::sync::Arc;
+
+    #[test]
+    fn within_eps_of_greedy_value() {
+        let ds = Arc::new(synthetic::csn_like(300, 9));
+        let p = Problem::exemplar(ds, 10, 9);
+        let cands: Vec<u32> = (0..300).collect();
+        let greedy = LazyGreedy::new().compress(&p, &cands, 0).unwrap();
+        let th = ThresholdGreedy::new(0.1).compress(&p, &cands, 0).unwrap();
+        assert!(
+            th.value >= (1.0 - 0.15) * greedy.value,
+            "threshold {} vs greedy {}",
+            th.value,
+            greedy.value
+        );
+    }
+
+    #[test]
+    fn beta_reflects_epsilon() {
+        assert_eq!(ThresholdGreedy::new(0.25).beta(), Some(1.5));
+    }
+
+    #[test]
+    fn respects_k_and_feasibility() {
+        let ds = Arc::new(synthetic::csn_like(120, 10));
+        let p = Problem::exemplar(ds, 4, 10);
+        let cands: Vec<u32> = (0..120).collect();
+        let sol = ThresholdGreedy::new(0.2).compress(&p, &cands, 0).unwrap();
+        assert!(sol.items.len() <= 4);
+        assert!(p.constraint.is_feasible(&sol.items, &p.dataset));
+    }
+
+    #[test]
+    fn empty_input_gives_empty_solution() {
+        let ds = Arc::new(synthetic::csn_like(50, 11));
+        let p = Problem::exemplar(ds, 5, 11);
+        let sol = ThresholdGreedy::new(0.2).compress(&p, &[], 0).unwrap();
+        assert!(sol.items.is_empty());
+        assert_eq!(sol.value, 0.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Bench harness (criterion substitute for the offline build): timing
+//! runner with warmup + sampling, aligned table printing, and JSON
+//! result persistence under `bench_results/`.
+
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats::Summary;
+
+/// Timed measurement of a closure.
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 1, samples: 5 }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> Self {
+        BenchRunner { warmup: 0, samples: 2 }
+    }
+
+    /// Run `f` with warmup, collect per-sample wall times (ms).
+    pub fn time<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut summary = Summary::new();
+        for _ in 0..self.samples.max(1) {
+            let t = Instant::now();
+            f();
+            summary.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        summary
+    }
+}
+
+/// A column-aligned text table (what the bench binaries print — the
+/// same rows the paper's tables report).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Persist as JSON under `bench_results/<name>.json`.
+    pub fn save_json(&self, name: &str) -> std::io::Result<()> {
+        let dir = std::path::Path::new("bench_results");
+        std::fs::create_dir_all(dir)?;
+        let doc = obj(vec![
+            ("title", s(&self.title)),
+            ("headers", arr(self.headers.iter().map(|h| s(h)))),
+            (
+                "rows",
+                arr(self.rows.iter().map(|r| arr(r.iter().map(|c| s(c))))),
+            ),
+            ("unix_ms", num(now_ms())),
+        ]);
+        std::fs::write(dir.join(format!("{name}.json")), doc.to_string_pretty())
+    }
+}
+
+fn now_ms() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0)
+}
+
+/// Format helper: mean ± stddev in ms.
+pub fn fmt_ms(s: &Summary) -> String {
+    format!("{:.1}±{:.1}ms", s.mean(), s.stddev())
+}
+
+/// Parse common bench CLI flags: `--quick` (fewer trials), `--trials N`,
+/// `--out NAME`.
+pub struct BenchArgs {
+    pub args: crate::util::cli::Args,
+    pub quick: bool,
+    pub trials: usize,
+}
+
+impl BenchArgs {
+    pub fn from_env(default_trials: usize) -> Self {
+        let args = crate::util::cli::Args::from_env().unwrap_or_default();
+        let quick = args.flag("quick");
+        let trials = args
+            .usize("trials", if quick { 2 } else { default_trials })
+            .unwrap_or(default_trials);
+        BenchArgs { args, quick, trials }
+    }
+}
+
+/// Check Json import is exercised (keeps the module honest under
+/// `--no-default-features`-style pruning).
+pub fn _json_type_witness() -> Json {
+    Json::Null
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "column"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("column"));
+        let lines: Vec<&str> = r.lines().filter(|l| !l.is_empty()).collect();
+        // header + separator + 2 rows + title
+        assert!(lines.len() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn runner_collects_samples() {
+        let r = BenchRunner { warmup: 1, samples: 3 };
+        let mut count = 0;
+        let s = r.time(|| count += 1);
+        assert_eq!(count, 4);
+        assert_eq!(s.len(), 3);
+        assert!(s.mean() >= 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Experiment configuration: JSON-loadable run specs used by the CLI
+//! (`hss run --config <file>`) and defaults matching the paper's
+//! experimental grid.
+
+use std::path::Path;
+
+use crate::data::registry;
+use crate::error::{Error, Result};
+use crate::objectives::Problem;
+use crate::util::json::Json;
+
+/// Which algorithm a run executes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Algo {
+    Tree,
+    StochasticTree { epsilon: f64 },
+    RandGreedi,
+    Greedi,
+    Centralized,
+    Random,
+}
+
+impl Algo {
+    pub fn parse(name: &str, epsilon: f64) -> Result<Algo> {
+        Ok(match name {
+            "tree" => Algo::Tree,
+            "stochastic-tree" => Algo::StochasticTree { epsilon },
+            "randgreedi" => Algo::RandGreedi,
+            "greedi" => Algo::Greedi,
+            "centralized" | "greedy" => Algo::Centralized,
+            "random" => Algo::Random,
+            other => return Err(Error::Config(format!("unknown algorithm '{other}'"))),
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Algo::Tree => "tree".into(),
+            Algo::StochasticTree { epsilon } => format!("stochastic-tree(eps={epsilon})"),
+            Algo::RandGreedi => "randgreedi".into(),
+            Algo::Greedi => "greedi".into(),
+            Algo::Centralized => "centralized".into(),
+            Algo::Random => "random".into(),
+        }
+    }
+}
+
+/// One experiment run specification.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub algo: Algo,
+    pub k: usize,
+    pub capacity: usize,
+    pub seed: u64,
+    pub trials: usize,
+    pub use_engine: bool,
+    pub threads: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "csn-2k".into(),
+            algo: Algo::Tree,
+            k: 50,
+            capacity: 200,
+            seed: 42,
+            trials: 1,
+            use_engine: true,
+            threads: 2,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file, e.g.
+    /// `{"dataset":"csn-20k","algo":"tree","k":50,"capacity":400}`.
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<RunConfig> {
+        let v = Json::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(d) = v.get("dataset").and_then(Json::as_str) {
+            cfg.dataset = d.to_string();
+        }
+        let eps = v.get("epsilon").and_then(Json::as_f64).unwrap_or(0.5);
+        if let Some(a) = v.get("algo").and_then(Json::as_str) {
+            cfg.algo = Algo::parse(a, eps)?;
+        }
+        if let Some(x) = v.get("k").and_then(Json::as_usize) {
+            cfg.k = x;
+        }
+        if let Some(x) = v.get("capacity").and_then(Json::as_usize) {
+            cfg.capacity = x;
+        }
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = x as u64;
+        }
+        if let Some(x) = v.get("trials").and_then(Json::as_usize) {
+            cfg.trials = x.max(1);
+        }
+        if let Some(x) = v.get("use_engine").and_then(Json::as_bool) {
+            cfg.use_engine = x;
+        }
+        if let Some(x) = v.get("threads").and_then(Json::as_usize) {
+            cfg.threads = x.max(1);
+        }
+        // dataset names validate eagerly
+        registry::spec(&cfg.dataset)?;
+        Ok(cfg)
+    }
+
+    /// Materialize the problem this config describes (objective follows
+    /// the paper's Table 2 dataset→objective mapping).
+    pub fn problem(&self) -> Result<Problem> {
+        let ds = registry::load(&self.dataset, self.seed)?;
+        let p = match dataset_objective(&self.dataset) {
+            "logdet" => Problem::logdet(ds, self.k, self.seed),
+            _ => Problem::exemplar(ds, self.k, self.seed),
+        };
+        Ok(p)
+    }
+
+    /// Attach the XLA engine if requested and available.
+    pub fn problem_with_engine(&self) -> Result<(Problem, Option<crate::runtime::EngineHandle>)> {
+        let mut p = self.problem()?;
+        let engine = if self.use_engine {
+            match crate::runtime::Engine::start_default() {
+                Ok(e) => {
+                    p = p.with_engine(e.clone());
+                    Some(e)
+                }
+                Err(_) => None, // artifacts not built: pure path
+            }
+        } else {
+            None
+        };
+        Ok((p, engine))
+    }
+}
+
+/// Paper Table 2 dataset → objective mapping.
+pub fn dataset_objective(dataset: &str) -> &'static str {
+    if dataset.starts_with("parkinsons") || dataset.starts_with("webscope") {
+        "logdet"
+    } else {
+        "exemplar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_json_text(
+            r#"{"dataset":"csn-2k","algo":"stochastic-tree","epsilon":0.2,
+                "k":20,"capacity":100,"seed":7,"trials":3,"use_engine":false}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.k, 20);
+        assert_eq!(cfg.capacity, 100);
+        assert_eq!(cfg.algo, Algo::StochasticTree { epsilon: 0.2 });
+        assert!(!cfg.use_engine);
+        assert_eq!(cfg.trials, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_dataset_and_algo() {
+        assert!(RunConfig::from_json_text(r#"{"dataset":"nope"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"algo":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn objective_mapping_matches_table2() {
+        assert_eq!(dataset_objective("csn-20k"), "exemplar");
+        assert_eq!(dataset_objective("tiny-10k"), "exemplar");
+        assert_eq!(dataset_objective("parkinsons"), "logdet");
+        assert_eq!(dataset_objective("webscope-100k"), "logdet");
+    }
+
+    #[test]
+    fn default_is_valid() {
+        let cfg = RunConfig::default();
+        assert!(registry::spec(&cfg.dataset).is_ok());
+    }
+}

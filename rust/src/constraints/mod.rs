@@ -1,0 +1,289 @@
+//! Hereditary constraints (paper §3.2).
+//!
+//! A constraint family `I ⊆ 2^V` is *hereditary* if `S ∈ I` implies every
+//! subset of `S` is in `I`. All implementations here are defined through
+//! a `can_add(current, item)` predicate that is oblivious to insertion
+//! order, which guarantees heredity by construction (removing items never
+//! invalidates the remaining prefix checks) — property-tested below.
+
+use crate::data::Dataset;
+
+/// A hereditary constraint over dataset items.
+pub trait Constraint: Send + Sync {
+    fn name(&self) -> String;
+
+    /// May `item` be added to the feasible set `current`?
+    fn can_add(&self, current: &[u32], item: u32, dataset: &Dataset) -> bool;
+
+    /// Is the whole set feasible? Default: incremental check (valid for
+    /// order-oblivious `can_add`).
+    fn is_feasible(&self, items: &[u32], dataset: &Dataset) -> bool {
+        let mut cur: Vec<u32> = Vec::with_capacity(items.len());
+        for &i in items {
+            if !self.can_add(&cur, i, dataset) {
+                return false;
+            }
+            cur.push(i);
+        }
+        true
+    }
+
+    /// An upper bound on the size of any feasible set (used for buffer
+    /// sizing; the cardinality component of composite constraints).
+    fn max_cardinality(&self) -> usize;
+}
+
+/// `|S| ≤ k`.
+#[derive(Debug, Clone)]
+pub struct Cardinality {
+    pub k: usize,
+}
+
+impl Cardinality {
+    pub fn new(k: usize) -> Self {
+        Cardinality { k }
+    }
+}
+
+impl Constraint for Cardinality {
+    fn name(&self) -> String {
+        format!("card({})", self.k)
+    }
+
+    fn can_add(&self, current: &[u32], _item: u32, _dataset: &Dataset) -> bool {
+        current.len() < self.k
+    }
+
+    fn max_cardinality(&self) -> usize {
+        self.k
+    }
+}
+
+/// Knapsack: `Σ_{i∈S} w_i ≤ b` with per-item weights supplied by a
+/// closure of the dataset (e.g. row norm) or an explicit table, plus a
+/// cardinality cap `k` (the paper's framework always selects ≤ k items).
+pub struct Knapsack {
+    pub budget: f64,
+    pub k: usize,
+    weights: Vec<f64>,
+}
+
+impl Knapsack {
+    pub fn new(weights: Vec<f64>, budget: f64, k: usize) -> Self {
+        assert!(weights.iter().all(|&w| w >= 0.0), "negative knapsack weight");
+        Knapsack { budget, k, weights }
+    }
+
+    /// Weights = squared row norms (a natural "cost" for data summaries).
+    pub fn from_row_norms(dataset: &Dataset, budget: f64, k: usize) -> Self {
+        let weights = (0..dataset.n)
+            .map(|i| crate::linalg::sq_norm(dataset.row(i as u32)))
+            .collect();
+        Self::new(weights, budget, k)
+    }
+
+    pub fn weight(&self, item: u32) -> f64 {
+        self.weights[item as usize]
+    }
+}
+
+impl Constraint for Knapsack {
+    fn name(&self) -> String {
+        format!("knapsack(b={}, k={})", self.budget, self.k)
+    }
+
+    fn can_add(&self, current: &[u32], item: u32, _dataset: &Dataset) -> bool {
+        if current.len() >= self.k {
+            return false;
+        }
+        let used: f64 = current.iter().map(|&i| self.weights[i as usize]).sum();
+        used + self.weights[item as usize] <= self.budget + 1e-12
+    }
+
+    fn max_cardinality(&self) -> usize {
+        self.k
+    }
+}
+
+/// Partition matroid: the ground set is split into groups; at most
+/// `cap[g]` items may be chosen from group `g` (plus a global cap `k`).
+pub struct PartitionMatroid {
+    pub k: usize,
+    group_of: Vec<u32>,
+    caps: Vec<usize>,
+}
+
+impl PartitionMatroid {
+    pub fn new(group_of: Vec<u32>, caps: Vec<usize>, k: usize) -> Self {
+        assert!(group_of.iter().all(|&g| (g as usize) < caps.len()));
+        PartitionMatroid { k, group_of, caps }
+    }
+
+    /// Assign groups round-robin by item id (deterministic test helper).
+    pub fn round_robin(n: usize, groups: usize, per_group: usize, k: usize) -> Self {
+        let group_of = (0..n as u32).map(|i| i % groups as u32).collect();
+        Self::new(group_of, vec![per_group; groups], k)
+    }
+
+    pub fn group(&self, item: u32) -> u32 {
+        self.group_of[item as usize]
+    }
+}
+
+impl Constraint for PartitionMatroid {
+    fn name(&self) -> String {
+        format!("partition({} groups, k={})", self.caps.len(), self.k)
+    }
+
+    fn can_add(&self, current: &[u32], item: u32, _dataset: &Dataset) -> bool {
+        if current.len() >= self.k {
+            return false;
+        }
+        let g = self.group_of[item as usize] as usize;
+        let used = current
+            .iter()
+            .filter(|&&i| self.group_of[i as usize] as usize == g)
+            .count();
+        used < self.caps[g]
+    }
+
+    fn max_cardinality(&self) -> usize {
+        self.k.min(self.caps.iter().sum())
+    }
+}
+
+/// Intersection of hereditary constraints (itself hereditary).
+pub struct Intersection {
+    parts: Vec<std::sync::Arc<dyn Constraint>>,
+}
+
+impl Intersection {
+    pub fn new(parts: Vec<std::sync::Arc<dyn Constraint>>) -> Self {
+        assert!(!parts.is_empty());
+        Intersection { parts }
+    }
+}
+
+impl Constraint for Intersection {
+    fn name(&self) -> String {
+        let names: Vec<String> = self.parts.iter().map(|p| p.name()).collect();
+        format!("∩[{}]", names.join(", "))
+    }
+
+    fn can_add(&self, current: &[u32], item: u32, dataset: &Dataset) -> bool {
+        self.parts.iter().all(|p| p.can_add(current, item, dataset))
+    }
+
+    fn max_cardinality(&self) -> usize {
+        self.parts.iter().map(|p| p.max_cardinality()).min().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use std::sync::Arc;
+
+    fn ds(n: usize) -> Dataset {
+        Dataset::new("t", n, 1, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn cardinality_caps_size() {
+        let c = Cardinality::new(2);
+        let d = ds(5);
+        assert!(c.can_add(&[], 0, &d));
+        assert!(c.can_add(&[0], 1, &d));
+        assert!(!c.can_add(&[0, 1], 2, &d));
+        assert!(c.is_feasible(&[0, 1], &d));
+        assert!(!c.is_feasible(&[0, 1, 2], &d));
+    }
+
+    #[test]
+    fn knapsack_budget() {
+        let c = Knapsack::new(vec![1.0, 2.0, 3.0, 10.0], 5.0, 10);
+        let d = ds(4);
+        assert!(c.can_add(&[0], 2, &d)); // 1+3 = 4 ≤ 5
+        assert!(!c.can_add(&[0, 1], 2, &d)); // 1+2+3 = 6 > 5
+        assert!(!c.can_add(&[], 3, &d)); // 10 > 5 alone
+        assert!(c.is_feasible(&[0, 1], &d)); // 3 ≤ 5
+        assert!(!c.is_feasible(&[3], &d));
+    }
+
+    #[test]
+    fn knapsack_respects_cardinality_cap() {
+        let c = Knapsack::new(vec![0.0; 10], 100.0, 2);
+        let d = ds(10);
+        assert!(!c.can_add(&[0, 1], 2, &d));
+    }
+
+    #[test]
+    fn partition_matroid_group_caps() {
+        // items 0..6, groups {0,1} alternating, cap 1 per group, k=4
+        let c = PartitionMatroid::round_robin(6, 2, 1, 4);
+        let d = ds(6);
+        assert!(c.can_add(&[], 0, &d));
+        assert!(!c.can_add(&[0], 2, &d)); // group 0 full
+        assert!(c.can_add(&[0], 1, &d)); // group 1 free
+        assert!(c.is_feasible(&[0, 1], &d));
+        assert!(!c.is_feasible(&[0, 2], &d));
+        assert_eq!(c.max_cardinality(), 2);
+    }
+
+    #[test]
+    fn intersection_requires_all() {
+        let d = ds(6);
+        let c = Intersection::new(vec![
+            Arc::new(Cardinality::new(3)),
+            Arc::new(PartitionMatroid::round_robin(6, 2, 1, 10)),
+        ]);
+        assert!(c.can_add(&[], 0, &d));
+        assert!(!c.can_add(&[0], 2, &d)); // matroid blocks
+        assert_eq!(c.max_cardinality(), 2); // min(3, 2)
+        assert!(c.name().contains("card(3)"));
+    }
+
+    /// Heredity property: if S is feasible then every subset is.
+    #[test]
+    fn heredity_property_random_instances() {
+        use crate::util::check::forall;
+        let d = ds(16);
+        let constraints: Vec<Arc<dyn Constraint>> = vec![
+            Arc::new(Cardinality::new(4)),
+            Arc::new(Knapsack::new((0..16).map(|i| (i % 5) as f64).collect(), 7.0, 6)),
+            Arc::new(PartitionMatroid::round_robin(16, 4, 2, 5)),
+        ];
+        for c in constraints {
+            forall(7, 60, |rng| {
+                // grow a feasible set greedily from a random order
+                let mut order: Vec<u32> = (0..16).collect();
+                rng.shuffle(&mut order);
+                let mut set = Vec::new();
+                for &i in &order {
+                    if c.can_add(&set, i, &d) {
+                        set.push(i);
+                    }
+                    if set.len() >= 5 {
+                        break;
+                    }
+                }
+                let drop = if set.is_empty() { 0 } else { rng.below(set.len()) };
+                (set, drop)
+            }, |(set, drop)| {
+                if !c.is_feasible(set, &d) {
+                    return Err(format!("{} grew infeasible set", c.name()));
+                }
+                // remove one element: must stay feasible
+                let mut sub = set.clone();
+                if !sub.is_empty() {
+                    sub.remove(*drop);
+                }
+                if !c.is_feasible(&sub, &d) {
+                    return Err(format!("{} violated heredity", c.name()));
+                }
+                Ok(())
+            });
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Baseline algorithms the paper compares against (§4.3):
+//! centralized GREEDY, the two-round GREEDI / RANDGREEDI, and RANDOM.
+
+use std::sync::Arc;
+
+use crate::algorithms::{Compressor, LazyGreedy, RandomCompressor, Solution};
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::partitioner;
+use crate::error::{Error, Result};
+use crate::objectives::Problem;
+use crate::util::rng::Rng;
+
+/// Centralized GREEDY over the full ground set — the quality reference
+/// all ratios are reported against. Uses the XLA-accelerated oracle when
+/// the problem carries an engine (bulk initial pass), the pure oracle
+/// otherwise.
+pub fn centralized(problem: &Problem) -> Result<Solution> {
+    let all: Vec<u32> = (0..problem.n() as u32).collect();
+    centralized_on(problem, &all)
+}
+
+/// Centralized GREEDY restricted to a subset (shared helper).
+pub fn centralized_on(problem: &Problem, items: &[u32]) -> Result<Solution> {
+    if let (Some(engine), crate::objectives::Objective::Exemplar) =
+        (&problem.engine, &problem.objective)
+    {
+        let mut oracle =
+            crate::runtime::accel::XlaExemplarOracle::new(engine.clone(), problem, items)?;
+        return crate::algorithms::lazy_greedy_over(&mut oracle, problem, items, None);
+    }
+    LazyGreedy::new().compress(problem, items, 0)
+}
+
+/// Result of a two-round baseline run.
+#[derive(Debug)]
+pub struct TwoRoundResult {
+    pub solution: Solution,
+    pub machines: usize,
+    /// Size of the union of partial solutions (must fit in µ).
+    pub union_size: usize,
+}
+
+/// RANDGREEDI (Barbosa et al. 2015a): random partition to m = ⌈n/µ⌉
+/// machines, greedy each, then greedy over the union on ONE machine.
+/// **Fails with [`Error::CapacityExceeded`] when the union exceeds µ** —
+/// the horizontal-scaling failure mode motivating the paper (Table 1).
+pub fn rand_greedi(
+    problem: &Problem,
+    capacity: usize,
+    compressor: &dyn Compressor,
+    seed: u64,
+) -> Result<TwoRoundResult> {
+    two_round(problem, capacity, compressor, seed, true)
+}
+
+/// GREEDI (Mirzasoleiman et al. 2013): same two-round scheme but with an
+/// arbitrary (contiguous) partition.
+pub fn greedi(
+    problem: &Problem,
+    capacity: usize,
+    compressor: &dyn Compressor,
+    seed: u64,
+) -> Result<TwoRoundResult> {
+    two_round(problem, capacity, compressor, seed, false)
+}
+
+fn two_round(
+    problem: &Problem,
+    capacity: usize,
+    compressor: &dyn Compressor,
+    seed: u64,
+    random_partition: bool,
+) -> Result<TwoRoundResult> {
+    let n = problem.n();
+    if capacity <= problem.k {
+        return Err(Error::invalid(format!(
+            "capacity {capacity} must exceed k={}",
+            problem.k
+        )));
+    }
+    let m = n.div_ceil(capacity).max(1);
+    let all: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::seed_from(seed ^ 0x6EED_1D1D);
+    let parts = if random_partition {
+        partitioner::balanced_random_partition(&all, m, &mut rng)
+    } else {
+        partitioner::contiguous_partition(&all, m)
+    };
+    let cluster = Cluster::new(capacity);
+    let sols = cluster.run_round(problem, compressor, &parts, rng.next_u64())?;
+
+    let mut union: Vec<u32> = sols.iter().flat_map(|s| s.items.iter().copied()).collect();
+    union.sort_unstable();
+    let union_size = union.len();
+    // The defining limitation: round 2 runs on ONE machine of capacity µ.
+    if union_size > capacity {
+        return Err(Error::CapacityExceeded {
+            capacity,
+            got: union_size,
+            ctx: format!(" (two-round union of {m} machines × k={})", problem.k),
+        });
+    }
+    let final_sol = compressor.compress(problem, &union, rng.next_u64())?;
+    let best_partial = sols
+        .into_iter()
+        .max_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
+        .unwrap_or_default();
+    let solution = if final_sol.value >= best_partial.value {
+        final_sol
+    } else {
+        best_partial
+    };
+    Ok(TwoRoundResult { solution, machines: m, union_size })
+}
+
+/// RANDOM baseline: uniformly random feasible k-subset of the ground set.
+pub fn random_subset(problem: &Problem, seed: u64) -> Result<Solution> {
+    let all: Vec<u32> = (0..problem.n() as u32).collect();
+    RandomCompressor::new().compress(problem, &all, seed)
+}
+
+/// Convenience wrapper: default-compressor (pure greedy) RANDGREEDI.
+pub fn rand_greedi_default(
+    problem: &Problem,
+    capacity: usize,
+    seed: u64,
+) -> Result<TwoRoundResult> {
+    rand_greedi(problem, capacity, &LazyGreedy::new(), seed)
+}
+
+/// The minimum capacity at which the two-round baselines are feasible:
+/// `max(⌈n/m⌉, m·k)` minimized over m — i.e. ≈ √(nk) (paper §2).
+pub fn two_round_min_capacity(n: usize, k: usize) -> usize {
+    let mut best = usize::MAX;
+    let mut m = 1usize;
+    while m * m <= n.max(1) * 4 {
+        let cap = (n.div_ceil(m)).max(m * k);
+        best = best.min(cap);
+        m += 1;
+    }
+    best
+}
+
+/// Trivially wraps centralized greedy in an Arc-compressor shape for the
+/// bench tables.
+pub fn centralized_as_compressor() -> Arc<dyn Compressor> {
+    Arc::new(LazyGreedy::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn centralized_beats_random() {
+        let ds = Arc::new(synthetic::csn_like(400, 1));
+        let p = Problem::exemplar(ds, 10, 1);
+        let c = centralized(&p).unwrap();
+        let r = random_subset(&p, 3).unwrap();
+        assert!(c.value > r.value);
+        assert_eq!(c.items.len(), 10);
+    }
+
+    #[test]
+    fn randgreedi_breaks_down_below_sqrt_nk() {
+        // n=900, k=30: min two-round capacity ≈ √(nk) ≈ 164.
+        // At µ=60 the union (m=15 machines × 30) = 450 > 60 → must fail.
+        let ds = Arc::new(synthetic::csn_like(900, 2));
+        let p = Problem::exemplar(ds, 30, 2);
+        let err = rand_greedi_default(&p, 60, 1).unwrap_err();
+        assert!(matches!(err, Error::CapacityExceeded { .. }), "{err}");
+    }
+
+    #[test]
+    fn randgreedi_succeeds_above_min_capacity() {
+        let ds = Arc::new(synthetic::csn_like(900, 3));
+        let p = Problem::exemplar(ds, 10, 3);
+        let mu = two_round_min_capacity(900, 10); // ≈ √9000 ≈ 95
+        let res = rand_greedi_default(&p, mu + 5, 1).unwrap();
+        assert!(res.union_size <= mu + 5);
+        assert_eq!(res.solution.items.len(), 10);
+        // close to centralized on easy data
+        let c = centralized(&p).unwrap();
+        assert!(res.solution.value >= 0.9 * c.value);
+    }
+
+    #[test]
+    fn greedi_contiguous_partition_runs() {
+        let ds = Arc::new(synthetic::csn_like(300, 4));
+        let p = Problem::exemplar(ds, 5, 4);
+        let res = greedi(&p, 120, &LazyGreedy::new(), 2).unwrap();
+        assert_eq!(res.machines, 3);
+        assert_eq!(res.solution.items.len(), 5);
+    }
+
+    #[test]
+    fn min_capacity_formula_order_sqrt_nk() {
+        let n = 10_000;
+        let k = 25;
+        let mc = two_round_min_capacity(n, k);
+        let sqrt_nk = ((n * k) as f64).sqrt();
+        assert!(
+            (mc as f64) >= 0.8 * sqrt_nk && (mc as f64) <= 2.5 * sqrt_nk,
+            "min capacity {mc} vs sqrt(nk) {sqrt_nk}"
+        );
+    }
+}

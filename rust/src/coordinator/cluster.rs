@@ -1,0 +1,161 @@
+//! Simulated cluster: a pool of fixed-capacity machines.
+//!
+//! Each *machine* is a logical worker with a hard item capacity µ —
+//! dispatching more than µ items to one machine is a
+//! [`Error::CapacityExceeded`], not a soft warning: fixed capacity is the
+//! paper's entire premise, and the Table 1 benches rely on the two-round
+//! baselines *failing* here once `m·k > µ`.
+//!
+//! Machines execute on a small pool of OS threads (the testbed is a
+//! single host); XLA work funnels through the engine's device thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::algorithms::{Compressor, Solution};
+use crate::error::{Error, Result};
+use crate::objectives::Problem;
+use crate::util::rng::Rng;
+
+/// Fixed-capacity machine pool.
+pub struct Cluster {
+    pub capacity: usize,
+    pub threads: usize,
+}
+
+impl Cluster {
+    pub fn new(capacity: usize) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .clamp(1, 8);
+        Cluster { capacity, threads }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Execute one round: run `compressor` on every part in parallel.
+    /// Returns one solution per part (order preserved).
+    pub fn run_round(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        parts: &[Vec<u32>],
+        round_seed: u64,
+    ) -> Result<Vec<Solution>> {
+        // capacity enforcement before any work starts
+        for (i, p) in parts.iter().enumerate() {
+            if p.len() > self.capacity {
+                return Err(Error::CapacityExceeded {
+                    capacity: self.capacity,
+                    got: p.len(),
+                    ctx: format!(" (machine {i} of {})", parts.len()),
+                });
+            }
+        }
+
+        // per-machine deterministic seeds
+        let mut seed_rng = Rng::seed_from(round_seed);
+        let seeds: Vec<u64> = (0..parts.len()).map(|_| seed_rng.next_u64()).collect();
+
+        let next = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<Result<Solution>>>> =
+            Mutex::new((0..parts.len()).map(|_| None).collect());
+
+        let workers = self.threads.min(parts.len()).max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= parts.len() {
+                        break;
+                    }
+                    let sol = compressor.compress(problem, &parts[i], seeds[i]);
+                    results.lock().unwrap()[i] = Some(sol);
+                });
+            }
+        });
+
+        let results = results.into_inner().unwrap();
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Some(Ok(sol)) => out.push(sol),
+                Some(Err(e)) => return Err(e),
+                None => return Err(Error::Worker(format!("machine {i} never ran"))),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::LazyGreedy;
+    use crate::data::synthetic;
+    use std::sync::Arc;
+
+    #[test]
+    fn rejects_overloaded_machine() {
+        let ds = Arc::new(synthetic::csn_like(100, 1));
+        let p = Problem::exemplar(ds, 5, 1);
+        let cluster = Cluster::new(10);
+        let parts = vec![(0..11).collect::<Vec<u32>>()];
+        let err = cluster
+            .run_round(&p, &LazyGreedy::new(), &parts, 0)
+            .unwrap_err();
+        assert!(matches!(err, Error::CapacityExceeded { capacity: 10, got: 11, .. }));
+    }
+
+    #[test]
+    fn runs_all_parts_and_preserves_order() {
+        let ds = Arc::new(synthetic::csn_like(120, 2));
+        let p = Problem::exemplar(ds, 3, 2);
+        let cluster = Cluster::new(40).with_threads(3);
+        let parts: Vec<Vec<u32>> = (0..4).map(|i| (i * 30..(i + 1) * 30).collect()).collect();
+        let sols = cluster.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
+        assert_eq!(sols.len(), 4);
+        for (i, s) in sols.iter().enumerate() {
+            assert_eq!(s.items.len(), 3);
+            // each solution's items come from its own part
+            for &item in &s.items {
+                assert!(parts[i].contains(&item), "machine {i} leaked items");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        // Machine seeds are positional, so results must not depend on the
+        // number of worker threads (scheduling nondeterminism).
+        let ds = Arc::new(synthetic::csn_like(200, 3));
+        let p = Problem::exemplar(ds, 4, 3);
+        let parts: Vec<Vec<u32>> = (0..5).map(|i| (i * 40..(i + 1) * 40).collect()).collect();
+        let a = Cluster::new(64)
+            .with_threads(1)
+            .run_round(&p, &LazyGreedy::new(), &parts, 7)
+            .unwrap();
+        let b = Cluster::new(64)
+            .with_threads(4)
+            .run_round(&p, &LazyGreedy::new(), &parts, 7)
+            .unwrap();
+        let items_a: Vec<_> = a.iter().map(|s| s.items.clone()).collect();
+        let items_b: Vec<_> = b.iter().map(|s| s.items.clone()).collect();
+        assert_eq!(items_a, items_b);
+    }
+
+    #[test]
+    fn empty_parts_are_fine() {
+        let ds = Arc::new(synthetic::csn_like(50, 4));
+        let p = Problem::exemplar(ds, 3, 4);
+        let cluster = Cluster::new(20);
+        let parts = vec![vec![], (0..10).collect::<Vec<u32>>()];
+        let sols = cluster.run_round(&p, &LazyGreedy::new(), &parts, 0).unwrap();
+        assert!(sols[0].items.is_empty());
+        assert_eq!(sols[1].items.len(), 3);
+    }
+}

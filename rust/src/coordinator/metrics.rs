@@ -1,0 +1,92 @@
+//! Run telemetry: per-round and aggregate cost accounting.
+//!
+//! These counters back Table 1's cost columns (machines, rounds, oracle
+//! evaluations) and the shuffle/bytes accounting a real deployment would
+//! watch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Per-round record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundMetrics {
+    pub round: usize,
+    pub input_items: usize,
+    pub machines: usize,
+    pub max_machine_load: usize,
+    pub output_items: usize,
+    pub bytes_shuffled: u64,
+    pub wall_ms: f64,
+    pub best_value: f64,
+}
+
+/// Aggregate metrics for one coordinator run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub bytes_shuffled: AtomicU64,
+    pub machines_provisioned: AtomicU64,
+    rounds: Mutex<Vec<RoundMetrics>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_round(&self, r: RoundMetrics) {
+        self.bytes_shuffled.fetch_add(r.bytes_shuffled, Ordering::Relaxed);
+        self.machines_provisioned
+            .fetch_add(r.machines as u64, Ordering::Relaxed);
+        self.rounds.lock().unwrap().push(r);
+    }
+
+    pub fn rounds(&self) -> Vec<RoundMetrics> {
+        self.rounds.lock().unwrap().clone()
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.lock().unwrap().len()
+    }
+
+    pub fn total_bytes_shuffled(&self) -> u64 {
+        self.bytes_shuffled.load(Ordering::Relaxed)
+    }
+
+    pub fn total_machines(&self) -> u64 {
+        self.machines_provisioned.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = Metrics::new();
+        m.record_round(RoundMetrics {
+            round: 0,
+            input_items: 100,
+            machines: 4,
+            max_machine_load: 25,
+            output_items: 20,
+            bytes_shuffled: 400,
+            wall_ms: 1.0,
+            best_value: 5.0,
+        });
+        m.record_round(RoundMetrics {
+            round: 1,
+            input_items: 20,
+            machines: 1,
+            max_machine_load: 20,
+            output_items: 5,
+            bytes_shuffled: 80,
+            wall_ms: 0.5,
+            best_value: 6.0,
+        });
+        assert_eq!(m.num_rounds(), 2);
+        assert_eq!(m.total_bytes_shuffled(), 480);
+        assert_eq!(m.total_machines(), 5);
+        assert_eq!(m.rounds()[1].best_value, 6.0);
+    }
+}

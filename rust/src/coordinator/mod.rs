@@ -1,0 +1,23 @@
+//! The distributed coordinator — the paper's system contribution.
+//!
+//! * [`partitioner`] — the balanced random partition of §3 ("virtual
+//!   free locations");
+//! * [`planner`] — round planning: `m_t = ⌈|A_t|/µ⌉` and the Prop 3.1
+//!   round bound `r = ⌈log_{µ/k}(n/µ)⌉ + 1`;
+//! * [`cluster`] — the simulated fixed-capacity machine pool (worker
+//!   threads, hard capacity enforcement, shuffle accounting);
+//! * [`tree`] — Algorithm 1 TREE-BASED COMPRESSION;
+//! * [`baselines`] — centralized GREEDY, GREEDI, RANDGREEDI, RANDOM.
+
+pub mod baselines;
+pub mod cluster;
+pub mod metrics;
+pub mod partitioner;
+pub mod planner;
+pub mod tree;
+
+pub use cluster::Cluster;
+pub use metrics::{Metrics, RoundMetrics};
+pub use partitioner::balanced_random_partition;
+pub use planner::RoundPlan;
+pub use tree::{TreeBuilder, TreeResult, TreeRunner};

@@ -1,0 +1,178 @@
+//! The paper's balanced random partitioner (§3, "Framework"):
+//!
+//! > To partition N items to L parts, we assign each of the L parts
+//! > ⌈N/L⌉ virtual free locations. We pick items one by one, and for each
+//! > one we find a location uniformly at random among the available
+//! > locations in all machines, and assign the item to the chosen
+//! > location.
+//!
+//! Equivalent implementation: build the multiset of `L·⌈N/L⌉` location
+//! labels, draw a uniform random N-subset *arrangement* of it via a
+//! partial Fisher–Yates shuffle, and read off each item's part. This is
+//! exactly the paper's process (every injective map from items to free
+//! locations is equally likely) and guarantees `max − min ≤ ⌈N/L⌉ −
+//! ⌊N/L⌋ ≤ 1` part-size imbalance... strictly: every part ≤ ⌈N/L⌉.
+
+use crate::util::rng::Rng;
+
+/// Partition `items` into `parts` balanced random parts.
+/// Every returned part has size ≤ ⌈N/L⌉; parts may be empty only when
+/// N < L. The union of parts is exactly `items` (as a multiset).
+pub fn balanced_random_partition(
+    items: &[u32],
+    parts: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<u32>> {
+    assert!(parts > 0, "parts must be positive");
+    let n = items.len();
+    let cap = if n == 0 { 0 } else { n.div_ceil(parts) };
+    // multiset of location labels: part p appears cap times
+    let mut labels: Vec<u32> = (0..parts as u32)
+        .flat_map(|p| std::iter::repeat(p).take(cap))
+        .collect();
+    // partial Fisher–Yates: the first n entries become a uniform random
+    // n-arrangement of the label multiset
+    for i in 0..n {
+        let j = rng.range(i, labels.len());
+        labels.swap(i, j);
+    }
+    let mut out: Vec<Vec<u32>> = vec![Vec::with_capacity(cap); parts];
+    for (idx, &item) in items.iter().enumerate() {
+        out[labels[idx] as usize].push(item);
+    }
+    out
+}
+
+/// Contiguous (arbitrary, non-random) partition — the GREEDI baseline's
+/// assumption, used by the partitioning ablation.
+pub fn contiguous_partition(items: &[u32], parts: usize) -> Vec<Vec<u32>> {
+    assert!(parts > 0);
+    let n = items.len();
+    let cap = if n == 0 { 0 } else { n.div_ceil(parts) };
+    let mut out = Vec::with_capacity(parts);
+    for p in 0..parts {
+        let lo = (p * cap).min(n);
+        let hi = ((p + 1) * cap).min(n);
+        out.push(items[lo..hi].to_vec());
+    }
+    out
+}
+
+/// IID multinomial partition (each item independently uniform over
+/// parts) — the *unbalanced* strawman for the partitioning ablation:
+/// part sizes fluctuate and can exceed capacity.
+pub fn iid_partition(items: &[u32], parts: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    assert!(parts > 0);
+    let mut out: Vec<Vec<u32>> = vec![Vec::new(); parts];
+    for &item in items {
+        out[rng.below(parts)].push(item);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flatten_sorted(parts: &[Vec<u32>]) -> Vec<u32> {
+        let mut all: Vec<u32> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all
+    }
+
+    #[test]
+    fn partition_is_exact_cover() {
+        let mut rng = Rng::seed_from(1);
+        let items: Vec<u32> = (0..103).collect();
+        let parts = balanced_random_partition(&items, 7, &mut rng);
+        assert_eq!(parts.len(), 7);
+        assert_eq!(flatten_sorted(&parts), items);
+    }
+
+    #[test]
+    fn parts_never_exceed_ceiling() {
+        let mut rng = Rng::seed_from(2);
+        for &(n, l) in &[(100usize, 7usize), (5, 10), (64, 8), (1, 3), (0, 4), (1000, 13)] {
+            let items: Vec<u32> = (0..n as u32).collect();
+            let parts = balanced_random_partition(&items, l, &mut rng);
+            let cap = if n == 0 { 0 } else { n.div_ceil(l) };
+            for p in &parts {
+                assert!(p.len() <= cap.max(1), "n={n} l={l}: part {} > cap {cap}", p.len());
+            }
+            assert_eq!(flatten_sorted(&parts), items);
+        }
+    }
+
+    #[test]
+    fn balance_property_random_instances() {
+        use crate::util::check::forall;
+        forall(3, 50, |rng| {
+            let n = rng.range(1, 500);
+            let l = rng.range(1, 20);
+            (n, l, rng.next_u64())
+        }, |&(n, l, seed)| {
+            let items: Vec<u32> = (0..n as u32).collect();
+            let mut rng = Rng::seed_from(seed);
+            let parts = balanced_random_partition(&items, l, &mut rng);
+            let cap = n.div_ceil(l);
+            let max = parts.iter().map(Vec::len).max().unwrap();
+            let total: usize = parts.iter().map(Vec::len).sum();
+            if max > cap {
+                return Err(format!("max part {max} > cap {cap}"));
+            }
+            if total != n {
+                return Err(format!("lost items: {total} != {n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assignment_is_roughly_uniform() {
+        // item 0 should land in each of 4 parts ~equally often
+        let items: Vec<u32> = (0..16).collect();
+        let mut counts = [0usize; 4];
+        for seed in 0..4000 {
+            let mut rng = Rng::seed_from(seed);
+            let parts = balanced_random_partition(&items, 4, &mut rng);
+            for (p, part) in parts.iter().enumerate() {
+                if part.contains(&0) {
+                    counts[p] += 1;
+                }
+            }
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn contiguous_covers_in_order() {
+        let items: Vec<u32> = (0..10).collect();
+        let parts = contiguous_partition(&items, 3);
+        assert_eq!(parts[0], vec![0, 1, 2, 3]);
+        assert_eq!(parts[1], vec![4, 5, 6, 7]);
+        assert_eq!(parts[2], vec![8, 9]);
+    }
+
+    #[test]
+    fn iid_partition_covers_but_unbalanced() {
+        let mut rng = Rng::seed_from(9);
+        let items: Vec<u32> = (0..1000).collect();
+        let parts = iid_partition(&items, 10, &mut rng);
+        assert_eq!(flatten_sorted(&parts), items);
+        // with 1000 items/10 parts, some fluctuation beyond ±1 is
+        // essentially certain — that's the point of the ablation
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        let spread = sizes.iter().max().unwrap() - sizes.iter().min().unwrap();
+        assert!(spread > 1, "iid partition suspiciously balanced: {sizes:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let items: Vec<u32> = (0..50).collect();
+        let a = balanced_random_partition(&items, 5, &mut Rng::seed_from(7));
+        let b = balanced_random_partition(&items, 5, &mut Rng::seed_from(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,180 @@
+//! Round planning: machine counts per round and the Proposition 3.1
+//! bound on the number of rounds.
+
+use crate::error::{Error, Result};
+
+/// Static plan for a tree-compression run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundPlan {
+    pub n: usize,
+    pub k: usize,
+    pub capacity: usize,
+    /// Upper bound on rounds (Prop 3.1): `⌈log_{µ/k}(n/µ)⌉ + 1`.
+    pub round_bound: usize,
+    /// Predicted machines per round assuming worst-case compression
+    /// (every machine returns exactly k items).
+    pub machines_per_round: Vec<usize>,
+    /// Whether the worst-case simulation reaches one machine. False when
+    /// µ is so close to k that `⌈m·k/µ⌉ = m` can stall (the Prop 3.1
+    /// analysis drops the ceiling; real runs still converge because
+    /// machines return fewer than k items once gains saturate, and the
+    /// tree runner enforces a hard round cap — see [`crate::coordinator::tree`]).
+    pub worst_case_terminates: bool,
+}
+
+impl RoundPlan {
+    /// Plan a run. Requires `µ > k` (otherwise a machine cannot even hold
+    /// one solution's worth of items plus a candidate — the framework's
+    /// standing assumption) and `µ ≥ 1`, `k ≥ 1`.
+    pub fn new(n: usize, k: usize, capacity: usize) -> Result<RoundPlan> {
+        if k == 0 {
+            return Err(Error::invalid("k must be positive"));
+        }
+        if capacity <= k {
+            return Err(Error::invalid(format!(
+                "capacity µ={capacity} must exceed k={k} (paper assumption µ > k)"
+            )));
+        }
+        let round_bound = round_bound(n, k, capacity);
+        let mut machines = Vec::new();
+        let mut remaining = n;
+        let mut terminates = true;
+        loop {
+            let m = remaining.div_ceil(capacity).max(1);
+            machines.push(m);
+            if m == 1 {
+                break;
+            }
+            let next = m * k; // worst case: every machine emits k items
+            if next >= remaining {
+                // ⌈m·k/µ⌉ stalls at m: the worst case never reaches one
+                // machine (only possible when µ < 2k up to rounding)
+                terminates = false;
+                break;
+            }
+            remaining = next;
+        }
+        Ok(RoundPlan {
+            n,
+            k,
+            capacity,
+            round_bound,
+            machines_per_round: machines,
+            worst_case_terminates: terminates,
+        })
+    }
+
+    /// Total machine-provisioning count `Σ_t m_t` (the paper's
+    /// `O(n/µ)` machines claim — geometric in t).
+    pub fn total_machines(&self) -> usize {
+        self.machines_per_round.iter().sum()
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.machines_per_round.len()
+    }
+}
+
+/// Proposition 3.1: `r ≤ ⌈log_{µ/k}(n/µ)⌉ + 1` for `n ≥ µ > k`;
+/// 1 when `n ≤ µ`.
+pub fn round_bound(n: usize, k: usize, capacity: usize) -> usize {
+    if n <= capacity {
+        return 1;
+    }
+    let ratio = (n as f64) / (capacity as f64);
+    let base = (capacity as f64) / (k as f64);
+    // guard: µ > k guarantees base > 1
+    let r = ratio.ln() / base.ln();
+    (r.ceil() as usize).max(0) + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_plan() {
+        // Paper Figure 1: n = 16k, µ = 2k -> machines 8, 4, 2, 1 (4 rounds)
+        let k = 64;
+        let plan = RoundPlan::new(16 * k, k, 2 * k).unwrap();
+        assert_eq!(plan.machines_per_round, vec![8, 4, 2, 1]);
+        assert_eq!(plan.rounds(), 4);
+        assert!(plan.rounds() <= plan.round_bound);
+    }
+
+    #[test]
+    fn single_round_when_capacity_sufficient() {
+        let plan = RoundPlan::new(100, 10, 200).unwrap();
+        assert_eq!(plan.machines_per_round, vec![1]);
+        assert_eq!(plan.round_bound, 1);
+    }
+
+    #[test]
+    fn two_rounds_at_sqrt_nk() {
+        // µ = sqrt(nk): the classic two-round regime
+        let (n, k) = (10_000usize, 25usize);
+        let mu = ((n * k) as f64).sqrt() as usize; // 500
+        let plan = RoundPlan::new(n, k, mu).unwrap();
+        assert_eq!(plan.rounds(), 2, "machines: {:?}", plan.machines_per_round);
+        assert!(plan.round_bound >= 2);
+    }
+
+    #[test]
+    fn round_bound_formula_spot_checks() {
+        // n=1024, µ=64, k=16: log_4(16) = 2 -> r ≤ 3
+        assert_eq!(round_bound(1024, 16, 64), 3);
+        // n ≤ µ
+        assert_eq!(round_bound(50, 10, 64), 1);
+        // barely multi-round
+        assert_eq!(round_bound(65, 10, 64), 2);
+    }
+
+    #[test]
+    fn rejects_capacity_not_above_k() {
+        assert!(RoundPlan::new(100, 10, 10).is_err());
+        assert!(RoundPlan::new(100, 10, 5).is_err());
+        assert!(RoundPlan::new(100, 0, 50).is_err());
+    }
+
+    #[test]
+    fn planned_rounds_respect_bound_property() {
+        use crate::util::check::forall;
+        // µ ≥ 2k: the worst case provably converges (⌈m·k/µ⌉ ≤ ⌈m/2⌉ < m)
+        forall(13, 100, |rng| {
+            let k = rng.range(1, 64);
+            let mu = 2 * k + rng.range(0, 512);
+            let n = rng.range(1, 100_000);
+            (n, k, mu)
+        }, |&(n, k, mu)| {
+            let plan = RoundPlan::new(n, k, mu).map_err(|e| e.to_string())?;
+            if !plan.worst_case_terminates {
+                return Err(format!("stalled with mu={mu} >= 2k={k}"));
+            }
+            // Prop 3.1 drops the ⌈·⌉ of the partition, which can cost a
+            // couple of extra rounds in the true worst case — allow +2.
+            if plan.rounds() > plan.round_bound + 2 {
+                return Err(format!(
+                    "rounds {} > bound {} + 2 for n={n} k={k} mu={mu}",
+                    plan.rounds(),
+                    plan.round_bound
+                ));
+            }
+            // machine sequence strictly decreasing until 1
+            for w in plan.machines_per_round.windows(2) {
+                if w[1] >= w[0] {
+                    return Err(format!("non-decreasing machines {:?}", plan.machines_per_round));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stall_detected_when_capacity_barely_above_k() {
+        // µ = k+1, large n: ⌈m·k/µ⌉ = m for m ≥ k — worst case stalls.
+        let plan = RoundPlan::new(10_000, 10, 11).unwrap();
+        assert!(!plan.worst_case_terminates);
+        // formula bound still finite
+        assert!(plan.round_bound > 0);
+    }
+}

@@ -1,0 +1,108 @@
+//! `.fmat` — a minimal binary container for f32 row-major matrices.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"FMAT1\0\0\0"   (8 bytes)
+//! n      u64
+//! d      u64
+//! data   n*d f32
+//! ```
+//! Used to cache generated datasets and expensive baseline solutions so
+//! repeated bench runs don't regenerate them.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"FMAT1\0\0\0";
+
+/// Write a dataset to `path` (atomically via a temp file + rename).
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("fmat.tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(ds.n as u64).to_le_bytes())?;
+        f.write_all(&(ds.d as u64).to_le_bytes())?;
+        // f32 -> LE bytes
+        let raw = ds.raw();
+        let mut buf = Vec::with_capacity(raw.len() * 4);
+        for &x in raw {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a dataset from `path`; `name` becomes the in-memory name.
+pub fn load(path: &Path, name: &str) -> Result<Dataset> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::DataFormat(format!(
+            "{}: bad magic {:?}",
+            path.display(),
+            magic
+        )));
+    }
+    let mut u = [0u8; 8];
+    f.read_exact(&mut u)?;
+    let n = u64::from_le_bytes(u) as usize;
+    f.read_exact(&mut u)?;
+    let d = u64::from_le_bytes(u) as usize;
+    let count = n
+        .checked_mul(d)
+        .ok_or_else(|| Error::DataFormat("n*d overflow".into()))?;
+    let mut bytes = vec![0u8; count * 4];
+    f.read_exact(&mut bytes)?;
+    let mut data = Vec::with_capacity(count);
+    for chunk in bytes.chunks_exact(4) {
+        data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(Dataset::new(name, n, d, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hss_fmat_{}", std::process::id()));
+        let path = dir.join("t.fmat");
+        let mut rng = Rng::seed_from(1);
+        let data: Vec<f32> = (0..60).map(|_| rng.normal() as f32).collect();
+        let ds = Dataset::new("t", 10, 6, data);
+        save(&ds, &path).unwrap();
+        let back = load(&path, "t").unwrap();
+        assert_eq!(back.n, 10);
+        assert_eq!(back.d, 6);
+        assert_eq!(back.raw(), ds.raw());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("hss_fmat_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.fmat");
+        std::fs::write(&path, b"NOTFMAT!........").unwrap();
+        assert!(load(&path, "x").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(load(Path::new("/nonexistent/x.fmat"), "x").is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Datasets: in-memory container, binary on-disk format, synthetic
+//! generators matching the paper's evaluation data (DESIGN.md §5), and a
+//! name registry used by the CLI / benches.
+
+pub mod fmat;
+pub mod registry;
+pub mod synthetic;
+
+use std::sync::Arc;
+
+/// A dense row-major f32 dataset. Items are addressed by `u32` ids
+/// (the coordinator ships ids, not rows, between simulated machines —
+/// shuffle *bytes* are still accounted as full rows, as a real cluster
+/// would move them).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    data: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * d, "data length must be n*d");
+        Dataset { name: name.into(), n, d, data }
+    }
+
+    /// Row accessor.
+    #[inline]
+    pub fn row(&self, i: u32) -> &[f32] {
+        let i = i as usize;
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Raw storage (row-major).
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Gather the given rows into a new contiguous buffer, padding with
+    /// zero rows up to `pad_rows` (the runtime's artifact contract:
+    /// zero rows are inert for both objectives).
+    pub fn gather_padded(&self, ids: &[u32], pad_rows: usize, pad_d: usize) -> Vec<f32> {
+        assert!(pad_rows >= ids.len());
+        assert!(pad_d >= self.d);
+        let mut out = vec![0.0f32; pad_rows * pad_d];
+        for (r, &id) in ids.iter().enumerate() {
+            out[r * pad_d..r * pad_d + self.d].copy_from_slice(self.row(id));
+        }
+        out
+    }
+
+    /// Normalize every row to unit L2 norm (paper: TINY and PARKINSONS
+    /// are normalized to zero mean, unit norm). Zero rows stay zero.
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n {
+            let row = &mut self.data[i * self.d..(i + 1) * self.d];
+            let norm = row.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for x in row.iter_mut() {
+                    *x = (*x as f64 / norm) as f32;
+                }
+            }
+        }
+    }
+
+    /// Subtract the per-dimension mean (zero-mean preprocessing).
+    pub fn center_columns(&mut self) {
+        let mut means = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for (j, &x) in self.row(i as u32).iter().enumerate() {
+                means[j] += x as f64;
+            }
+        }
+        for m in means.iter_mut() {
+            *m /= self.n as f64;
+        }
+        for i in 0..self.n {
+            let row = &mut self.data[i * self.d..(i + 1) * self.d];
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = (*x as f64 - means[j]) as f32;
+            }
+        }
+    }
+
+    /// Size in bytes of one row (used for shuffle accounting).
+    pub fn row_bytes(&self) -> usize {
+        self.d * std::mem::size_of::<f32>()
+    }
+}
+
+/// Shared handle used across coordinator threads.
+pub type DatasetRef = Arc<Dataset>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new("toy", 3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn row_access() {
+        let d = toy();
+        assert_eq!(d.row(0), &[1.0, 2.0]);
+        assert_eq!(d.row(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_length_panics() {
+        Dataset::new("bad", 2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn gather_pads_with_zeros() {
+        let d = toy();
+        let g = d.gather_padded(&[2, 0], 4, 3);
+        assert_eq!(g.len(), 12);
+        assert_eq!(&g[0..3], &[5.0, 6.0, 0.0]);
+        assert_eq!(&g[3..6], &[1.0, 2.0, 0.0]);
+        assert_eq!(&g[6..12], &[0.0; 6]);
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut d = toy();
+        d.normalize_rows();
+        for i in 0..3 {
+            let n: f64 = d.row(i).iter().map(|&x| (x as f64).powi(2)).sum();
+            assert!((n - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn center_columns_zero_mean() {
+        let mut d = toy();
+        d.center_columns();
+        for j in 0..2 {
+            let s: f64 = (0..3).map(|i| d.row(i).to_vec()[j] as f64).sum();
+            assert!(s.abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Named dataset registry with on-disk caching.
+//!
+//! Maps the DESIGN.md §5 dataset names to generator invocations and
+//! caches the generated matrices as `.fmat` under `data_cache/` so bench
+//! reruns are instant. `--full` variants keep the paper's sizes where
+//! feasible; the default (quick) variants are scaled for the single-core
+//! testbed (documented in EXPERIMENTS.md).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::data::{fmat, synthetic, Dataset, DatasetRef};
+use crate::error::{Error, Result};
+
+/// Catalog entry: how to produce a named dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Spec {
+    Csn { n: usize },
+    Parkinsons { n: usize },
+    Tiny { n: usize, d: usize },
+    Webscope { n: usize },
+}
+
+impl Spec {
+    pub fn generate(&self, name: &str, seed: u64) -> Dataset {
+        let mut ds = match *self {
+            Spec::Csn { n } => synthetic::csn_like(n, seed),
+            Spec::Parkinsons { n } => synthetic::parkinsons_like(n, seed),
+            Spec::Tiny { n, d } => synthetic::tiny_like(n, d, seed),
+            Spec::Webscope { n } => synthetic::webscope_like(n, seed),
+        };
+        ds.name = name.to_string();
+        ds
+    }
+
+    pub fn n(&self) -> usize {
+        match *self {
+            Spec::Csn { n } | Spec::Parkinsons { n } | Spec::Webscope { n } => n,
+            Spec::Tiny { n, .. } => n,
+        }
+    }
+}
+
+/// Resolve a dataset name (see `names()`) to its generator spec.
+pub fn spec(name: &str) -> Result<Spec> {
+    Ok(match name {
+        // paper-faithful sizes (Table 2)
+        "csn-20k" => Spec::Csn { n: 20_000 },
+        "parkinsons" => Spec::Parkinsons { n: 5_875 },
+        "tiny-10k" => Spec::Tiny { n: 10_000, d: 3072 },
+        "webscope-100k" => Spec::Webscope { n: 100_000 },
+        // large-scale (scaled from 1M/45M for the single-core testbed)
+        "tiny-large" => Spec::Tiny { n: 131_072, d: 64 },
+        "webscope-large" => Spec::Webscope { n: 262_144 },
+        // quick variants for tests/sweeps on a laptop-scale budget
+        "csn-2k" => Spec::Csn { n: 2_000 },
+        "tiny-2k" => Spec::Tiny { n: 2_048, d: 3072 },
+        "tiny-2k-d64" => Spec::Tiny { n: 2_048, d: 64 },
+        "parkinsons-1k" => Spec::Parkinsons { n: 1_000 },
+        "webscope-10k" => Spec::Webscope { n: 10_000 },
+        other => {
+            return Err(Error::Config(format!(
+                "unknown dataset '{other}' (known: {})",
+                names().join(", ")
+            )))
+        }
+    })
+}
+
+/// All registered dataset names.
+pub fn names() -> Vec<&'static str> {
+    vec![
+        "csn-20k",
+        "parkinsons",
+        "tiny-10k",
+        "webscope-100k",
+        "tiny-large",
+        "webscope-large",
+        "csn-2k",
+        "tiny-2k",
+        "tiny-2k-d64",
+        "parkinsons-1k",
+        "webscope-10k",
+    ]
+}
+
+/// Default on-disk cache directory (overridable with HSS_DATA_DIR).
+pub fn cache_dir() -> PathBuf {
+    std::env::var("HSS_DATA_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("data_cache"))
+}
+
+/// Load a dataset by name, generating + caching on first use.
+pub fn load(name: &str, seed: u64) -> Result<DatasetRef> {
+    let sp = spec(name)?;
+    let path = cache_dir().join(format!("{name}_s{seed}.fmat"));
+    if path.exists() {
+        if let Ok(ds) = fmat::load(&path, name) {
+            return Ok(Arc::new(ds));
+        }
+        // fall through to regeneration on a corrupt cache file
+    }
+    let ds = sp.generate(name, seed);
+    // Cache best-effort; generation is deterministic so failure is benign.
+    let _ = fmat::save(&ds, &path);
+    Ok(Arc::new(ds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_names_resolve() {
+        for n in names() {
+            assert!(spec(n).is_ok(), "{n}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_config_error() {
+        let e = spec("nope").unwrap_err();
+        assert!(e.to_string().contains("unknown dataset"));
+    }
+
+    #[test]
+    fn load_caches_and_reloads() {
+        let dir = std::env::temp_dir().join(format!("hss_reg_{}", std::process::id()));
+        std::env::set_var("HSS_DATA_DIR", &dir);
+        let a = load("csn-2k", 9).unwrap();
+        assert!(dir.join("csn-2k_s9.fmat").exists());
+        let b = load("csn-2k", 9).unwrap();
+        assert_eq!(a.raw(), b.raw());
+        std::env::remove_var("HSS_DATA_DIR");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn paper_sizes_match_table2() {
+        assert_eq!(spec("parkinsons").unwrap().n(), 5_875);
+        assert_eq!(spec("csn-20k").unwrap().n(), 20_000);
+        assert_eq!(spec("tiny-10k").unwrap().n(), 10_000);
+        assert_eq!(spec("webscope-100k").unwrap().n(), 100_000);
+    }
+}

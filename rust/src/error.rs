@@ -1,0 +1,62 @@
+//! Crate-wide error type.
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors surfaced by the coordinator, runtime and substrates.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A machine was asked to hold more items than its fixed capacity µ.
+    /// This is the failure mode the paper's framework exists to avoid —
+    /// we *hard-fail* instead of silently spilling, so benches can prove
+    /// the two-round baselines break down where Table 1 says they do.
+    #[error("capacity exceeded: machine of capacity {capacity} received {got} items{ctx}")]
+    CapacityExceeded {
+        capacity: usize,
+        got: usize,
+        ctx: String,
+    },
+
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    #[error("no artifact matches request: {0}")]
+    NoArtifact(String),
+
+    #[error("artifact manifest error: {0}")]
+    Manifest(String),
+
+    #[error("XLA/PJRT runtime error: {0}")]
+    Xla(String),
+
+    #[error("engine unavailable: {0}")]
+    EngineUnavailable(String),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("data format error: {0}")]
+    DataFormat(String),
+
+    #[error("worker panicked or disconnected: {0}")]
+    Worker(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Helper for invalid-argument errors.
+    pub fn invalid<S: Into<String>>(msg: S) -> Self {
+        Error::InvalidArgument(msg.into())
+    }
+}

@@ -1,0 +1,67 @@
+//! # hss — Horizontally Scalable Submodular Maximization
+//!
+//! A full-system reproduction of *Horizontally Scalable Submodular
+//! Maximization* (Lucic, Bachem, Zadimoghaddam, Krause — ICML 2016).
+//!
+//! The paper's contribution is a **multi-round, tree-based compression
+//! framework** ([`coordinator::tree`]) that performs constrained
+//! submodular maximization on a cluster of machines with **fixed
+//! capacity** µ: each round randomly partitions the surviving items
+//! across `⌈|A_t|/µ⌉` machines, each machine compresses its partition to
+//! at most `k` items with a β-nice algorithm ([`algorithms`]), and the
+//! union survives to the next round. The returned solution is the best
+//! partial solution observed anywhere in the tree.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: round planner, balanced random
+//!   partitioner, simulated fixed-capacity cluster, β-nice compressors,
+//!   objectives, hereditary constraints, baselines and the bench harness.
+//! * **L2/L1 (python/compile, build-time only)** — JAX graphs + Pallas
+//!   kernels for the oracle-evaluation hot spot, AOT-lowered to
+//!   `artifacts/*.hlo.txt`, executed from rust through PJRT
+//!   ([`runtime`]). Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use hss::prelude::*;
+//! use std::sync::Arc;
+//!
+//! let dataset = Arc::new(hss::data::synthetic::csn_like(2_000, 7));
+//! let problem = Problem::exemplar(dataset, /*k=*/ 20, /*seed=*/ 7);
+//! let tree = TreeBuilder::new(/*capacity=*/ 200).build();
+//! let result = tree.run(&problem, 7).unwrap();
+//! println!("f(S) = {:.4} in {} rounds", result.best.value, result.rounds);
+//! ```
+
+pub mod algorithms;
+pub mod analysis;
+pub mod bench;
+pub mod config;
+pub mod constraints;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod linalg;
+pub mod objectives;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::algorithms::{
+        Compressor, LazyGreedy, RandomCompressor, Solution, StochasticGreedy,
+        ThresholdGreedy,
+    };
+    pub use crate::analysis::bounds;
+    pub use crate::constraints::{Cardinality, Constraint, Knapsack, PartitionMatroid};
+    pub use crate::coordinator::{baselines, TreeBuilder, TreeResult, TreeRunner};
+    pub use crate::data::Dataset;
+    pub use crate::error::{Error, Result};
+    pub use crate::objectives::{Objective, Oracle, Problem};
+    pub use crate::runtime::Engine;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,195 @@
+//! Incrementally-grown Cholesky factorization.
+//!
+//! The log-det objective `f(S) = 1/2 · logdet(I + σ⁻² K_SS)` is maximized
+//! greedily by growing `M = I + σ⁻² K_SS` one row/column at a time. We
+//! maintain the lower-triangular factor `L` (so `M = L Lᵀ`) and expose:
+//!
+//! * `extend(v, diag)` — append item with cross-kernel column `v = K(S, x)`
+//!   and diagonal `diag = 1 + σ⁻² k(x,x)`;
+//! * `solve_lower(v)` — `z = L⁻¹ v` (the quantity behind the marginal
+//!   gain `1/2·ln(diag − σ⁻⁴‖z‖²)`);
+//! * `logdet()` — `Σ ln L_tt = 1/2 logdet(M) = f(S)`.
+
+/// Lower-triangular factor of a symmetric positive-definite matrix grown
+/// one row at a time. Row-major packed storage: row t occupies
+/// `t(t+1)/2 .. t(t+1)/2 + t + 1`.
+#[derive(Debug, Clone, Default)]
+pub struct IncrementalCholesky {
+    rows: Vec<f64>,
+    n: usize,
+    log_det_half: f64,
+}
+
+impl IncrementalCholesky {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// `1/2 · logdet(M) = Σ_t ln(L_tt)`.
+    pub fn logdet_half(&self) -> f64 {
+        self.log_det_half
+    }
+
+    fn row(&self, t: usize) -> &[f64] {
+        let start = t * (t + 1) / 2;
+        &self.rows[start..start + t + 1]
+    }
+
+    /// Solve `L z = v` by forward substitution; `v.len() == self.n`.
+    pub fn solve_lower(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let mut z = vec![0.0; self.n];
+        for t in 0..self.n {
+            let row = self.row(t);
+            let mut acc = v[t];
+            for (i, zi) in z[..t].iter().enumerate() {
+                acc -= row[i] * zi;
+            }
+            z[t] = acc / row[t];
+        }
+        z
+    }
+
+    /// Append a new item. `cross` is the new off-diagonal column of M
+    /// restricted to the existing items (`M[new, i]` for i < n), `diag`
+    /// is `M[new, new]`. Returns the appended pivot `λ = L_nn`, or `None`
+    /// if the Schur complement is numerically non-positive (item is
+    /// linearly dependent — adding it would gain nothing).
+    pub fn extend(&mut self, cross: &[f64], diag: f64) -> Option<f64> {
+        assert_eq!(cross.len(), self.n);
+        let z = self.solve_lower(cross);
+        let schur = diag - z.iter().map(|x| x * x).sum::<f64>();
+        if schur <= 1e-12 {
+            return None;
+        }
+        let lambda = schur.sqrt();
+        self.rows.extend_from_slice(&z);
+        self.rows.push(lambda);
+        self.n += 1;
+        self.log_det_half += lambda.ln();
+        Some(lambda)
+    }
+
+    /// Schur complement of a *hypothetical* extension — the quantity whose
+    /// log is the marginal gain — without mutating the factor.
+    pub fn schur(&self, cross: &[f64], diag: f64) -> f64 {
+        let z = self.solve_lower(cross);
+        diag - z.iter().map(|x| x * x).sum::<f64>()
+    }
+
+    /// Reconstruct the dense M = L Lᵀ (test helper).
+    pub fn reconstruct(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut m = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut acc = 0.0;
+                let ri = self.row(i);
+                let rj = self.row(j);
+                for t in 0..=j {
+                    acc += ri[t] * rj[t];
+                }
+                m[i * n + j] = acc;
+                m[j * n + i] = acc;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Vec<f64> {
+        // A = B Bᵀ + n·I is SPD
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = if i == j { n as f64 } else { 0.0 };
+                for t in 0..n {
+                    acc += b[i * n + t] * b[j * n + t];
+                }
+                a[i * n + j] = acc;
+            }
+        }
+        a
+    }
+
+    fn build_from_dense(a: &[f64], n: usize) -> IncrementalCholesky {
+        let mut c = IncrementalCholesky::new();
+        for t in 0..n {
+            let cross: Vec<f64> = (0..t).map(|j| a[t * n + j]).collect();
+            c.extend(&cross, a[t * n + t]).expect("SPD extend");
+        }
+        c
+    }
+
+    #[test]
+    fn factor_reconstructs_matrix() {
+        let mut rng = Rng::seed_from(11);
+        for n in [1usize, 2, 5, 12] {
+            let a = random_spd(&mut rng, n);
+            let c = build_from_dense(&a, n);
+            let m = c.reconstruct();
+            for (x, y) in a.iter().zip(m.iter()) {
+                assert!((x - y).abs() < 1e-8, "n={n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_matches_known_diagonal() {
+        // M = diag(4, 9) -> 1/2 logdet = 1/2 (ln4 + ln9) = ln2 + ln3
+        let mut c = IncrementalCholesky::new();
+        c.extend(&[], 4.0).unwrap();
+        c.extend(&[0.0], 9.0).unwrap();
+        let want = 2.0f64.ln() + 3.0f64.ln();
+        assert!((c.logdet_half() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_lower_inverts() {
+        let mut rng = Rng::seed_from(13);
+        let n = 8;
+        let a = random_spd(&mut rng, n);
+        let c = build_from_dense(&a, n);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let z = c.solve_lower(&v);
+        // check L z == v
+        for t in 0..n {
+            let row = c.row(t);
+            let acc: f64 = row.iter().zip(z.iter()).map(|(l, zz)| l * zz).sum();
+            assert!((acc - v[t]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn schur_predicts_extension() {
+        let mut rng = Rng::seed_from(17);
+        let n = 6;
+        let a = random_spd(&mut rng, n);
+        let mut c = IncrementalCholesky::new();
+        for t in 0..n {
+            let cross: Vec<f64> = (0..t).map(|j| a[t * n + j]).collect();
+            let s = c.schur(&cross, a[t * n + t]);
+            let lam = c.extend(&cross, a[t * n + t]).unwrap();
+            assert!((s.sqrt() - lam).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn dependent_item_rejected() {
+        let mut c = IncrementalCholesky::new();
+        c.extend(&[], 1.0).unwrap();
+        // M would be [[1,1],[1,1]] — singular
+        assert!(c.extend(&[1.0], 1.0).is_none());
+        assert_eq!(c.size(), 1);
+    }
+}

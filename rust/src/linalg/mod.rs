@@ -1,0 +1,89 @@
+//! Dense linear algebra primitives for the pure-rust oracle paths.
+//!
+//! The hot production path runs through the XLA artifacts ([`crate::runtime`]);
+//! these routines back the reference oracles used for validation, the
+//! lazy-greedy re-evaluations (single candidate, O(m·d)), and the
+//! incremental Cholesky machinery of the log-det objective.
+
+pub mod cholesky;
+
+pub use cholesky::IncrementalCholesky;
+
+/// Squared euclidean distance between two f32 rows, accumulated in f64.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Squared L2 norm of an f32 row, accumulated in f64.
+#[inline]
+pub fn sq_norm(a: &[f32]) -> f64 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// Dot product of two f32 rows in f64.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// RBF (squared-exponential) kernel `exp(-||a-b||^2 / h2)`.
+#[inline]
+pub fn rbf(a: &[f32], b: &[f32], h2: f64) -> f64 {
+    (-sq_dist(a, b) / h2).exp()
+}
+
+/// Dense matrix-vector product `y = A x` with A row-major `[rows, cols]`.
+pub fn matvec(a: &[f64], rows: usize, cols: usize, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(x.len(), cols);
+    assert_eq!(y.len(), rows);
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        y[r] = row.iter().zip(x.iter()).map(|(&m, &v)| m * v).sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_dist_matches_manual() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [0.0f32, 2.0, 5.0];
+        assert_eq!(sq_dist(&a, &b), 1.0 + 0.0 + 4.0);
+        assert_eq!(sq_dist(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn norm_and_dot() {
+        let a = [3.0f32, 4.0];
+        assert_eq!(sq_norm(&a), 25.0);
+        assert_eq!(dot(&a, &[1.0, 1.0]), 7.0);
+    }
+
+    #[test]
+    fn rbf_unit_diag_and_decay() {
+        let a = [0.5f32, -1.0];
+        assert!((rbf(&a, &a, 0.25) - 1.0).abs() < 1e-12);
+        let far = [100.0f32, 100.0];
+        assert!(rbf(&a, &far, 0.25) < 1e-30);
+    }
+
+    #[test]
+    fn matvec_small() {
+        let a = [1.0, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let x = [1.0, -1.0];
+        let mut y = [0.0; 2];
+        matvec(&a, 2, 2, &x, &mut y);
+        assert_eq!(y, [-1.0, -1.0]);
+    }
+}

@@ -1,0 +1,207 @@
+//! `hss` — CLI launcher for the horizontally-scalable submodular
+//! maximization framework.
+//!
+//! ```text
+//! hss run   [--config cfg.json] [--dataset csn-2k] [--algo tree]
+//!           [--k 50] [--capacity 200] [--seed 42] [--trials 3]
+//!           [--epsilon 0.5] [--no-engine] [--threads 2]
+//! hss plan  --n 100000 --k 50 --capacity 800     # round plan / bounds
+//! hss datasets                                    # list registry
+//! hss artifacts                                   # list AOT artifacts
+//! ```
+
+use std::sync::Arc;
+
+use hss::algorithms::{LazyGreedy, StochasticGreedy};
+use hss::config::{Algo, RunConfig};
+use hss::coordinator::planner::RoundPlan;
+use hss::coordinator::{baselines, TreeBuilder};
+use hss::error::Result;
+use hss::runtime::accel::XlaGreedy;
+use hss::util::cli::Args;
+
+fn main() {
+    let code = match real_main() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("datasets") => cmd_datasets(),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            eprintln!("usage: hss <run|plan|datasets|artifacts> [flags]");
+            eprintln!("       see rust/src/main.rs header for flag reference");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    // config file first, CLI flags override
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    let eps = args.f64("epsilon", 0.5)?;
+    if let Some(a) = args.get("algo") {
+        cfg.algo = Algo::parse(a, eps)?;
+    }
+    cfg.k = args.usize("k", cfg.k)?;
+    cfg.capacity = args.usize("capacity", cfg.capacity)?;
+    cfg.seed = args.u64("seed", cfg.seed)?;
+    cfg.trials = args.usize("trials", cfg.trials)?.max(1);
+    cfg.threads = args.usize("threads", cfg.threads)?;
+    if args.flag("no-engine") {
+        cfg.use_engine = false;
+    }
+
+    let (problem, engine) = cfg.problem_with_engine()?;
+    println!(
+        "dataset={} n={} d={} objective={} k={} capacity={} algo={} engine={}",
+        cfg.dataset,
+        problem.n(),
+        problem.dataset.d,
+        problem.objective.name(),
+        cfg.k,
+        cfg.capacity,
+        cfg.algo.name(),
+        engine.is_some(),
+    );
+
+    let mut values = hss::util::stats::Summary::new();
+    for trial in 0..cfg.trials {
+        let seed = cfg.seed + trial as u64;
+        let t0 = std::time::Instant::now();
+        let (value, detail) = match &cfg.algo {
+            Algo::Centralized => {
+                let s = baselines::centralized(&problem)?;
+                (s.value, format!("|S|={}", s.items.len()))
+            }
+            Algo::Random => {
+                let s = baselines::random_subset(&problem, seed)?;
+                (s.value, format!("|S|={}", s.items.len()))
+            }
+            Algo::RandGreedi | Algo::Greedi => {
+                let run = |p: &_, c: &dyn hss::algorithms::Compressor| match cfg.algo {
+                    Algo::RandGreedi => baselines::rand_greedi(p, cfg.capacity, c, seed),
+                    _ => baselines::greedi(p, cfg.capacity, c, seed),
+                };
+                let res = match &engine {
+                    Some(e) => run(&problem, &XlaGreedy::new(e.clone()))?,
+                    None => run(&problem, &LazyGreedy::new())?,
+                };
+                (
+                    res.solution.value,
+                    format!("machines={} union={}", res.machines, res.union_size),
+                )
+            }
+            Algo::Tree | Algo::StochasticTree { .. } => {
+                let compressor: Arc<dyn hss::algorithms::Compressor> =
+                    match (&cfg.algo, &engine) {
+                        (Algo::Tree, Some(e)) => Arc::new(XlaGreedy::new(e.clone())),
+                        (Algo::Tree, None) => Arc::new(LazyGreedy::new()),
+                        (Algo::StochasticTree { epsilon }, Some(e)) => {
+                            Arc::new(XlaGreedy::stochastic(e.clone(), *epsilon))
+                        }
+                        (Algo::StochasticTree { epsilon }, None) => {
+                            Arc::new(StochasticGreedy::new(*epsilon))
+                        }
+                        _ => unreachable!(),
+                    };
+                let res = TreeBuilder::new(cfg.capacity)
+                    .compressor(compressor)
+                    .threads(cfg.threads)
+                    .build()
+                    .run(&problem, seed)?;
+                (
+                    res.best.value,
+                    format!(
+                        "rounds={}/{} machines={} evals={} shuffleMB={:.1}",
+                        res.rounds,
+                        res.round_bound,
+                        res.total_machines,
+                        res.oracle_evals,
+                        res.bytes_shuffled as f64 / 1e6
+                    ),
+                )
+            }
+        };
+        values.push(value);
+        println!(
+            "trial {trial}: f(S) = {value:.6}  [{detail}]  ({:.0} ms)",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    if cfg.trials > 1 {
+        println!(
+            "mean f(S) = {:.6} ± {:.6} over {} trials",
+            values.mean(),
+            values.stddev(),
+            cfg.trials
+        );
+    }
+    if let Some(e) = &engine {
+        let (calls, compiles, exec_ns, upload, hits) = e.stats().snapshot();
+        println!(
+            "engine: {calls} calls, {compiles} compiles, {:.1} ms exec, {:.1} MB uploaded, {hits} cache hits",
+            exec_ns as f64 / 1e6,
+            upload as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let n = args.usize("n", 100_000)?;
+    let k = args.usize("k", 50)?;
+    let capacity = args.usize("capacity", 800)?;
+    let plan = RoundPlan::new(n, k, capacity)?;
+    println!("n={n} k={k} capacity={capacity}");
+    println!("round bound (Prop 3.1): {}", plan.round_bound);
+    println!("machines per round (worst case): {:?}", plan.machines_per_round);
+    println!("total machines: {}", plan.total_machines());
+    println!(
+        "Thm 3.3 greedy bound: {:.4} of f(OPT)",
+        hss::analysis::bounds::thm33_greedy(n, k, capacity)
+    );
+    println!(
+        "two-round min capacity ~sqrt(nk): {}",
+        baselines::two_round_min_capacity(n, k)
+    );
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("registered datasets (see DESIGN.md §5):");
+    for name in hss::data::registry::names() {
+        let spec = hss::data::registry::spec(name)?;
+        println!("  {name:<16} n={}", spec.n());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let dir = hss::runtime::default_artifact_dir();
+    let manifest = hss::runtime::Manifest::load(&dir)?;
+    println!("artifact set '{}' in {}:", manifest.set, dir.display());
+    for a in &manifest.artifacts {
+        println!(
+            "  {:<44} kind={:<9} m={:<5} mu={:<5} d={:<5} k={}",
+            a.name, a.kind, a.m, a.mu, a.d, a.k
+        );
+    }
+    Ok(())
+}

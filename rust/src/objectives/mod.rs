@@ -1,0 +1,313 @@
+//! Objective functions and the incremental marginal-gain oracle.
+//!
+//! The paper evaluates two monotone submodular objectives (§4.2):
+//! exemplar-based clustering ([`exemplar`]) and log-det / active-set
+//! selection ([`logdet`]). [`coverage`] and [`modular`] are cheap exactly
+//! computable objectives used by tests and property checks.
+//!
+//! A [`Problem`] bundles dataset + objective + hereditary constraint +
+//! budget `k` and is the unit of work the coordinator distributes.
+
+pub mod coverage;
+pub mod exemplar;
+pub mod logdet;
+pub mod modular;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::constraints::{Cardinality, Constraint};
+use crate::data::DatasetRef;
+use crate::error::Result;
+use crate::runtime::EngineHandle;
+use crate::util::rng::Rng;
+
+/// Incremental marginal-gain oracle over a fixed list of candidates
+/// (machine-local indices `0..len`). Implementations count every gain
+/// query against the shared evaluation counter — the paper's
+/// "oracle evaluations" cost metric (Table 1).
+pub trait Oracle {
+    /// Number of candidates this oracle was built over.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Marginal gain `f(S ∪ {j}) − f(S)` of candidate `j` w.r.t. the
+    /// currently committed selection.
+    fn gain(&mut self, j: usize) -> f64;
+
+    /// Commit candidate `j` into the selection; returns its realized gain.
+    fn commit(&mut self, j: usize) -> f64;
+
+    /// Current objective value `f(S)`.
+    fn value(&self) -> f64;
+
+    /// Gains of all candidates at once. Implementations may override
+    /// with a vectorized/XLA path; the default loops over [`Oracle::gain`].
+    fn bulk_gains(&mut self) -> Vec<f64> {
+        (0..self.len()).map(|j| self.gain(j)).collect()
+    }
+}
+
+/// Which objective a [`Problem`] optimizes.
+#[derive(Clone)]
+pub enum Objective {
+    /// Exemplar-based clustering (k-medoid reduction), evaluated on a
+    /// fixed random subsample of `eval_ids` (paper §4.1/§4.2).
+    Exemplar,
+    /// Active-set selection: `f(S) = 1/2 logdet(I + σ⁻² K_SS)` with an
+    /// RBF kernel of bandwidth² `h2` (paper: h = 0.5, σ = 1).
+    LogDet { h2: f64, sigma2: f64 },
+    /// Weighted coverage over an explicit universe (tests/properties).
+    Coverage(Arc<coverage::CoverageData>),
+    /// Modular (additive) function — the degenerate submodular case.
+    Modular(Arc<Vec<f64>>),
+}
+
+impl Objective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Exemplar => "exemplar",
+            Objective::LogDet { .. } => "logdet",
+            Objective::Coverage(_) => "coverage",
+            Objective::Modular(_) => "modular",
+        }
+    }
+}
+
+/// Shared oracle-evaluation counter.
+pub type EvalCounter = Arc<AtomicU64>;
+
+/// A constrained submodular maximization instance: the unit of work the
+/// coordinator distributes across the simulated cluster.
+#[derive(Clone)]
+pub struct Problem {
+    pub dataset: DatasetRef,
+    pub objective: Objective,
+    pub constraint: Arc<dyn Constraint>,
+    pub k: usize,
+    pub seed: u64,
+    /// Fixed evaluation subsample for the exemplar objective; every
+    /// algorithm (tree, baselines, centralized) scores against the same
+    /// subsample so ratios are comparable.
+    pub eval_ids: Arc<Vec<u32>>,
+    /// Optional XLA engine for the accelerated oracle paths.
+    pub engine: Option<EngineHandle>,
+    /// Oracle-evaluation counter (Table 1 cost metric).
+    pub evals: EvalCounter,
+}
+
+impl Problem {
+    /// Exemplar-based clustering under a cardinality constraint.
+    /// The evaluation subsample is `min(n, 2048)` rows (512 for very
+    /// high-dimensional data — see EXPERIMENTS.md §Setup).
+    pub fn exemplar(dataset: DatasetRef, k: usize, seed: u64) -> Problem {
+        let m = if dataset.d >= 1024 {
+            dataset.n.min(512)
+        } else {
+            dataset.n.min(2048)
+        };
+        Self::exemplar_with_eval(dataset, k, seed, m)
+    }
+
+    /// Exemplar problem with an explicit evaluation-subsample size.
+    pub fn exemplar_with_eval(
+        dataset: DatasetRef,
+        k: usize,
+        seed: u64,
+        eval_m: usize,
+    ) -> Problem {
+        let mut rng = Rng::seed_from(seed ^ 0xE7A1_5EED);
+        let eval_ids = Arc::new(rng.sample_indices(dataset.n, eval_m.min(dataset.n)));
+        Problem {
+            constraint: Arc::new(Cardinality::new(k)),
+            dataset,
+            objective: Objective::Exemplar,
+            k,
+            seed,
+            eval_ids,
+            engine: None,
+            evals: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Active-set selection (paper parameters h = 0.5, σ = 1).
+    pub fn logdet(dataset: DatasetRef, k: usize, seed: u64) -> Problem {
+        Problem {
+            constraint: Arc::new(Cardinality::new(k)),
+            dataset,
+            objective: Objective::LogDet { h2: 0.25, sigma2: 1.0 },
+            k,
+            seed,
+            eval_ids: Arc::new(Vec::new()),
+            engine: None,
+            evals: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Coverage test problem over `n` synthetic items.
+    pub fn coverage(data: coverage::CoverageData, k: usize, seed: u64) -> Problem {
+        let n = data.covers.len();
+        Problem {
+            dataset: Arc::new(crate::data::Dataset::new("coverage", n, 1, vec![0.0; n])),
+            objective: Objective::Coverage(Arc::new(data)),
+            constraint: Arc::new(Cardinality::new(k)),
+            k,
+            seed,
+            eval_ids: Arc::new(Vec::new()),
+            engine: None,
+            evals: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Modular test problem with the given item weights.
+    pub fn modular(weights: Vec<f64>, k: usize, seed: u64) -> Problem {
+        let n = weights.len();
+        Problem {
+            dataset: Arc::new(crate::data::Dataset::new("modular", n, 1, vec![0.0; n])),
+            objective: Objective::Modular(Arc::new(weights)),
+            constraint: Arc::new(Cardinality::new(k)),
+            k,
+            seed,
+            eval_ids: Arc::new(Vec::new()),
+            engine: None,
+            evals: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Attach an XLA engine (accelerated oracle paths become available).
+    pub fn with_engine(mut self, engine: EngineHandle) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Replace the constraint (hereditary constraints, §3.2).
+    pub fn with_constraint(mut self, c: Arc<dyn Constraint>) -> Self {
+        self.constraint = c;
+        self
+    }
+
+    /// Ground-set size.
+    pub fn n(&self) -> usize {
+        self.dataset.n
+    }
+
+    /// Number of oracle evaluations performed so far.
+    pub fn eval_count(&self) -> u64 {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    /// Build the pure-rust incremental oracle over `candidates`
+    /// (machine-local view).
+    pub fn oracle(&self, candidates: &[u32]) -> Box<dyn Oracle> {
+        match &self.objective {
+            Objective::Exemplar => Box::new(exemplar::ExemplarOracle::new(
+                self.dataset.clone(),
+                self.eval_ids.clone(),
+                candidates.to_vec(),
+                self.evals.clone(),
+            )),
+            Objective::LogDet { h2, sigma2 } => Box::new(logdet::LogDetOracle::new(
+                logdet::PureRbf::new(self.dataset.clone(), candidates.to_vec(), *h2),
+                candidates.len(),
+                *sigma2,
+                self.evals.clone(),
+            )),
+            Objective::Coverage(data) => Box::new(coverage::CoverageOracle::new(
+                data.clone(),
+                candidates.to_vec(),
+                self.evals.clone(),
+            )),
+            Objective::Modular(w) => Box::new(modular::ModularOracle::new(
+                w.clone(),
+                candidates.to_vec(),
+                self.evals.clone(),
+            )),
+        }
+    }
+
+    /// Evaluate `f(items)` from scratch in f64 — used for best-solution
+    /// tracking so values are comparable across pure and XLA paths.
+    pub fn value(&self, items: &[u32]) -> f64 {
+        match &self.objective {
+            Objective::Exemplar => exemplar::exemplar_value(
+                &self.dataset,
+                &self.eval_ids,
+                items,
+            ),
+            Objective::LogDet { h2, sigma2 } => {
+                logdet::logdet_value(&self.dataset, items, *h2, *sigma2)
+            }
+            Objective::Coverage(data) => coverage::coverage_value(data, items),
+            Objective::Modular(w) => {
+                let mut seen = std::collections::HashSet::new();
+                items
+                    .iter()
+                    .filter(|&&i| seen.insert(i))
+                    .map(|&i| w[i as usize])
+                    .sum()
+            }
+        }
+    }
+
+    /// Sanity-check that candidate ids are in range.
+    pub fn check_ids(&self, items: &[u32]) -> Result<()> {
+        for &i in items {
+            if (i as usize) >= self.dataset.n {
+                return Err(crate::error::Error::invalid(format!(
+                    "item id {i} out of range (n = {})",
+                    self.dataset.n
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn exemplar_problem_has_fixed_eval_subsample() {
+        let ds = Arc::new(synthetic::csn_like(500, 1));
+        let p1 = Problem::exemplar(ds.clone(), 10, 7);
+        let p2 = Problem::exemplar(ds, 10, 7);
+        assert_eq!(p1.eval_ids, p2.eval_ids);
+        assert_eq!(p1.eval_ids.len(), 500); // n < 2048 -> whole set
+    }
+
+    #[test]
+    fn eval_subsample_scales_with_dimension() {
+        let small_d = Arc::new(synthetic::tiny_like(3000, 64, 1));
+        let big_d = Arc::new(synthetic::tiny_like(3000, 1536, 1));
+        assert_eq!(Problem::exemplar(small_d, 5, 1).eval_ids.len(), 2048);
+        assert_eq!(Problem::exemplar(big_d, 5, 1).eval_ids.len(), 512);
+    }
+
+    #[test]
+    fn value_is_deterministic_and_monotone() {
+        let ds = Arc::new(synthetic::csn_like(300, 2));
+        let p = Problem::exemplar(ds, 10, 3);
+        let v1 = p.value(&[1, 2, 3]);
+        assert_eq!(v1, p.value(&[1, 2, 3]));
+        // monotonicity: adding items cannot decrease f
+        assert!(p.value(&[1, 2, 3, 4]) >= v1 - 1e-12);
+        assert!(p.value(&[]) == 0.0);
+    }
+
+    #[test]
+    fn eval_counter_shared_across_oracles() {
+        let ds = Arc::new(synthetic::csn_like(100, 4));
+        let p = Problem::exemplar(ds, 5, 5);
+        let mut o1 = p.oracle(&[0, 1, 2]);
+        let mut o2 = p.oracle(&[3, 4, 5]);
+        o1.gain(0);
+        o2.gain(1);
+        o2.gain(2);
+        assert_eq!(p.eval_count(), 3);
+    }
+}

@@ -1,0 +1,368 @@
+//! XLA-accelerated compressors: the production hot path.
+//!
+//! [`XlaGreedy`] is a [`Compressor`] that routes per-machine compression
+//! through the AOT artifacts:
+//!
+//! * exemplar + cardinality → one fused `exgreedy` executable call per
+//!   machine (the whole k-step greedy runs inside XLA; the paper's
+//!   STOCHASTIC GREEDY variant is expressed through the per-step
+//!   candidate mask drawn on the rust side);
+//! * log-det + cardinality → one `rbf` Gram call, then the incremental-
+//!   Cholesky greedy over the precomputed Gram block (O(k·µ) per step on
+//!   the rust side — negligible next to the Gram matmul);
+//! * anything else (hereditary constraints, test objectives) → fall back
+//!   to the pure [`LazyGreedy`].
+
+use std::sync::atomic::Ordering;
+
+use crate::algorithms::{lazy_greedy_over, Compressor, LazyGreedy, Solution};
+use crate::error::Result;
+use crate::objectives::logdet::{LogDetOracle, PrecomputedGram};
+use crate::objectives::{Objective, Problem};
+use crate::runtime::manifest::Query;
+use crate::runtime::{is_sentinel, EngineHandle};
+use crate::util::rng::Rng;
+
+/// Above this candidate count the lazy-heap oracle beats the fused
+/// naive-greedy executable on the CPU testbed (measured crossover in
+/// EXPERIMENTS.md §Perf; the fused path recomputes every gain each step).
+pub const FUSED_MU_CUTOFF: usize = 512;
+
+/// XLA-backed greedy compressor (β = 1, same algorithm as [`LazyGreedy`],
+/// different execution substrate). With `epsilon = Some(ε)` it becomes
+/// stochastic greedy with per-step subsampling.
+#[derive(Clone)]
+pub struct XlaGreedy {
+    engine: EngineHandle,
+    /// None: plain greedy; Some(ε): stochastic greedy subsampling.
+    pub epsilon: Option<f64>,
+    /// Artifact variant preference (None → jnp, benches pick pallas).
+    pub pallas: Option<bool>,
+}
+
+impl XlaGreedy {
+    pub fn new(engine: EngineHandle) -> Self {
+        XlaGreedy { engine, epsilon: None, pallas: None }
+    }
+
+    pub fn stochastic(engine: EngineHandle, epsilon: f64) -> Self {
+        XlaGreedy { engine, epsilon: Some(epsilon), pallas: None }
+    }
+
+    pub fn with_pallas(mut self, pallas: bool) -> Self {
+        self.pallas = Some(pallas);
+        self
+    }
+
+    /// Cache key for the padded eval-subsample buffer: unique per
+    /// (dataset instance, eval subsample, padded shape).
+    fn w_key(problem: &Problem, m_pad: usize, d_pad: usize) -> u64 {
+        let ds_ptr = std::sync::Arc::as_ptr(&problem.dataset) as u64;
+        ds_ptr ^ problem.seed.rotate_left(17) ^ ((m_pad as u64) << 40) ^ (d_pad as u64)
+    }
+
+    fn compress_exemplar(
+        &self,
+        problem: &Problem,
+        candidates: &[u32],
+        seed: u64,
+    ) -> Result<Solution> {
+        let ds = &problem.dataset;
+        let art = self.engine.select(&Query {
+            kind: "exgreedy",
+            min_m: problem.eval_ids.len(),
+            min_mu: candidates.len(),
+            min_d: ds.d,
+            min_k: problem.k,
+            pallas: self.pallas,
+        })?;
+        let (m_pad, mu_pad, d_pad, k_art) = (art.m, art.mu, art.d, art.k);
+
+        let w = ds.gather_padded(&problem.eval_ids, m_pad, d_pad);
+        let x = ds.gather_padded(candidates, mu_pad, d_pad);
+
+        // Per-step candidate masks: availability of real candidates, plus
+        // the stochastic-greedy subsample when ε is set.
+        let len = candidates.len();
+        let mut stepmask = vec![0.0f32; k_art * mu_pad];
+        match self.epsilon {
+            None => {
+                for t in 0..k_art {
+                    stepmask[t * mu_pad..t * mu_pad + len]
+                        .iter_mut()
+                        .for_each(|v| *v = 1.0);
+                }
+            }
+            Some(eps) => {
+                let s = crate::algorithms::StochasticGreedy::new(eps)
+                    .sample_size(len, problem.k.max(1));
+                let mut rng = Rng::seed_from(seed ^ 0x57E9_3A5C);
+                for t in 0..k_art {
+                    for j in rng.sample_indices(len, s.min(len)) {
+                        stepmask[t * mu_pad + j as usize] = 1.0;
+                    }
+                }
+            }
+        }
+
+        let w_key = Self::w_key(problem, m_pad, d_pad);
+        let (idxs, gains, _curmin) =
+            self.engine.exgreedy(&art, w_key, &w, x, stepmask)?;
+
+        // Oracle-evaluation accounting: each fused step scores every
+        // masked-in candidate.
+        let per_step = match self.epsilon {
+            None => len as u64,
+            Some(eps) => crate::algorithms::StochasticGreedy::new(eps)
+                .sample_size(len, problem.k.max(1)) as u64,
+        };
+        problem
+            .evals
+            .fetch_add(per_step * problem.k.min(k_art) as u64, Ordering::Relaxed);
+
+        let mut items = Vec::with_capacity(problem.k);
+        for (t, &j) in idxs.iter().enumerate() {
+            if t >= problem.k || is_sentinel(gains[t]) {
+                break;
+            }
+            let j = j as usize;
+            if j < len {
+                items.push(candidates[j]);
+            }
+        }
+        // f64 re-evaluation keeps values comparable across substrates.
+        let value = problem.value(&items);
+        Ok(Solution { items, value })
+    }
+
+    fn compress_logdet(
+        &self,
+        problem: &Problem,
+        candidates: &[u32],
+        seed: u64,
+        sigma2: f64,
+    ) -> Result<Solution> {
+        let ds = &problem.dataset;
+        let len = candidates.len();
+        let art = self.engine.select(&Query {
+            kind: "rbf",
+            min_m: len,
+            min_mu: len,
+            min_d: ds.d,
+            min_k: 0,
+            pallas: self.pallas,
+        })?;
+        let x = ds.gather_padded(candidates, art.mu, art.d);
+        let a = ds.gather_padded(candidates, art.m, art.d);
+        let gram = self.engine.rbf(&art, a, x)?;
+        let mut oracle = LogDetOracle::new(
+            PrecomputedGram::new(gram, art.mu, len),
+            len,
+            sigma2,
+            problem.evals.clone(),
+        );
+        if let Some(eps) = self.epsilon {
+            let s = crate::algorithms::StochasticGreedy::new(eps)
+                .sample_size(len, problem.k.max(1));
+            let mut rng = Rng::seed_from(seed ^ 0x57E9_3A5C);
+            let mut filter = move |_t: usize| -> Vec<usize> {
+                rng.sample_indices(len, s.min(len))
+                    .into_iter()
+                    .map(|i| i as usize)
+                    .collect()
+            };
+            lazy_greedy_over(&mut oracle, problem, candidates, Some(&mut filter))
+        } else {
+            lazy_greedy_over(&mut oracle, problem, candidates, None)
+        }
+    }
+
+    fn is_plain_cardinality(problem: &Problem) -> bool {
+        // Fused paths assume the only constraint is |S| ≤ k.
+        problem.constraint.name() == format!("card({})", problem.k)
+    }
+}
+
+/// XLA-assisted *incremental* exemplar oracle for candidate sets larger
+/// than any single artifact (centralized greedy on the full ground set).
+/// The O(n·m·d) initial bulk pass runs as chunked `dist` executions; the
+/// per-step lazy re-evaluations stay pure-rust (a handful per step).
+pub struct XlaExemplarOracle {
+    inner: crate::objectives::exemplar::ExemplarOracle,
+    engine: EngineHandle,
+    art: crate::runtime::manifest::Artifact,
+    w_padded: Vec<f32>,
+    w_key: u64,
+    candidates: Vec<u32>,
+    eval_m: usize,
+    evals: crate::objectives::EvalCounter,
+}
+
+impl XlaExemplarOracle {
+    pub fn new(
+        engine: EngineHandle,
+        problem: &Problem,
+        candidates: &[u32],
+    ) -> Result<Self> {
+        let ds = &problem.dataset;
+        let art = engine.select(&Query {
+            kind: "dist",
+            min_m: problem.eval_ids.len(),
+            min_mu: 1,
+            min_d: ds.d,
+            min_k: 0,
+            pallas: None,
+        })?;
+        let w_padded = ds.gather_padded(&problem.eval_ids, art.m, art.d);
+        let w_key = XlaGreedy::w_key(problem, art.m, art.d);
+        Ok(XlaExemplarOracle {
+            inner: crate::objectives::exemplar::ExemplarOracle::new(
+                ds.clone(),
+                problem.eval_ids.clone(),
+                candidates.to_vec(),
+                problem.evals.clone(),
+            ),
+            engine,
+            art,
+            w_padded,
+            w_key,
+            candidates: candidates.to_vec(),
+            eval_m: problem.eval_ids.len(),
+            evals: problem.evals.clone(),
+        })
+    }
+}
+
+impl crate::objectives::Oracle for XlaExemplarOracle {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn gain(&mut self, j: usize) -> f64 {
+        self.inner.gain(j)
+    }
+
+    fn commit(&mut self, j: usize) -> f64 {
+        self.inner.commit(j)
+    }
+
+    fn value(&self) -> f64 {
+        self.inner.value()
+    }
+
+    /// Chunked XLA bulk pass: one `dist` execution per µ-sized chunk of
+    /// candidates, gains reduced on the host from the f32 distance block.
+    fn bulk_gains(&mut self) -> Vec<f64> {
+        let n = self.candidates.len();
+        let mu = self.art.mu;
+        let m = self.eval_m;
+        let curmin = self.inner.curmin_snapshot();
+        let mut gains = Vec::with_capacity(n);
+        let ds = self.inner.dataset();
+        for chunk in self.candidates.chunks(mu) {
+            let x = ds.gather_padded(chunk, mu, self.art.d);
+            let d2 = match self
+                .engine
+                .dist(&self.art, self.w_key, &self.w_padded, x)
+            {
+                Ok(d2) => d2,
+                Err(_) => {
+                    // engine failure: fall back to the pure path
+                    return self.inner.bulk_gains();
+                }
+            };
+            // d2 is [art.m, mu] row-major; reduce relu(curmin - d2) per column
+            let mut acc = vec![0.0f64; chunk.len()];
+            for (i, &cm) in curmin.iter().enumerate().take(m) {
+                let row = &d2[i * mu..i * mu + chunk.len()];
+                for (j, &dij) in row.iter().enumerate() {
+                    let diff = cm - dij as f64;
+                    if diff > 0.0 {
+                        acc[j] += diff;
+                    }
+                }
+            }
+            for a in acc {
+                gains.push(a / m as f64);
+            }
+        }
+        self.evals.fetch_add(n as u64, Ordering::Relaxed);
+        gains
+    }
+}
+
+impl Compressor for XlaGreedy {
+    fn name(&self) -> String {
+        match self.epsilon {
+            None => "xla-greedy".into(),
+            Some(e) => format!("xla-stochastic-greedy(eps={e})"),
+        }
+    }
+
+    fn beta(&self) -> Option<f64> {
+        match self.epsilon {
+            None => Some(1.0),
+            Some(_) => None,
+        }
+    }
+
+    fn compress(&self, problem: &Problem, candidates: &[u32], seed: u64) -> Result<Solution> {
+        if candidates.is_empty() {
+            return Ok(Solution::empty());
+        }
+        if Self::is_plain_cardinality(problem) {
+            match &problem.objective {
+                Objective::Exemplar => {
+                    // §Perf iteration 6 (EXPERIMENTS.md): the fused
+                    // executable recomputes all gains every step (naive
+                    // greedy, O(k·µ·m)); the lazy heap needs ~15x fewer
+                    // evals and overtakes it on CPU above µ ≈ 512-1024.
+                    // Route large machines through the chunked-bulk +
+                    // lazy-heap oracle instead.
+                    if candidates.len() > FUSED_MU_CUTOFF && self.epsilon.is_none() {
+                        if let Ok(mut oracle) = XlaExemplarOracle::new(
+                            self.engine.clone(),
+                            problem,
+                            candidates,
+                        ) {
+                            return lazy_greedy_over(&mut oracle, problem, candidates, None);
+                        }
+                    }
+                    match self.compress_exemplar(problem, candidates, seed) {
+                        Err(crate::error::Error::NoArtifact(_)) => {
+                            // candidate set larger than any fused artifact
+                            // (e.g. huge µ): chunked-bulk oracle + lazy heap
+                            if self.epsilon.is_none() {
+                                let mut oracle = XlaExemplarOracle::new(
+                                    self.engine.clone(),
+                                    problem,
+                                    candidates,
+                                )?;
+                                return lazy_greedy_over(
+                                    &mut oracle,
+                                    problem,
+                                    candidates,
+                                    None,
+                                );
+                            }
+                        }
+                        other => return other,
+                    }
+                }
+                Objective::LogDet { sigma2, .. } => {
+                    match self.compress_logdet(problem, candidates, seed, *sigma2) {
+                        Err(crate::error::Error::NoArtifact(_)) => {} // pure fallback
+                        other => return other,
+                    }
+                }
+                _ => {}
+            }
+        }
+        // general fallback: pure lazy greedy (stochastic if ε set)
+        match self.epsilon {
+            Some(eps) => crate::algorithms::StochasticGreedy::new(eps)
+                .compress(problem, candidates, seed),
+            None => LazyGreedy::new().compress(problem, candidates, seed),
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Artifact manifest: the contract emitted by `python/compile/aot.py`.
+//!
+//! The runtime never hardcodes shapes — it selects the cheapest artifact
+//! whose fixed shapes dominate a request and pads inputs up to it
+//! (zero-row padding is inert for both objective families; see
+//! python/compile/model.py for the padding contract).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .req_arr("shape")?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| Error::Manifest("bad shape entry".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { shape, dtype: v.req_str("dtype")?.to_string() })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: String, // dist | rbf | exstep | exupd | exgreedy
+    pub file: String,
+    pub m: usize,
+    pub mu: usize,
+    pub d: usize,
+    pub k: usize,
+    pub h2: f64,
+    pub use_pallas: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl Artifact {
+    /// Lexicographic cost used to pick the *smallest* artifact that fits:
+    /// wasted compute scales with mu (per greedy step), then m·d.
+    fn cost(&self) -> (usize, usize, usize, usize) {
+        (self.mu, self.m, self.d, self.k)
+    }
+}
+
+/// A selection request against the manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Query {
+    pub kind: &'static str,
+    pub min_m: usize,
+    pub min_mu: usize,
+    pub min_d: usize,
+    pub min_k: usize,
+    /// Some(true): pallas variant; Some(false): jnp; None: either,
+    /// preferring jnp (the fused-XLA formulation benches faster on CPU).
+    pub pallas: Option<bool>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub set: String,
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let version = v.req_usize("version")?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported version {version}")));
+        }
+        let mut artifacts = Vec::new();
+        for e in v.req_arr("artifacts")? {
+            artifacts.push(Artifact {
+                name: e.req_str("name")?.to_string(),
+                kind: e.req_str("kind")?.to_string(),
+                file: e.req_str("file")?.to_string(),
+                m: e.req_usize("m")?,
+                mu: e.req_usize("mu")?,
+                d: e.req_usize("d")?,
+                k: e.req_usize("k")?,
+                h2: e.get("h2").and_then(Json::as_f64).unwrap_or(0.25),
+                use_pallas: e
+                    .get("use_pallas")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+                inputs: e
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: e
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+        Ok(Manifest {
+            version,
+            set: v.req_str("set")?.to_string(),
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, art: &Artifact) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+
+    /// Select the cheapest artifact satisfying the query.
+    pub fn select(&self, q: &Query) -> Result<&Artifact> {
+        let mut best: Option<&Artifact> = None;
+        for a in &self.artifacts {
+            if a.kind != q.kind
+                || a.m < q.min_m
+                || a.mu < q.min_mu
+                || a.d < q.min_d
+                || a.k < q.min_k
+            {
+                continue;
+            }
+            match q.pallas {
+                Some(want) if a.use_pallas != want => continue,
+                None if a.use_pallas => continue, // prefer jnp by default
+                _ => {}
+            }
+            if best.map(|b| a.cost() < b.cost()).unwrap_or(true) {
+                best = Some(a);
+            }
+        }
+        // second chance: if the jnp preference found nothing, allow pallas
+        if best.is_none() && q.pallas.is_none() {
+            let mut q2 = q.clone();
+            q2.pallas = Some(true);
+            return self.select(&q2);
+        }
+        best.ok_or_else(|| {
+            Error::NoArtifact(format!(
+                "kind={} m>={} mu>={} d>={} k>={} pallas={:?} (set '{}', {} artifacts)",
+                q.kind, q.min_m, q.min_mu, q.min_d, q.min_k, q.pallas, self.set,
+                self.artifacts.len()
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_from(text: &str, dir: &str) -> Manifest {
+        let d = std::env::temp_dir().join(dir);
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("manifest.json"), text).unwrap();
+        Manifest::load(&d).unwrap()
+    }
+
+    fn fake_entry(name: &str, kind: &str, m: usize, mu: usize, d: usize, k: usize, pallas: bool) -> String {
+        format!(
+            r#"{{"name":"{name}","kind":"{kind}","file":"{name}.hlo.txt","m":{m},"mu":{mu},
+                "d":{d},"k":{k},"h2":0.25,"use_pallas":{pallas},
+                "inputs":[{{"shape":[{m},{d}],"dtype":"f32"}}],
+                "outputs":[{{"shape":[{m},{mu}],"dtype":"f32"}}]}}"#
+        )
+    }
+
+    #[test]
+    fn selects_smallest_dominating_artifact() {
+        let text = format!(
+            r#"{{"version":1,"set":"t","eval_m":64,"artifacts":[{},{},{}]}}"#,
+            fake_entry("a", "dist", 2048, 256, 32, 0, false),
+            fake_entry("b", "dist", 2048, 1024, 32, 0, false),
+            fake_entry("c", "dist", 2048, 2048, 32, 0, false),
+        );
+        let m = manifest_from(&text, "hss_man_t1");
+        let q = Query { kind: "dist", min_m: 100, min_mu: 300, min_d: 17, ..Default::default() };
+        assert_eq!(m.select(&q).unwrap().name, "b");
+        let q = Query { kind: "dist", min_m: 100, min_mu: 2048, min_d: 17, ..Default::default() };
+        assert_eq!(m.select(&q).unwrap().name, "c");
+    }
+
+    #[test]
+    fn pallas_preference_and_fallback() {
+        let text = format!(
+            r#"{{"version":1,"set":"t","eval_m":64,"artifacts":[{},{}]}}"#,
+            fake_entry("p", "rbf", 512, 512, 32, 0, true),
+            fake_entry("j", "rbf", 512, 512, 32, 0, false),
+        );
+        let m = manifest_from(&text, "hss_man_t2");
+        let mut q = Query { kind: "rbf", min_m: 10, min_mu: 10, min_d: 10, ..Default::default() };
+        assert_eq!(m.select(&q).unwrap().name, "j"); // default prefers jnp
+        q.pallas = Some(true);
+        assert_eq!(m.select(&q).unwrap().name, "p");
+        // only-pallas manifest still resolves default queries
+        let text = format!(
+            r#"{{"version":1,"set":"t","eval_m":64,"artifacts":[{}]}}"#,
+            fake_entry("p", "rbf", 512, 512, 32, 0, true),
+        );
+        let m = manifest_from(&text, "hss_man_t3");
+        q.pallas = None;
+        assert_eq!(m.select(&q).unwrap().name, "p");
+    }
+
+    #[test]
+    fn no_match_is_descriptive() {
+        let text = r#"{"version":1,"set":"t","eval_m":64,"artifacts":[]}"#;
+        let m = manifest_from(text, "hss_man_t4");
+        let q = Query { kind: "dist", min_mu: 1, ..Default::default() };
+        let e = m.select(&q).unwrap_err().to_string();
+        assert!(e.contains("kind=dist"), "{e}");
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let d = std::env::temp_dir().join("hss_man_t5");
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("manifest.json"), r#"{"version":9,"set":"t","artifacts":[]}"#)
+            .unwrap();
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration-style check against the actual artifact build
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        // the workhorse artifact must exist
+        let q = Query {
+            kind: "exgreedy",
+            min_m: 512,
+            min_mu: 128,
+            min_d: 17,
+            min_k: 50,
+            ..Default::default()
+        };
+        let a = m.select(&q).unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.outputs.len(), 3);
+        assert!(m.hlo_path(a).exists());
+    }
+}

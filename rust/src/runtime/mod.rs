@@ -1,0 +1,35 @@
+//! XLA/PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the coordinator's hot
+//! path. Python is never invoked here — the HLO text files and
+//! `manifest.json` are the entire contract.
+//!
+//! The PJRT client and its buffers are not `Send`, so a dedicated
+//! **device thread** owns them; the rest of the system talks to it
+//! through the cloneable [`EngineHandle`] (request/reply over mpsc).
+//! This also gives the simulated cluster a faithful shape: many machine
+//! threads funnel compute requests into one accelerator, like a
+//! single-host serving deployment.
+
+pub mod accel;
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineHandle, EngineStats, Tensor};
+pub use manifest::{Artifact, Manifest, TensorSpec};
+
+/// Default artifact directory (overridable with HSS_ARTIFACT_DIR).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("HSS_ARTIFACT_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// The masked-gain sentinel emitted by the exgreedy artifact
+/// (see python/compile/model.py NEG_INF).
+pub const NEG_INF_SENTINEL: f32 = -3.0e38;
+
+/// Is this step gain the "no candidate available" sentinel?
+#[inline]
+pub fn is_sentinel(gain: f32) -> bool {
+    gain <= NEG_INF_SENTINEL / 2.0
+}

@@ -1,0 +1,112 @@
+//! Mini property-testing runner (proptest substitute for the offline
+//! build).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from
+//! `gen` and asserts `prop` on each; on failure it panics with the
+//! offending case's replay seed so the exact input can be reproduced by
+//! seeding the generator directly.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` on `cases` random inputs drawn by `gen`.
+///
+/// Panics with a replay seed on the first failing case. `prop` returns
+/// `Err(msg)` to fail with a message, `Ok(())` to pass.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut meta = Rng::seed_from(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::seed_from(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}):\n  \
+                 {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers for common shapes.
+pub mod gens {
+    use crate::util::rng::Rng;
+
+    /// A random f32 matrix (rows, cols, data) with entries ~N(0,1).
+    pub fn matrix(rng: &mut Rng, max_rows: usize, max_cols: usize) -> (usize, usize, Vec<f32>) {
+        let r = rng.range(1, max_rows + 1);
+        let c = rng.range(1, max_cols + 1);
+        let data = (0..r * c).map(|_| rng.normal() as f32).collect();
+        (r, c, data)
+    }
+
+    /// Random subset of 0..n of the given size.
+    pub fn subset(rng: &mut Rng, n: usize, size: usize) -> Vec<u32> {
+        rng.sample_indices(n, size.min(n))
+    }
+
+    /// A random weighted-coverage instance: `n` items, `u` universe
+    /// elements, each item covers a random subset; weights positive.
+    /// Used to property-test submodularity and β-niceness.
+    #[derive(Debug, Clone)]
+    pub struct CoverageInstance {
+        pub n: usize,
+        pub u: usize,
+        pub covers: Vec<Vec<u32>>,
+        pub weights: Vec<f64>,
+    }
+
+    pub fn coverage(rng: &mut Rng, max_n: usize, max_u: usize) -> CoverageInstance {
+        let n = rng.range(2, max_n + 1);
+        let u = rng.range(2, max_u + 1);
+        let covers = (0..n)
+            .map(|_| {
+                let deg = rng.range(0, u.min(6) + 1);
+                rng.sample_indices(u, deg)
+            })
+            .collect();
+        let weights = (0..u).map(|_| rng.f64() + 0.05).collect();
+        CoverageInstance { n, u, covers, weights }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(1, 50, |rng| rng.below(100), |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, 100, |rng| rng.below(10), |&x| {
+            if x < 9 {
+                Ok(())
+            } else {
+                Err("x too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut r1 = crate::util::rng::Rng::seed_from(5);
+        let mut r2 = crate::util::rng::Rng::seed_from(5);
+        let a = gens::coverage(&mut r1, 10, 10);
+        let b = gens::coverage(&mut r2, 10, 10);
+        assert_eq!(a.covers, b.covers);
+        assert_eq!(a.weights, b.weights);
+    }
+}

@@ -1,0 +1,154 @@
+//! Tiny CLI argument parser (clap substitute for the offline build).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments; used by the `hss` binary, examples and benches.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — the binary name must
+    /// already be stripped.
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" ends option parsing
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::invalid(format!("--{name} expects integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::invalid(format!("--{name} expects float, got '{v}'"))),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::invalid(format!("--{name} expects u64, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--mus 200,400,800`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        Error::invalid(format!("--{name}: bad integer '{p}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--k", "50", "--mu=800", "run"]);
+        assert_eq!(a.usize("k", 0).unwrap(), 50);
+        assert_eq!(a.usize("mu", 0).unwrap(), 800);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["--quick", "--trials", "3"]);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("trials"));
+        assert_eq!(a.usize("trials", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["--k", "abc"]);
+        assert!(a.usize("k", 1).is_err());
+        assert_eq!(a.usize("missing", 9).unwrap(), 9);
+        assert_eq!(a.f64("eps", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--mus", "200,400,800"]);
+        assert_eq!(a.usize_list("mus", &[]).unwrap(), vec![200, 400, 800]);
+        assert_eq!(a.usize_list("other", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+}

@@ -1,0 +1,50 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is offline with a minimal vendored crate set, so
+//! the usual ecosystem crates (rand, serde, clap, proptest) are replaced
+//! by small, tested, in-repo implementations (DESIGN.md §Substitutions).
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Ceiling division for usize.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `x` up to the next power of two, at least `min`.
+#[inline]
+pub fn next_pow2_at_least(x: usize, min: usize) -> usize {
+    x.max(min).next_power_of_two()
+}
+
+/// Format a float with fixed precision, used by table printers.
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+
+    #[test]
+    fn pow2_rounding() {
+        assert_eq!(next_pow2_at_least(100, 128), 128);
+        assert_eq!(next_pow2_at_least(129, 128), 256);
+        assert_eq!(next_pow2_at_least(2048, 128), 2048);
+        assert_eq!(next_pow2_at_least(1, 1), 1);
+    }
+}

@@ -1,0 +1,280 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! xoshiro256++ (Blackman & Vigna) seeded through SplitMix64 — the same
+//! construction the `rand` ecosystem uses, reimplemented here because the
+//! offline vendor set lacks `rand`. Every stochastic component of the
+//! system (partitioner, stochastic greedy, data generators, property
+//! tests) takes an explicit seed so whole experiments replay bit-exactly.
+
+/// SplitMix64 — used for seeding and as a cheap stream splitter.
+#[derive(Clone, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ deterministic RNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal variate from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = SplitMix64(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent child stream (e.g. one per machine) without
+    /// correlating with the parent's future output.
+    pub fn split(&mut self, tag: u64) -> Rng {
+        let base = self.next_u64();
+        Rng::seed_from(base ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "below(0)");
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `count` distinct indices from `0..n` (partial Fisher–Yates
+    /// on an index pool for small counts, Floyd's algorithm otherwise).
+    pub fn sample_indices(&mut self, n: usize, count: usize) -> Vec<u32> {
+        assert!(count <= n, "sample_indices: count {count} > n {n}");
+        if count * 4 >= n {
+            // dense: partial shuffle
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            for i in 0..count {
+                let j = self.range(i, n);
+                idx.swap(i, j);
+            }
+            idx.truncate(count);
+            idx
+        } else {
+            // sparse: Floyd's algorithm, order then shuffled
+            let mut chosen = std::collections::HashSet::with_capacity(count);
+            let mut out = Vec::with_capacity(count);
+            for j in (n - count)..n {
+                let t = self.below(j + 1);
+                let v = if chosen.contains(&(t as u32)) { j as u32 } else { t as u32 };
+                chosen.insert(v);
+                out.push(v);
+            }
+            self.shuffle(&mut out);
+            out
+        }
+    }
+
+    /// Pick one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_parent_continuation() {
+        let mut parent = Rng::seed_from(7);
+        let mut child = parent.split(1);
+        let c1: Vec<u64> = (0..8).map(|_| child.next_u64()).collect();
+        // replay
+        let mut parent2 = Rng::seed_from(7);
+        let mut child2 = parent2.split(1);
+        let c2: Vec<u64> = (0..8).map(|_| child2.next_u64()).collect();
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Rng::seed_from(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            let v = rng.below(10);
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::seed_from(4);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from(5);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::seed_from(6);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_complete() {
+        let mut rng = Rng::seed_from(7);
+        for &(n, c) in &[(100usize, 10usize), (100, 90), (5, 5), (1000, 3)] {
+            let s = rng.sample_indices(n, c);
+            assert_eq!(s.len(), c);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), c, "duplicates for n={n} c={c}");
+            assert!(s.iter().all(|&i| (i as usize) < n));
+        }
+    }
+
+    #[test]
+    fn sample_indices_uniform_coverage() {
+        let mut rng = Rng::seed_from(8);
+        let mut counts = [0usize; 20];
+        for _ in 0..20_000 {
+            for i in rng.sample_indices(20, 2) {
+                counts[i as usize] += 1;
+            }
+        }
+        // each index expected 2000 times
+        for &c in &counts {
+            assert!((1_600..2_400).contains(&c), "count {c}");
+        }
+    }
+}

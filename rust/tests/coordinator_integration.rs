@@ -1,0 +1,182 @@
+//! End-to-end coordinator tests: the tree framework against its
+//! theoretical guarantees and the baselines, over both objectives and
+//! both execution substrates (pure / XLA).
+
+use std::sync::Arc;
+
+use hss::algorithms::StochasticGreedy;
+use hss::analysis::bounds;
+use hss::coordinator::{baselines, TreeBuilder};
+use hss::data::synthetic;
+use hss::objectives::Problem;
+use hss::runtime::accel::XlaGreedy;
+use hss::runtime::Engine;
+
+fn maybe_engine() -> Option<hss::runtime::EngineHandle> {
+    let dir = hss::runtime::default_artifact_dir();
+    dir.join("manifest.json").exists().then(|| Engine::start(&dir).unwrap())
+}
+
+#[test]
+fn tree_close_to_centralized_exemplar() {
+    // The paper's headline empirical claim (Table 3): < ~1% relative
+    // error at tiny capacities. On easy synthetic data we allow 5%.
+    let ds = Arc::new(synthetic::csn_like(2_000, 1));
+    let p = Problem::exemplar(ds, 20, 1);
+    let central = baselines::centralized(&p).unwrap();
+    for capacity in [2 * 20, 8 * 20] {
+        let res = TreeBuilder::new(capacity).build().run(&p, 7).unwrap();
+        let ratio = res.best.value / central.value;
+        assert!(
+            ratio > 0.95,
+            "capacity {capacity}: ratio {ratio} (tree {} vs central {})",
+            res.best.value,
+            central.value
+        );
+        // and the theoretical floor holds with huge slack
+        let floor = bounds::thm33_greedy(2_000, 20, capacity);
+        assert!(ratio >= floor);
+    }
+}
+
+#[test]
+fn tree_close_to_centralized_logdet() {
+    let ds = Arc::new(synthetic::parkinsons_like(1_500, 2));
+    let p = Problem::logdet(ds, 20, 2);
+    let central = baselines::centralized(&p).unwrap();
+    let res = TreeBuilder::new(60).build().run(&p, 3).unwrap();
+    let ratio = res.best.value / central.value;
+    assert!(ratio > 0.9, "logdet tree ratio {ratio}");
+}
+
+#[test]
+fn tree_with_capacity_sqrt_nk_matches_randgreedi_quality() {
+    let n = 3_000;
+    let k = 15;
+    let ds = Arc::new(synthetic::csn_like(n, 4));
+    let p = Problem::exemplar(ds, k, 4);
+    let mu = baselines::two_round_min_capacity(n, k) + 10;
+    let tree = TreeBuilder::new(mu).build().run(&p, 5).unwrap();
+    assert_eq!(tree.rounds, 2, "µ ≥ √(nk) should be the two-round regime");
+    let rg = baselines::rand_greedi_default(&p, mu, 5).unwrap();
+    let rel = (tree.best.value - rg.solution.value).abs() / rg.solution.value;
+    assert!(rel < 0.03, "tree {} vs randgreedi {}", tree.best.value, rg.solution.value);
+}
+
+#[test]
+fn tree_succeeds_where_randgreedi_fails() {
+    // THE paper's point: fixed capacity far below √(nk).
+    let n = 4_000;
+    let k = 40;
+    let ds = Arc::new(synthetic::csn_like(n, 6));
+    let p = Problem::exemplar(ds, k, 6);
+    let mu = 2 * k; // 80 ≪ √(nk) = 400
+    assert!(baselines::rand_greedi_default(&p, mu, 1).is_err());
+    let tree = TreeBuilder::new(mu).build().run(&p, 1).unwrap();
+    assert!(tree.rounds > 2);
+    let central = baselines::centralized(&p).unwrap();
+    let ratio = tree.best.value / central.value;
+    assert!(ratio > 0.9, "deep tree ratio {ratio} over {} rounds", tree.rounds);
+}
+
+#[test]
+fn stochastic_tree_quality() {
+    let ds = Arc::new(synthetic::csn_like(2_000, 8));
+    let p = Problem::exemplar(ds, 20, 8);
+    let central = baselines::centralized(&p).unwrap();
+    let res = TreeBuilder::new(100)
+        .compressor(Arc::new(StochasticGreedy::new(0.2)))
+        .build()
+        .run(&p, 2)
+        .unwrap();
+    let ratio = res.best.value / central.value;
+    assert!(ratio > 0.9, "stochastic-tree ratio {ratio}");
+}
+
+#[test]
+fn oracle_evaluations_scale_as_nk() {
+    // Table 1: O(nk) oracle evaluations for the tree algorithm.
+    let k = 10;
+    let mut ratios = Vec::new();
+    for (seed, n) in [(1u64, 1_000usize), (2, 2_000), (3, 4_000)] {
+        let ds = Arc::new(synthetic::csn_like(n, seed));
+        let p = Problem::exemplar(ds, k, seed);
+        let res = TreeBuilder::new(100).build().run(&p, seed).unwrap();
+        ratios.push(res.oracle_evals as f64 / (n * k) as f64);
+    }
+    // evals/nk should be bounded by a small constant and roughly flat
+    for r in &ratios {
+        assert!(*r < 3.0, "evals/nk = {r}");
+    }
+    let spread = ratios.iter().cloned().fold(0.0, f64::max)
+        / ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread < 3.0, "evals not O(nk): ratios {ratios:?}");
+}
+
+#[test]
+fn xla_tree_end_to_end_matches_pure_tree() {
+    let Some(engine) = maybe_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let ds = Arc::new(synthetic::csn_like(1_500, 9));
+    let p_pure = Problem::exemplar(ds.clone(), 15, 9);
+    let p_xla = Problem::exemplar(ds, 15, 9).with_engine(engine.clone());
+    let pure = TreeBuilder::new(120).build().run(&p_pure, 4).unwrap();
+    let xla = TreeBuilder::new(120)
+        .compressor(Arc::new(XlaGreedy::new(engine)))
+        .build()
+        .run(&p_xla, 4)
+        .unwrap();
+    let rel = (pure.best.value - xla.best.value).abs() / pure.best.value;
+    assert!(rel < 0.02, "pure {} vs xla {}", pure.best.value, xla.best.value);
+    assert_eq!(pure.rounds, xla.rounds);
+}
+
+#[test]
+fn xla_logdet_tree_end_to_end() {
+    let Some(engine) = maybe_engine() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let ds = Arc::new(synthetic::webscope_like(3_000, 10));
+    let p = Problem::logdet(ds, 20, 10).with_engine(engine.clone());
+    let res = TreeBuilder::new(150)
+        .compressor(Arc::new(XlaGreedy::new(engine)))
+        .build()
+        .run(&p, 6)
+        .unwrap();
+    let central = baselines::centralized(&p).unwrap();
+    let ratio = res.best.value / central.value;
+    assert!(ratio > 0.9, "xla logdet tree ratio {ratio}");
+}
+
+#[test]
+fn random_baseline_much_worse_than_tree() {
+    // Table 3's RANDOM column shows 20-60% error; verify the ordering.
+    let ds = Arc::new(synthetic::csn_like(2_000, 11));
+    let p = Problem::exemplar(ds, 20, 11);
+    let tree = TreeBuilder::new(100).build().run(&p, 1).unwrap();
+    let mut worse = 0;
+    for seed in 0..5 {
+        let r = baselines::random_subset(&p, seed).unwrap();
+        if r.value < tree.best.value {
+            worse += 1;
+        }
+    }
+    assert!(worse >= 4, "random beat tree too often");
+}
+
+#[test]
+fn shuffle_bytes_accounting_is_sane() {
+    let n = 2_000usize;
+    let ds = Arc::new(synthetic::csn_like(n, 12));
+    let row_bytes = ds.row_bytes() as u64;
+    let p = Problem::exemplar(ds, 10, 12);
+    let res = TreeBuilder::new(100).build().run(&p, 2).unwrap();
+    // round 1 ships all n rows; later rounds ship less
+    let first = res.per_round[0].bytes_shuffled;
+    assert_eq!(first, n as u64 * row_bytes);
+    assert!(res.bytes_shuffled >= first);
+    assert!(res.bytes_shuffled < 2 * first, "later rounds should be small");
+}
