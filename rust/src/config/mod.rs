@@ -3,8 +3,10 @@
 //! experimental grid.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::data::registry;
+use crate::dist::{Backend, BackendChoice, FaultPlan};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
 use crate::util::json::Json;
@@ -56,6 +58,8 @@ pub struct RunConfig {
     pub trials: usize,
     pub use_engine: bool,
     pub threads: usize,
+    /// Execution backend for compression rounds (local | tcp | sim).
+    pub backend: BackendChoice,
 }
 
 impl Default for RunConfig {
@@ -69,6 +73,7 @@ impl Default for RunConfig {
             trials: 1,
             use_engine: true,
             threads: 2,
+            backend: BackendChoice::Local,
         }
     }
 }
@@ -97,8 +102,8 @@ impl RunConfig {
         if let Some(x) = v.get("capacity").and_then(Json::as_usize) {
             cfg.capacity = x;
         }
-        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
-            cfg.seed = x as u64;
+        if let Some(x) = v.get("seed") {
+            cfg.seed = json_u64(x, "seed")?;
         }
         if let Some(x) = v.get("trials").and_then(Json::as_usize) {
             cfg.trials = x.max(1);
@@ -109,9 +114,38 @@ impl RunConfig {
         if let Some(x) = v.get("threads").and_then(Json::as_usize) {
             cfg.threads = x.max(1);
         }
+        if let Some(b) = v.get("backend").and_then(Json::as_str) {
+            cfg.backend = BackendChoice::parse(b)?;
+        }
+        if let BackendChoice::Tcp { workers } = &mut cfg.backend {
+            if let Some(list) = v.get("workers").and_then(Json::as_arr) {
+                *workers = list
+                    .iter()
+                    .map(|w| {
+                        w.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::Config("'workers' must be an array of host:port strings".into())
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            // An empty list here is not an error: the CLI may supply
+            // --workers after the config file loads ("config file first,
+            // CLI flags override"). TcpBackend::new rejects an empty
+            // list at build time.
+        }
+        if let BackendChoice::Sim { faults } = &mut cfg.backend {
+            if let Some(sim) = v.get("sim") {
+                *faults = parse_fault_plan(sim)?;
+            }
+        }
         // dataset names validate eagerly
         registry::spec(&cfg.dataset)?;
         Ok(cfg)
+    }
+
+    /// Build the concrete execution backend this config selects.
+    pub fn build_backend(&self) -> Result<Arc<dyn Backend>> {
+        self.backend.build(self.capacity, Some(self.threads))
     }
 
     /// Materialize the problem this config describes (objective follows
@@ -141,6 +175,48 @@ impl RunConfig {
         };
         Ok((p, engine))
     }
+}
+
+/// Parse a u64 config field losslessly (decimal string above 2^53 —
+/// same convention as the dist wire protocol; see
+/// [`crate::util::json::as_lossless_u64`]).
+fn json_u64(v: &Json, what: &str) -> Result<u64> {
+    crate::util::json::as_lossless_u64(v).ok_or_else(|| {
+        Error::Config(format!(
+            "{what}: expected a non-negative integer (use a decimal string above 2^53)"
+        ))
+    })
+}
+
+/// Parse a fault-injection plan from a config `"sim"` object, e.g.
+/// `{"loss_per_round":1,"straggler_prob":0.1,"straggler_delay_ms":50}`.
+fn parse_fault_plan(v: &Json) -> Result<FaultPlan> {
+    let mut f = FaultPlan::default();
+    if let Some(x) = v.get("seed") {
+        f.seed = json_u64(x, "sim.seed")?;
+    }
+    if let Some(x) = v.get("loss_per_round").and_then(Json::as_usize) {
+        f.machine_loss_per_round = x;
+    }
+    if let Some(x) = v.get("loss_prob").and_then(Json::as_f64) {
+        if !(0.0..=1.0).contains(&x) {
+            return Err(Error::Config(format!("sim.loss_prob {x} out of [0,1]")));
+        }
+        f.loss_prob = x;
+    }
+    if let Some(x) = v.get("max_retries").and_then(Json::as_usize) {
+        f.max_retries = x;
+    }
+    if let Some(x) = v.get("straggler_prob").and_then(Json::as_f64) {
+        if !(0.0..=1.0).contains(&x) {
+            return Err(Error::Config(format!("sim.straggler_prob {x} out of [0,1]")));
+        }
+        f.straggler_prob = x;
+    }
+    if let Some(x) = v.get("straggler_delay_ms").and_then(Json::as_f64) {
+        f.straggler_delay_ms = x;
+    }
+    Ok(f)
 }
 
 /// Paper Table 2 dataset → objective mapping.
@@ -188,5 +264,74 @@ mod tests {
     fn default_is_valid() {
         let cfg = RunConfig::default();
         assert!(registry::spec(&cfg.dataset).is_ok());
+        assert_eq!(cfg.backend, BackendChoice::Local);
+    }
+
+    #[test]
+    fn parses_tcp_backend_with_workers() {
+        let cfg = RunConfig::from_json_text(
+            r#"{"backend":"tcp","workers":["127.0.0.1:7070","127.0.0.1:7071"]}"#,
+        )
+        .unwrap();
+        match &cfg.backend {
+            BackendChoice::Tcp { workers } => {
+                assert_eq!(workers, &["127.0.0.1:7070", "127.0.0.1:7071"]);
+            }
+            other => panic!("wrong backend {other:?}"),
+        }
+        assert!(cfg.build_backend().is_ok());
+    }
+
+    #[test]
+    fn tcp_backend_without_workers_parses_but_does_not_build() {
+        // parsing succeeds — the CLI may add --workers after the config
+        // file loads — but building the backend without any rejects
+        let cfg = RunConfig::from_json_text(r#"{"backend":"tcp"}"#).unwrap();
+        assert!(cfg.build_backend().is_err());
+        // malformed entries and unknown backends still fail at parse time
+        assert!(RunConfig::from_json_text(r#"{"backend":"tcp","workers":[7]}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"backend":"warp"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_sim_backend_faults() {
+        let cfg = RunConfig::from_json_text(
+            r#"{"backend":"sim","sim":{"loss_per_round":1,"loss_prob":0.1,
+                "straggler_prob":0.2,"straggler_delay_ms":40,"max_retries":5,"seed":9}}"#,
+        )
+        .unwrap();
+        match &cfg.backend {
+            BackendChoice::Sim { faults } => {
+                assert_eq!(faults.machine_loss_per_round, 1);
+                assert_eq!(faults.loss_prob, 0.1);
+                assert_eq!(faults.straggler_prob, 0.2);
+                assert_eq!(faults.straggler_delay_ms, 40.0);
+                assert_eq!(faults.max_retries, 5);
+                assert_eq!(faults.seed, 9);
+            }
+            other => panic!("wrong backend {other:?}"),
+        }
+        // out-of-range probabilities rejected
+        assert!(
+            RunConfig::from_json_text(r#"{"backend":"sim","sim":{"loss_prob":1.5}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn u64_seeds_parse_losslessly_from_strings() {
+        // above 2^53 a JSON number would silently lose low bits; the
+        // string form is exact (mirrors the dist wire convention)
+        let cfg = RunConfig::from_json_text(
+            r#"{"seed":"18446744073709551615",
+                "backend":"sim","sim":{"seed":"18446744073709551614"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, u64::MAX);
+        match &cfg.backend {
+            BackendChoice::Sim { faults } => assert_eq!(faults.seed, u64::MAX - 1),
+            other => panic!("wrong backend {other:?}"),
+        }
+        assert!(RunConfig::from_json_text(r#"{"seed":-3}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"seed":"zebra"}"#).is_err());
     }
 }

@@ -4,8 +4,8 @@
 use std::sync::Arc;
 
 use crate::algorithms::{Compressor, LazyGreedy, RandomCompressor, Solution};
-use crate::coordinator::cluster::Cluster;
 use crate::coordinator::partitioner;
+use crate::dist::{Backend, LocalBackend};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
 use crate::util::rng::Rng;
@@ -50,7 +50,7 @@ pub fn rand_greedi(
     compressor: &dyn Compressor,
     seed: u64,
 ) -> Result<TwoRoundResult> {
-    two_round(problem, capacity, compressor, seed, true)
+    two_round(problem, compressor, seed, true, &LocalBackend::new(capacity))
 }
 
 /// GREEDI (Mirzasoleiman et al. 2013): same two-round scheme but with an
@@ -61,17 +61,39 @@ pub fn greedi(
     compressor: &dyn Compressor,
     seed: u64,
 ) -> Result<TwoRoundResult> {
-    two_round(problem, capacity, compressor, seed, false)
+    two_round(problem, compressor, seed, false, &LocalBackend::new(capacity))
+}
+
+/// RANDGREEDI on an explicit execution backend (tcp workers, fault
+/// simulator); µ comes from the backend.
+pub fn rand_greedi_on(
+    problem: &Problem,
+    backend: &dyn Backend,
+    compressor: &dyn Compressor,
+    seed: u64,
+) -> Result<TwoRoundResult> {
+    two_round(problem, compressor, seed, true, backend)
+}
+
+/// GREEDI on an explicit execution backend; µ comes from the backend.
+pub fn greedi_on(
+    problem: &Problem,
+    backend: &dyn Backend,
+    compressor: &dyn Compressor,
+    seed: u64,
+) -> Result<TwoRoundResult> {
+    two_round(problem, compressor, seed, false, backend)
 }
 
 fn two_round(
     problem: &Problem,
-    capacity: usize,
     compressor: &dyn Compressor,
     seed: u64,
     random_partition: bool,
+    backend: &dyn Backend,
 ) -> Result<TwoRoundResult> {
     let n = problem.n();
+    let capacity = backend.capacity();
     if capacity <= problem.k {
         return Err(Error::invalid(format!(
             "capacity {capacity} must exceed k={}",
@@ -86,8 +108,9 @@ fn two_round(
     } else {
         partitioner::contiguous_partition(&all, m)
     };
-    let cluster = Cluster::new(capacity);
-    let sols = cluster.run_round(problem, compressor, &parts, rng.next_u64())?;
+    let sols = backend
+        .run_round(problem, compressor, &parts, rng.next_u64())?
+        .solutions;
 
     let mut union: Vec<u32> = sols.iter().flat_map(|s| s.items.iter().copied()).collect();
     union.sort_unstable();
@@ -100,7 +123,19 @@ fn two_round(
             ctx: format!(" (two-round union of {m} machines × k={})", problem.k),
         });
     }
-    let final_sol = compressor.compress(problem, &union, rng.next_u64())?;
+    // Round 2 also runs on the backend (ONE machine of capacity µ), so
+    // under the tcp backend every oracle call happens on a worker.
+    let final_sol = backend
+        .run_round(problem, compressor, std::slice::from_ref(&union), rng.next_u64())?
+        .solutions
+        .into_iter()
+        .next()
+        .ok_or_else(|| {
+            Error::Worker(format!(
+                "backend '{}' returned no solution for the two-round final merge",
+                backend.name()
+            ))
+        })?;
     let best_partial = sols
         .into_iter()
         .max_by(|a, b| a.value.partial_cmp(&b.value).unwrap())

@@ -6,18 +6,21 @@
 //! paper's entire premise, and the Table 1 benches rely on the two-round
 //! baselines *failing* here once `m·k > µ`.
 //!
-//! Machines execute on a small pool of OS threads (the testbed is a
-//! single host); XLA work funnels through the engine's device thread.
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+//! The thread-pool execution itself now lives in
+//! [`crate::dist::LocalBackend`] behind the [`Backend`] trait (so rounds
+//! can also run on real `hss worker` processes or the fault simulator —
+//! see [`crate::dist`]). Internal call sites (tree, baselines) use
+//! `Backend` directly; `Cluster` remains as the crate's stable
+//! *single-round* public entry point (re-exported from
+//! [`crate::coordinator`]) for downstream users who just want "compress
+//! these parts on a capacity-µ pool" without choosing a backend.
 
 use crate::algorithms::{Compressor, Solution};
-use crate::error::{Error, Result};
+use crate::dist::{Backend, LocalBackend};
+use crate::error::Result;
 use crate::objectives::Problem;
-use crate::util::rng::Rng;
 
-/// Fixed-capacity machine pool.
+/// Fixed-capacity machine pool (facade over [`LocalBackend`]).
 pub struct Cluster {
     pub capacity: usize,
     pub threads: usize,
@@ -25,11 +28,8 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(capacity: usize) -> Self {
-        let threads = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1)
-            .clamp(1, 8);
-        Cluster { capacity, threads }
+        let local = LocalBackend::new(capacity);
+        Cluster { capacity, threads: local.threads() }
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
@@ -46,49 +46,10 @@ impl Cluster {
         parts: &[Vec<u32>],
         round_seed: u64,
     ) -> Result<Vec<Solution>> {
-        // capacity enforcement before any work starts
-        for (i, p) in parts.iter().enumerate() {
-            if p.len() > self.capacity {
-                return Err(Error::CapacityExceeded {
-                    capacity: self.capacity,
-                    got: p.len(),
-                    ctx: format!(" (machine {i} of {})", parts.len()),
-                });
-            }
-        }
-
-        // per-machine deterministic seeds
-        let mut seed_rng = Rng::seed_from(round_seed);
-        let seeds: Vec<u64> = (0..parts.len()).map(|_| seed_rng.next_u64()).collect();
-
-        let next = AtomicUsize::new(0);
-        let results: Mutex<Vec<Option<Result<Solution>>>> =
-            Mutex::new((0..parts.len()).map(|_| None).collect());
-
-        let workers = self.threads.min(parts.len()).max(1);
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= parts.len() {
-                        break;
-                    }
-                    let sol = compressor.compress(problem, &parts[i], seeds[i]);
-                    results.lock().unwrap()[i] = Some(sol);
-                });
-            }
-        });
-
-        let results = results.into_inner().unwrap();
-        let mut out = Vec::with_capacity(parts.len());
-        for (i, r) in results.into_iter().enumerate() {
-            match r {
-                Some(Ok(sol)) => out.push(sol),
-                Some(Err(e)) => return Err(e),
-                None => return Err(Error::Worker(format!("machine {i} never ran"))),
-            }
-        }
-        Ok(out)
+        let backend = LocalBackend::new(self.capacity).with_threads(self.threads);
+        backend
+            .run_round(problem, compressor, parts, round_seed)
+            .map(|outcome| outcome.solutions)
     }
 }
 
@@ -97,6 +58,7 @@ mod tests {
     use super::*;
     use crate::algorithms::LazyGreedy;
     use crate::data::synthetic;
+    use crate::error::Error;
     use std::sync::Arc;
 
     #[test]
@@ -109,6 +71,29 @@ mod tests {
             .run_round(&p, &LazyGreedy::new(), &parts, 0)
             .unwrap_err();
         assert!(matches!(err, Error::CapacityExceeded { capacity: 10, got: 11, .. }));
+    }
+
+    #[test]
+    fn capacity_error_context_names_the_machine_index() {
+        let ds = Arc::new(synthetic::csn_like(100, 1));
+        let p = Problem::exemplar(ds, 5, 1);
+        let cluster = Cluster::new(10);
+        // machine 2 of 3 is the overloaded one
+        let parts = vec![
+            (0..5).collect::<Vec<u32>>(),
+            (5..10).collect::<Vec<u32>>(),
+            (10..25).collect::<Vec<u32>>(),
+        ];
+        let err = cluster
+            .run_round(&p, &LazyGreedy::new(), &parts, 0)
+            .unwrap_err();
+        match err {
+            Error::CapacityExceeded { capacity, got, ctx } => {
+                assert_eq!((capacity, got), (10, 15));
+                assert!(ctx.contains("machine 2 of 3"), "ctx: {ctx}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
     }
 
     #[test]

@@ -15,6 +15,9 @@ pub struct RoundMetrics {
     pub machines: usize,
     pub max_machine_load: usize,
     pub output_items: usize,
+    /// Parts re-executed after a machine loss (backend fault tolerance;
+    /// always 0 on a healthy backend).
+    pub requeued_parts: usize,
     pub bytes_shuffled: u64,
     pub wall_ms: f64,
     pub best_value: f64,
@@ -25,6 +28,7 @@ pub struct RoundMetrics {
 pub struct Metrics {
     pub bytes_shuffled: AtomicU64,
     pub machines_provisioned: AtomicU64,
+    pub parts_requeued: AtomicU64,
     rounds: Mutex<Vec<RoundMetrics>>,
 }
 
@@ -37,6 +41,8 @@ impl Metrics {
         self.bytes_shuffled.fetch_add(r.bytes_shuffled, Ordering::Relaxed);
         self.machines_provisioned
             .fetch_add(r.machines as u64, Ordering::Relaxed);
+        self.parts_requeued
+            .fetch_add(r.requeued_parts as u64, Ordering::Relaxed);
         self.rounds.lock().unwrap().push(r);
     }
 
@@ -55,6 +61,10 @@ impl Metrics {
     pub fn total_machines(&self) -> u64 {
         self.machines_provisioned.load(Ordering::Relaxed)
     }
+
+    pub fn total_requeued(&self) -> u64 {
+        self.parts_requeued.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -70,6 +80,7 @@ mod tests {
             machines: 4,
             max_machine_load: 25,
             output_items: 20,
+            requeued_parts: 1,
             bytes_shuffled: 400,
             wall_ms: 1.0,
             best_value: 5.0,
@@ -80,6 +91,7 @@ mod tests {
             machines: 1,
             max_machine_load: 20,
             output_items: 5,
+            requeued_parts: 2,
             bytes_shuffled: 80,
             wall_ms: 0.5,
             best_value: 6.0,
@@ -87,6 +99,7 @@ mod tests {
         assert_eq!(m.num_rounds(), 2);
         assert_eq!(m.total_bytes_shuffled(), 480);
         assert_eq!(m.total_machines(), 5);
+        assert_eq!(m.total_requeued(), 3);
         assert_eq!(m.rounds()[1].best_value, 6.0);
     }
 }

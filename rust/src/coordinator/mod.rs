@@ -4,8 +4,10 @@
 //!   free locations");
 //! * [`planner`] — round planning: `m_t = ⌈|A_t|/µ⌉` and the Prop 3.1
 //!   round bound `r = ⌈log_{µ/k}(n/µ)⌉ + 1`;
-//! * [`cluster`] — the simulated fixed-capacity machine pool (worker
-//!   threads, hard capacity enforcement, shuffle accounting);
+//! * [`cluster`] — fixed-capacity machine-pool facade (hard capacity
+//!   enforcement; execution now lives behind [`crate::dist::Backend`],
+//!   so rounds also run on real `hss worker` processes or the fault
+//!   simulator);
 //! * [`tree`] — Algorithm 1 TREE-BASED COMPRESSION;
 //! * [`baselines`] — centralized GREEDY, GREEDI, RANDGREEDI, RANDOM.
 

@@ -175,4 +175,56 @@ mod tests {
         let b = balanced_random_partition(&items, 5, &mut Rng::seed_from(7));
         assert_eq!(a, b);
     }
+
+    #[test]
+    fn union_is_the_input_multiset_even_with_duplicates() {
+        // The documented contract is multiset equality — items may repeat
+        // (e.g. an A_t assembled from overlapping partial solutions) and
+        // every occurrence must land on exactly one machine.
+        let mut rng = Rng::seed_from(17);
+        let items: Vec<u32> = (0..90).map(|i| i % 30).collect(); // each id 3×
+        let parts = balanced_random_partition(&items, 7, &mut rng);
+        let mut expected = items.clone();
+        expected.sort_unstable();
+        assert_eq!(flatten_sorted(&parts), expected);
+        let cap = items.len().div_ceil(7);
+        for p in &parts {
+            assert!(p.len() <= cap, "part {} exceeds ceiling {cap}", p.len());
+        }
+    }
+
+    #[test]
+    fn full_invariant_sweep_part_ceiling_multiset_determinism() {
+        use crate::util::check::forall;
+        forall(29, 60, |rng| {
+            let n = rng.range(0, 400);
+            let l = rng.range(1, 16);
+            let dup_mod = rng.range(1, 64);
+            let seed = rng.next_u64();
+            (n, l, dup_mod, seed)
+        }, |&(n, l, dup_mod, seed)| {
+            let items: Vec<u32> = (0..n as u32).map(|i| i % dup_mod as u32).collect();
+            let run = |s: u64| balanced_random_partition(&items, l, &mut Rng::seed_from(s));
+            let parts = run(seed);
+            if parts.len() != l {
+                return Err(format!("expected {l} parts, got {}", parts.len()));
+            }
+            // (1) every part ≤ ⌈N/L⌉
+            let cap = if n == 0 { 0 } else { n.div_ceil(l) };
+            if let Some(over) = parts.iter().find(|p| p.len() > cap) {
+                return Err(format!("part of {} exceeds ceiling {cap}", over.len()));
+            }
+            // (2) union equals the input multiset
+            let mut expected = items.clone();
+            expected.sort_unstable();
+            if flatten_sorted(&parts) != expected {
+                return Err("union is not the input multiset".into());
+            }
+            // (3) seed-determinism
+            if parts != run(seed) {
+                return Err("same seed produced a different partition".into());
+            }
+            Ok(())
+        });
+    }
 }

@@ -9,10 +9,10 @@
 use std::sync::Arc;
 
 use crate::algorithms::{Compressor, LazyGreedy, Solution};
-use crate::coordinator::cluster::Cluster;
 use crate::coordinator::metrics::{Metrics, RoundMetrics};
 use crate::coordinator::partitioner;
 use crate::coordinator::planner::{round_bound, RoundPlan};
+use crate::dist::{Backend, LocalBackend};
 use crate::error::Result;
 use crate::objectives::Problem;
 use crate::util::rng::Rng;
@@ -35,6 +35,7 @@ pub struct TreeBuilder {
     compressor: Arc<dyn Compressor>,
     partition_mode: PartitionMode,
     threads: Option<usize>,
+    backend: Option<Arc<dyn Backend>>,
 }
 
 impl TreeBuilder {
@@ -46,6 +47,7 @@ impl TreeBuilder {
             compressor: Arc::new(LazyGreedy::new()),
             partition_mode: PartitionMode::Balanced,
             threads: None,
+            backend: None,
         }
     }
 
@@ -59,21 +61,37 @@ impl TreeBuilder {
         self
     }
 
+    /// Worker-thread count for the default [`LocalBackend`] (ignored
+    /// when an explicit backend is installed).
     pub fn threads(mut self, t: usize) -> Self {
         self.threads = Some(t);
         self
     }
 
+    /// Execute rounds on an explicit backend (tcp workers, fault
+    /// simulator, …). The backend's capacity µ becomes authoritative
+    /// for round planning so enforcement and planning can never drift.
+    pub fn backend(mut self, b: Arc<dyn Backend>) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
     pub fn build(self) -> TreeRunner {
-        let mut cluster = Cluster::new(self.capacity);
-        if let Some(t) = self.threads {
-            cluster = cluster.with_threads(t);
-        }
+        let backend: Arc<dyn Backend> = match self.backend {
+            Some(b) => b,
+            None => {
+                let mut local = LocalBackend::new(self.capacity);
+                if let Some(t) = self.threads {
+                    local = local.with_threads(t);
+                }
+                Arc::new(local)
+            }
+        };
         TreeRunner {
-            capacity: self.capacity,
+            capacity: backend.capacity(),
             compressor: self.compressor,
             partition_mode: self.partition_mode,
-            cluster,
+            backend,
         }
     }
 }
@@ -92,6 +110,8 @@ pub struct TreeResult {
     pub oracle_evals: u64,
     pub per_round: Vec<RoundMetrics>,
     pub total_machines: u64,
+    /// Parts re-executed after a machine loss (0 on a healthy backend).
+    pub requeued_parts: u64,
     pub bytes_shuffled: u64,
     pub wall_ms: f64,
 }
@@ -101,7 +121,7 @@ pub struct TreeRunner {
     pub capacity: usize,
     compressor: Arc<dyn Compressor>,
     partition_mode: PartitionMode,
-    cluster: Cluster,
+    backend: Arc<dyn Backend>,
 }
 
 impl TreeRunner {
@@ -127,6 +147,7 @@ impl TreeRunner {
         let mut final_round_best: Option<Solution> = None;
         let evals_before = problem.eval_count();
         let t_start = std::time::Instant::now();
+        let mut sim_delay_ms = 0.0f64;
         let mut round = 0usize;
 
         loop {
@@ -140,9 +161,11 @@ impl TreeRunner {
             };
             let round_seed = rng.next_u64();
             let r_start = std::time::Instant::now();
-            let sols = self
-                .cluster
+            let outcome = self
+                .backend
                 .run_round(problem, self.compressor.as_ref(), &parts, round_seed)?;
+            sim_delay_ms += outcome.sim_delay_ms;
+            let sols = outcome.solutions;
 
             let max_load = parts.iter().map(Vec::len).max().unwrap_or(0);
             let mut next: Vec<u32> = Vec::with_capacity(sols.len() * problem.k);
@@ -168,8 +191,9 @@ impl TreeRunner {
                 machines: m_t,
                 max_machine_load: max_load,
                 output_items: next.len(),
+                requeued_parts: outcome.requeued_parts,
                 bytes_shuffled: (a.len() * problem.dataset.row_bytes()) as u64,
-                wall_ms: r_start.elapsed().as_secs_f64() * 1e3,
+                wall_ms: r_start.elapsed().as_secs_f64() * 1e3 + outcome.sim_delay_ms,
                 best_value: best.value,
             });
 
@@ -196,8 +220,10 @@ impl TreeRunner {
             oracle_evals: problem.eval_count() - evals_before,
             per_round: metrics.rounds(),
             total_machines: metrics.total_machines(),
+            requeued_parts: metrics.total_requeued(),
             bytes_shuffled: metrics.total_bytes_shuffled(),
-            wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            // includes injected virtual delay, consistent with per-round wall_ms
+            wall_ms: t_start.elapsed().as_secs_f64() * 1e3 + sim_delay_ms,
         })
     }
 }
@@ -314,6 +340,44 @@ mod tests {
             bound,
             res.round_bound
         );
+    }
+
+    #[test]
+    fn sim_backend_machine_loss_reports_requeues_and_stays_feasible() {
+        use crate::dist::{FaultPlan, SimBackend};
+        let ds = Arc::new(synthetic::csn_like(600, 11));
+        let p = Problem::exemplar(ds, 10, 11);
+        let backend = Arc::new(SimBackend::new(60).with_faults(FaultPlan::lose_per_round(1)));
+        let res = TreeBuilder::new(60).backend(backend).build().run(&p, 3).unwrap();
+        assert!(!res.best.items.is_empty());
+        assert!(res.best.items.len() <= 10);
+        assert!(p.constraint.is_feasible(&res.best.items, &p.dataset));
+        for r in &res.per_round {
+            assert_eq!(r.requeued_parts, 1, "round {} lost machine unreported", r.round);
+        }
+        assert_eq!(res.requeued_parts, res.rounds as u64);
+        // machine loss + requeue must not change the answer
+        let healthy = TreeBuilder::new(60).build().run(&p, 3).unwrap();
+        assert_eq!(res.best.items, healthy.best.items);
+        assert_eq!(res.best.value.to_bits(), healthy.best.value.to_bits());
+    }
+
+    #[test]
+    fn explicit_backend_capacity_is_authoritative() {
+        use crate::dist::LocalBackend;
+        let ds = Arc::new(synthetic::csn_like(200, 12));
+        let p = Problem::exemplar(ds, 8, 12);
+        // builder says 400 (single round), backend says 50 (multi round):
+        // the backend wins, keeping planning and enforcement consistent
+        let res = TreeBuilder::new(400)
+            .backend(Arc::new(LocalBackend::new(50)))
+            .build()
+            .run(&p, 4)
+            .unwrap();
+        assert!(res.rounds > 1);
+        for r in &res.per_round {
+            assert!(r.max_machine_load <= 50);
+        }
     }
 
     #[test]

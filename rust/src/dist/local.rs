@@ -1,0 +1,130 @@
+//! In-process backend: the fixed-capacity thread pool that used to live
+//! inside `coordinator::cluster`, refactored behind [`Backend`].
+//!
+//! Machines execute on a small pool of OS threads (the testbed is a
+//! single host); XLA work funnels through the engine's device thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::algorithms::{Compressor, Solution};
+use crate::dist::{enforce_capacity, machine_seeds, Backend, RoundOutcome};
+use crate::error::{Error, Result};
+use crate::objectives::Problem;
+
+/// Thread-pool execution backend with hard per-machine capacity µ.
+pub struct LocalBackend {
+    capacity: usize,
+    threads: usize,
+}
+
+impl LocalBackend {
+    pub fn new(capacity: usize) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .clamp(1, 8);
+        LocalBackend { capacity, threads }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Backend for LocalBackend {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn run_round(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        parts: &[Vec<u32>],
+        round_seed: u64,
+    ) -> Result<RoundOutcome> {
+        // capacity enforcement before any work starts
+        enforce_capacity(self.capacity, parts)?;
+
+        // per-machine deterministic seeds
+        let seeds = machine_seeds(round_seed, parts.len());
+
+        let next = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<Result<Solution>>>> =
+            Mutex::new((0..parts.len()).map(|_| None).collect());
+
+        let workers = self.threads.min(parts.len()).max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= parts.len() {
+                        break;
+                    }
+                    let sol = compressor.compress(problem, &parts[i], seeds[i]);
+                    results.lock().unwrap()[i] = Some(sol);
+                });
+            }
+        });
+
+        let results = results.into_inner().unwrap();
+        let mut solutions = Vec::with_capacity(parts.len());
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Some(Ok(sol)) => solutions.push(sol),
+                Some(Err(e)) => return Err(e),
+                None => return Err(Error::Worker(format!("machine {i} never ran"))),
+            }
+        }
+        Ok(RoundOutcome { solutions, requeued_parts: 0, sim_delay_ms: 0.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::LazyGreedy;
+    use crate::data::synthetic;
+    use std::sync::Arc;
+
+    #[test]
+    fn matches_trait_contract_on_order_and_capacity() {
+        let ds = Arc::new(synthetic::csn_like(120, 2));
+        let p = Problem::exemplar(ds, 3, 2);
+        let backend = LocalBackend::new(40).with_threads(3);
+        let parts: Vec<Vec<u32>> = (0..4).map(|i| (i * 30..(i + 1) * 30).collect()).collect();
+        let out = backend.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
+        assert_eq!(out.solutions.len(), 4);
+        assert_eq!(out.requeued_parts, 0);
+        for (i, s) in out.solutions.iter().enumerate() {
+            for &item in &s.items {
+                assert!(parts[i].contains(&item), "machine {i} leaked items");
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_error_carries_machine_index() {
+        let ds = Arc::new(synthetic::csn_like(100, 1));
+        let p = Problem::exemplar(ds, 5, 1);
+        let backend = LocalBackend::new(10);
+        let parts = vec![(0..5).collect::<Vec<u32>>(), (0..11).collect::<Vec<u32>>()];
+        let err = backend.run_round(&p, &LazyGreedy::new(), &parts, 0).unwrap_err();
+        match err {
+            Error::CapacityExceeded { capacity: 10, got: 11, ctx } => {
+                assert!(ctx.contains("machine 1"), "ctx: {ctx}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+}

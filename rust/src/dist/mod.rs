@@ -1,0 +1,191 @@
+//! Pluggable execution backends for the coordinator.
+//!
+//! The tree framework (and the two-round baselines) express each round as
+//! "compress every part of a partition on a fixed-capacity machine". This
+//! module abstracts *where* those machines live behind the [`Backend`]
+//! trait, with three implementations:
+//!
+//! | backend            | machines are…                | use case                      |
+//! |--------------------|------------------------------|-------------------------------|
+//! | [`LocalBackend`]   | worker threads in-process    | default; single-host runs     |
+//! | [`TcpBackend`]     | `hss worker` processes over a| real multi-process / multi-   |
+//! |                    | length-prefixed TCP protocol | host horizontal scaling       |
+//! | [`SimBackend`]     | a deterministic single-thread| fault-tolerance & robustness  |
+//! |                    | simulator with fault injection| experiments, scenario tests  |
+//!
+//! All backends share the same contract: capacity is enforced *before*
+//! any work starts (fixed capacity µ is the paper's premise), per-machine
+//! seeds are derived positionally from the round seed, and solutions come
+//! back in part order — so for a given `(problem, parts, round_seed)` all
+//! three backends produce **identical** solutions. Fault injection and
+//! wire transport change cost and availability, never the answer.
+
+pub mod local;
+pub mod protocol;
+pub mod sim;
+pub mod tcp;
+pub mod worker;
+
+pub use local::LocalBackend;
+pub use sim::{FaultPlan, SimBackend};
+pub use tcp::TcpBackend;
+
+use std::sync::Arc;
+
+use crate::algorithms::{Compressor, Solution};
+use crate::error::{Error, Result};
+use crate::objectives::Problem;
+use crate::util::rng::Rng;
+
+/// Outcome of one compression round executed by a backend.
+#[derive(Debug, Clone, Default)]
+pub struct RoundOutcome {
+    /// One solution per part, order preserved.
+    pub solutions: Vec<Solution>,
+    /// Parts that were dispatched to a machine that was lost (worker
+    /// disconnect, injected fault) and re-executed elsewhere.
+    pub requeued_parts: usize,
+    /// Virtual wall-clock added by injected stragglers/retries
+    /// ([`SimBackend`] only; 0 elsewhere).
+    pub sim_delay_ms: f64,
+}
+
+/// An execution substrate for one compression round over a partition.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Fixed per-machine capacity µ this backend enforces.
+    fn capacity(&self) -> usize;
+
+    /// Execute one round: run `compressor` on every part (each on a
+    /// machine of capacity µ) and return one solution per part, order
+    /// preserved. Must fail with [`Error::CapacityExceeded`] if any part
+    /// exceeds µ, before any work starts.
+    fn run_round(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        parts: &[Vec<u32>],
+        round_seed: u64,
+    ) -> Result<RoundOutcome>;
+}
+
+/// Which backend a run should use — parsed from config/CLI and built
+/// into a concrete [`Backend`] with [`BackendChoice::build`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendChoice {
+    /// In-process thread pool (the default).
+    Local,
+    /// Real worker processes at the given `host:port` addresses.
+    Tcp { workers: Vec<String> },
+    /// Deterministic fault-injecting simulator.
+    Sim { faults: FaultPlan },
+}
+
+impl Default for BackendChoice {
+    fn default() -> Self {
+        BackendChoice::Local
+    }
+}
+
+impl BackendChoice {
+    /// Parse a backend name from config/CLI (`local` | `tcp` | `sim`).
+    pub fn parse(name: &str) -> Result<BackendChoice> {
+        Ok(match name {
+            "local" => BackendChoice::Local,
+            "tcp" => BackendChoice::Tcp { workers: Vec::new() },
+            "sim" => BackendChoice::Sim { faults: FaultPlan::default() },
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown backend '{other}' (known: local, tcp, sim)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendChoice::Local => "local",
+            BackendChoice::Tcp { .. } => "tcp",
+            BackendChoice::Sim { .. } => "sim",
+        }
+    }
+
+    /// Build the concrete backend for machine capacity µ. `threads` is
+    /// the local thread-pool width (ignored by tcp/sim).
+    pub fn build(&self, capacity: usize, threads: Option<usize>) -> Result<Arc<dyn Backend>> {
+        Ok(match self {
+            BackendChoice::Local => {
+                let mut b = LocalBackend::new(capacity);
+                if let Some(t) = threads {
+                    b = b.with_threads(t);
+                }
+                Arc::new(b)
+            }
+            BackendChoice::Tcp { workers } => {
+                Arc::new(TcpBackend::new(capacity, workers.clone())?)
+            }
+            BackendChoice::Sim { faults } => {
+                Arc::new(SimBackend::new(capacity).with_faults(faults.clone()))
+            }
+        })
+    }
+}
+
+/// Shared pre-dispatch check: every part must fit in one machine.
+pub(crate) fn enforce_capacity(capacity: usize, parts: &[Vec<u32>]) -> Result<()> {
+    for (i, p) in parts.iter().enumerate() {
+        if p.len() > capacity {
+            return Err(Error::CapacityExceeded {
+                capacity,
+                got: p.len(),
+                ctx: format!(" (machine {i} of {})", parts.len()),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Positional per-machine seeds derived from the round seed — identical
+/// across backends (and across thread counts) so a round's output never
+/// depends on the execution substrate.
+pub(crate) fn machine_seeds(round_seed: u64, machines: usize) -> Vec<u64> {
+    let mut seed_rng = Rng::seed_from(round_seed);
+    (0..machines).map(|_| seed_rng.next_u64()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enforce_capacity_names_the_machine() {
+        let parts = vec![vec![0, 1], vec![0, 1, 2, 3]];
+        let err = enforce_capacity(3, &parts).unwrap_err();
+        match err {
+            Error::CapacityExceeded { capacity, got, ctx } => {
+                assert_eq!(capacity, 3);
+                assert_eq!(got, 4);
+                assert!(ctx.contains("machine 1 of 2"), "ctx: {ctx}");
+            }
+            other => panic!("wrong error {other}"),
+        }
+        assert!(enforce_capacity(4, &parts).is_ok());
+    }
+
+    #[test]
+    fn machine_seeds_are_positional_and_deterministic() {
+        let a = machine_seeds(7, 5);
+        let b = machine_seeds(7, 3);
+        assert_eq!(&a[..3], &b[..]);
+        assert_ne!(a[0], a[1]);
+    }
+
+    #[test]
+    fn backend_choice_parses() {
+        assert_eq!(BackendChoice::parse("local").unwrap(), BackendChoice::Local);
+        assert_eq!(BackendChoice::parse("tcp").unwrap().name(), "tcp");
+        assert_eq!(BackendChoice::parse("sim").unwrap().name(), "sim");
+        assert!(BackendChoice::parse("mpi").is_err());
+    }
+}

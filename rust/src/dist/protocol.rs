@@ -1,0 +1,535 @@
+//! Wire protocol between the coordinator ([`crate::dist::TcpBackend`])
+//! and `hss worker` processes.
+//!
+//! Transport: length-prefixed frames — a 4-byte big-endian payload
+//! length followed by a UTF-8 JSON document (the crate's own
+//! [`crate::util::json`] codec; no external serialization dependency).
+//!
+//! Losslessness: item ids are `u32` (exact in JSON's f64 numbers) and
+//! objective values are `f64` serialized via Rust's shortest-roundtrip
+//! `Display`, so a solution survives the wire bit-exactly. Seeds are full
+//! 64-bit words and are therefore encoded as **decimal strings** — an
+//! f64 number would silently drop low bits past 2^53.
+//!
+//! Problems cross the wire *by specification*, not by value: datasets in
+//! the registry are generated deterministically from `(name, seed)`, so a
+//! [`ProblemSpec`] of a few bytes reconstructs the exact same ground set
+//! and evaluation subsample on the worker — the coordinator ships item
+//! ids, never rows (the paper's shuffle model).
+
+use std::io::{Read, Write};
+
+use crate::algorithms::{Compressor, LazyGreedy, RandomCompressor, StochasticGreedy, ThresholdGreedy};
+use crate::data::{registry, DatasetRef};
+use crate::error::{Error, Result};
+use crate::objectives::{Objective, Problem};
+use crate::util::json::{self, Json};
+
+/// Protocol version — bumped on any incompatible message change; worker
+/// and coordinator refuse to pair across versions.
+pub const PROTOCOL_VERSION: usize = 1;
+
+/// Hard cap on frame payloads (64 MiB — a part of 10^6 ids is ~8 MB of
+/// JSON; anything bigger than this is a corrupt or hostile frame).
+pub const MAX_FRAME: usize = 64 << 20;
+
+// ---------------------------------------------------------------------------
+// framed transport
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(Error::Protocol(format!(
+            "outgoing frame of {} bytes exceeds MAX_FRAME {MAX_FRAME}",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_be_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::Protocol(format!(
+            "incoming frame of {len} bytes exceeds MAX_FRAME {MAX_FRAME}"
+        )));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Serialize + frame one message.
+pub fn send_msg<W: Write>(w: &mut W, msg: &Json) -> Result<()> {
+    write_frame(w, msg.to_string().as_bytes())
+}
+
+/// Read + parse one message.
+pub fn recv_msg<R: Read>(r: &mut R) -> Result<Json> {
+    let bytes = read_frame(r)?;
+    let text = std::str::from_utf8(&bytes)
+        .map_err(|_| Error::Protocol("frame is not UTF-8".into()))?;
+    Json::parse(text)
+}
+
+// ---------------------------------------------------------------------------
+// lossless u64 encoding
+// ---------------------------------------------------------------------------
+
+fn ju64(x: u64) -> Json {
+    Json::Str(x.to_string())
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64> {
+    let field = v
+        .get(key)
+        .ok_or_else(|| Error::Protocol(format!("missing field '{key}'")))?;
+    json::as_lossless_u64(field)
+        .ok_or_else(|| Error::Protocol(format!("field '{key}' is not a u64")))
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Protocol(format!("missing number field '{key}'")))
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Protocol(format!("missing integer field '{key}'")))
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Protocol(format!("missing string field '{key}'")))
+}
+
+fn items_to_json(items: &[u32]) -> Json {
+    Json::Arr(items.iter().map(|&i| Json::Num(i as f64)).collect())
+}
+
+fn items_from_json(v: &Json, key: &str) -> Result<Vec<u32>> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Protocol(format!("missing array field '{key}'")))?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|v| *v >= 0.0 && v.fract() == 0.0 && *v <= u32::MAX as f64)
+                .map(|v| v as u32)
+                .ok_or_else(|| Error::Protocol(format!("'{key}' contains a non-u32 entry")))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// problem + compressor specifications
+// ---------------------------------------------------------------------------
+
+/// A wire-serializable description of a [`Problem`]. Restricted to
+/// registry datasets, the two paper objectives, and the plain
+/// cardinality constraint — exactly what distributed runs use; richer
+/// constraint/objective shipping is an open item.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProblemSpec {
+    pub dataset: String,
+    /// `"exemplar"` or `"logdet"`.
+    pub objective: String,
+    pub k: usize,
+    pub seed: u64,
+    /// Exemplar evaluation-subsample size (0 for logdet).
+    pub eval_m: usize,
+    /// LogDet kernel parameters (0 for exemplar).
+    pub h2: f64,
+    pub sigma2: f64,
+}
+
+impl ProblemSpec {
+    /// Capture a problem's wire spec. Fails for problems that are not
+    /// wire-representable (non-registry dataset, test objectives,
+    /// hereditary constraints beyond plain cardinality).
+    pub fn from_problem(p: &Problem) -> Result<ProblemSpec> {
+        let sp = registry::spec(&p.dataset.name).map_err(|_| {
+            Error::invalid(format!(
+                "dataset '{}' is not in the registry; tcp workers reconstruct \
+                 datasets from (name, seed) and cannot receive ad-hoc matrices",
+                p.dataset.name
+            ))
+        })?;
+        if sp.n() != p.dataset.n {
+            return Err(Error::invalid(format!(
+                "dataset '{}' has n={} but the registry generates n={}",
+                p.dataset.name,
+                p.dataset.n,
+                sp.n()
+            )));
+        }
+        if p.constraint.name() != format!("card({})", p.k) {
+            return Err(Error::invalid(format!(
+                "constraint '{}' is not wire-representable (only card(k))",
+                p.constraint.name()
+            )));
+        }
+        let (objective, eval_m, h2, sigma2) = match &p.objective {
+            Objective::Exemplar => ("exemplar", p.eval_ids.len(), 0.0, 0.0),
+            Objective::LogDet { h2, sigma2 } => ("logdet", 0, *h2, *sigma2),
+            other => {
+                return Err(Error::invalid(format!(
+                    "objective '{}' is not wire-representable",
+                    other.name()
+                )))
+            }
+        };
+        Ok(ProblemSpec {
+            dataset: p.dataset.name.clone(),
+            objective: objective.to_string(),
+            k: p.k,
+            seed: p.seed,
+            eval_m,
+            h2,
+            sigma2,
+        })
+    }
+
+    /// Reconstruct the problem on the receiving side. Deterministic:
+    /// dataset generation, eval-subsample draw and constraint all derive
+    /// from the spec alone.
+    pub fn materialize(&self) -> Result<Problem> {
+        self.materialize_on(registry::load(&self.dataset, self.seed)?)
+    }
+
+    /// Same, over an already-loaded dataset handle (worker-side caching:
+    /// many specs — different k, eval_m — share one dataset Arc instead
+    /// of each holding its own copy of the matrix).
+    pub fn materialize_on(&self, ds: DatasetRef) -> Result<Problem> {
+        match self.objective.as_str() {
+            "exemplar" => Ok(Problem::exemplar_with_eval(ds, self.k, self.seed, self.eval_m)),
+            "logdet" => {
+                let mut p = Problem::logdet(ds, self.k, self.seed);
+                p.objective = Objective::LogDet { h2: self.h2, sigma2: self.sigma2 };
+                Ok(p)
+            }
+            other => Err(Error::Protocol(format!("unknown objective '{other}'"))),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("dataset", json::s(&self.dataset)),
+            ("objective", json::s(&self.objective)),
+            ("k", json::num(self.k as f64)),
+            ("seed", ju64(self.seed)),
+            ("eval_m", json::num(self.eval_m as f64)),
+            ("h2", json::num(self.h2)),
+            ("sigma2", json::num(self.sigma2)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ProblemSpec> {
+        Ok(ProblemSpec {
+            dataset: req_str(v, "dataset")?.to_string(),
+            objective: req_str(v, "objective")?.to_string(),
+            k: req_usize(v, "k")?,
+            seed: req_u64(v, "seed")?,
+            eval_m: req_usize(v, "eval_m")?,
+            h2: req_f64(v, "h2")?,
+            sigma2: req_f64(v, "sigma2")?,
+        })
+    }
+
+}
+
+/// Map a compressor's `name()` to a wire tag, failing for compressors
+/// that cannot be reconstructed remotely (e.g. the XLA-engine-bound
+/// ones — workers run the pure path).
+pub fn compressor_wire_name(c: &dyn Compressor) -> Result<String> {
+    let name = c.name();
+    // validate round-trip now so dispatch fails fast with a clear error
+    compressor_from_name(&name).map_err(|_| {
+        Error::invalid(format!(
+            "compressor '{name}' is not wire-representable; tcp workers support \
+             greedy, random, stochastic-greedy(eps=..), threshold-greedy(eps=..)"
+        ))
+    })?;
+    Ok(name)
+}
+
+/// Reconstruct a compressor from its wire tag.
+pub fn compressor_from_name(name: &str) -> Result<Box<dyn Compressor>> {
+    fn eps_of(name: &str, prefix: &str) -> Option<f64> {
+        let rest = name.strip_prefix(prefix)?.strip_suffix(')')?;
+        rest.parse::<f64>().ok().filter(|e| *e > 0.0 && *e < 1.0)
+    }
+    if name == "greedy" {
+        return Ok(Box::new(LazyGreedy::new()));
+    }
+    if name == "random" {
+        return Ok(Box::new(RandomCompressor::new()));
+    }
+    if let Some(eps) = eps_of(name, "stochastic-greedy(eps=") {
+        return Ok(Box::new(StochasticGreedy::new(eps)));
+    }
+    if let Some(eps) = eps_of(name, "threshold-greedy(eps=") {
+        return Ok(Box::new(ThresholdGreedy::new(eps)));
+    }
+    Err(Error::Protocol(format!("unknown compressor '{name}'")))
+}
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+/// Coordinator → worker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Handshake: version check, capacity discovery.
+    Hello,
+    /// Compress one part on one fixed-capacity machine.
+    Compress {
+        problem: ProblemSpec,
+        compressor: String,
+        part: Vec<u32>,
+        seed: u64,
+    },
+    /// Orderly worker shutdown.
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Hello => json::obj(vec![
+                ("type", json::s("hello")),
+                ("version", json::num(PROTOCOL_VERSION as f64)),
+            ]),
+            Request::Compress { problem, compressor, part, seed } => json::obj(vec![
+                ("type", json::s("compress")),
+                ("problem", problem.to_json()),
+                ("compressor", json::s(compressor)),
+                ("part", items_to_json(part)),
+                ("seed", ju64(*seed)),
+            ]),
+            Request::Shutdown => json::obj(vec![("type", json::s("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Request> {
+        match req_str(v, "type")? {
+            "hello" => {
+                let version = req_usize(v, "version")?;
+                if version != PROTOCOL_VERSION {
+                    return Err(Error::Protocol(format!(
+                        "version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
+                    )));
+                }
+                Ok(Request::Hello)
+            }
+            "compress" => {
+                let problem_json = v
+                    .get("problem")
+                    .ok_or_else(|| Error::Protocol("missing field 'problem'".into()))?;
+                Ok(Request::Compress {
+                    problem: ProblemSpec::from_json(problem_json)?,
+                    compressor: req_str(v, "compressor")?.to_string(),
+                    part: items_from_json(v, "part")?,
+                    seed: req_u64(v, "seed")?,
+                })
+            }
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(Error::Protocol(format!("unknown request type '{other}'"))),
+        }
+    }
+}
+
+/// Worker → coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Handshake reply: the worker's fixed capacity µ.
+    Hello { capacity: usize },
+    /// One machine's compression result plus its per-call metrics.
+    Solution { items: Vec<u32>, value: f64, evals: u64, wall_ms: f64 },
+    /// The request failed on the worker (capacity violation, bad spec…).
+    Error { msg: String },
+    /// Shutdown acknowledged.
+    Bye,
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Hello { capacity } => json::obj(vec![
+                ("type", json::s("hello")),
+                ("version", json::num(PROTOCOL_VERSION as f64)),
+                ("capacity", json::num(*capacity as f64)),
+            ]),
+            Response::Solution { items, value, evals, wall_ms } => json::obj(vec![
+                ("type", json::s("solution")),
+                ("items", items_to_json(items)),
+                ("value", json::num(*value)),
+                ("evals", ju64(*evals)),
+                ("wall_ms", json::num(*wall_ms)),
+            ]),
+            Response::Error { msg } => json::obj(vec![
+                ("type", json::s("error")),
+                ("msg", json::s(msg)),
+            ]),
+            Response::Bye => json::obj(vec![("type", json::s("bye"))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Response> {
+        match req_str(v, "type")? {
+            "hello" => {
+                let version = req_usize(v, "version")?;
+                if version != PROTOCOL_VERSION {
+                    return Err(Error::Protocol(format!(
+                        "version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
+                    )));
+                }
+                Ok(Response::Hello { capacity: req_usize(v, "capacity")? })
+            }
+            "solution" => Ok(Response::Solution {
+                items: items_from_json(v, "items")?,
+                value: req_f64(v, "value")?,
+                evals: req_u64(v, "evals")?,
+                wall_ms: req_f64(v, "wall_ms")?,
+            }),
+            "error" => Ok(Response::Error { msg: req_str(v, "msg")?.to_string() }),
+            "bye" => Ok(Response::Bye),
+            other => Err(Error::Protocol(format!("unknown response type '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[0xF0, 0x9F, 0x8E, 0x89]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap(), vec![0xF0, 0x9F, 0x8E, 0x89]);
+        // EOF surfaces as an io error, not a hang
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected_without_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("MAX_FRAME"), "{err}");
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let spec = ProblemSpec {
+            dataset: "csn-2k".into(),
+            objective: "exemplar".into(),
+            k: 25,
+            seed: u64::MAX - 12345,
+            eval_m: 2000,
+            h2: 0.0,
+            sigma2: 0.0,
+        };
+        let req = Request::Compress {
+            problem: spec,
+            compressor: "greedy".into(),
+            part: vec![0, 7, 4_000_000_000],
+            seed: 0xDEAD_BEEF_DEAD_BEEF,
+        };
+        let back = Request::from_json(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(req, back);
+        for r in [Request::Hello, Request::Shutdown] {
+            let b = Request::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(r, b);
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip_with_exact_f64() {
+        // a value with a long mantissa that an imprecise codec would mangle
+        let value = 123.456_789_012_345_67_f64 / 3.0;
+        let resp = Response::Solution {
+            items: vec![1, 2, 3],
+            value,
+            evals: 987_654_321,
+            wall_ms: 1.25,
+        };
+        let back =
+            Response::from_json(&Json::parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        match back {
+            Response::Solution { value: v, items, evals, .. } => {
+                assert_eq!(v.to_bits(), value.to_bits(), "f64 mangled on the wire");
+                assert_eq!(items, vec![1, 2, 3]);
+                assert_eq!(evals, 987_654_321);
+            }
+            other => panic!("wrong response {other:?}"),
+        }
+        let err = Response::Error { msg: "nope".into() };
+        let b = Response::from_json(&Json::parse(&err.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(err, b);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let msg = Json::parse(r#"{"type":"hello","version":999}"#).unwrap();
+        assert!(Request::from_json(&msg).is_err());
+        assert!(Response::from_json(&msg).is_err());
+    }
+
+    #[test]
+    fn problem_spec_roundtrips_and_materializes() {
+        let spec = ProblemSpec {
+            dataset: "csn-2k".into(),
+            objective: "exemplar".into(),
+            k: 10,
+            seed: 42,
+            eval_m: 2000,
+            h2: 0.0,
+            sigma2: 0.0,
+        };
+        let back = ProblemSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        let p = spec.materialize().unwrap();
+        assert_eq!(p.n(), 2000);
+        assert_eq!(p.k, 10);
+        // spec extraction from the materialized problem is the identity
+        assert_eq!(ProblemSpec::from_problem(&p).unwrap(), spec);
+    }
+
+    #[test]
+    fn non_registry_problem_is_rejected() {
+        let ds = std::sync::Arc::new(crate::data::synthetic::csn_like(64, 1));
+        let p = Problem::exemplar(ds, 4, 1); // dataset name "csn", not registered
+        assert!(ProblemSpec::from_problem(&p).is_err());
+    }
+
+    #[test]
+    fn compressors_roundtrip_by_name() {
+        for name in ["greedy", "random", "stochastic-greedy(eps=0.5)", "threshold-greedy(eps=0.25)"] {
+            let c = compressor_from_name(name).unwrap();
+            assert_eq!(c.name(), name, "wire name not stable");
+            assert_eq!(compressor_wire_name(c.as_ref()).unwrap(), name);
+        }
+        assert!(compressor_from_name("xla-greedy").is_err());
+        assert!(compressor_from_name("stochastic-greedy(eps=2.0)").is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Deterministic single-thread cluster simulator with fault injection.
+//!
+//! `SimBackend` executes every machine sequentially on the calling
+//! thread and injects *scripted* faults from a seeded RNG stream:
+//!
+//! * **machine loss** — a machine vanishes before reporting; its part is
+//!   requeued to a fresh replacement machine (same part, same positional
+//!   seed, so the answer is unchanged — only cost and the requeue
+//!   counter move). Losses come in two flavors: a deterministic
+//!   per-round quota (`machine_loss_per_round`, the scenario knob used
+//!   by robustness tests) and a Bernoulli rate (`loss_prob`) with a
+//!   bounded retry budget.
+//! * **stragglers** — a machine finishes late; the simulator charges
+//!   `straggler_delay_ms` of *virtual* time (no real sleeping, so the
+//!   scenario suite stays fast) and reports it in
+//!   [`RoundOutcome::sim_delay_ms`].
+//!
+//! Everything derives from `(fault seed, round seed, machine index)`, so
+//! a scenario replays bit-exactly — the point of a simulator: explore
+//! failure schedules the real TCP runtime can only hit by accident.
+
+use std::collections::HashSet;
+
+use crate::algorithms::{Compressor, Solution};
+use crate::dist::{enforce_capacity, machine_seeds, Backend, RoundOutcome};
+use crate::error::{Error, Result};
+use crate::objectives::Problem;
+use crate::util::rng::Rng;
+
+/// Fault-injection script for [`SimBackend`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the fault stream (independent of algorithmic seeds).
+    pub seed: u64,
+    /// Exactly this many machines (clamped to the round's machine count)
+    /// are lost per round, chosen uniformly — the deterministic scenario
+    /// knob ("what if one machine dies every round?").
+    pub machine_loss_per_round: usize,
+    /// Additionally, each machine execution is lost with this
+    /// probability (replacements can be lost again).
+    pub loss_prob: f64,
+    /// Retry budget per part before the round fails.
+    pub max_retries: usize,
+    /// Each machine straggles with this probability…
+    pub straggler_prob: f64,
+    /// …adding this much virtual latency.
+    pub straggler_delay_ms: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            machine_loss_per_round: 0,
+            loss_prob: 0.0,
+            max_retries: 3,
+            straggler_prob: 0.0,
+            straggler_delay_ms: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Convenience scenario: lose exactly `n` machines per round.
+    pub fn lose_per_round(n: usize) -> Self {
+        FaultPlan { machine_loss_per_round: n, ..FaultPlan::default() }
+    }
+}
+
+/// Deterministic fault-injecting execution backend.
+pub struct SimBackend {
+    capacity: usize,
+    faults: FaultPlan,
+}
+
+impl SimBackend {
+    pub fn new(capacity: usize) -> Self {
+        SimBackend { capacity, faults: FaultPlan::default() }
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn run_round(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        parts: &[Vec<u32>],
+        round_seed: u64,
+    ) -> Result<RoundOutcome> {
+        enforce_capacity(self.capacity, parts)?;
+        let seeds = machine_seeds(round_seed, parts.len());
+
+        // fault stream: independent of the algorithmic seed stream so
+        // enabling faults never perturbs the solutions themselves
+        let mut frng = Rng::seed_from(
+            self.faults.seed ^ round_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let quota = self.faults.machine_loss_per_round.min(parts.len());
+        let lost_this_round: HashSet<usize> = if quota > 0 {
+            frng.sample_indices(parts.len(), quota)
+                .into_iter()
+                .map(|i| i as usize)
+                .collect()
+        } else {
+            HashSet::new()
+        };
+
+        let mut solutions: Vec<Solution> = Vec::with_capacity(parts.len());
+        let mut requeued = 0usize;
+        let mut delay_ms = 0.0f64;
+
+        for (i, part) in parts.iter().enumerate() {
+            // scripted loss: the original machine never reports
+            let mut attempts = 0usize;
+            if lost_this_round.contains(&i) {
+                requeued += 1;
+                attempts += 1;
+            }
+            // Bernoulli losses on top (replacements included)
+            while self.faults.loss_prob > 0.0 && frng.bool(self.faults.loss_prob) {
+                requeued += 1;
+                attempts += 1;
+                if attempts > self.faults.max_retries {
+                    return Err(Error::Worker(format!(
+                        "sim: machine {i} of {} lost {attempts} times (retry budget {})",
+                        parts.len(),
+                        self.faults.max_retries
+                    )));
+                }
+            }
+            if frng.bool(self.faults.straggler_prob) {
+                delay_ms += self.faults.straggler_delay_ms;
+            }
+            // every retry replays the machine's full work
+            delay_ms += attempts as f64 * self.faults.straggler_delay_ms;
+
+            // same part, same positional seed — replacements change cost,
+            // never the answer
+            solutions.push(compressor.compress(problem, part, seeds[i])?);
+        }
+
+        Ok(RoundOutcome { solutions, requeued_parts: requeued, sim_delay_ms: delay_ms })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::LazyGreedy;
+    use crate::data::synthetic;
+    use crate::dist::LocalBackend;
+    use std::sync::Arc;
+
+    fn setup(n: usize, seed: u64) -> (Problem, Vec<Vec<u32>>) {
+        let ds = Arc::new(synthetic::csn_like(n, seed));
+        let p = Problem::exemplar(ds, 4, seed);
+        let parts: Vec<Vec<u32>> = (0..4)
+            .map(|i| ((i * n / 4) as u32..((i + 1) * n / 4) as u32).collect())
+            .collect();
+        (p, parts)
+    }
+
+    #[test]
+    fn no_faults_matches_local_backend_bit_exactly() {
+        let (p, parts) = setup(200, 1);
+        let sim = SimBackend::new(64);
+        let local = LocalBackend::new(64).with_threads(3);
+        let a = sim.run_round(&p, &LazyGreedy::new(), &parts, 9).unwrap();
+        let b = local.run_round(&p, &LazyGreedy::new(), &parts, 9).unwrap();
+        assert_eq!(a.solutions.len(), b.solutions.len());
+        for (x, y) in a.solutions.iter().zip(&b.solutions) {
+            assert_eq!(x.items, y.items);
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+        }
+        assert_eq!(a.requeued_parts, 0);
+        assert_eq!(a.sim_delay_ms, 0.0);
+    }
+
+    #[test]
+    fn scripted_loss_requeues_without_changing_solutions() {
+        let (p, parts) = setup(200, 2);
+        let healthy = SimBackend::new(64);
+        let faulty = SimBackend::new(64).with_faults(FaultPlan::lose_per_round(1));
+        let a = healthy.run_round(&p, &LazyGreedy::new(), &parts, 5).unwrap();
+        let b = faulty.run_round(&p, &LazyGreedy::new(), &parts, 5).unwrap();
+        assert_eq!(b.requeued_parts, 1, "exactly one machine lost per round");
+        for (x, y) in a.solutions.iter().zip(&b.solutions) {
+            assert_eq!(x.items, y.items, "faults must not change answers");
+        }
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic() {
+        let (p, parts) = setup(240, 3);
+        let faults = FaultPlan {
+            seed: 11,
+            machine_loss_per_round: 1,
+            loss_prob: 0.3,
+            max_retries: 10,
+            straggler_prob: 0.5,
+            straggler_delay_ms: 25.0,
+        };
+        let s1 = SimBackend::new(64).with_faults(faults.clone());
+        let s2 = SimBackend::new(64).with_faults(faults);
+        let a = s1.run_round(&p, &LazyGreedy::new(), &parts, 7).unwrap();
+        let b = s2.run_round(&p, &LazyGreedy::new(), &parts, 7).unwrap();
+        assert_eq!(a.requeued_parts, b.requeued_parts);
+        assert_eq!(a.sim_delay_ms, b.sim_delay_ms);
+        assert!(a.requeued_parts >= 1);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_the_round() {
+        let (p, parts) = setup(100, 4);
+        let sim = SimBackend::new(64).with_faults(FaultPlan {
+            loss_prob: 1.0, // every attempt dies
+            max_retries: 2,
+            ..FaultPlan::default()
+        });
+        let err = sim.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap_err();
+        assert!(matches!(err, Error::Worker(_)), "{err}");
+        assert!(err.to_string().contains("retry budget"), "{err}");
+    }
+
+    #[test]
+    fn stragglers_accumulate_virtual_delay_only() {
+        let (p, parts) = setup(100, 5);
+        let sim = SimBackend::new(64).with_faults(FaultPlan {
+            straggler_prob: 1.0,
+            straggler_delay_ms: 40.0,
+            ..FaultPlan::default()
+        });
+        let t0 = std::time::Instant::now();
+        let out = sim.run_round(&p, &LazyGreedy::new(), &parts, 2).unwrap();
+        assert_eq!(out.sim_delay_ms, 40.0 * parts.len() as f64);
+        // virtual time must not be real time
+        assert!(t0.elapsed().as_millis() < 100, "simulator slept for real");
+    }
+}

@@ -1,0 +1,346 @@
+//! Coordinator-side TCP backend: shard a round's parts over real
+//! `hss worker` processes.
+//!
+//! Dispatch model: one I/O thread per worker pulls part indices from a
+//! shared queue (work stealing — a fast worker drains more parts), sends
+//! a `compress` request over its persistent connection, and waits for
+//! the reply. Transport failures mark the worker dead and **requeue**
+//! the part for the surviving workers (counted in
+//! [`RoundOutcome::requeued_parts`]); application errors reported by a
+//! worker (capacity violation, bad spec) abort the round — retrying
+//! elsewhere cannot fix those.
+//!
+//! Determinism: per-machine seeds are positional
+//! ([`crate::dist::machine_seeds`]), so *which* worker executes a part —
+//! and any requeueing along the way — never changes the result. A
+//! `TcpBackend` run returns bit-identical solutions to [`LocalBackend`]
+//! for the same `(problem, parts, round_seed)`.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::algorithms::{Compressor, Solution};
+use crate::dist::protocol::{
+    compressor_wire_name, recv_msg, send_msg, ProblemSpec, Request, Response,
+};
+use crate::dist::{enforce_capacity, machine_seeds, Backend, RoundOutcome};
+use crate::error::{Error, Result};
+use crate::objectives::Problem;
+
+/// A persistent, handshaken connection to one worker process.
+struct WorkerConn {
+    addr: String,
+    stream: TcpStream,
+}
+
+impl WorkerConn {
+    fn connect(addr: &str, required_capacity: usize) -> Result<WorkerConn> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::transport(addr, format!("connect failed: {e}")))?;
+        stream.set_nodelay(true).ok();
+        // Handshake-only timeout: a worker busy with another coordinator
+        // parks this connection in its accept backlog; fail fast so the
+        // slot goes dead and other workers absorb the queue instead of
+        // the round hanging. Cleared after the handshake — compression
+        // time is legitimately unbounded.
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .ok();
+        let mut conn = WorkerConn { addr: addr.to_string(), stream };
+        let reply = conn.roundtrip(&Request::Hello)?;
+        conn.stream.set_read_timeout(None).ok();
+        match reply {
+            Response::Hello { capacity } if capacity >= required_capacity => Ok(conn),
+            Response::Hello { capacity } => Err(Error::transport(
+                addr,
+                format!("worker capacity {capacity} < required µ={required_capacity}"),
+            )),
+            other => Err(Error::Protocol(format!(
+                "{addr}: expected hello, got {other:?}"
+            ))),
+        }
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        send_msg(&mut self.stream, &req.to_json())
+            .map_err(|e| Error::transport(&self.addr, e))?;
+        let msg = recv_msg(&mut self.stream).map_err(|e| Error::transport(&self.addr, e))?;
+        Response::from_json(&msg)
+    }
+}
+
+/// Per-worker slot: address plus the live connection (lazily created,
+/// reused across rounds, dropped on failure).
+struct Slot {
+    addr: String,
+    conn: Option<WorkerConn>,
+    dead: bool,
+}
+
+/// Execution backend over real worker processes at `host:port` addresses.
+pub struct TcpBackend {
+    capacity: usize,
+    slots: Mutex<Vec<Slot>>,
+}
+
+impl TcpBackend {
+    /// Create a backend over the given worker addresses. Connections are
+    /// established lazily and connect failures are retried on the next
+    /// round, so workers may come up after the backend is constructed —
+    /// or even mid-run.
+    pub fn new(capacity: usize, workers: Vec<String>) -> Result<TcpBackend> {
+        if workers.is_empty() {
+            return Err(Error::invalid(
+                "tcp backend needs at least one worker address (--workers host:port[,host:port…])",
+            ));
+        }
+        // Dedupe: a worker serves one coordinator connection at a time,
+        // so a second connection to the same address would park in its
+        // accept backlog holding a part in flight.
+        let mut seen = std::collections::HashSet::new();
+        let slots = workers
+            .into_iter()
+            .filter(|addr| seen.insert(addr.clone()))
+            .map(|addr| Slot { addr, conn: None, dead: false })
+            .collect();
+        Ok(TcpBackend { capacity, slots: Mutex::new(slots) })
+    }
+
+    /// Addresses this backend was configured with.
+    pub fn worker_addrs(&self) -> Vec<String> {
+        self.slots.lock().unwrap().iter().map(|s| s.addr.clone()).collect()
+    }
+
+    /// Ask every reachable worker to shut down (best effort; used by
+    /// orderly teardown paths and tests).
+    pub fn shutdown_workers(&self) {
+        let mut slots = self.slots.lock().unwrap();
+        for slot in slots.iter_mut() {
+            let conn = match slot.conn.take() {
+                Some(c) => Some(c),
+                None if !slot.dead => WorkerConn::connect(&slot.addr, 0).ok(),
+                None => None,
+            };
+            if let Some(mut c) = conn {
+                let _ = c.roundtrip(&Request::Shutdown);
+            }
+            slot.dead = true;
+        }
+    }
+}
+
+impl Backend for TcpBackend {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn run_round(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        parts: &[Vec<u32>],
+        round_seed: u64,
+    ) -> Result<RoundOutcome> {
+        enforce_capacity(self.capacity, parts)?;
+        let spec = ProblemSpec::from_problem(problem)?;
+        let comp_name = compressor_wire_name(compressor)?;
+        let seeds = machine_seeds(round_seed, parts.len());
+
+        let queue: Mutex<VecDeque<usize>> = Mutex::new((0..parts.len()).collect());
+        let results: Mutex<Vec<Option<(Solution, u64)>>> =
+            Mutex::new((0..parts.len()).map(|_| None).collect());
+        let completed = AtomicUsize::new(0);
+        let requeued = AtomicUsize::new(0);
+        let fatal: Mutex<Option<Error>> = Mutex::new(None);
+        let abort = AtomicBool::new(false);
+        let last_transport_err: Mutex<Option<String>> = Mutex::new(None);
+
+        let mut slots = self.slots.lock().unwrap();
+        std::thread::scope(|scope| {
+            for slot in slots.iter_mut() {
+                if slot.dead {
+                    continue;
+                }
+                let queue = &queue;
+                let results = &results;
+                let completed = &completed;
+                let requeued = &requeued;
+                let fatal = &fatal;
+                let abort = &abort;
+                let last_transport_err = &last_transport_err;
+                let spec = &spec;
+                let comp_name = &comp_name;
+                let seeds = &seeds;
+                scope.spawn(move || {
+                    loop {
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let job = queue.lock().unwrap().pop_front();
+                        let Some(i) = job else {
+                            if completed.load(Ordering::Relaxed) >= parts.len() {
+                                break;
+                            }
+                            // A peer still holds a part in flight; if its
+                            // machine is lost, the part comes back to the
+                            // queue — stay alive to steal it. (Every exit
+                            // path on a failing peer requeues first, so
+                            // unfinished work is always either queued or
+                            // held by a live worker.)
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                            continue;
+                        };
+                        // (re)connect lazily
+                        if slot.conn.is_none() {
+                            match WorkerConn::connect(&slot.addr, self.capacity) {
+                                Ok(c) => slot.conn = Some(c),
+                                Err(e) => {
+                                    // Never dispatched: not a requeue. The
+                                    // slot sits out the rest of this round
+                                    // only — workers are allowed to come up
+                                    // late, so the next round retries the
+                                    // connect. (`dead` is reserved for
+                                    // mid-flight failures.)
+                                    queue.lock().unwrap().push_back(i);
+                                    *last_transport_err.lock().unwrap() = Some(e.to_string());
+                                    break;
+                                }
+                            }
+                        }
+                        let conn = slot.conn.as_mut().unwrap();
+                        let request = Request::Compress {
+                            problem: spec.clone(),
+                            compressor: comp_name.clone(),
+                            part: parts[i].clone(),
+                            seed: seeds[i],
+                        };
+                        match conn.roundtrip(&request) {
+                            Ok(Response::Solution { items, value, evals, .. }) => {
+                                results.lock().unwrap()[i] =
+                                    Some((Solution { items, value }, evals));
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Ok(Response::Error { msg }) => {
+                                // the worker is alive and rejected the job:
+                                // retrying elsewhere cannot help
+                                *fatal.lock().unwrap() =
+                                    Some(Error::Worker(format!("{}: {msg}", slot.addr)));
+                                abort.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            Ok(other) => {
+                                *fatal.lock().unwrap() = Some(Error::Protocol(format!(
+                                    "{}: unexpected reply {other:?}",
+                                    slot.addr
+                                )));
+                                abort.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(e) => {
+                                // transport failure mid-flight: lose the
+                                // machine, requeue the part elsewhere
+                                requeued.fetch_add(1, Ordering::Relaxed);
+                                queue.lock().unwrap().push_back(i);
+                                *last_transport_err.lock().unwrap() = Some(e.to_string());
+                                slot.conn = None;
+                                slot.dead = true;
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        drop(slots);
+
+        if let Some(e) = fatal.into_inner().unwrap() {
+            return Err(e);
+        }
+        let results = results.into_inner().unwrap();
+        let last_err = last_transport_err.into_inner().unwrap();
+        let mut solutions = Vec::with_capacity(parts.len());
+        let mut total_evals = 0u64;
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Some((sol, evals)) => {
+                    solutions.push(sol);
+                    total_evals += evals;
+                }
+                None => {
+                    let detail =
+                        last_err.unwrap_or_else(|| "no worker reachable".into());
+                    return Err(Error::Transport(format!(
+                        "part {i} of {} unprocessed — all workers lost ({detail})",
+                        parts.len()
+                    )));
+                }
+            }
+        }
+        // fold remote oracle work into the problem's shared counter so
+        // the Table-1 evals metric stays comparable across backends
+        problem
+            .evals
+            .fetch_add(total_evals, std::sync::atomic::Ordering::Relaxed);
+        Ok(RoundOutcome {
+            solutions,
+            requeued_parts: requeued.into_inner(),
+            sim_delay_ms: 0.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_empty_worker_list() {
+        assert!(TcpBackend::new(100, vec![]).is_err());
+    }
+
+    #[test]
+    fn duplicate_worker_addresses_collapse_to_one_slot() {
+        // two connections to one single-connection worker would deadlock
+        let b = TcpBackend::new(
+            100,
+            vec!["127.0.0.1:7070".into(), "127.0.0.1:7070".into(), "127.0.0.1:7071".into()],
+        )
+        .unwrap();
+        assert_eq!(b.worker_addrs(), vec!["127.0.0.1:7070", "127.0.0.1:7071"]);
+    }
+
+    #[test]
+    fn unreachable_workers_fail_with_transport_error() {
+        // 127.0.0.1:1 — connect is refused immediately on any sane host
+        let backend = TcpBackend::new(50, vec!["127.0.0.1:1".into()]).unwrap();
+        // from_problem runs before dispatch, so the problem must be
+        // wire-representable for the failure to reach the transport layer
+        let p = crate::objectives::Problem::exemplar(
+            crate::data::registry::load("csn-2k", 1).unwrap(),
+            5,
+            1,
+        );
+        let parts = vec![(0..10).collect::<Vec<u32>>()];
+        let err = backend
+            .run_round(&p, &crate::algorithms::LazyGreedy::new(), &parts, 0)
+            .unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+    }
+
+    #[test]
+    fn non_wire_problem_fails_before_connecting() {
+        let backend = TcpBackend::new(50, vec!["127.0.0.1:1".into()]).unwrap();
+        let p = crate::objectives::Problem::modular(vec![1.0; 20], 3, 0);
+        let parts = vec![(0..10).collect::<Vec<u32>>()];
+        let err = backend
+            .run_round(&p, &crate::algorithms::LazyGreedy::new(), &parts, 0)
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err}");
+    }
+}

@@ -1,0 +1,262 @@
+//! The `hss worker` runtime: one fixed-capacity machine as a process.
+//!
+//! A worker binds a TCP listener, prints `hss-worker listening on
+//! <addr>` on stdout (so launchers binding port 0 can discover the real
+//! port), then serves coordinator connections one at a time: handshake,
+//! a stream of compress requests, and an optional orderly shutdown.
+//!
+//! The worker is **stateless across connections** except for caches: it
+//! reconstructs problems from [`ProblemSpec`]s (deterministic dataset
+//! generation — the coordinator ships ids, never rows) and memoizes
+//! loaded datasets per `(name, seed)` so a multi-round run pays dataset
+//! generation once. Capacity is enforced per request: a part larger than
+//! µ is answered with an error response, never silently spilled.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+
+use crate::algorithms::Compressor as _;
+use crate::data::DatasetRef;
+use crate::dist::protocol::{recv_msg, send_msg, ProblemSpec, Request, Response};
+use crate::error::{Error, Result};
+use crate::objectives::Problem;
+
+/// Worker process configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Bind address, e.g. `127.0.0.1:7070`; port 0 picks a free port.
+    pub listen: String,
+    /// Fixed machine capacity µ.
+    pub capacity: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig { listen: "127.0.0.1:7070".into(), capacity: 200 }
+    }
+}
+
+/// Run the worker loop. Blocks serving coordinators until a `shutdown`
+/// request arrives (then returns `Ok`) or the listener dies.
+pub fn serve(cfg: &WorkerConfig) -> Result<()> {
+    if cfg.capacity == 0 {
+        return Err(Error::invalid("worker capacity must be positive"));
+    }
+    let listener = TcpListener::bind(&cfg.listen)
+        .map_err(|e| Error::transport(&cfg.listen, format!("bind failed: {e}")))?;
+    let local = listener.local_addr()?;
+    // Discovery line for launchers/tests; flush because stdout is
+    // block-buffered when piped.
+    println!("hss-worker listening on {local} (capacity {})", cfg.capacity);
+    std::io::stdout().flush().ok();
+
+    let mut cache = DatasetCache::default();
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("hss-worker: accept failed: {e}");
+                continue;
+            }
+        };
+        match serve_connection(stream, cfg.capacity, &mut cache) {
+            Ok(ConnectionEnd::Shutdown) => return Ok(()),
+            Ok(ConnectionEnd::Disconnected) => {}
+            Err(e) => eprintln!("hss-worker: connection error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Why a coordinator connection ended.
+enum ConnectionEnd {
+    /// Peer closed the stream (normal between runs).
+    Disconnected,
+    /// Peer requested process shutdown.
+    Shutdown,
+}
+
+/// Loaded datasets memoized per `(name, seed)` — the expensive part of
+/// materializing a spec. Problems themselves are rebuilt per request
+/// (cheap: a subsample draw), so a sweep over k / eval_m shares one
+/// matrix Arc instead of duplicating n·d floats per distinct spec. A
+/// small bound keeps a long-lived worker from pinning matrices for
+/// every dataset it has ever seen.
+#[derive(Default)]
+struct DatasetCache {
+    datasets: HashMap<(String, u64), DatasetRef>,
+}
+
+impl DatasetCache {
+    const MAX_DATASETS: usize = 8;
+
+    fn problem(&mut self, spec: &ProblemSpec) -> Result<Problem> {
+        let key = (spec.dataset.clone(), spec.seed);
+        if !self.datasets.contains_key(&key) {
+            if self.datasets.len() >= Self::MAX_DATASETS {
+                self.datasets.clear();
+            }
+            let ds = crate::data::registry::load(&spec.dataset, spec.seed)?;
+            self.datasets.insert(key.clone(), ds);
+        }
+        spec.materialize_on(self.datasets.get(&key).unwrap().clone())
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    capacity: usize,
+    cache: &mut DatasetCache,
+) -> Result<ConnectionEnd> {
+    stream.set_nodelay(true).ok();
+    loop {
+        let msg = match recv_msg(&mut stream) {
+            Ok(m) => m,
+            // EOF / reset: coordinator went away, wait for the next one
+            Err(Error::Io(_)) => return Ok(ConnectionEnd::Disconnected),
+            Err(e) => return Err(e),
+        };
+        let request = match Request::from_json(&msg) {
+            Ok(r) => r,
+            Err(e) => {
+                // protocol violation: tell the peer, drop the connection
+                send_msg(&mut stream, &Response::Error { msg: e.to_string() }.to_json()).ok();
+                return Err(e);
+            }
+        };
+        let reply = match request {
+            Request::Hello => Response::Hello { capacity },
+            Request::Shutdown => {
+                send_msg(&mut stream, &Response::Bye.to_json()).ok();
+                return Ok(ConnectionEnd::Shutdown);
+            }
+            Request::Compress { problem, compressor, part, seed } => {
+                handle_compress(capacity, cache, &problem, &compressor, &part, seed)
+                    .unwrap_or_else(|e| Response::Error { msg: e.to_string() })
+            }
+        };
+        send_msg(&mut stream, &reply.to_json())?;
+    }
+}
+
+fn handle_compress(
+    capacity: usize,
+    cache: &mut DatasetCache,
+    spec: &ProblemSpec,
+    compressor_name: &str,
+    part: &[u32],
+    seed: u64,
+) -> Result<Response> {
+    if part.len() > capacity {
+        return Err(Error::CapacityExceeded {
+            capacity,
+            got: part.len(),
+            ctx: " (worker-side enforcement)".into(),
+        });
+    }
+    let compressor = crate::dist::protocol::compressor_from_name(compressor_name)?;
+    let problem = cache.problem(spec)?;
+    problem.check_ids(part)?;
+    let evals_before = problem.eval_count();
+    let t0 = std::time::Instant::now();
+    let solution = compressor.compress(&problem, part, seed)?;
+    Ok(Response::Solution {
+        items: solution.items,
+        value: solution.value,
+        evals: problem.eval_count() - evals_before,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::protocol;
+    use std::net::TcpStream;
+
+    /// In-process worker on an ephemeral port (the *process*-boundary
+    /// version lives in rust/tests/dist_integration.rs).
+    fn spawn_worker(capacity: usize) -> (std::thread::JoinHandle<Result<()>>, String) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let mut cache = DatasetCache::default();
+            let (stream, _) = listener.accept().map_err(Error::Io)?;
+            match serve_connection(stream, capacity, &mut cache)? {
+                ConnectionEnd::Shutdown | ConnectionEnd::Disconnected => Ok(()),
+            }
+        });
+        (handle, addr)
+    }
+
+    #[test]
+    fn worker_compresses_and_shuts_down() {
+        let (handle, addr) = spawn_worker(64);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+
+        protocol::send_msg(&mut stream, &Request::Hello.to_json()).unwrap();
+        let hello = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        assert_eq!(hello, Response::Hello { capacity: 64 });
+
+        let spec = ProblemSpec {
+            dataset: "csn-2k".into(),
+            objective: "exemplar".into(),
+            k: 5,
+            seed: 42,
+            eval_m: 2000,
+            h2: 0.0,
+            sigma2: 0.0,
+        };
+        let req = Request::Compress {
+            problem: spec.clone(),
+            compressor: "greedy".into(),
+            part: (0..50).collect(),
+            seed: 1,
+        };
+        protocol::send_msg(&mut stream, &req.to_json()).unwrap();
+        let resp = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        match resp {
+            Response::Solution { items, value, evals, .. } => {
+                assert_eq!(items.len(), 5);
+                assert!(items.iter().all(|&i| i < 50), "leaked items: {items:?}");
+                assert!(value > 0.0);
+                assert!(evals > 0, "worker must report oracle evals");
+                // bit-identical to compressing locally
+                let local = crate::algorithms::LazyGreedy::new();
+                let p = spec.materialize().unwrap();
+                let want = crate::algorithms::Compressor::compress(
+                    &local,
+                    &p,
+                    &(0..50).collect::<Vec<u32>>(),
+                    1,
+                )
+                .unwrap();
+                assert_eq!(items, want.items);
+                assert_eq!(value.to_bits(), want.value.to_bits());
+            }
+            other => panic!("expected solution, got {other:?}"),
+        }
+
+        // capacity enforcement on the worker side
+        let too_big = Request::Compress {
+            problem: spec,
+            compressor: "greedy".into(),
+            part: (0..65).collect(),
+            seed: 2,
+        };
+        protocol::send_msg(&mut stream, &too_big.to_json()).unwrap();
+        let resp = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        match resp {
+            Response::Error { msg } => {
+                assert!(msg.contains("capacity"), "unexpected msg: {msg}")
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+
+        protocol::send_msg(&mut stream, &Request::Shutdown.to_json()).unwrap();
+        let bye = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        assert_eq!(bye, Response::Bye);
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -1,51 +1,94 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no proc-macro dependency: the
+//! offline build vendors no `thiserror`).
+
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors surfaced by the coordinator, runtime and substrates.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A machine was asked to hold more items than its fixed capacity µ.
     /// This is the failure mode the paper's framework exists to avoid —
     /// we *hard-fail* instead of silently spilling, so benches can prove
     /// the two-round baselines break down where Table 1 says they do.
-    #[error("capacity exceeded: machine of capacity {capacity} received {got} items{ctx}")]
     CapacityExceeded {
         capacity: usize,
         got: usize,
         ctx: String,
     },
 
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
-    #[error("no artifact matches request: {0}")]
     NoArtifact(String),
 
-    #[error("artifact manifest error: {0}")]
     Manifest(String),
 
-    #[error("XLA/PJRT runtime error: {0}")]
     Xla(String),
 
-    #[error("engine unavailable: {0}")]
     EngineUnavailable(String),
 
-    #[error("json parse error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("data format error: {0}")]
     DataFormat(String),
 
-    #[error("worker panicked or disconnected: {0}")]
     Worker(String),
+
+    /// The wire to a distributed worker failed (connect/read/write/EOF).
+    /// Distinct from [`Error::Worker`]: transport failures are retryable
+    /// by requeueing the part on another machine; worker errors are not.
+    Transport(String),
+
+    /// A peer spoke the `dist` protocol incorrectly (bad frame, bad
+    /// message shape, version mismatch).
+    Protocol(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::CapacityExceeded { capacity, got, ctx } => write!(
+                f,
+                "capacity exceeded: machine of capacity {capacity} received {got} items{ctx}"
+            ),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::NoArtifact(m) => write!(f, "no artifact matches request: {m}"),
+            Error::Manifest(m) => write!(f, "artifact manifest error: {m}"),
+            Error::Xla(m) => write!(f, "XLA/PJRT runtime error: {m}"),
+            Error::EngineUnavailable(m) => write!(f, "engine unavailable: {m}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::DataFormat(m) => write!(f, "data format error: {m}"),
+            Error::Worker(m) => write!(f, "worker panicked or disconnected: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -58,5 +101,37 @@ impl Error {
     /// Helper for invalid-argument errors.
     pub fn invalid<S: Into<String>>(msg: S) -> Self {
         Error::InvalidArgument(msg.into())
+    }
+
+    /// Helper for transport errors tagged with the peer address.
+    pub fn transport<S: fmt::Display>(addr: &str, msg: S) -> Self {
+        Error::Transport(format!("{addr}: {msg}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive_output() {
+        let e = Error::CapacityExceeded { capacity: 10, got: 11, ctx: " (machine 0 of 2)".into() };
+        assert_eq!(
+            e.to_string(),
+            "capacity exceeded: machine of capacity 10 received 11 items (machine 0 of 2)"
+        );
+        assert_eq!(Error::invalid("x").to_string(), "invalid argument: x");
+        assert_eq!(
+            Error::transport("127.0.0.1:7070", "connection refused").to_string(),
+            "transport error: 127.0.0.1:7070: connection refused"
+        );
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("boom"));
     }
 }

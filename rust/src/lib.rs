@@ -15,12 +15,26 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the coordinator: round planner, balanced random
-//!   partitioner, simulated fixed-capacity cluster, β-nice compressors,
-//!   objectives, hereditary constraints, baselines and the bench harness.
+//!   partitioner, pluggable execution backends ([`dist`]: in-process
+//!   thread pool, real TCP worker processes, deterministic fault
+//!   simulator), β-nice compressors, objectives, hereditary constraints,
+//!   baselines and the bench harness.
 //! * **L2/L1 (python/compile, build-time only)** — JAX graphs + Pallas
 //!   kernels for the oracle-evaluation hot spot, AOT-lowered to
 //!   `artifacts/*.hlo.txt`, executed from rust through PJRT
 //!   ([`runtime`]). Python never runs on the request path.
+//!
+//! ## Distributed execution
+//!
+//! Rounds dispatch through the [`dist::Backend`] trait. The default is
+//! the in-process [`dist::LocalBackend`]; `hss worker --listen
+//! host:port` starts a real fixed-capacity worker process and `hss run
+//! --backend tcp --workers host:port,…` shards every round over those
+//! workers via a length-prefixed binary protocol ([`dist::protocol`]).
+//! [`dist::SimBackend`] replays scripted machine losses and stragglers
+//! for robustness experiments. All backends return bit-identical
+//! solutions for the same seed — the substrate changes cost and
+//! availability, never the answer.
 //!
 //! ## Quick start
 //!
@@ -42,6 +56,7 @@ pub mod config;
 pub mod constraints;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod error;
 pub mod linalg;
 pub mod objectives;
@@ -60,6 +75,9 @@ pub mod prelude {
     pub use crate::constraints::{Cardinality, Constraint, Knapsack, PartitionMatroid};
     pub use crate::coordinator::{baselines, TreeBuilder, TreeResult, TreeRunner};
     pub use crate::data::Dataset;
+    pub use crate::dist::{
+        Backend, BackendChoice, FaultPlan, LocalBackend, SimBackend, TcpBackend,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::objectives::{Objective, Oracle, Problem};
     pub use crate::runtime::Engine;

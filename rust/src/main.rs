@@ -2,10 +2,14 @@
 //! maximization framework.
 //!
 //! ```text
-//! hss run   [--config cfg.json] [--dataset csn-2k] [--algo tree]
-//!           [--k 50] [--capacity 200] [--seed 42] [--trials 3]
-//!           [--epsilon 0.5] [--no-engine] [--threads 2]
-//! hss plan  --n 100000 --k 50 --capacity 800     # round plan / bounds
+//! hss run    [--config cfg.json] [--dataset csn-2k] [--algo tree]
+//!            [--k 50] [--capacity 200] [--seed 42] [--trials 3]
+//!            [--epsilon 0.5] [--no-engine] [--threads 2]
+//!            [--backend local|tcp|sim] [--workers host:port,host:port…]
+//!            [--sim-loss 1] [--sim-loss-prob 0.0]
+//!            [--sim-straggler-prob 0.0] [--sim-straggler-ms 0] [--sim-seed 0]
+//! hss worker --listen 127.0.0.1:7070 --capacity 200   # host one machine
+//! hss plan   --n 100000 --k 50 --capacity 800    # round plan / bounds
 //! hss datasets                                    # list registry
 //! hss artifacts                                   # list AOT artifacts
 //! ```
@@ -16,7 +20,8 @@ use hss::algorithms::{LazyGreedy, StochasticGreedy};
 use hss::config::{Algo, RunConfig};
 use hss::coordinator::planner::RoundPlan;
 use hss::coordinator::{baselines, TreeBuilder};
-use hss::error::Result;
+use hss::dist::{worker, Backend as _, BackendChoice};
+use hss::error::{Error, Result};
 use hss::runtime::accel::XlaGreedy;
 use hss::util::cli::Args;
 
@@ -35,15 +40,30 @@ fn real_main() -> Result<()> {
     let args = Args::from_env()?;
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args),
+        Some("worker") => cmd_worker(&args),
         Some("plan") => cmd_plan(&args),
         Some("datasets") => cmd_datasets(),
         Some("artifacts") => cmd_artifacts(),
         _ => {
-            eprintln!("usage: hss <run|plan|datasets|artifacts> [flags]");
-            eprintln!("       see rust/src/main.rs header for flag reference");
+            eprintln!("usage: hss <run|worker|plan|datasets|artifacts> [flags]");
+            eprintln!("  run     execute an experiment    [--backend local|tcp|sim]");
+            eprintln!("          [--workers host:port,…] [--sim-loss N] …");
+            eprintln!("  worker  host one fixed-capacity machine for `run --backend tcp`");
+            eprintln!("          [--listen 127.0.0.1:7070] [--capacity 200]");
+            eprintln!("  see rust/src/main.rs header for the full flag reference");
             Ok(())
         }
     }
+}
+
+/// `hss worker`: host one fixed-capacity machine process; coordinators
+/// reach it via `hss run --backend tcp --workers <this address>`.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cfg = worker::WorkerConfig {
+        listen: args.get_or("listen", "127.0.0.1:7070").to_string(),
+        capacity: args.usize("capacity", 200)?,
+    };
+    worker::serve(&cfg)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -67,10 +87,53 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flag("no-engine") {
         cfg.use_engine = false;
     }
+    if let Some(b) = args.get("backend") {
+        // only switch kinds: `--backend tcp` re-stated on the CLI must not
+        // wipe a config file's workers list / sim fault plan
+        if b != cfg.backend.name() {
+            cfg.backend = BackendChoice::parse(b)?;
+        }
+    }
+    if let BackendChoice::Tcp { workers } = &mut cfg.backend {
+        if let Some(list) = args.get("workers") {
+            *workers = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+        }
+        if workers.is_empty() {
+            return Err(Error::invalid(
+                "--backend tcp requires --workers host:port[,host:port…]",
+            ));
+        }
+    }
+    if let BackendChoice::Sim { faults } = &mut cfg.backend {
+        faults.machine_loss_per_round =
+            args.usize("sim-loss", faults.machine_loss_per_round)?;
+        faults.loss_prob = args.f64("sim-loss-prob", faults.loss_prob)?;
+        faults.straggler_prob = args.f64("sim-straggler-prob", faults.straggler_prob)?;
+        faults.straggler_delay_ms = args.f64("sim-straggler-ms", faults.straggler_delay_ms)?;
+        faults.seed = args.u64("sim-seed", faults.seed)?;
+        for (flag, p) in [
+            ("sim-loss-prob", faults.loss_prob),
+            ("sim-straggler-prob", faults.straggler_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::invalid(format!("--{flag} {p} out of [0,1]")));
+            }
+        }
+    }
+    if cfg.backend != BackendChoice::Local {
+        // XLA compressors are not wire-representable; non-local backends
+        // run the pure oracle path end to end
+        cfg.use_engine = false;
+    }
+    let backend = cfg.build_backend()?;
 
     let (problem, engine) = cfg.problem_with_engine()?;
     println!(
-        "dataset={} n={} d={} objective={} k={} capacity={} algo={} engine={}",
+        "dataset={} n={} d={} objective={} k={} capacity={} algo={} backend={} engine={}",
         cfg.dataset,
         problem.n(),
         problem.dataset.d,
@@ -78,6 +141,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.k,
         cfg.capacity,
         cfg.algo.name(),
+        backend.name(),
         engine.is_some(),
     );
 
@@ -96,8 +160,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
             Algo::RandGreedi | Algo::Greedi => {
                 let run = |p: &_, c: &dyn hss::algorithms::Compressor| match cfg.algo {
-                    Algo::RandGreedi => baselines::rand_greedi(p, cfg.capacity, c, seed),
-                    _ => baselines::greedi(p, cfg.capacity, c, seed),
+                    Algo::RandGreedi => baselines::rand_greedi_on(p, backend.as_ref(), c, seed),
+                    _ => baselines::greedi_on(p, backend.as_ref(), c, seed),
                 };
                 let res = match &engine {
                     Some(e) => run(&problem, &XlaGreedy::new(e.clone()))?,
@@ -124,12 +188,18 @@ fn cmd_run(args: &Args) -> Result<()> {
                 let res = TreeBuilder::new(cfg.capacity)
                     .compressor(compressor)
                     .threads(cfg.threads)
+                    .backend(backend.clone())
                     .build()
                     .run(&problem, seed)?;
+                let requeue = if res.requeued_parts > 0 {
+                    format!(" requeued={}", res.requeued_parts)
+                } else {
+                    String::new()
+                };
                 (
                     res.best.value,
                     format!(
-                        "rounds={}/{} machines={} evals={} shuffleMB={:.1}",
+                        "rounds={}/{} machines={} evals={} shuffleMB={:.1}{requeue}",
                         res.rounds,
                         res.round_bound,
                         res.total_machines,

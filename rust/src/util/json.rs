@@ -193,6 +193,20 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Decode a u64 that may arrive as a decimal string or a number.
+/// JSON numbers are f64 (exact only below 2^53), so full-width 64-bit
+/// values — seeds, cache keys — are conventionally encoded as decimal
+/// strings; small non-negative integral numbers are tolerated. This is
+/// the single definition of that convention (configs and the dist wire
+/// protocol both delegate here).
+pub fn as_lossless_u64(v: &Json) -> Option<u64> {
+    match v {
+        Json::Str(s) => s.parse::<u64>().ok(),
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9.0e15 => Some(*x as u64),
+        _ => None,
+    }
+}
+
 /// Convenience constructors used by report writers.
 pub fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -508,5 +522,17 @@ mod tests {
         let v = Json::parse(r#"{"a":1}"#).unwrap();
         let e = v.req_str("missing").unwrap_err();
         assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn lossless_u64_decoding() {
+        assert_eq!(as_lossless_u64(&Json::Str(u64::MAX.to_string())), Some(u64::MAX));
+        assert_eq!(as_lossless_u64(&Json::Num(42.0)), Some(42));
+        assert_eq!(as_lossless_u64(&Json::Num(-1.0)), None);
+        assert_eq!(as_lossless_u64(&Json::Num(1.5)), None);
+        // past 2^53 the number form is untrustworthy and rejected
+        assert_eq!(as_lossless_u64(&Json::Num(1.0e16)), None);
+        assert_eq!(as_lossless_u64(&Json::Str("zebra".into())), None);
+        assert_eq!(as_lossless_u64(&Json::Null), None);
     }
 }

@@ -1,0 +1,221 @@
+//! End-to-end distributed execution: real `hss worker` *processes*
+//! reached over TCP must reproduce the local thread-pool backend
+//! bit-exactly, tolerate machine loss, and enforce capacity at the
+//! worker boundary.
+//!
+//! These tests spawn the actual `hss` binary (CARGO_BIN_EXE_hss), bind
+//! ephemeral ports (`--listen 127.0.0.1:0`) and discover the real port
+//! from the worker's stdout announcement line.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use hss::coordinator::{baselines, TreeBuilder};
+use hss::data::registry;
+use hss::dist::{Backend, FaultPlan, SimBackend, TcpBackend};
+use hss::objectives::Problem;
+
+/// A spawned worker process, killed on drop so failing tests don't leak
+/// listeners.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn(capacity: usize) -> WorkerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_hss"))
+            .args([
+                "worker",
+                "--listen",
+                "127.0.0.1:0",
+                "--capacity",
+                &capacity.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn hss worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read worker announcement");
+        // "hss-worker listening on 127.0.0.1:PORT (capacity N)"
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("bad announcement line: {line:?}"))
+            .to_string();
+        WorkerProc { child, addr }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The acceptance scenario: csn-2k, k=25, µ=200 — a TcpBackend run over
+/// two real worker processes returns the identical item set and
+/// objective value as the LocalBackend run (the wire is lossless).
+#[test]
+fn tcp_backend_matches_local_backend_exactly() {
+    let (k, mu, problem_seed, run_seed) = (25usize, 200usize, 42u64, 7u64);
+    let ds = registry::load("csn-2k", problem_seed).unwrap();
+    let problem = Problem::exemplar(ds, k, problem_seed);
+
+    let local = TreeBuilder::new(mu).build().run(&problem, run_seed).unwrap();
+
+    let w1 = WorkerProc::spawn(mu);
+    let w2 = WorkerProc::spawn(mu);
+    let tcp = Arc::new(
+        TcpBackend::new(mu, vec![w1.addr.clone(), w2.addr.clone()]).unwrap(),
+    );
+    let remote = TreeBuilder::new(mu)
+        .backend(tcp.clone())
+        .build()
+        .run(&problem, run_seed)
+        .unwrap();
+
+    assert_eq!(remote.best.items, local.best.items, "item sets differ");
+    assert_eq!(
+        remote.best.value.to_bits(),
+        local.best.value.to_bits(),
+        "objective value not bit-identical: {} vs {}",
+        remote.best.value,
+        local.best.value
+    );
+    assert_eq!(remote.rounds, local.rounds);
+    assert_eq!(remote.requeued_parts, 0, "healthy workers must not requeue");
+    // remote oracle work is folded into the shared eval counter
+    assert!(remote.oracle_evals > 0, "tcp run reported no oracle evals");
+
+    tcp.shutdown_workers();
+}
+
+/// One dead address in the worker list must not take the run down as
+/// long as a live worker remains (the dead slot is skipped; parts that
+/// were never dispatched are not counted as requeued).
+#[test]
+fn tcp_backend_survives_a_dead_worker_address() {
+    let (k, mu) = (10usize, 100usize);
+    let ds = registry::load("csn-2k", 1).unwrap();
+    let problem = Problem::exemplar(ds, k, 1);
+
+    let alive = WorkerProc::spawn(mu);
+    // 127.0.0.1:1 refuses connections immediately
+    let tcp = Arc::new(
+        TcpBackend::new(mu, vec!["127.0.0.1:1".into(), alive.addr.clone()]).unwrap(),
+    );
+    let remote = TreeBuilder::new(mu)
+        .backend(tcp.clone())
+        .build()
+        .run(&problem, 3)
+        .unwrap();
+    let local = TreeBuilder::new(mu).build().run(&problem, 3).unwrap();
+    assert_eq!(remote.best.items, local.best.items);
+    assert_eq!(remote.best.value.to_bits(), local.best.value.to_bits());
+
+    tcp.shutdown_workers();
+}
+
+/// Killing a worker mid-run loses its machine; the coordinator requeues
+/// the in-flight part on the survivor and the run completes with the
+/// same answer.
+#[test]
+fn tcp_backend_requeues_after_mid_run_worker_loss() {
+    let (k, mu) = (10usize, 100usize);
+    let ds = registry::load("csn-2k", 2).unwrap();
+    let problem = Problem::exemplar(ds, k, 2);
+
+    let victim = WorkerProc::spawn(mu);
+    let survivor = WorkerProc::spawn(mu);
+    let tcp =
+        TcpBackend::new(mu, vec![victim.addr.clone(), survivor.addr.clone()]).unwrap();
+
+    // round 1 over both workers: warm connections
+    let parts: Vec<Vec<u32>> = (0..4).map(|i| (i * 50..(i + 1) * 50).collect()).collect();
+    let healthy = tcp
+        .run_round(&problem, &hss::algorithms::LazyGreedy::new(), &parts, 11)
+        .unwrap();
+
+    // Kill one worker, then rerun: its connection breaks mid-round and
+    // the in-flight part is requeued on the survivor. (The dead slot is
+    // only exercised when the scheduler hands it work, so retry a few
+    // rounds until the loss is observed — results must match every time.)
+    drop(victim);
+    let mut saw_requeue = false;
+    for _ in 0..5 {
+        let wounded = tcp
+            .run_round(&problem, &hss::algorithms::LazyGreedy::new(), &parts, 11)
+            .unwrap();
+        for (a, b) in healthy.solutions.iter().zip(&wounded.solutions) {
+            assert_eq!(a.items, b.items, "requeue changed a solution");
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+        if wounded.requeued_parts >= 1 {
+            saw_requeue = true;
+            break;
+        }
+    }
+    assert!(saw_requeue, "worker loss never surfaced as a requeued part");
+
+    tcp.shutdown_workers();
+}
+
+/// The two-round RANDGREEDI baseline also runs end-to-end on workers.
+#[test]
+fn randgreedi_runs_on_tcp_workers() {
+    let (k, mu) = (10usize, 200usize);
+    let ds = registry::load("csn-2k", 3).unwrap();
+    let problem = Problem::exemplar(ds, k, 3);
+
+    let w1 = WorkerProc::spawn(mu);
+    let w2 = WorkerProc::spawn(mu);
+    let tcp = TcpBackend::new(mu, vec![w1.addr.clone(), w2.addr.clone()]).unwrap();
+
+    let remote =
+        baselines::rand_greedi_on(&problem, &tcp, &hss::algorithms::LazyGreedy::new(), 5)
+            .unwrap();
+    let local = baselines::rand_greedi(&problem, mu, &hss::algorithms::LazyGreedy::new(), 5)
+        .unwrap();
+    assert_eq!(remote.solution.items, local.solution.items);
+    assert_eq!(remote.solution.value.to_bits(), local.solution.value.to_bits());
+    assert_eq!(remote.machines, local.machines);
+
+    tcp.shutdown_workers();
+}
+
+/// Acceptance: SimBackend with one machine lost per round — the tree
+/// still returns a feasible solution and Metrics reports the requeues.
+#[test]
+fn sim_backend_machine_loss_scenario() {
+    let ds = registry::load("csn-2k", 4).unwrap();
+    let problem = Problem::exemplar(ds, 20, 4);
+    let sim = Arc::new(SimBackend::new(150).with_faults(FaultPlan {
+        machine_loss_per_round: 1,
+        straggler_prob: 0.25,
+        straggler_delay_ms: 30.0,
+        ..FaultPlan::default()
+    }));
+    let res = TreeBuilder::new(150).backend(sim).build().run(&problem, 6).unwrap();
+
+    assert!(!res.best.items.is_empty());
+    assert!(res.best.items.len() <= 20);
+    assert!(problem.constraint.is_feasible(&res.best.items, &problem.dataset));
+    assert!(res.rounds >= 2, "scenario should be multi-round");
+    for r in &res.per_round {
+        assert_eq!(r.requeued_parts, 1, "round {}: lost machine not reported", r.round);
+    }
+    assert_eq!(res.requeued_parts, res.rounds as u64);
+
+    // and the faults changed cost only, never the answer
+    let healthy = TreeBuilder::new(150).build().run(&problem, 6).unwrap();
+    assert_eq!(res.best.items, healthy.best.items);
+    assert_eq!(res.best.value.to_bits(), healthy.best.value.to_bits());
+}

@@ -1,0 +1,138 @@
+//! Stub of the XLA/PJRT binding surface consumed by `hss::runtime::engine`.
+//!
+//! The real bindings link against a PJRT plugin and are only available on
+//! hosts with the accelerator toolchain installed. This in-repo stand-in
+//! exposes the exact API shape the engine uses so the crate builds
+//! everywhere; [`PjRtClient::cpu`] reports the runtime as unavailable,
+//! which the engine surfaces as `Error::EngineUnavailable` and the
+//! coordinator answers by falling back to the pure-rust oracle path.
+//!
+//! Swapping in the real bindings is a Cargo dependency change only — no
+//! `hss` source edits — because every call site goes through this facade.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' opaque error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT runtime not available in this build (vendored xla stub); \
+         install the XLA bindings to enable the accelerated path"
+            .to_string(),
+    ))
+}
+
+/// Scalar types transferable to/from device literals.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable()
+    }
+}
+
+/// A parsed HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over borrowed device buffers; one result vector per device.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Transfer the buffer to a host literal, blocking until ready.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// A host-side literal (possibly a tuple).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    /// Copy out the literal's data as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("not available"));
+    }
+}
