@@ -64,7 +64,7 @@ mod tests {
         assert_eq!(sg.sample_size(100, 10), 7);
         let sg = StochasticGreedy::new(0.2);
         assert_eq!(sg.sample_size(100, 10), 17); // 10·ln5 ≈ 16.09 -> 17
-        assert_eq!(sg.sample_size(5, 10), 1.max((0.5f64).ln().abs() as usize));
+        assert_eq!(sg.sample_size(5, 10), 1); // ⌈(5/10)·ln5⌉ = ⌈0.81⌉ = 1
         assert_eq!(sg.sample_size(0, 10), 0);
     }
 

@@ -36,9 +36,21 @@ impl Compressor for ThresholdGreedy {
             return Ok(Solution::empty());
         }
 
-        // d = max singleton gain
+        // d = max singleton gain over *constraint-addable* candidates.
+        // An infeasible top singleton (e.g. a knapsack item over budget
+        // on its own) can never be selected, but counting it would
+        // inflate both the initial threshold and the ε·d/n floor —
+        // potentially above every feasible gain, selecting nothing.
         let singleton = oracle.bulk_gains();
-        let d = singleton.iter().cloned().fold(0.0f64, f64::max);
+        let mut d = 0.0f64;
+        for (j, &g) in singleton.iter().enumerate() {
+            if problem
+                .constraint
+                .can_add(&selected, candidates[j], &problem.dataset)
+            {
+                d = d.max(g);
+            }
+        }
         if d <= 0.0 {
             return Ok(Solution::empty());
         }
@@ -103,6 +115,28 @@ mod tests {
         let cands: Vec<u32> = (0..120).collect();
         let sol = ThresholdGreedy::new(0.2).compress(&p, &cands, 0).unwrap();
         assert!(sol.items.len() <= 4);
+        assert!(p.constraint.is_feasible(&sol.items, &p.dataset));
+    }
+
+    #[test]
+    fn infeasible_top_singleton_does_not_inflate_threshold() {
+        use crate::constraints::Knapsack;
+
+        // item 0 has by far the largest gain but violates the knapsack
+        // budget on its own; with d over *all* singletons the floor
+        // ε·d/n = 5 would exceed every feasible gain (1.0) and the
+        // algorithm would return empty
+        let mut gains = vec![1.0; 10];
+        gains[0] = 100.0;
+        let mut weights = vec![1.0; 10];
+        weights[0] = 10.0; // > budget alone
+        let p = Problem::modular(gains, 5, 0)
+            .with_constraint(Arc::new(Knapsack::new(weights, 5.0, 5)));
+        let cands: Vec<u32> = (0..10).collect();
+        let sol = ThresholdGreedy::new(0.5).compress(&p, &cands, 0).unwrap();
+        assert!(!sol.items.contains(&0), "selected the over-budget item");
+        assert_eq!(sol.items.len(), 5, "feasible items were skipped: {:?}", sol.items);
+        assert_eq!(sol.value, 5.0);
         assert!(p.constraint.is_feasible(&sol.items, &p.dataset));
     }
 

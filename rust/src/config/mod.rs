@@ -5,6 +5,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::constraints::spec::ConstraintSpec;
 use crate::data::registry;
 use crate::dist::{Backend, BackendChoice, FaultPlan};
 use crate::error::{Error, Result};
@@ -60,6 +61,12 @@ pub struct RunConfig {
     pub threads: usize,
     /// Execution backend for compression rounds (local | tcp | sim).
     pub backend: BackendChoice,
+    /// Hereditary constraint in the [`ConstraintSpec::parse`] grammar
+    /// (e.g. `knapsack:b=30,w=rownorm2+pmatroid:groups=5,cap=2`);
+    /// `None` means the plain cardinality constraint `card(k)`. Kept as
+    /// text because `k` may still be overridden by later CLI flags —
+    /// the spec is resolved against the final `k` in [`RunConfig::problem`].
+    pub constraint: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -74,6 +81,7 @@ impl Default for RunConfig {
             use_engine: true,
             threads: 2,
             backend: BackendChoice::Local,
+            constraint: None,
         }
     }
 }
@@ -114,6 +122,12 @@ impl RunConfig {
         if let Some(x) = v.get("threads").and_then(Json::as_usize) {
             cfg.threads = x.max(1);
         }
+        if let Some(c) = v.get("constraint").and_then(Json::as_str) {
+            // validate the grammar eagerly; the spec is re-resolved
+            // against the final k when the problem is built
+            ConstraintSpec::parse(c, cfg.k)?;
+            cfg.constraint = Some(c.to_string());
+        }
         if let Some(b) = v.get("backend").and_then(Json::as_str) {
             cfg.backend = BackendChoice::parse(b)?;
         }
@@ -149,13 +163,19 @@ impl RunConfig {
     }
 
     /// Materialize the problem this config describes (objective follows
-    /// the paper's Table 2 dataset→objective mapping).
+    /// the paper's Table 2 dataset→objective mapping; the constraint
+    /// spec, if any, is built against the loaded dataset).
     pub fn problem(&self) -> Result<Problem> {
         let ds = registry::load(&self.dataset, self.seed)?;
-        let p = match dataset_objective(&self.dataset) {
+        let mut p = match dataset_objective(&self.dataset) {
             "logdet" => Problem::logdet(ds, self.k, self.seed),
             _ => Problem::exemplar(ds, self.k, self.seed),
         };
+        if let Some(text) = &self.constraint {
+            let spec = ConstraintSpec::parse(text, self.k)?;
+            let constraint = spec.build(&p.dataset)?;
+            p = p.with_constraint(constraint);
+        }
         Ok(p)
     }
 
@@ -315,6 +335,27 @@ mod tests {
         assert!(
             RunConfig::from_json_text(r#"{"backend":"sim","sim":{"loss_prob":1.5}}"#).is_err()
         );
+    }
+
+    #[test]
+    fn parses_constraint_spec_and_applies_it() {
+        let cfg = RunConfig::from_json_text(
+            r#"{"k":10,"constraint":"knapsack:b=25,w=unit+pmatroid:groups=5,cap=2"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.constraint.as_deref(),
+            Some("knapsack:b=25,w=unit+pmatroid:groups=5,cap=2")
+        );
+        let p = cfg.problem().unwrap();
+        let name = p.constraint.name();
+        assert!(name.contains("knapsack"), "{name}");
+        assert!(name.contains("partition"), "{name}");
+        // the built constraint is wire-representable end to end
+        assert!(p.constraint.wire_spec().is_some());
+        // malformed constraint specs fail at parse time
+        assert!(RunConfig::from_json_text(r#"{"constraint":"mystery"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"constraint":"knapsack:b=zebra"}"#).is_err());
     }
 
     #[test]

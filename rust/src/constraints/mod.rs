@@ -6,7 +6,10 @@
 //! order, which guarantees heredity by construction (removing items never
 //! invalidates the remaining prefix checks) — property-tested below.
 
+pub mod spec;
+
 use crate::data::Dataset;
+use spec::{ConstraintSpec, GroupSpec, WeightSpec};
 
 /// A hereditary constraint over dataset items.
 pub trait Constraint: Send + Sync {
@@ -31,6 +34,13 @@ pub trait Constraint: Send + Sync {
     /// An upper bound on the size of any feasible set (used for buffer
     /// sizing; the cardinality component of composite constraints).
     fn max_cardinality(&self) -> usize;
+
+    /// Wire spec this constraint can be rebuilt from on a remote worker
+    /// ([`ConstraintSpec`], wire spec v2). `None` for constraints with
+    /// no recorded construction recipe (ad-hoc test constraints).
+    fn wire_spec(&self) -> Option<ConstraintSpec> {
+        None
+    }
 }
 
 /// `|S| ≤ k`.
@@ -57,6 +67,10 @@ impl Constraint for Cardinality {
     fn max_cardinality(&self) -> usize {
         self.k
     }
+
+    fn wire_spec(&self) -> Option<ConstraintSpec> {
+        Some(ConstraintSpec::Cardinality { k: self.k })
+    }
 }
 
 /// Knapsack: `Σ_{i∈S} w_i ≤ b` with per-item weights supplied by a
@@ -66,20 +80,45 @@ pub struct Knapsack {
     pub budget: f64,
     pub k: usize,
     weights: Vec<f64>,
+    /// Wire provenance: how `weights` can be regenerated remotely.
+    /// `None` means "explicit table" — the [`WeightSpec::Explicit`] form
+    /// is derived from `weights` on demand rather than stored as a
+    /// second permanent copy.
+    weight_spec: Option<WeightSpec>,
 }
 
 impl Knapsack {
     pub fn new(weights: Vec<f64>, budget: f64, k: usize) -> Self {
+        Self::with_weight_spec(weights, None, budget, k)
+    }
+
+    pub(crate) fn with_weight_spec(
+        weights: Vec<f64>,
+        weight_spec: Option<WeightSpec>,
+        budget: f64,
+        k: usize,
+    ) -> Self {
         assert!(weights.iter().all(|&w| w >= 0.0), "negative knapsack weight");
-        Knapsack { budget, k, weights }
+        Knapsack { budget, k, weights, weight_spec }
     }
 
     /// Weights = squared row norms (a natural "cost" for data summaries).
     pub fn from_row_norms(dataset: &Dataset, budget: f64, k: usize) -> Self {
-        let weights = (0..dataset.n)
-            .map(|i| crate::linalg::sq_norm(dataset.row(i as u32)))
-            .collect();
-        Self::new(weights, budget, k)
+        // one definition of the table, shared with worker-side spec
+        // rebuilding — coordinator and worker must agree bit-for-bit
+        let weights = WeightSpec::RowNorm2
+            .materialize(dataset)
+            .expect("rownorm2 weights are infallible");
+        Self::with_weight_spec(weights, Some(WeightSpec::RowNorm2), budget, k)
+    }
+
+    /// Seeded uniform weights in `[lo, hi)` — an ad-hoc instance any
+    /// worker regenerates from the spec alone.
+    pub fn seeded(n: usize, seed: u64, lo: f64, hi: f64, budget: f64, k: usize) -> Self {
+        // one definition of range validity, shared with the CLI/wire path
+        WeightSpec::check_range(lo, hi).expect("invalid seeded weight range");
+        let weights = spec::seeded_weights(n, seed, lo, hi);
+        Self::with_weight_spec(weights, Some(WeightSpec::Seeded { seed, lo, hi }), budget, k)
     }
 
     pub fn weight(&self, item: u32) -> f64 {
@@ -103,6 +142,14 @@ impl Constraint for Knapsack {
     fn max_cardinality(&self) -> usize {
         self.k
     }
+
+    fn wire_spec(&self) -> Option<ConstraintSpec> {
+        let weights = self
+            .weight_spec
+            .clone()
+            .unwrap_or_else(|| WeightSpec::Explicit(self.weights.clone()));
+        Some(ConstraintSpec::Knapsack { budget: self.budget, k: self.k, weights })
+    }
 }
 
 /// Partition matroid: the ground set is split into groups; at most
@@ -111,18 +158,36 @@ pub struct PartitionMatroid {
     pub k: usize,
     group_of: Vec<u32>,
     caps: Vec<usize>,
+    /// Wire provenance: how `group_of` can be regenerated remotely.
+    /// `None` means "explicit table", derived on demand like
+    /// [`Knapsack`]'s weight spec.
+    group_spec: Option<GroupSpec>,
 }
 
 impl PartitionMatroid {
     pub fn new(group_of: Vec<u32>, caps: Vec<usize>, k: usize) -> Self {
-        assert!(group_of.iter().all(|&g| (g as usize) < caps.len()));
-        PartitionMatroid { k, group_of, caps }
+        Self::with_group_spec(group_of, None, caps, k)
     }
 
-    /// Assign groups round-robin by item id (deterministic test helper).
+    pub(crate) fn with_group_spec(
+        group_of: Vec<u32>,
+        group_spec: Option<GroupSpec>,
+        caps: Vec<usize>,
+        k: usize,
+    ) -> Self {
+        assert!(group_of.iter().all(|&g| (g as usize) < caps.len()));
+        PartitionMatroid { k, group_of, caps, group_spec }
+    }
+
+    /// Assign groups round-robin by item id (deterministic; also the
+    /// wire-friendly form — only the group count crosses the network).
     pub fn round_robin(n: usize, groups: usize, per_group: usize, k: usize) -> Self {
-        let group_of = (0..n as u32).map(|i| i % groups as u32).collect();
-        Self::new(group_of, vec![per_group; groups], k)
+        // shared with worker-side spec rebuilding (see from_row_norms)
+        let spec = GroupSpec::RoundRobin { groups };
+        let group_of = spec
+            .materialize(n, groups)
+            .expect("round-robin needs groups ≥ 1");
+        Self::with_group_spec(group_of, Some(spec), vec![per_group; groups], k)
     }
 
     pub fn group(&self, item: u32) -> u32 {
@@ -150,6 +215,18 @@ impl Constraint for PartitionMatroid {
     fn max_cardinality(&self) -> usize {
         self.k.min(self.caps.iter().sum())
     }
+
+    fn wire_spec(&self) -> Option<ConstraintSpec> {
+        let groups = self
+            .group_spec
+            .clone()
+            .unwrap_or_else(|| GroupSpec::Explicit(self.group_of.clone()));
+        Some(ConstraintSpec::PartitionMatroid {
+            k: self.k,
+            caps: self.caps.clone(),
+            groups,
+        })
+    }
 }
 
 /// Intersection of hereditary constraints (itself hereditary).
@@ -176,6 +253,14 @@ impl Constraint for Intersection {
 
     fn max_cardinality(&self) -> usize {
         self.parts.iter().map(|p| p.max_cardinality()).min().unwrap()
+    }
+
+    fn wire_spec(&self) -> Option<ConstraintSpec> {
+        self.parts
+            .iter()
+            .map(|p| p.wire_spec())
+            .collect::<Option<Vec<_>>>()
+            .map(ConstraintSpec::Intersection)
     }
 }
 

@@ -1,0 +1,792 @@
+//! Wire-serializable constraint specifications (wire spec v2).
+//!
+//! A [`ConstraintSpec`] describes a hereditary constraint *by
+//! construction*, not by value: knapsack weights and matroid group
+//! assignments are carried as generator specs (`unit`, `rownorm2`,
+//! `seeded`, `round-robin`, …) that every process materializes
+//! identically from the dataset and a seed, so a few bytes of JSON
+//! rebuild the exact same constraint on a remote worker. Explicit
+//! per-item tables remain representable for constraints that were built
+//! from arbitrary data.
+//!
+//! The same grammar backs the CLI (`--constraint
+//! knapsack:b=30,w=rownorm2+pmatroid:groups=5,cap=2`), config files and
+//! the dist wire protocol, so a constraint that runs locally runs — and
+//! means the same thing — on every backend.
+
+use std::sync::Arc;
+
+use crate::constraints::{Cardinality, Constraint, Intersection, Knapsack, PartitionMatroid};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
+use crate::util::rng::Rng;
+
+/// Stream tag for seeded knapsack weights ("KNAPSACK" in ASCII), keeping
+/// the weight stream independent of every algorithmic seed stream.
+const WEIGHT_STREAM_TAG: u64 = 0x4B4E_4150_5341_434B;
+
+/// Deterministic seeded uniform weights in `[lo, hi)` — the single
+/// definition shared by [`Knapsack::seeded`] and spec materialization.
+pub(crate) fn seeded_weights(n: usize, seed: u64, lo: f64, hi: f64) -> Vec<f64> {
+    let mut rng = Rng::seed_from(seed ^ WEIGHT_STREAM_TAG);
+    (0..n).map(|_| lo + rng.f64() * (hi - lo)).collect()
+}
+
+/// How per-item knapsack weights are produced.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightSpec {
+    /// `w_i = 1` (cardinality-flavoured knapsack).
+    Unit,
+    /// `w_i = ‖x_i‖²` — squared row norm, a natural cost for summaries.
+    RowNorm2,
+    /// `w_i ~ U[lo, hi)` from a seeded stream (ad-hoc instances).
+    Seeded { seed: u64, lo: f64, hi: f64 },
+    /// Explicit per-item table (shipped by value).
+    Explicit(Vec<f64>),
+}
+
+impl WeightSpec {
+    pub(crate) fn check_range(lo: f64, hi: f64) -> Result<()> {
+        if !lo.is_finite() || !hi.is_finite() || lo < 0.0 || hi < lo {
+            return Err(Error::invalid(format!(
+                "seeded weight range [{lo}, {hi}) must be finite, non-negative and ordered"
+            )));
+        }
+        Ok(())
+    }
+
+    fn check_table(w: &[f64]) -> Result<()> {
+        if w.iter().any(|x| !x.is_finite() || *x < 0.0) {
+            return Err(Error::invalid(
+                "explicit knapsack weights must be finite and non-negative",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Materialize the per-item weight table for `ds`.
+    pub fn materialize(&self, ds: &Dataset) -> Result<Vec<f64>> {
+        match self {
+            WeightSpec::Unit => Ok(vec![1.0; ds.n]),
+            WeightSpec::RowNorm2 => Ok((0..ds.n)
+                .map(|i| crate::linalg::sq_norm(ds.row(i as u32)))
+                .collect()),
+            WeightSpec::Seeded { seed, lo, hi } => {
+                Self::check_range(*lo, *hi)?;
+                Ok(seeded_weights(ds.n, *seed, *lo, *hi))
+            }
+            WeightSpec::Explicit(w) => {
+                if w.len() != ds.n {
+                    return Err(Error::invalid(format!(
+                        "explicit weight table has {} entries for a ground set of {}",
+                        w.len(),
+                        ds.n
+                    )));
+                }
+                Self::check_table(w)?;
+                Ok(w.clone())
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            WeightSpec::Unit => json::obj(vec![("gen", json::s("unit"))]),
+            WeightSpec::RowNorm2 => json::obj(vec![("gen", json::s("rownorm2"))]),
+            WeightSpec::Seeded { seed, lo, hi } => json::obj(vec![
+                ("gen", json::s("seeded")),
+                ("seed", Json::Str(seed.to_string())),
+                ("lo", json::num(*lo)),
+                ("hi", json::num(*hi)),
+            ]),
+            WeightSpec::Explicit(w) => json::obj(vec![
+                ("gen", json::s("explicit")),
+                ("w", Json::Arr(w.iter().map(|&x| Json::Num(x)).collect())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<WeightSpec> {
+        match wire_str(v, "gen")? {
+            "unit" => Ok(WeightSpec::Unit),
+            "rownorm2" => Ok(WeightSpec::RowNorm2),
+            "seeded" => {
+                let seed = wire_u64(v, "seed")?;
+                let lo = wire_f64(v, "lo")?;
+                let hi = wire_f64(v, "hi")?;
+                Self::check_range(lo, hi)?;
+                Ok(WeightSpec::Seeded { seed, lo, hi })
+            }
+            "explicit" => {
+                let arr = v.get("w").and_then(Json::as_arr).ok_or_else(|| {
+                    Error::Protocol("explicit weight spec is missing array field 'w'".into())
+                })?;
+                let w: Vec<f64> = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_f64().ok_or_else(|| {
+                            Error::Protocol("'w' contains a non-number entry".into())
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                Self::check_table(&w)?;
+                Ok(WeightSpec::Explicit(w))
+            }
+            other => Err(Error::Protocol(format!(
+                "unknown weight generator '{other}'"
+            ))),
+        }
+    }
+
+    /// Parse the CLI form: `unit`, `rownorm2` or `seeded:SEED:LO:HI`.
+    pub fn parse(text: &str) -> Result<WeightSpec> {
+        match text {
+            "unit" => return Ok(WeightSpec::Unit),
+            "rownorm2" => return Ok(WeightSpec::RowNorm2),
+            _ => {}
+        }
+        let parts: Vec<&str> = text.split(':').collect();
+        if parts.len() == 4 && parts[0] == "seeded" {
+            let seed = parts[1]
+                .parse::<u64>()
+                .map_err(|_| Error::Config(format!("bad seeded weight seed '{}'", parts[1])))?;
+            let lo = parts[2]
+                .parse::<f64>()
+                .map_err(|_| Error::Config(format!("bad seeded weight lo '{}'", parts[2])))?;
+            let hi = parts[3]
+                .parse::<f64>()
+                .map_err(|_| Error::Config(format!("bad seeded weight hi '{}'", parts[3])))?;
+            Self::check_range(lo, hi)
+                .map_err(|e| Error::Config(e.to_string()))?;
+            return Ok(WeightSpec::Seeded { seed, lo, hi });
+        }
+        Err(Error::Config(format!(
+            "unknown weight spec '{text}' (known: unit, rownorm2, seeded:SEED:LO:HI)"
+        )))
+    }
+}
+
+/// How items are assigned to partition-matroid groups.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GroupSpec {
+    /// Item `i` belongs to group `i mod groups`.
+    RoundRobin { groups: usize },
+    /// Explicit per-item group table (shipped by value).
+    Explicit(Vec<u32>),
+}
+
+impl GroupSpec {
+    /// Materialize the per-item group table for a ground set of `n`
+    /// items over `num_groups` groups.
+    pub fn materialize(&self, n: usize, num_groups: usize) -> Result<Vec<u32>> {
+        match self {
+            GroupSpec::RoundRobin { groups } => {
+                if *groups == 0 || *groups != num_groups {
+                    return Err(Error::invalid(format!(
+                        "round-robin group count {groups} does not match {num_groups} caps"
+                    )));
+                }
+                Ok((0..n as u32).map(|i| i % *groups as u32).collect())
+            }
+            GroupSpec::Explicit(of) => {
+                if of.len() != n {
+                    return Err(Error::invalid(format!(
+                        "explicit group table has {} entries for a ground set of {n}",
+                        of.len()
+                    )));
+                }
+                if of.iter().any(|&g| g as usize >= num_groups) {
+                    return Err(Error::invalid(format!(
+                        "explicit group table references a group ≥ {num_groups}"
+                    )));
+                }
+                Ok(of.clone())
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            GroupSpec::RoundRobin { groups } => json::obj(vec![
+                ("gen", json::s("round-robin")),
+                ("groups", json::num(*groups as f64)),
+            ]),
+            GroupSpec::Explicit(of) => json::obj(vec![
+                ("gen", json::s("explicit")),
+                ("of", Json::Arr(of.iter().map(|&g| Json::Num(g as f64)).collect())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<GroupSpec> {
+        match wire_str(v, "gen")? {
+            "round-robin" => Ok(GroupSpec::RoundRobin { groups: wire_usize(v, "groups")? }),
+            "explicit" => {
+                let arr = v.get("of").and_then(Json::as_arr).ok_or_else(|| {
+                    Error::Protocol("explicit group spec is missing array field 'of'".into())
+                })?;
+                let of: Vec<u32> = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .filter(|v| *v >= 0.0 && v.fract() == 0.0 && *v <= u32::MAX as f64)
+                            .map(|v| v as u32)
+                            .ok_or_else(|| {
+                                Error::Protocol("'of' contains a non-u32 entry".into())
+                            })
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(GroupSpec::Explicit(of))
+            }
+            other => Err(Error::Protocol(format!(
+                "unknown group generator '{other}'"
+            ))),
+        }
+    }
+}
+
+/// A wire-serializable hereditary constraint (paper §3.2): cardinality,
+/// knapsack, partition matroid, or an intersection of those.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConstraintSpec {
+    Cardinality { k: usize },
+    Knapsack { budget: f64, k: usize, weights: WeightSpec },
+    PartitionMatroid { k: usize, caps: Vec<usize>, groups: GroupSpec },
+    Intersection(Vec<ConstraintSpec>),
+}
+
+impl ConstraintSpec {
+    fn check_budget(budget: f64) -> Result<()> {
+        if !budget.is_finite() || budget < 0.0 {
+            return Err(Error::invalid(format!(
+                "knapsack budget {budget} must be finite and non-negative"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build the concrete constraint for `ds`. Deterministic: the same
+    /// spec over the same dataset materializes the identical constraint
+    /// in every process.
+    pub fn build(&self, ds: &Dataset) -> Result<Arc<dyn Constraint>> {
+        Ok(match self {
+            ConstraintSpec::Cardinality { k } => Arc::new(Cardinality::new(*k)),
+            ConstraintSpec::Knapsack { budget, k, weights } => {
+                Self::check_budget(*budget)?;
+                let w = weights.materialize(ds)?;
+                // explicit tables carry no generator recipe: the built
+                // constraint derives its wire form from the table itself
+                let provenance = match weights {
+                    WeightSpec::Explicit(_) => None,
+                    other => Some(other.clone()),
+                };
+                Arc::new(Knapsack::with_weight_spec(w, provenance, *budget, *k))
+            }
+            ConstraintSpec::PartitionMatroid { k, caps, groups } => {
+                if caps.is_empty() {
+                    return Err(Error::invalid("partition matroid needs at least one group"));
+                }
+                let group_of = groups.materialize(ds.n, caps.len())?;
+                let provenance = match groups {
+                    GroupSpec::Explicit(_) => None,
+                    other => Some(other.clone()),
+                };
+                Arc::new(PartitionMatroid::with_group_spec(
+                    group_of,
+                    provenance,
+                    caps.clone(),
+                    *k,
+                ))
+            }
+            ConstraintSpec::Intersection(parts) => {
+                if parts.is_empty() {
+                    return Err(Error::invalid("empty constraint intersection"));
+                }
+                let built = parts
+                    .iter()
+                    .map(|p| p.build(ds))
+                    .collect::<Result<Vec<_>>>()?;
+                Arc::new(Intersection::new(built))
+            }
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ConstraintSpec::Cardinality { k } => json::obj(vec![
+                ("type", json::s("card")),
+                ("k", json::num(*k as f64)),
+            ]),
+            ConstraintSpec::Knapsack { budget, k, weights } => json::obj(vec![
+                ("type", json::s("knapsack")),
+                ("budget", json::num(*budget)),
+                ("k", json::num(*k as f64)),
+                ("weights", weights.to_json()),
+            ]),
+            ConstraintSpec::PartitionMatroid { k, caps, groups } => json::obj(vec![
+                ("type", json::s("pmatroid")),
+                ("k", json::num(*k as f64)),
+                ("caps", Json::Arr(caps.iter().map(|&c| Json::Num(c as f64)).collect())),
+                ("groups", groups.to_json()),
+            ]),
+            ConstraintSpec::Intersection(parts) => json::obj(vec![
+                ("type", json::s("intersection")),
+                ("parts", Json::Arr(parts.iter().map(|p| p.to_json()).collect())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<ConstraintSpec> {
+        match wire_str(v, "type")? {
+            "card" => Ok(ConstraintSpec::Cardinality { k: wire_usize(v, "k")? }),
+            "knapsack" => {
+                let budget = wire_f64(v, "budget")?;
+                Self::check_budget(budget)
+                    .map_err(|e| Error::Protocol(e.to_string()))?;
+                let weights = WeightSpec::from_json(v.get("weights").ok_or_else(|| {
+                    Error::Protocol("knapsack spec is missing field 'weights'".into())
+                })?)?;
+                Ok(ConstraintSpec::Knapsack { budget, k: wire_usize(v, "k")?, weights })
+            }
+            "pmatroid" => {
+                let caps_arr = v.get("caps").and_then(Json::as_arr).ok_or_else(|| {
+                    Error::Protocol("pmatroid spec is missing array field 'caps'".into())
+                })?;
+                let caps: Vec<usize> = caps_arr
+                    .iter()
+                    .map(|x| {
+                        x.as_usize().ok_or_else(|| {
+                            Error::Protocol("'caps' contains a non-integer entry".into())
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                if caps.is_empty() {
+                    return Err(Error::Protocol(
+                        "pmatroid spec needs at least one group cap".into(),
+                    ));
+                }
+                let groups = GroupSpec::from_json(v.get("groups").ok_or_else(|| {
+                    Error::Protocol("pmatroid spec is missing field 'groups'".into())
+                })?)?;
+                Ok(ConstraintSpec::PartitionMatroid { k: wire_usize(v, "k")?, caps, groups })
+            }
+            "intersection" => {
+                let arr = v.get("parts").and_then(Json::as_arr).ok_or_else(|| {
+                    Error::Protocol("intersection spec is missing array field 'parts'".into())
+                })?;
+                if arr.is_empty() {
+                    return Err(Error::Protocol("empty constraint intersection".into()));
+                }
+                let parts = arr
+                    .iter()
+                    .map(ConstraintSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ConstraintSpec::Intersection(parts))
+            }
+            other => Err(Error::Protocol(format!("unknown constraint type '{other}'"))),
+        }
+    }
+
+    /// Does this spec carry an O(n) explicit table (by-value weights or
+    /// group assignments)? Such specs are large on the wire and cheap to
+    /// rebuild, so worker-side memoization skips them.
+    pub fn has_explicit_table(&self) -> bool {
+        match self {
+            ConstraintSpec::Cardinality { .. } => false,
+            ConstraintSpec::Knapsack { weights, .. } => {
+                matches!(weights, WeightSpec::Explicit(_))
+            }
+            ConstraintSpec::PartitionMatroid { groups, .. } => {
+                matches!(groups, GroupSpec::Explicit(_))
+            }
+            ConstraintSpec::Intersection(parts) => {
+                parts.iter().any(|p| p.has_explicit_table())
+            }
+        }
+    }
+
+    /// Parse the CLI / config grammar with budget `k` supplied by the
+    /// run: `card`, `knapsack:b=30[,w=unit|rownorm2|seeded:S:LO:HI]`,
+    /// `pmatroid:groups=G,cap=C`, joined with `+` for intersections.
+    pub fn parse(text: &str, k: usize) -> Result<ConstraintSpec> {
+        // A '+' separates constraints only when it starts a new
+        // constraint name (next char alphabetic) — so f64 exponents
+        // like `b=1e+3` pass through intact.
+        let mut pieces: Vec<&str> = Vec::new();
+        let bytes = text.as_bytes();
+        let mut start = 0;
+        for (i, &b) in bytes.iter().enumerate() {
+            if b == b'+' && bytes.get(i + 1).is_some_and(u8::is_ascii_alphabetic) {
+                pieces.push(&text[start..i]);
+                start = i + 1;
+            }
+        }
+        pieces.push(&text[start..]);
+        let pieces: Vec<&str> = pieces
+            .into_iter()
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        if pieces.is_empty() {
+            return Err(Error::Config("empty constraint spec".into()));
+        }
+        let mut specs = pieces
+            .iter()
+            .map(|p| Self::parse_one(p, k))
+            .collect::<Result<Vec<_>>>()?;
+        if specs.len() == 1 {
+            Ok(specs.remove(0))
+        } else {
+            Ok(ConstraintSpec::Intersection(specs))
+        }
+    }
+
+    fn parse_one(text: &str, k: usize) -> Result<ConstraintSpec> {
+        let (head, rest) = text.split_once(':').unwrap_or((text, ""));
+        match head {
+            "card" => {
+                if !rest.is_empty() {
+                    return Err(Error::Config(format!(
+                        "'card' takes no options (got '{rest}'); k comes from --k"
+                    )));
+                }
+                Ok(ConstraintSpec::Cardinality { k })
+            }
+            "knapsack" => {
+                let mut budget = None;
+                let mut weights = WeightSpec::Unit;
+                for kv in rest.split(',').filter(|s| !s.is_empty()) {
+                    let (key, val) = kv.split_once('=').ok_or_else(|| {
+                        Error::Config(format!("knapsack option '{kv}' is not key=value"))
+                    })?;
+                    match key {
+                        "b" | "budget" => {
+                            let b = val.parse::<f64>().map_err(|_| {
+                                Error::Config(format!("bad knapsack budget '{val}'"))
+                            })?;
+                            Self::check_budget(b).map_err(|e| Error::Config(e.to_string()))?;
+                            budget = Some(b);
+                        }
+                        "w" | "weights" => weights = WeightSpec::parse(val)?,
+                        other => {
+                            return Err(Error::Config(format!(
+                                "unknown knapsack option '{other}' (known: b, w)"
+                            )))
+                        }
+                    }
+                }
+                let budget = budget.ok_or_else(|| {
+                    Error::Config("knapsack needs b=<budget> (e.g. knapsack:b=30)".into())
+                })?;
+                Ok(ConstraintSpec::Knapsack { budget, k, weights })
+            }
+            "pmatroid" => {
+                let mut groups = None;
+                let mut cap = None;
+                for kv in rest.split(',').filter(|s| !s.is_empty()) {
+                    let (key, val) = kv.split_once('=').ok_or_else(|| {
+                        Error::Config(format!("pmatroid option '{kv}' is not key=value"))
+                    })?;
+                    let parsed = val.parse::<usize>().map_err(|_| {
+                        Error::Config(format!("bad pmatroid option '{key}={val}'"))
+                    })?;
+                    match key {
+                        "groups" => groups = Some(parsed),
+                        "cap" => cap = Some(parsed),
+                        other => {
+                            return Err(Error::Config(format!(
+                                "unknown pmatroid option '{other}' (known: groups, cap)"
+                            )))
+                        }
+                    }
+                }
+                let (groups, cap) = match (groups, cap) {
+                    (Some(g), Some(c)) if g > 0 => (g, c),
+                    _ => {
+                        return Err(Error::Config(
+                            "pmatroid needs groups=<G≥1>,cap=<C> (e.g. pmatroid:groups=5,cap=2)"
+                                .into(),
+                        ))
+                    }
+                };
+                Ok(ConstraintSpec::PartitionMatroid {
+                    k,
+                    caps: vec![cap; groups],
+                    groups: GroupSpec::RoundRobin { groups },
+                })
+            }
+            other => Err(Error::Config(format!(
+                "unknown constraint '{other}' (known: card, knapsack:b=..[,w=..], \
+                 pmatroid:groups=..,cap=..; combine with '+')"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    fn ds(n: usize) -> Dataset {
+        Dataset::new("t", n, 2, (0..2 * n).map(|i| i as f32).collect())
+    }
+
+    fn roundtrip(spec: &ConstraintSpec) -> ConstraintSpec {
+        let text = spec.to_json().to_string();
+        ConstraintSpec::from_json(&Json::parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn json_roundtrips_all_variants() {
+        let specs = vec![
+            ConstraintSpec::Cardinality { k: 7 },
+            ConstraintSpec::Knapsack { budget: 12.5, k: 4, weights: WeightSpec::Unit },
+            ConstraintSpec::Knapsack { budget: 3.0, k: 4, weights: WeightSpec::RowNorm2 },
+            ConstraintSpec::Knapsack {
+                budget: 0.125,
+                k: 9,
+                weights: WeightSpec::Seeded { seed: u64::MAX - 3, lo: 0.5, hi: 2.5 },
+            },
+            ConstraintSpec::Knapsack {
+                budget: 1.0,
+                k: 2,
+                weights: WeightSpec::Explicit(vec![0.1, 0.2, 123.456_789_012_345_67 / 3.0]),
+            },
+            ConstraintSpec::PartitionMatroid {
+                k: 6,
+                caps: vec![2, 2, 1],
+                groups: GroupSpec::RoundRobin { groups: 3 },
+            },
+            ConstraintSpec::PartitionMatroid {
+                k: 6,
+                caps: vec![1, 3],
+                groups: GroupSpec::Explicit(vec![0, 1, 1, 0]),
+            },
+            ConstraintSpec::Intersection(vec![
+                ConstraintSpec::Cardinality { k: 3 },
+                ConstraintSpec::Knapsack { budget: 5.0, k: 3, weights: WeightSpec::Unit },
+            ]),
+        ];
+        for spec in &specs {
+            assert_eq!(&roundtrip(spec), spec, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_property_random_specs() {
+        fn random_weights(rng: &mut Rng) -> WeightSpec {
+            match rng.below(4) {
+                0 => WeightSpec::Unit,
+                1 => WeightSpec::RowNorm2,
+                2 => WeightSpec::Seeded {
+                    seed: rng.next_u64(),
+                    lo: rng.f64(),
+                    hi: 1.0 + rng.f64(),
+                },
+                _ => WeightSpec::Explicit(
+                    (0..rng.range(1, 9)).map(|_| rng.f64() * 10.0).collect(),
+                ),
+            }
+        }
+        fn random_leaf(rng: &mut Rng) -> ConstraintSpec {
+            match rng.below(3) {
+                0 => ConstraintSpec::Cardinality { k: rng.below(100) },
+                1 => ConstraintSpec::Knapsack {
+                    budget: rng.f64() * 50.0,
+                    k: rng.below(20),
+                    weights: random_weights(rng),
+                },
+                _ => {
+                    let groups = rng.range(1, 6);
+                    ConstraintSpec::PartitionMatroid {
+                        k: rng.below(20),
+                        caps: (0..groups).map(|_| rng.below(4)).collect(),
+                        groups: if rng.bool(0.5) {
+                            GroupSpec::RoundRobin { groups }
+                        } else {
+                            GroupSpec::Explicit(
+                                (0..rng.range(1, 12))
+                                    .map(|_| rng.below(groups) as u32)
+                                    .collect(),
+                            )
+                        },
+                    }
+                }
+            }
+        }
+        forall(
+            0x5EC5_77E5,
+            80,
+            |rng| {
+                if rng.bool(0.25) {
+                    ConstraintSpec::Intersection(
+                        (0..rng.range(1, 4)).map(|_| random_leaf(rng)).collect(),
+                    )
+                } else {
+                    random_leaf(rng)
+                }
+            },
+            |spec| {
+                let back = roundtrip(spec);
+                if &back != spec {
+                    return Err(format!("{back:?} != {spec:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected() {
+        for bad in [
+            r#"{"k":3}"#,                                          // missing type
+            r#"{"type":"blob","k":3}"#,                            // unknown type
+            r#"{"type":"card"}"#,                                  // missing k
+            r#"{"type":"knapsack","k":3}"#,                        // missing budget
+            r#"{"type":"knapsack","budget":1e999,"k":3,"weights":{"gen":"unit"}}"#, // inf budget
+            r#"{"type":"knapsack","budget":-2,"k":3,"weights":{"gen":"unit"}}"#,    // negative
+            r#"{"type":"knapsack","budget":5,"k":3,"weights":{"gen":"warp"}}"#,     // bad gen
+            r#"{"type":"knapsack","budget":5,"k":3,"weights":{"gen":"explicit","w":[-1]}}"#,
+            r#"{"type":"knapsack","budget":5,"k":3,"weights":{"gen":"seeded","seed":"1","lo":2,"hi":1}}"#,
+            r#"{"type":"pmatroid","k":3,"groups":{"gen":"round-robin","groups":2}}"#, // no caps
+            r#"{"type":"pmatroid","k":3,"caps":[],"groups":{"gen":"round-robin","groups":0}}"#,
+            r#"{"type":"pmatroid","k":3,"caps":[1],"groups":{"gen":"explicit","of":[1.5]}}"#,
+            r#"{"type":"intersection","parts":[]}"#,               // empty intersection
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(ConstraintSpec::from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn build_materializes_equivalent_constraints() {
+        let d = ds(8);
+        let spec = ConstraintSpec::Knapsack {
+            budget: 10.0,
+            k: 3,
+            weights: WeightSpec::Seeded { seed: 5, lo: 1.0, hi: 2.0 },
+        };
+        let a = spec.build(&d).unwrap();
+        let b = spec.build(&d).unwrap();
+        // the direct constructor and the spec path share one weight
+        // stream — coordinator-built and worker-rebuilt constraints
+        // must make identical feasibility decisions
+        let direct = Knapsack::seeded(8, 5, 1.0, 2.0, 10.0, 3);
+        for item in 0..8u32 {
+            assert_eq!(a.can_add(&[], item, &d), b.can_add(&[], item, &d));
+            assert_eq!(a.can_add(&[], item, &d), direct.can_add(&[], item, &d));
+        }
+        // and the built constraint's own wire spec is the input spec
+        assert_eq!(direct.wire_spec(), Some(spec.clone()));
+        assert_eq!(a.wire_spec(), Some(spec));
+
+        let pm = ConstraintSpec::PartitionMatroid {
+            k: 4,
+            caps: vec![1, 1],
+            groups: GroupSpec::RoundRobin { groups: 2 },
+        };
+        let c = pm.build(&d).unwrap();
+        assert!(c.can_add(&[], 0, &d));
+        assert!(!c.can_add(&[0], 2, &d)); // group 0 full
+        assert_eq!(c.wire_spec(), Some(pm));
+    }
+
+    #[test]
+    fn build_validates_against_dataset() {
+        let d = ds(4);
+        // explicit table of the wrong length
+        let spec = ConstraintSpec::Knapsack {
+            budget: 1.0,
+            k: 2,
+            weights: WeightSpec::Explicit(vec![1.0; 3]),
+        };
+        assert!(spec.build(&d).is_err());
+        // explicit groups of the wrong length
+        let spec = ConstraintSpec::PartitionMatroid {
+            k: 2,
+            caps: vec![1, 1],
+            groups: GroupSpec::Explicit(vec![0, 1]),
+        };
+        assert!(spec.build(&d).is_err());
+        // round-robin group count disagreeing with caps
+        let spec = ConstraintSpec::PartitionMatroid {
+            k: 2,
+            caps: vec![1, 1],
+            groups: GroupSpec::RoundRobin { groups: 3 },
+        };
+        assert!(spec.build(&d).is_err());
+    }
+
+    #[test]
+    fn cli_grammar_parses() {
+        let c = ConstraintSpec::parse("card", 9).unwrap();
+        assert_eq!(c, ConstraintSpec::Cardinality { k: 9 });
+
+        let c = ConstraintSpec::parse("knapsack:b=30", 5).unwrap();
+        assert_eq!(
+            c,
+            ConstraintSpec::Knapsack { budget: 30.0, k: 5, weights: WeightSpec::Unit }
+        );
+
+        let c = ConstraintSpec::parse("knapsack:b=2.5,w=seeded:7:0.5:1.5", 5).unwrap();
+        assert_eq!(
+            c,
+            ConstraintSpec::Knapsack {
+                budget: 2.5,
+                k: 5,
+                weights: WeightSpec::Seeded { seed: 7, lo: 0.5, hi: 1.5 },
+            }
+        );
+
+        let c = ConstraintSpec::parse("pmatroid:groups=4,cap=2", 8).unwrap();
+        assert_eq!(
+            c,
+            ConstraintSpec::PartitionMatroid {
+                k: 8,
+                caps: vec![2; 4],
+                groups: GroupSpec::RoundRobin { groups: 4 },
+            }
+        );
+
+        let c = ConstraintSpec::parse("knapsack:b=30,w=rownorm2+pmatroid:groups=5,cap=2", 10)
+            .unwrap();
+        match c {
+            ConstraintSpec::Intersection(parts) => assert_eq!(parts.len(), 2),
+            other => panic!("expected intersection, got {other:?}"),
+        }
+
+        // '+' inside an f64 exponent is not an intersection separator
+        let c = ConstraintSpec::parse("knapsack:b=1e+3", 5).unwrap();
+        assert_eq!(
+            c,
+            ConstraintSpec::Knapsack { budget: 1000.0, k: 5, weights: WeightSpec::Unit }
+        );
+        let c = ConstraintSpec::parse("knapsack:b=2.5e+1+pmatroid:groups=2,cap=1", 5).unwrap();
+        match c {
+            ConstraintSpec::Intersection(parts) => {
+                assert_eq!(parts.len(), 2);
+                assert_eq!(
+                    parts[0],
+                    ConstraintSpec::Knapsack { budget: 25.0, k: 5, weights: WeightSpec::Unit }
+                );
+            }
+            other => panic!("expected intersection, got {other:?}"),
+        }
+
+        for bad in [
+            "",
+            "warp",
+            "card:k=3",
+            "knapsack",
+            "knapsack:b=zebra",
+            "knapsack:b=5,w=warp",
+            "knapsack:b=5,x=1",
+            "pmatroid:groups=0,cap=2",
+            "pmatroid:groups=2",
+        ] {
+            assert!(ConstraintSpec::parse(bad, 5).is_err(), "accepted '{bad}'");
+        }
+    }
+}

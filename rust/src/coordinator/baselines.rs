@@ -136,10 +136,9 @@ fn two_round(
                 backend.name()
             ))
         })?;
-    let best_partial = sols
-        .into_iter()
-        .max_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
-        .unwrap_or_default();
+    // NaN-safe, first-max selection shared with the tree runner — a
+    // worker-returned NaN value must surface, not panic the coordinator
+    let best_partial = crate::coordinator::tree::round_best_of(&sols);
     let solution = if final_sol.value >= best_partial.value {
         final_sol
     } else {

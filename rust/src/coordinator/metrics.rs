@@ -18,7 +18,14 @@ pub struct RoundMetrics {
     /// Parts re-executed after a machine loss (backend fault tolerance;
     /// always 0 on a healthy backend).
     pub requeued_parts: usize,
+    /// Item-id bytes that crossed the coordinator↔machine boundary this
+    /// round (part ids shipped out, re-shipments after machine loss,
+    /// and solution ids returned). The wire protocol ships ids, never
+    /// feature rows.
     pub bytes_shuffled: u64,
+    /// Feature-row bytes resident across the round's machines — what a
+    /// shared-nothing deployment holds in RAM, *not* wire traffic.
+    pub rows_resident_bytes: u64,
     pub wall_ms: f64,
     pub best_value: f64,
 }
@@ -27,6 +34,7 @@ pub struct RoundMetrics {
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub bytes_shuffled: AtomicU64,
+    pub rows_resident_bytes: AtomicU64,
     pub machines_provisioned: AtomicU64,
     pub parts_requeued: AtomicU64,
     rounds: Mutex<Vec<RoundMetrics>>,
@@ -39,6 +47,8 @@ impl Metrics {
 
     pub fn record_round(&self, r: RoundMetrics) {
         self.bytes_shuffled.fetch_add(r.bytes_shuffled, Ordering::Relaxed);
+        self.rows_resident_bytes
+            .fetch_add(r.rows_resident_bytes, Ordering::Relaxed);
         self.machines_provisioned
             .fetch_add(r.machines as u64, Ordering::Relaxed);
         self.parts_requeued
@@ -56,6 +66,10 @@ impl Metrics {
 
     pub fn total_bytes_shuffled(&self) -> u64 {
         self.bytes_shuffled.load(Ordering::Relaxed)
+    }
+
+    pub fn total_rows_resident_bytes(&self) -> u64 {
+        self.rows_resident_bytes.load(Ordering::Relaxed)
     }
 
     pub fn total_machines(&self) -> u64 {
@@ -82,6 +96,7 @@ mod tests {
             output_items: 20,
             requeued_parts: 1,
             bytes_shuffled: 400,
+            rows_resident_bytes: 6_800,
             wall_ms: 1.0,
             best_value: 5.0,
         });
@@ -93,11 +108,13 @@ mod tests {
             output_items: 5,
             requeued_parts: 2,
             bytes_shuffled: 80,
+            rows_resident_bytes: 1_360,
             wall_ms: 0.5,
             best_value: 6.0,
         });
         assert_eq!(m.num_rounds(), 2);
         assert_eq!(m.total_bytes_shuffled(), 480);
+        assert_eq!(m.total_rows_resident_bytes(), 8_160);
         assert_eq!(m.total_machines(), 5);
         assert_eq!(m.total_requeued(), 3);
         assert_eq!(m.rounds()[1].best_value, 6.0);

@@ -112,8 +112,32 @@ pub struct TreeResult {
     pub total_machines: u64,
     /// Parts re-executed after a machine loss (0 on a healthy backend).
     pub requeued_parts: u64,
+    /// Item-id bytes moved over the coordinator↔machine boundary (the
+    /// wire ships ids, never rows — see [`RoundMetrics::bytes_shuffled`]).
     pub bytes_shuffled: u64,
+    /// Feature-row bytes resident across machines, summed over rounds.
+    pub rows_resident_bytes: u64,
     pub wall_ms: f64,
+}
+
+/// Algorithm 1 line 11 round-best selection: NaN-safe total order
+/// (`f64::total_cmp`) with strictly-greater updates, so ties keep the
+/// *first* maximum (lowest part index) and the choice never depends on
+/// machine completion order — and a NaN objective value surfaces in the
+/// result instead of panicking the coordinator. Shared with the
+/// two-round baselines, which face the same worker-returned values.
+pub(crate) fn round_best_of(sols: &[Solution]) -> Solution {
+    let mut best: Option<&Solution> = None;
+    for s in sols {
+        let better = match best {
+            None => true,
+            Some(b) => s.value.total_cmp(&b.value) == std::cmp::Ordering::Greater,
+        };
+        if better {
+            best = Some(s);
+        }
+    }
+    best.cloned().unwrap_or_default()
 }
 
 /// Algorithm 1 runner.
@@ -169,12 +193,7 @@ impl TreeRunner {
 
             let max_load = parts.iter().map(Vec::len).max().unwrap_or(0);
             let mut next: Vec<u32> = Vec::with_capacity(sols.len() * problem.k);
-            let round_best = sols
-                .iter()
-                .max_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
-                .cloned()
-                .unwrap_or_default();
-            final_round_best = Some(round_best);
+            final_round_best = Some(round_best_of(&sols));
             for sol in &sols {
                 if sol.value > best.value || best.items.is_empty() && !sol.items.is_empty() {
                     best = sol.clone();
@@ -192,7 +211,12 @@ impl TreeRunner {
                 max_machine_load: max_load,
                 output_items: next.len(),
                 requeued_parts: outcome.requeued_parts,
-                bytes_shuffled: (a.len() * problem.dataset.row_bytes()) as u64,
+                // the wire carries item ids only: part ids out to the
+                // machines (plus re-shipments after machine loss) and
+                // solution ids back — never feature rows
+                bytes_shuffled: ((a.len() + outcome.requeued_ids + next.len())
+                    * std::mem::size_of::<u32>()) as u64,
+                rows_resident_bytes: (a.len() * problem.dataset.row_bytes()) as u64,
                 wall_ms: r_start.elapsed().as_secs_f64() * 1e3 + outcome.sim_delay_ms,
                 best_value: best.value,
             });
@@ -222,6 +246,7 @@ impl TreeRunner {
             total_machines: metrics.total_machines(),
             requeued_parts: metrics.total_requeued(),
             bytes_shuffled: metrics.total_bytes_shuffled(),
+            rows_resident_bytes: metrics.total_rows_resident_bytes(),
             // includes injected virtual delay, consistent with per-round wall_ms
             wall_ms: t_start.elapsed().as_secs_f64() * 1e3 + sim_delay_ms,
         })
@@ -340,6 +365,57 @@ mod tests {
             bound,
             res.round_bound
         );
+    }
+
+    #[test]
+    fn round_best_keeps_first_max_on_ties_and_tolerates_nan() {
+        let a = Solution { items: vec![1], value: 2.0 };
+        let b = Solution { items: vec![2], value: 2.0 };
+        let c = Solution { items: vec![3], value: 1.0 };
+        // tied part values: the lowest part index must win, so the
+        // selection is independent of arrival order
+        assert_eq!(round_best_of(&[a.clone(), b.clone(), c]).items, vec![1]);
+        assert_eq!(round_best_of(&[b, a]).items, vec![2]);
+        // a NaN value must not panic (the old partial_cmp().unwrap()
+        // did); under total_cmp it ranks above +inf and surfaces
+        let nan = Solution { items: vec![9], value: f64::NAN };
+        let best = round_best_of(&[Solution { items: vec![1], value: 2.0 }, nan]);
+        assert_eq!(best.items, vec![9]);
+        assert!(best.value.is_nan());
+        assert!(round_best_of(&[]).items.is_empty());
+    }
+
+    #[test]
+    fn tied_part_values_resolve_to_first_part_through_a_full_run() {
+        // modular objective with all-equal weights: every machine's
+        // compression has the identical value, so every round is a tie;
+        // deterministic contiguous parts make part 0 = lowest ids
+        let p = Problem::modular(vec![1.0; 100], 5, 1);
+        let res = TreeBuilder::new(25)
+            .partition_mode(PartitionMode::Contiguous)
+            .build()
+            .run(&p, 2)
+            .unwrap();
+        assert_eq!(res.best.items, vec![0, 1, 2, 3, 4]);
+        assert_eq!(res.final_round_best.value.to_bits(), 5.0f64.to_bits());
+    }
+
+    #[test]
+    fn shuffle_accounting_charges_ids_not_rows() {
+        // modular dataset has d = 1 → row_bytes = 4, same as one u32 id
+        let weights: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Problem::modular(weights, 5, 1);
+        let res = TreeBuilder::new(25).build().run(&p, 2).unwrap();
+        assert_eq!(res.rounds, 2);
+        let r0 = &res.per_round[0];
+        // round 0: 100 ids out to 4 machines, 4·k = 20 solution ids back
+        assert_eq!(r0.bytes_shuffled, (100 + 20) * 4);
+        assert_eq!(r0.rows_resident_bytes, 100 * 4);
+        let r1 = &res.per_round[1];
+        assert_eq!(r1.bytes_shuffled, (20 + 5) * 4);
+        assert_eq!(r1.rows_resident_bytes, 20 * 4);
+        assert_eq!(res.bytes_shuffled, (120 + 25) * 4);
+        assert_eq!(res.rows_resident_bytes, 120 * 4);
     }
 
     #[test]

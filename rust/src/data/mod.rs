@@ -4,26 +4,31 @@
 
 pub mod fmat;
 pub mod registry;
+pub mod spec;
 pub mod synthetic;
 
 use std::sync::Arc;
 
-/// A dense row-major f32 dataset. Items are addressed by `u32` ids
-/// (the coordinator ships ids, not rows, between simulated machines —
-/// shuffle *bytes* are still accounted as full rows, as a real cluster
-/// would move them).
+/// A dense row-major f32 dataset. Items are addressed by `u32` ids —
+/// the coordinator ships ids over the wire, never rows; rows stay
+/// resident on the machines that hold them.
 #[derive(Debug, Clone)]
 pub struct Dataset {
     pub name: String,
     pub n: usize,
     pub d: usize,
     data: Vec<f32>,
+    /// Generation provenance (wire spec v2): stamped by registry loads
+    /// and the synthetic generators, cleared by every mutator, `None`
+    /// for matrices assembled from raw data. Only datasets whose bytes
+    /// this recipe actually reproduces may cross the wire by spec.
+    pub gen: Option<spec::DatasetSpec>,
 }
 
 impl Dataset {
     pub fn new(name: impl Into<String>, n: usize, d: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), n * d, "data length must be n*d");
-        Dataset { name: name.into(), n, d, data }
+        Dataset { name: name.into(), n, d, data, gen: None }
     }
 
     /// Row accessor.
@@ -53,7 +58,11 @@ impl Dataset {
 
     /// Normalize every row to unit L2 norm (paper: TINY and PARKINSONS
     /// are normalized to zero mean, unit norm). Zero rows stay zero.
+    /// Invalidates recorded generation provenance — the recipe no
+    /// longer reproduces these bytes. (The synthetic generators apply
+    /// their preprocessing *before* recording provenance.)
     pub fn normalize_rows(&mut self) {
+        self.gen = None;
         for i in 0..self.n {
             let row = &mut self.data[i * self.d..(i + 1) * self.d];
             let norm = row.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
@@ -66,7 +75,10 @@ impl Dataset {
     }
 
     /// Subtract the per-dimension mean (zero-mean preprocessing).
+    /// Invalidates recorded generation provenance, like
+    /// [`Dataset::normalize_rows`].
     pub fn center_columns(&mut self) {
+        self.gen = None;
         let mut means = vec![0.0f64; self.d];
         for i in 0..self.n {
             for (j, &x) in self.row(i as u32).iter().enumerate() {
@@ -84,7 +96,8 @@ impl Dataset {
         }
     }
 
-    /// Size in bytes of one row (used for shuffle accounting).
+    /// Size in bytes of one row (used for rows-resident accounting —
+    /// the wire itself only ever carries item ids).
     pub fn row_bytes(&self) -> usize {
         self.d * std::mem::size_of::<f32>()
     }

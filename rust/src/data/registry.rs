@@ -30,6 +30,13 @@ impl Spec {
             Spec::Webscope { n } => synthetic::webscope_like(n, seed),
         };
         ds.name = name.to_string();
+        // Registry entries ship by catalog identity, overriding the
+        // inner generator's provenance — so every load path (generated
+        // here or .fmat-cached in `load`) specs identically.
+        ds.gen = Some(crate::data::spec::DatasetSpec::Registry {
+            name: name.to_string(),
+            seed,
+        });
         ds
     }
 
@@ -96,7 +103,13 @@ pub fn load(name: &str, seed: u64) -> Result<DatasetRef> {
     let sp = spec(name)?;
     let path = cache_dir().join(format!("{name}_s{seed}.fmat"));
     if path.exists() {
-        if let Ok(ds) = fmat::load(&path, name) {
+        if let Ok(mut ds) = fmat::load(&path, name) {
+            // the on-disk format carries no provenance; stamp the
+            // catalog identity so cached loads spec like generated ones
+            ds.gen = Some(crate::data::spec::DatasetSpec::Registry {
+                name: name.to_string(),
+                seed,
+            });
             return Ok(Arc::new(ds));
         }
         // fall through to regeneration on a corrupt cache file

@@ -1,0 +1,258 @@
+//! Wire-serializable dataset specifications (wire spec v2).
+//!
+//! Datasets cross the network *by specification*, never by value. Two
+//! flavors exist:
+//!
+//! * **registry** — a named catalog entry ([`crate::data::registry`]);
+//!   the receiving side regenerates it from `(name, seed)`.
+//! * **synthetic** — an ad-hoc instance of one of the named generator
+//!   families in [`crate::data::synthetic`]; the generator records its
+//!   own `(family, n, d, seed)` provenance on the [`Dataset`] when it
+//!   runs, so any dataset built through those entry points can be
+//!   reconstructed remotely even when it is not in the registry.
+//!
+//! Provenance travels on the [`Dataset`] itself (`gen`), stamped by
+//! registry loads and synthetic generators and *cleared by every
+//! mutator* — so only datasets whose bytes a recipe actually reproduces
+//! are wire-representable. Raw matrices ([`Dataset::new`]) carry no
+//! provenance and are rejected by [`DatasetSpec::from_dataset`]: the
+//! coordinator cannot ship rows it cannot describe.
+
+use std::sync::Arc;
+
+use crate::data::{registry, synthetic, Dataset, DatasetRef};
+use crate::error::{Error, Result};
+use crate::util::json::{self, wire_str, wire_u64, wire_usize, Json};
+
+/// A wire-serializable description of a [`Dataset`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DatasetSpec {
+    /// Named registry dataset, regenerated from `(name, seed)`.
+    Registry { name: String, seed: u64 },
+    /// Ad-hoc synthetic instance with its own generation seed.
+    Synthetic { generator: String, n: usize, d: usize, seed: u64 },
+}
+
+impl DatasetSpec {
+    /// Capture a dataset's wire spec: the recorded generation
+    /// provenance, which pins the exact recipe — registry `(name,
+    /// seed)` or synthetic `(family, n, d, seed)` — that produced the
+    /// bytes. Provenance is the *only* path: registry loads stamp it,
+    /// synthetic generators record it, and every mutator clears it, so
+    /// a dataset whose bytes no longer match any recipe (raw matrix,
+    /// post-generation mutation) can never ship a stale spec. Note a
+    /// direct `parkinsons_like(n, s)` call shares its *name* with the
+    /// registry entry `"parkinsons"` but not its size or seed — which
+    /// is why names are never used for spec capture.
+    pub fn from_dataset(ds: &Dataset) -> Result<DatasetSpec> {
+        ds.gen.clone().ok_or_else(|| {
+            Error::invalid(format!(
+                "dataset '{}' has no generation provenance (raw matrix, or \
+                 mutated after generation); workers reconstruct datasets from \
+                 specs and cannot receive ad-hoc matrices",
+                ds.name
+            ))
+        })
+    }
+
+    /// Reconstruct the dataset from its own recorded seed.
+    pub fn load(&self) -> Result<DatasetRef> {
+        match self {
+            DatasetSpec::Registry { name, seed } => registry::load(name, *seed),
+            DatasetSpec::Synthetic { generator, n, d, seed } => {
+                let ds = match generator.as_str() {
+                    "csn" => synthetic::csn_like(*n, *seed),
+                    "parkinsons" => synthetic::parkinsons_like(*n, *seed),
+                    "tiny" => synthetic::tiny_like(*n, *d, *seed),
+                    "webscope" => synthetic::webscope_like(*n, *seed),
+                    other => {
+                        return Err(Error::Protocol(format!(
+                            "unknown synthetic generator '{other}'"
+                        )))
+                    }
+                };
+                if ds.n != *n || ds.d != *d {
+                    return Err(Error::Protocol(format!(
+                        "synthetic spec asked for ({n}, {d}) but generator \
+                         '{generator}' produced ({}, {})",
+                        ds.n, ds.d
+                    )));
+                }
+                Ok(Arc::new(ds))
+            }
+        }
+    }
+
+    /// Memoization key for worker-side dataset caches: everything the
+    /// generated matrix depends on.
+    pub fn cache_key(&self) -> (String, u64) {
+        match self {
+            DatasetSpec::Registry { name, seed } => (format!("registry/{name}"), *seed),
+            DatasetSpec::Synthetic { generator, n, d, seed } => {
+                (format!("synthetic/{generator}/{n}x{d}"), *seed)
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            DatasetSpec::Registry { name, seed } => json::obj(vec![
+                ("kind", json::s("registry")),
+                ("name", json::s(name)),
+                ("seed", Json::Str(seed.to_string())),
+            ]),
+            DatasetSpec::Synthetic { generator, n, d, seed } => json::obj(vec![
+                ("kind", json::s("synthetic")),
+                ("generator", json::s(generator)),
+                ("n", json::num(*n as f64)),
+                ("d", json::num(*d as f64)),
+                ("seed", Json::Str(seed.to_string())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<DatasetSpec> {
+        match wire_str(v, "kind")? {
+            "registry" => Ok(DatasetSpec::Registry {
+                name: wire_str(v, "name")?.to_string(),
+                seed: wire_u64(v, "seed")?,
+            }),
+            "synthetic" => Ok(DatasetSpec::Synthetic {
+                generator: wire_str(v, "generator")?.to_string(),
+                n: wire_usize(v, "n")?,
+                d: wire_usize(v, "d")?,
+                seed: wire_u64(v, "seed")?,
+            }),
+            other => Err(Error::Protocol(format!("unknown dataset spec kind '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(spec: &DatasetSpec) -> DatasetSpec {
+        DatasetSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        for spec in [
+            DatasetSpec::Registry { name: "csn-2k".into(), seed: u64::MAX - 3 },
+            DatasetSpec::Synthetic {
+                generator: "tiny".into(),
+                n: 256,
+                d: 48,
+                seed: u64::MAX - 17,
+            },
+        ] {
+            assert_eq!(roundtrip(&spec), spec);
+        }
+    }
+
+    #[test]
+    fn synthetic_provenance_is_recorded_and_reconstructs_bit_exactly() {
+        let ds = synthetic::csn_like(64, 9);
+        let spec = DatasetSpec::from_dataset(&ds).unwrap();
+        assert_eq!(
+            spec,
+            DatasetSpec::Synthetic { generator: "csn".into(), n: 64, d: 17, seed: 9 }
+        );
+        let again = spec.load().unwrap();
+        assert_eq!(again.raw(), ds.raw());
+    }
+
+    #[test]
+    fn all_generator_families_reconstruct() {
+        let cases: Vec<Dataset> = vec![
+            synthetic::csn_like(40, 1),
+            synthetic::parkinsons_like(30, 2),
+            synthetic::tiny_like(20, 32, 3),
+            synthetic::webscope_like(25, 4),
+        ];
+        for ds in cases {
+            let spec = DatasetSpec::from_dataset(&ds).unwrap();
+            let back = spec.load().unwrap();
+            assert_eq!(back.raw(), ds.raw(), "{spec:?}");
+            assert_eq!((back.n, back.d), (ds.n, ds.d));
+        }
+    }
+
+    #[test]
+    fn registry_loads_are_stamped_with_catalog_identity() {
+        // catalog identity overrides the inner generator provenance, so
+        // registry datasets spec identically whether generated fresh or
+        // loaded from the .fmat cache (which stores no provenance)
+        let ds = registry::spec("csn-2k").unwrap().generate("csn-2k", 7);
+        let spec = DatasetSpec::from_dataset(&ds).unwrap();
+        assert_eq!(spec, DatasetSpec::Registry { name: "csn-2k".into(), seed: 7 });
+        // the spec carries its own seed: reconstruction cannot drift to
+        // some other run's seed
+        assert_eq!(spec.cache_key().1, 7);
+    }
+
+    #[test]
+    fn generator_sharing_a_registry_name_ships_as_synthetic() {
+        // "parkinsons" is both a generator family and a registry entry
+        // (n=5875). A direct parkinsons_like call must ship its own
+        // (n, seed) — resolving by name would either error (size
+        // mismatch) or silently regenerate with the wrong seed.
+        let ds = synthetic::parkinsons_like(30, 2);
+        let spec = DatasetSpec::from_dataset(&ds).unwrap();
+        assert_eq!(
+            spec,
+            DatasetSpec::Synthetic { generator: "parkinsons".into(), n: 30, d: 22, seed: 2 }
+        );
+        assert_eq!(spec.load().unwrap().raw(), ds.raw());
+    }
+
+    #[test]
+    fn mutating_a_dataset_invalidates_its_provenance() {
+        // the recorded recipe no longer reproduces the bytes, so the
+        // dataset must stop being wire-representable instead of
+        // silently shipping the pre-mutation matrix
+        let mut ds = synthetic::csn_like(32, 1);
+        assert!(DatasetSpec::from_dataset(&ds).is_ok());
+        ds.normalize_rows();
+        assert!(ds.gen.is_none());
+        assert!(DatasetSpec::from_dataset(&ds).is_err());
+
+        let mut ds = synthetic::csn_like(32, 1);
+        ds.center_columns();
+        assert!(DatasetSpec::from_dataset(&ds).is_err());
+
+        // registry-generated datasets are covered by the same invariant
+        let mut ds = registry::spec("csn-2k").unwrap().generate("csn-2k", 7);
+        assert!(DatasetSpec::from_dataset(&ds).is_ok());
+        ds.center_columns();
+        assert!(DatasetSpec::from_dataset(&ds).is_err());
+    }
+
+    #[test]
+    fn raw_matrices_are_rejected() {
+        let ds = Dataset::new("adhoc", 4, 2, vec![0.0; 8]);
+        assert!(DatasetSpec::from_dataset(&ds).is_err());
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            r#"{"name":"csn-2k"}"#,
+            r#"{"kind":"warp"}"#,
+            r#"{"kind":"registry","seed":"1"}"#,
+            r#"{"kind":"registry","name":"csn-2k"}"#,
+            r#"{"kind":"synthetic","generator":"csn","n":10}"#,
+            r#"{"kind":"synthetic","generator":"csn","n":10,"d":17,"seed":-1}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(DatasetSpec::from_json(&v).is_err(), "accepted {bad}");
+        }
+        // unknown generator family fails at load, with a protocol error
+        let spec = DatasetSpec::Synthetic { generator: "warp".into(), n: 4, d: 2, seed: 0 };
+        assert!(spec.load().is_err());
+        // dimension mismatch with the family fails at load
+        let spec = DatasetSpec::Synthetic { generator: "csn".into(), n: 8, d: 3, seed: 0 };
+        assert!(spec.load().is_err());
+    }
+}

@@ -8,8 +8,22 @@
 //! euclidean geometry, so mixture-of-Gaussians surrogates with matching
 //! (n, d) exercise exactly the same code paths and trade-off curves.
 
+use crate::data::spec::DatasetSpec;
 use crate::data::Dataset;
 use crate::util::rng::Rng;
+
+/// Record wire provenance on a generated dataset: the named generator
+/// families below are deterministic in `(n, d, seed)`, so this spec is
+/// enough to rebuild the exact matrix on a remote worker.
+fn with_provenance(mut ds: Dataset, generator: &str, seed: u64) -> Dataset {
+    ds.gen = Some(DatasetSpec::Synthetic {
+        generator: generator.to_string(),
+        n: ds.n,
+        d: ds.d,
+        seed,
+    });
+    ds
+}
 
 /// Mixture-of-Gaussians generator: `centers` cluster centres at scale
 /// `spread`, isotropic within-cluster noise `sigma`, optional heavy-tail
@@ -49,7 +63,7 @@ pub fn mixture(name: &str, spec: &MixtureSpec, seed: u64) -> Dataset {
 /// CSN-like: 17-dim accelerometer feature vectors, 20k points; bursts
 /// model rare seismic events among background (walking/idle) clusters.
 pub fn csn_like(n: usize, seed: u64) -> Dataset {
-    mixture(
+    let ds = mixture(
         "csn",
         &MixtureSpec {
             n,
@@ -61,7 +75,8 @@ pub fn csn_like(n: usize, seed: u64) -> Dataset {
             burst_scale: 6.0,
         },
         seed,
-    )
+    );
+    with_provenance(ds, "csn", seed)
 }
 
 /// Parkinsons-like: 22 biomedical voice attributes, 5875 points;
@@ -83,7 +98,7 @@ pub fn parkinsons_like(n: usize, seed: u64) -> Dataset {
     );
     ds.center_columns();
     ds.normalize_rows();
-    ds
+    with_provenance(ds, "parkinsons", seed)
 }
 
 /// Tiny-Images-like: unit-norm vectors in `d` dims (3072 for the 10k
@@ -104,7 +119,7 @@ pub fn tiny_like(n: usize, d: usize, seed: u64) -> Dataset {
         seed,
     );
     ds.normalize_rows();
-    ds
+    with_provenance(ds, "tiny", seed)
 }
 
 /// Webscope-R6A-like: 6-dim user features from the logistic-regression
@@ -135,7 +150,7 @@ pub fn webscope_like(n: usize, seed: u64) -> Dataset {
             data.push(x as f32);
         }
     }
-    Dataset::new("webscope", n, d, data)
+    with_provenance(Dataset::new("webscope", n, d, data), "webscope", seed)
 }
 
 #[cfg(test)]

@@ -86,7 +86,7 @@ impl Backend for LocalBackend {
                 None => return Err(Error::Worker(format!("machine {i} never ran"))),
             }
         }
-        Ok(RoundOutcome { solutions, requeued_parts: 0, sim_delay_ms: 0.0 })
+        Ok(RoundOutcome { solutions, requeued_parts: 0, requeued_ids: 0, sim_delay_ms: 0.0 })
     }
 }
 

@@ -45,6 +45,10 @@ pub struct RoundOutcome {
     /// Parts that were dispatched to a machine that was lost (worker
     /// disconnect, injected fault) and re-executed elsewhere.
     pub requeued_parts: usize,
+    /// Item ids shipped a *second* time because their machine was lost
+    /// mid-flight — shuffle accounting charges these on top of the
+    /// first dispatch of every part.
+    pub requeued_ids: usize,
     /// Virtual wall-clock added by injected stragglers/retries
     /// ([`SimBackend`] only; 0 elsewhere).
     pub sim_delay_ms: f64,
@@ -72,20 +76,15 @@ pub trait Backend: Send + Sync {
 
 /// Which backend a run should use — parsed from config/CLI and built
 /// into a concrete [`Backend`] with [`BackendChoice::build`].
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub enum BackendChoice {
     /// In-process thread pool (the default).
+    #[default]
     Local,
     /// Real worker processes at the given `host:port` addresses.
     Tcp { workers: Vec<String> },
     /// Deterministic fault-injecting simulator.
     Sim { faults: FaultPlan },
-}
-
-impl Default for BackendChoice {
-    fn default() -> Self {
-        BackendChoice::Local
-    }
 }
 
 impl BackendChoice {

@@ -11,23 +11,31 @@
 //! 64-bit words and are therefore encoded as **decimal strings** — an
 //! f64 number would silently drop low bits past 2^53.
 //!
-//! Problems cross the wire *by specification*, not by value: datasets in
-//! the registry are generated deterministically from `(name, seed)`, so a
-//! [`ProblemSpec`] of a few bytes reconstructs the exact same ground set
-//! and evaluation subsample on the worker — the coordinator ships item
-//! ids, never rows (the paper's shuffle model).
+//! Problems cross the wire *by specification*, not by value: datasets —
+//! registry entries or recorded ad-hoc synthetic instances
+//! ([`DatasetSpec`]) — regenerate deterministically from a few bytes of
+//! spec, hereditary constraints rebuild from their construction recipe
+//! ([`ConstraintSpec`]: cardinality, knapsack with weight-generator
+//! specs, partition matroids, intersections), and the coordinator ships
+//! item ids, never rows (the paper's shuffle model).
 
 use std::io::{Read, Write};
 
-use crate::algorithms::{Compressor, LazyGreedy, RandomCompressor, StochasticGreedy, ThresholdGreedy};
-use crate::data::{registry, DatasetRef};
+use crate::algorithms::{
+    Compressor, LazyGreedy, RandomCompressor, StochasticGreedy, ThresholdGreedy,
+};
+use crate::constraints::spec::ConstraintSpec;
+use crate::data::spec::DatasetSpec;
+use crate::data::DatasetRef;
 use crate::error::{Error, Result};
 use crate::objectives::{Objective, Problem};
-use crate::util::json::{self, Json};
+use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 
 /// Protocol version — bumped on any incompatible message change; worker
-/// and coordinator refuse to pair across versions.
-pub const PROTOCOL_VERSION: usize = 1;
+/// and coordinator refuse to pair across versions. v2 added
+/// [`DatasetSpec`]/[`ConstraintSpec`] problem shipping (hereditary
+/// constraints + ad-hoc datasets); v1 peers are rejected at handshake.
+pub const PROTOCOL_VERSION: usize = 2;
 
 /// Hard cap on frame payloads (64 MiB — a part of 10^6 ids is ~8 MB of
 /// JSON; anything bigger than this is a corrupt or hostile frame).
@@ -87,30 +95,31 @@ fn ju64(x: u64) -> Json {
     Json::Str(x.to_string())
 }
 
-fn req_u64(v: &Json, key: &str) -> Result<u64> {
-    let field = v
-        .get(key)
-        .ok_or_else(|| Error::Protocol(format!("missing field '{key}'")))?;
-    json::as_lossless_u64(field)
-        .ok_or_else(|| Error::Protocol(format!("field '{key}' is not a u64")))
+/// Objective values may legitimately go non-finite (degenerate
+/// kernels); JSON has no NaN/±inf literal, so those encode as the
+/// string tokens `"NaN"` / `"inf"` / `"-inf"`. Infinities round-trip
+/// exactly; NaN comes back as the canonical quiet NaN.
+fn jvalue(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Str(x.to_string())
+    }
 }
 
-fn req_f64(v: &Json, key: &str) -> Result<f64> {
-    v.get(key)
-        .and_then(Json::as_f64)
-        .ok_or_else(|| Error::Protocol(format!("missing number field '{key}'")))
-}
-
-fn req_usize(v: &Json, key: &str) -> Result<usize> {
-    v.get(key)
-        .and_then(Json::as_usize)
-        .ok_or_else(|| Error::Protocol(format!("missing integer field '{key}'")))
-}
-
-fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
-    v.get(key)
-        .and_then(Json::as_str)
-        .ok_or_else(|| Error::Protocol(format!("missing string field '{key}'")))
+fn value_from_json(v: &Json, key: &str) -> Result<f64> {
+    match v.get(key) {
+        Some(Json::Str(s)) => s
+            .parse::<f64>()
+            .ok()
+            .filter(|x| !x.is_finite())
+            .ok_or_else(|| {
+                Error::Protocol(format!("field '{key}' is not a non-finite token"))
+            }),
+        // tolerate null (the generic writer's encoding for non-finite)
+        Some(Json::Null) => Ok(f64::NAN),
+        _ => wire_f64(v, key),
+    }
 }
 
 fn items_to_json(items: &[u32]) -> Json {
@@ -136,13 +145,19 @@ fn items_from_json(v: &Json, key: &str) -> Result<Vec<u32>> {
 // problem + compressor specifications
 // ---------------------------------------------------------------------------
 
-/// A wire-serializable description of a [`Problem`]. Restricted to
-/// registry datasets, the two paper objectives, and the plain
-/// cardinality constraint — exactly what distributed runs use; richer
-/// constraint/objective shipping is an open item.
+/// A wire-serializable description of a [`Problem`]: dataset spec +
+/// objective + hereditary-constraint spec. Covers registry and recorded
+/// ad-hoc synthetic datasets, the two paper objectives, and every
+/// constraint with a recorded construction recipe (wire spec v2).
+///
+/// Size note: generator-spec'd constraints keep the spec a few bytes,
+/// but `Explicit` weight/group tables are O(n) and ride along in every
+/// `compress` request (and are bounded by [`MAX_FRAME`]). Prefer the
+/// generator forms for large ground sets; shipping the spec once per
+/// connection is a known follow-up.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ProblemSpec {
-    pub dataset: String,
+    pub dataset: DatasetSpec,
     /// `"exemplar"` or `"logdet"`.
     pub objective: String,
     pub k: usize,
@@ -152,34 +167,23 @@ pub struct ProblemSpec {
     /// LogDet kernel parameters (0 for exemplar).
     pub h2: f64,
     pub sigma2: f64,
+    /// Hereditary constraint, rebuilt on the worker from its recipe.
+    pub constraint: ConstraintSpec,
 }
 
 impl ProblemSpec {
     /// Capture a problem's wire spec. Fails for problems that are not
-    /// wire-representable (non-registry dataset, test objectives,
-    /// hereditary constraints beyond plain cardinality).
+    /// wire-representable (raw ad-hoc matrices, test objectives,
+    /// constraints without a recorded construction recipe).
     pub fn from_problem(p: &Problem) -> Result<ProblemSpec> {
-        let sp = registry::spec(&p.dataset.name).map_err(|_| {
+        let dataset = DatasetSpec::from_dataset(&p.dataset)?;
+        let constraint = p.constraint.wire_spec().ok_or_else(|| {
             Error::invalid(format!(
-                "dataset '{}' is not in the registry; tcp workers reconstruct \
-                 datasets from (name, seed) and cannot receive ad-hoc matrices",
-                p.dataset.name
+                "constraint '{}' is not wire-representable (no construction \
+                 recipe recorded)",
+                p.constraint.name()
             ))
         })?;
-        if sp.n() != p.dataset.n {
-            return Err(Error::invalid(format!(
-                "dataset '{}' has n={} but the registry generates n={}",
-                p.dataset.name,
-                p.dataset.n,
-                sp.n()
-            )));
-        }
-        if p.constraint.name() != format!("card({})", p.k) {
-            return Err(Error::invalid(format!(
-                "constraint '{}' is not wire-representable (only card(k))",
-                p.constraint.name()
-            )));
-        }
         let (objective, eval_m, h2, sigma2) = match &p.objective {
             Objective::Exemplar => ("exemplar", p.eval_ids.len(), 0.0, 0.0),
             Objective::LogDet { h2, sigma2 } => ("logdet", 0, *h2, *sigma2),
@@ -191,13 +195,14 @@ impl ProblemSpec {
             }
         };
         Ok(ProblemSpec {
-            dataset: p.dataset.name.clone(),
+            dataset,
             objective: objective.to_string(),
             k: p.k,
             seed: p.seed,
             eval_m,
             h2,
             sigma2,
+            constraint,
         })
     }
 
@@ -205,48 +210,70 @@ impl ProblemSpec {
     /// dataset generation, eval-subsample draw and constraint all derive
     /// from the spec alone.
     pub fn materialize(&self) -> Result<Problem> {
-        self.materialize_on(registry::load(&self.dataset, self.seed)?)
+        self.materialize_on(self.dataset.load()?)
     }
 
     /// Same, over an already-loaded dataset handle (worker-side caching:
-    /// many specs — different k, eval_m — share one dataset Arc instead
-    /// of each holding its own copy of the matrix).
+    /// many specs — different k, eval_m, constraints — share one dataset
+    /// Arc instead of each holding its own copy of the matrix).
     pub fn materialize_on(&self, ds: DatasetRef) -> Result<Problem> {
-        match self.objective.as_str() {
-            "exemplar" => Ok(Problem::exemplar_with_eval(ds, self.k, self.seed, self.eval_m)),
+        let constraint = self.constraint.build(&ds)?;
+        self.materialize_with(ds, constraint)
+    }
+
+    /// Same, with an externally built constraint (worker-side
+    /// memoization: constraint tables like row-norm weights are O(n·d)
+    /// to build and identical across the parts of a round). The caller
+    /// must have built `constraint` from this spec's `constraint` field
+    /// over `ds`.
+    pub fn materialize_with(
+        &self,
+        ds: DatasetRef,
+        constraint: std::sync::Arc<dyn crate::constraints::Constraint>,
+    ) -> Result<Problem> {
+        let p = match self.objective.as_str() {
+            "exemplar" => Problem::exemplar_with_eval(ds, self.k, self.seed, self.eval_m),
             "logdet" => {
                 let mut p = Problem::logdet(ds, self.k, self.seed);
                 p.objective = Objective::LogDet { h2: self.h2, sigma2: self.sigma2 };
-                Ok(p)
+                p
             }
-            other => Err(Error::Protocol(format!("unknown objective '{other}'"))),
-        }
+            other => return Err(Error::Protocol(format!("unknown objective '{other}'"))),
+        };
+        Ok(p.with_constraint(constraint))
     }
 
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("dataset", json::s(&self.dataset)),
+            ("dataset", self.dataset.to_json()),
             ("objective", json::s(&self.objective)),
             ("k", json::num(self.k as f64)),
             ("seed", ju64(self.seed)),
             ("eval_m", json::num(self.eval_m as f64)),
             ("h2", json::num(self.h2)),
             ("sigma2", json::num(self.sigma2)),
+            ("constraint", self.constraint.to_json()),
         ])
     }
 
     pub fn from_json(v: &Json) -> Result<ProblemSpec> {
+        let dataset_json = v
+            .get("dataset")
+            .ok_or_else(|| Error::Protocol("missing field 'dataset'".into()))?;
+        let constraint_json = v
+            .get("constraint")
+            .ok_or_else(|| Error::Protocol("missing field 'constraint'".into()))?;
         Ok(ProblemSpec {
-            dataset: req_str(v, "dataset")?.to_string(),
-            objective: req_str(v, "objective")?.to_string(),
-            k: req_usize(v, "k")?,
-            seed: req_u64(v, "seed")?,
-            eval_m: req_usize(v, "eval_m")?,
-            h2: req_f64(v, "h2")?,
-            sigma2: req_f64(v, "sigma2")?,
+            dataset: DatasetSpec::from_json(dataset_json)?,
+            objective: wire_str(v, "objective")?.to_string(),
+            k: wire_usize(v, "k")?,
+            seed: wire_u64(v, "seed")?,
+            eval_m: wire_usize(v, "eval_m")?,
+            h2: wire_f64(v, "h2")?,
+            sigma2: wire_f64(v, "sigma2")?,
+            constraint: ConstraintSpec::from_json(constraint_json)?,
         })
     }
-
 }
 
 /// Map a compressor's `name()` to a wire tag, failing for compressors
@@ -324,9 +351,9 @@ impl Request {
     }
 
     pub fn from_json(v: &Json) -> Result<Request> {
-        match req_str(v, "type")? {
+        match wire_str(v, "type")? {
             "hello" => {
-                let version = req_usize(v, "version")?;
+                let version = wire_usize(v, "version")?;
                 if version != PROTOCOL_VERSION {
                     return Err(Error::Protocol(format!(
                         "version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
@@ -340,9 +367,9 @@ impl Request {
                     .ok_or_else(|| Error::Protocol("missing field 'problem'".into()))?;
                 Ok(Request::Compress {
                     problem: ProblemSpec::from_json(problem_json)?,
-                    compressor: req_str(v, "compressor")?.to_string(),
+                    compressor: wire_str(v, "compressor")?.to_string(),
                     part: items_from_json(v, "part")?,
-                    seed: req_u64(v, "seed")?,
+                    seed: wire_u64(v, "seed")?,
                 })
             }
             "shutdown" => Ok(Request::Shutdown),
@@ -375,7 +402,7 @@ impl Response {
             Response::Solution { items, value, evals, wall_ms } => json::obj(vec![
                 ("type", json::s("solution")),
                 ("items", items_to_json(items)),
-                ("value", json::num(*value)),
+                ("value", jvalue(*value)),
                 ("evals", ju64(*evals)),
                 ("wall_ms", json::num(*wall_ms)),
             ]),
@@ -388,23 +415,26 @@ impl Response {
     }
 
     pub fn from_json(v: &Json) -> Result<Response> {
-        match req_str(v, "type")? {
+        match wire_str(v, "type")? {
             "hello" => {
-                let version = req_usize(v, "version")?;
+                let version = wire_usize(v, "version")?;
                 if version != PROTOCOL_VERSION {
                     return Err(Error::Protocol(format!(
                         "version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
                     )));
                 }
-                Ok(Response::Hello { capacity: req_usize(v, "capacity")? })
+                Ok(Response::Hello { capacity: wire_usize(v, "capacity")? })
             }
             "solution" => Ok(Response::Solution {
                 items: items_from_json(v, "items")?,
-                value: req_f64(v, "value")?,
-                evals: req_u64(v, "evals")?,
-                wall_ms: req_f64(v, "wall_ms")?,
+                // non-finite objectives surface (NaN-safe round-best
+                // selection) instead of failing the frame and being
+                // misread as a lost worker
+                value: value_from_json(v, "value")?,
+                evals: wire_u64(v, "evals")?,
+                wall_ms: wire_f64(v, "wall_ms")?,
             }),
-            "error" => Ok(Response::Error { msg: req_str(v, "msg")?.to_string() }),
+            "error" => Ok(Response::Error { msg: wire_str(v, "msg")?.to_string() }),
             "bye" => Ok(Response::Bye),
             other => Err(Error::Protocol(format!("unknown response type '{other}'"))),
         }
@@ -438,17 +468,22 @@ mod tests {
         assert!(err.to_string().contains("MAX_FRAME"), "{err}");
     }
 
-    #[test]
-    fn requests_roundtrip() {
-        let spec = ProblemSpec {
-            dataset: "csn-2k".into(),
+    fn card_spec(dataset: &str, k: usize, seed: u64, eval_m: usize) -> ProblemSpec {
+        ProblemSpec {
+            dataset: DatasetSpec::Registry { name: dataset.into(), seed },
             objective: "exemplar".into(),
-            k: 25,
-            seed: u64::MAX - 12345,
-            eval_m: 2000,
+            k,
+            seed,
+            eval_m,
             h2: 0.0,
             sigma2: 0.0,
-        };
+            constraint: ConstraintSpec::Cardinality { k },
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let spec = card_spec("csn-2k", 25, u64::MAX - 12345, 2000);
         let req = Request::Compress {
             problem: spec,
             compressor: "greedy".into(),
@@ -489,23 +524,53 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_solution_values_survive_the_wire() {
+        // NaN/±inf have no JSON literal; they cross as string tokens
+        // and come back intact instead of producing an unparseable
+        // frame that would be misdiagnosed as a lost worker
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let resp = Response::Solution {
+                items: vec![4, 2],
+                value: v,
+                evals: 10,
+                wall_ms: 0.5,
+            };
+            let text = resp.to_json().to_string();
+            let back = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
+            match back {
+                Response::Solution { items, value, evals, .. } => {
+                    assert_eq!(items, vec![4, 2]);
+                    if v.is_nan() {
+                        assert!(value.is_nan(), "NaN mangled into {value}");
+                    } else {
+                        assert_eq!(value.to_bits(), v.to_bits(), "{v} mangled into {value}");
+                    }
+                    assert_eq!(evals, 10);
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        // a finite value smuggled as a string is still rejected
+        let bad = Json::parse(
+            r#"{"type":"solution","items":[],"value":"1.5","evals":"1","wall_ms":0}"#,
+        )
+        .unwrap();
+        assert!(Response::from_json(&bad).is_err());
+    }
+
+    #[test]
     fn version_mismatch_is_rejected() {
-        let msg = Json::parse(r#"{"type":"hello","version":999}"#).unwrap();
-        assert!(Request::from_json(&msg).is_err());
-        assert!(Response::from_json(&msg).is_err());
+        // future versions and the retired v1 are both refused
+        for bad in [r#"{"type":"hello","version":999}"#, r#"{"type":"hello","version":1}"#] {
+            let msg = Json::parse(bad).unwrap();
+            assert!(Request::from_json(&msg).is_err(), "{bad}");
+            assert!(Response::from_json(&msg).is_err(), "{bad}");
+        }
     }
 
     #[test]
     fn problem_spec_roundtrips_and_materializes() {
-        let spec = ProblemSpec {
-            dataset: "csn-2k".into(),
-            objective: "exemplar".into(),
-            k: 10,
-            seed: 42,
-            eval_m: 2000,
-            h2: 0.0,
-            sigma2: 0.0,
-        };
+        let spec = card_spec("csn-2k", 10, 42, 2000);
         let back = ProblemSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(spec, back);
         let p = spec.materialize().unwrap();
@@ -516,15 +581,92 @@ mod tests {
     }
 
     #[test]
-    fn non_registry_problem_is_rejected() {
-        let ds = std::sync::Arc::new(crate::data::synthetic::csn_like(64, 1));
-        let p = Problem::exemplar(ds, 4, 1); // dataset name "csn", not registered
+    fn adhoc_synthetic_problem_with_constraints_roundtrips() {
+        use crate::constraints::{Intersection, Knapsack, PartitionMatroid};
+        use std::sync::Arc;
+
+        // a non-registry dataset with recorded provenance, under an
+        // intersection of generator-spec'd hereditary constraints
+        let ds = Arc::new(crate::data::synthetic::csn_like(64, 9));
+        let cons = Intersection::new(vec![
+            Arc::new(Knapsack::from_row_norms(&ds, 300.0, 6)),
+            Arc::new(PartitionMatroid::round_robin(64, 4, 2, 6)),
+        ]);
+        let p = Problem::exemplar(ds, 6, 9).with_constraint(Arc::new(cons));
+
+        let spec = ProblemSpec::from_problem(&p).unwrap();
+        let echoed =
+            ProblemSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(spec, echoed);
+
+        let q = echoed.materialize().unwrap();
+        assert_eq!(q.dataset.raw(), p.dataset.raw(), "dataset not rebuilt bit-exactly");
+        assert_eq!(q.constraint.name(), p.constraint.name());
+        assert_eq!(q.eval_ids, p.eval_ids);
+        // the rebuilt constraint makes the same feasibility decisions
+        for item in 0..64u32 {
+            assert_eq!(
+                q.constraint.can_add(&[3, 10], item, &q.dataset),
+                p.constraint.can_add(&[3, 10], item, &p.dataset),
+                "feasibility diverged at item {item}"
+            );
+        }
+    }
+
+    #[test]
+    fn raw_matrix_problem_is_rejected() {
+        // a dataset with no registry entry and no recorded provenance
+        let ds = std::sync::Arc::new(crate::data::Dataset::new("adhoc", 8, 2, vec![0.0; 16]));
+        let p = Problem::exemplar(ds, 4, 1);
         assert!(ProblemSpec::from_problem(&p).is_err());
     }
 
     #[test]
+    fn unrecorded_constraint_is_rejected() {
+        use crate::constraints::Constraint;
+
+        struct Opaque;
+        impl Constraint for Opaque {
+            fn name(&self) -> String {
+                "opaque".into()
+            }
+            fn can_add(&self, _: &[u32], _: u32, _: &crate::data::Dataset) -> bool {
+                true
+            }
+            fn max_cardinality(&self) -> usize {
+                usize::MAX
+            }
+        }
+        let ds = crate::data::registry::load("csn-2k", 1).unwrap();
+        let p = Problem::exemplar(ds, 4, 1).with_constraint(std::sync::Arc::new(Opaque));
+        let err = ProblemSpec::from_problem(&p).unwrap_err();
+        assert!(err.to_string().contains("not wire-representable"), "{err}");
+    }
+
+    #[test]
+    fn malformed_problem_spec_frames_are_rejected() {
+        let good = card_spec("csn-2k", 5, 1, 100).to_json().to_string();
+        assert!(ProblemSpec::from_json(&Json::parse(&good).unwrap()).is_ok());
+        // drop each required field in turn: every mutilation must fail
+        for field in ["dataset", "objective", "k", "seed", "eval_m", "h2", "sigma2", "constraint"]
+        {
+            let v = Json::parse(&good).unwrap();
+            let mut obj = v.as_obj().unwrap().clone();
+            obj.remove(field);
+            let err = ProblemSpec::from_json(&Json::Obj(obj)).unwrap_err();
+            assert!(matches!(err, Error::Protocol(_)), "dropping '{field}': {err}");
+        }
+        // and a v1-shaped frame (string dataset, no constraint) is refused
+        let v1 = r#"{"dataset":"csn-2k","objective":"exemplar","k":5,"seed":"1",
+                     "eval_m":100,"h2":0,"sigma2":0}"#;
+        assert!(ProblemSpec::from_json(&Json::parse(v1).unwrap()).is_err());
+    }
+
+    #[test]
     fn compressors_roundtrip_by_name() {
-        for name in ["greedy", "random", "stochastic-greedy(eps=0.5)", "threshold-greedy(eps=0.25)"] {
+        for name in
+            ["greedy", "random", "stochastic-greedy(eps=0.5)", "threshold-greedy(eps=0.25)"]
+        {
             let c = compressor_from_name(name).unwrap();
             assert_eq!(c.name(), name, "wire name not stable");
             assert_eq!(compressor_wire_name(c.as_ref()).unwrap(), name);

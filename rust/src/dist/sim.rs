@@ -18,13 +18,25 @@
 //! Everything derives from `(fault seed, round seed, machine index)`, so
 //! a scenario replays bit-exactly — the point of a simulator: explore
 //! failure schedules the real TCP runtime can only hit by accident.
+//!
+//! The simulator can additionally run **wire-faithful**
+//! ([`SimBackend::with_wire_spec`]): every round the problem and
+//! compressor are serialized through the v2 wire spec, parsed back and
+//! rebuilt exactly as a TCP worker would, then executed on the
+//! reconstruction — a deterministic, socket-free check that the wire
+//! encoding loses nothing.
 
 use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
 
 use crate::algorithms::{Compressor, Solution};
+use crate::constraints::Constraint;
+use crate::data::DatasetRef;
+use crate::dist::protocol::{compressor_from_name, compressor_wire_name, ProblemSpec};
 use crate::dist::{enforce_capacity, machine_seeds, Backend, RoundOutcome};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Fault-injection script for [`SimBackend`].
@@ -71,15 +83,38 @@ impl FaultPlan {
 pub struct SimBackend {
     capacity: usize,
     faults: FaultPlan,
+    wire_spec: bool,
+    /// Wire-mode memo of the last reconstructed dataset and built
+    /// constraint (the expensive parts of materializing a spec) — the
+    /// sim analogue of the TCP worker's `DatasetCache`, so a
+    /// multi-round run regenerates the matrix and the constraint
+    /// tables once, not once per round.
+    wire_memo: Mutex<Option<WireMemo>>,
 }
+
+/// `((dataset key, constraint spec), dataset, constraint)`.
+type WireMemo = (((String, u64), String), DatasetRef, Arc<dyn Constraint>);
 
 impl SimBackend {
     pub fn new(capacity: usize) -> Self {
-        SimBackend { capacity, faults: FaultPlan::default() }
+        SimBackend {
+            capacity,
+            faults: FaultPlan::default(),
+            wire_spec: false,
+            wire_memo: Mutex::new(None),
+        }
     }
 
     pub fn with_faults(mut self, faults: FaultPlan) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Round-trip problem + compressor through the wire spec each round
+    /// and execute on the reconstruction (TCP-worker semantics, without
+    /// sockets). Rejects problems that are not wire-representable.
+    pub fn with_wire_spec(mut self, on: bool) -> Self {
+        self.wire_spec = on;
         self
     }
 
@@ -107,6 +142,39 @@ impl Backend for SimBackend {
         enforce_capacity(self.capacity, parts)?;
         let seeds = machine_seeds(round_seed, parts.len());
 
+        // Wire-faithful mode: what a TCP worker would actually run. The
+        // reconstruction must survive spec → JSON → spec unchanged.
+        let wire: Option<(Problem, Box<dyn Compressor>)> = if self.wire_spec {
+            let spec = ProblemSpec::from_problem(problem)?;
+            let echoed = ProblemSpec::from_json(&Json::parse(&spec.to_json().to_string())?)?;
+            if echoed != spec {
+                return Err(Error::Protocol(
+                    "problem spec did not survive a JSON round-trip".into(),
+                ));
+            }
+            let comp = compressor_from_name(&compressor_wire_name(compressor)?)?;
+            let key = (echoed.dataset.cache_key(), echoed.constraint.to_json().to_string());
+            let (ds, constraint) = {
+                let mut memo = self.wire_memo.lock().unwrap();
+                match &*memo {
+                    Some((k, ds, c)) if *k == key => (ds.clone(), c.clone()),
+                    _ => {
+                        let ds = echoed.dataset.load()?;
+                        let c = echoed.constraint.build(&ds)?;
+                        *memo = Some((key, ds.clone(), c.clone()));
+                        (ds, c)
+                    }
+                }
+            };
+            Some((echoed.materialize_with(ds, constraint)?, comp))
+        } else {
+            None
+        };
+        let (problem_run, compressor_run): (&Problem, &dyn Compressor) = match &wire {
+            Some((p, c)) => (p, c.as_ref()),
+            None => (problem, compressor),
+        };
+
         // fault stream: independent of the algorithmic seed stream so
         // enabling faults never perturbs the solutions themselves
         let mut frng = Rng::seed_from(
@@ -124,6 +192,7 @@ impl Backend for SimBackend {
 
         let mut solutions: Vec<Solution> = Vec::with_capacity(parts.len());
         let mut requeued = 0usize;
+        let mut requeued_ids = 0usize;
         let mut delay_ms = 0.0f64;
 
         for (i, part) in parts.iter().enumerate() {
@@ -148,15 +217,30 @@ impl Backend for SimBackend {
             if frng.bool(self.faults.straggler_prob) {
                 delay_ms += self.faults.straggler_delay_ms;
             }
-            // every retry replays the machine's full work
+            // every retry replays the machine's full work and re-ships
+            // the part's ids to the replacement machine
             delay_ms += attempts as f64 * self.faults.straggler_delay_ms;
+            requeued_ids += attempts * part.len();
 
             // same part, same positional seed — replacements change cost,
             // never the answer
-            solutions.push(compressor.compress(problem, part, seeds[i])?);
+            solutions.push(compressor_run.compress(problem_run, part, seeds[i])?);
         }
 
-        Ok(RoundOutcome { solutions, requeued_parts: requeued, sim_delay_ms: delay_ms })
+        // fold the reconstruction's oracle work into the shared counter,
+        // as the tcp backend does for remote evals
+        if let Some((p, _)) = &wire {
+            problem
+                .evals
+                .fetch_add(p.eval_count(), std::sync::atomic::Ordering::Relaxed);
+        }
+
+        Ok(RoundOutcome {
+            solutions,
+            requeued_parts: requeued,
+            requeued_ids,
+            sim_delay_ms: delay_ms,
+        })
     }
 }
 
@@ -201,6 +285,9 @@ mod tests {
         let a = healthy.run_round(&p, &LazyGreedy::new(), &parts, 5).unwrap();
         let b = faulty.run_round(&p, &LazyGreedy::new(), &parts, 5).unwrap();
         assert_eq!(b.requeued_parts, 1, "exactly one machine lost per round");
+        // the lost part's ids ship a second time (parts are 50 ids each)
+        assert_eq!(b.requeued_ids, 50);
+        assert_eq!(a.requeued_ids, 0);
         for (x, y) in a.solutions.iter().zip(&b.solutions) {
             assert_eq!(x.items, y.items, "faults must not change answers");
         }
@@ -224,6 +311,43 @@ mod tests {
         assert_eq!(a.requeued_parts, b.requeued_parts);
         assert_eq!(a.sim_delay_ms, b.sim_delay_ms);
         assert!(a.requeued_parts >= 1);
+    }
+
+    #[test]
+    fn wire_spec_mode_reconstructs_problem_and_matches_bit_exactly() {
+        use crate::constraints::Knapsack;
+
+        // registry problem under a generator-spec'd knapsack: the wire
+        // mode rebuilds both from JSON and must match direct execution
+        let ds = crate::data::registry::load("csn-2k", 3).unwrap();
+        let knap = Knapsack::from_row_norms(&ds, 400.0, 8);
+        let p = Problem::exemplar(ds, 8, 3).with_constraint(Arc::new(knap));
+        let parts: Vec<Vec<u32>> =
+            (0..4).map(|i| (i * 50..(i + 1) * 50).collect()).collect();
+
+        let direct = SimBackend::new(64)
+            .run_round(&p, &LazyGreedy::new(), &parts, 9)
+            .unwrap();
+        let wired = SimBackend::new(64)
+            .with_wire_spec(true)
+            .run_round(&p, &LazyGreedy::new(), &parts, 9)
+            .unwrap();
+        assert_eq!(direct.solutions.len(), wired.solutions.len());
+        for (x, y) in direct.solutions.iter().zip(&wired.solutions) {
+            assert_eq!(x.items, y.items, "wire round-trip changed a solution");
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+        }
+        for s in &wired.solutions {
+            assert!(p.constraint.is_feasible(&s.items, &p.dataset));
+        }
+
+        // problems the wire cannot describe are rejected up front
+        let adhoc = Problem::modular(vec![1.0; 20], 3, 0);
+        let one_part = vec![(0..10).collect::<Vec<u32>>()];
+        assert!(SimBackend::new(64)
+            .with_wire_spec(true)
+            .run_round(&adhoc, &LazyGreedy::new(), &one_part, 0)
+            .is_err());
     }
 
     #[test]

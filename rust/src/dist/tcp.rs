@@ -14,7 +14,11 @@
 //! ([`crate::dist::machine_seeds`]), so *which* worker executes a part —
 //! and any requeueing along the way — never changes the result. A
 //! `TcpBackend` run returns bit-identical solutions to [`LocalBackend`]
-//! for the same `(problem, parts, round_seed)`.
+//! for the same `(problem, parts, round_seed)` — including under
+//! hereditary constraints, which cross the wire as construction recipes
+//! ([`crate::constraints::spec::ConstraintSpec`], wire spec v2).
+//!
+//! [`LocalBackend`]: crate::dist::LocalBackend
 
 use std::collections::VecDeque;
 use std::net::TcpStream;
@@ -157,6 +161,7 @@ impl Backend for TcpBackend {
             Mutex::new((0..parts.len()).map(|_| None).collect());
         let completed = AtomicUsize::new(0);
         let requeued = AtomicUsize::new(0);
+        let requeued_ids = AtomicUsize::new(0);
         let fatal: Mutex<Option<Error>> = Mutex::new(None);
         let abort = AtomicBool::new(false);
         let last_transport_err: Mutex<Option<String>> = Mutex::new(None);
@@ -171,6 +176,7 @@ impl Backend for TcpBackend {
                 let results = &results;
                 let completed = &completed;
                 let requeued = &requeued;
+                let requeued_ids = &requeued_ids;
                 let fatal = &fatal;
                 let abort = &abort;
                 let last_transport_err = &last_transport_err;
@@ -246,6 +252,7 @@ impl Backend for TcpBackend {
                                 // transport failure mid-flight: lose the
                                 // machine, requeue the part elsewhere
                                 requeued.fetch_add(1, Ordering::Relaxed);
+                                requeued_ids.fetch_add(parts[i].len(), Ordering::Relaxed);
                                 queue.lock().unwrap().push_back(i);
                                 *last_transport_err.lock().unwrap() = Some(e.to_string());
                                 slot.conn = None;
@@ -290,6 +297,7 @@ impl Backend for TcpBackend {
         Ok(RoundOutcome {
             solutions,
             requeued_parts: requeued.into_inner(),
+            requeued_ids: requeued_ids.into_inner(),
             sim_delay_ms: 0.0,
         })
     }

@@ -15,6 +15,9 @@
 use std::collections::HashMap;
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::constraints::Constraint;
 
 use crate::algorithms::Compressor as _;
 use crate::data::DatasetRef;
@@ -77,30 +80,58 @@ enum ConnectionEnd {
     Shutdown,
 }
 
-/// Loaded datasets memoized per `(name, seed)` — the expensive part of
-/// materializing a spec. Problems themselves are rebuilt per request
-/// (cheap: a subsample draw), so a sweep over k / eval_m shares one
-/// matrix Arc instead of duplicating n·d floats per distinct spec. A
-/// small bound keeps a long-lived worker from pinning matrices for
-/// every dataset it has ever seen.
+/// Loaded datasets memoized per dataset-spec cache key — the expensive
+/// part of materializing a spec. Problems themselves are rebuilt per
+/// request (cheap: a subsample draw + constraint build), so a sweep
+/// over k / eval_m / constraints shares one matrix Arc instead of
+/// duplicating n·d floats per distinct spec. A small bound keeps a
+/// long-lived worker from pinning matrices for every dataset it has
+/// ever seen.
 #[derive(Default)]
 struct DatasetCache {
     datasets: HashMap<(String, u64), DatasetRef>,
+    /// Built constraints memoized per `(dataset key, constraint spec)` —
+    /// constraint tables (row-norm weights, group maps) are O(n·d) to
+    /// materialize and identical for every part of a round.
+    constraints: HashMap<(String, u64, String), Arc<dyn Constraint>>,
 }
 
 impl DatasetCache {
     const MAX_DATASETS: usize = 8;
+    const MAX_CONSTRAINTS: usize = 32;
 
     fn problem(&mut self, spec: &ProblemSpec) -> Result<Problem> {
-        let key = (spec.dataset.clone(), spec.seed);
+        let key = spec.dataset.cache_key();
         if !self.datasets.contains_key(&key) {
             if self.datasets.len() >= Self::MAX_DATASETS {
                 self.datasets.clear();
+                self.constraints.clear();
             }
-            let ds = crate::data::registry::load(&spec.dataset, spec.seed)?;
+            let ds = spec.dataset.load()?;
             self.datasets.insert(key.clone(), ds);
         }
-        spec.materialize_on(self.datasets.get(&key).unwrap().clone())
+        let ds = self.datasets.get(&key).unwrap().clone();
+        // Memoize only generator-spec'd constraints: their JSON key is a
+        // few bytes and their build is the O(n·d) cost worth saving. For
+        // explicit tables the key itself would be O(n) per request and
+        // the build is a validate+clone — cheaper to just rebuild.
+        let constraint = if spec.constraint.has_explicit_table() {
+            spec.constraint.build(&ds)?
+        } else {
+            let ckey = (key.0, key.1, spec.constraint.to_json().to_string());
+            match self.constraints.get(&ckey) {
+                Some(c) => c.clone(),
+                None => {
+                    if self.constraints.len() >= Self::MAX_CONSTRAINTS {
+                        self.constraints.clear();
+                    }
+                    let c = spec.constraint.build(&ds)?;
+                    self.constraints.insert(ckey, c.clone());
+                    c
+                }
+            }
+        };
+        spec.materialize_with(ds, constraint)
     }
 }
 
@@ -172,6 +203,8 @@ fn handle_compress(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::constraints::spec::ConstraintSpec;
+    use crate::data::spec::DatasetSpec;
     use crate::dist::protocol;
     use std::net::TcpStream;
 
@@ -200,13 +233,14 @@ mod tests {
         assert_eq!(hello, Response::Hello { capacity: 64 });
 
         let spec = ProblemSpec {
-            dataset: "csn-2k".into(),
+            dataset: DatasetSpec::Registry { name: "csn-2k".into(), seed: 42 },
             objective: "exemplar".into(),
             k: 5,
             seed: 42,
             eval_m: 2000,
             h2: 0.0,
             sigma2: 0.0,
+            constraint: ConstraintSpec::Cardinality { k: 5 },
         };
         let req = Request::Compress {
             problem: spec.clone(),
@@ -230,6 +264,41 @@ mod tests {
                     &p,
                     &(0..50).collect::<Vec<u32>>(),
                     1,
+                )
+                .unwrap();
+                assert_eq!(items, want.items);
+                assert_eq!(value.to_bits(), want.value.to_bits());
+            }
+            other => panic!("expected solution, got {other:?}"),
+        }
+
+        // a hereditary constraint rebuilt from its wire recipe: the
+        // worker's answer matches local compression bit-exactly
+        let knap_spec = ProblemSpec {
+            constraint: ConstraintSpec::Knapsack {
+                budget: 250.0,
+                k: 5,
+                weights: crate::constraints::spec::WeightSpec::RowNorm2,
+            },
+            ..spec.clone()
+        };
+        let req = Request::Compress {
+            problem: knap_spec.clone(),
+            compressor: "greedy".into(),
+            part: (0..50).collect(),
+            seed: 3,
+        };
+        protocol::send_msg(&mut stream, &req.to_json()).unwrap();
+        let resp = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        match resp {
+            Response::Solution { items, value, .. } => {
+                let p = knap_spec.materialize().unwrap();
+                assert!(p.constraint.is_feasible(&items, &p.dataset));
+                let want = crate::algorithms::Compressor::compress(
+                    &crate::algorithms::LazyGreedy::new(),
+                    &p,
+                    &(0..50).collect::<Vec<u32>>(),
+                    3,
                 )
                 .unwrap();
                 assert_eq!(items, want.items);

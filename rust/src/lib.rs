@@ -34,7 +34,12 @@
 //! [`dist::SimBackend`] replays scripted machine losses and stragglers
 //! for robustness experiments. All backends return bit-identical
 //! solutions for the same seed — the substrate changes cost and
-//! availability, never the answer.
+//! availability, never the answer. Problems cross the wire by
+//! specification (wire spec v2): datasets as registry names or recorded
+//! synthetic-generator calls ([`data::spec::DatasetSpec`]) and
+//! hereditary constraints as construction recipes
+//! ([`constraints::spec::ConstraintSpec`] — cardinality, knapsack,
+//! partition matroid, intersections).
 //!
 //! ## Quick start
 //!
@@ -72,6 +77,7 @@ pub mod prelude {
         ThresholdGreedy,
     };
     pub use crate::analysis::bounds;
+    pub use crate::constraints::spec::ConstraintSpec;
     pub use crate::constraints::{Cardinality, Constraint, Knapsack, PartitionMatroid};
     pub use crate::coordinator::{baselines, TreeBuilder, TreeResult, TreeRunner};
     pub use crate::data::Dataset;

@@ -5,6 +5,8 @@
 //! hss run    [--config cfg.json] [--dataset csn-2k] [--algo tree]
 //!            [--k 50] [--capacity 200] [--seed 42] [--trials 3]
 //!            [--epsilon 0.5] [--no-engine] [--threads 2]
+//!            [--constraint card|knapsack:b=30[,w=unit|rownorm2|seeded:S:LO:HI]
+//!                         |pmatroid:groups=G,cap=C   (combine with '+')]
 //!            [--backend local|tcp|sim] [--workers host:port,host:port…]
 //!            [--sim-loss 1] [--sim-loss-prob 0.0]
 //!            [--sim-straggler-prob 0.0] [--sim-straggler-ms 0] [--sim-seed 0]
@@ -47,7 +49,8 @@ fn real_main() -> Result<()> {
         _ => {
             eprintln!("usage: hss <run|worker|plan|datasets|artifacts> [flags]");
             eprintln!("  run     execute an experiment    [--backend local|tcp|sim]");
-            eprintln!("          [--workers host:port,…] [--sim-loss N] …");
+            eprintln!("          [--workers host:port,…] [--sim-loss N]");
+            eprintln!("          [--constraint card|knapsack:b=..[,w=..]|pmatroid:groups=G,cap=C] …");
             eprintln!("  worker  host one fixed-capacity machine for `run --backend tcp`");
             eprintln!("          [--listen 127.0.0.1:7070] [--capacity 200]");
             eprintln!("  see rust/src/main.rs header for the full flag reference");
@@ -86,6 +89,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.threads = args.usize("threads", cfg.threads)?;
     if args.flag("no-engine") {
         cfg.use_engine = false;
+    }
+    if let Some(c) = args.get("constraint") {
+        cfg.constraint = Some(c.to_string());
     }
     if let Some(b) = args.get("backend") {
         // only switch kinds: `--backend tcp` re-stated on the CLI must not
@@ -133,11 +139,12 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let (problem, engine) = cfg.problem_with_engine()?;
     println!(
-        "dataset={} n={} d={} objective={} k={} capacity={} algo={} backend={} engine={}",
+        "dataset={} n={} d={} objective={} constraint={} k={} capacity={} algo={} backend={} engine={}",
         cfg.dataset,
         problem.n(),
         problem.dataset.d,
         problem.objective.name(),
+        problem.constraint.name(),
         cfg.k,
         cfg.capacity,
         cfg.algo.name(),
@@ -199,12 +206,13 @@ fn cmd_run(args: &Args) -> Result<()> {
                 (
                     res.best.value,
                     format!(
-                        "rounds={}/{} machines={} evals={} shuffleMB={:.1}{requeue}",
+                        "rounds={}/{} machines={} evals={} shuffleKB={:.1} residentMB={:.1}{requeue}",
                         res.rounds,
                         res.round_bound,
                         res.total_machines,
                         res.oracle_evals,
-                        res.bytes_shuffled as f64 / 1e6
+                        res.bytes_shuffled as f64 / 1e3,
+                        res.rows_resident_bytes as f64 / 1e6
                     ),
                 )
             }

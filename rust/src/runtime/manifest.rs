@@ -183,7 +183,15 @@ mod tests {
         Manifest::load(&d).unwrap()
     }
 
-    fn fake_entry(name: &str, kind: &str, m: usize, mu: usize, d: usize, k: usize, pallas: bool) -> String {
+    fn fake_entry(
+        name: &str,
+        kind: &str,
+        m: usize,
+        mu: usize,
+        d: usize,
+        k: usize,
+        pallas: bool,
+    ) -> String {
         format!(
             r#"{{"name":"{name}","kind":"{kind}","file":"{name}.hlo.txt","m":{m},"mu":{mu},
                 "d":{d},"k":{k},"h2":0.25,"use_pallas":{pallas},

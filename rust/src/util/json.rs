@@ -104,12 +104,7 @@ impl Json {
     }
 
     // -- serialization -----------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
-    }
+    // Compact form comes from the `Display` impl below (`to_string()`).
 
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
@@ -122,7 +117,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/±inf literal; emit null (the
+                    // JSON.stringify convention) so the document stays
+                    // parseable — readers that care map null back to NaN
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -166,6 +166,15 @@ impl Json {
     }
 }
 
+impl std::fmt::Display for Json {
+    /// Compact single-line serialization (what goes over the wire).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
+    }
+}
+
 fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
         out.push('\n');
@@ -205,6 +214,42 @@ pub fn as_lossless_u64(v: &Json) -> Option<u64> {
         Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9.0e15 => Some(*x as u64),
         _ => None,
     }
+}
+
+// -- wire-protocol required-field helpers ------------------------------------
+// The dist wire protocol and the spec codecs (constraint/dataset specs)
+// share these; they produce [`Error::Protocol`] because a missing or
+// mistyped field at this layer is a malformed frame, not a bad config.
+
+/// Required string field.
+pub fn wire_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Protocol(format!("missing string field '{key}'")))
+}
+
+/// Required non-negative integer field.
+pub fn wire_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Protocol(format!("missing integer field '{key}'")))
+}
+
+/// Required number field.
+pub fn wire_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Protocol(format!("missing number field '{key}'")))
+}
+
+/// Required lossless u64 field (decimal string above 2^53 — see
+/// [`as_lossless_u64`]).
+pub fn wire_u64(v: &Json, key: &str) -> Result<u64> {
+    let field = v
+        .get(key)
+        .ok_or_else(|| Error::Protocol(format!("missing field '{key}'")))?;
+    as_lossless_u64(field)
+        .ok_or_else(|| Error::Protocol(format!("field '{key}' is not a u64")))
 }
 
 /// Convenience constructors used by report writers.
@@ -522,6 +567,34 @@ mod tests {
         let v = Json::parse(r#"{"a":1}"#).unwrap();
         let e = v.req_str("missing").unwrap_err();
         assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // NaN/inf must never produce an unparseable document
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::Obj([("v".to_string(), Json::Num(x))].into_iter().collect())
+                .to_string();
+            assert_eq!(doc, r#"{"v":null}"#);
+            assert_eq!(Json::parse(&doc).unwrap().get("v"), Some(&Json::Null));
+        }
+    }
+
+    #[test]
+    fn wire_field_helpers_produce_protocol_errors() {
+        let v = Json::parse(r#"{"s":"x","n":3,"f":1.5,"u":"18446744073709551615"}"#).unwrap();
+        assert_eq!(wire_str(&v, "s").unwrap(), "x");
+        assert_eq!(wire_usize(&v, "n").unwrap(), 3);
+        assert_eq!(wire_f64(&v, "f").unwrap(), 1.5);
+        assert_eq!(wire_u64(&v, "u").unwrap(), u64::MAX);
+        for err in [
+            wire_str(&v, "missing").unwrap_err(),
+            wire_usize(&v, "f").unwrap_err(),
+            wire_f64(&v, "s").unwrap_err(),
+            wire_u64(&v, "s").unwrap_err(),
+        ] {
+            assert!(matches!(err, Error::Protocol(_)), "{err}");
+        }
     }
 
     #[test]

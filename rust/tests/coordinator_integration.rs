@@ -174,9 +174,16 @@ fn shuffle_bytes_accounting_is_sane() {
     let row_bytes = ds.row_bytes() as u64;
     let p = Problem::exemplar(ds, 10, 12);
     let res = TreeBuilder::new(100).build().run(&p, 2).unwrap();
-    // round 1 ships all n rows; later rounds ship less
-    let first = res.per_round[0].bytes_shuffled;
-    assert_eq!(first, n as u64 * row_bytes);
-    assert!(res.bytes_shuffled >= first);
-    assert!(res.bytes_shuffled < 2 * first, "later rounds should be small");
+    // the wire ships item ids (4 bytes each), never rows: round 1 moves
+    // all n ids out plus the surviving union back
+    let r0 = &res.per_round[0];
+    assert_eq!(r0.bytes_shuffled, (n + r0.output_items) as u64 * 4);
+    // rows stay resident on machines and are accounted separately
+    assert_eq!(r0.rows_resident_bytes, n as u64 * row_bytes);
+    assert!(res.bytes_shuffled >= r0.bytes_shuffled);
+    assert!(
+        res.bytes_shuffled < 2 * r0.bytes_shuffled,
+        "later rounds should be small"
+    );
+    assert!(res.rows_resident_bytes >= r0.rows_resident_bytes);
 }

@@ -11,6 +11,7 @@ use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 
+use hss::constraints::{Knapsack, PartitionMatroid};
 use hss::coordinator::{baselines, TreeBuilder};
 use hss::data::registry;
 use hss::dist::{Backend, FaultPlan, SimBackend, TcpBackend};
@@ -166,6 +167,80 @@ fn tcp_backend_requeues_after_mid_run_worker_loss() {
     assert!(saw_requeue, "worker loss never surfaced as a requeued part");
 
     tcp.shutdown_workers();
+}
+
+/// Shared harness for the wire-spec-v2 acceptance scenarios: a
+/// TCP-worker run over real processes must be bit-identical to the
+/// local backend under a hereditary constraint, and must *stay*
+/// bit-identical after a scripted mid-run worker kill (the in-flight
+/// part requeues on the survivor).
+fn assert_constrained_tcp_matches_local(problem: &Problem, mu: usize, run_seed: u64) {
+    let local = TreeBuilder::new(mu).build().run(problem, run_seed).unwrap();
+    assert!(!local.best.items.is_empty(), "constraint left no feasible items");
+    assert!(problem.constraint.is_feasible(&local.best.items, &problem.dataset));
+
+    let victim = WorkerProc::spawn(mu);
+    let survivor = WorkerProc::spawn(mu);
+    let tcp = Arc::new(
+        TcpBackend::new(mu, vec![victim.addr.clone(), survivor.addr.clone()]).unwrap(),
+    );
+    let runner = TreeBuilder::new(mu).backend(tcp.clone()).build();
+
+    // healthy pass: the constraint crossed the wire losslessly
+    let remote = runner.run(problem, run_seed).unwrap();
+    assert_eq!(remote.best.items, local.best.items, "item sets differ over tcp");
+    assert_eq!(
+        remote.best.value.to_bits(),
+        local.best.value.to_bits(),
+        "objective value not bit-identical over tcp"
+    );
+    assert_eq!(remote.requeued_parts, 0, "healthy workers must not requeue");
+
+    // scripted kill: connections are warm from the pass above, so the
+    // next dispatch to the dead worker fails mid-flight and the part
+    // requeues on the survivor. (The dead slot is only observed when
+    // the scheduler hands it work, so allow a few attempts — the
+    // answer must match on every one of them.)
+    drop(victim);
+    let mut saw_requeue = false;
+    for _ in 0..5 {
+        let wounded = runner.run(problem, run_seed).unwrap();
+        assert_eq!(
+            wounded.best.items, local.best.items,
+            "mid-run worker kill changed the solution"
+        );
+        assert_eq!(wounded.best.value.to_bits(), local.best.value.to_bits());
+        assert!(problem.constraint.is_feasible(&wounded.best.items, &problem.dataset));
+        if wounded.requeued_parts >= 1 {
+            saw_requeue = true;
+            break;
+        }
+    }
+    assert!(saw_requeue, "mid-run worker kill never surfaced as a requeued part");
+
+    tcp.shutdown_workers();
+}
+
+/// Acceptance: knapsack constraint (generator-spec'd weights) over the
+/// wire, bit-identical to local, surviving a mid-run worker kill.
+#[test]
+fn tcp_matches_local_under_knapsack_with_mid_run_kill() {
+    let (k, mu) = (10usize, 100usize);
+    let ds = registry::load("csn-2k", 5).unwrap();
+    let knap = Knapsack::from_row_norms(&ds, 500.0, k);
+    let problem = Problem::exemplar(ds, k, 5).with_constraint(Arc::new(knap));
+    assert_constrained_tcp_matches_local(&problem, mu, 13);
+}
+
+/// Acceptance: partition-matroid constraint over the wire,
+/// bit-identical to local, surviving a mid-run worker kill.
+#[test]
+fn tcp_matches_local_under_partition_matroid_with_mid_run_kill() {
+    let (k, mu) = (10usize, 100usize);
+    let ds = registry::load("csn-2k", 6).unwrap();
+    let matroid = PartitionMatroid::round_robin(ds.n, 8, 2, k);
+    let problem = Problem::exemplar(ds, k, 6).with_constraint(Arc::new(matroid));
+    assert_constrained_tcp_matches_local(&problem, mu, 17);
 }
 
 /// The two-round RANDGREEDI baseline also runs end-to-end on workers.
