@@ -6,6 +6,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::constraints::spec::ConstraintSpec;
+use crate::coordinator::capacity::CapacityProfile;
 use crate::data::registry;
 use crate::dist::{Backend, BackendChoice, FaultPlan};
 use crate::error::{Error, Result};
@@ -54,7 +55,10 @@ pub struct RunConfig {
     pub dataset: String,
     pub algo: Algo,
     pub k: usize,
-    pub capacity: usize,
+    /// Fleet capacity profile: a scalar µ (`200`), an explicit class
+    /// list (`500,200,200` / `[500, 200, 200]` in JSON), or a repeated
+    /// class (`200x8`) — see [`CapacityProfile::parse`].
+    pub capacity: CapacityProfile,
     pub seed: u64,
     pub trials: usize,
     pub use_engine: bool,
@@ -75,7 +79,7 @@ impl Default for RunConfig {
             dataset: "csn-2k".into(),
             algo: Algo::Tree,
             k: 50,
-            capacity: 200,
+            capacity: CapacityProfile::uniform(200),
             seed: 42,
             trials: 1,
             use_engine: true,
@@ -107,8 +111,8 @@ impl RunConfig {
         if let Some(x) = v.get("k").and_then(Json::as_usize) {
             cfg.k = x;
         }
-        if let Some(x) = v.get("capacity").and_then(Json::as_usize) {
-            cfg.capacity = x;
+        if let Some(x) = v.get("capacity") {
+            cfg.capacity = capacity_from_json(x)?;
         }
         if let Some(x) = v.get("seed") {
             cfg.seed = json_u64(x, "seed")?;
@@ -159,7 +163,7 @@ impl RunConfig {
 
     /// Build the concrete execution backend this config selects.
     pub fn build_backend(&self) -> Result<Arc<dyn Backend>> {
-        self.backend.build(self.capacity, Some(self.threads))
+        self.backend.build(&self.capacity, Some(self.threads))
     }
 
     /// Materialize the problem this config describes (objective follows
@@ -195,6 +199,37 @@ impl RunConfig {
         };
         Ok((p, engine))
     }
+}
+
+/// Parse a capacity profile from a config value: a plain number
+/// (uniform µ), a string in the [`CapacityProfile::parse`] grammar
+/// (`"500,200,200"`, `"200x8"`), or an array of per-class numbers.
+fn capacity_from_json(v: &Json) -> Result<CapacityProfile> {
+    if let Some(mu) = v.as_usize() {
+        if mu == 0 {
+            return Err(Error::Config("capacity must be positive".into()));
+        }
+        return Ok(CapacityProfile::uniform(mu));
+    }
+    if let Some(text) = v.as_str() {
+        return CapacityProfile::parse(text);
+    }
+    if let Some(arr) = v.as_arr() {
+        let caps: Vec<usize> = arr
+            .iter()
+            .map(|x| {
+                x.as_usize().ok_or_else(|| {
+                    Error::Config("'capacity' array entries must be positive integers".into())
+                })
+            })
+            .collect::<Result<_>>()?;
+        return CapacityProfile::new(caps).map_err(|e| Error::Config(e.to_string()));
+    }
+    Err(Error::Config(
+        "'capacity' must be a number, a profile string (e.g. \"500,200,200\" or \
+         \"200x8\"), or an array of numbers"
+            .into(),
+    ))
 }
 
 /// Parse a u64 config field losslessly (decimal string above 2^53 —
@@ -260,10 +295,28 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.k, 20);
-        assert_eq!(cfg.capacity, 100);
+        assert_eq!(cfg.capacity, CapacityProfile::uniform(100));
         assert_eq!(cfg.algo, Algo::StochasticTree { epsilon: 0.2 });
         assert!(!cfg.use_engine);
         assert_eq!(cfg.trials, 3);
+    }
+
+    #[test]
+    fn parses_capacity_profiles_in_all_three_json_forms() {
+        let num = RunConfig::from_json_text(r#"{"capacity":400}"#).unwrap();
+        assert_eq!(num.capacity, CapacityProfile::uniform(400));
+        let text = RunConfig::from_json_text(r#"{"capacity":"500,200x2"}"#).unwrap();
+        assert_eq!(text.capacity.caps(), &[500, 200, 200]);
+        let arr = RunConfig::from_json_text(r#"{"capacity":[200,500,200]}"#).unwrap();
+        assert_eq!(arr.capacity.caps(), &[500, 200, 200], "arrays sort descending");
+        for bad in [
+            r#"{"capacity":0}"#,
+            r#"{"capacity":"zebra"}"#,
+            r#"{"capacity":[100,0]}"#,
+            r#"{"capacity":true}"#,
+        ] {
+            assert!(RunConfig::from_json_text(bad).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

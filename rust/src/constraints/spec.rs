@@ -409,6 +409,28 @@ impl ConstraintSpec {
     /// Parse the CLI / config grammar with budget `k` supplied by the
     /// run: `card`, `knapsack:b=30[,w=unit|rownorm2|seeded:S:LO:HI]`,
     /// `pmatroid:groups=G,cap=C`, joined with `+` for intersections.
+    ///
+    /// ```
+    /// use hss::constraints::spec::{ConstraintSpec, WeightSpec};
+    ///
+    /// // a single constraint; k is supplied by the run
+    /// let card = ConstraintSpec::parse("card", 10).unwrap();
+    /// assert_eq!(card, ConstraintSpec::Cardinality { k: 10 });
+    ///
+    /// // '+' joins constraints into an intersection
+    /// let both = ConstraintSpec::parse("knapsack:b=30,w=rownorm2+pmatroid:groups=5,cap=2", 10);
+    /// assert!(matches!(both, Ok(ConstraintSpec::Intersection(parts)) if parts.len() == 2));
+    ///
+    /// // '+' inside an f64 exponent is NOT a separator
+    /// let big = ConstraintSpec::parse("knapsack:b=1e+3", 10).unwrap();
+    /// assert_eq!(
+    ///     big,
+    ///     ConstraintSpec::Knapsack { budget: 1000.0, k: 10, weights: WeightSpec::Unit }
+    /// );
+    ///
+    /// // unknown constraint names are rejected
+    /// assert!(ConstraintSpec::parse("mystery", 10).is_err());
+    /// ```
     pub fn parse(text: &str, k: usize) -> Result<ConstraintSpec> {
         // A '+' separates constraints only when it starts a new
         // constraint name (next char alphabetic) — so f64 exponents

@@ -93,20 +93,23 @@ fn two_round(
     backend: &dyn Backend,
 ) -> Result<TwoRoundResult> {
     let n = problem.n();
-    let capacity = backend.capacity();
+    let profile = backend.profile();
+    // round 2 runs on ONE machine — the largest class must exceed k
+    let capacity = profile.max_capacity();
     if capacity <= problem.k {
         return Err(Error::invalid(format!(
             "capacity {capacity} must exceed k={}",
             problem.k
         )));
     }
-    let m = n.div_ceil(capacity).max(1);
+    let m = profile.machines_for(n);
+    let caps = profile.round_caps(m);
     let all: Vec<u32> = (0..n as u32).collect();
     let mut rng = Rng::seed_from(seed ^ 0x6EED_1D1D);
     let parts = if random_partition {
-        partitioner::balanced_random_partition(&all, m, &mut rng)
+        partitioner::weighted_balanced_random_partition(&all, &caps, &mut rng)
     } else {
-        partitioner::contiguous_partition(&all, m)
+        partitioner::weighted_contiguous_partition(&all, &caps)
     };
     let sols = backend
         .run_round(problem, compressor, &parts, rng.next_u64())?
@@ -115,7 +118,8 @@ fn two_round(
     let mut union: Vec<u32> = sols.iter().flat_map(|s| s.items.iter().copied()).collect();
     union.sort_unstable();
     let union_size = union.len();
-    // The defining limitation: round 2 runs on ONE machine of capacity µ.
+    // The defining limitation: round 2 runs on ONE machine — at best the
+    // fleet's largest, capacity µ_max.
     if union_size > capacity {
         return Err(Error::CapacityExceeded {
             capacity,

@@ -1,0 +1,337 @@
+//! Per-worker capacity profiles — the heterogeneous generalization of
+//! the paper's single scalar µ.
+//!
+//! The paper assumes every machine holds exactly µ items. Real fleets
+//! are never uniform: provisioned machines differ in memory, and the
+//! framework's guarantees degrade gracefully when each part is sized to
+//! the machine that executes it instead of to the smallest machine in
+//! the fleet. A [`CapacityProfile`] describes the fleet as a **cyclic
+//! pattern of capacity classes**, sorted descending:
+//!
+//! * a uniform profile `[µ]` reproduces the paper exactly — virtual
+//!   machine `j` has capacity µ and a round over `N` items uses
+//!   `⌈N/µ⌉` machines;
+//! * a heterogeneous profile `[µ_0 ≥ µ_1 ≥ …]` assigns virtual machine
+//!   `j` the capacity `µ_{j mod L}` and a round uses the smallest
+//!   prefix of that cyclic sequence whose total capacity covers `N`.
+//!
+//! Because the pattern cycles, the fleet stays *elastic* (the paper's
+//! machine count `m_t` is unbounded; physical workers host several
+//! virtual machines per round, exactly as the TCP backend's
+//! work-stealing dispatch already does) while every part is still sized
+//! to a machine class that exists.
+//!
+//! The profile grammar accepted by `--capacity`, config files and
+//! [`CapacityProfile::parse`]:
+//!
+//! ```text
+//! MU            one capacity class          --capacity 200
+//! MU1,MU2,…     explicit class list         --capacity 500,200,200
+//! MUxCOUNT      repeated class (and mixes)  --capacity 200x8  /  500,200x4
+//! ```
+//!
+//! ```
+//! use hss::coordinator::capacity::CapacityProfile;
+//!
+//! let p = CapacityProfile::parse("500,200x2").unwrap();
+//! assert_eq!(p.caps(), &[500, 200, 200]);
+//! // virtual machines cycle through the classes, largest first
+//! assert_eq!(p.virtual_capacity(0), 500);
+//! assert_eq!(p.virtual_capacity(4), 200);
+//! // smallest prefix of [500, 200, 200, 500, …] covering 1000 items
+//! assert_eq!(p.machines_for(1000), 4);
+//! // a uniform profile is the paper's ⌈N/µ⌉
+//! let u = CapacityProfile::uniform(200);
+//! assert_eq!(u.machines_for(1000), 5);
+//! ```
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// A fleet capacity profile: per-machine-class capacities, sorted
+/// descending, interpreted as a cyclic pattern of virtual machines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CapacityProfile {
+    /// Capacity classes, non-increasing, all positive.
+    caps: Vec<usize>,
+}
+
+impl CapacityProfile {
+    /// The paper's homogeneous fleet: every machine holds µ items.
+    pub fn uniform(capacity: usize) -> CapacityProfile {
+        CapacityProfile { caps: vec![capacity.max(1)] }
+    }
+
+    /// Build a profile from explicit per-class capacities. The list is
+    /// sorted descending (the canonical order: rounds fill the largest
+    /// machines first, and uniform prefixes then have the largest
+    /// possible average capacity). Rejects empty lists and zero
+    /// capacities.
+    pub fn new(mut caps: Vec<usize>) -> Result<CapacityProfile> {
+        if caps.is_empty() {
+            return Err(Error::invalid("capacity profile must name at least one machine"));
+        }
+        if caps.iter().any(|&c| c == 0) {
+            return Err(Error::invalid("capacity profile entries must be positive"));
+        }
+        caps.sort_unstable_by_key(|&c| std::cmp::Reverse(c));
+        Ok(CapacityProfile { caps })
+    }
+
+    /// Parse the `--capacity` grammar: `MU`, `MU1,MU2,…`, with any
+    /// entry optionally repeated as `MUxCOUNT` (e.g. `500,200,200`,
+    /// `200x8`, `500,200x4`).
+    pub fn parse(text: &str) -> Result<CapacityProfile> {
+        let mut caps = Vec::new();
+        for piece in text.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let (cap_text, count) = match piece.split_once('x') {
+                Some((c, reps)) => {
+                    let reps: usize = reps.trim().parse().map_err(|_| {
+                        Error::Config(format!(
+                            "capacity profile: bad repeat count in '{piece}' \
+                             (grammar: MU | MU1,MU2,… | MUxCOUNT)"
+                        ))
+                    })?;
+                    if reps == 0 {
+                        return Err(Error::Config(format!(
+                            "capacity profile: repeat count in '{piece}' must be positive"
+                        )));
+                    }
+                    (c.trim(), reps)
+                }
+                None => (piece, 1),
+            };
+            let cap: usize = cap_text.parse().map_err(|_| {
+                Error::Config(format!(
+                    "capacity profile: bad capacity '{cap_text}' in '{text}' \
+                     (grammar: MU | MU1,MU2,… | MUxCOUNT)"
+                ))
+            })?;
+            caps.extend(std::iter::repeat(cap).take(count));
+        }
+        if caps.is_empty() {
+            return Err(Error::Config(format!("empty capacity profile '{text}'")));
+        }
+        CapacityProfile::new(caps).map_err(|e| Error::Config(e.to_string()))
+    }
+
+    /// The capacity classes, non-increasing.
+    pub fn caps(&self) -> &[usize] {
+        &self.caps
+    }
+
+    /// Number of capacity classes in one cycle of the pattern.
+    pub fn classes(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// True when the profile has a single class (the paper's setting).
+    pub fn is_uniform(&self) -> bool {
+        self.caps.iter().all(|&c| c == self.caps[0])
+    }
+
+    /// Largest machine capacity (the first class).
+    pub fn max_capacity(&self) -> usize {
+        self.caps[0]
+    }
+
+    /// Smallest machine capacity (the last class).
+    pub fn min_capacity(&self) -> usize {
+        *self.caps.last().unwrap()
+    }
+
+    /// Total capacity of one cycle `Σ µ_p`.
+    pub fn cycle_total(&self) -> usize {
+        self.caps.iter().sum()
+    }
+
+    /// Effective per-machine capacity for round-bound purposes: the
+    /// mean class capacity `⌊Σµ_p / L⌋`. Any prefix of the
+    /// descending-sorted cyclic pattern has at least this average, so
+    /// `m_t ≤ ⌈|A_t| / µ_eff⌉` and the Prop 3.1 bound computed at
+    /// µ_eff upper-bounds the heterogeneous round count. For a uniform
+    /// profile this is µ itself.
+    pub fn effective_capacity(&self) -> usize {
+        self.cycle_total() / self.caps.len()
+    }
+
+    /// Capacity of virtual machine `j`: the cyclic pattern `µ_{j mod L}`.
+    pub fn virtual_capacity(&self, j: usize) -> usize {
+        self.caps[j % self.caps.len()]
+    }
+
+    /// Number of virtual machines a round over `n` items uses: the
+    /// smallest `m ≥ 1` whose first `m` virtual capacities sum to at
+    /// least `n`. Reduces to the paper's `⌈n/µ⌉` for uniform profiles.
+    pub fn machines_for(&self, n: usize) -> usize {
+        if n <= self.caps[0] {
+            return 1;
+        }
+        let total = self.cycle_total();
+        let full_cycles = n / total;
+        let mut m = full_cycles * self.caps.len();
+        let mut covered = full_cycles * total;
+        while covered < n {
+            covered += self.caps[m % self.caps.len()];
+            m += 1;
+        }
+        m.max(1)
+    }
+
+    /// The per-machine capacity vector of a round that uses `machines`
+    /// virtual machines: `[µ_{0 mod L}, …, µ_{(machines-1) mod L}]`.
+    pub fn round_caps(&self, machines: usize) -> Vec<usize> {
+        (0..machines).map(|j| self.virtual_capacity(j)).collect()
+    }
+
+    /// Validate the framework's standing assumption per machine class:
+    /// every µ_p must exceed k (a machine must hold one solution's
+    /// worth of items plus a candidate).
+    pub fn require_exceeds_k(&self, k: usize) -> Result<()> {
+        if self.min_capacity() <= k {
+            return Err(Error::invalid(format!(
+                "capacity profile {self}: every machine capacity must exceed k={k} \
+                 (paper assumption µ > k; smallest class is {})",
+                self.min_capacity()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Canonical display form, run-length compressed back into the parse
+/// grammar: `[200]` → `200`, `[500, 200, 200]` → `500,200x2`.
+impl fmt::Display for CapacityProfile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        let mut i = 0;
+        while i < self.caps.len() {
+            let cap = self.caps[i];
+            let mut run = 1;
+            while i + run < self.caps.len() && self.caps[i + run] == cap {
+                run += 1;
+            }
+            if !first {
+                write!(f, ",")?;
+            }
+            first = false;
+            if run == 1 {
+                write!(f, "{cap}")?;
+            } else {
+                write!(f, "{cap}x{run}")?;
+            }
+            i += run;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_grammar_forms() {
+        assert_eq!(CapacityProfile::parse("200").unwrap().caps(), &[200]);
+        assert_eq!(
+            CapacityProfile::parse("500,200,200").unwrap().caps(),
+            &[500, 200, 200]
+        );
+        assert_eq!(CapacityProfile::parse("200x4").unwrap().caps(), &[200; 4]);
+        assert_eq!(
+            CapacityProfile::parse("200x2, 500").unwrap().caps(),
+            &[500, 200, 200],
+            "entries sort descending regardless of input order"
+        );
+        for bad in ["", "zebra", "200x", "200x0", "0", "100,0", "x3"] {
+            assert!(CapacityProfile::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        for text in ["200", "500,200x2", "300x3", "7,5,3"] {
+            let p = CapacityProfile::parse(text).unwrap();
+            assert_eq!(p.to_string(), text);
+            assert_eq!(CapacityProfile::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn uniform_machines_match_paper_ceiling() {
+        let p = CapacityProfile::uniform(200);
+        for n in [0usize, 1, 199, 200, 201, 999, 1000, 1001] {
+            let want = if n == 0 { 1 } else { n.div_ceil(200) };
+            assert_eq!(p.machines_for(n), want, "n={n}");
+        }
+        assert!(p.is_uniform());
+        assert_eq!(p.effective_capacity(), 200);
+    }
+
+    #[test]
+    fn heterogeneous_machines_use_smallest_covering_prefix() {
+        let p = CapacityProfile::parse("500,200,200").unwrap();
+        // prefix sums of the cycle 500,200,200,500,…: 500, 700, 900, 1400
+        assert_eq!(p.machines_for(400), 1);
+        assert_eq!(p.machines_for(500), 1);
+        assert_eq!(p.machines_for(501), 2);
+        assert_eq!(p.machines_for(900), 3);
+        assert_eq!(p.machines_for(901), 4);
+        assert_eq!(p.machines_for(1400), 4);
+        // exactly one full cycle
+        let q = CapacityProfile::parse("100,50").unwrap();
+        assert_eq!(q.machines_for(150), 2);
+        assert_eq!(q.machines_for(151), 3);
+        assert_eq!(q.round_caps(5), vec![100, 50, 100, 50, 100]);
+    }
+
+    #[test]
+    fn machines_for_is_minimal_cover() {
+        use crate::util::check::forall;
+        forall(41, 80, |rng| {
+            let classes = rng.range(1, 6);
+            let caps: Vec<usize> = (0..classes).map(|_| rng.range(1, 300)).collect();
+            let n = rng.range(0, 5000);
+            (caps, n)
+        }, |(caps, n)| {
+            let p = CapacityProfile::new(caps.clone()).map_err(|e| e.to_string())?;
+            let m = p.machines_for(*n);
+            let sum: usize = p.round_caps(m).iter().sum();
+            if sum < *n {
+                return Err(format!("m={m} covers only {sum} < {n}"));
+            }
+            if m > 1 {
+                let prev: usize = p.round_caps(m - 1).iter().sum();
+                if prev >= *n {
+                    return Err(format!("m={m} not minimal: {} machines suffice", m - 1));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn effective_capacity_lower_bounds_every_prefix_average() {
+        let p = CapacityProfile::parse("1000,10,10").unwrap();
+        let eff = p.effective_capacity();
+        assert_eq!(eff, 340);
+        for m in 1..=9 {
+            let caps = p.round_caps(m);
+            let avg = caps.iter().sum::<usize>() / m;
+            assert!(avg >= eff, "prefix {m} average {avg} < effective {eff}");
+        }
+    }
+
+    #[test]
+    fn exceeds_k_checks_the_smallest_class() {
+        let p = CapacityProfile::parse("500,20").unwrap();
+        assert!(p.require_exceeds_k(10).is_ok());
+        assert!(p.require_exceeds_k(20).is_err());
+        assert!(p.require_exceeds_k(400).is_err());
+    }
+}

@@ -16,25 +16,42 @@
 //! these parts on a capacity-µ pool" without choosing a backend.
 
 use crate::algorithms::{Compressor, Solution};
+use crate::coordinator::capacity::CapacityProfile;
 use crate::dist::{Backend, LocalBackend};
 use crate::error::Result;
 use crate::objectives::Problem;
 
 /// Fixed-capacity machine pool (facade over [`LocalBackend`]).
 pub struct Cluster {
+    /// Largest machine capacity (the profile's first class).
     pub capacity: usize,
     pub threads: usize,
+    profile: CapacityProfile,
 }
 
 impl Cluster {
+    /// Uniform pool: every machine holds µ items.
     pub fn new(capacity: usize) -> Self {
-        let local = LocalBackend::new(capacity);
-        Cluster { capacity, threads: local.threads() }
+        Self::with_profile(CapacityProfile::uniform(capacity))
+    }
+
+    /// Heterogeneous pool: machine `j` holds `µ_{j mod L}` items.
+    pub fn with_profile(profile: CapacityProfile) -> Self {
+        Cluster {
+            capacity: profile.max_capacity(),
+            threads: LocalBackend::default_threads(),
+            profile,
+        }
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
+    }
+
+    /// The pool's capacity profile.
+    pub fn profile(&self) -> &CapacityProfile {
+        &self.profile
     }
 
     /// Execute one round: run `compressor` on every part in parallel.
@@ -46,7 +63,8 @@ impl Cluster {
         parts: &[Vec<u32>],
         round_seed: u64,
     ) -> Result<Vec<Solution>> {
-        let backend = LocalBackend::new(self.capacity).with_threads(self.threads);
+        let backend =
+            LocalBackend::with_profile(self.profile.clone()).with_threads(self.threads);
         backend
             .run_round(problem, compressor, parts, round_seed)
             .map(|outcome| outcome.solutions)
@@ -131,6 +149,26 @@ mod tests {
         let items_a: Vec<_> = a.iter().map(|s| s.items.clone()).collect();
         let items_b: Vec<_> = b.iter().map(|s| s.items.clone()).collect();
         assert_eq!(items_a, items_b);
+    }
+
+    #[test]
+    fn heterogeneous_pool_sizes_machines_per_class() {
+        let ds = Arc::new(synthetic::csn_like(90, 5));
+        let p = Problem::exemplar(ds, 3, 5);
+        let cluster = Cluster::with_profile(CapacityProfile::parse("40,25,25").unwrap());
+        assert_eq!(cluster.capacity, 40);
+        // machine classes cycle 40, 25, 25
+        let fits = vec![
+            (0..40).collect::<Vec<u32>>(),
+            (40..65).collect::<Vec<u32>>(),
+            (65..90).collect::<Vec<u32>>(),
+        ];
+        let sols = cluster.run_round(&p, &LazyGreedy::new(), &fits, 1).unwrap();
+        assert_eq!(sols.len(), 3);
+        // a large part on a small class machine is rejected
+        let overloaded = vec![(0..40).collect::<Vec<u32>>(), (40..80).collect::<Vec<u32>>()];
+        let err = cluster.run_round(&p, &LazyGreedy::new(), &overloaded, 1).unwrap_err();
+        assert!(matches!(err, Error::CapacityExceeded { capacity: 25, got: 40, .. }), "{err}");
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! The distributed coordinator — the paper's system contribution.
 //!
+//! * [`capacity`] — per-worker capacity profiles (`µ_p` per machine
+//!   class, cyclic weighted sharding) generalizing the paper's scalar µ;
 //! * [`partitioner`] — the balanced random partition of §3 ("virtual
-//!   free locations");
-//! * [`planner`] — round planning: `m_t = ⌈|A_t|/µ⌉` and the Prop 3.1
-//!   round bound `r = ⌈log_{µ/k}(n/µ)⌉ + 1`;
+//!   free locations") and its capacity-weighted generalization;
+//! * [`planner`] — round planning: `m_t = ⌈|A_t|/µ⌉` (smallest covering
+//!   prefix for heterogeneous fleets) and the Prop 3.1 round bound
+//!   `r = ⌈log_{µ/k}(n/µ)⌉ + 1`;
 //! * [`cluster`] — fixed-capacity machine-pool facade (hard capacity
 //!   enforcement; execution now lives behind [`crate::dist::Backend`],
 //!   so rounds also run on real `hss worker` processes or the fault
@@ -12,14 +15,16 @@
 //! * [`baselines`] — centralized GREEDY, GREEDI, RANDGREEDI, RANDOM.
 
 pub mod baselines;
+pub mod capacity;
 pub mod cluster;
 pub mod metrics;
 pub mod partitioner;
 pub mod planner;
 pub mod tree;
 
+pub use capacity::CapacityProfile;
 pub use cluster::Cluster;
 pub use metrics::{Metrics, RoundMetrics};
-pub use partitioner::balanced_random_partition;
+pub use partitioner::{balanced_random_partition, weighted_balanced_random_partition};
 pub use planner::RoundPlan;
 pub use tree::{TreeBuilder, TreeResult, TreeRunner};

@@ -43,6 +43,60 @@ pub fn balanced_random_partition(
     out
 }
 
+/// Weighted balanced random partition for heterogeneous machine
+/// capacities: part `p` gets `⌈N·µ_p/Σµ⌉` virtual free locations, so
+/// larger machines receive proportionally larger parts while the
+/// assignment stays a uniform random injective map from items to
+/// locations — the paper's §3 process, with the location multiset
+/// weighted by capacity instead of uniform.
+///
+/// Guarantees, for `caps = [µ_0, …, µ_{L-1}]` with `Σµ ≥ N`:
+///
+/// * every part `p` has size ≤ `⌈N·µ_p/Σµ⌉ ≤ µ_p` (no machine is ever
+///   overloaded: `N ≤ Σµ` makes the budget at most the integer µ_p);
+/// * the union of parts is exactly `items` as a multiset;
+/// * deterministic per rng state;
+/// * a **uniform** capacity vector reduces *bit-identically* to
+///   [`balanced_random_partition`]: the budgets collapse to `⌈N/L⌉`,
+///   the location multiset is the same, and the Fisher–Yates draws
+///   consume the identical rng stream.
+pub fn weighted_balanced_random_partition(
+    items: &[u32],
+    caps: &[usize],
+    rng: &mut Rng,
+) -> Vec<Vec<u32>> {
+    assert!(!caps.is_empty(), "capacity vector must be non-empty");
+    let n = items.len();
+    let total: usize = caps.iter().sum();
+    assert!(
+        total >= n,
+        "total capacity {total} cannot hold {n} items"
+    );
+    // per-part location budgets ⌈N·µ_p/Σµ⌉ (0 when n == 0)
+    let budgets: Vec<usize> = caps
+        .iter()
+        .map(|&c| if n == 0 { 0 } else { (n * c).div_ceil(total) })
+        .collect();
+    // multiset of location labels: part p appears budgets[p] times
+    let mut labels: Vec<u32> = budgets
+        .iter()
+        .enumerate()
+        .flat_map(|(p, &b)| std::iter::repeat(p as u32).take(b))
+        .collect();
+    debug_assert!(labels.len() >= n);
+    // partial Fisher–Yates: the first n entries become a uniform random
+    // n-arrangement of the weighted label multiset
+    for i in 0..n {
+        let j = rng.range(i, labels.len());
+        labels.swap(i, j);
+    }
+    let mut out: Vec<Vec<u32>> = budgets.iter().map(|&b| Vec::with_capacity(b)).collect();
+    for (idx, &item) in items.iter().enumerate() {
+        out[labels[idx] as usize].push(item);
+    }
+    out
+}
+
 /// Contiguous (arbitrary, non-random) partition — the GREEDI baseline's
 /// assumption, used by the partitioning ablation.
 pub fn contiguous_partition(items: &[u32], parts: usize) -> Vec<Vec<u32>> {
@@ -54,6 +108,25 @@ pub fn contiguous_partition(items: &[u32], parts: usize) -> Vec<Vec<u32>> {
         let lo = (p * cap).min(n);
         let hi = ((p + 1) * cap).min(n);
         out.push(items[lo..hi].to_vec());
+    }
+    out
+}
+
+/// Weighted contiguous partition: chunk `items` in order, part `p`
+/// taking up to its `⌈N·µ_p/Σµ⌉` budget. The heterogeneous analogue of
+/// [`contiguous_partition`]; reduces to it exactly for uniform `caps`.
+pub fn weighted_contiguous_partition(items: &[u32], caps: &[usize]) -> Vec<Vec<u32>> {
+    assert!(!caps.is_empty(), "capacity vector must be non-empty");
+    let n = items.len();
+    let total: usize = caps.iter().sum();
+    assert!(total >= n, "total capacity {total} cannot hold {n} items");
+    let mut out = Vec::with_capacity(caps.len());
+    let mut lo = 0usize;
+    for &c in caps {
+        let budget = if n == 0 { 0 } else { (n * c).div_ceil(total) };
+        let hi = (lo + budget).min(n);
+        out.push(items[lo..hi].to_vec());
+        lo = hi;
     }
     out
 }
@@ -191,6 +264,103 @@ mod tests {
         for p in &parts {
             assert!(p.len() <= cap, "part {} exceeds ceiling {cap}", p.len());
         }
+    }
+
+    #[test]
+    fn weighted_parts_respect_proportional_budgets() {
+        let mut rng = Rng::seed_from(3);
+        let items: Vec<u32> = (0..240).collect();
+        let caps = [120usize, 60, 60];
+        let parts = weighted_balanced_random_partition(&items, &caps, &mut rng);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(flatten_sorted(&parts), items);
+        // budgets: ⌈240·120/240⌉ = 120, ⌈240·60/240⌉ = 60
+        assert!(parts[0].len() <= 120);
+        assert!(parts[1].len() <= 60);
+        assert!(parts[2].len() <= 60);
+    }
+
+    #[test]
+    fn weighted_uniform_caps_reduce_bit_identically_to_balanced() {
+        // same seed, same stream: the weighted partitioner with a
+        // uniform capacity vector IS balanced_random_partition
+        for &(n, l, seed) in &[(103usize, 7usize, 1u64), (64, 8, 2), (5, 10, 3), (0, 4, 4)] {
+            let items: Vec<u32> = (0..n as u32).collect();
+            let caps = vec![n.div_ceil(l.max(1)).max(1); l];
+            let a = balanced_random_partition(&items, l, &mut Rng::seed_from(seed));
+            let b = weighted_balanced_random_partition(&items, &caps, &mut Rng::seed_from(seed));
+            assert_eq!(a, b, "n={n} l={l} seed={seed}");
+        }
+    }
+
+    #[test]
+    fn weighted_full_property_sweep_budget_multiset_determinism_uniform_reduction() {
+        use crate::util::check::forall;
+        forall(31, 60, |rng| {
+            let l = rng.range(1, 12);
+            // capacities large enough that one round can hold everything
+            let caps: Vec<usize> = (0..l).map(|_| rng.range(1, 120)).collect();
+            let total: usize = caps.iter().sum();
+            let n = rng.range(0, total + 1);
+            let dup_mod = rng.range(1, 64);
+            let seed = rng.next_u64();
+            (caps, n, dup_mod, seed)
+        }, |(caps, n, dup_mod, seed)| {
+            let items: Vec<u32> = (0..*n as u32).map(|i| i % *dup_mod as u32).collect();
+            let total: usize = caps.iter().sum();
+            let run = |s: u64| {
+                weighted_balanced_random_partition(&items, caps, &mut Rng::seed_from(s))
+            };
+            let parts = run(*seed);
+            if parts.len() != caps.len() {
+                return Err(format!("expected {} parts, got {}", caps.len(), parts.len()));
+            }
+            // (1) every part ≤ its budget ⌈N·µ_p/Σµ⌉ ≤ µ_p
+            for (p, (part, &cap)) in parts.iter().zip(caps.iter()).enumerate() {
+                let budget = if *n == 0 { 0 } else { (*n * cap).div_ceil(total) };
+                if part.len() > budget {
+                    return Err(format!("part {p} has {} > budget {budget}", part.len()));
+                }
+                if part.len() > cap {
+                    return Err(format!("part {p} has {} > capacity {cap}", part.len()));
+                }
+            }
+            // (2) union equals the input multiset
+            let mut expected = items.clone();
+            expected.sort_unstable();
+            if flatten_sorted(&parts) != expected {
+                return Err("union is not the input multiset".into());
+            }
+            // (3) seed-determinism
+            if parts != run(*seed) {
+                return Err("same seed produced a different partition".into());
+            }
+            // (4) uniform profile reduces bit-identically
+            let uni = vec![caps[0]; caps.len()];
+            let l = caps.len();
+            let fits: usize = uni.iter().sum();
+            if fits >= *n {
+                let a = weighted_balanced_random_partition(&items, &uni, &mut Rng::seed_from(*seed));
+                let b = balanced_random_partition(&items, l, &mut Rng::seed_from(*seed));
+                if a != b {
+                    return Err("uniform caps diverged from balanced_random_partition".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_contiguous_reduces_to_contiguous_for_uniform_caps() {
+        let items: Vec<u32> = (0..10).collect();
+        let w = weighted_contiguous_partition(&items, &[4, 4, 4]);
+        assert_eq!(w, contiguous_partition(&items, 3));
+        // heterogeneous budgets chunk proportionally: ⌈10·6/12⌉=5, ⌈10·3/12⌉=3
+        let h = weighted_contiguous_partition(&items, &[6, 3, 3]);
+        assert_eq!(h[0], vec![0, 1, 2, 3, 4]);
+        assert_eq!(h[1], vec![5, 6, 7]);
+        assert_eq!(h[2], vec![8, 9]);
+        assert_eq!(flatten_sorted(&h), items);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Round planning: machine counts per round and the Proposition 3.1
-//! bound on the number of rounds.
+//! bound on the number of rounds — for the paper's uniform fleet and
+//! for heterogeneous [`CapacityProfile`]s.
 
+use crate::coordinator::capacity::CapacityProfile;
 use crate::error::{Error, Result};
 
 /// Static plan for a tree-compression run.
@@ -8,11 +10,20 @@ use crate::error::{Error, Result};
 pub struct RoundPlan {
     pub n: usize,
     pub k: usize,
+    /// Effective per-machine capacity governing the round bound: µ for a
+    /// uniform fleet, the mean class capacity `⌊Σµ_p/L⌋` for a
+    /// heterogeneous one (every prefix of the descending-sorted cyclic
+    /// profile averages at least this much — see
+    /// [`CapacityProfile::effective_capacity`]).
     pub capacity: usize,
-    /// Upper bound on rounds (Prop 3.1): `⌈log_{µ/k}(n/µ)⌉ + 1`.
+    /// The fleet this plan was computed against.
+    pub profile: CapacityProfile,
+    /// Upper bound on rounds (Prop 3.1): `⌈log_{µ/k}(n/µ)⌉ + 1` at the
+    /// effective µ.
     pub round_bound: usize,
     /// Predicted machines per round assuming worst-case compression
-    /// (every machine returns exactly k items).
+    /// (every machine returns exactly k items). Heterogeneous fleets
+    /// use the smallest covering prefix of the sorted profile per round.
     pub machines_per_round: Vec<usize>,
     /// Whether the worst-case simulation reaches one machine. False when
     /// µ is so close to k that `⌈m·k/µ⌉ = m` can stall (the Prop 3.1
@@ -23,32 +34,58 @@ pub struct RoundPlan {
 }
 
 impl RoundPlan {
-    /// Plan a run. Requires `µ > k` (otherwise a machine cannot even hold
-    /// one solution's worth of items plus a candidate — the framework's
-    /// standing assumption) and `µ ≥ 1`, `k ≥ 1`.
+    /// Plan a run on the paper's uniform fleet. Requires `µ > k`
+    /// (otherwise a machine cannot even hold one solution's worth of
+    /// items plus a candidate — the framework's standing assumption)
+    /// and `µ ≥ 1`, `k ≥ 1`.
+    ///
+    /// ```
+    /// use hss::coordinator::RoundPlan;
+    ///
+    /// // Paper Figure 1: n = 16k, µ = 2k → machines 8, 4, 2, 1
+    /// let k = 64;
+    /// let plan = RoundPlan::new(16 * k, k, 2 * k).unwrap();
+    /// assert_eq!(plan.machines_per_round, vec![8, 4, 2, 1]);
+    /// assert!(plan.rounds() <= plan.round_bound);
+    ///
+    /// // µ must exceed k
+    /// assert!(RoundPlan::new(100, 10, 10).is_err());
+    /// ```
     pub fn new(n: usize, k: usize, capacity: usize) -> Result<RoundPlan> {
+        Self::for_profile(n, k, &CapacityProfile::uniform(capacity))
+    }
+
+    /// Plan a run on a heterogeneous fleet. Every capacity class must
+    /// exceed k; each round uses the smallest prefix of the cyclic
+    /// descending profile whose total capacity covers the surviving
+    /// items ([`CapacityProfile::machines_for`]), and the round bound
+    /// is Prop 3.1 evaluated at the effective (mean-class) µ, which
+    /// lower-bounds every prefix's average capacity.
+    pub fn for_profile(n: usize, k: usize, profile: &CapacityProfile) -> Result<RoundPlan> {
         if k == 0 {
             return Err(Error::invalid("k must be positive"));
         }
-        if capacity <= k {
+        if profile.min_capacity() <= k {
             return Err(Error::invalid(format!(
-                "capacity µ={capacity} must exceed k={k} (paper assumption µ > k)"
+                "capacity µ={} must exceed k={k} (paper assumption µ > k; \
+                 profile {profile})",
+                profile.min_capacity()
             )));
         }
-        let round_bound = round_bound(n, k, capacity);
+        let round_bound = round_bound_for(n, k, profile);
         let mut machines = Vec::new();
         let mut remaining = n;
         let mut terminates = true;
         loop {
-            let m = remaining.div_ceil(capacity).max(1);
+            let m = profile.machines_for(remaining);
             machines.push(m);
             if m == 1 {
                 break;
             }
             let next = m * k; // worst case: every machine emits k items
             if next >= remaining {
-                // ⌈m·k/µ⌉ stalls at m: the worst case never reaches one
-                // machine (only possible when µ < 2k up to rounding)
+                // the machine count stalls: the worst case never reaches
+                // one machine (only possible when µ is close to k)
                 terminates = false;
                 break;
             }
@@ -57,7 +94,8 @@ impl RoundPlan {
         Ok(RoundPlan {
             n,
             k,
-            capacity,
+            capacity: profile.effective_capacity(),
+            profile: profile.clone(),
             round_bound,
             machines_per_round: machines,
             worst_case_terminates: terminates,
@@ -73,6 +111,16 @@ impl RoundPlan {
     pub fn rounds(&self) -> usize {
         self.machines_per_round.len()
     }
+}
+
+/// Prop 3.1 round bound for a heterogeneous fleet: 1 when the largest
+/// machine holds everything, otherwise [`round_bound`] at the effective
+/// (mean-class) capacity.
+pub fn round_bound_for(n: usize, k: usize, profile: &CapacityProfile) -> usize {
+    if n <= profile.max_capacity() {
+        return 1;
+    }
+    round_bound(n, k, profile.effective_capacity())
 }
 
 /// Proposition 3.1: `r ≤ ⌈log_{µ/k}(n/µ)⌉ + 1` for `n ≥ µ > k`;
@@ -167,6 +215,49 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn heterogeneous_plan_uses_covering_prefixes_of_the_sorted_profile() {
+        // profile 120,60,60 cycling; n=480, k=10.
+        // round 1: prefix sums 120,180,240,360,420,480 → 6 machines
+        // round 2: 60 items → largest machine holds them → 1 machine
+        let profile = CapacityProfile::parse("120,60,60").unwrap();
+        let plan = RoundPlan::for_profile(480, 10, &profile).unwrap();
+        assert_eq!(plan.machines_per_round, vec![6, 1]);
+        assert_eq!(plan.capacity, 80, "effective µ is the mean class capacity");
+        assert!(plan.rounds() <= plan.round_bound + 2);
+        assert!(plan.worst_case_terminates);
+    }
+
+    #[test]
+    fn uniform_profile_plan_matches_scalar_plan_exactly() {
+        for &(n, k, mu) in &[(16 * 64usize, 64usize, 128usize), (10_000, 25, 500), (50, 10, 64)] {
+            let scalar = RoundPlan::new(n, k, mu).unwrap();
+            let profiled =
+                RoundPlan::for_profile(n, k, &CapacityProfile::uniform(mu)).unwrap();
+            assert_eq!(scalar, profiled);
+            assert_eq!(scalar.capacity, mu);
+        }
+    }
+
+    #[test]
+    fn profile_with_a_class_not_above_k_is_rejected() {
+        let p = CapacityProfile::parse("500,200,10").unwrap();
+        let err = RoundPlan::for_profile(1000, 10, &p).unwrap_err();
+        assert!(err.to_string().contains("must exceed k"), "{err}");
+        // the same classes all above k are fine
+        let p = CapacityProfile::parse("500,200,11").unwrap();
+        assert!(RoundPlan::for_profile(1000, 10, &p).is_ok());
+    }
+
+    #[test]
+    fn single_round_when_largest_machine_holds_everything() {
+        // effective µ (mean) is 173 < n, but the largest class covers n
+        let p = CapacityProfile::parse("400,60,60").unwrap();
+        let plan = RoundPlan::for_profile(380, 10, &p).unwrap();
+        assert_eq!(plan.machines_per_round, vec![1]);
+        assert_eq!(plan.round_bound, 1);
     }
 
     #[test]

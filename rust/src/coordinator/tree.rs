@@ -5,13 +5,23 @@
 //! every part to ≤ k items with the β-nice algorithm, and unions the
 //! partial solutions into `A_{t+1}`. Returns the best partial solution
 //! observed anywhere (strictly-greater update, Algorithm 1 line 11).
+//!
+//! Heterogeneous fleets generalize the scalar µ: the backend's
+//! [`CapacityProfile`] sizes each round's parts to the machine classes
+//! that execute them (`m_t` = smallest covering prefix of the sorted
+//! cyclic profile, weighted balanced random partition — see
+//! [`crate::coordinator::capacity`]). The profile is re-queried every
+//! round, so a fleet that shrinks mid-run (scripted via
+//! [`crate::dist::SimBackend`] capacity schedules) is re-planned
+//! against the machines that remain.
 
 use std::sync::Arc;
 
 use crate::algorithms::{Compressor, LazyGreedy, Solution};
+use crate::coordinator::capacity::CapacityProfile;
 use crate::coordinator::metrics::{Metrics, RoundMetrics};
 use crate::coordinator::partitioner;
-use crate::coordinator::planner::{round_bound, RoundPlan};
+use crate::coordinator::planner::RoundPlan;
 use crate::dist::{Backend, LocalBackend};
 use crate::error::Result;
 use crate::objectives::Problem;
@@ -31,7 +41,7 @@ pub enum PartitionMode {
 
 /// Builder for [`TreeRunner`].
 pub struct TreeBuilder {
-    capacity: usize,
+    profile: CapacityProfile,
     compressor: Arc<dyn Compressor>,
     partition_mode: PartitionMode,
     threads: Option<usize>,
@@ -39,16 +49,29 @@ pub struct TreeBuilder {
 }
 
 impl TreeBuilder {
-    /// Start a builder with machine capacity µ and the default
+    /// Start a builder with uniform machine capacity µ and the default
     /// compressor (pure lazy GREEDY).
     pub fn new(capacity: usize) -> Self {
+        Self::for_profile(CapacityProfile::uniform(capacity))
+    }
+
+    /// Start a builder for a heterogeneous fleet: parts are sized to the
+    /// profile's machine classes by the weighted partitioner.
+    pub fn for_profile(profile: CapacityProfile) -> Self {
         TreeBuilder {
-            capacity,
+            profile,
             compressor: Arc::new(LazyGreedy::new()),
             partition_mode: PartitionMode::Balanced,
             threads: None,
             backend: None,
         }
+    }
+
+    /// Override the fleet profile (ignored when an explicit backend is
+    /// installed — the backend's own profile is authoritative).
+    pub fn capacity_profile(mut self, profile: CapacityProfile) -> Self {
+        self.profile = profile;
+        self
     }
 
     pub fn compressor(mut self, c: Arc<dyn Compressor>) -> Self {
@@ -80,7 +103,7 @@ impl TreeBuilder {
         let backend: Arc<dyn Backend> = match self.backend {
             Some(b) => b,
             None => {
-                let mut local = LocalBackend::new(self.capacity);
+                let mut local = LocalBackend::with_profile(self.profile);
                 if let Some(t) = self.threads {
                     local = local.with_threads(t);
                 }
@@ -142,6 +165,10 @@ pub(crate) fn round_best_of(sols: &[Solution]) -> Solution {
 
 /// Algorithm 1 runner.
 pub struct TreeRunner {
+    /// Largest machine capacity of the backend's fleet at build time
+    /// (convenience only — planning and partitioning always use the
+    /// backend's full, per-round [`CapacityProfile`], so on a
+    /// heterogeneous fleet this is µ_max, not every machine's size).
     pub capacity: usize,
     compressor: Arc<dyn Compressor>,
     partition_mode: PartitionMode,
@@ -158,9 +185,9 @@ impl TreeRunner {
     /// Run on an explicit starting set `A_0` (used by tests and by the
     /// baselines that embed a tree run).
     pub fn run_on(&self, problem: &Problem, a0: Vec<u32>, seed: u64) -> Result<TreeResult> {
-        // validates µ > k up front
-        let _plan = RoundPlan::new(a0.len(), problem.k, self.capacity)?;
-        let bound = round_bound(a0.len(), problem.k, self.capacity);
+        // validates µ > k for every machine class up front
+        let plan = RoundPlan::for_profile(a0.len(), problem.k, &self.backend.profile())?;
+        let bound = plan.round_bound;
 
         let metrics = Metrics::new();
         let mut rng = Rng::seed_from(seed ^ 0x7EE5_EED5);
@@ -175,13 +202,20 @@ impl TreeRunner {
         let mut round = 0usize;
 
         loop {
-            let m_t = a.len().div_ceil(self.capacity).max(1);
+            // Re-query the fleet every round: a scripted backend (sim
+            // capacity schedules) may shrink or reshape it mid-run, and
+            // parts must be sized to the machines that will execute them.
+            let profile = self.backend.profile();
+            let m_t = profile.machines_for(a.len());
+            let caps = profile.round_caps(m_t);
             let parts = match self.partition_mode {
                 PartitionMode::Balanced => {
-                    partitioner::balanced_random_partition(&a, m_t, &mut rng)
+                    partitioner::weighted_balanced_random_partition(&a, &caps, &mut rng)
                 }
                 PartitionMode::Iid => partitioner::iid_partition(&a, m_t, &mut rng),
-                PartitionMode::Contiguous => partitioner::contiguous_partition(&a, m_t),
+                PartitionMode::Contiguous => {
+                    partitioner::weighted_contiguous_partition(&a, &caps)
+                }
             };
             let round_seed = rng.next_u64();
             let r_start = std::time::Instant::now();
@@ -453,6 +487,98 @@ mod tests {
         assert!(res.rounds > 1);
         for r in &res.per_round {
             assert!(r.max_machine_load <= 50);
+        }
+    }
+
+    #[test]
+    fn uniform_profile_reproduces_scalar_capacity_bit_exactly() {
+        // `--capacity 200` and `--capacity 200x1` (or an explicit uniform
+        // profile) must be the same run: same partitions, same seeds,
+        // same answer — the PR 1/2 behavior is a special case, not an
+        // approximation.
+        let ds = Arc::new(synthetic::csn_like(500, 13));
+        let p = Problem::exemplar(ds, 6, 13);
+        let scalar = TreeBuilder::new(40).build().run(&p, 11).unwrap();
+        let profiled = TreeBuilder::for_profile(CapacityProfile::uniform(40))
+            .build()
+            .run(&p, 11)
+            .unwrap();
+        assert_eq!(scalar.best.items, profiled.best.items);
+        assert_eq!(scalar.best.value.to_bits(), profiled.best.value.to_bits());
+        assert_eq!(scalar.rounds, profiled.rounds);
+        let a: Vec<usize> = scalar.per_round.iter().map(|r| r.machines).collect();
+        let b: Vec<usize> = profiled.per_round.iter().map(|r| r.machines).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn heterogeneous_profile_runs_and_respects_class_capacities() {
+        let ds = Arc::new(synthetic::csn_like(600, 14));
+        let p = Problem::exemplar(ds, 10, 14);
+        let profile = CapacityProfile::parse("120,60,60").unwrap();
+        let res = TreeBuilder::for_profile(profile.clone()).build().run(&p, 5).unwrap();
+        assert!(!res.best.items.is_empty());
+        assert!(res.best.items.len() <= 10);
+        assert!(p.constraint.is_feasible(&res.best.items, &p.dataset));
+        assert!(res.rounds >= 2, "600 items over a 240-capacity cycle is multi-round");
+        // no machine ever exceeded the largest class; per-class bounds
+        // are enforced inside the backend (CapacityExceeded otherwise)
+        for r in &res.per_round {
+            assert!(r.max_machine_load <= 120, "round {}: load {}", r.round, r.max_machine_load);
+        }
+        // deterministic per seed
+        let again = TreeBuilder::for_profile(profile).build().run(&p, 5).unwrap();
+        assert_eq!(res.best.items, again.best.items);
+        assert_eq!(res.best.value.to_bits(), again.best.value.to_bits());
+    }
+
+    #[test]
+    fn heterogeneous_local_and_sim_backends_agree_bit_exactly() {
+        use crate::dist::SimBackend;
+        let ds = Arc::new(synthetic::csn_like(480, 15));
+        let p = Problem::exemplar(ds, 8, 15);
+        let profile = CapacityProfile::parse("100,60,60").unwrap();
+        let local = TreeBuilder::for_profile(profile.clone()).build().run(&p, 7).unwrap();
+        let sim = TreeBuilder::for_profile(profile.clone())
+            .backend(Arc::new(SimBackend::with_profile(profile)))
+            .build()
+            .run(&p, 7)
+            .unwrap();
+        assert_eq!(local.best.items, sim.best.items);
+        assert_eq!(local.best.value.to_bits(), sim.best.value.to_bits());
+        assert_eq!(local.rounds, sim.rounds);
+    }
+
+    #[test]
+    fn shrinking_capacity_schedule_replans_rounds_against_the_surviving_fleet() {
+        use crate::dist::SimBackend;
+        // The fleet loses its largest machine after round 0: rounds 1+
+        // must be partitioned for the smaller survivors instead of
+        // overloading a machine class that no longer exists.
+        let ds = Arc::new(synthetic::csn_like(400, 16));
+        let p = Problem::exemplar(ds, 8, 16);
+        let big = CapacityProfile::parse("200,60,60").unwrap();
+        let small = CapacityProfile::parse("60,60").unwrap();
+        let backend = Arc::new(
+            SimBackend::with_profile(big.clone())
+                .with_capacity_schedule(vec![big, small]),
+        );
+        let res = TreeBuilder::for_profile(CapacityProfile::uniform(200))
+            .backend(backend)
+            .build()
+            .run(&p, 9)
+            .unwrap();
+        assert!(!res.best.items.is_empty());
+        assert!(p.constraint.is_feasible(&res.best.items, &p.dataset));
+        assert!(res.rounds >= 2);
+        // every post-shrink round fits the 60-capacity survivors
+        for r in res.per_round.iter().skip(1) {
+            assert!(
+                r.max_machine_load <= 60,
+                "round {} overloaded a lost machine class: {}",
+                r.round,
+                r.max_machine_load
+            );
         }
     }
 

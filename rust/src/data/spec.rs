@@ -25,6 +25,29 @@ use crate::error::{Error, Result};
 use crate::util::json::{self, wire_str, wire_u64, wire_usize, Json};
 
 /// A wire-serializable description of a [`Dataset`].
+///
+/// The JSON forms (normative grammar in `docs/PROTOCOL.md`) parse and
+/// serialize losslessly — seeds are decimal strings so full 64-bit
+/// words survive JSON's f64 numbers:
+///
+/// ```
+/// use hss::data::spec::DatasetSpec;
+/// use hss::util::json::Json;
+///
+/// let reg = DatasetSpec::from_json(
+///     &Json::parse(r#"{"kind":"registry","name":"csn-2k","seed":"42"}"#).unwrap(),
+/// ).unwrap();
+/// assert_eq!(reg, DatasetSpec::Registry { name: "csn-2k".into(), seed: 42 });
+///
+/// let synth = DatasetSpec::from_json(
+///     &Json::parse(r#"{"kind":"synthetic","generator":"csn","n":64,"d":17,"seed":"9"}"#)
+///         .unwrap(),
+/// ).unwrap();
+/// // a spec regenerates its dataset deterministically on any process
+/// let ds = synth.load().unwrap();
+/// assert_eq!((ds.n, ds.d), (64, 17));
+/// assert_eq!(DatasetSpec::from_dataset(&ds).unwrap(), synth);
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DatasetSpec {
     /// Named registry dataset, regenerated from `(name, seed)`.

@@ -8,23 +8,35 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::algorithms::{Compressor, Solution};
-use crate::dist::{enforce_capacity, machine_seeds, Backend, RoundOutcome};
+use crate::coordinator::capacity::CapacityProfile;
+use crate::dist::{enforce_profile, machine_seeds, Backend, RoundOutcome};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
 
-/// Thread-pool execution backend with hard per-machine capacity µ.
+/// Thread-pool execution backend with hard per-machine capacities.
 pub struct LocalBackend {
-    capacity: usize,
+    profile: CapacityProfile,
     threads: usize,
 }
 
 impl LocalBackend {
+    /// Uniform fleet: every machine holds µ items (the paper's setting).
     pub fn new(capacity: usize) -> Self {
-        let threads = std::thread::available_parallelism()
+        Self::with_profile(CapacityProfile::uniform(capacity))
+    }
+
+    /// Heterogeneous fleet: virtual machine `j` holds `µ_{j mod L}`.
+    pub fn with_profile(profile: CapacityProfile) -> Self {
+        LocalBackend { profile, threads: Self::default_threads() }
+    }
+
+    /// Default worker-thread count: host parallelism, clamped to the
+    /// single-host testbed's useful range.
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1)
-            .clamp(1, 8);
-        LocalBackend { capacity, threads }
+            .clamp(1, 8)
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
@@ -42,8 +54,8 @@ impl Backend for LocalBackend {
         "local"
     }
 
-    fn capacity(&self) -> usize {
-        self.capacity
+    fn profile(&self) -> CapacityProfile {
+        self.profile.clone()
     }
 
     fn run_round(
@@ -54,7 +66,7 @@ impl Backend for LocalBackend {
         round_seed: u64,
     ) -> Result<RoundOutcome> {
         // capacity enforcement before any work starts
-        enforce_capacity(self.capacity, parts)?;
+        enforce_profile(&self.profile, parts)?;
 
         // per-machine deterministic seeds
         let seeds = machine_seeds(round_seed, parts.len());
@@ -126,5 +138,27 @@ mod tests {
             }
             other => panic!("wrong error: {other}"),
         }
+    }
+
+    #[test]
+    fn heterogeneous_profile_enforces_per_machine_classes() {
+        let ds = Arc::new(synthetic::csn_like(100, 1));
+        let p = Problem::exemplar(ds, 3, 1);
+        let profile = CapacityProfile::parse("40,20").unwrap();
+        let backend = LocalBackend::with_profile(profile.clone());
+        assert_eq!(backend.profile(), profile);
+        assert_eq!(backend.capacity(), 40);
+        // parts sized to the cycle 40, 20, 40 pass…
+        let fits = vec![
+            (0..40).collect::<Vec<u32>>(),
+            (40..60).collect::<Vec<u32>>(),
+            (60..100).collect::<Vec<u32>>(),
+        ];
+        let out = backend.run_round(&p, &LazyGreedy::new(), &fits, 5).unwrap();
+        assert_eq!(out.solutions.len(), 3);
+        // …but a 30-item part on the 20-class machine is rejected
+        let overloaded = vec![(0..40).collect::<Vec<u32>>(), (40..70).collect::<Vec<u32>>()];
+        let err = backend.run_round(&p, &LazyGreedy::new(), &overloaded, 5).unwrap_err();
+        assert!(matches!(err, Error::CapacityExceeded { capacity: 20, got: 30, .. }), "{err}");
     }
 }

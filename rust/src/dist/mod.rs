@@ -14,11 +14,19 @@
 //! |                    | simulator with fault injection| experiments, scenario tests  |
 //!
 //! All backends share the same contract: capacity is enforced *before*
-//! any work starts (fixed capacity µ is the paper's premise), per-machine
+//! any work starts (fixed capacity is the paper's premise), per-machine
 //! seeds are derived positionally from the round seed, and solutions come
 //! back in part order — so for a given `(problem, parts, round_seed)` all
 //! three backends produce **identical** solutions. Fault injection and
 //! wire transport change cost and availability, never the answer.
+//!
+//! Fleets may be **capacity-heterogeneous**: every backend carries a
+//! [`CapacityProfile`] (per-machine-class µ_p, cyclic — see
+//! [`crate::coordinator::capacity`]) instead of a single scalar, and
+//! enforcement checks part `j` against the virtual capacity `µ_{j mod
+//! L}` the planner sized it for. [`TcpBackend`] additionally learns each
+//! worker's real µ from the protocol-v3 handshake and dispatches a part
+//! only to workers that can hold it.
 
 pub mod local;
 pub mod protocol;
@@ -33,6 +41,7 @@ pub use tcp::TcpBackend;
 use std::sync::Arc;
 
 use crate::algorithms::{Compressor, Solution};
+use crate::coordinator::capacity::CapacityProfile;
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
 use crate::util::rng::Rng;
@@ -58,13 +67,26 @@ pub struct RoundOutcome {
 pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Fixed per-machine capacity µ this backend enforces.
-    fn capacity(&self) -> usize;
+    /// The fleet's capacity profile *for the upcoming round*. Uniform
+    /// for the paper's setting; heterogeneous fleets return their
+    /// per-class µ_p vector. The tree runner queries this every round,
+    /// so a backend whose fleet changes mid-run (e.g. a scripted
+    /// [`SimBackend`] capacity schedule) is re-planned against the
+    /// fleet that will actually execute.
+    fn profile(&self) -> CapacityProfile;
 
-    /// Execute one round: run `compressor` on every part (each on a
-    /// machine of capacity µ) and return one solution per part, order
-    /// preserved. Must fail with [`Error::CapacityExceeded`] if any part
-    /// exceeds µ, before any work starts.
+    /// Largest single-machine capacity µ this backend can grant (the
+    /// profile's first class). Kept as the scalar convenience for call
+    /// sites that only need "how big can one part be".
+    fn capacity(&self) -> usize {
+        self.profile().max_capacity()
+    }
+
+    /// Execute one round: run `compressor` on every part (part `j` on a
+    /// machine of the profile's virtual capacity `µ_{j mod L}`) and
+    /// return one solution per part, order preserved. Must fail with
+    /// [`Error::CapacityExceeded`] if any part exceeds its machine's
+    /// capacity, before any work starts.
     fn run_round(
         &self,
         problem: &Problem,
@@ -110,33 +132,39 @@ impl BackendChoice {
         }
     }
 
-    /// Build the concrete backend for machine capacity µ. `threads` is
-    /// the local thread-pool width (ignored by tcp/sim).
-    pub fn build(&self, capacity: usize, threads: Option<usize>) -> Result<Arc<dyn Backend>> {
+    /// Build the concrete backend for the given capacity profile.
+    /// `threads` is the local thread-pool width (ignored by tcp/sim).
+    pub fn build(
+        &self,
+        profile: &CapacityProfile,
+        threads: Option<usize>,
+    ) -> Result<Arc<dyn Backend>> {
         Ok(match self {
             BackendChoice::Local => {
-                let mut b = LocalBackend::new(capacity);
+                let mut b = LocalBackend::with_profile(profile.clone());
                 if let Some(t) = threads {
                     b = b.with_threads(t);
                 }
                 Arc::new(b)
             }
             BackendChoice::Tcp { workers } => {
-                Arc::new(TcpBackend::new(capacity, workers.clone())?)
+                Arc::new(TcpBackend::with_profile(profile.clone(), workers.clone())?)
             }
-            BackendChoice::Sim { faults } => {
-                Arc::new(SimBackend::new(capacity).with_faults(faults.clone()))
-            }
+            BackendChoice::Sim { faults } => Arc::new(
+                SimBackend::with_profile(profile.clone()).with_faults(faults.clone()),
+            ),
         })
     }
 }
 
-/// Shared pre-dispatch check: every part must fit in one machine.
-pub(crate) fn enforce_capacity(capacity: usize, parts: &[Vec<u32>]) -> Result<()> {
+/// Shared pre-dispatch check against a heterogeneous fleet: part `j`
+/// must fit the virtual machine `µ_{j mod L}` it was sized for.
+pub(crate) fn enforce_profile(profile: &CapacityProfile, parts: &[Vec<u32>]) -> Result<()> {
     for (i, p) in parts.iter().enumerate() {
-        if p.len() > capacity {
+        let cap = profile.virtual_capacity(i);
+        if p.len() > cap {
             return Err(Error::CapacityExceeded {
-                capacity,
+                capacity: cap,
                 got: p.len(),
                 ctx: format!(" (machine {i} of {})", parts.len()),
             });
@@ -158,9 +186,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn enforce_capacity_names_the_machine() {
+    fn enforce_profile_names_the_machine() {
         let parts = vec![vec![0, 1], vec![0, 1, 2, 3]];
-        let err = enforce_capacity(3, &parts).unwrap_err();
+        let err = enforce_profile(&CapacityProfile::uniform(3), &parts).unwrap_err();
         match err {
             Error::CapacityExceeded { capacity, got, ctx } => {
                 assert_eq!(capacity, 3);
@@ -169,7 +197,24 @@ mod tests {
             }
             other => panic!("wrong error {other}"),
         }
-        assert!(enforce_capacity(4, &parts).is_ok());
+        assert!(enforce_profile(&CapacityProfile::uniform(4), &parts).is_ok());
+    }
+
+    #[test]
+    fn enforce_profile_checks_each_part_against_its_virtual_machine() {
+        let profile = CapacityProfile::parse("4,2").unwrap();
+        // virtual capacities cycle 4, 2, 4, 2, …
+        let fits = vec![vec![0, 1, 2, 3], vec![0, 1], vec![0], vec![0, 1]];
+        assert!(enforce_profile(&profile, &fits).is_ok());
+        // part 1 sized for the large class overloads the small one
+        let overloaded = vec![vec![0, 1], vec![0, 1, 2]];
+        let err = enforce_profile(&profile, &overloaded).unwrap_err();
+        match err {
+            Error::CapacityExceeded { capacity: 2, got: 3, ctx } => {
+                assert!(ctx.contains("machine 1 of 2"), "ctx: {ctx}");
+            }
+            other => panic!("wrong error {other}"),
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Wire protocol between the coordinator ([`crate::dist::TcpBackend`])
-//! and `hss worker` processes.
+//! and `hss worker` processes. The normative specification lives in
+//! `docs/PROTOCOL.md`; this module is the reference implementation.
 //!
 //! Transport: length-prefixed frames — a 4-byte big-endian payload
 //! length followed by a UTF-8 JSON document (the crate's own
@@ -32,10 +33,16 @@ use crate::objectives::{Objective, Problem};
 use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 
 /// Protocol version — bumped on any incompatible message change; worker
-/// and coordinator refuse to pair across versions. v2 added
+/// and coordinator refuse to pair across versions (see
+/// `docs/PROTOCOL.md` for the normative wire spec). v2 added
 /// [`DatasetSpec`]/[`ConstraintSpec`] problem shipping (hereditary
-/// constraints + ad-hoc datasets); v1 peers are rejected at handshake.
-pub const PROTOCOL_VERSION: usize = 2;
+/// constraints + ad-hoc datasets). v3 made the worker's handshake
+/// capacity advertisement *load-bearing* — coordinators dispatch by
+/// capacity fit over heterogeneous fleets — and added the virtual
+/// machine capacity `cap` to every compress request so workers enforce
+/// the planned per-machine bound, not just their own physical µ. v1/v2
+/// peers are rejected at handshake.
+pub const PROTOCOL_VERSION: usize = 3;
 
 /// Hard cap on frame payloads (64 MiB — a part of 10^6 ids is ~8 MB of
 /// JSON; anything bigger than this is a corrupt or hostile frame).
@@ -326,6 +333,12 @@ pub enum Request {
         problem: ProblemSpec,
         compressor: String,
         part: Vec<u32>,
+        /// Capacity of the *virtual machine* this part was sized for
+        /// (`µ_{j mod L}` of the round's capacity profile). The worker
+        /// enforces `part.len() ≤ min(cap, own µ)` — the second bound
+        /// catches a coordinator dispatching to too-small workers, the
+        /// first catches a partitioner overfilling a machine class.
+        cap: usize,
         seed: u64,
     },
     /// Orderly worker shutdown.
@@ -339,11 +352,12 @@ impl Request {
                 ("type", json::s("hello")),
                 ("version", json::num(PROTOCOL_VERSION as f64)),
             ]),
-            Request::Compress { problem, compressor, part, seed } => json::obj(vec![
+            Request::Compress { problem, compressor, part, cap, seed } => json::obj(vec![
                 ("type", json::s("compress")),
                 ("problem", problem.to_json()),
                 ("compressor", json::s(compressor)),
                 ("part", items_to_json(part)),
+                ("cap", json::num(*cap as f64)),
                 ("seed", ju64(*seed)),
             ]),
             Request::Shutdown => json::obj(vec![("type", json::s("shutdown"))]),
@@ -369,6 +383,7 @@ impl Request {
                     problem: ProblemSpec::from_json(problem_json)?,
                     compressor: wire_str(v, "compressor")?.to_string(),
                     part: items_from_json(v, "part")?,
+                    cap: wire_usize(v, "cap")?,
                     seed: wire_u64(v, "seed")?,
                 })
             }
@@ -488,6 +503,7 @@ mod tests {
             problem: spec,
             compressor: "greedy".into(),
             part: vec![0, 7, 4_000_000_000],
+            cap: 200,
             seed: 0xDEAD_BEEF_DEAD_BEEF,
         };
         let back = Request::from_json(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
@@ -560,12 +576,34 @@ mod tests {
 
     #[test]
     fn version_mismatch_is_rejected() {
-        // future versions and the retired v1 are both refused
-        for bad in [r#"{"type":"hello","version":999}"#, r#"{"type":"hello","version":1}"#] {
+        // future versions and the retired v1/v2 are all refused
+        for bad in [
+            r#"{"type":"hello","version":999}"#,
+            r#"{"type":"hello","version":1}"#,
+            r#"{"type":"hello","version":2}"#,
+        ] {
             let msg = Json::parse(bad).unwrap();
             assert!(Request::from_json(&msg).is_err(), "{bad}");
             assert!(Response::from_json(&msg).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn v2_compress_frame_without_cap_is_rejected() {
+        // a v2 coordinator's compress request (no 'cap') must fail loudly
+        let spec = card_spec("csn-2k", 5, 1, 100);
+        let req = Request::Compress {
+            problem: spec,
+            compressor: "greedy".into(),
+            part: vec![1, 2],
+            cap: 64,
+            seed: 9,
+        };
+        let v = Json::parse(&req.to_json().to_string()).unwrap();
+        let mut obj = v.as_obj().unwrap().clone();
+        obj.remove("cap");
+        let err = Request::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
     }
 
     #[test]

@@ -27,13 +27,15 @@
 //! encoding loses nothing.
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::algorithms::{Compressor, Solution};
 use crate::constraints::Constraint;
+use crate::coordinator::capacity::CapacityProfile;
 use crate::data::DatasetRef;
 use crate::dist::protocol::{compressor_from_name, compressor_wire_name, ProblemSpec};
-use crate::dist::{enforce_capacity, machine_seeds, Backend, RoundOutcome};
+use crate::dist::{enforce_profile, machine_seeds, Backend, RoundOutcome};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
 use crate::util::json::Json;
@@ -81,7 +83,17 @@ impl FaultPlan {
 
 /// Deterministic fault-injecting execution backend.
 pub struct SimBackend {
-    capacity: usize,
+    profile: CapacityProfile,
+    /// Scripted fleet evolution: the profile for executed round `r` is
+    /// `capacity_schedule[min(r, len-1)]` (the last entry persists).
+    /// Empty means the static `profile` for every round. This is the
+    /// scenario knob for "the fleet shrinks mid-run" / "the largest
+    /// machine is decommissioned after round 0" — the tree re-queries
+    /// [`Backend::profile`] every round and re-plans its partition
+    /// against the fleet that will actually execute.
+    capacity_schedule: Vec<CapacityProfile>,
+    /// Rounds executed so far (advances the schedule).
+    rounds_run: AtomicUsize,
     faults: FaultPlan,
     wire_spec: bool,
     /// Wire-mode memo of the last reconstructed dataset and built
@@ -96,13 +108,41 @@ pub struct SimBackend {
 type WireMemo = (((String, u64), String), DatasetRef, Arc<dyn Constraint>);
 
 impl SimBackend {
+    /// Uniform fleet of capacity-µ machines (the paper's setting).
     pub fn new(capacity: usize) -> Self {
+        Self::with_profile(CapacityProfile::uniform(capacity))
+    }
+
+    /// Heterogeneous fleet: virtual machine `j` holds `µ_{j mod L}`.
+    pub fn with_profile(profile: CapacityProfile) -> Self {
         SimBackend {
-            capacity,
+            profile,
+            capacity_schedule: Vec::new(),
+            rounds_run: AtomicUsize::new(0),
             faults: FaultPlan::default(),
             wire_spec: false,
             wire_memo: Mutex::new(None),
         }
+    }
+
+    /// Script the fleet per round: round `r` runs on
+    /// `schedule[min(r, len-1)]`. Use a shrinking schedule to replay
+    /// "machines are lost between rounds" deterministically.
+    ///
+    /// The round counter is cumulative across `run_round` calls (the
+    /// backend cannot observe run boundaries), so a scheduled backend
+    /// scripts **one** run; to replay the scenario on the same backend,
+    /// call [`SimBackend::reset_schedule`] between runs — otherwise the
+    /// next run resumes wherever the schedule left off.
+    pub fn with_capacity_schedule(mut self, schedule: Vec<CapacityProfile>) -> Self {
+        self.capacity_schedule = schedule;
+        self
+    }
+
+    /// Rewind the capacity schedule to round 0, so the next run replays
+    /// the scripted fleet evolution from the start.
+    pub fn reset_schedule(&self) {
+        self.rounds_run.store(0, Ordering::Relaxed);
     }
 
     pub fn with_faults(mut self, faults: FaultPlan) -> Self {
@@ -128,8 +168,12 @@ impl Backend for SimBackend {
         "sim"
     }
 
-    fn capacity(&self) -> usize {
-        self.capacity
+    fn profile(&self) -> CapacityProfile {
+        if self.capacity_schedule.is_empty() {
+            return self.profile.clone();
+        }
+        let r = self.rounds_run.load(Ordering::Relaxed);
+        self.capacity_schedule[r.min(self.capacity_schedule.len() - 1)].clone()
     }
 
     fn run_round(
@@ -139,7 +183,10 @@ impl Backend for SimBackend {
         parts: &[Vec<u32>],
         round_seed: u64,
     ) -> Result<RoundOutcome> {
-        enforce_capacity(self.capacity, parts)?;
+        // enforce against this round's scheduled fleet, then advance the
+        // schedule so the next profile() query sees the next round's fleet
+        enforce_profile(&self.profile(), parts)?;
+        self.rounds_run.fetch_add(1, Ordering::Relaxed);
         let seeds = machine_seeds(round_seed, parts.len());
 
         // Wire-faithful mode: what a TCP worker would actually run. The
@@ -348,6 +395,55 @@ mod tests {
             .with_wire_spec(true)
             .run_round(&adhoc, &LazyGreedy::new(), &one_part, 0)
             .is_err());
+    }
+
+    #[test]
+    fn heterogeneous_profile_matches_local_backend_bit_exactly() {
+        let (p, _) = setup(240, 7);
+        let profile = CapacityProfile::parse("120,60,60").unwrap();
+        // parts sized to the cycle 120, 60, 60
+        let parts: Vec<Vec<u32>> = vec![
+            (0..120).collect(),
+            (120..180).collect(),
+            (180..240).collect(),
+        ];
+        let sim = SimBackend::with_profile(profile.clone());
+        let local = LocalBackend::with_profile(profile).with_threads(3);
+        let a = sim.run_round(&p, &LazyGreedy::new(), &parts, 9).unwrap();
+        let b = local.run_round(&p, &LazyGreedy::new(), &parts, 9).unwrap();
+        for (x, y) in a.solutions.iter().zip(&b.solutions) {
+            assert_eq!(x.items, y.items);
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+        }
+    }
+
+    #[test]
+    fn capacity_schedule_shrinks_the_fleet_between_rounds() {
+        let (p, _) = setup(200, 8);
+        let big = CapacityProfile::parse("100,50,50").unwrap();
+        let small = CapacityProfile::parse("50,50").unwrap();
+        let sim = SimBackend::with_profile(big.clone())
+            .with_capacity_schedule(vec![big.clone(), small.clone()]);
+        // round 0 sees the full fleet
+        assert_eq!(sim.profile(), big);
+        let parts0: Vec<Vec<u32>> = vec![(0..100).collect(), (100..150).collect(), (150..200).collect()];
+        sim.run_round(&p, &LazyGreedy::new(), &parts0, 1).unwrap();
+        // round 1 onward sees the shrunken fleet; the last entry persists
+        assert_eq!(sim.profile(), small);
+        // a 100-item part no longer fits anywhere
+        let too_big: Vec<Vec<u32>> = vec![(0..100).collect()];
+        let err = sim.run_round(&p, &LazyGreedy::new(), &too_big, 2).unwrap_err();
+        assert!(matches!(err, Error::CapacityExceeded { capacity: 50, got: 100, .. }), "{err}");
+        // schedule did not advance past the failed round's enforcement…
+        let parts1: Vec<Vec<u32>> = vec![(0..50).collect(), (50..100).collect()];
+        sim.run_round(&p, &LazyGreedy::new(), &parts1, 3).unwrap();
+        assert_eq!(sim.profile(), small);
+        // …and resetting rewinds the scripted scenario to round 0, so a
+        // reused backend replays the same fleet evolution
+        sim.reset_schedule();
+        assert_eq!(sim.profile(), big);
+        sim.run_round(&p, &LazyGreedy::new(), &parts0, 1).unwrap();
+        assert_eq!(sim.profile(), small);
     }
 
     #[test]

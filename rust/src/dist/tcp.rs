@@ -2,21 +2,28 @@
 //! `hss worker` processes.
 //!
 //! Dispatch model: one I/O thread per worker pulls part indices from a
-//! shared queue (work stealing — a fast worker drains more parts), sends
-//! a `compress` request over its persistent connection, and waits for
-//! the reply. Transport failures mark the worker dead and **requeue**
-//! the part for the surviving workers (counted in
-//! [`RoundOutcome::requeued_parts`]); application errors reported by a
-//! worker (capacity violation, bad spec) abort the round — retrying
-//! elsewhere cannot fix those.
+//! shared queue, sends a `compress` request over its persistent
+//! connection, and waits for the reply. Workers advertise their fixed
+//! capacity µ in the protocol-v3 handshake, and dispatch is
+//! **capacity-fitting**: a worker only claims parts it can hold, so a
+//! heterogeneous fleet (capacities 500, 200, 200…) serves a weighted
+//! partition with every part on a machine big enough for it — work
+//! stealing still applies among the workers a part fits. Transport
+//! failures mark the worker dead and **requeue** the part for the
+//! surviving workers *that can hold it* (counted in
+//! [`RoundOutcome::requeued_parts`]); a part no surviving worker can
+//! hold fails the round with a transport error. Application errors
+//! reported by a worker (capacity violation, bad spec) abort the round —
+//! retrying elsewhere cannot fix those.
 //!
 //! Determinism: per-machine seeds are positional
-//! ([`crate::dist::machine_seeds`]), so *which* worker executes a part —
+//! (`machine_seeds` in [`crate::dist`]), so *which* worker executes a part —
 //! and any requeueing along the way — never changes the result. A
 //! `TcpBackend` run returns bit-identical solutions to [`LocalBackend`]
 //! for the same `(problem, parts, round_seed)` — including under
 //! hereditary constraints, which cross the wire as construction recipes
-//! ([`crate::constraints::spec::ConstraintSpec`], wire spec v2).
+//! ([`crate::constraints::spec::ConstraintSpec`]), and including
+//! heterogeneous capacity profiles.
 //!
 //! [`LocalBackend`]: crate::dist::LocalBackend
 
@@ -26,10 +33,11 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::algorithms::{Compressor, Solution};
+use crate::coordinator::capacity::CapacityProfile;
 use crate::dist::protocol::{
     compressor_wire_name, recv_msg, send_msg, ProblemSpec, Request, Response,
 };
-use crate::dist::{enforce_capacity, machine_seeds, Backend, RoundOutcome};
+use crate::dist::{enforce_profile, machine_seeds, Backend, RoundOutcome};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
 
@@ -37,10 +45,12 @@ use crate::objectives::Problem;
 struct WorkerConn {
     addr: String,
     stream: TcpStream,
+    /// Fixed capacity µ the worker advertised at handshake.
+    capacity: usize,
 }
 
 impl WorkerConn {
-    fn connect(addr: &str, required_capacity: usize) -> Result<WorkerConn> {
+    fn connect(addr: &str) -> Result<WorkerConn> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| Error::transport(addr, format!("connect failed: {e}")))?;
         stream.set_nodelay(true).ok();
@@ -52,15 +62,14 @@ impl WorkerConn {
         stream
             .set_read_timeout(Some(std::time::Duration::from_secs(10)))
             .ok();
-        let mut conn = WorkerConn { addr: addr.to_string(), stream };
+        let mut conn = WorkerConn { addr: addr.to_string(), stream, capacity: 0 };
         let reply = conn.roundtrip(&Request::Hello)?;
         conn.stream.set_read_timeout(None).ok();
         match reply {
-            Response::Hello { capacity } if capacity >= required_capacity => Ok(conn),
-            Response::Hello { capacity } => Err(Error::transport(
-                addr,
-                format!("worker capacity {capacity} < required µ={required_capacity}"),
-            )),
+            Response::Hello { capacity } => {
+                conn.capacity = capacity;
+                Ok(conn)
+            }
             other => Err(Error::Protocol(format!(
                 "{addr}: expected hello, got {other:?}"
             ))),
@@ -85,16 +94,23 @@ struct Slot {
 
 /// Execution backend over real worker processes at `host:port` addresses.
 pub struct TcpBackend {
-    capacity: usize,
+    profile: CapacityProfile,
     slots: Mutex<Vec<Slot>>,
 }
 
 impl TcpBackend {
-    /// Create a backend over the given worker addresses. Connections are
-    /// established lazily and connect failures are retried on the next
-    /// round, so workers may come up after the backend is constructed —
-    /// or even mid-run.
+    /// Uniform fleet: every part may be up to µ items (the paper's
+    /// setting). Connections are established lazily and connect
+    /// failures are retried on the next round, so workers may come up
+    /// after the backend is constructed — or even mid-run.
     pub fn new(capacity: usize, workers: Vec<String>) -> Result<TcpBackend> {
+        Self::with_profile(CapacityProfile::uniform(capacity), workers)
+    }
+
+    /// Heterogeneous fleet: the planner sizes part `j` for virtual
+    /// capacity `µ_{j mod L}`, and dispatch places each part only on
+    /// workers whose advertised capacity can hold it.
+    pub fn with_profile(profile: CapacityProfile, workers: Vec<String>) -> Result<TcpBackend> {
         if workers.is_empty() {
             return Err(Error::invalid(
                 "tcp backend needs at least one worker address (--workers host:port[,host:port…])",
@@ -109,7 +125,7 @@ impl TcpBackend {
             .filter(|addr| seen.insert(addr.clone()))
             .map(|addr| Slot { addr, conn: None, dead: false })
             .collect();
-        Ok(TcpBackend { capacity, slots: Mutex::new(slots) })
+        Ok(TcpBackend { profile, slots: Mutex::new(slots) })
     }
 
     /// Addresses this backend was configured with.
@@ -124,7 +140,7 @@ impl TcpBackend {
         for slot in slots.iter_mut() {
             let conn = match slot.conn.take() {
                 Some(c) => Some(c),
-                None if !slot.dead => WorkerConn::connect(&slot.addr, 0).ok(),
+                None if !slot.dead => WorkerConn::connect(&slot.addr).ok(),
                 None => None,
             };
             if let Some(mut c) = conn {
@@ -140,8 +156,8 @@ impl Backend for TcpBackend {
         "tcp"
     }
 
-    fn capacity(&self) -> usize {
-        self.capacity
+    fn profile(&self) -> CapacityProfile {
+        self.profile.clone()
     }
 
     fn run_round(
@@ -151,10 +167,13 @@ impl Backend for TcpBackend {
         parts: &[Vec<u32>],
         round_seed: u64,
     ) -> Result<RoundOutcome> {
-        enforce_capacity(self.capacity, parts)?;
+        enforce_profile(&self.profile, parts)?;
         let spec = ProblemSpec::from_problem(problem)?;
         let comp_name = compressor_wire_name(compressor)?;
         let seeds = machine_seeds(round_seed, parts.len());
+        let caps: Vec<usize> = (0..parts.len())
+            .map(|j| self.profile.virtual_capacity(j))
+            .collect();
 
         let queue: Mutex<VecDeque<usize>> = Mutex::new((0..parts.len()).collect());
         let results: Mutex<Vec<Option<(Solution, u64)>>> =
@@ -165,10 +184,31 @@ impl Backend for TcpBackend {
         let fatal: Mutex<Option<Error>> = Mutex::new(None);
         let abort = AtomicBool::new(false);
         let last_transport_err: Mutex<Option<String>> = Mutex::new(None);
+        // Advertised capacities of workers currently able to take work
+        // (slot index → µ), maintained so idle workers can tell a part
+        // that is merely *in flight elsewhere* from one that fits no
+        // surviving worker. `connecting` counts threads whose first
+        // handshake has not resolved yet: the no-fit check is only
+        // meaningful once every capacity is known.
+        let live_caps: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
+        let connecting = AtomicUsize::new(0);
 
         let mut slots = self.slots.lock().unwrap();
+        // Pre-register capacities of connections kept warm from earlier
+        // rounds; count the rest as still-connecting.
+        for (id, slot) in slots.iter().enumerate() {
+            if slot.dead {
+                continue;
+            }
+            match &slot.conn {
+                Some(c) => live_caps.lock().unwrap().push((id, c.capacity)),
+                None => {
+                    connecting.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
         std::thread::scope(|scope| {
-            for slot in slots.iter_mut() {
+            for (id, slot) in slots.iter_mut().enumerate() {
                 if slot.dead {
                     continue;
                 }
@@ -180,50 +220,93 @@ impl Backend for TcpBackend {
                 let fatal = &fatal;
                 let abort = &abort;
                 let last_transport_err = &last_transport_err;
+                let live_caps = &live_caps;
+                let connecting = &connecting;
                 let spec = &spec;
                 let comp_name = &comp_name;
                 let seeds = &seeds;
+                let caps = &caps;
                 scope.spawn(move || {
                     loop {
                         if abort.load(Ordering::Relaxed) {
                             break;
                         }
-                        let job = queue.lock().unwrap().pop_front();
-                        let Some(i) = job else {
-                            if completed.load(Ordering::Relaxed) >= parts.len() {
-                                break;
-                            }
-                            // A peer still holds a part in flight; if its
-                            // machine is lost, the part comes back to the
-                            // queue — stay alive to steal it. (Every exit
-                            // path on a failing peer requeues first, so
-                            // unfinished work is always either queued or
-                            // held by a live worker.)
-                            std::thread::sleep(std::time::Duration::from_millis(1));
-                            continue;
-                        };
-                        // (re)connect lazily
+                        // (re)connect lazily; the handshake reveals µ
                         if slot.conn.is_none() {
-                            match WorkerConn::connect(&slot.addr, self.capacity) {
-                                Ok(c) => slot.conn = Some(c),
+                            match WorkerConn::connect(&slot.addr) {
+                                Ok(c) => {
+                                    // register the capacity BEFORE counting
+                                    // this handshake as resolved: a peer that
+                                    // observes `connecting == 0` must see
+                                    // every successful worker in `live_caps`,
+                                    // or its no-fit check could spuriously
+                                    // fail the round
+                                    live_caps.lock().unwrap().push((id, c.capacity));
+                                    slot.conn = Some(c);
+                                    connecting.fetch_sub(1, Ordering::SeqCst);
+                                }
                                 Err(e) => {
+                                    connecting.fetch_sub(1, Ordering::SeqCst);
                                     // Never dispatched: not a requeue. The
                                     // slot sits out the rest of this round
                                     // only — workers are allowed to come up
                                     // late, so the next round retries the
                                     // connect. (`dead` is reserved for
                                     // mid-flight failures.)
-                                    queue.lock().unwrap().push_back(i);
                                     *last_transport_err.lock().unwrap() = Some(e.to_string());
                                     break;
                                 }
                             }
                         }
+                        let my_cap = slot.conn.as_ref().unwrap().capacity;
+                        // claim the first queued part this worker can hold
+                        let job = {
+                            let mut q = queue.lock().unwrap();
+                            let pos = q.iter().position(|&i| parts[i].len() <= my_cap);
+                            pos.and_then(|pos| q.remove(pos))
+                        };
+                        let Some(i) = job else {
+                            if completed.load(Ordering::Relaxed) >= parts.len() {
+                                break;
+                            }
+                            // Work remains but none of it fits this
+                            // worker, or peers hold it in flight (if their
+                            // machine is lost, the part comes back to the
+                            // queue — stay alive to steal it). Once every
+                            // handshake has resolved, a queued part that
+                            // fits NO live worker can never complete: fail
+                            // the round instead of spinning forever.
+                            if connecting.load(Ordering::SeqCst) == 0 {
+                                let q = queue.lock().unwrap();
+                                let live = live_caps.lock().unwrap();
+                                let orphan = q.iter().find(|&&j| {
+                                    !live.iter().any(|&(_, cap)| parts[j].len() <= cap)
+                                });
+                                if let Some(&j) = orphan {
+                                    let detail = last_transport_err
+                                        .lock()
+                                        .unwrap()
+                                        .clone()
+                                        .unwrap_or_else(|| "no fitting worker".into());
+                                    *fatal.lock().unwrap() = Some(Error::Transport(format!(
+                                        "part {j} of {} ({} items) exceeds every live \
+                                         worker's capacity ({detail})",
+                                        parts.len(),
+                                        parts[j].len()
+                                    )));
+                                    abort.store(true, Ordering::Relaxed);
+                                    break;
+                                }
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                            continue;
+                        };
                         let conn = slot.conn.as_mut().unwrap();
                         let request = Request::Compress {
                             problem: spec.clone(),
                             compressor: comp_name.clone(),
                             part: parts[i].clone(),
+                            cap: caps[i],
                             seed: seeds[i],
                         };
                         match conn.roundtrip(&request) {
@@ -250,11 +333,13 @@ impl Backend for TcpBackend {
                             }
                             Err(e) => {
                                 // transport failure mid-flight: lose the
-                                // machine, requeue the part elsewhere
+                                // machine, requeue the part for surviving
+                                // workers that can hold it
                                 requeued.fetch_add(1, Ordering::Relaxed);
                                 requeued_ids.fetch_add(parts[i].len(), Ordering::Relaxed);
                                 queue.lock().unwrap().push_back(i);
                                 *last_transport_err.lock().unwrap() = Some(e.to_string());
+                                live_caps.lock().unwrap().retain(|&(sid, _)| sid != id);
                                 slot.conn = None;
                                 slot.dead = true;
                                 break;
@@ -310,6 +395,8 @@ mod tests {
     #[test]
     fn rejects_empty_worker_list() {
         assert!(TcpBackend::new(100, vec![]).is_err());
+        let p = CapacityProfile::parse("100,50").unwrap();
+        assert!(TcpBackend::with_profile(p, vec![]).is_err());
     }
 
     #[test]
@@ -321,6 +408,14 @@ mod tests {
         )
         .unwrap();
         assert_eq!(b.worker_addrs(), vec!["127.0.0.1:7070", "127.0.0.1:7071"]);
+    }
+
+    #[test]
+    fn profile_is_exposed_and_capacity_is_the_largest_class() {
+        let p = CapacityProfile::parse("500,200,200").unwrap();
+        let b = TcpBackend::with_profile(p.clone(), vec!["127.0.0.1:7070".into()]).unwrap();
+        assert_eq!(b.profile(), p);
+        assert_eq!(b.capacity(), 500);
     }
 
     #[test]

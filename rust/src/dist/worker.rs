@@ -9,8 +9,11 @@
 //! reconstructs problems from [`ProblemSpec`]s (deterministic dataset
 //! generation — the coordinator ships ids, never rows) and memoizes
 //! loaded datasets per `(name, seed)` so a multi-round run pays dataset
-//! generation once. Capacity is enforced per request: a part larger than
-//! µ is answered with an error response, never silently spilled.
+//! generation once. Capacity is enforced per request: a part larger
+//! than the worker's own µ *or* the planned virtual machine capacity
+//! shipped with the request (protocol v3) is answered with an error
+//! response, never silently spilled. The worker advertises its µ in the
+//! handshake so heterogeneous coordinators dispatch by capacity fit.
 
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -162,8 +165,8 @@ fn serve_connection(
                 send_msg(&mut stream, &Response::Bye.to_json()).ok();
                 return Ok(ConnectionEnd::Shutdown);
             }
-            Request::Compress { problem, compressor, part, seed } => {
-                handle_compress(capacity, cache, &problem, &compressor, &part, seed)
+            Request::Compress { problem, compressor, part, cap, seed } => {
+                handle_compress(capacity, cache, &problem, &compressor, &part, cap, seed)
                     .unwrap_or_else(|e| Response::Error { msg: e.to_string() })
             }
         };
@@ -177,6 +180,7 @@ fn handle_compress(
     spec: &ProblemSpec,
     compressor_name: &str,
     part: &[u32],
+    cap: usize,
     seed: u64,
 ) -> Result<Response> {
     if part.len() > capacity {
@@ -184,6 +188,16 @@ fn handle_compress(
             capacity,
             got: part.len(),
             ctx: " (worker-side enforcement)".into(),
+        });
+    }
+    // the coordinator sized this part for a virtual machine of capacity
+    // `cap` (protocol v3); a part above it means the partitioner
+    // overfilled a machine class — reject rather than mask the bug
+    if part.len() > cap {
+        return Err(Error::CapacityExceeded {
+            capacity: cap,
+            got: part.len(),
+            ctx: " (worker-side enforcement of the planned virtual machine capacity)".into(),
         });
     }
     let compressor = crate::dist::protocol::compressor_from_name(compressor_name)?;
@@ -246,6 +260,7 @@ mod tests {
             problem: spec.clone(),
             compressor: "greedy".into(),
             part: (0..50).collect(),
+            cap: 64,
             seed: 1,
         };
         protocol::send_msg(&mut stream, &req.to_json()).unwrap();
@@ -286,6 +301,7 @@ mod tests {
             problem: knap_spec.clone(),
             compressor: "greedy".into(),
             part: (0..50).collect(),
+            cap: 64,
             seed: 3,
         };
         protocol::send_msg(&mut stream, &req.to_json()).unwrap();
@@ -309,9 +325,10 @@ mod tests {
 
         // capacity enforcement on the worker side
         let too_big = Request::Compress {
-            problem: spec,
+            problem: spec.clone(),
             compressor: "greedy".into(),
             part: (0..65).collect(),
+            cap: 64,
             seed: 2,
         };
         protocol::send_msg(&mut stream, &too_big.to_json()).unwrap();
@@ -319,6 +336,25 @@ mod tests {
         match resp {
             Response::Error { msg } => {
                 assert!(msg.contains("capacity"), "unexpected msg: {msg}")
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+
+        // v3: the planned virtual machine capacity is enforced too — a
+        // part that fits the worker's physical µ but overflows the
+        // machine class it was sized for is a partitioner bug
+        let over_virtual = Request::Compress {
+            problem: spec,
+            compressor: "greedy".into(),
+            part: (0..30).collect(),
+            cap: 20,
+            seed: 2,
+        };
+        protocol::send_msg(&mut stream, &over_virtual.to_json()).unwrap();
+        let resp = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        match resp {
+            Response::Error { msg } => {
+                assert!(msg.contains("virtual machine capacity"), "unexpected msg: {msg}")
             }
             other => panic!("expected error, got {other:?}"),
         }

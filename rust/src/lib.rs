@@ -24,22 +24,45 @@
 //!   `artifacts/*.hlo.txt`, executed from rust through PJRT
 //!   ([`runtime`]). Python never runs on the request path.
 //!
+//! ## Module map (crate ↔ paper)
+//!
+//! | module | paper section | contents |
+//! |---|---|---|
+//! | [`coordinator::tree`] | §3 Algorithm 1 | tree-based compression runner |
+//! | [`coordinator::partitioner`] | §3 "virtual free locations" | balanced random partition + capacity-weighted generalization |
+//! | [`coordinator::planner`] | Prop 3.1 | round bounds, worst-case machine counts |
+//! | [`coordinator::capacity`] | — (extension) | per-worker capacity profiles, weighted sharding |
+//! | [`coordinator::baselines`] | §2, §4.3 | centralized GREEDY, GREEDI, RANDGREEDI, RANDOM |
+//! | [`algorithms`] | §3.1 β-nice | lazy/stochastic/threshold greedy compressors |
+//! | [`objectives`] | §4.1 | exemplar clustering, log-det; oracle counters |
+//! | [`constraints`] | §3.2 hereditary | cardinality, knapsack, partition matroid, intersections |
+//! | [`analysis`] | Thm 3.3/3.5 | approximation-bound formulas |
+//! | [`dist`] | — (systems) | execution backends, wire protocol (`docs/PROTOCOL.md`) |
+//! | [`data`] | §4.1 Table 2 | dataset registry, synthetic generators, wire specs |
+//! | [`bench`] | §4 | table/figure report generators |
+//!
 //! ## Distributed execution
 //!
 //! Rounds dispatch through the [`dist::Backend`] trait. The default is
 //! the in-process [`dist::LocalBackend`]; `hss worker --listen
 //! host:port` starts a real fixed-capacity worker process and `hss run
 //! --backend tcp --workers host:port,…` shards every round over those
-//! workers via a length-prefixed binary protocol ([`dist::protocol`]).
-//! [`dist::SimBackend`] replays scripted machine losses and stragglers
-//! for robustness experiments. All backends return bit-identical
-//! solutions for the same seed — the substrate changes cost and
-//! availability, never the answer. Problems cross the wire by
-//! specification (wire spec v2): datasets as registry names or recorded
-//! synthetic-generator calls ([`data::spec::DatasetSpec`]) and
-//! hereditary constraints as construction recipes
-//! ([`constraints::spec::ConstraintSpec`] — cardinality, knapsack,
-//! partition matroid, intersections).
+//! workers via a length-prefixed binary protocol ([`dist::protocol`],
+//! normative spec in `docs/PROTOCOL.md`). [`dist::SimBackend`] replays
+//! scripted machine losses, stragglers and shrinking fleets for
+//! robustness experiments. All backends return bit-identical solutions
+//! for the same seed — the substrate changes cost and availability,
+//! never the answer. Problems cross the wire by specification: datasets
+//! as registry names or recorded synthetic-generator calls
+//! ([`data::spec::DatasetSpec`]) and hereditary constraints as
+//! construction recipes ([`constraints::spec::ConstraintSpec`] —
+//! cardinality, knapsack, partition matroid, intersections).
+//!
+//! Fleets need not be uniform: a [`coordinator::capacity::CapacityProfile`]
+//! gives every machine class its own µ_p (protocol v3 workers advertise
+//! theirs at handshake), parts are sized to classes by weighted
+//! sharding, and the TCP coordinator dispatches each part only to a
+//! worker that can hold it.
 //!
 //! ## Quick start
 //!
@@ -52,6 +75,27 @@
 //! let tree = TreeBuilder::new(/*capacity=*/ 200).build();
 //! let result = tree.run(&problem, 7).unwrap();
 //! println!("f(S) = {:.4} in {} rounds", result.best.value, result.rounds);
+//! ```
+//!
+//! The grammars shared by the CLI, config files and the wire are
+//! executable documentation — these examples run as doctests:
+//!
+//! ```
+//! use hss::constraints::spec::ConstraintSpec;
+//! use hss::coordinator::capacity::CapacityProfile;
+//! use hss::coordinator::RoundPlan;
+//!
+//! // `--constraint` grammar: '+' intersects hereditary constraints
+//! let spec = ConstraintSpec::parse("knapsack:b=30,w=rownorm2+pmatroid:groups=5,cap=2", 10);
+//! assert!(spec.is_ok());
+//!
+//! // `--capacity` grammar: scalar µ, explicit classes, or repeats
+//! let fleet = CapacityProfile::parse("500,200x2").unwrap();
+//! assert_eq!(fleet.caps(), &[500, 200, 200]);
+//!
+//! // Prop 3.1 round planning against that fleet
+//! let plan = RoundPlan::for_profile(10_000, 50, &fleet).unwrap();
+//! assert!(plan.rounds() <= plan.round_bound + 2);
 //! ```
 
 pub mod algorithms;
@@ -79,7 +123,9 @@ pub mod prelude {
     pub use crate::analysis::bounds;
     pub use crate::constraints::spec::ConstraintSpec;
     pub use crate::constraints::{Cardinality, Constraint, Knapsack, PartitionMatroid};
-    pub use crate::coordinator::{baselines, TreeBuilder, TreeResult, TreeRunner};
+    pub use crate::coordinator::{
+        baselines, CapacityProfile, TreeBuilder, TreeResult, TreeRunner,
+    };
     pub use crate::data::Dataset;
     pub use crate::dist::{
         Backend, BackendChoice, FaultPlan, LocalBackend, SimBackend, TcpBackend,

@@ -3,8 +3,8 @@
 //!
 //! ```text
 //! hss run    [--config cfg.json] [--dataset csn-2k] [--algo tree]
-//!            [--k 50] [--capacity 200] [--seed 42] [--trials 3]
-//!            [--epsilon 0.5] [--no-engine] [--threads 2]
+//!            [--k 50] [--capacity 200|500,200,200|200x8] [--seed 42]
+//!            [--trials 3] [--epsilon 0.5] [--no-engine] [--threads 2]
 //!            [--constraint card|knapsack:b=30[,w=unit|rownorm2|seeded:S:LO:HI]
 //!                         |pmatroid:groups=G,cap=C   (combine with '+')]
 //!            [--backend local|tcp|sim] [--workers host:port,host:port…]
@@ -15,11 +15,15 @@
 //! hss datasets                                    # list registry
 //! hss artifacts                                   # list AOT artifacts
 //! ```
+//!
+//! `hss <cmd> --help` prints the full flag reference, including the
+//! `--constraint` and `--capacity` grammars.
 
 use std::sync::Arc;
 
 use hss::algorithms::{LazyGreedy, StochasticGreedy};
 use hss::config::{Algo, RunConfig};
+use hss::coordinator::capacity::CapacityProfile;
 use hss::coordinator::planner::RoundPlan;
 use hss::coordinator::{baselines, TreeBuilder};
 use hss::dist::{worker, Backend as _, BackendChoice};
@@ -46,22 +50,91 @@ fn real_main() -> Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("datasets") => cmd_datasets(),
         Some("artifacts") => cmd_artifacts(),
+        Some("help") => {
+            print_main_help();
+            Ok(())
+        }
         _ => {
-            eprintln!("usage: hss <run|worker|plan|datasets|artifacts> [flags]");
-            eprintln!("  run     execute an experiment    [--backend local|tcp|sim]");
-            eprintln!("          [--workers host:port,…] [--sim-loss N]");
-            eprintln!("          [--constraint card|knapsack:b=..[,w=..]|pmatroid:groups=G,cap=C] …");
-            eprintln!("  worker  host one fixed-capacity machine for `run --backend tcp`");
-            eprintln!("          [--listen 127.0.0.1:7070] [--capacity 200]");
-            eprintln!("  see rust/src/main.rs header for the full flag reference");
+            print_main_help();
             Ok(())
         }
     }
 }
 
+/// The shared `--constraint` grammar line (CLI help + worker help; the
+/// CLI test asserts this exact text is discoverable from --help).
+const CONSTRAINT_GRAMMAR: &str = "card | knapsack:b=B[,w=unit|rownorm2|seeded:SEED:LO:HI] \
+     | pmatroid:groups=G,cap=C   (join with '+' for intersections)";
+
+/// The shared `--capacity` grammar line.
+const CAPACITY_GRAMMAR: &str =
+    "MU | MU1,MU2,... | MUxCOUNT   (e.g. 200, or 500,200,200, or 200x8)";
+
+fn print_main_help() {
+    println!("usage: hss <run|worker|plan|datasets|artifacts> [flags]");
+    println!();
+    println!("  run        execute an experiment (see `hss run --help`)");
+    println!("  worker     host one fixed-capacity machine for `run --backend tcp`");
+    println!("             (see `hss worker --help`)");
+    println!("  plan       print the round plan and Prop 3.1 bounds for (n, k, capacity)");
+    println!("  datasets   list the dataset registry");
+    println!("  artifacts  list compiled XLA artifacts");
+    println!();
+    println!("grammars (shared by CLI flags, config files and the wire protocol;");
+    println!("normative spec in docs/PROTOCOL.md):");
+    println!("  --capacity   {CAPACITY_GRAMMAR}");
+    println!("  --constraint {CONSTRAINT_GRAMMAR}");
+}
+
+fn print_run_help() {
+    println!("usage: hss run [flags]");
+    println!();
+    println!("  --config FILE          JSON run config (CLI flags override it)");
+    println!("  --dataset NAME         registry dataset (see `hss datasets`)");
+    println!("  --algo A               tree|stochastic-tree|randgreedi|greedi|centralized|random");
+    println!("  --k K                  solution size (cardinality budget)");
+    println!("  --capacity PROFILE     fleet capacity profile:");
+    println!("                           {CAPACITY_GRAMMAR}");
+    println!("                         a single MU is the paper's uniform fleet; a list or");
+    println!("                         MUxCOUNT declares per-worker capacities — parts are");
+    println!("                         sized to machine classes by weighted sharding");
+    println!("  --constraint SPEC      hereditary constraint:");
+    println!("                           {CONSTRAINT_GRAMMAR}");
+    println!("  --seed S --trials T    experiment replication");
+    println!("  --epsilon E            stochastic-greedy subsampling parameter");
+    println!("  --threads N            local thread-pool width");
+    println!("  --no-engine            force the pure-rust oracle path");
+    println!("  --backend B            local|tcp|sim");
+    println!("  --workers H:P,H:P,...  tcp worker addresses (capacities are discovered");
+    println!("                         via the protocol-v3 handshake; a part only runs on");
+    println!("                         a worker that can hold it)");
+    println!("  --sim-loss N --sim-loss-prob P --sim-straggler-prob P");
+    println!("  --sim-straggler-ms MS --sim-seed S");
+    println!("                         sim backend fault injection");
+}
+
+fn print_worker_help() {
+    println!("usage: hss worker [flags]");
+    println!();
+    println!("  --listen ADDR     bind address (default 127.0.0.1:7070; port 0 = ephemeral,");
+    println!("                    the real port is announced on stdout)");
+    println!("  --capacity MU     this worker's fixed machine capacity µ (default 200).");
+    println!("                    The worker advertises µ in the protocol-v3 handshake;");
+    println!("                    heterogeneous coordinators (`hss run --capacity 500,200,200`)");
+    println!("                    dispatch each part only to a worker that can hold it.");
+    println!();
+    println!("run-side grammars (see `hss run --help` and docs/PROTOCOL.md):");
+    println!("  --capacity   {CAPACITY_GRAMMAR}");
+    println!("  --constraint {CONSTRAINT_GRAMMAR}");
+}
+
 /// `hss worker`: host one fixed-capacity machine process; coordinators
 /// reach it via `hss run --backend tcp --workers <this address>`.
 fn cmd_worker(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        print_worker_help();
+        return Ok(());
+    }
     let cfg = worker::WorkerConfig {
         listen: args.get_or("listen", "127.0.0.1:7070").to_string(),
         capacity: args.usize("capacity", 200)?,
@@ -70,6 +143,10 @@ fn cmd_worker(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        print_run_help();
+        return Ok(());
+    }
     // config file first, CLI flags override
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
@@ -83,7 +160,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.algo = Algo::parse(a, eps)?;
     }
     cfg.k = args.usize("k", cfg.k)?;
-    cfg.capacity = args.usize("capacity", cfg.capacity)?;
+    if let Some(text) = args.get("capacity") {
+        cfg.capacity = CapacityProfile::parse(text)?;
+    }
     cfg.seed = args.u64("seed", cfg.seed)?;
     cfg.trials = args.usize("trials", cfg.trials)?.max(1);
     cfg.threads = args.usize("threads", cfg.threads)?;
@@ -192,7 +271,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                         }
                         _ => unreachable!(),
                     };
-                let res = TreeBuilder::new(cfg.capacity)
+                let res = TreeBuilder::for_profile(cfg.capacity.clone())
                     .compressor(compressor)
                     .threads(cfg.threads)
                     .backend(backend.clone())
@@ -242,18 +321,37 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_plan_help() {
+    println!("usage: hss plan [flags]");
+    println!();
+    println!("  --n N                  ground-set size (default 100000)");
+    println!("  --k K                  solution size (default 50)");
+    println!("  --capacity PROFILE     fleet capacity profile (default 800):");
+    println!("                           {CAPACITY_GRAMMAR}");
+    println!();
+    println!("prints the Prop 3.1 round bound, worst-case machines per round,");
+    println!("the Thm 3.3 greedy floor and the two-round minimum capacity.");
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        print_plan_help();
+        return Ok(());
+    }
     let n = args.usize("n", 100_000)?;
     let k = args.usize("k", 50)?;
-    let capacity = args.usize("capacity", 800)?;
-    let plan = RoundPlan::new(n, k, capacity)?;
-    println!("n={n} k={k} capacity={capacity}");
+    let profile = match args.get("capacity") {
+        Some(text) => CapacityProfile::parse(text)?,
+        None => CapacityProfile::uniform(800),
+    };
+    let plan = RoundPlan::for_profile(n, k, &profile)?;
+    println!("n={n} k={k} capacity={profile} (effective µ {})", plan.capacity);
     println!("round bound (Prop 3.1): {}", plan.round_bound);
     println!("machines per round (worst case): {:?}", plan.machines_per_round);
     println!("total machines: {}", plan.total_machines());
     println!(
         "Thm 3.3 greedy bound: {:.4} of f(OPT)",
-        hss::analysis::bounds::thm33_greedy(n, k, capacity)
+        hss::analysis::bounds::thm33_greedy(n, k, plan.capacity)
     );
     println!(
         "two-round min capacity ~sqrt(nk): {}",

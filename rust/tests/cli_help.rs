@@ -1,0 +1,100 @@
+//! The `--constraint` and `--capacity` grammars must be discoverable
+//! from the CLI itself — `hss --help`, `hss run --help` and
+//! `hss worker --help` — not only by reading config/mod.rs. These tests
+//! spawn the real binary and assert the grammar strings appear.
+
+use std::process::Command;
+
+fn run_hss(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_hss"))
+        .args(args)
+        .output()
+        .expect("spawn hss");
+    assert!(
+        out.status.success(),
+        "hss {args:?} exited with {:?}\nstderr: {}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Every help surface must document the capacity-profile grammar.
+const CAPACITY_FORMS: &[&str] = &["MUxCOUNT", "500,200,200", "200x8"];
+
+/// …and the constraint grammar with all three constraint heads and the
+/// weight-generator sub-grammar.
+const CONSTRAINT_FORMS: &[&str] = &[
+    "knapsack:b=",
+    "pmatroid:groups=",
+    "seeded:SEED:LO:HI",
+    "rownorm2",
+    "card",
+];
+
+#[test]
+fn top_level_help_documents_both_grammars() {
+    for invocation in [vec!["--help"], vec!["help"]] {
+        let text = run_hss(&invocation);
+        assert!(text.contains("--capacity"), "{invocation:?}: {text}");
+        assert!(text.contains("--constraint"), "{invocation:?}: {text}");
+        for needle in CAPACITY_FORMS.iter().chain(CONSTRAINT_FORMS) {
+            assert!(
+                text.contains(needle),
+                "`hss {invocation:?}` output lacks grammar string '{needle}':\n{text}"
+            );
+        }
+    }
+}
+
+#[test]
+fn run_help_documents_both_grammars() {
+    let text = run_hss(&["run", "--help"]);
+    for needle in CAPACITY_FORMS.iter().chain(CONSTRAINT_FORMS) {
+        assert!(
+            text.contains(needle),
+            "`hss run --help` output lacks grammar string '{needle}':\n{text}"
+        );
+    }
+    // the heterogeneous dispatch contract is stated where users set it up
+    assert!(text.contains("weighted sharding"), "{text}");
+    assert!(text.contains("--workers"), "{text}");
+}
+
+#[test]
+fn worker_help_documents_capacity_advertisement_and_grammars() {
+    let text = run_hss(&["worker", "--help"]);
+    assert!(text.contains("--capacity"), "{text}");
+    assert!(text.contains("--listen"), "{text}");
+    // the worker's role in the v3 handshake is documented…
+    assert!(text.contains("advertises"), "{text}");
+    assert!(text.contains("protocol-v3"), "{text}");
+    // …and the run-side grammars are cross-referenced verbatim
+    for needle in CAPACITY_FORMS.iter().chain(CONSTRAINT_FORMS) {
+        assert!(
+            text.contains(needle),
+            "`hss worker --help` output lacks grammar string '{needle}':\n{text}"
+        );
+    }
+}
+
+#[test]
+fn plan_help_documents_the_capacity_grammar() {
+    let text = run_hss(&["plan", "--help"]);
+    assert!(text.contains("--capacity"), "{text}");
+    for needle in CAPACITY_FORMS {
+        assert!(
+            text.contains(needle),
+            "`hss plan --help` output lacks grammar string '{needle}':\n{text}"
+        );
+    }
+    // help must not run a plan with the defaults
+    assert!(!text.contains("round bound (Prop 3.1):"), "{text}");
+}
+
+#[test]
+fn bare_invocation_prints_usage_not_an_error() {
+    let text = run_hss(&[]);
+    assert!(text.contains("usage: hss"), "{text}");
+    assert!(text.contains("docs/PROTOCOL.md"), "{text}");
+}

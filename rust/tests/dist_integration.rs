@@ -12,7 +12,7 @@ use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 
 use hss::constraints::{Knapsack, PartitionMatroid};
-use hss::coordinator::{baselines, TreeBuilder};
+use hss::coordinator::{baselines, CapacityProfile, TreeBuilder};
 use hss::data::registry;
 use hss::dist::{Backend, FaultPlan, SimBackend, TcpBackend};
 use hss::objectives::Problem;
@@ -241,6 +241,127 @@ fn tcp_matches_local_under_partition_matroid_with_mid_run_kill() {
     let matroid = PartitionMatroid::round_robin(ds.n, 8, 2, k);
     let problem = Problem::exemplar(ds, k, 6).with_constraint(Arc::new(matroid));
     assert_constrained_tcp_matches_local(&problem, mu, 17);
+}
+
+/// Acceptance (heterogeneous capacities): a TCP run over workers with
+/// *unequal* capacities, planned with the matching `--capacity`-style
+/// profile, is bit-identical to the local backend with the same profile
+/// — and stays bit-identical after a scripted mid-run kill of a
+/// largest-capacity worker (its in-flight part requeues on the
+/// surviving worker that can hold it; capacity-fit dispatch never
+/// hands a large part to the small worker). The sim backend agrees too.
+#[test]
+fn tcp_heterogeneous_capacities_match_local_including_largest_worker_kill() {
+    let (k, problem_seed, run_seed) = (10usize, 21u64, 23u64);
+    let profile = CapacityProfile::parse("100,100,60").unwrap();
+    let ds = registry::load("csn-2k", problem_seed).unwrap();
+    let problem = Problem::exemplar(ds, k, problem_seed);
+
+    let local = TreeBuilder::for_profile(profile.clone())
+        .build()
+        .run(&problem, run_seed)
+        .unwrap();
+    assert!(local.rounds >= 2, "scenario should be multi-round");
+
+    // the deterministic simulator agrees bit-exactly
+    let sim = TreeBuilder::for_profile(profile.clone())
+        .backend(Arc::new(SimBackend::with_profile(profile.clone())))
+        .build()
+        .run(&problem, run_seed)
+        .unwrap();
+    assert_eq!(sim.best.items, local.best.items);
+    assert_eq!(sim.best.value.to_bits(), local.best.value.to_bits());
+
+    // real worker processes with per-process capacities 100, 100, 60
+    let victim = WorkerProc::spawn(100);
+    let survivor_big = WorkerProc::spawn(100);
+    let survivor_small = WorkerProc::spawn(60);
+    let tcp = Arc::new(
+        TcpBackend::with_profile(
+            profile.clone(),
+            vec![
+                victim.addr.clone(),
+                survivor_big.addr.clone(),
+                survivor_small.addr.clone(),
+            ],
+        )
+        .unwrap(),
+    );
+    let runner = TreeBuilder::for_profile(profile).backend(tcp.clone()).build();
+
+    // healthy pass: the weighted partition crossed the fleet losslessly
+    let remote = runner.run(&problem, run_seed).unwrap();
+    assert_eq!(remote.best.items, local.best.items, "item sets differ over tcp");
+    assert_eq!(
+        remote.best.value.to_bits(),
+        local.best.value.to_bits(),
+        "objective value not bit-identical over tcp"
+    );
+    assert_eq!(remote.rounds, local.rounds);
+    assert_eq!(remote.requeued_parts, 0, "healthy workers must not requeue");
+
+    // kill one of the largest-capacity workers; its warm connection
+    // breaks mid-run and the in-flight part requeues on a survivor that
+    // can hold it. (The dead slot is only observed when the scheduler
+    // hands it work, so allow a few attempts — the answer must match on
+    // every one of them.)
+    drop(victim);
+    let mut saw_requeue = false;
+    for _ in 0..5 {
+        let wounded = runner.run(&problem, run_seed).unwrap();
+        assert_eq!(
+            wounded.best.items, local.best.items,
+            "losing the largest worker changed the solution"
+        );
+        assert_eq!(wounded.best.value.to_bits(), local.best.value.to_bits());
+        if wounded.requeued_parts >= 1 {
+            saw_requeue = true;
+            break;
+        }
+    }
+    assert!(saw_requeue, "worker kill never surfaced as a requeued part");
+
+    tcp.shutdown_workers();
+}
+
+/// A part sized for the large machine class must never be dispatched to
+/// a small worker: with *only* a small worker alive, a round containing
+/// a large part fails with a transport error instead of overloading it.
+#[test]
+fn tcp_capacity_fit_refuses_parts_no_live_worker_can_hold() {
+    let (k, seed) = (5usize, 31u64);
+    let profile = CapacityProfile::parse("100,40").unwrap();
+    let ds = registry::load("csn-2k", seed).unwrap();
+    let problem = Problem::exemplar(ds, k, seed);
+
+    let small = WorkerProc::spawn(40);
+    let tcp = TcpBackend::with_profile(profile, vec![small.addr.clone()]).unwrap();
+    // part 0 is sized for the 100-class machine; only a 40-worker lives
+    let parts: Vec<Vec<u32>> = vec![(0..80).collect(), (80..120).collect()];
+    let err = tcp
+        .run_round(&problem, &hss::algorithms::LazyGreedy::new(), &parts, 1)
+        .unwrap_err();
+    assert!(
+        matches!(err, hss::error::Error::Transport(_)),
+        "expected a transport error, got {err}"
+    );
+    assert!(err.to_string().contains("capacity"), "{err}");
+    // release the persistent connection: the worker serves one
+    // coordinator at a time, and the next backend needs the slot
+    drop(tcp);
+
+    // the same round succeeds once a big enough worker joins the fleet
+    let big = WorkerProc::spawn(100);
+    let tcp = TcpBackend::with_profile(
+        CapacityProfile::parse("100,40").unwrap(),
+        vec![small.addr.clone(), big.addr.clone()],
+    )
+    .unwrap();
+    let out = tcp
+        .run_round(&problem, &hss::algorithms::LazyGreedy::new(), &parts, 1)
+        .unwrap();
+    assert_eq!(out.solutions.len(), 2);
+    tcp.shutdown_workers();
 }
 
 /// The two-round RANDGREEDI baseline also runs end-to-end on workers.
