@@ -1,0 +1,151 @@
+//! Straggler dispatch bench — serial barrier vs pipelined event-driven
+//! rounds, with an injected straggler.
+//!
+//! Two scenarios:
+//!
+//! 1. **tcp**: three in-process protocol-v3 workers, one started with a
+//!    per-request `straggle_ms` delay (the `hss worker --straggle-ms`
+//!    knob). The pipelined tree runner overlaps next-round planning and
+//!    union-building with the straggler's tail; the serial path idles
+//!    at the barrier and pays that coordinator work on the critical
+//!    path afterwards.
+//! 2. **sim**: a deterministic virtual straggler
+//!    (`straggler_prob = 1`), as a replayable reference — virtual delay
+//!    is charged identically on both paths, isolating the real-time
+//!    dispatch difference.
+//!
+//! Emits `bench_results/BENCH_dispatch.json` and exits non-zero if the
+//! pipelined path regresses more than 10% behind the serial barrier
+//! (wired into CI as a non-blocking smoke job).
+//!
+//! ```bash
+//! cargo bench --bench dispatch [-- --quick] [--straggle-ms 50]
+//! ```
+
+use std::sync::Arc;
+
+use hss::bench::{fmt_ms, BenchArgs, BenchRunner, Table};
+use hss::coordinator::TreeBuilder;
+use hss::data::registry;
+use hss::dist::worker::{self, WorkerConfig};
+use hss::dist::{FaultPlan, SimBackend, TcpBackend};
+use hss::objectives::Problem;
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(5);
+    let runner = if bargs.quick {
+        BenchRunner::quick()
+    } else {
+        BenchRunner { warmup: 1, samples: bargs.trials }
+    };
+    let straggle_ms = bargs.args.u64("straggle-ms", 50)?;
+    let (k, mu, seed) = (25usize, 150usize, 42u64);
+    let ds = registry::load("csn-2k", seed)?;
+    let problem = Problem::exemplar(ds, k, seed);
+
+    let mut table = Table::new(
+        &format!(
+            "round dispatch with 1 injected straggler \
+             (csn-2k, k={k}, mu={mu}, straggle {straggle_ms}ms)"
+        ),
+        &["backend", "mode", "wall", "overlap_ms", "requeued"],
+    );
+
+    // ---- tcp: real protocol workers, one of them slow --------------------
+    let spawn = |ms: u64| {
+        worker::spawn_in_process(WorkerConfig {
+            listen: "127.0.0.1:0".into(),
+            capacity: mu,
+            straggle_ms: ms,
+        })
+    };
+    let addrs = vec![spawn(0)?, spawn(0)?, spawn(straggle_ms)?];
+    let tcp = Arc::new(TcpBackend::new(mu, addrs)?);
+    let tree = TreeBuilder::new(mu).backend(tcp.clone()).build();
+
+    let mut requeued = 0u64;
+    let s_serial = runner.time(|| {
+        let r = tree.run_serial(&problem, seed).unwrap();
+        requeued = r.requeued_parts;
+    });
+    table.row(vec![
+        "tcp".into(),
+        "serial".into(),
+        fmt_ms(&s_serial),
+        "0.0".into(),
+        requeued.to_string(),
+    ]);
+
+    let mut overlap = 0.0f64;
+    let s_piped = runner.time(|| {
+        let r = tree.run(&problem, seed).unwrap();
+        overlap = r.straggler_overlap_ms;
+        requeued = r.requeued_parts;
+    });
+    table.row(vec![
+        "tcp".into(),
+        "pipelined".into(),
+        fmt_ms(&s_piped),
+        format!("{overlap:.1}"),
+        requeued.to_string(),
+    ]);
+    tcp.shutdown_workers();
+
+    // ---- sim: deterministic virtual straggler ----------------------------
+    let faults = FaultPlan {
+        straggler_prob: 1.0,
+        straggler_delay_ms: straggle_ms as f64,
+        ..FaultPlan::default()
+    };
+    let sim_tree = |f: &FaultPlan| {
+        TreeBuilder::new(mu)
+            .backend(Arc::new(SimBackend::new(mu).with_faults(f.clone())))
+            .build()
+    };
+    let s_sim_serial = runner.time(|| {
+        sim_tree(&faults).run_serial(&problem, seed).unwrap();
+    });
+    let mut sim_overlap = 0.0f64;
+    let s_sim_piped = runner.time(|| {
+        let r = sim_tree(&faults).run(&problem, seed).unwrap();
+        sim_overlap = r.straggler_overlap_ms;
+    });
+    table.row(vec![
+        "sim".into(),
+        "serial".into(),
+        fmt_ms(&s_sim_serial),
+        "0.0".into(),
+        "0".into(),
+    ]);
+    table.row(vec![
+        "sim".into(),
+        "pipelined".into(),
+        fmt_ms(&s_sim_piped),
+        format!("{sim_overlap:.1}"),
+        "0".into(),
+    ]);
+
+    table.print();
+    table.save_json("BENCH_dispatch").map_err(hss::error::Error::Io)?;
+
+    let speedup = s_serial.mean() / s_piped.mean();
+    println!(
+        "\ntcp straggler round-trip: serial {:.1} ms vs pipelined {:.1} ms ({speedup:.3}x); \
+         coordinator overlapped {overlap:.1} ms of straggler tail per run",
+        s_serial.mean(),
+        s_piped.mean()
+    );
+    // Smoke gate (CI runs this job non-blocking): the pipelined path
+    // must never be meaningfully SLOWER than the barrier it replaces.
+    // Its win scales with coordinator-side round work, so on this small
+    // reference instance we only guard against regression.
+    if s_piped.mean() > s_serial.mean() * 1.10 {
+        eprintln!(
+            "DISPATCH REGRESSION: pipelined {:.1} ms > 1.10 × serial {:.1} ms",
+            s_piped.mean(),
+            s_serial.mean()
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -29,6 +29,15 @@ impl Compressor for LazyGreedy {
     fn compress(&self, problem: &Problem, candidates: &[u32], _seed: u64) -> Result<Solution> {
         lazy_greedy_core(problem, candidates, None)
     }
+
+    fn boxed_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+
+    fn full_k(&self) -> bool {
+        // greedy fills to k unless gains saturate to ≤ 0 early
+        true
+    }
 }
 
 #[cfg(test)]

@@ -52,6 +52,24 @@ pub trait Compressor: Send + Sync {
     /// Compress `candidates` (global ids) down to ≤ k feasible items.
     /// `seed` derandomizes any internal randomness per machine.
     fn compress(&self, problem: &Problem, candidates: &[u32], seed: u64) -> Result<Solution>;
+
+    /// Clone into an owned trait object. Event-driven backends
+    /// ([`crate::dist::Backend::submit_round`]) run rounds on background
+    /// threads that outlive the caller's borrow, so they need an owned
+    /// copy of the compressor.
+    fn boxed_clone(&self) -> Box<dyn Compressor>;
+
+    /// `true` if, under a plain cardinality constraint, this compressor
+    /// *usually* returns exactly `min(k, candidates.len())` items (it
+    /// may still stop early when every remaining marginal gain is
+    /// non-positive). The pipelined tree runner uses this as a
+    /// size-prediction hint to pre-compute the next round's partition
+    /// while stragglers finish; a wrong prediction is detected and the
+    /// partition recomputed, so this is a performance hint, never a
+    /// correctness input.
+    fn full_k(&self) -> bool {
+        false
+    }
 }
 
 /// Shared helper: run plain greedy with a lazy (Minoux) priority queue

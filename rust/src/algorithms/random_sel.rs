@@ -41,6 +41,16 @@ impl Compressor for RandomCompressor {
         let value = problem.value(&items);
         Ok(Solution { items, value })
     }
+
+    fn boxed_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+
+    fn full_k(&self) -> bool {
+        // under a plain cardinality constraint every candidate is
+        // addable, so random selection always fills to min(k, n)
+        true
+    }
 }
 
 #[cfg(test)]

@@ -48,6 +48,10 @@ impl Compressor for StochasticGreedy {
         };
         lazy_greedy_core(problem, candidates, Some(&mut filter))
     }
+
+    fn boxed_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

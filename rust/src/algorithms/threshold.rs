@@ -79,6 +79,10 @@ impl Compressor for ThresholdGreedy {
         }
         Ok(Solution { value: oracle.value(), items: selected })
     }
+
+    fn boxed_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -151,9 +151,12 @@ impl RunConfig {
             // CLI flags override"). TcpBackend::new rejects an empty
             // list at build time.
         }
-        if let BackendChoice::Sim { faults } = &mut cfg.backend {
+        if let BackendChoice::Sim { faults, schedule } = &mut cfg.backend {
             if let Some(sim) = v.get("sim") {
                 *faults = parse_fault_plan(sim)?;
+                if let Some(entry) = sim.get("capacity_schedule") {
+                    *schedule = parse_capacity_schedule(entry)?;
+                }
             }
         }
         // dataset names validate eagerly
@@ -230,6 +233,35 @@ fn capacity_from_json(v: &Json) -> Result<CapacityProfile> {
          \"200x8\"), or an array of numbers"
             .into(),
     ))
+}
+
+/// Parse a `sim.capacity_schedule` config value: an array of per-round
+/// profiles (each in any [`capacity_from_json`] form) or a single
+/// string in the CLI's `--sim-capacity-schedule` grammar
+/// (`PROFILE[;PROFILE…]`). Wrong types are an error, never silently a
+/// static fleet.
+fn parse_capacity_schedule(v: &Json) -> Result<Vec<CapacityProfile>> {
+    let schedule: Vec<CapacityProfile> = if let Some(entries) = v.as_arr() {
+        entries.iter().map(capacity_from_json).collect::<Result<Vec<_>>>()?
+    } else if let Some(text) = v.as_str() {
+        text.split(';')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(CapacityProfile::parse)
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        return Err(Error::Config(
+            "'sim.capacity_schedule' must be an array of capacity profiles or a \
+             'PROFILE[;PROFILE...]' string"
+                .into(),
+        ));
+    };
+    if schedule.is_empty() {
+        return Err(Error::Config(
+            "'sim.capacity_schedule' needs at least one profile".into(),
+        ));
+    }
+    Ok(schedule)
 }
 
 /// Parse a u64 config field losslessly (decimal string above 2^53 —
@@ -367,6 +399,51 @@ mod tests {
     }
 
     #[test]
+    fn parses_sim_capacity_schedule_in_all_profile_forms() {
+        // round-indexed fleet script: numbers, profile strings and
+        // arrays are all accepted (the --capacity forms)
+        let cfg = RunConfig::from_json_text(
+            r#"{"backend":"sim","sim":{"capacity_schedule":[400,"200x2",[100,50]]}}"#,
+        )
+        .unwrap();
+        match &cfg.backend {
+            BackendChoice::Sim { schedule, .. } => {
+                assert_eq!(schedule.len(), 3);
+                assert_eq!(schedule[0], CapacityProfile::uniform(400));
+                assert_eq!(schedule[1].caps(), &[200, 200]);
+                assert_eq!(schedule[2].caps(), &[100, 50]);
+            }
+            other => panic!("wrong backend {other:?}"),
+        }
+        // the built backend replays the script round by round
+        let backend = cfg.build_backend().unwrap();
+        assert_eq!(backend.profile(), CapacityProfile::uniform(400));
+        // the CLI's PROFILE[;PROFILE…] grammar works as a string too
+        let cli_form = RunConfig::from_json_text(
+            r#"{"backend":"sim","sim":{"capacity_schedule":"400;200x2;100,50"}}"#,
+        )
+        .unwrap();
+        match &cli_form.backend {
+            BackendChoice::Sim { schedule, .. } => {
+                assert_eq!(schedule.len(), 3);
+                assert_eq!(schedule[2].caps(), &[100, 50]);
+            }
+            other => panic!("wrong backend {other:?}"),
+        }
+        // malformed entries and wrong types are rejected at parse time,
+        // never silently a static fleet
+        for bad in [
+            r#"{"backend":"sim","sim":{"capacity_schedule":["zebra"]}}"#,
+            r#"{"backend":"sim","sim":{"capacity_schedule":[0]}}"#,
+            r#"{"backend":"sim","sim":{"capacity_schedule":true}}"#,
+            r#"{"backend":"sim","sim":{"capacity_schedule":[]}}"#,
+            r#"{"backend":"sim","sim":{"capacity_schedule":";"}}"#,
+        ] {
+            assert!(RunConfig::from_json_text(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
     fn parses_sim_backend_faults() {
         let cfg = RunConfig::from_json_text(
             r#"{"backend":"sim","sim":{"loss_per_round":1,"loss_prob":0.1,
@@ -374,7 +451,7 @@ mod tests {
         )
         .unwrap();
         match &cfg.backend {
-            BackendChoice::Sim { faults } => {
+            BackendChoice::Sim { faults, .. } => {
                 assert_eq!(faults.machine_loss_per_round, 1);
                 assert_eq!(faults.loss_prob, 0.1);
                 assert_eq!(faults.straggler_prob, 0.2);
@@ -422,7 +499,7 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.seed, u64::MAX);
         match &cfg.backend {
-            BackendChoice::Sim { faults } => assert_eq!(faults.seed, u64::MAX - 1),
+            BackendChoice::Sim { faults, .. } => assert_eq!(faults.seed, u64::MAX - 1),
             other => panic!("wrong backend {other:?}"),
         }
         assert!(RunConfig::from_json_text(r#"{"seed":-3}"#).is_err());

@@ -27,6 +27,13 @@ pub struct RoundMetrics {
     /// shared-nothing deployment holds in RAM, *not* wire traffic.
     pub rows_resident_bytes: u64,
     pub wall_ms: f64,
+    /// Straggler tail the pipelined coordinator overlapped: wall-clock
+    /// between the round's *first* and *last* part completion, during
+    /// which the event-driven tree runner builds the surviving set and
+    /// pre-computes the next round's plan/partition instead of idling
+    /// at a barrier. 0 on the serial (`run_round`) path, which observes
+    /// nothing until the whole round is done.
+    pub straggler_overlap_ms: f64,
     pub best_value: f64,
 }
 
@@ -98,6 +105,7 @@ mod tests {
             bytes_shuffled: 400,
             rows_resident_bytes: 6_800,
             wall_ms: 1.0,
+            straggler_overlap_ms: 0.4,
             best_value: 5.0,
         });
         m.record_round(RoundMetrics {
@@ -110,6 +118,7 @@ mod tests {
             bytes_shuffled: 80,
             rows_resident_bytes: 1_360,
             wall_ms: 0.5,
+            straggler_overlap_ms: 0.0,
             best_value: 6.0,
         });
         assert_eq!(m.num_rounds(), 2);

@@ -65,8 +65,20 @@ pub fn weighted_balanced_random_partition(
     caps: &[usize],
     rng: &mut Rng,
 ) -> Vec<Vec<u32>> {
+    let labels = weighted_balanced_labels(items.len(), caps, rng);
+    apply_labels(items, &labels, caps.len())
+}
+
+/// The label assignment underlying
+/// [`weighted_balanced_random_partition`]: input position `i` goes to
+/// part `labels[i]`. The assignment depends only on `(n, caps, rng)` —
+/// never on the item *values* — which is what lets the pipelined tree
+/// runner draw the next round's partition the moment the surviving-set
+/// **size** is known, while the items themselves are still being
+/// compressed by stragglers. Consumes the identical rng stream as the
+/// full partition call.
+pub fn weighted_balanced_labels(n: usize, caps: &[usize], rng: &mut Rng) -> Vec<u32> {
     assert!(!caps.is_empty(), "capacity vector must be non-empty");
-    let n = items.len();
     let total: usize = caps.iter().sum();
     assert!(
         total >= n,
@@ -90,7 +102,22 @@ pub fn weighted_balanced_random_partition(
         let j = rng.range(i, labels.len());
         labels.swap(i, j);
     }
-    let mut out: Vec<Vec<u32>> = budgets.iter().map(|&b| Vec::with_capacity(b)).collect();
+    labels.truncate(n);
+    labels
+}
+
+/// Materialize a label assignment: item `i` goes to part `labels[i]`,
+/// preserving input order within every part (the order machines see —
+/// and greedy tie-breaking depends on — so it is part of the
+/// deterministic contract).
+pub fn apply_labels(items: &[u32], labels: &[u32], parts: usize) -> Vec<Vec<u32>> {
+    debug_assert_eq!(items.len(), labels.len());
+    // one counts pass so every part allocates exactly once
+    let mut sizes = vec![0usize; parts];
+    for &l in labels {
+        sizes[l as usize] += 1;
+    }
+    let mut out: Vec<Vec<u32>> = sizes.into_iter().map(Vec::with_capacity).collect();
     for (idx, &item) in items.iter().enumerate() {
         out[labels[idx] as usize].push(item);
     }
@@ -151,6 +178,25 @@ mod tests {
         let mut all: Vec<u32> = parts.iter().flatten().copied().collect();
         all.sort_unstable();
         all
+    }
+
+    #[test]
+    fn labels_plus_apply_reproduce_the_partition_bit_exactly() {
+        // the pipelined tree runner draws labels from the item COUNT
+        // alone, then scatters items in as their parts complete — that
+        // is only sound if (labels, apply) is the partition, same rng
+        // stream included
+        let caps = vec![50usize, 20, 20];
+        let items: Vec<u32> = (0..80).map(|i| i * 3 + 1).collect();
+        let mut rng_a = Rng::seed_from(9);
+        let mut rng_b = rng_a.clone();
+        let direct = weighted_balanced_random_partition(&items, &caps, &mut rng_a);
+        let labels = weighted_balanced_labels(items.len(), &caps, &mut rng_b);
+        assert_eq!(labels.len(), items.len());
+        let applied = apply_labels(&items, &labels, caps.len());
+        assert_eq!(direct, applied);
+        // the streams stay aligned after the call
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
     }
 
     #[test]

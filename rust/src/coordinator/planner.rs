@@ -124,16 +124,29 @@ pub fn round_bound_for(n: usize, k: usize, profile: &CapacityProfile) -> usize {
 }
 
 /// Proposition 3.1: `r ≤ ⌈log_{µ/k}(n/µ)⌉ + 1` for `n ≥ µ > k`;
-/// 1 when `n ≤ µ`.
+/// 1 when `n ≤ µ` (the single-round case — one machine holds
+/// everything, no logarithm involved).
+///
+/// Outside the framework's standing assumption `µ > k` the geometric
+/// decay argument collapses (the log base is ≤ 1, driving `r` negative,
+/// infinite or NaN); [`RoundPlan`] rejects that regime up front, and
+/// this standalone helper returns the trivial ceiling `max(n, 1)`
+/// instead of laundering a NaN through a saturating float cast.
 pub fn round_bound(n: usize, k: usize, capacity: usize) -> usize {
     if n <= capacity {
+        // n ≤ µ: explicitly one round — never reaches the formula, so
+        // `ratio < 1` can't drive r negative
         return 1;
     }
-    let ratio = (n as f64) / (capacity as f64);
-    let base = (capacity as f64) / (k as f64);
-    // guard: µ > k guarantees base > 1
-    let r = ratio.ln() / base.ln();
-    (r.ceil() as usize).max(0) + 1
+    if k == 0 || capacity <= k {
+        // µ ≤ k (or k = 0): Prop 3.1 does not apply; machines cannot
+        // shrink the surviving set geometrically
+        return n.max(1);
+    }
+    let ratio = (n as f64) / (capacity as f64); // > 1 here
+    let base = (capacity as f64) / (k as f64); // > 1 here
+    let r = ratio.ln() / base.ln(); // finite, > 0
+    r.ceil() as usize + 1
 }
 
 #[cfg(test)]
@@ -175,6 +188,26 @@ mod tests {
         assert_eq!(round_bound(50, 10, 64), 1);
         // barely multi-round
         assert_eq!(round_bound(65, 10, 64), 2);
+    }
+
+    #[test]
+    fn round_bound_boundaries_are_explicit() {
+        // the n ≤ µ single-round boundary, exactly at and around µ
+        assert_eq!(round_bound(64, 10, 64), 1);
+        assert_eq!(round_bound(1, 10, 64), 1);
+        assert_eq!(round_bound(0, 10, 64), 1);
+        // µ = k and µ < k: outside Prop 3.1 — trivial finite ceiling,
+        // never a NaN-driven cast (the old `.max(0)` on usize was dead
+        // code papering over exactly this)
+        assert_eq!(round_bound(100, 10, 10), 100);
+        assert_eq!(round_bound(100, 50, 20), 100);
+        // k = 0 is degenerate the same way
+        assert_eq!(round_bound(100, 0, 10), 100);
+        // µ = k+1 (the smallest valid margin) still uses the formula
+        let b = round_bound(10_000, 10, 11);
+        assert!(b >= 2 && b < usize::MAX, "bound {b}");
+        // monotone-ish sanity: more capacity never raises the bound
+        assert!(round_bound(10_000, 10, 100) >= round_bound(10_000, 10, 1000));
     }
 
     #[test]

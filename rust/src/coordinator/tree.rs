@@ -14,16 +14,38 @@
 //! round, so a fleet that shrinks mid-run (scripted via
 //! [`crate::dist::SimBackend`] capacity schedules) is re-planned
 //! against the machines that remain.
+//!
+//! ## Pipelined rounds
+//!
+//! [`TreeRunner::run`] drives rounds through the event-driven
+//! [`Backend::submit_round`] API: partial solutions union into
+//! `A_{t+1}` **as they arrive**, and — when every machine's output size
+//! is predictable up front (plain cardinality constraint and a
+//! fill-to-k compressor, the paper's default setting) — the next
+//! round's [`RoundPlan`] and weighted partition are drawn the moment
+//! round `t` is submitted, then *filled in* item-by-item as parts
+//! complete. By the time the round's last straggler reports, round
+//! `t+1` is fully partitioned and is submitted immediately; on the TCP
+//! backend its parts reach already-idle persistent dispatchers with no
+//! thread teardown or re-handshake in between. A size misprediction
+//! (greedy saturating below k) is detected per part and the partition
+//! recomputed from the untouched rng state, so pipelining is
+//! **bit-identical** to the serial barrier path
+//! ([`TreeRunner::run_serial`]) on every backend — overlap changes
+//! wall-clock (reported per round as
+//! [`RoundMetrics::straggler_overlap_ms`]), never the answer.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::algorithms::{Compressor, LazyGreedy, Solution};
+use crate::constraints::spec::ConstraintSpec;
 use crate::coordinator::capacity::CapacityProfile;
 use crate::coordinator::metrics::{Metrics, RoundMetrics};
 use crate::coordinator::partitioner;
 use crate::coordinator::planner::RoundPlan;
-use crate::dist::{Backend, LocalBackend};
-use crate::error::Result;
+use crate::dist::{Backend, LocalBackend, PartEvent};
+use crate::error::{Error, Result};
 use crate::objectives::Problem;
 use crate::util::rng::Rng;
 
@@ -140,6 +162,10 @@ pub struct TreeResult {
     pub bytes_shuffled: u64,
     /// Feature-row bytes resident across machines, summed over rounds.
     pub rows_resident_bytes: u64,
+    /// Straggler tail overlapped by the pipelined event loop, summed
+    /// over rounds (see [`RoundMetrics::straggler_overlap_ms`]; 0 on
+    /// the serial path).
+    pub straggler_overlap_ms: f64,
     pub wall_ms: f64,
 }
 
@@ -175,19 +201,159 @@ pub struct TreeRunner {
     backend: Arc<dyn Backend>,
 }
 
+/// A fully-partitioned upcoming round, pre-computed by the previous
+/// round's pipelined event loop while stragglers were still running.
+struct PreparedRound {
+    machines: usize,
+    parts: Vec<Vec<u32>>,
+    round_seed: u64,
+}
+
+/// In-flight next-round speculation: the size of every machine's output
+/// is predicted up front (`min(k, |part|)` — exact for fill-to-k
+/// compressors under a plain cardinality constraint unless gains
+/// saturate), which pins `|A_{t+1}|` and therefore the next round's
+/// machine count, partition labels and positions before a single part
+/// has completed. Completed parts scatter their items straight into the
+/// pre-sized next-round parts; a size misprediction kills the
+/// speculation (the master rng was never touched, so the honest
+/// recomputation is bit-identical to the serial path).
+struct Speculation {
+    /// Predicted output size per current-round part.
+    expected: Vec<usize>,
+    /// Global index of part `j`'s first output item in `A_{t+1}`
+    /// (part-order concatenation).
+    offsets: Vec<usize>,
+    /// Global index → next-round part (the partitioner's labels).
+    labels: Vec<u32>,
+    /// Global index → slot within its next-round part (input order —
+    /// identical to what `apply_labels` would produce).
+    pos: Vec<usize>,
+    machines: usize,
+    next_parts: Vec<Vec<u32>>,
+    round_seed: u64,
+    /// Master-rng state after this round's draws — adopted on success.
+    rng_after: Rng,
+}
+
+impl Speculation {
+    fn build(
+        current_parts: &[Vec<u32>],
+        k_eff: usize,
+        profile: &CapacityProfile,
+        rng: &Rng,
+    ) -> Option<Speculation> {
+        let expected: Vec<usize> =
+            current_parts.iter().map(|p| p.len().min(k_eff)).collect();
+        let n_next: usize = expected.iter().sum();
+        if n_next == 0 {
+            return None;
+        }
+        let machines = profile.machines_for(n_next);
+        let caps = profile.round_caps(machines);
+        let mut rng_next = rng.clone();
+        let labels = partitioner::weighted_balanced_labels(n_next, &caps, &mut rng_next);
+        let round_seed = rng_next.next_u64();
+        let mut sizes = vec![0usize; machines];
+        let mut pos = Vec::with_capacity(n_next);
+        for &l in &labels {
+            pos.push(sizes[l as usize]);
+            sizes[l as usize] += 1;
+        }
+        let next_parts: Vec<Vec<u32>> = sizes.iter().map(|&s| vec![0u32; s]).collect();
+        let mut offsets = Vec::with_capacity(expected.len());
+        let mut acc = 0usize;
+        for &e in &expected {
+            offsets.push(acc);
+            acc += e;
+        }
+        Some(Speculation {
+            expected,
+            offsets,
+            labels,
+            pos,
+            machines,
+            next_parts,
+            round_seed,
+            rng_after: rng_next,
+        })
+    }
+
+    /// Scatter one completed part's items into the pre-sized next-round
+    /// parts. Returns `false` (speculation dead) if the part's size
+    /// missed the prediction.
+    fn place(&mut self, part: usize, items: &[u32]) -> bool {
+        if items.len() != self.expected[part] {
+            return false;
+        }
+        let off = self.offsets[part];
+        for (d, &item) in items.iter().enumerate() {
+            let g = off + d;
+            self.next_parts[self.labels[g] as usize][self.pos[g]] = item;
+        }
+        true
+    }
+}
+
 impl TreeRunner {
-    /// Run on the problem's full ground set.
+    /// Run on the problem's full ground set — pipelined: rounds are
+    /// consumed event-by-event and the next round is pre-computed while
+    /// stragglers finish. Bit-identical to [`TreeRunner::run_serial`].
     pub fn run(&self, problem: &Problem, seed: u64) -> Result<TreeResult> {
         let all: Vec<u32> = (0..problem.n() as u32).collect();
         self.run_on(problem, all, seed)
     }
 
-    /// Run on an explicit starting set `A_0` (used by tests and by the
-    /// baselines that embed a tree run).
+    /// Serial reference path: every round goes through the blocking
+    /// [`Backend::run_round`] barrier and all post-processing happens
+    /// after it. Kept for the dispatch bench and the bit-identity
+    /// regression suite.
+    pub fn run_serial(&self, problem: &Problem, seed: u64) -> Result<TreeResult> {
+        let all: Vec<u32> = (0..problem.n() as u32).collect();
+        self.run_on_serial(problem, all, seed)
+    }
+
+    /// Pipelined run on an explicit starting set `A_0` (used by tests
+    /// and by the baselines that embed a tree run).
     pub fn run_on(&self, problem: &Problem, a0: Vec<u32>, seed: u64) -> Result<TreeResult> {
+        self.run_inner(problem, a0, seed, true)
+    }
+
+    /// Serial-barrier run on an explicit starting set `A_0`.
+    pub fn run_on_serial(
+        &self,
+        problem: &Problem,
+        a0: Vec<u32>,
+        seed: u64,
+    ) -> Result<TreeResult> {
+        self.run_inner(problem, a0, seed, false)
+    }
+
+    /// `true` when every machine's output size is predictable up front:
+    /// a fill-to-k compressor under the plain cardinality constraint.
+    /// Gates next-round speculation; mispredictions are still handled.
+    fn sizes_predictable(&self, problem: &Problem) -> bool {
+        self.compressor.full_k()
+            && matches!(
+                problem.constraint.wire_spec(),
+                Some(ConstraintSpec::Cardinality { .. })
+            )
+    }
+
+    fn run_inner(
+        &self,
+        problem: &Problem,
+        a0: Vec<u32>,
+        seed: u64,
+        pipelined: bool,
+    ) -> Result<TreeResult> {
         // validates µ > k for every machine class up front
         let plan = RoundPlan::for_profile(a0.len(), problem.k, &self.backend.profile())?;
         let bound = plan.round_bound;
+        let k_eff = problem.k.min(problem.constraint.max_cardinality());
+        let speculate = pipelined
+            && self.partition_mode == PartitionMode::Balanced
+            && self.sizes_predictable(problem);
 
         let metrics = Metrics::new();
         let mut rng = Rng::seed_from(seed ^ 0x7EE5_EED5);
@@ -197,33 +363,127 @@ impl TreeRunner {
         #[allow(unused_assignments)]
         let mut final_round_best: Option<Solution> = None;
         let evals_before = problem.eval_count();
-        let t_start = std::time::Instant::now();
+        let t_start = Instant::now();
         let mut sim_delay_ms = 0.0f64;
+        let mut overlap_total = 0.0f64;
         let mut round = 0usize;
+        // next round, if the previous round's overlap window finished it
+        let mut prepared: Option<PreparedRound> = None;
 
         loop {
             // Re-query the fleet every round: a scripted backend (sim
             // capacity schedules) may shrink or reshape it mid-run, and
-            // parts must be sized to the machines that will execute them.
-            let profile = self.backend.profile();
-            let m_t = profile.machines_for(a.len());
-            let caps = profile.round_caps(m_t);
-            let parts = match self.partition_mode {
-                PartitionMode::Balanced => {
-                    partitioner::weighted_balanced_random_partition(&a, &caps, &mut rng)
-                }
-                PartitionMode::Iid => partitioner::iid_partition(&a, m_t, &mut rng),
-                PartitionMode::Contiguous => {
-                    partitioner::weighted_contiguous_partition(&a, &caps)
+            // parts must be sized to the machines that will execute
+            // them. (A prepared round queried the identical profile —
+            // the schedule only advances when a round is submitted.)
+            let (m_t, parts, round_seed) = match prepared.take() {
+                Some(p) => (p.machines, p.parts, p.round_seed),
+                None => {
+                    let profile = self.backend.profile();
+                    let m_t = profile.machines_for(a.len());
+                    let caps = profile.round_caps(m_t);
+                    let parts = match self.partition_mode {
+                        PartitionMode::Balanced => {
+                            partitioner::weighted_balanced_random_partition(
+                                &a, &caps, &mut rng,
+                            )
+                        }
+                        PartitionMode::Iid => partitioner::iid_partition(&a, m_t, &mut rng),
+                        PartitionMode::Contiguous => {
+                            partitioner::weighted_contiguous_partition(&a, &caps)
+                        }
+                    };
+                    let round_seed = rng.next_u64();
+                    (m_t, parts, round_seed)
                 }
             };
-            let round_seed = rng.next_u64();
-            let r_start = std::time::Instant::now();
-            let outcome = self
-                .backend
-                .run_round(problem, self.compressor.as_ref(), &parts, round_seed)?;
-            sim_delay_ms += outcome.sim_delay_ms;
-            let sols = outcome.solutions;
+            let r_start = Instant::now();
+
+            let mut slots: Vec<Option<Solution>> = vec![None; m_t];
+            let mut requeued_parts = 0usize;
+            let mut requeued_ids = 0usize;
+            let mut round_delay = 0.0f64;
+            let mut overlap_ms = 0.0f64;
+
+            if pipelined {
+                let mut handle = self.backend.submit_round(
+                    problem,
+                    self.compressor.as_ref(),
+                    &parts,
+                    round_seed,
+                )?;
+                // Overlap window: with the round in flight and sizes
+                // predictable, draw the next round's plan + partition
+                // NOW (from a clone — the master rng stays untouched
+                // until the prediction is verified). The fleet profile
+                // for round t+1 is already observable: schedules
+                // advance at submission.
+                let mut spec: Option<Speculation> = if speculate && m_t > 1 {
+                    Speculation::build(&parts, k_eff, &self.backend.profile(), &rng)
+                } else {
+                    None
+                };
+                let mut first_done: Option<Instant> = None;
+                while let Some(ev) = handle.next_event() {
+                    match ev? {
+                        PartEvent::Done { part, solution } => {
+                            if first_done.is_none() {
+                                first_done = Some(Instant::now());
+                            }
+                            if let Some(s) = spec.as_mut() {
+                                if !s.place(part, &solution.items) {
+                                    // misprediction: recompute honestly
+                                    // at the loop top from the master rng
+                                    spec = None;
+                                }
+                            }
+                            slots[part] = Some(solution);
+                        }
+                        PartEvent::Requeued { reshipped_ids, .. } => {
+                            requeued_parts += 1;
+                            requeued_ids += reshipped_ids;
+                        }
+                        PartEvent::Delay { virtual_ms, .. } => round_delay += virtual_ms,
+                        PartEvent::MachineLost { .. } => {}
+                    }
+                }
+                overlap_ms = first_done
+                    .map(|t| t.elapsed().as_secs_f64() * 1e3)
+                    .unwrap_or(0.0);
+                // every prediction held: the next round is ready — adopt
+                // the advanced rng and ship the pre-built partition
+                if let Some(s) = spec {
+                    rng = s.rng_after;
+                    prepared = Some(PreparedRound {
+                        machines: s.machines,
+                        parts: s.next_parts,
+                        round_seed: s.round_seed,
+                    });
+                }
+            } else {
+                let outcome = self.backend.run_round(
+                    problem,
+                    self.compressor.as_ref(),
+                    &parts,
+                    round_seed,
+                )?;
+                requeued_parts = outcome.requeued_parts;
+                requeued_ids = outcome.requeued_ids;
+                round_delay = outcome.sim_delay_ms;
+                for (i, s) in outcome.solutions.into_iter().enumerate() {
+                    slots[i] = Some(s);
+                }
+            }
+            sim_delay_ms += round_delay;
+            overlap_total += overlap_ms;
+
+            let sols = slots
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    s.ok_or_else(|| Error::Worker(format!("machine {i} never reported")))
+                })
+                .collect::<Result<Vec<Solution>>>()?;
 
             let max_load = parts.iter().map(Vec::len).max().unwrap_or(0);
             let mut next: Vec<u32> = Vec::with_capacity(sols.len() * problem.k);
@@ -234,9 +494,12 @@ impl TreeRunner {
                 }
                 next.extend_from_slice(&sol.items);
             }
-            // Parts are disjoint, so the union has no duplicates; sort for
-            // run-to-run determinism independent of machine completion order.
-            next.sort_unstable();
+            // Parts are disjoint, so the union has no duplicates. The
+            // order is part-order concatenation — deterministic (parts
+            // and their solutions are keyed by index, never by
+            // completion order) and, unlike a sort, known incrementally
+            // the moment each part completes, which is what lets the
+            // speculative scatter above fill next-round parts in flight.
 
             metrics.record_round(RoundMetrics {
                 round,
@@ -244,14 +507,15 @@ impl TreeRunner {
                 machines: m_t,
                 max_machine_load: max_load,
                 output_items: next.len(),
-                requeued_parts: outcome.requeued_parts,
+                requeued_parts,
                 // the wire carries item ids only: part ids out to the
                 // machines (plus re-shipments after machine loss) and
                 // solution ids back — never feature rows
-                bytes_shuffled: ((a.len() + outcome.requeued_ids + next.len())
+                bytes_shuffled: ((a.len() + requeued_ids + next.len())
                     * std::mem::size_of::<u32>()) as u64,
                 rows_resident_bytes: (a.len() * problem.dataset.row_bytes()) as u64,
-                wall_ms: r_start.elapsed().as_secs_f64() * 1e3 + outcome.sim_delay_ms,
+                wall_ms: r_start.elapsed().as_secs_f64() * 1e3 + round_delay,
+                straggler_overlap_ms: overlap_ms,
                 best_value: best.value,
             });
 
@@ -281,6 +545,7 @@ impl TreeRunner {
             requeued_parts: metrics.total_requeued(),
             bytes_shuffled: metrics.total_bytes_shuffled(),
             rows_resident_bytes: metrics.total_rows_resident_bytes(),
+            straggler_overlap_ms: overlap_total,
             // includes injected virtual delay, consistent with per-round wall_ms
             wall_ms: t_start.elapsed().as_secs_f64() * 1e3 + sim_delay_ms,
         })
@@ -580,6 +845,77 @@ mod tests {
                 r.max_machine_load
             );
         }
+    }
+
+    #[test]
+    fn pipelined_run_is_bit_identical_to_serial_run() {
+        // speculation-friendly: exemplar gains fill every machine to k,
+        // so the pre-computed next-round partitions are used throughout
+        let ds = Arc::new(synthetic::csn_like(600, 21));
+        let p = Problem::exemplar(ds, 10, 21);
+        let t = TreeBuilder::new(50).build();
+        let piped = t.run(&p, 13).unwrap();
+        let serial = t.run_serial(&p, 13).unwrap();
+        assert_eq!(piped.best.items, serial.best.items);
+        assert_eq!(piped.best.value.to_bits(), serial.best.value.to_bits());
+        assert_eq!(piped.rounds, serial.rounds);
+        assert_eq!(piped.final_round_best.items, serial.final_round_best.items);
+        let pm: Vec<usize> = piped.per_round.iter().map(|r| r.machines).collect();
+        let sm: Vec<usize> = serial.per_round.iter().map(|r| r.machines).collect();
+        assert_eq!(pm, sm);
+        // the serial barrier observes nothing mid-round
+        for r in &serial.per_round {
+            assert_eq!(r.straggler_overlap_ms, 0.0);
+        }
+    }
+
+    #[test]
+    fn size_misprediction_falls_back_bit_identically() {
+        // mostly-zero modular weights: greedy saturates below k on most
+        // machines, so every speculative size prediction dies and the
+        // honest recomputation path must still match the serial run
+        let mut weights = vec![0.0f64; 200];
+        for (i, w) in weights.iter_mut().enumerate().take(200) {
+            if i % 7 == 0 {
+                *w = 1.0 + i as f64;
+            }
+        }
+        let p = Problem::modular(weights, 5, 2);
+        let t = TreeBuilder::new(25).build();
+        let piped = t.run(&p, 4).unwrap();
+        let serial = t.run_serial(&p, 4).unwrap();
+        assert_eq!(piped.best.items, serial.best.items);
+        assert_eq!(piped.best.value.to_bits(), serial.best.value.to_bits());
+        assert_eq!(piped.rounds, serial.rounds);
+        let po: Vec<usize> = piped.per_round.iter().map(|r| r.output_items).collect();
+        let so: Vec<usize> = serial.per_round.iter().map(|r| r.output_items).collect();
+        assert_eq!(po, so);
+    }
+
+    #[test]
+    fn pipelined_run_with_sim_faults_matches_serial_and_healthy() {
+        use crate::dist::{FaultPlan, SimBackend};
+        let ds = Arc::new(synthetic::csn_like(500, 22));
+        let p = Problem::exemplar(ds, 8, 22);
+        let faults = FaultPlan {
+            machine_loss_per_round: 1,
+            straggler_prob: 0.5,
+            straggler_delay_ms: 5.0,
+            ..FaultPlan::default()
+        };
+        let make = || {
+            Arc::new(SimBackend::new(50).with_faults(faults.clone()))
+        };
+        let piped = TreeBuilder::new(50).backend(make()).build().run(&p, 6).unwrap();
+        let serial =
+            TreeBuilder::new(50).backend(make()).build().run_serial(&p, 6).unwrap();
+        assert_eq!(piped.best.items, serial.best.items);
+        assert_eq!(piped.best.value.to_bits(), serial.best.value.to_bits());
+        assert_eq!(piped.requeued_parts, serial.requeued_parts);
+        // virtual straggler delay is charged identically on both paths
+        assert_eq!(piped.wall_ms > 0.0, serial.wall_ms > 0.0);
+        let healthy = TreeBuilder::new(50).build().run(&p, 6).unwrap();
+        assert_eq!(piped.best.items, healthy.best.items);
     }
 
     #[test]

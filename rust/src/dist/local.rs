@@ -3,20 +3,36 @@
 //!
 //! Machines execute on a small pool of OS threads (the testbed is a
 //! single host); XLA work funnels through the engine's device thread.
+//! Rounds are event-driven ([`Backend::submit_round`]): worker threads
+//! stream a [`PartEvent::Done`] the moment each machine finishes, so a
+//! consumer can overlap next-round work with in-flight machines instead
+//! of idling at the round barrier.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc};
 
-use crate::algorithms::{Compressor, Solution};
+use crate::algorithms::Compressor;
 use crate::coordinator::capacity::CapacityProfile;
-use crate::dist::{enforce_profile, machine_seeds, Backend, RoundOutcome};
-use crate::error::{Error, Result};
+use crate::dist::{enforce_profile, machine_seeds, Backend, PartEvent, RoundHandle};
+use crate::error::Result;
 use crate::objectives::Problem;
 
 /// Thread-pool execution backend with hard per-machine capacities.
 pub struct LocalBackend {
     profile: CapacityProfile,
     threads: usize,
+}
+
+/// Everything a round's worker threads share. Owned (the threads
+/// outlive the caller's borrows): the [`Problem`] clone shares the
+/// dataset, constraint and eval-counter Arcs, so cloning is cheap and
+/// oracle accounting still lands on the caller's counter.
+struct LocalRound {
+    problem: Problem,
+    compressor: Box<dyn Compressor>,
+    parts: Vec<Vec<u32>>,
+    seeds: Vec<u64>,
+    next: AtomicUsize,
 }
 
 impl LocalBackend {
@@ -58,47 +74,52 @@ impl Backend for LocalBackend {
         self.profile.clone()
     }
 
-    fn run_round(
+    fn submit_round(
         &self,
         problem: &Problem,
         compressor: &dyn Compressor,
         parts: &[Vec<u32>],
         round_seed: u64,
-    ) -> Result<RoundOutcome> {
+    ) -> Result<RoundHandle> {
         // capacity enforcement before any work starts
         enforce_profile(&self.profile, parts)?;
-
-        // per-machine deterministic seeds
-        let seeds = machine_seeds(round_seed, parts.len());
-
-        let next = AtomicUsize::new(0);
-        let results: Mutex<Vec<Option<Result<Solution>>>> =
-            Mutex::new((0..parts.len()).map(|_| None).collect());
-
-        let workers = self.threads.min(parts.len()).max(1);
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= parts.len() {
-                        break;
-                    }
-                    let sol = compressor.compress(problem, &parts[i], seeds[i]);
-                    results.lock().unwrap()[i] = Some(sol);
-                });
-            }
-        });
-
-        let results = results.into_inner().unwrap();
-        let mut solutions = Vec::with_capacity(parts.len());
-        for (i, r) in results.into_iter().enumerate() {
-            match r {
-                Some(Ok(sol)) => solutions.push(sol),
-                Some(Err(e)) => return Err(e),
-                None => return Err(Error::Worker(format!("machine {i} never ran"))),
-            }
+        if parts.is_empty() {
+            return Ok(RoundHandle::empty());
         }
-        Ok(RoundOutcome { solutions, requeued_parts: 0, requeued_ids: 0, sim_delay_ms: 0.0 })
+
+        let round = Arc::new(LocalRound {
+            problem: problem.clone(),
+            compressor: compressor.boxed_clone(),
+            parts: parts.to_vec(),
+            // per-machine deterministic seeds
+            seeds: machine_seeds(round_seed, parts.len()),
+            next: AtomicUsize::new(0),
+        });
+        let (tx, rx) = mpsc::channel();
+        let workers = self.threads.min(parts.len()).max(1);
+        for _ in 0..workers {
+            let round = Arc::clone(&round);
+            let tx = tx.clone();
+            std::thread::spawn(move || loop {
+                let i = round.next.fetch_add(1, Ordering::Relaxed);
+                if i >= round.parts.len() {
+                    break;
+                }
+                let sol =
+                    round.compressor.compress(&round.problem, &round.parts[i], round.seeds[i]);
+                let event = match sol {
+                    Ok(solution) => Ok(PartEvent::Done { part: i, solution }),
+                    Err(e) => Err(e),
+                };
+                let fatal = event.is_err();
+                // a closed channel means the consumer gave up on the
+                // round — stop quietly
+                if tx.send(event).is_err() || fatal {
+                    break;
+                }
+            });
+        }
+        Ok(RoundHandle::new(rx, parts.len()))
     }
 }
 
@@ -107,7 +128,7 @@ mod tests {
     use super::*;
     use crate::algorithms::LazyGreedy;
     use crate::data::synthetic;
-    use std::sync::Arc;
+    use crate::error::Error;
 
     #[test]
     fn matches_trait_contract_on_order_and_capacity() {
@@ -123,6 +144,31 @@ mod tests {
                 assert!(parts[i].contains(&item), "machine {i} leaked items");
             }
         }
+    }
+
+    #[test]
+    fn events_stream_one_done_per_part() {
+        let ds = Arc::new(synthetic::csn_like(120, 4));
+        let p = Problem::exemplar(ds, 3, 4);
+        let backend = LocalBackend::new(40).with_threads(2);
+        let parts: Vec<Vec<u32>> = (0..4).map(|i| (i * 30..(i + 1) * 30).collect()).collect();
+        let mut handle = backend.submit_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
+        let mut seen = vec![false; parts.len()];
+        while let Some(ev) = handle.next_event() {
+            match ev.unwrap() {
+                PartEvent::Done { part, solution } => {
+                    assert!(!seen[part], "part {part} completed twice");
+                    seen[part] = true;
+                    assert!(!solution.items.is_empty());
+                }
+                other => panic!("unexpected event on a healthy local round: {other:?}"),
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "missing Done events: {seen:?}");
+        assert_eq!(handle.completed(), 4);
+        // streamed events must agree with the barrier wrapper bit-exactly
+        let out = backend.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
+        assert_eq!(out.solutions.len(), 4);
     }
 
     #[test]

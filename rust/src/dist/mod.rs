@@ -15,10 +15,19 @@
 //!
 //! All backends share the same contract: capacity is enforced *before*
 //! any work starts (fixed capacity is the paper's premise), per-machine
-//! seeds are derived positionally from the round seed, and solutions come
-//! back in part order — so for a given `(problem, parts, round_seed)` all
-//! three backends produce **identical** solutions. Fault injection and
-//! wire transport change cost and availability, never the answer.
+//! seeds are derived positionally from the round seed, and solutions are
+//! keyed by part index — so for a given `(problem, parts, round_seed)`
+//! all three backends produce **identical** solutions. Fault injection
+//! and wire transport change cost and availability, never the answer.
+//!
+//! Rounds are **event-driven** (Backend v2): the required trait method
+//! is [`Backend::submit_round`], which returns a [`RoundHandle`]
+//! streaming per-part [`PartEvent`]s as machines report — completions,
+//! requeues after machine loss, fleet departures, injected virtual
+//! delay. The classic blocking [`Backend::run_round`] barrier is a
+//! provided wrapper (submit + drain), so single-round call sites are
+//! unchanged while the tree runner overlaps next-round preparation with
+//! a round's stragglers.
 //!
 //! Fleets may be **capacity-heterogeneous**: every backend carries a
 //! [`CapacityProfile`] (per-machine-class µ_p, cyclic — see
@@ -38,6 +47,7 @@ pub use local::LocalBackend;
 pub use sim::{FaultPlan, SimBackend};
 pub use tcp::TcpBackend;
 
+use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::algorithms::{Compressor, Solution};
@@ -63,7 +73,162 @@ pub struct RoundOutcome {
     pub sim_delay_ms: f64,
 }
 
+/// One observable state change of an in-flight round (Backend v2).
+///
+/// Events stream out of a [`RoundHandle`] as they happen, so the
+/// coordinator can overlap next-round preparation with the round's
+/// stragglers instead of idling at a barrier. Ordering guarantees (also
+/// documented normatively in `docs/PROTOCOL.md`):
+///
+/// * each part produces **exactly one** [`PartEvent::Done`] per round
+///   (or the round fails with an error before that);
+/// * every [`PartEvent::Requeued`] for a part precedes that part's
+///   `Done`;
+/// * events for *different* parts arrive in completion order, which is
+///   execution-dependent — consumers must never let it influence the
+///   answer (solutions are keyed by part index for exactly this reason).
+#[derive(Debug, Clone)]
+pub enum PartEvent {
+    /// Part `part` finished on some machine.
+    Done {
+        part: usize,
+        solution: Solution,
+    },
+    /// Part `part` was in flight on a machine that was lost; it went
+    /// back on the queue and its `reshipped_ids` item ids will cross
+    /// the coordinator↔machine boundary a second time.
+    Requeued {
+        part: usize,
+        reshipped_ids: usize,
+    },
+    /// A machine left the fleet mid-round (worker disconnect, injected
+    /// fault). Purely informational — the affected part surfaces
+    /// separately as [`PartEvent::Requeued`].
+    MachineLost {
+        machine: String,
+        detail: String,
+    },
+    /// Injected virtual straggler latency ([`SimBackend`] only).
+    Delay {
+        part: usize,
+        virtual_ms: f64,
+    },
+}
+
+/// Receiving end of one submitted round: yields [`PartEvent`]s as they
+/// happen and aggregates them into a [`RoundOutcome`].
+///
+/// Two consumption styles:
+///
+/// * **barrier** — call [`RoundHandle::finish`] immediately after
+///   submitting; it drains every event and returns the classic
+///   [`RoundOutcome`] (this is what the [`Backend::run_round`] default
+///   wrapper does);
+/// * **pipelined** — loop on [`RoundHandle::next_event`] and react to
+///   each event as it arrives (the tree runner unions partial
+///   solutions and prepares the next round while stragglers finish).
+///   `next_event` returns `None` the moment the last part completes —
+///   *before* any backend-internal teardown — so the consumer never
+///   waits on machinery, only on results.
+pub struct RoundHandle {
+    rx: mpsc::Receiver<Result<PartEvent>>,
+    expected: usize,
+    done: usize,
+    failed: bool,
+}
+
+impl RoundHandle {
+    /// Wrap a backend's event channel; `expected` is the round's part
+    /// count (the handle completes after that many `Done` events).
+    pub fn new(rx: mpsc::Receiver<Result<PartEvent>>, expected: usize) -> RoundHandle {
+        RoundHandle { rx, expected, done: 0, failed: false }
+    }
+
+    /// A handle for an empty round (no parts): completes immediately.
+    pub fn empty() -> RoundHandle {
+        let (_tx, rx) = mpsc::channel();
+        RoundHandle::new(rx, 0)
+    }
+
+    /// Number of parts this round was submitted with.
+    pub fn parts(&self) -> usize {
+        self.expected
+    }
+
+    /// Parts that have reported `Done` so far.
+    pub fn completed(&self) -> usize {
+        self.done
+    }
+
+    /// Block for the next event. Returns `None` once every part has
+    /// completed (or after a fatal error has been yielded). A backend
+    /// that drops its event channel before the round is complete
+    /// surfaces as an error event, never a silent `None`.
+    pub fn next_event(&mut self) -> Option<Result<PartEvent>> {
+        if self.failed || self.done >= self.expected {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(Ok(ev)) => {
+                if matches!(ev, PartEvent::Done { .. }) {
+                    self.done += 1;
+                }
+                Some(Ok(ev))
+            }
+            Ok(Err(e)) => {
+                self.failed = true;
+                Some(Err(e))
+            }
+            Err(_) => {
+                self.failed = true;
+                Some(Err(Error::Worker(format!(
+                    "round ended after {} of {} parts — backend dropped the event \
+                     channel without a fatal error",
+                    self.done, self.expected
+                ))))
+            }
+        }
+    }
+
+    /// Drain every remaining event into a [`RoundOutcome`]. Call this
+    /// on a freshly-submitted handle (it slots solutions by part index;
+    /// events already pulled via [`RoundHandle::next_event`] are gone).
+    pub fn finish(mut self) -> Result<RoundOutcome> {
+        let mut solutions: Vec<Option<Solution>> =
+            (0..self.expected).map(|_| None).collect();
+        let mut requeued_parts = 0usize;
+        let mut requeued_ids = 0usize;
+        let mut sim_delay_ms = 0.0f64;
+        while let Some(ev) = self.next_event() {
+            match ev? {
+                PartEvent::Done { part, solution } => solutions[part] = Some(solution),
+                PartEvent::Requeued { reshipped_ids, .. } => {
+                    requeued_parts += 1;
+                    requeued_ids += reshipped_ids;
+                }
+                PartEvent::Delay { virtual_ms, .. } => sim_delay_ms += virtual_ms,
+                PartEvent::MachineLost { .. } => {}
+            }
+        }
+        let solutions = solutions
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.ok_or_else(|| {
+                    Error::Worker(format!("part {i} completed without a solution"))
+                })
+            })
+            .collect::<Result<Vec<Solution>>>()?;
+        Ok(RoundOutcome { solutions, requeued_parts, requeued_ids, sim_delay_ms })
+    }
+}
+
 /// An execution substrate for one compression round over a partition.
+///
+/// v2 contract: the required method is the event-driven
+/// [`Backend::submit_round`]; the blocking [`Backend::run_round`] is a
+/// provided wrapper (submit + drain) so call sites that want the
+/// classic barrier semantics keep working unchanged.
 pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -82,18 +247,33 @@ pub trait Backend: Send + Sync {
         self.profile().max_capacity()
     }
 
-    /// Execute one round: run `compressor` on every part (part `j` on a
+    /// Start one round: run `compressor` on every part (part `j` on a
     /// machine of the profile's virtual capacity `µ_{j mod L}`) and
-    /// return one solution per part, order preserved. Must fail with
+    /// stream [`PartEvent`]s as machines report. Must fail with
     /// [`Error::CapacityExceeded`] if any part exceeds its machine's
-    /// capacity, before any work starts.
+    /// capacity, before any work starts. Solutions are keyed by part
+    /// index and use positional per-machine seeds, so the event arrival
+    /// order (and any requeueing along the way) never changes the
+    /// answer.
+    fn submit_round(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        parts: &[Vec<u32>],
+        round_seed: u64,
+    ) -> Result<RoundHandle>;
+
+    /// Barrier wrapper over [`Backend::submit_round`]: block until every
+    /// part completes and return one solution per part, order preserved.
     fn run_round(
         &self,
         problem: &Problem,
         compressor: &dyn Compressor,
         parts: &[Vec<u32>],
         round_seed: u64,
-    ) -> Result<RoundOutcome>;
+    ) -> Result<RoundOutcome> {
+        self.submit_round(problem, compressor, parts, round_seed)?.finish()
+    }
 }
 
 /// Which backend a run should use — parsed from config/CLI and built
@@ -105,8 +285,10 @@ pub enum BackendChoice {
     Local,
     /// Real worker processes at the given `host:port` addresses.
     Tcp { workers: Vec<String> },
-    /// Deterministic fault-injecting simulator.
-    Sim { faults: FaultPlan },
+    /// Deterministic fault-injecting simulator. `schedule` scripts the
+    /// fleet per round (`--sim-capacity-schedule PROFILE[;PROFILE…]`,
+    /// config `sim.capacity_schedule`); empty means a static fleet.
+    Sim { faults: FaultPlan, schedule: Vec<CapacityProfile> },
 }
 
 impl BackendChoice {
@@ -115,7 +297,9 @@ impl BackendChoice {
         Ok(match name {
             "local" => BackendChoice::Local,
             "tcp" => BackendChoice::Tcp { workers: Vec::new() },
-            "sim" => BackendChoice::Sim { faults: FaultPlan::default() },
+            "sim" => {
+                BackendChoice::Sim { faults: FaultPlan::default(), schedule: Vec::new() }
+            }
             other => {
                 return Err(Error::Config(format!(
                     "unknown backend '{other}' (known: local, tcp, sim)"
@@ -150,9 +334,14 @@ impl BackendChoice {
             BackendChoice::Tcp { workers } => {
                 Arc::new(TcpBackend::with_profile(profile.clone(), workers.clone())?)
             }
-            BackendChoice::Sim { faults } => Arc::new(
-                SimBackend::with_profile(profile.clone()).with_faults(faults.clone()),
-            ),
+            BackendChoice::Sim { faults, schedule } => {
+                let mut b =
+                    SimBackend::with_profile(profile.clone()).with_faults(faults.clone());
+                if !schedule.is_empty() {
+                    b = b.with_capacity_schedule(schedule.clone());
+                }
+                Arc::new(b)
+            }
         })
     }
 }
@@ -223,6 +412,54 @@ mod tests {
         let b = machine_seeds(7, 3);
         assert_eq!(&a[..3], &b[..]);
         assert_ne!(a[0], a[1]);
+    }
+
+    #[test]
+    fn round_handle_completes_at_last_done_and_finish_slots_by_part() {
+        let (tx, rx) = mpsc::channel();
+        // events out of part order, requeue before the requeued part's Done
+        tx.send(Ok(PartEvent::Done {
+            part: 1,
+            solution: Solution { items: vec![5], value: 1.0 },
+        }))
+        .unwrap();
+        tx.send(Ok(PartEvent::Requeued { part: 0, reshipped_ids: 7 })).unwrap();
+        tx.send(Ok(PartEvent::Delay { part: 0, virtual_ms: 12.5 })).unwrap();
+        tx.send(Ok(PartEvent::Done {
+            part: 0,
+            solution: Solution { items: vec![2], value: 3.0 },
+        }))
+        .unwrap();
+        // tx deliberately NOT dropped: the handle must complete on the
+        // last Done without waiting for backend teardown
+        let handle = RoundHandle::new(rx, 2);
+        let out = handle.finish().unwrap();
+        assert_eq!(out.solutions.len(), 2);
+        assert_eq!(out.solutions[0].items, vec![2]);
+        assert_eq!(out.solutions[1].items, vec![5]);
+        assert_eq!(out.requeued_parts, 1);
+        assert_eq!(out.requeued_ids, 7);
+        assert_eq!(out.sim_delay_ms, 12.5);
+        drop(tx);
+    }
+
+    #[test]
+    fn round_handle_surfaces_fatal_errors_and_dropped_channels() {
+        let (tx, rx) = mpsc::channel::<Result<PartEvent>>();
+        tx.send(Err(Error::Transport("boom".into()))).unwrap();
+        let err = RoundHandle::new(rx, 3).finish().unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+
+        // channel dropped before completion: an error, never a hang or
+        // a silent success
+        let (tx2, rx2) = mpsc::channel::<Result<PartEvent>>();
+        drop(tx2);
+        let err = RoundHandle::new(rx2, 2).finish().unwrap_err();
+        assert!(err.to_string().contains("0 of 2"), "{err}");
+
+        // empty rounds complete immediately
+        let out = RoundHandle::empty().finish().unwrap();
+        assert!(out.solutions.is_empty());
     }
 
     #[test]

@@ -42,6 +42,14 @@ use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 /// machine capacity `cap` to every compress request so workers enforce
 /// the planned per-machine bound, not just their own physical µ. v1/v2
 /// peers are rejected at handshake.
+///
+/// Pipelined dispatch (the coordinator's event-driven Backend v2 —
+/// persistent per-worker dispatchers, next-round parts prepared while
+/// stragglers finish) is **protocol-invisible** and did not bump the
+/// version: workers simply observe back-to-back `compress` requests
+/// across round boundaries on one warm connection, which v3 already
+/// permits. The normative statement of the pipelined semantics (event
+/// ordering, in-flight next-round parts) is `docs/PROTOCOL.md` §6.1.
 pub const PROTOCOL_VERSION: usize = 3;
 
 /// Hard cap on frame payloads (64 MiB — a part of 10^6 ids is ~8 MB of

@@ -1,7 +1,8 @@
 //! Deterministic single-thread cluster simulator with fault injection.
 //!
-//! `SimBackend` executes every machine sequentially on the calling
-//! thread and injects *scripted* faults from a seeded RNG stream:
+//! `SimBackend` executes every machine sequentially (one simulator
+//! thread per round) and injects *scripted* faults from a seeded RNG
+//! stream:
 //!
 //! * **machine loss** — a machine vanishes before reporting; its part is
 //!   requeued to a fresh replacement machine (same part, same positional
@@ -13,11 +14,18 @@
 //! * **stragglers** — a machine finishes late; the simulator charges
 //!   `straggler_delay_ms` of *virtual* time (no real sleeping, so the
 //!   scenario suite stays fast) and reports it in
-//!   [`RoundOutcome::sim_delay_ms`].
+//!   [`crate::dist::RoundOutcome::sim_delay_ms`].
 //!
 //! Everything derives from `(fault seed, round seed, machine index)`, so
 //! a scenario replays bit-exactly — the point of a simulator: explore
 //! failure schedules the real TCP runtime can only hit by accident.
+//!
+//! Rounds are event-driven ([`crate::dist::Backend::submit_round`]): the
+//! machine loop runs on a background thread and streams
+//! [`crate::dist::PartEvent`]s (machine losses, requeues, virtual
+//! straggler delay, completions) in deterministic machine order, so the
+//! pipelined tree runner sees the same fault telemetry a real fleet
+//! would emit — replayable, one event stream per scenario.
 //!
 //! The simulator can additionally run **wire-faithful**
 //! ([`SimBackend::with_wire_spec`]): every round the problem and
@@ -28,16 +36,16 @@
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
-use crate::algorithms::{Compressor, Solution};
+use crate::algorithms::Compressor;
 use crate::constraints::Constraint;
 use crate::coordinator::capacity::CapacityProfile;
 use crate::data::DatasetRef;
 use crate::dist::protocol::{compressor_from_name, compressor_wire_name, ProblemSpec};
-use crate::dist::{enforce_profile, machine_seeds, Backend, RoundOutcome};
+use crate::dist::{enforce_profile, machine_seeds, Backend, PartEvent, RoundHandle};
 use crate::error::{Error, Result};
-use crate::objectives::Problem;
+use crate::objectives::{EvalCounter, Problem};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -176,21 +184,25 @@ impl Backend for SimBackend {
         self.capacity_schedule[r.min(self.capacity_schedule.len() - 1)].clone()
     }
 
-    fn run_round(
+    fn submit_round(
         &self,
         problem: &Problem,
         compressor: &dyn Compressor,
         parts: &[Vec<u32>],
         round_seed: u64,
-    ) -> Result<RoundOutcome> {
+    ) -> Result<RoundHandle> {
         // enforce against this round's scheduled fleet, then advance the
         // schedule so the next profile() query sees the next round's fleet
         enforce_profile(&self.profile(), parts)?;
         self.rounds_run.fetch_add(1, Ordering::Relaxed);
-        let seeds = machine_seeds(round_seed, parts.len());
+        if parts.is_empty() {
+            return Ok(RoundHandle::empty());
+        }
 
         // Wire-faithful mode: what a TCP worker would actually run. The
         // reconstruction must survive spec → JSON → spec unchanged.
+        // Reconstruction (and its rejections) happen synchronously at
+        // submission, like the TCP backend's spec serialization.
         let wire: Option<(Problem, Box<dyn Compressor>)> = if self.wire_spec {
             let spec = ProblemSpec::from_problem(problem)?;
             let echoed = ProblemSpec::from_json(&Json::parse(&spec.to_json().to_string())?)?;
@@ -217,19 +229,55 @@ impl Backend for SimBackend {
         } else {
             None
         };
-        let (problem_run, compressor_run): (&Problem, &dyn Compressor) = match &wire {
-            Some((p, c)) => (p, c.as_ref()),
-            None => (problem, compressor),
+        let (problem_run, compressor_run): (Problem, Box<dyn Compressor>) = match wire {
+            Some((p, c)) => (p, c),
+            None => (problem.clone(), compressor.boxed_clone()),
         };
 
+        let round = SimRound {
+            problem: problem_run,
+            compressor: compressor_run,
+            parts: parts.to_vec(),
+            seeds: machine_seeds(round_seed, parts.len()),
+            faults: self.faults.clone(),
+            round_seed,
+            // wire mode reconstructs a problem with a fresh counter;
+            // fold its oracle work back into the caller's (the tcp
+            // backend does the same for remote evals)
+            fold_evals: if self.wire_spec { Some(problem.evals.clone()) } else { None },
+        };
+        let (tx, rx) = mpsc::channel();
+        let expected = parts.len();
+        std::thread::spawn(move || round.execute(tx));
+        Ok(RoundHandle::new(rx, expected))
+    }
+}
+
+/// One in-flight simulated round: the sequential machine loop, moved to
+/// a background thread so fault/straggler events stream out as they
+/// "happen" in virtual time.
+struct SimRound {
+    problem: Problem,
+    compressor: Box<dyn Compressor>,
+    parts: Vec<Vec<u32>>,
+    seeds: Vec<u64>,
+    faults: FaultPlan,
+    round_seed: u64,
+    fold_evals: Option<EvalCounter>,
+}
+
+impl SimRound {
+    fn execute(self, tx: mpsc::Sender<Result<PartEvent>>) {
+        // wire mode: reconstruction oracle calls folded so far
+        let mut folded = 0u64;
         // fault stream: independent of the algorithmic seed stream so
         // enabling faults never perturbs the solutions themselves
         let mut frng = Rng::seed_from(
-            self.faults.seed ^ round_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            self.faults.seed ^ self.round_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
         );
-        let quota = self.faults.machine_loss_per_round.min(parts.len());
+        let quota = self.faults.machine_loss_per_round.min(self.parts.len());
         let lost_this_round: HashSet<usize> = if quota > 0 {
-            frng.sample_indices(parts.len(), quota)
+            frng.sample_indices(self.parts.len(), quota)
                 .into_iter()
                 .map(|i| i as usize)
                 .collect()
@@ -237,57 +285,66 @@ impl Backend for SimBackend {
             HashSet::new()
         };
 
-        let mut solutions: Vec<Solution> = Vec::with_capacity(parts.len());
-        let mut requeued = 0usize;
-        let mut requeued_ids = 0usize;
-        let mut delay_ms = 0.0f64;
-
-        for (i, part) in parts.iter().enumerate() {
+        for (i, part) in self.parts.iter().enumerate() {
             // scripted loss: the original machine never reports
             let mut attempts = 0usize;
             if lost_this_round.contains(&i) {
-                requeued += 1;
                 attempts += 1;
+                let _ = tx.send(Ok(PartEvent::MachineLost {
+                    machine: format!("sim-{i}"),
+                    detail: "scripted machine loss".into(),
+                }));
+                let _ = tx.send(Ok(PartEvent::Requeued { part: i, reshipped_ids: part.len() }));
             }
             // Bernoulli losses on top (replacements included)
             while self.faults.loss_prob > 0.0 && frng.bool(self.faults.loss_prob) {
-                requeued += 1;
                 attempts += 1;
+                let _ = tx.send(Ok(PartEvent::Requeued { part: i, reshipped_ids: part.len() }));
                 if attempts > self.faults.max_retries {
-                    return Err(Error::Worker(format!(
+                    let _ = tx.send(Err(Error::Worker(format!(
                         "sim: machine {i} of {} lost {attempts} times (retry budget {})",
-                        parts.len(),
+                        self.parts.len(),
                         self.faults.max_retries
-                    )));
+                    ))));
+                    return;
                 }
             }
+            let mut delay_ms = 0.0f64;
             if frng.bool(self.faults.straggler_prob) {
                 delay_ms += self.faults.straggler_delay_ms;
             }
             // every retry replays the machine's full work and re-ships
             // the part's ids to the replacement machine
             delay_ms += attempts as f64 * self.faults.straggler_delay_ms;
-            requeued_ids += attempts * part.len();
+            if delay_ms > 0.0 {
+                let _ = tx.send(Ok(PartEvent::Delay { part: i, virtual_ms: delay_ms }));
+            }
 
             // same part, same positional seed — replacements change cost,
             // never the answer
-            solutions.push(compressor_run.compress(problem_run, part, seeds[i])?);
+            match self.compressor.compress(&self.problem, part, self.seeds[i]) {
+                Ok(solution) => {
+                    // fold BEFORE announcing completion: a consumer that
+                    // reads the shared counter the moment the round's
+                    // last part reports must see every oracle call
+                    if let Some(evals) = &self.fold_evals {
+                        let now = self.problem.eval_count();
+                        evals.fetch_add(
+                            now - folded,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                        folded = now;
+                    }
+                    if tx.send(Ok(PartEvent::Done { part: i, solution })).is_err() {
+                        return; // consumer gave up on the round
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    return;
+                }
+            }
         }
-
-        // fold the reconstruction's oracle work into the shared counter,
-        // as the tcp backend does for remote evals
-        if let Some((p, _)) = &wire {
-            problem
-                .evals
-                .fetch_add(p.eval_count(), std::sync::atomic::Ordering::Relaxed);
-        }
-
-        Ok(RoundOutcome {
-            solutions,
-            requeued_parts: requeued,
-            requeued_ids,
-            sim_delay_ms: delay_ms,
-        })
     }
 }
 
@@ -338,6 +395,48 @@ mod tests {
         for (x, y) in a.solutions.iter().zip(&b.solutions) {
             assert_eq!(x.items, y.items, "faults must not change answers");
         }
+    }
+
+    #[test]
+    fn fault_events_stream_in_machine_order_with_requeues_before_done() {
+        let (p, parts) = setup(200, 2);
+        let sim = SimBackend::new(64).with_faults(FaultPlan {
+            machine_loss_per_round: 1,
+            straggler_prob: 1.0,
+            straggler_delay_ms: 10.0,
+            ..FaultPlan::default()
+        });
+        let mut handle = sim.submit_round(&p, &LazyGreedy::new(), &parts, 5).unwrap();
+        let mut requeues = 0;
+        let mut losses = 0;
+        let mut delay = 0.0;
+        let mut done_parts: Vec<usize> = Vec::new();
+        let mut pending_requeue: Option<usize> = None;
+        while let Some(ev) = handle.next_event() {
+            match ev.unwrap() {
+                PartEvent::Done { part, .. } => {
+                    if let Some(rq) = pending_requeue.take() {
+                        assert_eq!(rq, part, "requeue must precede its part's Done");
+                    }
+                    done_parts.push(part);
+                }
+                PartEvent::Requeued { part, reshipped_ids } => {
+                    requeues += 1;
+                    assert_eq!(reshipped_ids, 50);
+                    pending_requeue = Some(part);
+                }
+                PartEvent::MachineLost { machine, .. } => {
+                    losses += 1;
+                    assert!(machine.starts_with("sim-"), "{machine}");
+                }
+                PartEvent::Delay { virtual_ms, .. } => delay += virtual_ms,
+            }
+        }
+        assert_eq!(done_parts, vec![0, 1, 2, 3], "sim executes machines in order");
+        assert_eq!(requeues, 1, "exactly one scripted loss");
+        assert_eq!(losses, 1);
+        // every machine straggles 10 ms; the lost one replays once more
+        assert_eq!(delay, 10.0 * parts.len() as f64 + 10.0);
     }
 
     #[test]

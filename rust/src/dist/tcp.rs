@@ -1,18 +1,32 @@
 //! Coordinator-side TCP backend: shard a round's parts over real
 //! `hss worker` processes.
 //!
-//! Dispatch model: one I/O thread per worker pulls part indices from a
-//! shared queue, sends a `compress` request over its persistent
-//! connection, and waits for the reply. Workers advertise their fixed
-//! capacity µ in the protocol-v3 handshake, and dispatch is
-//! **capacity-fitting**: a worker only claims parts it can hold, so a
-//! heterogeneous fleet (capacities 500, 200, 200…) serves a weighted
-//! partition with every part on a machine big enough for it — work
-//! stealing still applies among the workers a part fits. Transport
-//! failures mark the worker dead and **requeue** the part for the
-//! surviving workers *that can hold it* (counted in
-//! [`RoundOutcome::requeued_parts`]); a part no surviving worker can
-//! hold fails the round with a transport error. Application errors
+//! Dispatch model (Backend v2): one **persistent dispatcher thread per
+//! worker** lives for the backend's whole lifetime, parked on a condition
+//! variable between rounds. [`Backend::submit_round`] publishes the
+//! round as a shared job (part queue + wire-ready problem spec) and
+//! notifies the dispatchers; each one pulls the first queued part its
+//! worker can hold, runs the request/response roundtrip over its warm
+//! connection, and streams a [`PartEvent`] the moment the reply lands.
+//! There is **no per-round thread spawn/teardown and no sleep-polling**:
+//! every dispatcher transition (handshake resolved, part completed,
+//! worker lost, round submitted) is condvar-driven, so an idle worker
+//! starts the next round's first part the instant it is published —
+//! while another worker's straggling part from the previous moment is
+//! still the only thing the old barrier design would have let anyone
+//! look at.
+//!
+//! Workers advertise their fixed capacity µ in the protocol-v3
+//! handshake, and dispatch is **capacity-fitting**: a worker only claims
+//! parts it can hold, so a heterogeneous fleet (capacities 500, 200,
+//! 200…) serves a weighted partition with every part on a machine big
+//! enough for it — work stealing still applies among the workers a part
+//! fits. Transport failures mark the worker dead and **requeue** the
+//! part for the surviving workers *that can hold it* (surfaced as
+//! [`PartEvent::Requeued`] / [`PartEvent::MachineLost`]); once every
+//! pending handshake has resolved, a queued part no surviving worker can
+//! hold fails the round with a transport error (the stall detector —
+//! evaluated on state transitions, never by polling). Application errors
 //! reported by a worker (capacity violation, bad spec) abort the round —
 //! retrying elsewhere cannot fix those.
 //!
@@ -29,17 +43,17 @@
 
 use std::collections::VecDeque;
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use crate::algorithms::{Compressor, Solution};
 use crate::coordinator::capacity::CapacityProfile;
 use crate::dist::protocol::{
     compressor_wire_name, recv_msg, send_msg, ProblemSpec, Request, Response,
 };
-use crate::dist::{enforce_profile, machine_seeds, Backend, RoundOutcome};
+use crate::dist::{enforce_profile, machine_seeds, Backend, PartEvent, RoundHandle};
 use crate::error::{Error, Result};
-use crate::objectives::Problem;
+use crate::objectives::{EvalCounter, Problem};
 
 /// A persistent, handshaken connection to one worker process.
 struct WorkerConn {
@@ -84,18 +98,75 @@ impl WorkerConn {
     }
 }
 
-/// Per-worker slot: address plus the live connection (lazily created,
-/// reused across rounds, dropped on failure).
+/// Round context shared by every dispatcher serving it — owned data
+/// only, since dispatchers outlive the submitter's borrows.
+struct RoundCtx {
+    spec: ProblemSpec,
+    comp_name: String,
+    parts: Vec<Vec<u32>>,
+    seeds: Vec<u64>,
+    /// Planned virtual machine capacity per part (protocol v3 `cap`).
+    caps: Vec<usize>,
+    /// The submitting problem's shared oracle counter: remote evals fold
+    /// in as each solution arrives, keeping Table-1 metrics comparable
+    /// across backends.
+    evals: EvalCounter,
+    tx: mpsc::Sender<Result<PartEvent>>,
+}
+
+/// The currently in-flight round.
+struct Job {
+    ctx: Arc<RoundCtx>,
+    queue: VecDeque<usize>,
+    in_flight: usize,
+    /// Most recent transport-level failure detail (connect refused,
+    /// reset mid-flight) — context for stall-detector errors.
+    last_err: Option<String>,
+}
+
+/// Dispatcher-visible state of one worker address.
 struct Slot {
     addr: String,
-    conn: Option<WorkerConn>,
+    /// Advertised µ once a handshake has succeeded. `None` means the
+    /// stall detector must wait for this slot's handshake to resolve
+    /// before concluding that a part fits no one.
+    capacity: Option<usize>,
+    /// Permanent: the worker failed mid-flight. Connect *refusals* are
+    /// not permanent — the slot merely sits out the round (`out_epoch`)
+    /// and retries when the next one is submitted.
     dead: bool,
+    /// Epoch whose connect attempt failed; the slot is unavailable for
+    /// that round only (workers may come up late, even mid-run).
+    out_epoch: u64,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ShutdownKind {
+    /// Exit dispatchers without touching workers (backend dropped).
+    Quiet,
+    /// Ask every reachable worker process to exit first.
+    Workers,
+}
+
+struct FleetState {
+    slots: Vec<Slot>,
+    job: Option<Job>,
+    /// Bumped once per submitted round; guards stale dispatcher results
+    /// and scopes `out_epoch` connect failures to a single round.
+    epoch: u64,
+    dispatchers_alive: usize,
+    shutdown: Option<ShutdownKind>,
+}
+
+struct Fleet {
+    state: Mutex<FleetState>,
+    cv: Condvar,
 }
 
 /// Execution backend over real worker processes at `host:port` addresses.
 pub struct TcpBackend {
     profile: CapacityProfile,
-    slots: Mutex<Vec<Slot>>,
+    fleet: Arc<Fleet>,
 }
 
 impl TcpBackend {
@@ -120,34 +191,60 @@ impl TcpBackend {
         // so a second connection to the same address would park in its
         // accept backlog holding a part in flight.
         let mut seen = std::collections::HashSet::new();
-        let slots = workers
+        let slots: Vec<Slot> = workers
             .into_iter()
             .filter(|addr| seen.insert(addr.clone()))
-            .map(|addr| Slot { addr, conn: None, dead: false })
+            .map(|addr| Slot { addr, capacity: None, dead: false, out_epoch: 0 })
             .collect();
-        Ok(TcpBackend { profile, slots: Mutex::new(slots) })
+        let count = slots.len();
+        let fleet = Arc::new(Fleet {
+            state: Mutex::new(FleetState {
+                slots,
+                job: None,
+                epoch: 0,
+                dispatchers_alive: count,
+                shutdown: None,
+            }),
+            cv: Condvar::new(),
+        });
+        for id in 0..count {
+            let fleet = Arc::clone(&fleet);
+            std::thread::Builder::new()
+                .name(format!("hss-dispatch-{id}"))
+                .spawn(move || dispatcher(fleet, id))
+                .map_err(|e| Error::Worker(format!("spawn dispatcher: {e}")))?;
+        }
+        Ok(TcpBackend { profile, fleet })
     }
 
     /// Addresses this backend was configured with.
     pub fn worker_addrs(&self) -> Vec<String> {
-        self.slots.lock().unwrap().iter().map(|s| s.addr.clone()).collect()
+        let st = self.fleet.state.lock().unwrap();
+        st.slots.iter().map(|s| s.addr.clone()).collect()
     }
 
     /// Ask every reachable worker to shut down (best effort; used by
-    /// orderly teardown paths and tests).
+    /// orderly teardown paths and tests). Blocks until the dispatcher
+    /// threads have exited.
     pub fn shutdown_workers(&self) {
-        let mut slots = self.slots.lock().unwrap();
-        for slot in slots.iter_mut() {
-            let conn = match slot.conn.take() {
-                Some(c) => Some(c),
-                None if !slot.dead => WorkerConn::connect(&slot.addr).ok(),
-                None => None,
-            };
-            if let Some(mut c) = conn {
-                let _ = c.roundtrip(&Request::Shutdown);
-            }
-            slot.dead = true;
+        let mut st = self.fleet.state.lock().unwrap();
+        st.shutdown = Some(ShutdownKind::Workers);
+        self.fleet.cv.notify_all();
+        while st.dispatchers_alive > 0 {
+            st = self.fleet.cv.wait(st).unwrap();
         }
+    }
+}
+
+impl Drop for TcpBackend {
+    fn drop(&mut self) {
+        // Wake parked dispatchers so they exit and close their worker
+        // connections; don't block the dropping thread on it.
+        let mut st = self.fleet.state.lock().unwrap();
+        if st.shutdown.is_none() {
+            st.shutdown = Some(ShutdownKind::Quiet);
+        }
+        self.fleet.cv.notify_all();
     }
 }
 
@@ -160,237 +257,316 @@ impl Backend for TcpBackend {
         self.profile.clone()
     }
 
-    fn run_round(
+    fn submit_round(
         &self,
         problem: &Problem,
         compressor: &dyn Compressor,
         parts: &[Vec<u32>],
         round_seed: u64,
-    ) -> Result<RoundOutcome> {
+    ) -> Result<RoundHandle> {
         enforce_profile(&self.profile, parts)?;
         let spec = ProblemSpec::from_problem(problem)?;
         let comp_name = compressor_wire_name(compressor)?;
+        if parts.is_empty() {
+            return Ok(RoundHandle::empty());
+        }
         let seeds = machine_seeds(round_seed, parts.len());
         let caps: Vec<usize> = (0..parts.len())
             .map(|j| self.profile.virtual_capacity(j))
             .collect();
 
-        let queue: Mutex<VecDeque<usize>> = Mutex::new((0..parts.len()).collect());
-        let results: Mutex<Vec<Option<(Solution, u64)>>> =
-            Mutex::new((0..parts.len()).map(|_| None).collect());
-        let completed = AtomicUsize::new(0);
-        let requeued = AtomicUsize::new(0);
-        let requeued_ids = AtomicUsize::new(0);
-        let fatal: Mutex<Option<Error>> = Mutex::new(None);
-        let abort = AtomicBool::new(false);
-        let last_transport_err: Mutex<Option<String>> = Mutex::new(None);
-        // Advertised capacities of workers currently able to take work
-        // (slot index → µ), maintained so idle workers can tell a part
-        // that is merely *in flight elsewhere* from one that fits no
-        // surviving worker. `connecting` counts threads whose first
-        // handshake has not resolved yet: the no-fit check is only
-        // meaningful once every capacity is known.
-        let live_caps: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
-        let connecting = AtomicUsize::new(0);
-
-        let mut slots = self.slots.lock().unwrap();
-        // Pre-register capacities of connections kept warm from earlier
-        // rounds; count the rest as still-connecting.
-        for (id, slot) in slots.iter().enumerate() {
-            if slot.dead {
-                continue;
-            }
-            match &slot.conn {
-                Some(c) => live_caps.lock().unwrap().push((id, c.capacity)),
-                None => {
-                    connecting.fetch_add(1, Ordering::SeqCst);
-                }
-            }
+        let (tx, rx) = mpsc::channel();
+        let expected = parts.len();
+        let mut st = self.fleet.state.lock().unwrap();
+        if st.shutdown.is_some() {
+            return Err(Error::invalid("tcp backend is shut down"));
         }
-        std::thread::scope(|scope| {
-            for (id, slot) in slots.iter_mut().enumerate() {
-                if slot.dead {
-                    continue;
-                }
-                let queue = &queue;
-                let results = &results;
-                let completed = &completed;
-                let requeued = &requeued;
-                let requeued_ids = &requeued_ids;
-                let fatal = &fatal;
-                let abort = &abort;
-                let last_transport_err = &last_transport_err;
-                let live_caps = &live_caps;
-                let connecting = &connecting;
-                let spec = &spec;
-                let comp_name = &comp_name;
-                let seeds = &seeds;
-                let caps = &caps;
-                scope.spawn(move || {
-                    loop {
-                        if abort.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        // (re)connect lazily; the handshake reveals µ
-                        if slot.conn.is_none() {
-                            match WorkerConn::connect(&slot.addr) {
-                                Ok(c) => {
-                                    // register the capacity BEFORE counting
-                                    // this handshake as resolved: a peer that
-                                    // observes `connecting == 0` must see
-                                    // every successful worker in `live_caps`,
-                                    // or its no-fit check could spuriously
-                                    // fail the round
-                                    live_caps.lock().unwrap().push((id, c.capacity));
-                                    slot.conn = Some(c);
-                                    connecting.fetch_sub(1, Ordering::SeqCst);
+        if st.job.is_some() {
+            return Err(Error::invalid(
+                "tcp backend already has a round in flight (one round at a time)",
+            ));
+        }
+        st.epoch += 1;
+        st.job = Some(Job {
+            ctx: Arc::new(RoundCtx {
+                spec,
+                comp_name,
+                parts: parts.to_vec(),
+                seeds,
+                caps,
+                evals: problem.evals.clone(),
+                tx,
+            }),
+            queue: (0..parts.len()).collect(),
+            in_flight: 0,
+            last_err: None,
+        });
+        // A fleet that is already known to be incapable (every slot dead
+        // from earlier rounds) must fail the round now — no dispatcher
+        // is left to notice.
+        check_stall(&mut st);
+        self.fleet.cv.notify_all();
+        Ok(RoundHandle::new(rx, expected))
+    }
+}
+
+/// Fail the in-flight round if some queued part can *never* complete:
+/// every pending handshake has resolved and no live, in-round worker
+/// advertises a capacity that holds it. Runs on state transitions
+/// (submit, handshake failure, worker death, idle dispatcher about to
+/// park) — the event-driven replacement for the old sleep-poll loop's
+/// per-tick scan.
+fn check_stall(st: &mut FleetState) {
+    let epoch = st.epoch;
+    let msg = {
+        let Some(job) = &st.job else { return };
+        // a slot that has never handshaken (and is not dead or sitting
+        // this round out) may still reveal a fitting capacity
+        if st
+            .slots
+            .iter()
+            .any(|s| !s.dead && s.out_epoch != epoch && s.capacity.is_none())
+        {
+            return;
+        }
+        let avail: Vec<usize> = st
+            .slots
+            .iter()
+            .filter(|s| !s.dead && s.out_epoch != epoch)
+            .filter_map(|s| s.capacity)
+            .collect();
+        let orphan = job
+            .queue
+            .iter()
+            .copied()
+            .find(|&i| !avail.iter().any(|&c| job.ctx.parts[i].len() <= c));
+        let Some(i) = orphan else { return };
+        let detail = job
+            .last_err
+            .clone()
+            .unwrap_or_else(|| "no fitting worker".into());
+        if avail.is_empty() {
+            format!(
+                "part {i} of {} unprocessed — all workers lost ({detail})",
+                job.ctx.parts.len()
+            )
+        } else {
+            format!(
+                "part {i} of {} ({} items) exceeds every live worker's capacity ({detail})",
+                job.ctx.parts.len(),
+                job.ctx.parts[i].len()
+            )
+        }
+    };
+    if let Some(job) = st.job.take() {
+        let _ = job.ctx.tx.send(Err(Error::Transport(msg)));
+    }
+}
+
+/// What a dispatcher decided to do with the lock held.
+enum Step {
+    /// Nothing to do until the fleet changes — park on the condvar.
+    Park,
+    /// No connection yet and a round wants workers: handshake.
+    Connect(String),
+    /// Claimed part `i` of the current round.
+    Dispatch(usize, Arc<RoundCtx>, u64),
+    /// Backend is shutting down; optionally tell the worker to exit.
+    Exit(Option<String>),
+}
+
+/// Persistent per-worker dispatcher: parks on the fleet condvar, claims
+/// capacity-fitting parts while a round is in flight, exits on shutdown
+/// or when its worker dies mid-flight.
+fn dispatcher(fleet: Arc<Fleet>, id: usize) {
+    let mut conn: Option<WorkerConn> = None;
+    let mut st = fleet.state.lock().unwrap();
+    loop {
+        // decide under the lock… (reborrow the guard once so the
+        // decision can take disjoint field borrows of the state)
+        let step = {
+            let stx: &mut FleetState = &mut st;
+            if let Some(kind) = stx.shutdown {
+                let notify = kind == ShutdownKind::Workers && !stx.slots[id].dead;
+                Step::Exit(if notify { Some(stx.slots[id].addr.clone()) } else { None })
+            } else if stx.slots[id].dead {
+                Step::Exit(None)
+            } else {
+                let epoch = stx.epoch;
+                let out_this_round = stx.slots[id].out_epoch == epoch;
+                let addr = stx.slots[id].addr.clone();
+                match &mut stx.job {
+                    None => Step::Park,
+                    Some(_) if out_this_round => Step::Park,
+                    Some(job) => {
+                        if conn.is_none() {
+                            Step::Connect(addr)
+                        } else {
+                            let my_cap = conn.as_ref().unwrap().capacity;
+                            let pos = job
+                                .queue
+                                .iter()
+                                .position(|&i| job.ctx.parts[i].len() <= my_cap);
+                            match pos {
+                                Some(pos) => {
+                                    let i = job.queue.remove(pos).unwrap();
+                                    job.in_flight += 1;
+                                    Step::Dispatch(i, Arc::clone(&job.ctx), epoch)
                                 }
-                                Err(e) => {
-                                    connecting.fetch_sub(1, Ordering::SeqCst);
-                                    // Never dispatched: not a requeue. The
-                                    // slot sits out the rest of this round
-                                    // only — workers are allowed to come up
-                                    // late, so the next round retries the
-                                    // connect. (`dead` is reserved for
-                                    // mid-flight failures.)
-                                    *last_transport_err.lock().unwrap() = Some(e.to_string());
-                                    break;
-                                }
-                            }
-                        }
-                        let my_cap = slot.conn.as_ref().unwrap().capacity;
-                        // claim the first queued part this worker can hold
-                        let job = {
-                            let mut q = queue.lock().unwrap();
-                            let pos = q.iter().position(|&i| parts[i].len() <= my_cap);
-                            pos.and_then(|pos| q.remove(pos))
-                        };
-                        let Some(i) = job else {
-                            if completed.load(Ordering::Relaxed) >= parts.len() {
-                                break;
-                            }
-                            // Work remains but none of it fits this
-                            // worker, or peers hold it in flight (if their
-                            // machine is lost, the part comes back to the
-                            // queue — stay alive to steal it). Once every
-                            // handshake has resolved, a queued part that
-                            // fits NO live worker can never complete: fail
-                            // the round instead of spinning forever.
-                            if connecting.load(Ordering::SeqCst) == 0 {
-                                let q = queue.lock().unwrap();
-                                let live = live_caps.lock().unwrap();
-                                let orphan = q.iter().find(|&&j| {
-                                    !live.iter().any(|&(_, cap)| parts[j].len() <= cap)
-                                });
-                                if let Some(&j) = orphan {
-                                    let detail = last_transport_err
-                                        .lock()
-                                        .unwrap()
-                                        .clone()
-                                        .unwrap_or_else(|| "no fitting worker".into());
-                                    *fatal.lock().unwrap() = Some(Error::Transport(format!(
-                                        "part {j} of {} ({} items) exceeds every live \
-                                         worker's capacity ({detail})",
-                                        parts.len(),
-                                        parts[j].len()
-                                    )));
-                                    abort.store(true, Ordering::Relaxed);
-                                    break;
-                                }
-                            }
-                            std::thread::sleep(std::time::Duration::from_millis(1));
-                            continue;
-                        };
-                        let conn = slot.conn.as_mut().unwrap();
-                        let request = Request::Compress {
-                            problem: spec.clone(),
-                            compressor: comp_name.clone(),
-                            part: parts[i].clone(),
-                            cap: caps[i],
-                            seed: seeds[i],
-                        };
-                        match conn.roundtrip(&request) {
-                            Ok(Response::Solution { items, value, evals, .. }) => {
-                                results.lock().unwrap()[i] =
-                                    Some((Solution { items, value }, evals));
-                                completed.fetch_add(1, Ordering::Relaxed);
-                            }
-                            Ok(Response::Error { msg }) => {
-                                // the worker is alive and rejected the job:
-                                // retrying elsewhere cannot help
-                                *fatal.lock().unwrap() =
-                                    Some(Error::Worker(format!("{}: {msg}", slot.addr)));
-                                abort.store(true, Ordering::Relaxed);
-                                break;
-                            }
-                            Ok(other) => {
-                                *fatal.lock().unwrap() = Some(Error::Protocol(format!(
-                                    "{}: unexpected reply {other:?}",
-                                    slot.addr
-                                )));
-                                abort.store(true, Ordering::Relaxed);
-                                break;
-                            }
-                            Err(e) => {
-                                // transport failure mid-flight: lose the
-                                // machine, requeue the part for surviving
-                                // workers that can hold it
-                                requeued.fetch_add(1, Ordering::Relaxed);
-                                requeued_ids.fetch_add(parts[i].len(), Ordering::Relaxed);
-                                queue.lock().unwrap().push_back(i);
-                                *last_transport_err.lock().unwrap() = Some(e.to_string());
-                                live_caps.lock().unwrap().retain(|&(sid, _)| sid != id);
-                                slot.conn = None;
-                                slot.dead = true;
-                                break;
+                                None => Step::Park,
                             }
                         }
                     }
-                });
+                }
             }
-        });
-        drop(slots);
+        };
 
-        if let Some(e) = fatal.into_inner().unwrap() {
-            return Err(e);
-        }
-        let results = results.into_inner().unwrap();
-        let last_err = last_transport_err.into_inner().unwrap();
-        let mut solutions = Vec::with_capacity(parts.len());
-        let mut total_evals = 0u64;
-        for (i, r) in results.into_iter().enumerate() {
-            match r {
-                Some((sol, evals)) => {
-                    solutions.push(sol);
-                    total_evals += evals;
+        // …act without it.
+        match step {
+            Step::Park => {
+                // Work may remain but none of it fits this worker, or
+                // peers hold it in flight (if their machine is lost the
+                // part comes back to the queue — stay parked to steal
+                // it). Before parking, make sure a part that fits NO
+                // live worker fails the round instead of hanging it.
+                check_stall(&mut st);
+                st = fleet.cv.wait(st).unwrap();
+            }
+            Step::Connect(addr) => {
+                let epoch = st.epoch;
+                drop(st);
+                let attempt = WorkerConn::connect(&addr);
+                st = fleet.state.lock().unwrap();
+                match attempt {
+                    Ok(c) => {
+                        // register the capacity the moment the handshake
+                        // resolves: peers' stall checks must see every
+                        // successful worker before concluding "no fit"
+                        st.slots[id].capacity = Some(c.capacity);
+                        conn = Some(c);
+                    }
+                    Err(e) => {
+                        // Never dispatched: not a requeue. The slot sits
+                        // out the rest of this round only — workers are
+                        // allowed to come up late, so the next round
+                        // retries the connect. (`dead` is reserved for
+                        // mid-flight failures.)
+                        if st.epoch == epoch {
+                            st.slots[id].out_epoch = epoch;
+                            if let Some(job) = &mut st.job {
+                                job.last_err = Some(e.to_string());
+                            }
+                            check_stall(&mut st);
+                        }
+                    }
                 }
-                None => {
-                    let detail =
-                        last_err.unwrap_or_else(|| "no worker reachable".into());
-                    return Err(Error::Transport(format!(
-                        "part {i} of {} unprocessed — all workers lost ({detail})",
-                        parts.len()
-                    )));
+                fleet.cv.notify_all();
+            }
+            Step::Dispatch(i, ctx, epoch) => {
+                drop(st);
+                let request = Request::Compress {
+                    problem: ctx.spec.clone(),
+                    compressor: ctx.comp_name.clone(),
+                    part: ctx.parts[i].clone(),
+                    cap: ctx.caps[i],
+                    seed: ctx.seeds[i],
+                };
+                let result = conn.as_mut().unwrap().roundtrip(&request);
+                st = fleet.state.lock().unwrap();
+                // The round could have been aborted (and even replaced)
+                // while this reply was on the wire; only account against
+                // the job if it is still the one we claimed from.
+                let same_job = st.epoch == epoch && st.job.is_some();
+                match result {
+                    Ok(Response::Solution { items, value, evals, .. }) => {
+                        // fold remote oracle work in BEFORE announcing
+                        // completion, so a consumer reading the shared
+                        // counter at the last event sees all of it
+                        ctx.evals.fetch_add(evals, Ordering::Relaxed);
+                        let _ = ctx.tx.send(Ok(PartEvent::Done {
+                            part: i,
+                            solution: Solution { items, value },
+                        }));
+                        if same_job {
+                            let job = st.job.as_mut().unwrap();
+                            job.in_flight -= 1;
+                            if job.queue.is_empty() && job.in_flight == 0 {
+                                st.job = None; // round complete
+                            }
+                        }
+                    }
+                    Ok(Response::Error { msg }) => {
+                        // the worker is alive and rejected the job:
+                        // retrying elsewhere cannot help
+                        let addr = st.slots[id].addr.clone();
+                        let _ = ctx
+                            .tx
+                            .send(Err(Error::Worker(format!("{addr}: {msg}"))));
+                        if same_job {
+                            st.job = None;
+                        }
+                    }
+                    Ok(other) => {
+                        let addr = st.slots[id].addr.clone();
+                        let _ = ctx.tx.send(Err(Error::Protocol(format!(
+                            "{addr}: unexpected reply {other:?}"
+                        ))));
+                        if same_job {
+                            st.job = None;
+                        }
+                    }
+                    Err(e) => {
+                        // transport failure mid-flight: lose this
+                        // machine for good, requeue the part for
+                        // surviving workers that can hold it
+                        let _ = ctx.tx.send(Ok(PartEvent::MachineLost {
+                            machine: st.slots[id].addr.clone(),
+                            detail: e.to_string(),
+                        }));
+                        let _ = ctx.tx.send(Ok(PartEvent::Requeued {
+                            part: i,
+                            reshipped_ids: ctx.parts[i].len(),
+                        }));
+                        st.slots[id].dead = true;
+                        st.slots[id].capacity = None;
+                        conn = None;
+                        if same_job {
+                            let job = st.job.as_mut().unwrap();
+                            job.in_flight -= 1;
+                            job.queue.push_back(i);
+                            job.last_err = Some(e.to_string());
+                            check_stall(&mut st);
+                        }
+                    }
                 }
+                fleet.cv.notify_all();
+            }
+            Step::Exit(notify_addr) => {
+                if let Some(addr) = notify_addr {
+                    drop(st);
+                    let c = match conn.take() {
+                        Some(c) => Some(c),
+                        None => WorkerConn::connect(&addr).ok(),
+                    };
+                    if let Some(mut c) = c {
+                        let _ = c.roundtrip(&Request::Shutdown);
+                    }
+                    st = fleet.state.lock().unwrap();
+                    st.slots[id].dead = true;
+                }
+                break;
             }
         }
-        // fold remote oracle work into the problem's shared counter so
-        // the Table-1 evals metric stays comparable across backends
-        problem
-            .evals
-            .fetch_add(total_evals, std::sync::atomic::Ordering::Relaxed);
-        Ok(RoundOutcome {
-            solutions,
-            requeued_parts: requeued.into_inner(),
-            requeued_ids: requeued_ids.into_inner(),
-            sim_delay_ms: 0.0,
-        })
     }
+    st.dispatchers_alive -= 1;
+    fleet.cv.notify_all();
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algorithms::LazyGreedy;
+    use std::net::TcpListener;
 
     #[test]
     fn rejects_empty_worker_list() {
@@ -445,5 +621,180 @@ mod tests {
             .run_round(&p, &crate::algorithms::LazyGreedy::new(), &parts, 0)
             .unwrap_err();
         assert!(matches!(err, Error::InvalidArgument(_)), "{err}");
+    }
+
+    /// Hand-rolled worker impostor: handshakes with an arbitrary
+    /// advertised capacity (after `hello_delay_ms`, to script handshake
+    /// ordering), then serves `serve_parts` compress requests before
+    /// dropping the connection mid-flight (0 = die on first request).
+    /// Lets the dispatcher tests script exact failure points without
+    /// real worker processes.
+    fn spawn_impostor(capacity: usize, serve_parts: usize, hello_delay_ms: u64) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            // serve successive coordinator connections until the test ends
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { return };
+                let mut served = 0usize;
+                loop {
+                    let Ok(msg) = recv_msg(&mut stream) else { break };
+                    let Ok(req) = Request::from_json(&msg) else { break };
+                    match req {
+                        Request::Hello => {
+                            if hello_delay_ms > 0 {
+                                std::thread::sleep(std::time::Duration::from_millis(
+                                    hello_delay_ms,
+                                ));
+                            }
+                            if send_msg(&mut stream, &Response::Hello { capacity }.to_json())
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        Request::Shutdown => {
+                            let _ = send_msg(&mut stream, &Response::Bye.to_json());
+                            return;
+                        }
+                        Request::Compress { problem, compressor, part, seed, .. } => {
+                            if served >= serve_parts {
+                                // die holding the part: drop the stream
+                                // without replying
+                                break;
+                            }
+                            served += 1;
+                            // real compute so surviving-path tests stay
+                            // bit-identical to local execution
+                            let p = problem.materialize().unwrap();
+                            let comp =
+                                crate::dist::protocol::compressor_from_name(&compressor)
+                                    .unwrap();
+                            let sol = comp.compress(&p, &part, seed).unwrap();
+                            let reply = Response::Solution {
+                                items: sol.items,
+                                value: sol.value,
+                                evals: 0,
+                                wall_ms: 0.0,
+                            };
+                            if send_msg(&mut stream, &reply.to_json()).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        addr
+    }
+
+    fn wire_problem(k: usize) -> Problem {
+        Problem::exemplar(crate::data::registry::load("csn-2k", 3).unwrap(), k, 3)
+    }
+
+    #[test]
+    fn stall_detector_fails_round_when_no_live_worker_fits_a_part() {
+        // worker advertises µ=10; the round's only part has 20 items and
+        // passes coordinator-side enforcement (profile says 50) — the
+        // capacity-fit dispatcher must fail the round, not hang.
+        let addr = spawn_impostor(10, usize::MAX, 0);
+        let backend = TcpBackend::new(50, vec![addr]).unwrap();
+        let p = wire_problem(5);
+        let parts = vec![(0..20).collect::<Vec<u32>>()];
+        let err = backend.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+        assert!(
+            err.to_string().contains("exceeds every live worker's capacity"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn worker_death_holding_the_only_fitting_part_fails_with_requeue_accounting() {
+        // big worker (µ=50) dies on its first request while holding the
+        // 20-item part; the small survivor (µ=10) cannot hold it — the
+        // requeue must surface, then the stall detector must fail the
+        // round instead of hanging.
+        let big = spawn_impostor(50, 0, 0);
+        let small = spawn_impostor(10, usize::MAX, 0);
+        let backend = TcpBackend::new(50, vec![big, small]).unwrap();
+        let p = wire_problem(5);
+        let parts = vec![(0..20).collect::<Vec<u32>>()];
+        let mut handle =
+            backend.submit_round(&p, &LazyGreedy::new(), &parts, 2).unwrap();
+        let mut requeued_parts = 0usize;
+        let mut requeued_ids = 0usize;
+        let mut lost = 0usize;
+        let mut fatal = None;
+        while let Some(ev) = handle.next_event() {
+            match ev {
+                Ok(PartEvent::Requeued { part, reshipped_ids }) => {
+                    assert_eq!(part, 0);
+                    requeued_parts += 1;
+                    requeued_ids += reshipped_ids;
+                }
+                Ok(PartEvent::MachineLost { .. }) => lost += 1,
+                Ok(PartEvent::Done { .. }) => panic!("part cannot complete"),
+                Ok(PartEvent::Delay { .. }) => {}
+                Err(e) => {
+                    fatal = Some(e);
+                    break;
+                }
+            }
+        }
+        assert_eq!(requeued_parts, 1, "the death must requeue the in-flight part");
+        assert_eq!(requeued_ids, 20, "requeue re-ships the part's ids");
+        assert_eq!(lost, 1);
+        let err = fatal.expect("round must fail — no surviving worker fits the part");
+        assert!(
+            err.to_string().contains("exceeds every live worker's capacity"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn requeued_part_completes_on_a_fitting_survivor() {
+        // The dying worker serves one part then drops its connection
+        // holding the second; the survivor (same capacity, handshake
+        // delayed so the dying worker deterministically claims two
+        // parts first) steals the requeued part and the round still
+        // matches local execution bit-exactly.
+        let dying = spawn_impostor(40, 1, 0);
+        let survivor = spawn_impostor(40, usize::MAX, 300);
+        let backend = TcpBackend::new(40, vec![dying, survivor]).unwrap();
+        let p = wire_problem(4);
+        let parts: Vec<Vec<u32>> =
+            (0..4).map(|i| (i * 30..(i + 1) * 30).collect()).collect();
+        let out = backend.run_round(&p, &LazyGreedy::new(), &parts, 7).unwrap();
+        assert_eq!(out.solutions.len(), 4);
+        assert_eq!(out.requeued_parts, 1, "exactly one part rode the dying worker twice");
+        assert_eq!(out.requeued_ids, 30);
+        let local = crate::dist::LocalBackend::new(40)
+            .run_round(&p, &LazyGreedy::new(), &parts, 7)
+            .unwrap();
+        for (x, y) in out.solutions.iter().zip(&local.solutions) {
+            assert_eq!(x.items, y.items, "requeue changed a solution");
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+        }
+    }
+
+    #[test]
+    fn capacity_fit_dispatch_routes_each_part_to_a_worker_that_holds_it() {
+        // heterogeneous impostors: parts sized 30 can only run on the
+        // µ=40 worker, parts sized 10 run anywhere; everything completes
+        let big = spawn_impostor(40, usize::MAX, 0);
+        let small = spawn_impostor(12, usize::MAX, 0);
+        let profile = CapacityProfile::parse("40,12").unwrap();
+        let backend = TcpBackend::with_profile(profile, vec![big, small]).unwrap();
+        let p = wire_problem(4);
+        let parts: Vec<Vec<u32>> = vec![
+            (0..30).collect(),
+            (30..40).collect(),
+            (40..70).collect(),
+            (70..80).collect(),
+        ];
+        let out = backend.run_round(&p, &LazyGreedy::new(), &parts, 3).unwrap();
+        assert_eq!(out.solutions.len(), 4);
+        assert_eq!(out.requeued_parts, 0);
     }
 }

@@ -35,28 +35,59 @@ pub struct WorkerConfig {
     pub listen: String,
     /// Fixed machine capacity µ.
     pub capacity: usize,
+    /// Artificial per-request latency in milliseconds (`--straggle-ms`)
+    /// — the straggler-injection knob for dispatch benches and
+    /// robustness experiments over *real* workers. 0 (the default)
+    /// means an honest worker.
+    pub straggle_ms: u64,
 }
 
 impl Default for WorkerConfig {
     fn default() -> Self {
-        WorkerConfig { listen: "127.0.0.1:7070".into(), capacity: 200 }
+        WorkerConfig { listen: "127.0.0.1:7070".into(), capacity: 200, straggle_ms: 0 }
     }
 }
 
 /// Run the worker loop. Blocks serving coordinators until a `shutdown`
 /// request arrives (then returns `Ok`) or the listener dies.
 pub fn serve(cfg: &WorkerConfig) -> Result<()> {
-    if cfg.capacity == 0 {
-        return Err(Error::invalid("worker capacity must be positive"));
-    }
-    let listener = TcpListener::bind(&cfg.listen)
-        .map_err(|e| Error::transport(&cfg.listen, format!("bind failed: {e}")))?;
+    let listener = bind(cfg)?;
     let local = listener.local_addr()?;
     // Discovery line for launchers/tests; flush because stdout is
     // block-buffered when piped.
     println!("hss-worker listening on {local} (capacity {})", cfg.capacity);
     std::io::stdout().flush().ok();
+    serve_on(listener, cfg)
+}
 
+/// Host a worker on a background thread over an ephemeral (or explicit)
+/// port — the in-process variant of `hss worker` used by benches and
+/// tests that need a real protocol-speaking peer without a process
+/// boundary. Returns the bound address; the thread serves until a
+/// `shutdown` request arrives (e.g. [`crate::dist::TcpBackend::shutdown_workers`]).
+pub fn spawn_in_process(cfg: WorkerConfig) -> Result<String> {
+    let listener = bind(&cfg)?;
+    let addr = listener.local_addr()?.to_string();
+    std::thread::Builder::new()
+        .name(format!("hss-worker-{addr}"))
+        .spawn(move || {
+            if let Err(e) = serve_on(listener, &cfg) {
+                eprintln!("hss-worker({addr}): {e}");
+            }
+        })
+        .map_err(|e| Error::Worker(format!("spawn in-process worker: {e}")))?;
+    Ok(addr)
+}
+
+fn bind(cfg: &WorkerConfig) -> Result<TcpListener> {
+    if cfg.capacity == 0 {
+        return Err(Error::invalid("worker capacity must be positive"));
+    }
+    TcpListener::bind(&cfg.listen)
+        .map_err(|e| Error::transport(&cfg.listen, format!("bind failed: {e}")))
+}
+
+fn serve_on(listener: TcpListener, cfg: &WorkerConfig) -> Result<()> {
     let mut cache = DatasetCache::default();
     for stream in listener.incoming() {
         let stream = match stream {
@@ -66,7 +97,7 @@ pub fn serve(cfg: &WorkerConfig) -> Result<()> {
                 continue;
             }
         };
-        match serve_connection(stream, cfg.capacity, &mut cache) {
+        match serve_connection(stream, cfg, &mut cache) {
             Ok(ConnectionEnd::Shutdown) => return Ok(()),
             Ok(ConnectionEnd::Disconnected) => {}
             Err(e) => eprintln!("hss-worker: connection error: {e}"),
@@ -140,7 +171,7 @@ impl DatasetCache {
 
 fn serve_connection(
     mut stream: TcpStream,
-    capacity: usize,
+    cfg: &WorkerConfig,
     cache: &mut DatasetCache,
 ) -> Result<ConnectionEnd> {
     stream.set_nodelay(true).ok();
@@ -160,13 +191,18 @@ fn serve_connection(
             }
         };
         let reply = match request {
-            Request::Hello => Response::Hello { capacity },
+            Request::Hello => Response::Hello { capacity: cfg.capacity },
             Request::Shutdown => {
                 send_msg(&mut stream, &Response::Bye.to_json()).ok();
                 return Ok(ConnectionEnd::Shutdown);
             }
             Request::Compress { problem, compressor, part, cap, seed } => {
-                handle_compress(capacity, cache, &problem, &compressor, &part, cap, seed)
+                // injected straggler latency: charged per request, before
+                // the compute, like a slow or overloaded machine
+                if cfg.straggle_ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(cfg.straggle_ms));
+                }
+                handle_compress(cfg.capacity, cache, &problem, &compressor, &part, cap, seed)
                     .unwrap_or_else(|e| Response::Error { msg: e.to_string() })
             }
         };
@@ -229,8 +265,9 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let handle = std::thread::spawn(move || {
             let mut cache = DatasetCache::default();
+            let cfg = WorkerConfig { capacity, ..WorkerConfig::default() };
             let (stream, _) = listener.accept().map_err(Error::Io)?;
-            match serve_connection(stream, capacity, &mut cache)? {
+            match serve_connection(stream, &cfg, &mut cache)? {
                 ConnectionEnd::Shutdown | ConnectionEnd::Disconnected => Ok(()),
             }
         });

@@ -128,7 +128,8 @@ pub mod prelude {
     };
     pub use crate::data::Dataset;
     pub use crate::dist::{
-        Backend, BackendChoice, FaultPlan, LocalBackend, SimBackend, TcpBackend,
+        Backend, BackendChoice, FaultPlan, LocalBackend, PartEvent, RoundHandle,
+        SimBackend, TcpBackend,
     };
     pub use crate::error::{Error, Result};
     pub use crate::objectives::{Objective, Oracle, Problem};

@@ -111,6 +111,11 @@ fn print_run_help() {
     println!("  --sim-loss N --sim-loss-prob P --sim-straggler-prob P");
     println!("  --sim-straggler-ms MS --sim-seed S");
     println!("                         sim backend fault injection");
+    println!("  --sim-capacity-schedule PROFILE[;PROFILE...]");
+    println!("                         script the sim fleet per round: round r runs on the");
+    println!("                         r-th capacity profile, the last entry persists (e.g.");
+    println!("                         '500,200x2;200x2;200' shrinks the fleet twice).");
+    println!("                         Each PROFILE uses the --capacity grammar.");
 }
 
 fn print_worker_help() {
@@ -122,6 +127,8 @@ fn print_worker_help() {
     println!("                    The worker advertises µ in the protocol-v3 handshake;");
     println!("                    heterogeneous coordinators (`hss run --capacity 500,200,200`)");
     println!("                    dispatch each part only to a worker that can hold it.");
+    println!("  --straggle-ms MS  artificial per-request latency (default 0) — straggler");
+    println!("                    injection for dispatch benches and robustness experiments");
     println!();
     println!("run-side grammars (see `hss run --help` and docs/PROTOCOL.md):");
     println!("  --capacity   {CAPACITY_GRAMMAR}");
@@ -138,6 +145,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let cfg = worker::WorkerConfig {
         listen: args.get_or("listen", "127.0.0.1:7070").to_string(),
         capacity: args.usize("capacity", 200)?,
+        straggle_ms: args.u64("straggle-ms", 0)?,
     };
     worker::serve(&cfg)
 }
@@ -193,7 +201,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             ));
         }
     }
-    if let BackendChoice::Sim { faults } = &mut cfg.backend {
+    if let BackendChoice::Sim { faults, schedule } = &mut cfg.backend {
         faults.machine_loss_per_round =
             args.usize("sim-loss", faults.machine_loss_per_round)?;
         faults.loss_prob = args.f64("sim-loss-prob", faults.loss_prob)?;
@@ -206,6 +214,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         ] {
             if !(0.0..=1.0).contains(&p) {
                 return Err(Error::invalid(format!("--{flag} {p} out of [0,1]")));
+            }
+        }
+        if let Some(text) = args.get("sim-capacity-schedule") {
+            *schedule = text
+                .split(';')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(CapacityProfile::parse)
+                .collect::<Result<Vec<_>>>()?;
+            if schedule.is_empty() {
+                return Err(Error::invalid(
+                    "--sim-capacity-schedule needs at least one profile \
+                     (grammar: PROFILE[;PROFILE...])",
+                ));
             }
         }
     }
@@ -282,10 +304,15 @@ fn cmd_run(args: &Args) -> Result<()> {
                 } else {
                     String::new()
                 };
+                let overlap = if res.straggler_overlap_ms > 0.0 {
+                    format!(" overlapMs={:.1}", res.straggler_overlap_ms)
+                } else {
+                    String::new()
+                };
                 (
                     res.best.value,
                     format!(
-                        "rounds={}/{} machines={} evals={} shuffleKB={:.1} residentMB={:.1}{requeue}",
+                        "rounds={}/{} machines={} evals={} shuffleKB={:.1} residentMB={:.1}{requeue}{overlap}",
                         res.rounds,
                         res.round_bound,
                         res.total_machines,

@@ -365,4 +365,14 @@ impl Compressor for XlaGreedy {
             None => LazyGreedy::new().compress(problem, candidates, seed),
         }
     }
+
+    fn boxed_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+
+    fn full_k(&self) -> bool {
+        // pure-greedy mode fills to k like LazyGreedy; stochastic mode
+        // may leave steps empty when a subsample has no positive gain
+        self.epsilon.is_none()
+    }
 }

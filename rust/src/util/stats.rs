@@ -55,12 +55,18 @@ impl Summary {
     }
 
     /// Quantile via linear interpolation on the sorted sample, q in [0,1].
+    ///
+    /// NaN-safe: samples sort under [`f64::total_cmp`] (the same defect
+    /// class as the tree round-best fix — a worker-returned NaN must
+    /// surface in a report, not panic the harness). NaNs order above
+    /// +∞, so they occupy the top quantiles and propagate through any
+    /// interpolation that touches them.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -104,6 +110,20 @@ mod tests {
         assert!((s.quantile(0.95) - 95.05).abs() < 1e-9);
         assert_eq!(s.quantile(0.0), 1.0);
         assert_eq!(s.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn quantile_tolerates_nan_samples() {
+        // regression: the old partial_cmp().unwrap() sort panicked the
+        // moment a NaN entered the sample (e.g. a NaN objective value
+        // recorded by a bench trial)
+        let s = Summary::from_samples(vec![3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert!((s.median() - 2.5).abs() < 1e-12, "median {}", s.median());
+        // NaN sorts above +inf: the top quantile surfaces it
+        assert!(s.quantile(1.0).is_nan());
+        // moments stay NaN-propagating, not panicking
+        assert!(s.mean().is_nan());
     }
 
     #[test]

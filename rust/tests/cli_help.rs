@@ -62,6 +62,25 @@ fn run_help_documents_both_grammars() {
 }
 
 #[test]
+fn run_help_documents_the_sim_capacity_schedule_grammar() {
+    let text = run_hss(&["run", "--help"]);
+    assert!(text.contains("--sim-capacity-schedule"), "{text}");
+    assert!(
+        text.contains("PROFILE[;PROFILE...]"),
+        "`hss run --help` lacks the schedule grammar:\n{text}"
+    );
+    // the example shows a shrinking fleet in --capacity profile form
+    assert!(text.contains("500,200x2;200x2;200"), "{text}");
+}
+
+#[test]
+fn worker_help_documents_the_straggler_knob() {
+    let text = run_hss(&["worker", "--help"]);
+    assert!(text.contains("--straggle-ms"), "{text}");
+    assert!(text.contains("straggler"), "{text}");
+}
+
+#[test]
 fn worker_help_documents_capacity_advertisement_and_grammars() {
     let text = run_hss(&["worker", "--help"]);
     assert!(text.contains("--capacity"), "{text}");

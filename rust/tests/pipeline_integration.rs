@@ -1,0 +1,226 @@
+//! Pipelined dispatch acceptance: event-driven rounds
+//! ([`TreeRunner::run`]) must be **bit-identical** to the serial
+//! barrier path ([`TreeRunner::run_serial`]) on all three backends —
+//! including under an injected straggler and a mid-run worker kill.
+//! Determinism in this system is positional seeds; overlap is allowed
+//! to change wall-clock, never the answer.
+//!
+//! The TCP scenarios spawn the real `hss` binary (CARGO_BIN_EXE_hss),
+//! bind ephemeral ports and discover them from the worker's stdout
+//! announcement line; the straggler is a worker started with
+//! `--straggle-ms`, the new fault-injection knob.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use hss::coordinator::TreeBuilder;
+use hss::data::registry;
+use hss::dist::{FaultPlan, SimBackend, TcpBackend};
+use hss::objectives::Problem;
+
+/// A spawned worker process, killed on drop so failing tests don't leak
+/// listeners.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn(capacity: usize, straggle_ms: u64) -> WorkerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_hss"))
+            .args([
+                "worker",
+                "--listen",
+                "127.0.0.1:0",
+                "--capacity",
+                &capacity.to_string(),
+                "--straggle-ms",
+                &straggle_ms.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn hss worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read worker announcement");
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("bad announcement line: {line:?}"))
+            .to_string();
+        WorkerProc { child, addr }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn assert_same_tree(a: &hss::coordinator::TreeResult, b: &hss::coordinator::TreeResult) {
+    assert_eq!(a.best.items, b.best.items, "item sets differ");
+    assert_eq!(
+        a.best.value.to_bits(),
+        b.best.value.to_bits(),
+        "objective not bit-identical: {} vs {}",
+        a.best.value,
+        b.best.value
+    );
+    assert_eq!(a.rounds, b.rounds, "round counts differ");
+    assert_eq!(
+        a.final_round_best.items, b.final_round_best.items,
+        "final-round best differs"
+    );
+    let am: Vec<usize> = a.per_round.iter().map(|r| r.machines).collect();
+    let bm: Vec<usize> = b.per_round.iter().map(|r| r.machines).collect();
+    assert_eq!(am, bm, "machine schedules differ");
+}
+
+/// The acceptance scenario: csn-2k over three real worker processes,
+/// one of them a 40 ms straggler. The pipelined run must equal the
+/// serial barrier run and the local reference bit-exactly, and the
+/// overlap metric must show the coordinator actually used the
+/// straggler tail.
+#[test]
+fn pipelined_tcp_with_straggler_matches_serial_and_local() {
+    let (k, mu, problem_seed, run_seed) = (20usize, 150usize, 42u64, 7u64);
+    let ds = registry::load("csn-2k", problem_seed).unwrap();
+    let problem = Problem::exemplar(ds, k, problem_seed);
+
+    let local_serial = TreeBuilder::new(mu)
+        .build()
+        .run_serial(&problem, run_seed)
+        .unwrap();
+    let local_piped = TreeBuilder::new(mu).build().run(&problem, run_seed).unwrap();
+    assert_same_tree(&local_piped, &local_serial);
+
+    let w1 = WorkerProc::spawn(mu, 0);
+    let w2 = WorkerProc::spawn(mu, 0);
+    let straggler = WorkerProc::spawn(mu, 40);
+    let tcp = Arc::new(
+        TcpBackend::new(
+            mu,
+            vec![w1.addr.clone(), w2.addr.clone(), straggler.addr.clone()],
+        )
+        .unwrap(),
+    );
+    let remote = TreeBuilder::new(mu)
+        .backend(tcp.clone())
+        .build()
+        .run(&problem, run_seed)
+        .unwrap();
+    assert_same_tree(&remote, &local_serial);
+    assert_eq!(remote.requeued_parts, 0, "healthy workers must not requeue");
+    assert!(
+        remote.straggler_overlap_ms > 0.0,
+        "a 40 ms straggler must open an overlap window, got {}",
+        remote.straggler_overlap_ms
+    );
+
+    // the same backend serves a serial-barrier run identically
+    let remote_serial = TreeBuilder::new(mu)
+        .backend(tcp.clone())
+        .build()
+        .run_serial(&problem, run_seed)
+        .unwrap();
+    assert_same_tree(&remote_serial, &local_serial);
+
+    tcp.shutdown_workers();
+}
+
+/// Killing a worker mid-run under the pipelined driver: the in-flight
+/// part requeues onto survivors and the answer does not move.
+#[test]
+fn pipelined_tcp_survives_mid_run_worker_kill_bit_identically() {
+    let (k, mu, problem_seed, run_seed) = (15usize, 120usize, 5u64, 11u64);
+    let ds = registry::load("csn-2k", problem_seed).unwrap();
+    let problem = Problem::exemplar(ds, k, problem_seed);
+    let reference = TreeBuilder::new(mu).build().run(&problem, run_seed).unwrap();
+
+    let w1 = WorkerProc::spawn(mu, 0);
+    let mut w2 = Some(WorkerProc::spawn(mu, 0));
+    let tcp = Arc::new(
+        TcpBackend::new(
+            mu,
+            vec![w1.addr.clone(), w2.as_ref().unwrap().addr.clone()],
+        )
+        .unwrap(),
+    );
+    // run once to warm both connections
+    let healthy = TreeBuilder::new(mu)
+        .backend(tcp.clone())
+        .build()
+        .run(&problem, run_seed)
+        .unwrap();
+    assert_same_tree(&healthy, &reference);
+
+    // Kill one worker: a dispatch over its warm connection fails
+    // mid-flight and the part requeues onto the survivor. (The dead
+    // slot is only observed when the scheduler hands it work, so allow
+    // a few attempts — the answer must match on every one of them.)
+    w2.take();
+    let mut saw_requeue = false;
+    for _ in 0..5 {
+        let after_kill = TreeBuilder::new(mu)
+            .backend(tcp.clone())
+            .build()
+            .run(&problem, run_seed)
+            .unwrap();
+        assert_same_tree(&after_kill, &reference);
+        if after_kill.requeued_parts > 0 {
+            saw_requeue = true;
+            break;
+        }
+    }
+    assert!(saw_requeue, "worker kill never surfaced as a requeued part");
+
+    tcp.shutdown_workers();
+}
+
+/// Sim backend, wire-faithful mode, scripted faults: the pipelined
+/// event loop sees losses, requeues and virtual straggler delay as
+/// events and must still reproduce the serial path bit-exactly.
+#[test]
+fn pipelined_sim_with_faults_and_wire_spec_matches_serial() {
+    let (k, mu, problem_seed, run_seed) = (12usize, 100usize, 3u64, 9u64);
+    let ds = registry::load("csn-2k", problem_seed).unwrap();
+    let problem = Problem::exemplar(ds, k, problem_seed);
+    let faults = FaultPlan {
+        machine_loss_per_round: 1,
+        straggler_prob: 0.4,
+        straggler_delay_ms: 25.0,
+        ..FaultPlan::default()
+    };
+    let backend = |wire: bool| {
+        Arc::new(
+            SimBackend::new(mu)
+                .with_faults(faults.clone())
+                .with_wire_spec(wire),
+        )
+    };
+
+    let piped = TreeBuilder::new(mu)
+        .backend(backend(true))
+        .build()
+        .run(&problem, run_seed)
+        .unwrap();
+    let serial = TreeBuilder::new(mu)
+        .backend(backend(true))
+        .build()
+        .run_serial(&problem, run_seed)
+        .unwrap();
+    assert_same_tree(&piped, &serial);
+    assert_eq!(piped.requeued_parts, serial.requeued_parts);
+    assert!(piped.requeued_parts > 0, "scripted losses must surface");
+
+    // faults and the wire change cost, never the answer
+    let clean = TreeBuilder::new(mu).build().run(&problem, run_seed).unwrap();
+    assert_same_tree(&piped, &clean);
+}
