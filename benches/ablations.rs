@@ -19,7 +19,7 @@ use std::sync::Arc;
 
 use hss::algorithms::{Compressor, LazyGreedy, StochasticGreedy, ThresholdGreedy};
 use hss::bench::{BenchArgs, Table};
-use hss::coordinator::tree::PartitionMode;
+use hss::coordinator::PartitionStrategy;
 use hss::coordinator::TreeBuilder;
 use hss::objectives::Problem;
 
@@ -39,9 +39,9 @@ fn main() -> hss::Result<()> {
         &["mode", "ratio", "violations", "rounds"],
     );
     for (label, mode) in [
-        ("balanced-random (paper)", PartitionMode::Balanced),
-        ("iid multinomial", PartitionMode::Iid),
-        ("contiguous", PartitionMode::Contiguous),
+        ("balanced-random (paper)", PartitionStrategy::Balanced),
+        ("iid multinomial", PartitionStrategy::Iid),
+        ("contiguous", PartitionStrategy::Contiguous),
     ] {
         let mut viols = 0usize;
         let mut vals = hss::util::stats::Summary::new();

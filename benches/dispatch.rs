@@ -1,22 +1,30 @@
 //! Straggler dispatch bench — serial barrier vs pipelined event-driven
 //! rounds, with an injected straggler.
 //!
-//! Two scenarios:
+//! Three scenarios:
 //!
-//! 1. **tcp**: three in-process protocol-v3 workers, one started with a
-//!    per-request `straggle_ms` delay (the `hss worker --straggle-ms`
-//!    knob). The pipelined tree runner overlaps next-round planning and
-//!    union-building with the straggler's tail; the serial path idles
-//!    at the barrier and pays that coordinator work on the critical
-//!    path afterwards.
-//! 2. **sim**: a deterministic virtual straggler
+//! 1. **tcp / balanced**: three in-process protocol workers, one
+//!    started with a per-request `straggle_ms` delay (the `hss worker
+//!    --straggle-ms` knob). The pipelined tree runner overlaps
+//!    next-round planning and union-building with the straggler's
+//!    tail; the serial path idles at the barrier and pays that
+//!    coordinator work on the critical path afterwards.
+//! 2. **tcp / contiguous**: the same fleet under `--partitioner
+//!    contiguous` — the locality-aware regime where the pipelined
+//!    runner additionally **speculatively dispatches**
+//!    straggler-independent next-round parts into an early-opened
+//!    round session: idle workers start round `t+1` while the
+//!    straggler still holds round `t`, so the straggler's tail is
+//!    overlapped with real compute, not just planning.
+//! 3. **sim**: a deterministic virtual straggler
 //!    (`straggler_prob = 1`), as a replayable reference — virtual delay
 //!    is charged identically on both paths, isolating the real-time
 //!    dispatch difference.
 //!
-//! Emits `bench_results/BENCH_dispatch.json` and exits non-zero if the
-//! pipelined path regresses more than 10% behind the serial barrier
-//! (wired into CI as a non-blocking smoke job).
+//! Emits `bench_results/BENCH_dispatch.json` (diffed against the
+//! committed `BENCH_dispatch.json` baseline by the CI smoke job) and
+//! exits non-zero if a pipelined path regresses more than 10% behind
+//! its serial barrier (non-blocking in CI).
 //!
 //! ```bash
 //! cargo bench --bench dispatch [-- --quick] [--straggle-ms 50]
@@ -25,7 +33,7 @@
 use std::sync::Arc;
 
 use hss::bench::{fmt_ms, BenchArgs, BenchRunner, Table};
-use hss::coordinator::TreeBuilder;
+use hss::coordinator::{PartitionStrategy, TreeBuilder};
 use hss::data::registry;
 use hss::dist::worker::{self, WorkerConfig};
 use hss::dist::{FaultPlan, SimBackend, TcpBackend};
@@ -48,7 +56,7 @@ fn main() -> hss::Result<()> {
             "round dispatch with 1 injected straggler \
              (csn-2k, k={k}, mu={mu}, straggle {straggle_ms}ms)"
         ),
-        &["backend", "mode", "wall", "overlap_ms", "requeued"],
+        &["backend", "partitioner", "mode", "wall", "overlap_ms", "requeued"],
     );
 
     // ---- tcp: real protocol workers, one of them slow --------------------
@@ -70,6 +78,7 @@ fn main() -> hss::Result<()> {
     });
     table.row(vec![
         "tcp".into(),
+        "balanced".into(),
         "serial".into(),
         fmt_ms(&s_serial),
         "0.0".into(),
@@ -84,9 +93,45 @@ fn main() -> hss::Result<()> {
     });
     table.row(vec![
         "tcp".into(),
+        "balanced".into(),
         "pipelined".into(),
         fmt_ms(&s_piped),
         format!("{overlap:.1}"),
+        requeued.to_string(),
+    ]);
+
+    // ---- tcp + contiguous: speculative next-round dispatch ---------------
+    // Locality-aware partitioning is where speculation pays: next-round
+    // parts whose inputs are complete start executing on idle workers
+    // while the straggler still holds the current round.
+    let contig_tree = TreeBuilder::new(mu)
+        .partition_mode(PartitionStrategy::Contiguous)
+        .backend(tcp.clone())
+        .build();
+    let s_contig_serial = runner.time(|| {
+        let r = contig_tree.run_serial(&problem, seed).unwrap();
+        requeued = r.requeued_parts;
+    });
+    table.row(vec![
+        "tcp".into(),
+        "contiguous".into(),
+        "serial".into(),
+        fmt_ms(&s_contig_serial),
+        "0.0".into(),
+        requeued.to_string(),
+    ]);
+    let mut contig_overlap = 0.0f64;
+    let s_contig_spec = runner.time(|| {
+        let r = contig_tree.run(&problem, seed).unwrap();
+        contig_overlap = r.straggler_overlap_ms;
+        requeued = r.requeued_parts;
+    });
+    table.row(vec![
+        "tcp".into(),
+        "contiguous".into(),
+        "pipelined+speculative".into(),
+        fmt_ms(&s_contig_spec),
+        format!("{contig_overlap:.1}"),
         requeued.to_string(),
     ]);
     tcp.shutdown_workers();
@@ -112,6 +157,7 @@ fn main() -> hss::Result<()> {
     });
     table.row(vec![
         "sim".into(),
+        "balanced".into(),
         "serial".into(),
         fmt_ms(&s_sim_serial),
         "0.0".into(),
@@ -119,6 +165,7 @@ fn main() -> hss::Result<()> {
     ]);
     table.row(vec![
         "sim".into(),
+        "balanced".into(),
         "pipelined".into(),
         fmt_ms(&s_sim_piped),
         format!("{sim_overlap:.1}"),
@@ -135,16 +182,37 @@ fn main() -> hss::Result<()> {
         s_serial.mean(),
         s_piped.mean()
     );
-    // Smoke gate (CI runs this job non-blocking): the pipelined path
+    let contig_speedup = s_contig_serial.mean() / s_contig_spec.mean();
+    println!(
+        "contiguous + speculative dispatch: serial {:.1} ms vs speculative {:.1} ms \
+         ({contig_speedup:.3}x); workers ran {contig_overlap:.1} ms of next-round parts \
+         inside the straggler tail per run",
+        s_contig_serial.mean(),
+        s_contig_spec.mean()
+    );
+    // Smoke gates (CI runs this job non-blocking): a pipelined path
     // must never be meaningfully SLOWER than the barrier it replaces.
-    // Its win scales with coordinator-side round work, so on this small
-    // reference instance we only guard against regression.
+    // The win scales with coordinator-side round work (balanced) and
+    // with the straggler tail itself (contiguous + speculative), so on
+    // this small reference instance we only guard against regression.
+    let mut failed = false;
     if s_piped.mean() > s_serial.mean() * 1.10 {
         eprintln!(
             "DISPATCH REGRESSION: pipelined {:.1} ms > 1.10 × serial {:.1} ms",
             s_piped.mean(),
             s_serial.mean()
         );
+        failed = true;
+    }
+    if s_contig_spec.mean() > s_contig_serial.mean() * 1.10 {
+        eprintln!(
+            "DISPATCH REGRESSION (contiguous): speculative {:.1} ms > 1.10 × serial {:.1} ms",
+            s_contig_spec.mean(),
+            s_contig_serial.mean()
+        );
+        failed = true;
+    }
+    if failed {
         std::process::exit(1);
     }
     Ok(())

@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use crate::constraints::spec::ConstraintSpec;
 use crate::coordinator::capacity::CapacityProfile;
+use crate::coordinator::PartitionStrategy;
 use crate::data::registry;
 use crate::dist::{Backend, BackendChoice, FaultPlan};
 use crate::error::{Error, Result};
@@ -65,6 +66,10 @@ pub struct RunConfig {
     pub threads: usize,
     /// Execution backend for compression rounds (local | tcp | sim).
     pub backend: BackendChoice,
+    /// Round partition strategy (`balanced` — the paper's §3 default —
+    /// or `contiguous`, the GreeDI-style locality-aware partitioner
+    /// that unlocks speculative next-round dispatch).
+    pub partitioner: PartitionStrategy,
     /// Hereditary constraint in the [`ConstraintSpec::parse`] grammar
     /// (e.g. `knapsack:b=30,w=rownorm2+pmatroid:groups=5,cap=2`);
     /// `None` means the plain cardinality constraint `card(k)`. Kept as
@@ -85,6 +90,7 @@ impl Default for RunConfig {
             use_engine: true,
             threads: 2,
             backend: BackendChoice::Local,
+            partitioner: PartitionStrategy::Balanced,
             constraint: None,
         }
     }
@@ -131,6 +137,9 @@ impl RunConfig {
             // against the final k when the problem is built
             ConstraintSpec::parse(c, cfg.k)?;
             cfg.constraint = Some(c.to_string());
+        }
+        if let Some(p) = v.get("partitioner").and_then(Json::as_str) {
+            cfg.partitioner = PartitionStrategy::parse(p)?;
         }
         if let Some(b) = v.get("backend").and_then(Json::as_str) {
             cfg.backend = BackendChoice::parse(b)?;
@@ -370,6 +379,18 @@ mod tests {
         let cfg = RunConfig::default();
         assert!(registry::spec(&cfg.dataset).is_ok());
         assert_eq!(cfg.backend, BackendChoice::Local);
+        assert_eq!(cfg.partitioner, PartitionStrategy::Balanced);
+    }
+
+    #[test]
+    fn parses_partitioner_strategies() {
+        let cfg = RunConfig::from_json_text(r#"{"partitioner":"contiguous"}"#).unwrap();
+        assert_eq!(cfg.partitioner, PartitionStrategy::Contiguous);
+        let cfg = RunConfig::from_json_text(r#"{"partitioner":"balanced"}"#).unwrap();
+        assert_eq!(cfg.partitioner, PartitionStrategy::Balanced);
+        // the iid strawman is ablation-only, not a run path
+        assert!(RunConfig::from_json_text(r#"{"partitioner":"iid"}"#).is_err());
+        assert!(RunConfig::from_json_text(r#"{"partitioner":"zebra"}"#).is_err());
     }
 
     #[test]

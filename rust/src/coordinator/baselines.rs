@@ -107,9 +107,9 @@ fn two_round(
     let all: Vec<u32> = (0..n as u32).collect();
     let mut rng = Rng::seed_from(seed ^ 0x6EED_1D1D);
     let parts = if random_partition {
-        partitioner::weighted_balanced_random_partition(&all, &caps, &mut rng)
+        partitioner::weighted_balanced_random_partition(&all, &caps, &mut rng)?
     } else {
-        partitioner::weighted_contiguous_partition(&all, &caps)
+        partitioner::weighted_contiguous_partition(&all, &caps)?
     };
     let sols = backend
         .run_round(problem, compressor, &parts, rng.next_u64())?

@@ -34,6 +34,11 @@ pub struct RoundMetrics {
     /// at a barrier. 0 on the serial (`run_round`) path, which observes
     /// nothing until the whole round is done.
     pub straggler_overlap_ms: f64,
+    /// Problem-spec bytes shipped over the wire this round (protocol v4
+    /// interning: the spec crosses once per (worker connection, problem
+    /// identity), so after round 0 every compress request carries an
+    /// O(1) problem id and this is 0). Always 0 on wire-less backends.
+    pub spec_bytes: u64,
     pub best_value: f64,
 }
 
@@ -44,6 +49,7 @@ pub struct Metrics {
     pub rows_resident_bytes: AtomicU64,
     pub machines_provisioned: AtomicU64,
     pub parts_requeued: AtomicU64,
+    pub spec_bytes: AtomicU64,
     rounds: Mutex<Vec<RoundMetrics>>,
 }
 
@@ -60,6 +66,7 @@ impl Metrics {
             .fetch_add(r.machines as u64, Ordering::Relaxed);
         self.parts_requeued
             .fetch_add(r.requeued_parts as u64, Ordering::Relaxed);
+        self.spec_bytes.fetch_add(r.spec_bytes, Ordering::Relaxed);
         self.rounds.lock().unwrap().push(r);
     }
 
@@ -86,6 +93,10 @@ impl Metrics {
     pub fn total_requeued(&self) -> u64 {
         self.parts_requeued.load(Ordering::Relaxed)
     }
+
+    pub fn total_spec_bytes(&self) -> u64 {
+        self.spec_bytes.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +117,7 @@ mod tests {
             rows_resident_bytes: 6_800,
             wall_ms: 1.0,
             straggler_overlap_ms: 0.4,
+            spec_bytes: 300,
             best_value: 5.0,
         });
         m.record_round(RoundMetrics {
@@ -119,6 +131,7 @@ mod tests {
             rows_resident_bytes: 1_360,
             wall_ms: 0.5,
             straggler_overlap_ms: 0.0,
+            spec_bytes: 0,
             best_value: 6.0,
         });
         assert_eq!(m.num_rounds(), 2);
@@ -126,6 +139,7 @@ mod tests {
         assert_eq!(m.total_rows_resident_bytes(), 8_160);
         assert_eq!(m.total_machines(), 5);
         assert_eq!(m.total_requeued(), 3);
+        assert_eq!(m.total_spec_bytes(), 300);
         assert_eq!(m.rounds()[1].best_value, 6.0);
     }
 }

@@ -25,6 +25,8 @@ pub mod tree;
 pub use capacity::CapacityProfile;
 pub use cluster::Cluster;
 pub use metrics::{Metrics, RoundMetrics};
-pub use partitioner::{balanced_random_partition, weighted_balanced_random_partition};
+pub use partitioner::{
+    balanced_random_partition, weighted_balanced_random_partition, PartitionStrategy,
+};
 pub use planner::RoundPlan;
 pub use tree::{TreeBuilder, TreeResult, TreeRunner};

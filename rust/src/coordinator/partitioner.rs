@@ -13,7 +13,70 @@
 //! locations is equally likely) and guarantees `max − min ≤ ⌈N/L⌉ −
 //! ⌊N/L⌋ ≤ 1` part-size imbalance... strictly: every part ≤ ⌈N/L⌉.
 
+use crate::error::{Error, Result};
 use crate::util::rng::Rng;
+
+/// How items are spread across machines each round — a first-class run
+/// path selected by `--partitioner` / config `partitioner` (the paper's
+/// algorithm uses [`PartitionStrategy::Balanced`]; the contiguous
+/// strategy is GreeDI-style locality-aware partitioning, the regime
+/// where speculative next-round dispatch pays off because each next
+/// part's inputs come from a small window of current parts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionStrategy {
+    /// Paper §3: balanced random via virtual free locations.
+    #[default]
+    Balanced,
+    /// Contiguous chunks in surviving-set order (GreeDI's arbitrary,
+    /// locality-aware partitioning).
+    Contiguous,
+    /// Each item independently uniform (unbalanced strawman; ablation
+    /// only — not reachable from the CLI).
+    Iid,
+}
+
+impl PartitionStrategy {
+    /// Parse the `--partitioner` grammar: `balanced` | `contiguous`.
+    pub fn parse(name: &str) -> Result<PartitionStrategy> {
+        Ok(match name {
+            "balanced" => PartitionStrategy::Balanced,
+            "contiguous" => PartitionStrategy::Contiguous,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown partitioner '{other}' (known: balanced, contiguous)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Balanced => "balanced",
+            PartitionStrategy::Contiguous => "contiguous",
+            PartitionStrategy::Iid => "iid",
+        }
+    }
+
+    /// Partition `items` over machines with per-machine capacities
+    /// `caps`, consuming `rng` exactly as the strategy's underlying
+    /// partitioner does (contiguous consumes nothing — which is what
+    /// makes its next-round parts computable, and dispatchable, the
+    /// moment their input items are known).
+    pub fn partition(
+        &self,
+        items: &[u32],
+        caps: &[usize],
+        rng: &mut Rng,
+    ) -> Result<Vec<Vec<u32>>> {
+        match self {
+            PartitionStrategy::Balanced => {
+                weighted_balanced_random_partition(items, caps, rng)
+            }
+            PartitionStrategy::Contiguous => weighted_contiguous_partition(items, caps),
+            PartitionStrategy::Iid => Ok(iid_partition(items, caps.len(), rng)),
+        }
+    }
+}
 
 /// Partition `items` into `parts` balanced random parts.
 /// Every returned part has size ≤ ⌈N/L⌉; parts may be empty only when
@@ -64,9 +127,9 @@ pub fn weighted_balanced_random_partition(
     items: &[u32],
     caps: &[usize],
     rng: &mut Rng,
-) -> Vec<Vec<u32>> {
-    let labels = weighted_balanced_labels(items.len(), caps, rng);
-    apply_labels(items, &labels, caps.len())
+) -> Result<Vec<Vec<u32>>> {
+    let labels = weighted_balanced_labels(items.len(), caps, rng)?;
+    Ok(apply_labels(items, &labels, caps.len()))
 }
 
 /// The label assignment underlying
@@ -77,13 +140,13 @@ pub fn weighted_balanced_random_partition(
 /// **size** is known, while the items themselves are still being
 /// compressed by stragglers. Consumes the identical rng stream as the
 /// full partition call.
-pub fn weighted_balanced_labels(n: usize, caps: &[usize], rng: &mut Rng) -> Vec<u32> {
-    assert!(!caps.is_empty(), "capacity vector must be non-empty");
-    let total: usize = caps.iter().sum();
-    assert!(
-        total >= n,
-        "total capacity {total} cannot hold {n} items"
-    );
+///
+/// A capacity vector that cannot hold `n` items is a structured
+/// [`Error::CapacityExceeded`], not a panic: a fleet that shrinks below
+/// `|A_t|` mid-run (scripted sim schedules, mass worker loss) must fail
+/// the round, never abort the coordinator process.
+pub fn weighted_balanced_labels(n: usize, caps: &[usize], rng: &mut Rng) -> Result<Vec<u32>> {
+    let total = check_caps_hold(n, caps, "weighted balanced partition")?;
     // per-part location budgets ⌈N·µ_p/Σµ⌉ (0 when n == 0)
     let budgets: Vec<usize> = caps
         .iter()
@@ -103,7 +166,26 @@ pub fn weighted_balanced_labels(n: usize, caps: &[usize], rng: &mut Rng) -> Vec<
         labels.swap(i, j);
     }
     labels.truncate(n);
-    labels
+    Ok(labels)
+}
+
+/// Shared precondition of the weighted partitioners: the fleet's round
+/// capacities must hold all `n` items. Returns the total on success.
+fn check_caps_hold(n: usize, caps: &[usize], what: &str) -> Result<usize> {
+    if caps.is_empty() {
+        return Err(Error::invalid(format!(
+            "{what}: capacity vector must be non-empty"
+        )));
+    }
+    let total: usize = caps.iter().sum();
+    if total < n {
+        return Err(Error::CapacityExceeded {
+            capacity: total,
+            got: n,
+            ctx: format!(" ({what}: the fleet's {} machines cannot hold the surviving set)", caps.len()),
+        });
+    }
+    Ok(total)
 }
 
 /// Materialize a label assignment: item `i` goes to part `labels[i]`,
@@ -142,20 +224,34 @@ pub fn contiguous_partition(items: &[u32], parts: usize) -> Vec<Vec<u32>> {
 /// Weighted contiguous partition: chunk `items` in order, part `p`
 /// taking up to its `⌈N·µ_p/Σµ⌉` budget. The heterogeneous analogue of
 /// [`contiguous_partition`]; reduces to it exactly for uniform `caps`.
-pub fn weighted_contiguous_partition(items: &[u32], caps: &[usize]) -> Vec<Vec<u32>> {
-    assert!(!caps.is_empty(), "capacity vector must be non-empty");
+pub fn weighted_contiguous_partition(items: &[u32], caps: &[usize]) -> Result<Vec<Vec<u32>>> {
     let n = items.len();
-    let total: usize = caps.iter().sum();
-    assert!(total >= n, "total capacity {total} cannot hold {n} items");
+    let bounds = weighted_contiguous_bounds(n, caps)?;
+    Ok(bounds
+        .into_iter()
+        .map(|(lo, hi)| items[lo..hi].to_vec())
+        .collect())
+}
+
+/// The index ranges underlying [`weighted_contiguous_partition`]: part
+/// `p` holds input positions `lo..hi`. Like
+/// [`weighted_balanced_labels`], the assignment depends only on `(n,
+/// caps)` — never on item values — and for the contiguous strategy it
+/// consumes no randomness at all, so the pipelined tree runner knows
+/// exactly which current-round parts feed each next-round part the
+/// moment the surviving-set size is predicted. That is the data
+/// dependency speculative dispatch exploits.
+pub fn weighted_contiguous_bounds(n: usize, caps: &[usize]) -> Result<Vec<(usize, usize)>> {
+    let total = check_caps_hold(n, caps, "weighted contiguous partition")?;
     let mut out = Vec::with_capacity(caps.len());
     let mut lo = 0usize;
     for &c in caps {
         let budget = if n == 0 { 0 } else { (n * c).div_ceil(total) };
         let hi = (lo + budget).min(n);
-        out.push(items[lo..hi].to_vec());
+        out.push((lo, hi));
         lo = hi;
     }
-    out
+    Ok(out)
 }
 
 /// IID multinomial partition (each item independently uniform over
@@ -190,8 +286,8 @@ mod tests {
         let items: Vec<u32> = (0..80).map(|i| i * 3 + 1).collect();
         let mut rng_a = Rng::seed_from(9);
         let mut rng_b = rng_a.clone();
-        let direct = weighted_balanced_random_partition(&items, &caps, &mut rng_a);
-        let labels = weighted_balanced_labels(items.len(), &caps, &mut rng_b);
+        let direct = weighted_balanced_random_partition(&items, &caps, &mut rng_a).unwrap();
+        let labels = weighted_balanced_labels(items.len(), &caps, &mut rng_b).unwrap();
         assert_eq!(labels.len(), items.len());
         let applied = apply_labels(&items, &labels, caps.len());
         assert_eq!(direct, applied);
@@ -317,7 +413,7 @@ mod tests {
         let mut rng = Rng::seed_from(3);
         let items: Vec<u32> = (0..240).collect();
         let caps = [120usize, 60, 60];
-        let parts = weighted_balanced_random_partition(&items, &caps, &mut rng);
+        let parts = weighted_balanced_random_partition(&items, &caps, &mut rng).unwrap();
         assert_eq!(parts.len(), 3);
         assert_eq!(flatten_sorted(&parts), items);
         // budgets: ⌈240·120/240⌉ = 120, ⌈240·60/240⌉ = 60
@@ -334,7 +430,8 @@ mod tests {
             let items: Vec<u32> = (0..n as u32).collect();
             let caps = vec![n.div_ceil(l.max(1)).max(1); l];
             let a = balanced_random_partition(&items, l, &mut Rng::seed_from(seed));
-            let b = weighted_balanced_random_partition(&items, &caps, &mut Rng::seed_from(seed));
+            let b = weighted_balanced_random_partition(&items, &caps, &mut Rng::seed_from(seed))
+                .unwrap();
             assert_eq!(a, b, "n={n} l={l} seed={seed}");
         }
     }
@@ -356,6 +453,7 @@ mod tests {
             let total: usize = caps.iter().sum();
             let run = |s: u64| {
                 weighted_balanced_random_partition(&items, caps, &mut Rng::seed_from(s))
+                    .unwrap()
             };
             let parts = run(*seed);
             if parts.len() != caps.len() {
@@ -386,7 +484,9 @@ mod tests {
             let l = caps.len();
             let fits: usize = uni.iter().sum();
             if fits >= *n {
-                let a = weighted_balanced_random_partition(&items, &uni, &mut Rng::seed_from(*seed));
+                let a =
+                    weighted_balanced_random_partition(&items, &uni, &mut Rng::seed_from(*seed))
+                        .unwrap();
                 let b = balanced_random_partition(&items, l, &mut Rng::seed_from(*seed));
                 if a != b {
                     return Err("uniform caps diverged from balanced_random_partition".into());
@@ -399,14 +499,79 @@ mod tests {
     #[test]
     fn weighted_contiguous_reduces_to_contiguous_for_uniform_caps() {
         let items: Vec<u32> = (0..10).collect();
-        let w = weighted_contiguous_partition(&items, &[4, 4, 4]);
+        let w = weighted_contiguous_partition(&items, &[4, 4, 4]).unwrap();
         assert_eq!(w, contiguous_partition(&items, 3));
         // heterogeneous budgets chunk proportionally: ⌈10·6/12⌉=5, ⌈10·3/12⌉=3
-        let h = weighted_contiguous_partition(&items, &[6, 3, 3]);
+        let h = weighted_contiguous_partition(&items, &[6, 3, 3]).unwrap();
         assert_eq!(h[0], vec![0, 1, 2, 3, 4]);
         assert_eq!(h[1], vec![5, 6, 7]);
         assert_eq!(h[2], vec![8, 9]);
         assert_eq!(flatten_sorted(&h), items);
+        // the bounds helper names the identical ranges (the speculative
+        // dispatcher's data-dependency map)
+        let bounds = weighted_contiguous_bounds(10, &[6, 3, 3]).unwrap();
+        assert_eq!(bounds, vec![(0, 5), (5, 8), (8, 10)]);
+    }
+
+    #[test]
+    fn overloaded_fleet_is_a_structured_error_not_a_panic() {
+        // a fleet whose total capacity drops below |A_t| mid-run
+        // (scripted shrinking sim schedules, mass worker loss) must fail
+        // the round with a structured error the coordinator can report —
+        // the old assert! aborted the whole process
+        let items: Vec<u32> = (0..10).collect();
+        let mut rng = Rng::seed_from(1);
+        let err =
+            weighted_balanced_random_partition(&items, &[4, 3], &mut rng).unwrap_err();
+        match err {
+            crate::error::Error::CapacityExceeded { capacity: 7, got: 10, ctx } => {
+                assert!(ctx.contains("cannot hold the surviving set"), "ctx: {ctx}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+        let err = weighted_contiguous_partition(&items, &[4, 3]).unwrap_err();
+        assert!(
+            matches!(err, crate::error::Error::CapacityExceeded { capacity: 7, got: 10, .. }),
+            "{err}"
+        );
+        // empty capacity vectors are structured errors too
+        assert!(weighted_balanced_labels(3, &[], &mut rng).is_err());
+        assert!(weighted_contiguous_bounds(3, &[]).is_err());
+        // the boundary case total == n is fine
+        assert!(weighted_balanced_random_partition(&items, &[5, 5], &mut rng).is_ok());
+    }
+
+    #[test]
+    fn partition_strategy_parses_and_partitions() {
+        use crate::error::Error;
+        assert_eq!(
+            PartitionStrategy::parse("balanced").unwrap(),
+            PartitionStrategy::Balanced
+        );
+        assert_eq!(
+            PartitionStrategy::parse("contiguous").unwrap(),
+            PartitionStrategy::Contiguous
+        );
+        assert!(matches!(PartitionStrategy::parse("iid"), Err(Error::Config(_))));
+        assert!(PartitionStrategy::parse("zebra").is_err());
+        assert_eq!(PartitionStrategy::Balanced.name(), "balanced");
+        assert_eq!(PartitionStrategy::Contiguous.name(), "contiguous");
+
+        // each strategy's partition matches its underlying function,
+        // rng stream included
+        let items: Vec<u32> = (0..40).collect();
+        let caps = vec![20usize, 15, 15];
+        let mut r1 = Rng::seed_from(8);
+        let mut r2 = Rng::seed_from(8);
+        let a = PartitionStrategy::Balanced.partition(&items, &caps, &mut r1).unwrap();
+        let b = weighted_balanced_random_partition(&items, &caps, &mut r2).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        // contiguous consumes no randomness
+        let mut r3 = Rng::seed_from(8);
+        let c = PartitionStrategy::Contiguous.partition(&items, &caps, &mut r3).unwrap();
+        assert_eq!(c, weighted_contiguous_partition(&items, &caps).unwrap());
+        assert_eq!(r3.next_u64(), Rng::seed_from(8).next_u64());
     }
 
     #[test]

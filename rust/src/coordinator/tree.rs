@@ -15,10 +15,10 @@
 //! [`crate::dist::SimBackend`] capacity schedules) is re-planned
 //! against the machines that remain.
 //!
-//! ## Pipelined rounds
+//! ## Pipelined rounds and speculative dispatch
 //!
-//! [`TreeRunner::run`] drives rounds through the event-driven
-//! [`Backend::submit_round`] API: partial solutions union into
+//! [`TreeRunner::run`] drives rounds through the streaming
+//! [`Backend::open_round`] API: partial solutions union into
 //! `A_{t+1}` **as they arrive**, and — when every machine's output size
 //! is predictable up front (plain cardinality constraint and a
 //! fill-to-k compressor, the paper's default setting) — the next
@@ -27,12 +27,27 @@
 //! complete. By the time the round's last straggler reports, round
 //! `t+1` is fully partitioned and is submitted immediately; on the TCP
 //! backend its parts reach already-idle persistent dispatchers with no
-//! thread teardown or re-handshake in between. A size misprediction
-//! (greedy saturating below k) is detected per part and the partition
-//! recomputed from the untouched rng state, so pipelining is
-//! **bit-identical** to the serial barrier path
-//! ([`TreeRunner::run_serial`]) on every backend — overlap changes
-//! wall-clock (reported per round as
+//! thread teardown or re-handshake in between.
+//!
+//! Under the **contiguous** partitioner
+//! ([`PartitionStrategy::Contiguous`] — GreeDI-style locality-aware
+//! sharding), the runner goes one step further: a next-round part's
+//! input ids are fully known the moment its *contributing* current
+//! parts complete (contiguous bounds map each next part to a window of
+//! current parts), so straggler-independent next-round parts are
+//! **speculatively dispatched** into an early-opened [`RoundSession`]
+//! while the current round's stragglers are still running. Under the
+//! paper's balanced random partition nearly every next part draws
+//! items from every current part, so speculation there only
+//! *prepares* the partition (the PR-4 analysis: dispatch is low-value
+//! for balanced, high-value for contiguous).
+//!
+//! A size misprediction (greedy saturating below k) is detected per
+//! part, the speculative session is aborted, and the partition is
+//! recomputed from the untouched rng state — so pipelining and
+//! speculation are **bit-identical** to the serial barrier path
+//! ([`TreeRunner::run_serial`]) on every backend, for both
+//! partitioners. Overlap changes wall-clock (reported per round as
 //! [`RoundMetrics::straggler_overlap_ms`]), never the answer.
 
 use std::sync::Arc;
@@ -42,30 +57,18 @@ use crate::algorithms::{Compressor, LazyGreedy, Solution};
 use crate::constraints::spec::ConstraintSpec;
 use crate::coordinator::capacity::CapacityProfile;
 use crate::coordinator::metrics::{Metrics, RoundMetrics};
-use crate::coordinator::partitioner;
+use crate::coordinator::partitioner::{self, PartitionStrategy};
 use crate::coordinator::planner::RoundPlan;
-use crate::dist::{Backend, LocalBackend, PartEvent};
+use crate::dist::{Backend, LocalBackend, PartEvent, RoundSession};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
 use crate::util::rng::Rng;
-
-/// How items are spread across machines each round (ablation knob; the
-/// paper's algorithm uses [`PartitionMode::Balanced`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PartitionMode {
-    /// Paper §3: balanced random via virtual free locations.
-    Balanced,
-    /// Each item independently uniform (unbalanced strawman).
-    Iid,
-    /// Contiguous chunks (GREEDI's arbitrary partitioning).
-    Contiguous,
-}
 
 /// Builder for [`TreeRunner`].
 pub struct TreeBuilder {
     profile: CapacityProfile,
     compressor: Arc<dyn Compressor>,
-    partition_mode: PartitionMode,
+    partition_mode: PartitionStrategy,
     threads: Option<usize>,
     backend: Option<Arc<dyn Backend>>,
 }
@@ -83,7 +86,7 @@ impl TreeBuilder {
         TreeBuilder {
             profile,
             compressor: Arc::new(LazyGreedy::new()),
-            partition_mode: PartitionMode::Balanced,
+            partition_mode: PartitionStrategy::Balanced,
             threads: None,
             backend: None,
         }
@@ -101,7 +104,11 @@ impl TreeBuilder {
         self
     }
 
-    pub fn partition_mode(mut self, m: PartitionMode) -> Self {
+    /// Partition strategy for every round (`--partitioner`): the
+    /// paper's balanced random partition, or the contiguous
+    /// locality-aware strategy that unlocks speculative next-round
+    /// dispatch.
+    pub fn partition_mode(mut self, m: PartitionStrategy) -> Self {
         self.partition_mode = m;
         self
     }
@@ -166,6 +173,10 @@ pub struct TreeResult {
     /// over rounds (see [`RoundMetrics::straggler_overlap_ms`]; 0 on
     /// the serial path).
     pub straggler_overlap_ms: f64,
+    /// Problem-spec bytes shipped over the wire, summed over rounds
+    /// (protocol v4 interning: after round 0, compress requests carry
+    /// an O(1) problem id — see [`RoundMetrics::spec_bytes`]).
+    pub spec_bytes: u64,
     pub wall_ms: f64,
 }
 
@@ -197,16 +208,27 @@ pub struct TreeRunner {
     /// heterogeneous fleet this is µ_max, not every machine's size).
     pub capacity: usize,
     compressor: Arc<dyn Compressor>,
-    partition_mode: PartitionMode,
+    partition_mode: PartitionStrategy,
     backend: Arc<dyn Backend>,
 }
 
-/// A fully-partitioned upcoming round, pre-computed by the previous
-/// round's pipelined event loop while stragglers were still running.
-struct PreparedRound {
-    machines: usize,
-    parts: Vec<Vec<u32>>,
-    round_seed: u64,
+/// The upcoming round, as far as the previous round's pipelined event
+/// loop got it while stragglers were still running.
+enum Upcoming {
+    /// Fully partitioned, not yet submitted (balanced speculation, or
+    /// contiguous speculation whose session could not open).
+    Planned { machines: usize, parts: Vec<Vec<u32>>, round_seed: u64 },
+    /// Partially **dispatched**: a streaming session is open and the
+    /// first `submitted` parts are already executing on the backend
+    /// (contiguous speculation — parts whose inputs were complete
+    /// before the previous round's stragglers finished).
+    InFlight {
+        session: RoundSession,
+        machines: usize,
+        parts: Vec<Vec<u32>>,
+        submitted: usize,
+        round_seed: u64,
+    },
 }
 
 /// In-flight next-round speculation: the size of every machine's output
@@ -218,6 +240,14 @@ struct PreparedRound {
 /// pre-sized next-round parts; a size misprediction kills the
 /// speculation (the master rng was never touched, so the honest
 /// recomputation is bit-identical to the serial path).
+///
+/// Works for both first-class strategies: the balanced labels are drawn
+/// from a clone of the master rng, the contiguous "labels" are the
+/// deterministic chunk bounds (no randomness at all) — which is why
+/// contiguous next parts additionally have a *known dependency window*:
+/// `filled[p]` reaching the part's size certifies every input of next
+/// part `p` is final, making it safe to dispatch while the current
+/// round still runs.
 struct Speculation {
     /// Predicted output size per current-round part.
     expected: Vec<usize>,
@@ -231,6 +261,13 @@ struct Speculation {
     pos: Vec<usize>,
     machines: usize,
     next_parts: Vec<Vec<u32>>,
+    /// Items placed so far per next-round part; `filled[p] ==
+    /// next_parts[p].len()` certifies part `p`'s contents are final.
+    filled: Vec<usize>,
+    /// Next-round parts already streamed into the speculative session
+    /// (sessions index parts by submission order, so dispatch proceeds
+    /// strictly front-to-back over the ready prefix).
+    next_submitted: usize,
     round_seed: u64,
     /// Master-rng state after this round's draws — adopted on success.
     rng_after: Rng,
@@ -238,6 +275,7 @@ struct Speculation {
 
 impl Speculation {
     fn build(
+        strategy: PartitionStrategy,
         current_parts: &[Vec<u32>],
         k_eff: usize,
         profile: &CapacityProfile,
@@ -252,7 +290,30 @@ impl Speculation {
         let machines = profile.machines_for(n_next);
         let caps = profile.round_caps(machines);
         let mut rng_next = rng.clone();
-        let labels = partitioner::weighted_balanced_labels(n_next, &caps, &mut rng_next);
+        let labels: Vec<u32> = match strategy {
+            PartitionStrategy::Balanced => {
+                // a fleet that cannot hold the predicted set: let the
+                // honest path surface the structured error
+                match partitioner::weighted_balanced_labels(n_next, &caps, &mut rng_next) {
+                    Ok(l) => l,
+                    Err(_) => return None,
+                }
+            }
+            PartitionStrategy::Contiguous => {
+                let bounds = match partitioner::weighted_contiguous_bounds(n_next, &caps) {
+                    Ok(b) => b,
+                    Err(_) => return None,
+                };
+                let mut labels = vec![0u32; n_next];
+                for (p, (lo, hi)) in bounds.into_iter().enumerate() {
+                    for l in &mut labels[lo..hi] {
+                        *l = p as u32;
+                    }
+                }
+                labels
+            }
+            PartitionStrategy::Iid => return None,
+        };
         let round_seed = rng_next.next_u64();
         let mut sizes = vec![0usize; machines];
         let mut pos = Vec::with_capacity(n_next);
@@ -274,6 +335,8 @@ impl Speculation {
             pos,
             machines,
             next_parts,
+            filled: vec![0usize; machines],
+            next_submitted: 0,
             round_seed,
             rng_after: rng_next,
         })
@@ -289,7 +352,26 @@ impl Speculation {
         let off = self.offsets[part];
         for (d, &item) in items.iter().enumerate() {
             let g = off + d;
-            self.next_parts[self.labels[g] as usize][self.pos[g]] = item;
+            let p = self.labels[g] as usize;
+            self.next_parts[p][self.pos[g]] = item;
+            self.filled[p] += 1;
+        }
+        true
+    }
+
+    /// Stream every *ready* next-round part (contents certified final,
+    /// and everything before it already streamed) into the speculative
+    /// session. Returns `false` if the session refused a part —
+    /// speculation dies and the honest path takes over.
+    fn dispatch_ready(&mut self, session: &mut RoundSession) -> bool {
+        while self.next_submitted < self.machines
+            && self.filled[self.next_submitted] == self.next_parts[self.next_submitted].len()
+        {
+            let part = self.next_parts[self.next_submitted].clone();
+            if session.submit_part(part).is_err() {
+                return false;
+            }
+            self.next_submitted += 1;
         }
         true
     }
@@ -352,8 +434,18 @@ impl TreeRunner {
         let bound = plan.round_bound;
         let k_eff = problem.k.min(problem.constraint.max_cardinality());
         let speculate = pipelined
-            && self.partition_mode == PartitionMode::Balanced
-            && self.sizes_predictable(problem);
+            && self.sizes_predictable(problem)
+            && matches!(
+                self.partition_mode,
+                PartitionStrategy::Balanced | PartitionStrategy::Contiguous
+            );
+        // Speculative *dispatch* (not just preparation) pays off when a
+        // next part's inputs come from a window of current parts — the
+        // contiguous regime. Under balanced random nearly every next
+        // part draws items from every current part, so dispatch would
+        // start ~nothing early; the partition is still pre-computed.
+        let dispatch_speculatively =
+            speculate && self.partition_mode == PartitionStrategy::Contiguous;
 
         let metrics = Metrics::new();
         let mut rng = Rng::seed_from(seed ^ 0x7EE5_EED5);
@@ -367,34 +459,41 @@ impl TreeRunner {
         let mut sim_delay_ms = 0.0f64;
         let mut overlap_total = 0.0f64;
         let mut round = 0usize;
-        // next round, if the previous round's overlap window finished it
-        let mut prepared: Option<PreparedRound> = None;
+        // next round, as far as the previous round's overlap window got it
+        let mut prepared: Option<Upcoming> = None;
 
         loop {
             // Re-query the fleet every round: a scripted backend (sim
             // capacity schedules) may shrink or reshape it mid-run, and
             // parts must be sized to the machines that will execute
             // them. (A prepared round queried the identical profile —
-            // the schedule only advances when a round is submitted.)
-            let (m_t, parts, round_seed) = match prepared.take() {
-                Some(p) => (p.machines, p.parts, p.round_seed),
+            // the schedule only advances when a round is sealed.)
+            let (m_t, parts, round_seed, early_handle) = match prepared.take() {
+                Some(Upcoming::Planned { machines, parts, round_seed }) => {
+                    (machines, parts, round_seed, None)
+                }
+                Some(Upcoming::InFlight {
+                    mut session,
+                    machines,
+                    parts,
+                    submitted,
+                    round_seed,
+                }) => {
+                    // the previous round completed, so every remaining
+                    // part's contents are final: stream them and seal
+                    for part in parts.iter().skip(submitted) {
+                        session.submit_part(part.clone())?;
+                    }
+                    let handle = session.close()?;
+                    (machines, parts, round_seed, Some(handle))
+                }
                 None => {
                     let profile = self.backend.profile();
                     let m_t = profile.machines_for(a.len());
                     let caps = profile.round_caps(m_t);
-                    let parts = match self.partition_mode {
-                        PartitionMode::Balanced => {
-                            partitioner::weighted_balanced_random_partition(
-                                &a, &caps, &mut rng,
-                            )
-                        }
-                        PartitionMode::Iid => partitioner::iid_partition(&a, m_t, &mut rng),
-                        PartitionMode::Contiguous => {
-                            partitioner::weighted_contiguous_partition(&a, &caps)
-                        }
-                    };
+                    let parts = self.partition_mode.partition(&a, &caps, &mut rng)?;
                     let round_seed = rng.next_u64();
-                    (m_t, parts, round_seed)
+                    (m_t, parts, round_seed, None)
                 }
             };
             let r_start = Instant::now();
@@ -404,25 +503,60 @@ impl TreeRunner {
             let mut requeued_ids = 0usize;
             let mut round_delay = 0.0f64;
             let mut overlap_ms = 0.0f64;
+            let mut round_spec_bytes = 0u64;
 
             if pipelined {
-                let mut handle = self.backend.submit_round(
-                    problem,
-                    self.compressor.as_ref(),
-                    &parts,
-                    round_seed,
-                )?;
+                let mut handle = match early_handle {
+                    Some(h) => h,
+                    None => self.backend.submit_round(
+                        problem,
+                        self.compressor.as_ref(),
+                        &parts,
+                        round_seed,
+                    )?,
+                };
                 // Overlap window: with the round in flight and sizes
                 // predictable, draw the next round's plan + partition
                 // NOW (from a clone — the master rng stays untouched
                 // until the prediction is verified). The fleet profile
                 // for round t+1 is already observable: schedules
-                // advance at submission.
+                // advance when a round is sealed.
                 let mut spec: Option<Speculation> = if speculate && m_t > 1 {
-                    Speculation::build(&parts, k_eff, &self.backend.profile(), &rng)
+                    Speculation::build(
+                        self.partition_mode,
+                        &parts,
+                        k_eff,
+                        &self.backend.profile(),
+                        &rng,
+                    )
                 } else {
                     None
                 };
+                // Contiguous: open the next round's streaming session
+                // NOW, so straggler-independent next parts execute while
+                // this round's stragglers are still running. If the
+                // session cannot open, fall back to prepare-only.
+                let mut next_session: Option<RoundSession> = None;
+                let mut kill_spec = false;
+                if dispatch_speculatively {
+                    if let Some(s) = spec.as_mut() {
+                        if let Ok(mut sess) = self.backend.open_round(
+                            problem,
+                            self.compressor.as_ref(),
+                            s.round_seed,
+                        ) {
+                            // zero-size next parts are ready immediately
+                            if s.dispatch_ready(&mut sess) {
+                                next_session = Some(sess);
+                            } else {
+                                kill_spec = true; // sess drops → aborted
+                            }
+                        }
+                    }
+                }
+                if kill_spec {
+                    spec = None;
+                }
                 let mut first_done: Option<Instant> = None;
                 while let Some(ev) = handle.next_event() {
                     match ev? {
@@ -430,12 +564,25 @@ impl TreeRunner {
                             if first_done.is_none() {
                                 first_done = Some(Instant::now());
                             }
+                            let mut dead = false;
                             if let Some(s) = spec.as_mut() {
                                 if !s.place(part, &solution.items) {
-                                    // misprediction: recompute honestly
-                                    // at the loop top from the master rng
-                                    spec = None;
+                                    dead = true;
+                                } else if let Some(sess) = next_session.as_mut() {
+                                    // stream next parts whose inputs
+                                    // just became final
+                                    if !s.dispatch_ready(sess) {
+                                        dead = true;
+                                    }
                                 }
+                            }
+                            if dead {
+                                // misprediction: recompute honestly at
+                                // the loop top from the master rng; the
+                                // dropped session aborts, discarding any
+                                // speculatively dispatched parts
+                                spec = None;
+                                next_session = None;
                             }
                             slots[part] = Some(solution);
                         }
@@ -444,6 +591,9 @@ impl TreeRunner {
                             requeued_ids += reshipped_ids;
                         }
                         PartEvent::Delay { virtual_ms, .. } => round_delay += virtual_ms,
+                        PartEvent::SpecShipped { bytes } => {
+                            round_spec_bytes += bytes as u64
+                        }
                         PartEvent::MachineLost { .. } => {}
                     }
                 }
@@ -451,13 +601,23 @@ impl TreeRunner {
                     .map(|t| t.elapsed().as_secs_f64() * 1e3)
                     .unwrap_or(0.0);
                 // every prediction held: the next round is ready — adopt
-                // the advanced rng and ship the pre-built partition
+                // the advanced rng and hand over the pre-built partition
+                // (possibly already partially executing)
                 if let Some(s) = spec {
                     rng = s.rng_after;
-                    prepared = Some(PreparedRound {
-                        machines: s.machines,
-                        parts: s.next_parts,
-                        round_seed: s.round_seed,
+                    prepared = Some(match next_session {
+                        Some(session) => Upcoming::InFlight {
+                            session,
+                            machines: s.machines,
+                            parts: s.next_parts,
+                            submitted: s.next_submitted,
+                            round_seed: s.round_seed,
+                        },
+                        None => Upcoming::Planned {
+                            machines: s.machines,
+                            parts: s.next_parts,
+                            round_seed: s.round_seed,
+                        },
                     });
                 }
             } else {
@@ -470,6 +630,7 @@ impl TreeRunner {
                 requeued_parts = outcome.requeued_parts;
                 requeued_ids = outcome.requeued_ids;
                 round_delay = outcome.sim_delay_ms;
+                round_spec_bytes = outcome.spec_bytes;
                 for (i, s) in outcome.solutions.into_iter().enumerate() {
                     slots[i] = Some(s);
                 }
@@ -516,6 +677,7 @@ impl TreeRunner {
                 rows_resident_bytes: (a.len() * problem.dataset.row_bytes()) as u64,
                 wall_ms: r_start.elapsed().as_secs_f64() * 1e3 + round_delay,
                 straggler_overlap_ms: overlap_ms,
+                spec_bytes: round_spec_bytes,
                 best_value: best.value,
             });
 
@@ -546,6 +708,7 @@ impl TreeRunner {
             bytes_shuffled: metrics.total_bytes_shuffled(),
             rows_resident_bytes: metrics.total_rows_resident_bytes(),
             straggler_overlap_ms: overlap_total,
+            spec_bytes: metrics.total_spec_bytes(),
             // includes injected virtual delay, consistent with per-round wall_ms
             wall_ms: t_start.elapsed().as_secs_f64() * 1e3 + sim_delay_ms,
         })
@@ -691,7 +854,7 @@ mod tests {
         // deterministic contiguous parts make part 0 = lowest ids
         let p = Problem::modular(vec![1.0; 100], 5, 1);
         let res = TreeBuilder::new(25)
-            .partition_mode(PartitionMode::Contiguous)
+            .partition_mode(PartitionStrategy::Contiguous)
             .build()
             .run(&p, 2)
             .unwrap();
@@ -870,6 +1033,136 @@ mod tests {
     }
 
     #[test]
+    fn contiguous_pipelined_with_speculative_dispatch_is_bit_identical_to_serial() {
+        // the contiguous strategy speculatively DISPATCHES next-round
+        // parts into an early-opened session; the answer must still be
+        // bit-identical to the serial barrier path on local and sim
+        let ds = Arc::new(synthetic::csn_like(600, 23));
+        let p = Problem::exemplar(ds, 10, 23);
+        let t = TreeBuilder::new(50)
+            .partition_mode(PartitionStrategy::Contiguous)
+            .build();
+        let piped = t.run(&p, 13).unwrap();
+        let serial = t.run_serial(&p, 13).unwrap();
+        assert_eq!(piped.best.items, serial.best.items);
+        assert_eq!(piped.best.value.to_bits(), serial.best.value.to_bits());
+        assert_eq!(piped.rounds, serial.rounds);
+        assert_eq!(piped.final_round_best.items, serial.final_round_best.items);
+        let pm: Vec<usize> = piped.per_round.iter().map(|r| r.machines).collect();
+        let sm: Vec<usize> = serial.per_round.iter().map(|r| r.machines).collect();
+        assert_eq!(pm, sm);
+        let po: Vec<usize> = piped.per_round.iter().map(|r| r.output_items).collect();
+        let so: Vec<usize> = serial.per_round.iter().map(|r| r.output_items).collect();
+        assert_eq!(po, so);
+
+        use crate::dist::SimBackend;
+        let sim_piped = TreeBuilder::new(50)
+            .partition_mode(PartitionStrategy::Contiguous)
+            .backend(Arc::new(SimBackend::new(50)))
+            .build()
+            .run(&p, 13)
+            .unwrap();
+        assert_eq!(sim_piped.best.items, serial.best.items);
+        assert_eq!(sim_piped.best.value.to_bits(), serial.best.value.to_bits());
+    }
+
+    #[test]
+    fn contiguous_speculative_misprediction_aborts_and_falls_back_bit_identically() {
+        // mostly-zero modular weights: greedy saturates below k, so the
+        // speculative session is aborted mid-round and the honest
+        // recomputation must still match the serial run
+        let mut weights = vec![0.0f64; 200];
+        for (i, w) in weights.iter_mut().enumerate().take(200) {
+            if i % 7 == 0 {
+                *w = 1.0 + i as f64;
+            }
+        }
+        let p = Problem::modular(weights, 5, 2);
+        let t = TreeBuilder::new(25)
+            .partition_mode(PartitionStrategy::Contiguous)
+            .build();
+        let piped = t.run(&p, 4).unwrap();
+        let serial = t.run_serial(&p, 4).unwrap();
+        assert_eq!(piped.best.items, serial.best.items);
+        assert_eq!(piped.best.value.to_bits(), serial.best.value.to_bits());
+        assert_eq!(piped.rounds, serial.rounds);
+        let po: Vec<usize> = piped.per_round.iter().map(|r| r.output_items).collect();
+        let so: Vec<usize> = serial.per_round.iter().map(|r| r.output_items).collect();
+        assert_eq!(po, so);
+    }
+
+    #[test]
+    fn contiguous_pipelined_matches_serial_under_sim_faults() {
+        use crate::dist::{FaultPlan, SimBackend};
+        let ds = Arc::new(synthetic::csn_like(500, 24));
+        let p = Problem::exemplar(ds, 8, 24);
+        let faults = FaultPlan {
+            machine_loss_per_round: 1,
+            straggler_prob: 0.5,
+            straggler_delay_ms: 5.0,
+            ..FaultPlan::default()
+        };
+        let make = || Arc::new(SimBackend::new(50).with_faults(faults.clone()));
+        let build = |b: Arc<SimBackend>| {
+            TreeBuilder::new(50)
+                .partition_mode(PartitionStrategy::Contiguous)
+                .backend(b)
+                .build()
+        };
+        let piped = build(make()).run(&p, 6).unwrap();
+        let serial = build(make()).run_serial(&p, 6).unwrap();
+        assert_eq!(piped.best.items, serial.best.items);
+        assert_eq!(piped.best.value.to_bits(), serial.best.value.to_bits());
+        assert_eq!(piped.requeued_parts, serial.requeued_parts);
+    }
+
+    #[test]
+    fn shrinking_fleet_below_surviving_set_fails_with_structured_error() {
+        use crate::dist::SimBackend;
+        // A scripted fleet that shrinks is re-planned against the
+        // survivors (the cyclic profile always covers |A_t|), and a
+        // partitioner handed a fleet that cannot hold the set reports a
+        // structured CapacityExceeded — never a panic. The run either
+        // completes (re-planning succeeded) or errors structurally.
+        let ds = Arc::new(synthetic::csn_like(400, 17));
+        let p = Problem::exemplar(ds, 8, 17);
+        let big = CapacityProfile::parse("200,60,60").unwrap();
+        let small = CapacityProfile::parse("60,60").unwrap();
+        let backend = Arc::new(
+            SimBackend::with_profile(big.clone()).with_capacity_schedule(vec![big, small]),
+        );
+        let res = TreeBuilder::new(200).backend(backend).build().run(&p, 9);
+        match res {
+            Ok(r) => {
+                assert!(!r.best.items.is_empty());
+                for round in r.per_round.iter().skip(1) {
+                    assert!(round.max_machine_load <= 60);
+                }
+            }
+            Err(crate::error::Error::CapacityExceeded { .. }) => {}
+            Err(e) => panic!("expected success or CapacityExceeded, got {e}"),
+        }
+    }
+
+    #[test]
+    fn pipelined_run_reports_spec_bytes_once_with_wire_sim() {
+        use crate::dist::SimBackend;
+        let ds = crate::data::registry::load("csn-2k", 3).unwrap();
+        let p = Problem::exemplar(ds, 8, 3);
+        let backend = Arc::new(SimBackend::new(300).with_wire_spec(true));
+        let res = TreeBuilder::new(300).backend(backend).build().run(&p, 5).unwrap();
+        assert!(res.rounds >= 2, "expected a multi-round run");
+        assert!(
+            res.per_round[0].spec_bytes > 0,
+            "round 0 must account the interned spec"
+        );
+        for r in res.per_round.iter().skip(1) {
+            assert_eq!(r.spec_bytes, 0, "round {} re-shipped the spec", r.round);
+        }
+        assert_eq!(res.spec_bytes, res.per_round[0].spec_bytes);
+    }
+
+    #[test]
     fn size_misprediction_falls_back_bit_identically() {
         // mostly-zero modular weights: greedy saturates below k on most
         // machines, so every speculative size prediction dies and the
@@ -926,7 +1219,7 @@ mod tests {
         let ds = Arc::new(synthetic::csn_like(300, 9));
         let p = Problem::exemplar(ds, 5, 9);
         let res = TreeBuilder::new(120)
-            .partition_mode(PartitionMode::Iid)
+            .partition_mode(PartitionStrategy::Iid)
             .build()
             .run(&p, 2);
         match res {

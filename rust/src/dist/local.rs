@@ -3,17 +3,20 @@
 //!
 //! Machines execute on a small pool of OS threads (the testbed is a
 //! single host); XLA work funnels through the engine's device thread.
-//! Rounds are event-driven ([`Backend::submit_round`]): worker threads
-//! stream a [`PartEvent::Done`] the moment each machine finishes, so a
-//! consumer can overlap next-round work with in-flight machines instead
-//! of idling at the round barrier.
+//! Rounds are streaming ([`Backend::open_round`]): parts enter a shared
+//! condvar-driven work queue the moment they are submitted — while
+//! earlier parts of the same round are already executing — and worker
+//! threads stream a [`PartEvent::Done`] the moment each machine
+//! finishes, so a consumer can overlap next-round work (and, under a
+//! contiguous partitioner, next-round *dispatch*) with in-flight
+//! machines instead of idling at the round barrier.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use crate::algorithms::Compressor;
 use crate::coordinator::capacity::CapacityProfile;
-use crate::dist::{enforce_profile, machine_seeds, Backend, PartEvent, RoundHandle};
+use crate::dist::{Backend, PartEvent, RoundSession, RoundSink};
 use crate::error::Result;
 use crate::objectives::Problem;
 
@@ -30,9 +33,61 @@ pub struct LocalBackend {
 struct LocalRound {
     problem: Problem,
     compressor: Box<dyn Compressor>,
-    parts: Vec<Vec<u32>>,
-    seeds: Vec<u64>,
-    next: AtomicUsize,
+    queue: Mutex<LocalQueue>,
+    cv: Condvar,
+}
+
+/// The round's streamed work queue: tasks accumulate as the session
+/// submits parts; `closed` tells idle workers the list is final.
+struct LocalQueue {
+    tasks: VecDeque<(usize, Vec<u32>, u64)>,
+    closed: bool,
+}
+
+/// Session sink feeding a round's shared queue. Worker threads are
+/// spawned lazily, one per submitted part up to the configured pool
+/// width — an empty round spawns nothing, a 1-part round spawns one
+/// thread, and a speculative session costs only what it dispatches.
+struct LocalSink {
+    round: Arc<LocalRound>,
+    tx: mpsc::Sender<Result<PartEvent>>,
+    threads: usize,
+    spawned: usize,
+}
+
+impl RoundSink for LocalSink {
+    fn submit(&mut self, idx: usize, part: Vec<u32>, seed: u64) -> Result<()> {
+        {
+            let mut q = self.round.queue.lock().unwrap();
+            q.tasks.push_back((idx, part, seed));
+        }
+        self.round.cv.notify_one();
+        if self.spawned < self.threads {
+            self.spawned += 1;
+            let round = Arc::clone(&self.round);
+            let tx = self.tx.clone();
+            std::thread::spawn(move || worker_loop(round, tx));
+        }
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        let mut q = self.round.queue.lock().unwrap();
+        q.closed = true;
+        drop(q);
+        self.round.cv.notify_all();
+        Ok(())
+    }
+
+    fn abort(&mut self) {
+        let mut q = self.round.queue.lock().unwrap();
+        // discard queued work; in-flight results go to a channel whose
+        // receiver is gone, which stops the workers
+        q.tasks.clear();
+        q.closed = true;
+        drop(q);
+        self.round.cv.notify_all();
+    }
 }
 
 impl LocalBackend {
@@ -74,52 +129,62 @@ impl Backend for LocalBackend {
         self.profile.clone()
     }
 
-    fn submit_round(
+    fn open_round(
         &self,
         problem: &Problem,
         compressor: &dyn Compressor,
-        parts: &[Vec<u32>],
         round_seed: u64,
-    ) -> Result<RoundHandle> {
-        // capacity enforcement before any work starts
-        enforce_profile(&self.profile, parts)?;
-        if parts.is_empty() {
-            return Ok(RoundHandle::empty());
-        }
-
+    ) -> Result<RoundSession> {
         let round = Arc::new(LocalRound {
             problem: problem.clone(),
             compressor: compressor.boxed_clone(),
-            parts: parts.to_vec(),
-            // per-machine deterministic seeds
-            seeds: machine_seeds(round_seed, parts.len()),
-            next: AtomicUsize::new(0),
+            queue: Mutex::new(LocalQueue { tasks: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
         });
         let (tx, rx) = mpsc::channel();
-        let workers = self.threads.min(parts.len()).max(1);
-        for _ in 0..workers {
-            let round = Arc::clone(&round);
-            let tx = tx.clone();
-            std::thread::spawn(move || loop {
-                let i = round.next.fetch_add(1, Ordering::Relaxed);
-                if i >= round.parts.len() {
-                    break;
+        // worker threads are spawned by the sink as parts stream in
+        Ok(RoundSession::new(
+            Box::new(LocalSink {
+                round,
+                tx,
+                threads: self.threads.max(1),
+                spawned: 0,
+            }),
+            rx,
+            self.profile.clone(),
+            round_seed,
+        ))
+    }
+}
+
+/// One pool thread: drain the round's queue until it is closed and
+/// empty (or the consumer gives up).
+fn worker_loop(round: Arc<LocalRound>, tx: mpsc::Sender<Result<PartEvent>>) {
+    loop {
+        let task = {
+            let mut q = round.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break Some(t);
                 }
-                let sol =
-                    round.compressor.compress(&round.problem, &round.parts[i], round.seeds[i]);
-                let event = match sol {
-                    Ok(solution) => Ok(PartEvent::Done { part: i, solution }),
-                    Err(e) => Err(e),
-                };
-                let fatal = event.is_err();
-                // a closed channel means the consumer gave up on the
-                // round — stop quietly
-                if tx.send(event).is_err() || fatal {
-                    break;
+                if q.closed {
+                    break None;
                 }
-            });
+                q = round.cv.wait(q).unwrap();
+            }
+        };
+        let Some((idx, part, seed)) = task else { break };
+        let sol = round.compressor.compress(&round.problem, &part, seed);
+        let event = match sol {
+            Ok(solution) => Ok(PartEvent::Done { part: idx, solution }),
+            Err(e) => Err(e),
+        };
+        let fatal = event.is_err();
+        // a closed channel means the consumer gave up on the round —
+        // stop quietly
+        if tx.send(event).is_err() || fatal {
+            break;
         }
-        Ok(RoundHandle::new(rx, parts.len()))
     }
 }
 
@@ -169,6 +234,28 @@ mod tests {
         // streamed events must agree with the barrier wrapper bit-exactly
         let out = backend.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
         assert_eq!(out.solutions.len(), 4);
+    }
+
+    #[test]
+    fn streamed_parts_match_the_batch_round_bit_exactly() {
+        // parts submitted one at a time (earlier parts already
+        // executing) must produce the identical round: positional seeds
+        // come from submission order, not submission timing
+        let ds = Arc::new(synthetic::csn_like(120, 6));
+        let p = Problem::exemplar(ds, 3, 6);
+        let backend = LocalBackend::new(40).with_threads(2);
+        let parts: Vec<Vec<u32>> = (0..4).map(|i| (i * 30..(i + 1) * 30).collect()).collect();
+        let mut session = backend.open_round(&p, &LazyGreedy::new(), 5).unwrap();
+        for part in &parts {
+            session.submit_part(part.clone()).unwrap();
+        }
+        let streamed = session.close().unwrap().finish().unwrap();
+        let batch = backend.run_round(&p, &LazyGreedy::new(), &parts, 5).unwrap();
+        assert_eq!(streamed.solutions.len(), batch.solutions.len());
+        for (x, y) in streamed.solutions.iter().zip(&batch.solutions) {
+            assert_eq!(x.items, y.items);
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+        }
     }
 
     #[test]

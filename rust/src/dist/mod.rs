@@ -20,21 +20,29 @@
 //! all three backends produce **identical** solutions. Fault injection
 //! and wire transport change cost and availability, never the answer.
 //!
-//! Rounds are **event-driven** (Backend v2): the required trait method
-//! is [`Backend::submit_round`], which returns a [`RoundHandle`]
-//! streaming per-part [`PartEvent`]s as machines report — completions,
-//! requeues after machine loss, fleet departures, injected virtual
-//! delay. The classic blocking [`Backend::run_round`] barrier is a
-//! provided wrapper (submit + drain), so single-round call sites are
-//! unchanged while the tree runner overlaps next-round preparation with
-//! a round's stragglers.
+//! Rounds are **streaming** (Backend v3): the required trait method is
+//! [`Backend::open_round`], which returns an incremental
+//! [`RoundSession`] — parts are submitted one at a time
+//! ([`RoundSession::submit_part`]) and start executing immediately,
+//! while earlier parts of the same logical round are still in flight;
+//! [`RoundSession::close`] seals the part list and hands back the
+//! [`RoundHandle`] streaming per-part [`PartEvent`]s as machines report
+//! — completions, requeues after machine loss, fleet departures,
+//! injected virtual delay, problem-spec shipments. The one-shot
+//! [`Backend::submit_round`] (open + submit all + close) and the
+//! classic blocking [`Backend::run_round`] barrier are provided
+//! wrappers, so single-round call sites are unchanged while the tree
+//! runner overlaps next-round preparation — and, under a contiguous
+//! partitioner, next-round *dispatch* — with a round's stragglers.
+//! [`TcpBackend`] additionally allows the next round's session to open
+//! while stragglers from the current one drain.
 //!
 //! Fleets may be **capacity-heterogeneous**: every backend carries a
 //! [`CapacityProfile`] (per-machine-class µ_p, cyclic — see
 //! [`crate::coordinator::capacity`]) instead of a single scalar, and
 //! enforcement checks part `j` against the virtual capacity `µ_{j mod
 //! L}` the planner sized it for. [`TcpBackend`] additionally learns each
-//! worker's real µ from the protocol-v3 handshake and dispatches a part
+//! worker's real µ from the protocol handshake and dispatches a part
 //! only to workers that can hold it.
 
 pub mod local;
@@ -48,12 +56,15 @@ pub use sim::{FaultPlan, SimBackend};
 pub use tcp::TcpBackend;
 
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::algorithms::{Compressor, Solution};
+use crate::constraints::Constraint;
 use crate::coordinator::capacity::CapacityProfile;
+use crate::data::DatasetRef;
+use crate::dist::protocol::ProblemSpec;
 use crate::error::{Error, Result};
-use crate::objectives::Problem;
+use crate::objectives::{Objective, Problem};
 use crate::util::rng::Rng;
 
 /// Outcome of one compression round executed by a backend.
@@ -71,9 +82,14 @@ pub struct RoundOutcome {
     /// Virtual wall-clock added by injected stragglers/retries
     /// ([`SimBackend`] only; 0 elsewhere).
     pub sim_delay_ms: f64,
+    /// [`ProblemSpec`] bytes shipped over the wire this round (protocol
+    /// v4 interning: a spec crosses once per (worker connection,
+    /// problem identity); after that every compress request carries an
+    /// O(1) problem id). 0 on backends with no wire.
+    pub spec_bytes: u64,
 }
 
-/// One observable state change of an in-flight round (Backend v2).
+/// One observable state change of an in-flight round.
 ///
 /// Events stream out of a [`RoundHandle`] as they happen, so the
 /// coordinator can overlap next-round preparation with the round's
@@ -112,6 +128,13 @@ pub enum PartEvent {
     Delay {
         part: usize,
         virtual_ms: f64,
+    },
+    /// A full [`ProblemSpec`] crossed the coordinator↔machine boundary
+    /// (protocol v4 `define-problem` interning: once per (worker
+    /// connection, problem identity); every other request ships an O(1)
+    /// problem id). Purely cost telemetry — never changes the answer.
+    SpecShipped {
+        bytes: usize,
     },
 }
 
@@ -199,6 +222,7 @@ impl RoundHandle {
         let mut requeued_parts = 0usize;
         let mut requeued_ids = 0usize;
         let mut sim_delay_ms = 0.0f64;
+        let mut spec_bytes = 0u64;
         while let Some(ev) = self.next_event() {
             match ev? {
                 PartEvent::Done { part, solution } => solutions[part] = Some(solution),
@@ -207,6 +231,7 @@ impl RoundHandle {
                     requeued_ids += reshipped_ids;
                 }
                 PartEvent::Delay { virtual_ms, .. } => sim_delay_ms += virtual_ms,
+                PartEvent::SpecShipped { bytes } => spec_bytes += bytes as u64,
                 PartEvent::MachineLost { .. } => {}
             }
         }
@@ -219,16 +244,148 @@ impl RoundHandle {
                 })
             })
             .collect::<Result<Vec<Solution>>>()?;
-        Ok(RoundOutcome { solutions, requeued_parts, requeued_ids, sim_delay_ms })
+        Ok(RoundOutcome { solutions, requeued_parts, requeued_ids, sim_delay_ms, spec_bytes })
+    }
+}
+
+/// Backend-side receiving end of one streaming round: accepts parts in
+/// index order and seals or cancels the round. Implemented by each
+/// backend; driven through the backend-agnostic [`RoundSession`], which
+/// owns capacity enforcement and part indexing.
+pub trait RoundSink: Send {
+    /// Accept part `idx` (indices arrive strictly sequentially from 0)
+    /// with its positional per-machine `seed` (drawn by the session —
+    /// seed derivation is a cross-backend invariant, so no backend can
+    /// drift). The part may start executing immediately — earlier parts
+    /// of the same round are allowed to be in flight already.
+    fn submit(&mut self, idx: usize, part: Vec<u32>, seed: u64) -> Result<()>;
+
+    /// Seal the round: no further parts. Already-submitted parts keep
+    /// running; the round completes when all of them have reported.
+    fn close(&mut self) -> Result<()>;
+
+    /// Cancel the round: queued parts are discarded, in-flight results
+    /// are dropped on arrival. Used when a speculatively-dispatched
+    /// round turns out to be mispredicted. Must be idempotent with
+    /// [`RoundSink::close`] (whichever comes first wins).
+    fn abort(&mut self);
+}
+
+/// One incrementally-submitted round (Backend v3): obtained from
+/// [`Backend::open_round`], fed via [`RoundSession::submit_part`], and
+/// sealed with [`RoundSession::close`], which returns the round's
+/// [`RoundHandle`]. Parts execute while later parts are still being
+/// submitted; part indices (and therefore positional seeds) are
+/// assigned by submission order, so a streamed round is bit-identical
+/// to the same parts submitted at once. Dropping an unclosed session
+/// aborts the round.
+pub struct RoundSession {
+    sink: Option<Box<dyn RoundSink>>,
+    rx: Option<mpsc::Receiver<Result<PartEvent>>>,
+    profile: CapacityProfile,
+    seed_rng: Rng,
+    submitted: usize,
+}
+
+impl RoundSession {
+    /// Wrap a backend's part sink and event channel. `profile` is the
+    /// fleet profile parts are enforced against (part `j` must fit the
+    /// virtual machine `µ_{j mod L}` it will be sized for);
+    /// `round_seed` seeds the positional per-machine seed stream (one
+    /// draw per submitted part, identical across backends).
+    pub fn new(
+        sink: Box<dyn RoundSink>,
+        rx: mpsc::Receiver<Result<PartEvent>>,
+        profile: CapacityProfile,
+        round_seed: u64,
+    ) -> RoundSession {
+        RoundSession {
+            sink: Some(sink),
+            rx: Some(rx),
+            profile,
+            seed_rng: Rng::seed_from(round_seed),
+            submitted: 0,
+        }
+    }
+
+    /// Parts submitted so far (the next part gets this index).
+    pub fn submitted(&self) -> usize {
+        self.submitted
+    }
+
+    /// Submit the round's next part. Capacity is enforced here, before
+    /// the backend sees the part — the same pre-dispatch contract as
+    /// the one-shot [`Backend::submit_round`].
+    pub fn submit_part(&mut self, part: Vec<u32>) -> Result<()> {
+        let idx = self.submitted;
+        let cap = self.profile.virtual_capacity(idx);
+        if part.len() > cap {
+            return Err(Error::CapacityExceeded {
+                capacity: cap,
+                got: part.len(),
+                ctx: format!(" (machine {idx} of a streaming round)"),
+            });
+        }
+        // commit the seed draw only on success, so a refused part never
+        // desynchronizes the positional stream
+        let mut advanced = self.seed_rng.clone();
+        let seed = advanced.next_u64();
+        let sink = self
+            .sink
+            .as_mut()
+            .ok_or_else(|| Error::invalid("round session already closed"))?;
+        sink.submit(idx, part, seed)?;
+        self.seed_rng = advanced;
+        self.submitted += 1;
+        Ok(())
+    }
+
+    /// Submit a batch of parts in order.
+    pub fn submit_parts(&mut self, parts: &[Vec<u32>]) -> Result<()> {
+        for p in parts {
+            self.submit_part(p.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Seal the round and return the handle draining its events. The
+    /// handle completes after one `Done` per submitted part.
+    pub fn close(mut self) -> Result<RoundHandle> {
+        let mut sink = self
+            .sink
+            .take()
+            .ok_or_else(|| Error::invalid("round session already closed"))?;
+        sink.close()?;
+        let rx = self.rx.take().expect("session channel taken before close");
+        Ok(RoundHandle::new(rx, self.submitted))
+    }
+
+    /// Cancel the round (explicit form of dropping the session): queued
+    /// parts are discarded and in-flight results dropped on arrival.
+    pub fn abort(mut self) {
+        if let Some(mut sink) = self.sink.take() {
+            sink.abort();
+        }
+    }
+}
+
+impl Drop for RoundSession {
+    fn drop(&mut self) {
+        // an unclosed session is a cancelled round, never a leaked job
+        if let Some(mut sink) = self.sink.take() {
+            sink.abort();
+        }
     }
 }
 
 /// An execution substrate for one compression round over a partition.
 ///
-/// v2 contract: the required method is the event-driven
-/// [`Backend::submit_round`]; the blocking [`Backend::run_round`] is a
-/// provided wrapper (submit + drain) so call sites that want the
-/// classic barrier semantics keep working unchanged.
+/// v3 contract: the required method is the streaming
+/// [`Backend::open_round`]; the one-shot event-driven
+/// [`Backend::submit_round`] and the blocking [`Backend::run_round`]
+/// are provided wrappers (open + submit + close, then optionally
+/// drain), so call sites that want the classic semantics keep working
+/// unchanged.
 pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -247,21 +404,41 @@ pub trait Backend: Send + Sync {
         self.profile().max_capacity()
     }
 
-    /// Start one round: run `compressor` on every part (part `j` on a
-    /// machine of the profile's virtual capacity `µ_{j mod L}`) and
-    /// stream [`PartEvent`]s as machines report. Must fail with
-    /// [`Error::CapacityExceeded`] if any part exceeds its machine's
-    /// capacity, before any work starts. Solutions are keyed by part
-    /// index and use positional per-machine seeds, so the event arrival
-    /// order (and any requeueing along the way) never changes the
-    /// answer.
+    /// Open one streaming round (Backend v3): parts are submitted
+    /// incrementally through the returned [`RoundSession`] and may
+    /// start executing while later parts are still unknown — the
+    /// foundation of speculative next-round dispatch. Part `j` runs on
+    /// a machine of the profile's virtual capacity `µ_{j mod L}` with a
+    /// positional per-machine seed derived from `round_seed`, so the
+    /// streamed round is bit-identical to the same parts submitted at
+    /// once, regardless of arrival order or requeueing along the way.
+    /// Backends may allow a new round's session to open while an
+    /// earlier round's stragglers drain ([`TcpBackend`] does).
+    fn open_round(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        round_seed: u64,
+    ) -> Result<RoundSession>;
+
+    /// One-shot wrapper over [`Backend::open_round`]: submit every part
+    /// of a fully-known round and stream [`PartEvent`]s as machines
+    /// report. Fails with [`Error::CapacityExceeded`] if any part
+    /// exceeds its machine's capacity, before any work starts.
     fn submit_round(
         &self,
         problem: &Problem,
         compressor: &dyn Compressor,
         parts: &[Vec<u32>],
         round_seed: u64,
-    ) -> Result<RoundHandle>;
+    ) -> Result<RoundHandle> {
+        // batch-validate up front so a capacity error reports the
+        // offending machine against the full round, with no work started
+        enforce_profile(&self.profile(), parts)?;
+        let mut session = self.open_round(problem, compressor, round_seed)?;
+        session.submit_parts(parts)?;
+        session.close()
+    }
 
     /// Barrier wrapper over [`Backend::submit_round`]: block until every
     /// part completes and return one solution per part, order preserved.
@@ -362,12 +539,121 @@ pub(crate) fn enforce_profile(profile: &CapacityProfile, parts: &[Vec<u32>]) -> 
     Ok(())
 }
 
-/// Positional per-machine seeds derived from the round seed — identical
-/// across backends (and across thread counts) so a round's output never
-/// depends on the execution substrate.
-pub(crate) fn machine_seeds(round_seed: u64, machines: usize) -> Vec<u64> {
-    let mut seed_rng = Rng::seed_from(round_seed);
-    (0..machines).map(|_| seed_rng.next_u64()).collect()
+/// A problem interned for the wire (protocol v4): a stable id, the spec
+/// it stands for, and the spec's serialized size (the bytes saved every
+/// time the id ships instead).
+#[derive(Clone)]
+pub(crate) struct InternedSpec {
+    pub id: u64,
+    pub spec: Arc<ProblemSpec>,
+    pub bytes: usize,
+    /// `true` the first time this problem identity was interned on this
+    /// coordinator (a brand-new id was minted).
+    pub fresh: bool,
+}
+
+/// Cheap identity key for a [`Problem`]: the `Arc`s pin the referenced
+/// dataset/constraint alive, so pointer equality is a sound (and O(1))
+/// stand-in for "same problem" — the scalar fields catch rebuilds of
+/// the same dataset under different parameters.
+struct ProblemKey {
+    dataset: DatasetRef,
+    constraint: Arc<dyn Constraint>,
+    k: usize,
+    seed: u64,
+    eval_len: usize,
+    obj_tag: u8,
+    h2_bits: u64,
+    sigma2_bits: u64,
+}
+
+impl ProblemKey {
+    fn of(p: &Problem) -> ProblemKey {
+        // Exhaustive on purpose: a new (or newly wire-representable)
+        // objective MUST get its own tag here, or two problems differing
+        // only in objective would alias to one interned spec. The
+        // non-wire variants still key distinctly even though interning
+        // them fails in from_problem.
+        let (obj_tag, h2_bits, sigma2_bits) = match &p.objective {
+            Objective::Exemplar => (0u8, 0u64, 0u64),
+            Objective::LogDet { h2, sigma2 } => (1, h2.to_bits(), sigma2.to_bits()),
+            Objective::Coverage(_) => (2, 0, 0),
+            Objective::Modular(_) => (3, 0, 0),
+        };
+        ProblemKey {
+            dataset: p.dataset.clone(),
+            constraint: p.constraint.clone(),
+            k: p.k,
+            seed: p.seed,
+            eval_len: p.eval_ids.len(),
+            obj_tag,
+            h2_bits,
+            sigma2_bits,
+        }
+    }
+
+    fn matches(&self, other: &ProblemKey) -> bool {
+        Arc::ptr_eq(&self.dataset, &other.dataset)
+            && Arc::ptr_eq(&self.constraint, &other.constraint)
+            && self.k == other.k
+            && self.seed == other.seed
+            && self.eval_len == other.eval_len
+            && self.obj_tag == other.obj_tag
+            && self.h2_bits == other.h2_bits
+            && self.sigma2_bits == other.sigma2_bits
+    }
+}
+
+struct InternEntry {
+    key: ProblemKey,
+    id: u64,
+    spec: Arc<ProblemSpec>,
+    bytes: usize,
+}
+
+/// Coordinator-side problem interner (protocol v4): memoizes
+/// [`ProblemSpec::from_problem`] per problem *identity*, so a
+/// multi-round run serializes the spec once instead of once per round,
+/// and assigns each distinct spec a short id that rides in every
+/// compress request. Two `Problem` values that serialize to the same
+/// spec share one id even when their identity keys differ (e.g. a
+/// re-loaded dataset `Arc`).
+#[derive(Default)]
+pub(crate) struct SpecInterner {
+    entries: Mutex<Vec<InternEntry>>,
+}
+
+impl SpecInterner {
+    pub fn new() -> SpecInterner {
+        SpecInterner::default()
+    }
+
+    pub fn intern(&self, p: &Problem) -> Result<InternedSpec> {
+        let key = ProblemKey::of(p);
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.key.matches(&key)) {
+            return Ok(InternedSpec {
+                id: e.id,
+                spec: e.spec.clone(),
+                bytes: e.bytes,
+                fresh: false,
+            });
+        }
+        // identity miss: pay from_problem once, then dedupe by content
+        let spec = ProblemSpec::from_problem(p)?;
+        if let Some(e) = entries.iter().find(|e| *e.spec == spec) {
+            let (id, spec, bytes) = (e.id, e.spec.clone(), e.bytes);
+            // remember the new identity key as an alias of the same id,
+            // so the next lookup is a pointer comparison again
+            entries.push(InternEntry { key, id, spec: spec.clone(), bytes });
+            return Ok(InternedSpec { id, spec, bytes, fresh: false });
+        }
+        let id = entries.iter().map(|e| e.id + 1).max().unwrap_or(0);
+        let bytes = spec.to_json().to_string().len();
+        let spec = Arc::new(spec);
+        entries.push(InternEntry { key, id, spec: spec.clone(), bytes });
+        Ok(InternedSpec { id, spec, bytes, fresh: true })
+    }
 }
 
 #[cfg(test)]
@@ -406,10 +692,46 @@ mod tests {
         }
     }
 
+    /// Sink that records the seeds the session hands it.
+    struct SeedSink {
+        seeds: Arc<Mutex<Vec<u64>>>,
+    }
+
+    impl RoundSink for SeedSink {
+        fn submit(&mut self, _idx: usize, _part: Vec<u32>, seed: u64) -> Result<()> {
+            self.seeds.lock().unwrap().push(seed);
+            Ok(())
+        }
+        fn close(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn abort(&mut self) {}
+    }
+
+    fn session_seeds(round_seed: u64, parts: usize) -> Vec<u64> {
+        let seeds = Arc::new(Mutex::new(Vec::new()));
+        let (_tx, rx) = mpsc::channel();
+        let mut s = RoundSession::new(
+            Box::new(SeedSink { seeds: Arc::clone(&seeds) }),
+            rx,
+            CapacityProfile::uniform(10),
+            round_seed,
+        );
+        for i in 0..parts {
+            s.submit_part(vec![i as u32]).unwrap();
+        }
+        s.close().unwrap();
+        let out = seeds.lock().unwrap().clone();
+        out
+    }
+
     #[test]
-    fn machine_seeds_are_positional_and_deterministic() {
-        let a = machine_seeds(7, 5);
-        let b = machine_seeds(7, 3);
+    fn session_seeds_are_positional_and_deterministic() {
+        // positional: part j's seed depends only on (round_seed, j), so
+        // a round streamed in pieces equals the same round submitted at
+        // once — and which machine executes a part never matters
+        let a = session_seeds(7, 5);
+        let b = session_seeds(7, 3);
         assert_eq!(&a[..3], &b[..]);
         assert_ne!(a[0], a[1]);
     }
@@ -460,6 +782,122 @@ mod tests {
         // empty rounds complete immediately
         let out = RoundHandle::empty().finish().unwrap();
         assert!(out.solutions.is_empty());
+    }
+
+    #[test]
+    fn finish_aggregates_spec_shipments() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Ok(PartEvent::SpecShipped { bytes: 120 })).unwrap();
+        tx.send(Ok(PartEvent::Done {
+            part: 0,
+            solution: Solution { items: vec![1], value: 1.0 },
+        }))
+        .unwrap();
+        let out = RoundHandle::new(rx, 1).finish().unwrap();
+        assert_eq!(out.spec_bytes, 120);
+        drop(tx);
+    }
+
+    /// Recording sink: captures submissions so the session contract
+    /// (sequential indices, enforcement before the sink, abort-on-drop)
+    /// is testable without a real backend.
+    struct RecordingSink {
+        log: Arc<Mutex<Vec<String>>>,
+    }
+
+    impl RoundSink for RecordingSink {
+        fn submit(&mut self, idx: usize, part: Vec<u32>, _seed: u64) -> Result<()> {
+            self.log.lock().unwrap().push(format!("submit {idx} ({} items)", part.len()));
+            Ok(())
+        }
+        fn close(&mut self) -> Result<()> {
+            self.log.lock().unwrap().push("close".into());
+            Ok(())
+        }
+        fn abort(&mut self) {
+            self.log.lock().unwrap().push("abort".into());
+        }
+    }
+
+    #[test]
+    fn round_session_enforces_capacity_and_indexes_sequentially() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let (_tx, rx) = mpsc::channel();
+        let mut s = RoundSession::new(
+            Box::new(RecordingSink { log: Arc::clone(&log) }),
+            rx,
+            CapacityProfile::parse("3,2").unwrap(),
+            9,
+        );
+        s.submit_part(vec![1, 2, 3]).unwrap();
+        s.submit_part(vec![4]).unwrap();
+        // part 2 cycles back to the large class
+        s.submit_part(vec![5, 6, 7]).unwrap();
+        // part 3 is sized for the small class: 3 items must be refused
+        // BEFORE the sink sees them, and the index must not advance
+        let err = s.submit_part(vec![8, 9, 10]).unwrap_err();
+        assert!(
+            matches!(err, Error::CapacityExceeded { capacity: 2, got: 3, .. }),
+            "{err}"
+        );
+        assert_eq!(s.submitted(), 3);
+        let handle = s.close().unwrap();
+        assert_eq!(handle.parts(), 3);
+        assert_eq!(
+            *log.lock().unwrap(),
+            vec!["submit 0 (3 items)", "submit 1 (1 items)", "submit 2 (3 items)", "close"]
+        );
+    }
+
+    #[test]
+    fn dropping_an_unclosed_session_aborts_the_round() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let (_tx, rx) = mpsc::channel();
+        let mut s = RoundSession::new(
+            Box::new(RecordingSink { log: Arc::clone(&log) }),
+            rx,
+            CapacityProfile::uniform(10),
+            9,
+        );
+        s.submit_part(vec![1]).unwrap();
+        drop(s);
+        assert_eq!(*log.lock().unwrap(), vec!["submit 0 (1 items)", "abort"]);
+    }
+
+    #[test]
+    fn spec_interner_memoizes_by_identity_and_dedupes_by_content() {
+        let ds = crate::data::registry::load("csn-2k", 5).unwrap();
+        let p = Problem::exemplar(ds.clone(), 7, 5);
+        let interner = SpecInterner::new();
+        let a = interner.intern(&p).unwrap();
+        assert!(a.fresh, "first intern mints a fresh id");
+        assert!(a.bytes > 0);
+        // same identity: memo hit, no re-serialization signalled
+        let b = interner.intern(&p).unwrap();
+        assert_eq!(a.id, b.id);
+        assert!(!b.fresh);
+        // a clone shares every Arc — still the same identity
+        let c = interner.intern(&p.clone()).unwrap();
+        assert_eq!(a.id, c.id);
+        assert!(!c.fresh);
+        // a re-built problem with fresh Arcs but the identical spec
+        // dedupes by content onto the same id
+        let rebuilt = Problem::exemplar(
+            crate::data::registry::load("csn-2k", 5).unwrap(),
+            7,
+            5,
+        );
+        let d = interner.intern(&rebuilt).unwrap();
+        assert_eq!(a.id, d.id);
+        assert!(!d.fresh);
+        // a genuinely different problem mints a different id
+        let other = Problem::exemplar(ds, 9, 5);
+        let e = interner.intern(&other).unwrap();
+        assert_ne!(a.id, e.id);
+        assert!(e.fresh);
+        // problems the wire cannot describe are rejected
+        let adhoc = Problem::modular(vec![1.0; 8], 2, 0);
+        assert!(interner.intern(&adhoc).is_err());
     }
 
     #[test]

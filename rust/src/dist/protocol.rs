@@ -40,17 +40,23 @@ use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 /// capacity advertisement *load-bearing* — coordinators dispatch by
 /// capacity fit over heterogeneous fleets — and added the virtual
 /// machine capacity `cap` to every compress request so workers enforce
-/// the planned per-machine bound, not just their own physical µ. v1/v2
-/// peers are rejected at handshake.
+/// the planned per-machine bound, not just their own physical µ. v4
+/// interns problems: a [`Request::DefineProblem`] ships the full
+/// [`ProblemSpec`] **once per (connection, problem identity)** and
+/// every [`Request::Compress`] carries the short `problem_id` instead
+/// of the spec — killing the per-round spec re-serialization and
+/// shrinking every subsequent request to O(part). Workers keep the id
+/// table per connection, so a coordinator re-interns transparently on
+/// fresh or reconnected workers. v1–v3 peers are rejected at handshake.
 ///
-/// Pipelined dispatch (the coordinator's event-driven Backend v2 —
-/// persistent per-worker dispatchers, next-round parts prepared while
-/// stragglers finish) is **protocol-invisible** and did not bump the
-/// version: workers simply observe back-to-back `compress` requests
-/// across round boundaries on one warm connection, which v3 already
-/// permits. The normative statement of the pipelined semantics (event
-/// ordering, in-flight next-round parts) is `docs/PROTOCOL.md` §6.1.
-pub const PROTOCOL_VERSION: usize = 3;
+/// Pipelined/streaming dispatch (the coordinator's Backend v3 —
+/// persistent per-worker dispatchers, next-round parts speculatively
+/// dispatched while stragglers finish) is **protocol-invisible**:
+/// workers simply observe back-to-back `compress` requests across round
+/// boundaries on one warm connection. The normative statement of the
+/// streaming semantics (event ordering, in-flight next-round parts) is
+/// `docs/PROTOCOL.md` §6.1.
+pub const PROTOCOL_VERSION: usize = 4;
 
 /// Hard cap on frame payloads (64 MiB — a part of 10^6 ids is ~8 MB of
 /// JSON; anything bigger than this is a corrupt or hostile frame).
@@ -336,9 +342,18 @@ pub fn compressor_from_name(name: &str) -> Result<Box<dyn Compressor>> {
 pub enum Request {
     /// Handshake: version check, capacity discovery.
     Hello,
+    /// Intern a problem on this connection (v4): ship the full
+    /// [`ProblemSpec`] once under a coordinator-chosen id; every
+    /// subsequent [`Request::Compress`] for the same problem carries
+    /// the O(1) id instead of the spec. The table is **per
+    /// connection** — a reconnecting coordinator re-interns.
+    DefineProblem { id: u64, problem: ProblemSpec },
     /// Compress one part on one fixed-capacity machine.
     Compress {
-        problem: ProblemSpec,
+        /// Id of a problem previously interned on this connection via
+        /// [`Request::DefineProblem`]; an unknown id is answered with
+        /// an error telling the coordinator to re-intern.
+        problem_id: u64,
         compressor: String,
         part: Vec<u32>,
         /// Capacity of the *virtual machine* this part was sized for
@@ -360,9 +375,14 @@ impl Request {
                 ("type", json::s("hello")),
                 ("version", json::num(PROTOCOL_VERSION as f64)),
             ]),
-            Request::Compress { problem, compressor, part, cap, seed } => json::obj(vec![
-                ("type", json::s("compress")),
+            Request::DefineProblem { id, problem } => json::obj(vec![
+                ("type", json::s("define-problem")),
+                ("id", ju64(*id)),
                 ("problem", problem.to_json()),
+            ]),
+            Request::Compress { problem_id, compressor, part, cap, seed } => json::obj(vec![
+                ("type", json::s("compress")),
+                ("problem_id", ju64(*problem_id)),
                 ("compressor", json::s(compressor)),
                 ("part", items_to_json(part)),
                 ("cap", json::num(*cap as f64)),
@@ -383,18 +403,22 @@ impl Request {
                 }
                 Ok(Request::Hello)
             }
-            "compress" => {
+            "define-problem" => {
                 let problem_json = v
                     .get("problem")
                     .ok_or_else(|| Error::Protocol("missing field 'problem'".into()))?;
-                Ok(Request::Compress {
+                Ok(Request::DefineProblem {
+                    id: wire_u64(v, "id")?,
                     problem: ProblemSpec::from_json(problem_json)?,
-                    compressor: wire_str(v, "compressor")?.to_string(),
-                    part: items_from_json(v, "part")?,
-                    cap: wire_usize(v, "cap")?,
-                    seed: wire_u64(v, "seed")?,
                 })
             }
+            "compress" => Ok(Request::Compress {
+                problem_id: wire_u64(v, "problem_id")?,
+                compressor: wire_str(v, "compressor")?.to_string(),
+                part: items_from_json(v, "part")?,
+                cap: wire_usize(v, "cap")?,
+                seed: wire_u64(v, "seed")?,
+            }),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(Error::Protocol(format!("unknown request type '{other}'"))),
         }
@@ -406,9 +430,13 @@ impl Request {
 pub enum Response {
     /// Handshake reply: the worker's fixed capacity µ.
     Hello { capacity: usize },
+    /// [`Request::DefineProblem`] acknowledged: the id is now live on
+    /// this connection.
+    Defined { id: u64 },
     /// One machine's compression result plus its per-call metrics.
     Solution { items: Vec<u32>, value: f64, evals: u64, wall_ms: f64 },
-    /// The request failed on the worker (capacity violation, bad spec…).
+    /// The request failed on the worker (capacity violation, bad spec,
+    /// unknown problem id…).
     Error { msg: String },
     /// Shutdown acknowledged.
     Bye,
@@ -421,6 +449,10 @@ impl Response {
                 ("type", json::s("hello")),
                 ("version", json::num(PROTOCOL_VERSION as f64)),
                 ("capacity", json::num(*capacity as f64)),
+            ]),
+            Response::Defined { id } => json::obj(vec![
+                ("type", json::s("defined")),
+                ("id", ju64(*id)),
             ]),
             Response::Solution { items, value, evals, wall_ms } => json::obj(vec![
                 ("type", json::s("solution")),
@@ -448,6 +480,7 @@ impl Response {
                 }
                 Ok(Response::Hello { capacity: wire_usize(v, "capacity")? })
             }
+            "defined" => Ok(Response::Defined { id: wire_u64(v, "id")? }),
             "solution" => Ok(Response::Solution {
                 items: items_from_json(v, "items")?,
                 // non-finite objectives surface (NaN-safe round-best
@@ -507,8 +540,12 @@ mod tests {
     #[test]
     fn requests_roundtrip() {
         let spec = card_spec("csn-2k", 25, u64::MAX - 12345, 2000);
+        let define = Request::DefineProblem { id: u64::MAX - 2, problem: spec };
+        let back =
+            Request::from_json(&Json::parse(&define.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(define, back);
         let req = Request::Compress {
-            problem: spec,
+            problem_id: 3,
             compressor: "greedy".into(),
             part: vec![0, 7, 4_000_000_000],
             cap: 200,
@@ -520,6 +557,36 @@ mod tests {
             let b = Request::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
             assert_eq!(r, b);
         }
+    }
+
+    #[test]
+    fn compress_requests_ship_an_o1_problem_id_not_the_spec() {
+        // the size argument behind v4 interning: the compress frame must
+        // not grow with the problem spec (explicit tables, long dataset
+        // names…) — only with the part itself
+        let spec = card_spec("csn-2k", 25, 42, 2000);
+        let define_len = Request::DefineProblem { id: 7, problem: spec }
+            .to_json()
+            .to_string()
+            .len();
+        let compress = Request::Compress {
+            problem_id: 7,
+            compressor: "greedy".into(),
+            part: vec![1, 2, 3],
+            cap: 200,
+            seed: 9,
+        };
+        let compress_len = compress.to_json().to_string().len();
+        assert!(
+            compress_len < define_len,
+            "compress frame ({compress_len} B) should be smaller than the \
+             interned spec ({define_len} B)"
+        );
+        assert!(!compress.to_json().to_string().contains("dataset"));
+        // the defined ack rounds-trip
+        let ack = Response::Defined { id: 7 };
+        let b = Response::from_json(&Json::parse(&ack.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(ack, b);
     }
 
     #[test]
@@ -584,11 +651,12 @@ mod tests {
 
     #[test]
     fn version_mismatch_is_rejected() {
-        // future versions and the retired v1/v2 are all refused
+        // future versions and the retired v1/v2/v3 are all refused
         for bad in [
             r#"{"type":"hello","version":999}"#,
             r#"{"type":"hello","version":1}"#,
             r#"{"type":"hello","version":2}"#,
+            r#"{"type":"hello","version":3}"#,
         ] {
             let msg = Json::parse(bad).unwrap();
             assert!(Request::from_json(&msg).is_err(), "{bad}");
@@ -597,21 +665,37 @@ mod tests {
     }
 
     #[test]
-    fn v2_compress_frame_without_cap_is_rejected() {
-        // a v2 coordinator's compress request (no 'cap') must fail loudly
-        let spec = card_spec("csn-2k", 5, 1, 100);
+    fn legacy_compress_frames_are_rejected() {
         let req = Request::Compress {
-            problem: spec,
+            problem_id: 1,
             compressor: "greedy".into(),
             part: vec![1, 2],
             cap: 64,
             seed: 9,
         };
+        // a v2-shaped request (no 'cap') must fail loudly
         let v = Json::parse(&req.to_json().to_string()).unwrap();
         let mut obj = v.as_obj().unwrap().clone();
         obj.remove("cap");
         let err = Request::from_json(&Json::Obj(obj)).unwrap_err();
         assert!(matches!(err, Error::Protocol(_)), "{err}");
+        // a v3-shaped request (inline 'problem' spec, no 'problem_id')
+        // must fail loudly too
+        let v = Json::parse(&req.to_json().to_string()).unwrap();
+        let mut obj = v.as_obj().unwrap().clone();
+        obj.remove("problem_id");
+        obj.insert(
+            "problem".into(),
+            card_spec("csn-2k", 5, 1, 100).to_json(),
+        );
+        let err = Request::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        // a define-problem frame without its spec is refused
+        let d = Request::DefineProblem { id: 2, problem: card_spec("csn-2k", 5, 1, 100) };
+        let v = Json::parse(&d.to_json().to_string()).unwrap();
+        let mut obj = v.as_obj().unwrap().clone();
+        obj.remove("problem");
+        assert!(Request::from_json(&Json::Obj(obj)).is_err());
     }
 
     #[test]

@@ -20,19 +20,29 @@
 //! a scenario replays bit-exactly — the point of a simulator: explore
 //! failure schedules the real TCP runtime can only hit by accident.
 //!
-//! Rounds are event-driven ([`crate::dist::Backend::submit_round`]): the
-//! machine loop runs on a background thread and streams
-//! [`crate::dist::PartEvent`]s (machine losses, requeues, virtual
-//! straggler delay, completions) in deterministic machine order, so the
-//! pipelined tree runner sees the same fault telemetry a real fleet
-//! would emit — replayable, one event stream per scenario.
+//! Rounds are streaming ([`crate::dist::Backend::open_round`]): the
+//! machine loop runs on a background thread fed by the session's part
+//! stream (machines execute the moment their part arrives, in
+//! submission order) and streams [`crate::dist::PartEvent`]s (machine
+//! losses, requeues, virtual straggler delay, completions) in
+//! deterministic machine order, so the pipelined tree runner sees the
+//! same fault telemetry a real fleet would emit — replayable, one
+//! event stream per scenario. The one scripted-fault knob that needs
+//! the round's machine count up front (`machine_loss_per_round`)
+//! buffers the stream until the session closes — virtual time is
+//! unaffected and the fault stream stays bit-identical to the
+//! pre-streaming simulator.
 //!
 //! The simulator can additionally run **wire-faithful**
-//! ([`SimBackend::with_wire_spec`]): every round the problem and
-//! compressor are serialized through the v2 wire spec, parsed back and
-//! rebuilt exactly as a TCP worker would, then executed on the
-//! reconstruction — a deterministic, socket-free check that the wire
-//! encoding loses nothing.
+//! ([`SimBackend::with_wire_spec`]): the problem and compressor are
+//! serialized through the wire spec, parsed back and rebuilt exactly
+//! as a TCP worker would, then executed on the reconstruction — a
+//! deterministic, socket-free check that the wire encoding loses
+//! nothing. Spec serialization is interned per problem identity
+//! (protocol v4 semantics): the JSON round-trip runs once per distinct
+//! problem, surfaces as one [`crate::dist::PartEvent::SpecShipped`],
+//! and later rounds reuse the interned spec — the sim analogue of the
+//! TCP backend's once-per-connection `define-problem`.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -43,7 +53,7 @@ use crate::constraints::Constraint;
 use crate::coordinator::capacity::CapacityProfile;
 use crate::data::DatasetRef;
 use crate::dist::protocol::{compressor_from_name, compressor_wire_name, ProblemSpec};
-use crate::dist::{enforce_profile, machine_seeds, Backend, PartEvent, RoundHandle};
+use crate::dist::{Backend, PartEvent, RoundSession, RoundSink, SpecInterner};
 use crate::error::{Error, Result};
 use crate::objectives::{EvalCounter, Problem};
 use crate::util::json::Json;
@@ -100,10 +110,14 @@ pub struct SimBackend {
     /// [`Backend::profile`] every round and re-plans its partition
     /// against the fleet that will actually execute.
     capacity_schedule: Vec<CapacityProfile>,
-    /// Rounds executed so far (advances the schedule).
-    rounds_run: AtomicUsize,
+    /// Rounds executed so far (advances the schedule; shared with the
+    /// round sessions, which advance it when they close).
+    rounds_run: Arc<AtomicUsize>,
     faults: FaultPlan,
     wire_spec: bool,
+    /// Wire-mode spec interner (protocol v4 semantics): serialization +
+    /// JSON round-trip once per problem identity, not once per round.
+    interner: SpecInterner,
     /// Wire-mode memo of the last reconstructed dataset and built
     /// constraint (the expensive parts of materializing a spec) — the
     /// sim analogue of the TCP worker's `DatasetCache`, so a
@@ -126,9 +140,10 @@ impl SimBackend {
         SimBackend {
             profile,
             capacity_schedule: Vec::new(),
-            rounds_run: AtomicUsize::new(0),
+            rounds_run: Arc::new(AtomicUsize::new(0)),
             faults: FaultPlan::default(),
             wire_spec: false,
+            interner: SpecInterner::new(),
             wire_memo: Mutex::new(None),
         }
     }
@@ -184,61 +199,58 @@ impl Backend for SimBackend {
         self.capacity_schedule[r.min(self.capacity_schedule.len() - 1)].clone()
     }
 
-    fn submit_round(
+    fn open_round(
         &self,
         problem: &Problem,
         compressor: &dyn Compressor,
-        parts: &[Vec<u32>],
         round_seed: u64,
-    ) -> Result<RoundHandle> {
-        // enforce against this round's scheduled fleet, then advance the
-        // schedule so the next profile() query sees the next round's fleet
-        enforce_profile(&self.profile(), parts)?;
-        self.rounds_run.fetch_add(1, Ordering::Relaxed);
-        if parts.is_empty() {
-            return Ok(RoundHandle::empty());
-        }
-
+    ) -> Result<RoundSession> {
         // Wire-faithful mode: what a TCP worker would actually run. The
-        // reconstruction must survive spec → JSON → spec unchanged.
-        // Reconstruction (and its rejections) happen synchronously at
-        // submission, like the TCP backend's spec serialization.
-        let wire: Option<(Problem, Box<dyn Compressor>)> = if self.wire_spec {
-            let spec = ProblemSpec::from_problem(problem)?;
-            let echoed = ProblemSpec::from_json(&Json::parse(&spec.to_json().to_string())?)?;
-            if echoed != spec {
-                return Err(Error::Protocol(
-                    "problem spec did not survive a JSON round-trip".into(),
-                ));
+        // reconstruction (and its rejections) happen synchronously at
+        // open, like the TCP backend's interning. The JSON round-trip
+        // check runs once per problem identity — later rounds reuse the
+        // interned spec, mirroring protocol v4.
+        let wire: Option<(Problem, Box<dyn Compressor>, Option<usize>)> = if self.wire_spec {
+            let interned = self.interner.intern(problem)?;
+            if interned.fresh {
+                let echoed =
+                    ProblemSpec::from_json(&Json::parse(&interned.spec.to_json().to_string())?)?;
+                if echoed != *interned.spec {
+                    return Err(Error::Protocol(
+                        "problem spec did not survive a JSON round-trip".into(),
+                    ));
+                }
             }
             let comp = compressor_from_name(&compressor_wire_name(compressor)?)?;
-            let key = (echoed.dataset.cache_key(), echoed.constraint.to_json().to_string());
+            let key = (
+                interned.spec.dataset.cache_key(),
+                interned.spec.constraint.to_json().to_string(),
+            );
             let (ds, constraint) = {
                 let mut memo = self.wire_memo.lock().unwrap();
                 match &*memo {
                     Some((k, ds, c)) if *k == key => (ds.clone(), c.clone()),
                     _ => {
-                        let ds = echoed.dataset.load()?;
-                        let c = echoed.constraint.build(&ds)?;
+                        let ds = interned.spec.dataset.load()?;
+                        let c = interned.spec.constraint.build(&ds)?;
                         *memo = Some((key, ds.clone(), c.clone()));
                         (ds, c)
                     }
                 }
             };
-            Some((echoed.materialize_with(ds, constraint)?, comp))
+            let shipped = if interned.fresh { Some(interned.bytes) } else { None };
+            Some((interned.spec.materialize_with(ds, constraint)?, comp, shipped))
         } else {
             None
         };
-        let (problem_run, compressor_run): (Problem, Box<dyn Compressor>) = match wire {
-            Some((p, c)) => (p, c),
-            None => (problem.clone(), compressor.boxed_clone()),
+        let (problem_run, compressor_run, spec_shipped) = match wire {
+            Some((p, c, shipped)) => (p, c, shipped),
+            None => (problem.clone(), compressor.boxed_clone(), None),
         };
 
         let round = SimRound {
             problem: problem_run,
             compressor: compressor_run,
-            parts: parts.to_vec(),
-            seeds: machine_seeds(round_seed, parts.len()),
             faults: self.faults.clone(),
             round_seed,
             // wire mode reconstructs a problem with a fresh counter;
@@ -247,27 +259,80 @@ impl Backend for SimBackend {
             fold_evals: if self.wire_spec { Some(problem.evals.clone()) } else { None },
         };
         let (tx, rx) = mpsc::channel();
-        let expected = parts.len();
-        std::thread::spawn(move || round.execute(tx));
-        Ok(RoundHandle::new(rx, expected))
+        if let Some(bytes) = spec_shipped {
+            // one spec "shipment" per problem identity — the sim
+            // analogue of the TCP define-problem byte accounting
+            let _ = tx.send(Ok(PartEvent::SpecShipped { bytes }));
+        }
+        let (parts_tx, parts_rx) = mpsc::channel();
+        std::thread::spawn(move || round.execute(parts_rx, tx));
+        Ok(RoundSession::new(
+            Box::new(SimSink {
+                parts_tx: Some(parts_tx),
+                rounds_run: Arc::clone(&self.rounds_run),
+                open: true,
+            }),
+            rx,
+            self.profile(),
+            round_seed,
+        ))
+    }
+}
+
+/// Session sink feeding the simulator's machine loop.
+struct SimSink {
+    parts_tx: Option<mpsc::Sender<(usize, Vec<u32>, u64)>>,
+    rounds_run: Arc<AtomicUsize>,
+    open: bool,
+}
+
+impl RoundSink for SimSink {
+    fn submit(&mut self, idx: usize, part: Vec<u32>, seed: u64) -> Result<()> {
+        if let Some(tx) = &self.parts_tx {
+            // a dead executor (fatal injected fault) is reported via the
+            // event channel, never here
+            let _ = tx.send((idx, part, seed));
+        }
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if self.open {
+            self.open = false;
+            // dropping the sender seals the part stream
+            self.parts_tx = None;
+            // the scripted fleet schedule advances only when a round is
+            // actually sealed for execution — an aborted speculation or
+            // a failed submission must not consume a scheduled fleet
+            self.rounds_run.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn abort(&mut self) {
+        self.open = false;
+        self.parts_tx = None;
     }
 }
 
 /// One in-flight simulated round: the sequential machine loop, moved to
 /// a background thread so fault/straggler events stream out as they
-/// "happen" in virtual time.
+/// "happen" in virtual time — and, without a scripted loss quota,
+/// machines run the moment the session submits their part.
 struct SimRound {
     problem: Problem,
     compressor: Box<dyn Compressor>,
-    parts: Vec<Vec<u32>>,
-    seeds: Vec<u64>,
     faults: FaultPlan,
     round_seed: u64,
     fold_evals: Option<EvalCounter>,
 }
 
 impl SimRound {
-    fn execute(self, tx: mpsc::Sender<Result<PartEvent>>) {
+    fn execute(
+        self,
+        parts_rx: mpsc::Receiver<(usize, Vec<u32>, u64)>,
+        tx: mpsc::Sender<Result<PartEvent>>,
+    ) {
         // wire mode: reconstruction oracle calls folded so far
         let mut folded = 0u64;
         // fault stream: independent of the algorithmic seed stream so
@@ -275,74 +340,105 @@ impl SimRound {
         let mut frng = Rng::seed_from(
             self.faults.seed ^ self.round_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
         );
-        let quota = self.faults.machine_loss_per_round.min(self.parts.len());
-        let lost_this_round: HashSet<usize> = if quota > 0 {
-            frng.sample_indices(self.parts.len(), quota)
-                .into_iter()
-                .map(|i| i as usize)
-                .collect()
+        if self.faults.machine_loss_per_round > 0 {
+            // scripted per-round loss quotas draw the lost set from the
+            // round's machine count, so this mode buffers the stream
+            // until the session closes; the frng consumption order is
+            // identical to the pre-streaming simulator
+            let tasks: Vec<(usize, Vec<u32>, u64)> = parts_rx.iter().collect();
+            let quota = self.faults.machine_loss_per_round.min(tasks.len());
+            let lost_this_round: HashSet<usize> = if quota > 0 {
+                frng.sample_indices(tasks.len(), quota)
+                    .into_iter()
+                    .map(|i| i as usize)
+                    .collect()
+            } else {
+                HashSet::new()
+            };
+            for (pos, (idx, part, seed)) in tasks.into_iter().enumerate() {
+                let scripted = lost_this_round.contains(&pos);
+                if !self.run_machine(idx, &part, seed, scripted, &mut frng, &mut folded, &tx)
+                {
+                    return;
+                }
+            }
         } else {
-            HashSet::new()
-        };
-
-        for (i, part) in self.parts.iter().enumerate() {
-            // scripted loss: the original machine never reports
-            let mut attempts = 0usize;
-            if lost_this_round.contains(&i) {
-                attempts += 1;
-                let _ = tx.send(Ok(PartEvent::MachineLost {
-                    machine: format!("sim-{i}"),
-                    detail: "scripted machine loss".into(),
-                }));
-                let _ = tx.send(Ok(PartEvent::Requeued { part: i, reshipped_ids: part.len() }));
-            }
-            // Bernoulli losses on top (replacements included)
-            while self.faults.loss_prob > 0.0 && frng.bool(self.faults.loss_prob) {
-                attempts += 1;
-                let _ = tx.send(Ok(PartEvent::Requeued { part: i, reshipped_ids: part.len() }));
-                if attempts > self.faults.max_retries {
-                    let _ = tx.send(Err(Error::Worker(format!(
-                        "sim: machine {i} of {} lost {attempts} times (retry budget {})",
-                        self.parts.len(),
-                        self.faults.max_retries
-                    ))));
+            // no quota: each machine executes the moment its part
+            // arrives — submission order IS machine order, so the fault
+            // stream is unchanged
+            while let Ok((idx, part, seed)) = parts_rx.recv() {
+                if !self.run_machine(idx, &part, seed, false, &mut frng, &mut folded, &tx) {
                     return;
                 }
             }
-            let mut delay_ms = 0.0f64;
-            if frng.bool(self.faults.straggler_prob) {
-                delay_ms += self.faults.straggler_delay_ms;
-            }
-            // every retry replays the machine's full work and re-ships
-            // the part's ids to the replacement machine
-            delay_ms += attempts as f64 * self.faults.straggler_delay_ms;
-            if delay_ms > 0.0 {
-                let _ = tx.send(Ok(PartEvent::Delay { part: i, virtual_ms: delay_ms }));
-            }
+        }
+    }
 
-            // same part, same positional seed — replacements change cost,
-            // never the answer
-            match self.compressor.compress(&self.problem, part, self.seeds[i]) {
-                Ok(solution) => {
-                    // fold BEFORE announcing completion: a consumer that
-                    // reads the shared counter the moment the round's
-                    // last part reports must see every oracle call
-                    if let Some(evals) = &self.fold_evals {
-                        let now = self.problem.eval_count();
-                        evals.fetch_add(
-                            now - folded,
-                            std::sync::atomic::Ordering::Relaxed,
-                        );
-                        folded = now;
-                    }
-                    if tx.send(Ok(PartEvent::Done { part: i, solution })).is_err() {
-                        return; // consumer gave up on the round
-                    }
+    /// Simulate one machine (and its replacements after injected
+    /// losses). Returns `false` when the round is over (fatal fault or
+    /// the consumer gave up).
+    #[allow(clippy::too_many_arguments)]
+    fn run_machine(
+        &self,
+        i: usize,
+        part: &[u32],
+        seed: u64,
+        scripted_loss: bool,
+        frng: &mut Rng,
+        folded: &mut u64,
+        tx: &mpsc::Sender<Result<PartEvent>>,
+    ) -> bool {
+        // scripted loss: the original machine never reports
+        let mut attempts = 0usize;
+        if scripted_loss {
+            attempts += 1;
+            let _ = tx.send(Ok(PartEvent::MachineLost {
+                machine: format!("sim-{i}"),
+                detail: "scripted machine loss".into(),
+            }));
+            let _ = tx.send(Ok(PartEvent::Requeued { part: i, reshipped_ids: part.len() }));
+        }
+        // Bernoulli losses on top (replacements included)
+        while self.faults.loss_prob > 0.0 && frng.bool(self.faults.loss_prob) {
+            attempts += 1;
+            let _ = tx.send(Ok(PartEvent::Requeued { part: i, reshipped_ids: part.len() }));
+            if attempts > self.faults.max_retries {
+                let _ = tx.send(Err(Error::Worker(format!(
+                    "sim: machine {i} lost {attempts} times (retry budget {})",
+                    self.faults.max_retries
+                ))));
+                return false;
+            }
+        }
+        let mut delay_ms = 0.0f64;
+        if frng.bool(self.faults.straggler_prob) {
+            delay_ms += self.faults.straggler_delay_ms;
+        }
+        // every retry replays the machine's full work and re-ships
+        // the part's ids to the replacement machine
+        delay_ms += attempts as f64 * self.faults.straggler_delay_ms;
+        if delay_ms > 0.0 {
+            let _ = tx.send(Ok(PartEvent::Delay { part: i, virtual_ms: delay_ms }));
+        }
+
+        // same part, same positional seed — replacements change cost,
+        // never the answer
+        match self.compressor.compress(&self.problem, part, seed) {
+            Ok(solution) => {
+                // fold BEFORE announcing completion: a consumer that
+                // reads the shared counter the moment the round's
+                // last part reports must see every oracle call
+                if let Some(evals) = &self.fold_evals {
+                    let now = self.problem.eval_count();
+                    evals.fetch_add(now - *folded, std::sync::atomic::Ordering::Relaxed);
+                    *folded = now;
                 }
-                Err(e) => {
-                    let _ = tx.send(Err(e));
-                    return;
-                }
+                // a closed channel means the consumer gave up
+                tx.send(Ok(PartEvent::Done { part: i, solution })).is_ok()
+            }
+            Err(e) => {
+                let _ = tx.send(Err(e));
+                false
             }
         }
     }
@@ -430,6 +526,9 @@ mod tests {
                     assert!(machine.starts_with("sim-"), "{machine}");
                 }
                 PartEvent::Delay { virtual_ms, .. } => delay += virtual_ms,
+                PartEvent::SpecShipped { .. } => {
+                    panic!("non-wire sim must not ship specs")
+                }
             }
         }
         assert_eq!(done_parts, vec![0, 1, 2, 3], "sim executes machines in order");
@@ -543,6 +642,73 @@ mod tests {
         assert_eq!(sim.profile(), big);
         sim.run_round(&p, &LazyGreedy::new(), &parts0, 1).unwrap();
         assert_eq!(sim.profile(), small);
+    }
+
+    #[test]
+    fn aborted_sessions_do_not_advance_the_capacity_schedule() {
+        let (p, parts) = setup(100, 6);
+        let big = CapacityProfile::uniform(64);
+        let small = CapacityProfile::uniform(32);
+        let sim = SimBackend::with_profile(big.clone())
+            .with_capacity_schedule(vec![big.clone(), small.clone()]);
+        // an opened-then-aborted round (cancelled speculation) must not
+        // consume a scheduled fleet
+        let sess = sim.open_round(&p, &LazyGreedy::new(), 1).unwrap();
+        sess.abort();
+        assert_eq!(sim.profile(), big, "abort consumed a scheduled round");
+        // a sealed round does
+        sim.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
+        assert_eq!(sim.profile(), small);
+    }
+
+    #[test]
+    fn streamed_parts_match_the_batch_round_with_faults() {
+        let (p, parts) = setup(200, 9);
+        let faults = FaultPlan {
+            straggler_prob: 0.5,
+            straggler_delay_ms: 15.0,
+            loss_prob: 0.2,
+            max_retries: 10,
+            ..FaultPlan::default()
+        };
+        let streamed = {
+            let sim = SimBackend::new(64).with_faults(faults.clone());
+            let mut sess = sim.open_round(&p, &LazyGreedy::new(), 4).unwrap();
+            for part in &parts {
+                sess.submit_part(part.clone()).unwrap();
+            }
+            sess.close().unwrap().finish().unwrap()
+        };
+        let batch = SimBackend::new(64)
+            .with_faults(faults)
+            .run_round(&p, &LazyGreedy::new(), &parts, 4)
+            .unwrap();
+        assert_eq!(streamed.solutions.len(), batch.solutions.len());
+        for (x, y) in streamed.solutions.iter().zip(&batch.solutions) {
+            assert_eq!(x.items, y.items);
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+        }
+        // the injected fault stream is identical too, not just the answer
+        assert_eq!(streamed.requeued_parts, batch.requeued_parts);
+        assert_eq!(streamed.sim_delay_ms, batch.sim_delay_ms);
+    }
+
+    #[test]
+    fn wire_mode_interns_the_spec_once_per_problem_identity() {
+        let ds = crate::data::registry::load("csn-2k", 3).unwrap();
+        let p = Problem::exemplar(ds, 6, 3);
+        let parts: Vec<Vec<u32>> =
+            (0..4).map(|i| (i * 50..(i + 1) * 50).collect()).collect();
+        let sim = SimBackend::new(64).with_wire_spec(true);
+        let r0 = sim.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
+        assert!(r0.spec_bytes > 0, "first round must serialize the spec");
+        let r1 = sim.run_round(&p, &LazyGreedy::new(), &parts, 2).unwrap();
+        assert_eq!(r1.spec_bytes, 0, "second round must reuse the interned spec");
+        // plain (non-wire) mode never ships specs
+        let plain = SimBackend::new(64)
+            .run_round(&p, &LazyGreedy::new(), &parts, 1)
+            .unwrap();
+        assert_eq!(plain.spec_bytes, 0);
     }
 
     #[test]

@@ -1,47 +1,60 @@
-//! Coordinator-side TCP backend: shard a round's parts over real
+//! Coordinator-side TCP backend: shard rounds' parts over real
 //! `hss worker` processes.
 //!
-//! Dispatch model (Backend v2): one **persistent dispatcher thread per
+//! Dispatch model (Backend v3): one **persistent dispatcher thread per
 //! worker** lives for the backend's whole lifetime, parked on a condition
-//! variable between rounds. [`Backend::submit_round`] publishes the
-//! round as a shared job (part queue + wire-ready problem spec) and
-//! notifies the dispatchers; each one pulls the first queued part its
-//! worker can hold, runs the request/response roundtrip over its warm
-//! connection, and streams a [`PartEvent`] the moment the reply lands.
-//! There is **no per-round thread spawn/teardown and no sleep-polling**:
-//! every dispatcher transition (handshake resolved, part completed,
-//! worker lost, round submitted) is condvar-driven, so an idle worker
-//! starts the next round's first part the instant it is published —
-//! while another worker's straggling part from the previous moment is
-//! still the only thing the old barrier design would have let anyone
-//! look at.
+//! variable between rounds. [`Backend::open_round`] publishes a round as
+//! a shared job (a part queue that grows as the session streams parts
+//! in, plus the interned problem) and notifies the dispatchers; each one
+//! pulls the first queued part its worker can hold, runs the
+//! request/response roundtrip over its warm connection, and streams a
+//! [`PartEvent`] the moment the reply lands. There is **no per-round
+//! thread spawn/teardown and no sleep-polling**: every dispatcher
+//! transition (handshake resolved, part submitted, part completed,
+//! worker lost, round opened) is condvar-driven, so an idle worker
+//! starts a freshly-submitted part the instant it is published.
 //!
-//! Workers advertise their fixed capacity µ in the protocol-v3
-//! handshake, and dispatch is **capacity-fitting**: a worker only claims
-//! parts it can hold, so a heterogeneous fleet (capacities 500, 200,
-//! 200…) serves a weighted partition with every part on a machine big
-//! enough for it — work stealing still applies among the workers a part
-//! fits. Transport failures mark the worker dead and **requeue** the
-//! part for the surviving workers *that can hold it* (surfaced as
+//! Rounds **overlap**: the backend keeps a FIFO of open jobs, so the
+//! next round's session may open — and its straggler-independent parts
+//! may start executing on idle workers — while the current round's
+//! stragglers drain. Dispatchers always prefer the oldest job with a
+//! fitting queued part, so overlap never starves an earlier round.
+//!
+//! Problems are **interned** (protocol v4): a coordinator-side
+//! `SpecInterner` serializes each problem identity once (killing the
+//! old per-round `ProblemSpec::from_problem` re-serialization), and the
+//! spec crosses the wire once per (worker connection, problem identity)
+//! via a `define-problem` request — every compress request thereafter
+//! carries a short problem id. Fresh or reconnected workers are
+//! re-interned transparently, and each shipment surfaces as a
+//! [`PartEvent::SpecShipped`] so runs can report spec bytes per round.
+//!
+//! Workers advertise their fixed capacity µ in the protocol handshake,
+//! and dispatch is **capacity-fitting**: a worker only claims parts it
+//! can hold, so a heterogeneous fleet (capacities 500, 200, 200…)
+//! serves a weighted partition with every part on a machine big enough
+//! for it — work stealing still applies among the workers a part fits.
+//! Transport failures mark the worker dead and **requeue** the part for
+//! the surviving workers *that can hold it* (surfaced as
 //! [`PartEvent::Requeued`] / [`PartEvent::MachineLost`]); once every
 //! pending handshake has resolved, a queued part no surviving worker can
-//! hold fails the round with a transport error (the stall detector —
+//! hold fails its round with a transport error (the stall detector —
 //! evaluated on state transitions, never by polling). Application errors
 //! reported by a worker (capacity violation, bad spec) abort the round —
 //! retrying elsewhere cannot fix those.
 //!
-//! Determinism: per-machine seeds are positional
-//! (`machine_seeds` in [`crate::dist`]), so *which* worker executes a part —
-//! and any requeueing along the way — never changes the result. A
-//! `TcpBackend` run returns bit-identical solutions to [`LocalBackend`]
-//! for the same `(problem, parts, round_seed)` — including under
-//! hereditary constraints, which cross the wire as construction recipes
-//! ([`crate::constraints::spec::ConstraintSpec`]), and including
-//! heterogeneous capacity profiles.
+//! Determinism: per-machine seeds are positional (drawn by
+//! [`RoundSession`] in submission order), so *which* worker executes a
+//! part — and any requeueing along the way — never changes the result.
+//! A `TcpBackend` run returns bit-identical solutions to
+//! [`LocalBackend`] for the same `(problem, parts, round_seed)` —
+//! including under hereditary constraints, which cross the wire as
+//! construction recipes ([`crate::constraints::spec::ConstraintSpec`]),
+//! and including heterogeneous capacity profiles.
 //!
 //! [`LocalBackend`]: crate::dist::LocalBackend
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -51,7 +64,7 @@ use crate::coordinator::capacity::CapacityProfile;
 use crate::dist::protocol::{
     compressor_wire_name, recv_msg, send_msg, ProblemSpec, Request, Response,
 };
-use crate::dist::{enforce_profile, machine_seeds, Backend, PartEvent, RoundHandle};
+use crate::dist::{Backend, PartEvent, RoundSession, RoundSink, SpecInterner};
 use crate::error::{Error, Result};
 use crate::objectives::{EvalCounter, Problem};
 
@@ -61,6 +74,9 @@ struct WorkerConn {
     stream: TcpStream,
     /// Fixed capacity µ the worker advertised at handshake.
     capacity: usize,
+    /// Problem ids already interned on THIS connection (protocol v4).
+    /// Dies with the connection, so reconnects re-intern transparently.
+    defined: HashSet<u64>,
 }
 
 impl WorkerConn {
@@ -76,7 +92,12 @@ impl WorkerConn {
         stream
             .set_read_timeout(Some(std::time::Duration::from_secs(10)))
             .ok();
-        let mut conn = WorkerConn { addr: addr.to_string(), stream, capacity: 0 };
+        let mut conn = WorkerConn {
+            addr: addr.to_string(),
+            stream,
+            capacity: 0,
+            defined: HashSet::new(),
+        };
         let reply = conn.roundtrip(&Request::Hello)?;
         conn.stream.set_read_timeout(None).ok();
         match reply {
@@ -101,12 +122,13 @@ impl WorkerConn {
 /// Round context shared by every dispatcher serving it — owned data
 /// only, since dispatchers outlive the submitter's borrows.
 struct RoundCtx {
-    spec: ProblemSpec,
+    /// The interned problem: spec + id + serialized size. The spec
+    /// ships once per (worker connection, problem identity); every
+    /// compress request carries only the id.
+    spec: Arc<ProblemSpec>,
+    spec_id: u64,
+    spec_bytes: usize,
     comp_name: String,
-    parts: Vec<Vec<u32>>,
-    seeds: Vec<u64>,
-    /// Planned virtual machine capacity per part (protocol v3 `cap`).
-    caps: Vec<usize>,
     /// The submitting problem's shared oracle counter: remote evals fold
     /// in as each solution arrives, keeping Table-1 metrics comparable
     /// across backends.
@@ -114,11 +136,30 @@ struct RoundCtx {
     tx: mpsc::Sender<Result<PartEvent>>,
 }
 
-/// The currently in-flight round.
+/// One queued (or requeued) part of an open round.
+struct PartTask {
+    idx: usize,
+    part: Vec<u32>,
+    /// Planned virtual machine capacity (protocol v3 `cap`).
+    cap: usize,
+    /// Positional per-machine seed (drawn by the session).
+    seed: u64,
+}
+
+/// One in-flight round. Several may be open at once (streaming round
+/// submission lets round `t+1` start while round `t` stragglers drain);
+/// dispatchers serve them FIFO.
 struct Job {
+    /// Unique, monotonically increasing round identity.
+    epoch: u64,
     ctx: Arc<RoundCtx>,
-    queue: VecDeque<usize>,
+    queue: VecDeque<PartTask>,
     in_flight: usize,
+    /// The session sealed the part list: the job is complete (and
+    /// removed) when the queue is empty and nothing is in flight.
+    closed: bool,
+    /// Parts submitted so far (error-message context).
+    submitted: usize,
     /// Most recent transport-level failure detail (connect refused,
     /// reset mid-flight) — context for stall-detector errors.
     last_err: Option<String>,
@@ -132,11 +173,12 @@ struct Slot {
     /// before concluding that a part fits no one.
     capacity: Option<usize>,
     /// Permanent: the worker failed mid-flight. Connect *refusals* are
-    /// not permanent — the slot merely sits out the round (`out_epoch`)
-    /// and retries when the next one is submitted.
+    /// not permanent — the slot merely sits out the epoch (`out_epoch`)
+    /// and retries when the next round is opened.
     dead: bool,
-    /// Epoch whose connect attempt failed; the slot is unavailable for
-    /// that round only (workers may come up late, even mid-run).
+    /// Epoch whose connect attempt failed; the slot is unavailable
+    /// while that epoch is current (workers may come up late, even
+    /// mid-run).
     out_epoch: u64,
 }
 
@@ -150,9 +192,12 @@ enum ShutdownKind {
 
 struct FleetState {
     slots: Vec<Slot>,
-    job: Option<Job>,
-    /// Bumped once per submitted round; guards stale dispatcher results
-    /// and scopes `out_epoch` connect failures to a single round.
+    /// Open rounds, oldest first. Dispatchers claim from the first job
+    /// with a fitting queued part, so a newer round only runs on
+    /// workers the older rounds leave idle.
+    jobs: VecDeque<Job>,
+    /// Bumped once per opened round; identifies jobs and scopes
+    /// `out_epoch` connect failures.
     epoch: u64,
     dispatchers_alive: usize,
     shutdown: Option<ShutdownKind>,
@@ -167,6 +212,9 @@ struct Fleet {
 pub struct TcpBackend {
     profile: CapacityProfile,
     fleet: Arc<Fleet>,
+    /// Coordinator-side problem interner: `ProblemSpec::from_problem`
+    /// runs once per problem identity, not once per round.
+    interner: SpecInterner,
 }
 
 impl TcpBackend {
@@ -200,7 +248,7 @@ impl TcpBackend {
         let fleet = Arc::new(Fleet {
             state: Mutex::new(FleetState {
                 slots,
-                job: None,
+                jobs: VecDeque::new(),
                 epoch: 0,
                 dispatchers_alive: count,
                 shutdown: None,
@@ -214,7 +262,7 @@ impl TcpBackend {
                 .spawn(move || dispatcher(fleet, id))
                 .map_err(|e| Error::Worker(format!("spawn dispatcher: {e}")))?;
         }
-        Ok(TcpBackend { profile, fleet })
+        Ok(TcpBackend { profile, fleet, interner: SpecInterner::new() })
     }
 
     /// Addresses this backend was configured with.
@@ -248,6 +296,70 @@ impl Drop for TcpBackend {
     }
 }
 
+/// The session's handle into the fleet: streams parts into the job it
+/// opened and seals or cancels it.
+struct TcpRoundSink {
+    fleet: Arc<Fleet>,
+    epoch: u64,
+    profile: CapacityProfile,
+    open: bool,
+}
+
+impl RoundSink for TcpRoundSink {
+    fn submit(&mut self, idx: usize, part: Vec<u32>, seed: u64) -> Result<()> {
+        let cap = self.profile.virtual_capacity(idx);
+        let mut st = self.fleet.state.lock().unwrap();
+        match st.jobs.iter_mut().find(|j| j.epoch == self.epoch) {
+            Some(job) => {
+                job.queue.push_back(PartTask { idx, part, cap, seed });
+                job.submitted += 1;
+            }
+            // The round already failed (stall detector): the fatal
+            // error is on the event channel; accepting further parts
+            // quietly keeps the submitter's control flow simple.
+            None => return Ok(()),
+        }
+        // a part that fits no live worker must fail the round now, not
+        // hang it — and a fleet already known dead must fail immediately
+        check_stall(&mut st);
+        self.fleet.cv.notify_all();
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if !self.open {
+            return Ok(());
+        }
+        self.open = false;
+        let mut st = self.fleet.state.lock().unwrap();
+        if let Some(pos) = st.jobs.iter().position(|j| j.epoch == self.epoch) {
+            let complete = {
+                let job = &mut st.jobs[pos];
+                job.closed = true;
+                job.queue.is_empty() && job.in_flight == 0
+            };
+            if complete {
+                let _ = st.jobs.remove(pos);
+            }
+        }
+        Ok(())
+    }
+
+    fn abort(&mut self) {
+        if !self.open {
+            return;
+        }
+        self.open = false;
+        let mut st = self.fleet.state.lock().unwrap();
+        if let Some(pos) = st.jobs.iter().position(|j| j.epoch == self.epoch) {
+            // queued parts are discarded; in-flight replies find the
+            // job gone (epoch lookup) and are dropped on arrival
+            let _ = st.jobs.remove(pos);
+        }
+        self.fleet.cv.notify_all();
+    }
+}
+
 impl Backend for TcpBackend {
     fn name(&self) -> &'static str {
         "tcp"
@@ -257,109 +369,115 @@ impl Backend for TcpBackend {
         self.profile.clone()
     }
 
-    fn submit_round(
+    fn open_round(
         &self,
         problem: &Problem,
         compressor: &dyn Compressor,
-        parts: &[Vec<u32>],
         round_seed: u64,
-    ) -> Result<RoundHandle> {
-        enforce_profile(&self.profile, parts)?;
-        let spec = ProblemSpec::from_problem(problem)?;
+    ) -> Result<RoundSession> {
+        // interned once per problem identity — NOT once per round
+        let interned = self.interner.intern(problem)?;
         let comp_name = compressor_wire_name(compressor)?;
-        if parts.is_empty() {
-            return Ok(RoundHandle::empty());
-        }
-        let seeds = machine_seeds(round_seed, parts.len());
-        let caps: Vec<usize> = (0..parts.len())
-            .map(|j| self.profile.virtual_capacity(j))
-            .collect();
-
         let (tx, rx) = mpsc::channel();
-        let expected = parts.len();
         let mut st = self.fleet.state.lock().unwrap();
         if st.shutdown.is_some() {
             return Err(Error::invalid("tcp backend is shut down"));
         }
-        if st.job.is_some() {
-            return Err(Error::invalid(
-                "tcp backend already has a round in flight (one round at a time)",
-            ));
-        }
         st.epoch += 1;
-        st.job = Some(Job {
+        let epoch = st.epoch;
+        st.jobs.push_back(Job {
+            epoch,
             ctx: Arc::new(RoundCtx {
-                spec,
+                spec: interned.spec,
+                spec_id: interned.id,
+                spec_bytes: interned.bytes,
                 comp_name,
-                parts: parts.to_vec(),
-                seeds,
-                caps,
                 evals: problem.evals.clone(),
                 tx,
             }),
-            queue: (0..parts.len()).collect(),
+            queue: VecDeque::new(),
             in_flight: 0,
+            closed: false,
+            submitted: 0,
             last_err: None,
         });
-        // A fleet that is already known to be incapable (every slot dead
-        // from earlier rounds) must fail the round now — no dispatcher
-        // is left to notice.
-        check_stall(&mut st);
+        drop(st);
+        // wake dispatchers now: connects and handshakes resolve while
+        // the caller is still partitioning its first parts
         self.fleet.cv.notify_all();
-        Ok(RoundHandle::new(rx, expected))
+        Ok(RoundSession::new(
+            Box::new(TcpRoundSink {
+                fleet: Arc::clone(&self.fleet),
+                epoch,
+                profile: self.profile.clone(),
+                open: true,
+            }),
+            rx,
+            self.profile.clone(),
+            round_seed,
+        ))
     }
 }
 
-/// Fail the in-flight round if some queued part can *never* complete:
-/// every pending handshake has resolved and no live, in-round worker
+/// Fail any open round holding a queued part that can *never* complete:
+/// every pending handshake has resolved and no live, in-epoch worker
 /// advertises a capacity that holds it. Runs on state transitions
-/// (submit, handshake failure, worker death, idle dispatcher about to
-/// park) — the event-driven replacement for the old sleep-poll loop's
-/// per-tick scan.
+/// (part submitted, handshake failure, worker death, idle dispatcher
+/// about to park) — the event-driven replacement for the old
+/// sleep-poll loop's per-tick scan.
 fn check_stall(st: &mut FleetState) {
     let epoch = st.epoch;
-    let msg = {
-        let Some(job) = &st.job else { return };
-        // a slot that has never handshaken (and is not dead or sitting
-        // this round out) may still reveal a fitting capacity
-        if st
-            .slots
-            .iter()
-            .any(|s| !s.dead && s.out_epoch != epoch && s.capacity.is_none())
-        {
-            return;
+    // a slot that has never handshaken (and is not dead or sitting the
+    // current epoch out) may still reveal a fitting capacity
+    if st
+        .slots
+        .iter()
+        .any(|s| !s.dead && s.out_epoch != epoch && s.capacity.is_none())
+    {
+        return;
+    }
+    let avail: Vec<usize> = st
+        .slots
+        .iter()
+        .filter(|s| !s.dead && s.out_epoch != epoch)
+        .filter_map(|s| s.capacity)
+        .collect();
+    let mut pos = 0;
+    while pos < st.jobs.len() {
+        let msg = {
+            let job = &st.jobs[pos];
+            job.queue
+                .iter()
+                .find(|t| !avail.iter().any(|&c| t.part.len() <= c))
+                .map(|t| {
+                    let detail = job
+                        .last_err
+                        .clone()
+                        .unwrap_or_else(|| "no fitting worker".into());
+                    if avail.is_empty() {
+                        format!(
+                            "part {} of {} unprocessed — all workers lost ({detail})",
+                            t.idx, job.submitted
+                        )
+                    } else {
+                        format!(
+                            "part {} of {} ({} items) exceeds every live worker's \
+                             capacity ({detail})",
+                            t.idx,
+                            job.submitted,
+                            t.part.len()
+                        )
+                    }
+                })
+        };
+        match msg {
+            Some(m) => {
+                let job = st.jobs.remove(pos).unwrap();
+                let _ = job.ctx.tx.send(Err(Error::Transport(m)));
+                // the next job shifted into `pos`; re-examine it
+            }
+            None => pos += 1,
         }
-        let avail: Vec<usize> = st
-            .slots
-            .iter()
-            .filter(|s| !s.dead && s.out_epoch != epoch)
-            .filter_map(|s| s.capacity)
-            .collect();
-        let orphan = job
-            .queue
-            .iter()
-            .copied()
-            .find(|&i| !avail.iter().any(|&c| job.ctx.parts[i].len() <= c));
-        let Some(i) = orphan else { return };
-        let detail = job
-            .last_err
-            .clone()
-            .unwrap_or_else(|| "no fitting worker".into());
-        if avail.is_empty() {
-            format!(
-                "part {i} of {} unprocessed — all workers lost ({detail})",
-                job.ctx.parts.len()
-            )
-        } else {
-            format!(
-                "part {i} of {} ({} items) exceeds every live worker's capacity ({detail})",
-                job.ctx.parts.len(),
-                job.ctx.parts[i].len()
-            )
-        }
-    };
-    if let Some(job) = st.job.take() {
-        let _ = job.ctx.tx.send(Err(Error::Transport(msg)));
     }
 }
 
@@ -369,15 +487,114 @@ enum Step {
     Park,
     /// No connection yet and a round wants workers: handshake.
     Connect(String),
-    /// Claimed part `i` of the current round.
-    Dispatch(usize, Arc<RoundCtx>, u64),
+    /// Claimed a part of the identified job.
+    Dispatch(PartTask, Arc<RoundCtx>, u64),
     /// Backend is shutting down; optionally tell the worker to exit.
     Exit(Option<String>),
 }
 
+/// Everything one part's wire conversation can come back with.
+enum WireOutcome {
+    Done { items: Vec<u32>, value: f64, evals: u64 },
+    /// Worker alive but the request failed (or spoke nonsense):
+    /// retrying elsewhere cannot help, the round dies.
+    Fatal(Error),
+    /// Transport failure: the worker is lost, the part requeues.
+    Lost(String),
+}
+
+/// Run one part's full request/response conversation over a warm
+/// connection — interning the problem first if this connection has not
+/// seen it. Returns the outcome plus whether a full spec was shipped
+/// (charged to the round's spec-byte telemetry even if the part itself
+/// subsequently failed: the bytes did cross the wire).
+///
+/// At most two attempts: a worker's per-connection id table is bounded,
+/// so a long-lived connection may have evicted our id — its
+/// `unknown problem id` error (the normative token, `docs/PROTOCOL.md`
+/// §4.3) triggers one transparent re-intern before anything is treated
+/// as fatal.
+fn dispatch_part(conn: &mut WorkerConn, ctx: &RoundCtx, task: &PartTask) -> (WireOutcome, bool) {
+    let mut spec_shipped = false;
+    for attempt in 0..2 {
+        if !conn.defined.contains(&ctx.spec_id) {
+            let define =
+                Request::DefineProblem { id: ctx.spec_id, problem: (*ctx.spec).clone() };
+            match conn.roundtrip(&define) {
+                Ok(Response::Defined { id }) if id == ctx.spec_id => {
+                    conn.defined.insert(ctx.spec_id);
+                    spec_shipped = true;
+                }
+                Ok(Response::Error { msg }) => {
+                    return (
+                        WireOutcome::Fatal(Error::Worker(format!("{}: {msg}", conn.addr))),
+                        spec_shipped,
+                    )
+                }
+                Ok(other) => {
+                    return (
+                        WireOutcome::Fatal(Error::Protocol(format!(
+                            "{}: unexpected reply to define-problem: {other:?}",
+                            conn.addr
+                        ))),
+                        spec_shipped,
+                    )
+                }
+                Err(e) => return (WireOutcome::Lost(e.to_string()), spec_shipped),
+            }
+        }
+        let request = Request::Compress {
+            problem_id: ctx.spec_id,
+            compressor: ctx.comp_name.clone(),
+            part: task.part.clone(),
+            cap: task.cap,
+            seed: task.seed,
+        };
+        match conn.roundtrip(&request) {
+            Ok(Response::Solution { items, value, evals, .. }) => {
+                return (WireOutcome::Done { items, value, evals }, spec_shipped)
+            }
+            // the worker evicted our id from its bounded table:
+            // re-intern once, transparently
+            Ok(Response::Error { msg })
+                if attempt == 0 && msg.contains("unknown problem id") =>
+            {
+                conn.defined.remove(&ctx.spec_id);
+            }
+            // the worker is alive and rejected the job: retrying
+            // elsewhere cannot help
+            Ok(Response::Error { msg }) => {
+                return (
+                    WireOutcome::Fatal(Error::Worker(format!("{}: {msg}", conn.addr))),
+                    spec_shipped,
+                )
+            }
+            Ok(other) => {
+                return (
+                    WireOutcome::Fatal(Error::Protocol(format!(
+                        "{}: unexpected reply {other:?}",
+                        conn.addr
+                    ))),
+                    spec_shipped,
+                )
+            }
+            Err(e) => return (WireOutcome::Lost(e.to_string()), spec_shipped),
+        }
+    }
+    // unreachable in practice: attempt 1's unknown-id falls into the
+    // fatal arm above, and every other path returns
+    (
+        WireOutcome::Fatal(Error::Protocol(format!(
+            "{}: problem id survived two intern attempts without resolving",
+            conn.addr
+        ))),
+        spec_shipped,
+    )
+}
+
 /// Persistent per-worker dispatcher: parks on the fleet condvar, claims
-/// capacity-fitting parts while a round is in flight, exits on shutdown
-/// or when its worker dies mid-flight.
+/// capacity-fitting parts (oldest open round first) while any round is
+/// in flight, exits on shutdown or when its worker dies mid-flight.
 fn dispatcher(fleet: Arc<Fleet>, id: usize) {
     let mut conn: Option<WorkerConn> = None;
     let mut st = fleet.state.lock().unwrap();
@@ -391,33 +608,24 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                 Step::Exit(if notify { Some(stx.slots[id].addr.clone()) } else { None })
             } else if stx.slots[id].dead {
                 Step::Exit(None)
+            } else if stx.jobs.is_empty() || stx.slots[id].out_epoch == stx.epoch {
+                Step::Park
+            } else if conn.is_none() {
+                Step::Connect(stx.slots[id].addr.clone())
             } else {
-                let epoch = stx.epoch;
-                let out_this_round = stx.slots[id].out_epoch == epoch;
-                let addr = stx.slots[id].addr.clone();
-                match &mut stx.job {
-                    None => Step::Park,
-                    Some(_) if out_this_round => Step::Park,
-                    Some(job) => {
-                        if conn.is_none() {
-                            Step::Connect(addr)
-                        } else {
-                            let my_cap = conn.as_ref().unwrap().capacity;
-                            let pos = job
-                                .queue
-                                .iter()
-                                .position(|&i| job.ctx.parts[i].len() <= my_cap);
-                            match pos {
-                                Some(pos) => {
-                                    let i = job.queue.remove(pos).unwrap();
-                                    job.in_flight += 1;
-                                    Step::Dispatch(i, Arc::clone(&job.ctx), epoch)
-                                }
-                                None => Step::Park,
-                            }
-                        }
+                let my_cap = conn.as_ref().unwrap().capacity;
+                let mut claimed = None;
+                for job in stx.jobs.iter_mut() {
+                    if let Some(pos) =
+                        job.queue.iter().position(|t| t.part.len() <= my_cap)
+                    {
+                        let task = job.queue.remove(pos).unwrap();
+                        job.in_flight += 1;
+                        claimed = Some(Step::Dispatch(task, Arc::clone(&job.ctx), job.epoch));
+                        break;
                     }
                 }
+                claimed.unwrap_or(Step::Park)
             }
         };
 
@@ -428,7 +636,7 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                 // peers hold it in flight (if their machine is lost the
                 // part comes back to the queue — stay parked to steal
                 // it). Before parking, make sure a part that fits NO
-                // live worker fails the round instead of hanging it.
+                // live worker fails its round instead of hanging it.
                 check_stall(&mut st);
                 st = fleet.cv.wait(st).unwrap();
             }
@@ -447,13 +655,13 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                     }
                     Err(e) => {
                         // Never dispatched: not a requeue. The slot sits
-                        // out the rest of this round only — workers are
+                        // out the current epoch only — workers are
                         // allowed to come up late, so the next round
                         // retries the connect. (`dead` is reserved for
                         // mid-flight failures.)
                         if st.epoch == epoch {
                             st.slots[id].out_epoch = epoch;
-                            if let Some(job) = &mut st.job {
+                            if let Some(job) = st.jobs.front_mut() {
                                 job.last_err = Some(e.to_string());
                             }
                             check_stall(&mut st);
@@ -462,79 +670,71 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                 }
                 fleet.cv.notify_all();
             }
-            Step::Dispatch(i, ctx, epoch) => {
+            Step::Dispatch(task, ctx, epoch) => {
                 drop(st);
-                let request = Request::Compress {
-                    problem: ctx.spec.clone(),
-                    compressor: ctx.comp_name.clone(),
-                    part: ctx.parts[i].clone(),
-                    cap: ctx.caps[i],
-                    seed: ctx.seeds[i],
-                };
-                let result = conn.as_mut().unwrap().roundtrip(&request);
+                let (outcome, spec_shipped) =
+                    dispatch_part(conn.as_mut().unwrap(), &ctx, &task);
                 st = fleet.state.lock().unwrap();
-                // The round could have been aborted (and even replaced)
-                // while this reply was on the wire; only account against
-                // the job if it is still the one we claimed from.
-                let same_job = st.epoch == epoch && st.job.is_some();
-                match result {
-                    Ok(Response::Solution { items, value, evals, .. }) => {
+                if spec_shipped {
+                    // spec-byte telemetry rides the round's event
+                    // stream, ahead of the part's own event
+                    let _ = ctx
+                        .tx
+                        .send(Ok(PartEvent::SpecShipped { bytes: ctx.spec_bytes }));
+                }
+                // The round could have been aborted (stall detector,
+                // cancelled speculation) while this reply was on the
+                // wire; only account against a job still in the deque.
+                let job_pos = st.jobs.iter().position(|j| j.epoch == epoch);
+                match outcome {
+                    WireOutcome::Done { items, value, evals } => {
                         // fold remote oracle work in BEFORE announcing
                         // completion, so a consumer reading the shared
                         // counter at the last event sees all of it
                         ctx.evals.fetch_add(evals, Ordering::Relaxed);
                         let _ = ctx.tx.send(Ok(PartEvent::Done {
-                            part: i,
+                            part: task.idx,
                             solution: Solution { items, value },
                         }));
-                        if same_job {
-                            let job = st.job.as_mut().unwrap();
-                            job.in_flight -= 1;
-                            if job.queue.is_empty() && job.in_flight == 0 {
-                                st.job = None; // round complete
+                        if let Some(pos) = job_pos {
+                            let complete = {
+                                let job = &mut st.jobs[pos];
+                                job.in_flight -= 1;
+                                job.closed && job.queue.is_empty() && job.in_flight == 0
+                            };
+                            if complete {
+                                let _ = st.jobs.remove(pos); // round complete
                             }
                         }
                     }
-                    Ok(Response::Error { msg }) => {
-                        // the worker is alive and rejected the job:
-                        // retrying elsewhere cannot help
-                        let addr = st.slots[id].addr.clone();
-                        let _ = ctx
-                            .tx
-                            .send(Err(Error::Worker(format!("{addr}: {msg}"))));
-                        if same_job {
-                            st.job = None;
+                    WireOutcome::Fatal(e) => {
+                        let _ = ctx.tx.send(Err(e));
+                        if let Some(pos) = job_pos {
+                            let _ = st.jobs.remove(pos);
                         }
                     }
-                    Ok(other) => {
-                        let addr = st.slots[id].addr.clone();
-                        let _ = ctx.tx.send(Err(Error::Protocol(format!(
-                            "{addr}: unexpected reply {other:?}"
-                        ))));
-                        if same_job {
-                            st.job = None;
-                        }
-                    }
-                    Err(e) => {
+                    WireOutcome::Lost(detail) => {
                         // transport failure mid-flight: lose this
                         // machine for good, requeue the part for
                         // surviving workers that can hold it
                         let _ = ctx.tx.send(Ok(PartEvent::MachineLost {
                             machine: st.slots[id].addr.clone(),
-                            detail: e.to_string(),
+                            detail: detail.clone(),
                         }));
                         let _ = ctx.tx.send(Ok(PartEvent::Requeued {
-                            part: i,
-                            reshipped_ids: ctx.parts[i].len(),
+                            part: task.idx,
+                            reshipped_ids: task.part.len(),
                         }));
                         st.slots[id].dead = true;
                         st.slots[id].capacity = None;
                         conn = None;
-                        if same_job {
-                            let job = st.job.as_mut().unwrap();
-                            job.in_flight -= 1;
-                            job.queue.push_back(i);
-                            job.last_err = Some(e.to_string());
+                        if let Some(pos) = job_pos {
+                            {
+                                let job = &mut st.jobs[pos];
+                                job.in_flight -= 1;
+                                job.queue.push_back(task);
+                                job.last_err = Some(detail);
+                            }
                             check_stall(&mut st);
                         }
                     }
@@ -598,7 +798,7 @@ mod tests {
     fn unreachable_workers_fail_with_transport_error() {
         // 127.0.0.1:1 — connect is refused immediately on any sane host
         let backend = TcpBackend::new(50, vec!["127.0.0.1:1".into()]).unwrap();
-        // from_problem runs before dispatch, so the problem must be
+        // interning runs before dispatch, so the problem must be
         // wire-representable for the failure to reach the transport layer
         let p = crate::objectives::Problem::exemplar(
             crate::data::registry::load("csn-2k", 1).unwrap(),
@@ -625,11 +825,24 @@ mod tests {
 
     /// Hand-rolled worker impostor: handshakes with an arbitrary
     /// advertised capacity (after `hello_delay_ms`, to script handshake
-    /// ordering), then serves `serve_parts` compress requests before
-    /// dropping the connection mid-flight (0 = die on first request).
-    /// Lets the dispatcher tests script exact failure points without
-    /// real worker processes.
+    /// ordering), interns problems per connection (protocol v4), then
+    /// serves `serve_parts` compress requests before dropping the
+    /// connection mid-flight (0 = die on first compress). Lets the
+    /// dispatcher tests script exact failure points without real worker
+    /// processes.
     fn spawn_impostor(capacity: usize, serve_parts: usize, hello_delay_ms: u64) -> String {
+        spawn_impostor_opts(capacity, serve_parts, hello_delay_ms, false)
+    }
+
+    /// `forget_after_each`: wipe the interned-problem table after every
+    /// compress reply — the pathological limit of the worker's bounded
+    /// id table, forcing a re-intern before every single part.
+    fn spawn_impostor_opts(
+        capacity: usize,
+        serve_parts: usize,
+        hello_delay_ms: u64,
+        forget_after_each: bool,
+    ) -> String {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         std::thread::spawn(move || {
@@ -637,6 +850,8 @@ mod tests {
             for stream in listener.incoming() {
                 let Ok(mut stream) = stream else { return };
                 let mut served = 0usize;
+                let mut problems: std::collections::HashMap<u64, ProblemSpec> =
+                    std::collections::HashMap::new();
                 loop {
                     let Ok(msg) = recv_msg(&mut stream) else { break };
                     let Ok(req) = Request::from_json(&msg) else { break };
@@ -657,28 +872,50 @@ mod tests {
                             let _ = send_msg(&mut stream, &Response::Bye.to_json());
                             return;
                         }
-                        Request::Compress { problem, compressor, part, seed, .. } => {
+                        Request::DefineProblem { id, problem } => {
+                            problems.insert(id, problem);
+                            if send_msg(&mut stream, &Response::Defined { id }.to_json())
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        Request::Compress { problem_id, compressor, part, seed, .. } => {
                             if served >= serve_parts {
                                 // die holding the part: drop the stream
                                 // without replying
                                 break;
                             }
                             served += 1;
-                            // real compute so surviving-path tests stay
-                            // bit-identical to local execution
-                            let p = problem.materialize().unwrap();
-                            let comp =
-                                crate::dist::protocol::compressor_from_name(&compressor)
-                                    .unwrap();
-                            let sol = comp.compress(&p, &part, seed).unwrap();
-                            let reply = Response::Solution {
-                                items: sol.items,
-                                value: sol.value,
-                                evals: 0,
-                                wall_ms: 0.0,
+                            let reply = match problems.get(&problem_id) {
+                                // real compute so surviving-path tests
+                                // stay bit-identical to local execution
+                                Some(spec) => {
+                                    let p = spec.materialize().unwrap();
+                                    let comp =
+                                        crate::dist::protocol::compressor_from_name(
+                                            &compressor,
+                                        )
+                                        .unwrap();
+                                    let sol = comp.compress(&p, &part, seed).unwrap();
+                                    Response::Solution {
+                                        items: sol.items,
+                                        value: sol.value,
+                                        evals: 0,
+                                        wall_ms: 0.0,
+                                    }
+                                }
+                                None => Response::Error {
+                                    msg: format!(
+                                        "unknown problem id {problem_id} — re-intern"
+                                    ),
+                                },
                             };
                             if send_msg(&mut stream, &reply.to_json()).is_err() {
                                 break;
+                            }
+                            if forget_after_each {
+                                problems.clear();
                             }
                         }
                     }
@@ -690,6 +927,14 @@ mod tests {
 
     fn wire_problem(k: usize) -> Problem {
         Problem::exemplar(crate::data::registry::load("csn-2k", 3).unwrap(), k, 3)
+    }
+
+    fn assert_bit_identical(a: &[Solution], b: &[Solution]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.items, y.items, "solutions diverged");
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+        }
     }
 
     #[test]
@@ -711,7 +956,7 @@ mod tests {
 
     #[test]
     fn worker_death_holding_the_only_fitting_part_fails_with_requeue_accounting() {
-        // big worker (µ=50) dies on its first request while holding the
+        // big worker (µ=50) dies on its first compress while holding the
         // 20-item part; the small survivor (µ=10) cannot hold it — the
         // requeue must surface, then the stall detector must fail the
         // round instead of hanging.
@@ -736,6 +981,7 @@ mod tests {
                 Ok(PartEvent::MachineLost { .. }) => lost += 1,
                 Ok(PartEvent::Done { .. }) => panic!("part cannot complete"),
                 Ok(PartEvent::Delay { .. }) => {}
+                Ok(PartEvent::SpecShipped { .. }) => {}
                 Err(e) => {
                     fatal = Some(e);
                     break;
@@ -772,10 +1018,7 @@ mod tests {
         let local = crate::dist::LocalBackend::new(40)
             .run_round(&p, &LazyGreedy::new(), &parts, 7)
             .unwrap();
-        for (x, y) in out.solutions.iter().zip(&local.solutions) {
-            assert_eq!(x.items, y.items, "requeue changed a solution");
-            assert_eq!(x.value.to_bits(), y.value.to_bits());
-        }
+        assert_bit_identical(&out.solutions, &local.solutions);
     }
 
     #[test]
@@ -796,5 +1039,94 @@ mod tests {
         let out = backend.run_round(&p, &LazyGreedy::new(), &parts, 3).unwrap();
         assert_eq!(out.solutions.len(), 4);
         assert_eq!(out.requeued_parts, 0);
+    }
+
+    #[test]
+    fn spec_ships_once_per_worker_connection_then_o1_ids() {
+        let addr = spawn_impostor(60, usize::MAX, 0);
+        let backend = TcpBackend::new(60, vec![addr]).unwrap();
+        let p = wire_problem(4);
+        let parts: Vec<Vec<u32>> =
+            (0..3).map(|i| (i * 20..(i + 1) * 20).collect()).collect();
+        let out0 = backend.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
+        assert!(out0.spec_bytes > 0, "round 0 must ship the spec once");
+        // same problem, next round: the id alone crosses the wire
+        let out1 = backend.run_round(&p, &LazyGreedy::new(), &parts, 2).unwrap();
+        assert_eq!(out1.spec_bytes, 0, "later rounds must reuse the interned id");
+        // a different problem identity interns (and ships) separately
+        let p2 = wire_problem(5);
+        let out2 = backend.run_round(&p2, &LazyGreedy::new(), &parts, 3).unwrap();
+        assert!(out2.spec_bytes > 0);
+        // …and the answers stay bit-identical to local throughout
+        let local = crate::dist::LocalBackend::new(60)
+            .run_round(&p, &LazyGreedy::new(), &parts, 2)
+            .unwrap();
+        assert_bit_identical(&out1.solutions, &local.solutions);
+    }
+
+    #[test]
+    fn next_round_session_opens_while_previous_round_drains() {
+        // one worker serves both rounds FIFO: round B's session opens
+        // and submits while round A's parts are still queued/in flight,
+        // and both rounds come back bit-identical to local execution
+        let addr = spawn_impostor(50, usize::MAX, 0);
+        let backend = TcpBackend::new(50, vec![addr]).unwrap();
+        let p = wire_problem(4);
+        let parts_a: Vec<Vec<u32>> =
+            (0..3).map(|i| (i * 30..(i + 1) * 30).collect()).collect();
+        let parts_b: Vec<Vec<u32>> = vec![(0..40).collect(), (40..80).collect()];
+        let mut sess_a = backend.open_round(&p, &LazyGreedy::new(), 11).unwrap();
+        sess_a.submit_parts(&parts_a).unwrap();
+        let mut sess_b = backend.open_round(&p, &LazyGreedy::new(), 12).unwrap();
+        sess_b.submit_parts(&parts_b).unwrap();
+        let out_a = sess_a.close().unwrap().finish().unwrap();
+        let out_b = sess_b.close().unwrap().finish().unwrap();
+        let local = crate::dist::LocalBackend::new(50);
+        let la = local.run_round(&p, &LazyGreedy::new(), &parts_a, 11).unwrap();
+        let lb = local.run_round(&p, &LazyGreedy::new(), &parts_b, 12).unwrap();
+        assert_bit_identical(&out_a.solutions, &la.solutions);
+        assert_bit_identical(&out_b.solutions, &lb.solutions);
+        // the spec crossed the wire once for the whole pair of rounds
+        assert!(out_a.spec_bytes > 0);
+        assert_eq!(out_b.spec_bytes, 0);
+    }
+
+    #[test]
+    fn evicted_problem_ids_reintern_transparently() {
+        // a worker whose bounded id table forgets everything after every
+        // compress: each subsequent part triggers the unknown-id error
+        // and one transparent re-intern — the round must complete,
+        // match local execution bit-exactly, and never count a requeue
+        let addr = spawn_impostor_opts(50, usize::MAX, 0, true);
+        let backend = TcpBackend::new(50, vec![addr]).unwrap();
+        let p = wire_problem(4);
+        let parts: Vec<Vec<u32>> =
+            (0..3).map(|i| (i * 30..(i + 1) * 30).collect()).collect();
+        let out = backend.run_round(&p, &LazyGreedy::new(), &parts, 9).unwrap();
+        assert_eq!(out.solutions.len(), 3);
+        assert_eq!(out.requeued_parts, 0, "re-interning is not a requeue");
+        assert!(out.spec_bytes > 0, "the re-shipped specs must be accounted");
+        let local = crate::dist::LocalBackend::new(50)
+            .run_round(&p, &LazyGreedy::new(), &parts, 9)
+            .unwrap();
+        assert_bit_identical(&out.solutions, &local.solutions);
+    }
+
+    #[test]
+    fn aborted_session_discards_parts_and_the_backend_stays_healthy() {
+        let addr = spawn_impostor(50, usize::MAX, 0);
+        let backend = TcpBackend::new(50, vec![addr]).unwrap();
+        let p = wire_problem(4);
+        let mut sess = backend.open_round(&p, &LazyGreedy::new(), 5).unwrap();
+        sess.submit_part((0..30).collect()).unwrap();
+        sess.abort();
+        // a fresh round on the same backend runs normally
+        let parts: Vec<Vec<u32>> = vec![(0..30).collect(), (30..60).collect()];
+        let out = backend.run_round(&p, &LazyGreedy::new(), &parts, 6).unwrap();
+        assert_eq!(out.solutions.len(), 2);
+        let local = crate::dist::LocalBackend::new(50)
+            .run_round(&p, &LazyGreedy::new(), &parts, 6)
+            .unwrap();
+        assert_bit_identical(&out.solutions, &local.solutions);
     }
 }

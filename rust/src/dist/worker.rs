@@ -9,11 +9,18 @@
 //! reconstructs problems from [`ProblemSpec`]s (deterministic dataset
 //! generation — the coordinator ships ids, never rows) and memoizes
 //! loaded datasets per `(name, seed)` so a multi-round run pays dataset
-//! generation once. Capacity is enforced per request: a part larger
-//! than the worker's own µ *or* the planned virtual machine capacity
-//! shipped with the request (protocol v3) is answered with an error
-//! response, never silently spilled. The worker advertises its µ in the
-//! handshake so heterogeneous coordinators dispatch by capacity fit.
+//! generation once. Problems arrive **interned** (protocol v4): a
+//! `define-problem` request registers a spec under a short id on the
+//! current connection, and every `compress` request names that id —
+//! the spec crosses the wire once per connection, not once per part.
+//! The id table dies with the connection, so a reconnecting
+//! coordinator simply re-interns; a `compress` naming an unknown id is
+//! answered with an error telling the coordinator to do exactly that.
+//! Capacity is enforced per request: a part larger than the worker's
+//! own µ *or* the planned virtual machine capacity shipped with the
+//! request (protocol v3) is answered with an error response, never
+//! silently spilled. The worker advertises its µ in the handshake so
+//! heterogeneous coordinators dispatch by capacity fit.
 
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -121,13 +128,27 @@ enum ConnectionEnd {
 /// duplicating n·d floats per distinct spec. A small bound keeps a
 /// long-lived worker from pinning matrices for every dataset it has
 /// ever seen.
+///
+/// Eviction is **single-victim**: when the cache is full, only the most
+/// recently *admitted* dataset is dropped (and only *its* memoized
+/// constraints — survivors keep theirs). Keeping the long-resident
+/// working set stable means a cyclic sweep over `MAX_DATASETS + 1`
+/// datasets keeps hitting on all but one slot, where evict-newest
+/// thrashes exactly one slot and LRU (or the old wipe-everything) would
+/// miss on every single request.
 #[derive(Default)]
 struct DatasetCache {
     datasets: HashMap<(String, u64), DatasetRef>,
+    /// Admission order of the resident datasets (newest last) — the
+    /// eviction policy's bookkeeping.
+    admitted: Vec<(String, u64)>,
     /// Built constraints memoized per `(dataset key, constraint spec)` —
     /// constraint tables (row-norm weights, group maps) are O(n·d) to
     /// materialize and identical for every part of a round.
     constraints: HashMap<(String, u64, String), Arc<dyn Constraint>>,
+    /// Cache telemetry (also what the eviction regression test asserts).
+    dataset_hits: u64,
+    dataset_misses: u64,
 }
 
 impl DatasetCache {
@@ -136,13 +157,22 @@ impl DatasetCache {
 
     fn problem(&mut self, spec: &ProblemSpec) -> Result<Problem> {
         let key = spec.dataset.cache_key();
-        if !self.datasets.contains_key(&key) {
+        if self.datasets.contains_key(&key) {
+            self.dataset_hits += 1;
+        } else {
+            self.dataset_misses += 1;
             if self.datasets.len() >= Self::MAX_DATASETS {
-                self.datasets.clear();
-                self.constraints.clear();
+                if let Some(victim) = self.admitted.pop() {
+                    self.datasets.remove(&victim);
+                    // drop only the victim's constraints; survivors keep
+                    // their O(n·d) tables
+                    self.constraints
+                        .retain(|k, _| !(k.0 == victim.0 && k.1 == victim.1));
+                }
             }
             let ds = spec.dataset.load()?;
             self.datasets.insert(key.clone(), ds);
+            self.admitted.push(key.clone());
         }
         let ds = self.datasets.get(&key).unwrap().clone();
         // Memoize only generator-spec'd constraints: their JSON key is a
@@ -157,7 +187,11 @@ impl DatasetCache {
                 Some(c) => c.clone(),
                 None => {
                     if self.constraints.len() >= Self::MAX_CONSTRAINTS {
-                        self.constraints.clear();
+                        // single-victim here too: one arbitrary entry
+                        // goes, the rest of the working set survives
+                        if let Some(victim) = self.constraints.keys().next().cloned() {
+                            self.constraints.remove(&victim);
+                        }
                     }
                     let c = spec.constraint.build(&ds)?;
                     self.constraints.insert(ckey, c.clone());
@@ -169,12 +203,23 @@ impl DatasetCache {
     }
 }
 
+/// Bound on the per-connection interned-problem table: like the
+/// [`DatasetCache`] caps, this keeps a long-lived warm connection from
+/// pinning every spec it has ever seen (`Explicit` constraint tables
+/// make a spec O(n)). Eviction is safe because the coordinator
+/// re-interns transparently when a `compress` names an evicted id.
+const MAX_PROBLEMS: usize = 64;
+
 fn serve_connection(
     mut stream: TcpStream,
     cfg: &WorkerConfig,
     cache: &mut DatasetCache,
 ) -> Result<ConnectionEnd> {
     stream.set_nodelay(true).ok();
+    // Interned problems (protocol v4), scoped to THIS connection: the
+    // table dying with the stream is what makes re-interning after a
+    // reconnect automatic instead of a coordination problem.
+    let mut problems: HashMap<u64, ProblemSpec> = HashMap::new();
     loop {
         let msg = match recv_msg(&mut stream) {
             Ok(m) => m,
@@ -196,14 +241,44 @@ fn serve_connection(
                 send_msg(&mut stream, &Response::Bye.to_json()).ok();
                 return Ok(ConnectionEnd::Shutdown);
             }
-            Request::Compress { problem, compressor, part, cap, seed } => {
+            Request::DefineProblem { id, problem } => {
+                // bounded table: evict an arbitrary victim when full —
+                // the coordinator re-interns on the unknown-id error if
+                // it ever names an evicted id again
+                if problems.len() >= MAX_PROBLEMS && !problems.contains_key(&id) {
+                    if let Some(victim) = problems.keys().next().copied() {
+                        problems.remove(&victim);
+                    }
+                }
+                // re-defining an id overwrites it — the coordinator owns
+                // the id space and a re-intern must win
+                problems.insert(id, problem);
+                Response::Defined { id }
+            }
+            Request::Compress { problem_id, compressor, part, cap, seed } => {
                 // injected straggler latency: charged per request, before
                 // the compute, like a slow or overloaded machine
                 if cfg.straggle_ms > 0 {
                     std::thread::sleep(std::time::Duration::from_millis(cfg.straggle_ms));
                 }
-                handle_compress(cfg.capacity, cache, &problem, &compressor, &part, cap, seed)
-                    .unwrap_or_else(|e| Response::Error { msg: e.to_string() })
+                match problems.get(&problem_id) {
+                    Some(spec) => handle_compress(
+                        cfg.capacity,
+                        cache,
+                        spec,
+                        &compressor,
+                        &part,
+                        cap,
+                        seed,
+                    )
+                    .unwrap_or_else(|e| Response::Error { msg: e.to_string() }),
+                    None => Response::Error {
+                        msg: format!(
+                            "unknown problem id {problem_id} on this connection — \
+                             re-intern it with define-problem"
+                        ),
+                    },
+                }
             }
         };
         send_msg(&mut stream, &reply.to_json())?;
@@ -293,8 +368,34 @@ mod tests {
             sigma2: 0.0,
             constraint: ConstraintSpec::Cardinality { k: 5 },
         };
+
+        // v4: compressing against an id that was never interned on this
+        // connection is answered with a re-intern hint, not a crash
+        let orphan = Request::Compress {
+            problem_id: 9,
+            compressor: "greedy".into(),
+            part: (0..10).collect(),
+            cap: 64,
+            seed: 1,
+        };
+        protocol::send_msg(&mut stream, &orphan.to_json()).unwrap();
+        let resp = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        match resp {
+            Response::Error { msg } => {
+                assert!(msg.contains("unknown problem id"), "{msg}");
+                assert!(msg.contains("define-problem"), "{msg}");
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+
+        // intern the problem once; every later compress ships only its id
+        let define = Request::DefineProblem { id: 0, problem: spec.clone() };
+        protocol::send_msg(&mut stream, &define.to_json()).unwrap();
+        let resp = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        assert_eq!(resp, Response::Defined { id: 0 });
+
         let req = Request::Compress {
-            problem: spec.clone(),
+            problem_id: 0,
             compressor: "greedy".into(),
             part: (0..50).collect(),
             cap: 64,
@@ -334,8 +435,12 @@ mod tests {
             },
             ..spec.clone()
         };
+        let define = Request::DefineProblem { id: 1, problem: knap_spec.clone() };
+        protocol::send_msg(&mut stream, &define.to_json()).unwrap();
+        let resp = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        assert_eq!(resp, Response::Defined { id: 1 });
         let req = Request::Compress {
-            problem: knap_spec.clone(),
+            problem_id: 1,
             compressor: "greedy".into(),
             part: (0..50).collect(),
             cap: 64,
@@ -362,7 +467,7 @@ mod tests {
 
         // capacity enforcement on the worker side
         let too_big = Request::Compress {
-            problem: spec.clone(),
+            problem_id: 0,
             compressor: "greedy".into(),
             part: (0..65).collect(),
             cap: 64,
@@ -381,7 +486,7 @@ mod tests {
         // part that fits the worker's physical µ but overflows the
         // machine class it was sized for is a partitioner bug
         let over_virtual = Request::Compress {
-            problem: spec,
+            problem_id: 0,
             compressor: "greedy".into(),
             part: (0..30).collect(),
             cap: 20,
@@ -400,5 +505,114 @@ mod tests {
         let bye = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
         assert_eq!(bye, Response::Bye);
         handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn bounded_problem_table_evicts_one_victim_and_hints_reintern() {
+        let (handle, addr) = spawn_worker(64);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        protocol::send_msg(&mut stream, &Request::Hello.to_json()).unwrap();
+        let hello = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        assert_eq!(hello, Response::Hello { capacity: 64 });
+        let base = ProblemSpec {
+            dataset: DatasetSpec::Registry { name: "csn-2k".into(), seed: 42 },
+            objective: "exemplar".into(),
+            k: 3,
+            seed: 0,
+            eval_m: 50,
+            h2: 0.0,
+            sigma2: 0.0,
+            constraint: ConstraintSpec::Cardinality { k: 3 },
+        };
+        // define MAX_PROBLEMS + 1 distinct problems on one connection:
+        // exactly one victim must be evicted, never the whole table
+        for id in 0..=(MAX_PROBLEMS as u64) {
+            let spec = ProblemSpec { seed: id, ..base.clone() };
+            protocol::send_msg(
+                &mut stream,
+                &Request::DefineProblem { id, problem: spec }.to_json(),
+            )
+            .unwrap();
+            let resp =
+                Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+            assert_eq!(resp, Response::Defined { id });
+        }
+        let mut unknown = 0usize;
+        for id in 0..=(MAX_PROBLEMS as u64) {
+            let req = Request::Compress {
+                problem_id: id,
+                compressor: "greedy".into(),
+                part: (0..10).collect(),
+                cap: 64,
+                seed: 1,
+            };
+            protocol::send_msg(&mut stream, &req.to_json()).unwrap();
+            match Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap() {
+                Response::Solution { items, .. } => assert_eq!(items.len(), 3),
+                Response::Error { msg } => {
+                    assert!(msg.contains("unknown problem id"), "{msg}");
+                    assert!(msg.contains("define-problem"), "{msg}");
+                    unknown += 1;
+                }
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        assert_eq!(unknown, 1, "exactly one victim must have been evicted");
+        protocol::send_msg(&mut stream, &Request::Shutdown.to_json()).unwrap();
+        let bye = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
+        assert_eq!(bye, Response::Bye);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn dataset_cache_evicts_one_victim_and_keeps_surviving_constraints() {
+        use crate::data::synthetic;
+
+        // a recorded-provenance synthetic dataset per seed, under a
+        // generator-spec'd (memoizable) knapsack
+        let spec_for = |seed: u64| -> ProblemSpec {
+            let ds: crate::data::DatasetRef = Arc::new(synthetic::csn_like(40, seed));
+            ProblemSpec {
+                dataset: DatasetSpec::from_dataset(&ds).unwrap(),
+                objective: "exemplar".into(),
+                k: 3,
+                seed,
+                eval_m: 10,
+                h2: 0.0,
+                sigma2: 0.0,
+                constraint: ConstraintSpec::Knapsack {
+                    budget: 1e9,
+                    k: 3,
+                    weights: crate::constraints::spec::WeightSpec::RowNorm2,
+                },
+            }
+        };
+        let mut cache = DatasetCache::default();
+        // warm-up cycle over MAX_DATASETS + 1 datasets: all misses
+        for s in 0..9u64 {
+            cache.problem(&spec_for(s)).unwrap();
+        }
+        assert_eq!(cache.dataset_misses, 9);
+        assert_eq!(cache.dataset_hits, 0);
+        assert!(cache.datasets.len() <= DatasetCache::MAX_DATASETS, "cap violated");
+        // two more round-robin cycles: the stable working set keeps
+        // hitting — the old wipe-everything eviction missed on EVERY
+        // request once the cap was reached
+        for _ in 0..2 {
+            for s in 0..9u64 {
+                cache.problem(&spec_for(s)).unwrap();
+            }
+        }
+        assert_eq!(cache.dataset_hits, 14, "expected 7 hits per post-warm-up cycle");
+        assert_eq!(cache.dataset_misses, 13, "expected 2 misses per post-warm-up cycle");
+        assert!(cache.datasets.len() <= DatasetCache::MAX_DATASETS, "cap violated");
+        // survivors kept their memoized constraint tables: one entry per
+        // resident dataset (victims' entries were dropped with them)
+        assert!(
+            cache.constraints.len() >= 7,
+            "surviving constraints were wiped: {} entries",
+            cache.constraints.len()
+        );
+        assert!(cache.constraints.len() <= DatasetCache::MAX_DATASETS);
     }
 }

@@ -5,6 +5,7 @@
 //! hss run    [--config cfg.json] [--dataset csn-2k] [--algo tree]
 //!            [--k 50] [--capacity 200|500,200,200|200x8] [--seed 42]
 //!            [--trials 3] [--epsilon 0.5] [--no-engine] [--threads 2]
+//!            [--partitioner balanced|contiguous]
 //!            [--constraint card|knapsack:b=30[,w=unit|rownorm2|seeded:S:LO:HI]
 //!                         |pmatroid:groups=G,cap=C   (combine with '+')]
 //!            [--backend local|tcp|sim] [--workers host:port,host:port…]
@@ -25,7 +26,7 @@ use hss::algorithms::{LazyGreedy, StochasticGreedy};
 use hss::config::{Algo, RunConfig};
 use hss::coordinator::capacity::CapacityProfile;
 use hss::coordinator::planner::RoundPlan;
-use hss::coordinator::{baselines, TreeBuilder};
+use hss::coordinator::{baselines, PartitionStrategy, TreeBuilder};
 use hss::dist::{worker, Backend as _, BackendChoice};
 use hss::error::{Error, Result};
 use hss::runtime::accel::XlaGreedy;
@@ -100,13 +101,19 @@ fn print_run_help() {
     println!("                         sized to machine classes by weighted sharding");
     println!("  --constraint SPEC      hereditary constraint:");
     println!("                           {CONSTRAINT_GRAMMAR}");
+    println!("  --partitioner P        balanced|contiguous — how each round shards items:");
+    println!("                         'balanced' is the paper's §3 balanced random");
+    println!("                         partition; 'contiguous' is GreeDI-style locality-");
+    println!("                         aware sharding, under which the tree runner");
+    println!("                         speculatively dispatches straggler-independent");
+    println!("                         next-round parts (default: balanced)");
     println!("  --seed S --trials T    experiment replication");
     println!("  --epsilon E            stochastic-greedy subsampling parameter");
     println!("  --threads N            local thread-pool width");
     println!("  --no-engine            force the pure-rust oracle path");
     println!("  --backend B            local|tcp|sim");
     println!("  --workers H:P,H:P,...  tcp worker addresses (capacities are discovered");
-    println!("                         via the protocol-v3 handshake; a part only runs on");
+    println!("                         via the protocol-v4 handshake; a part only runs on");
     println!("                         a worker that can hold it)");
     println!("  --sim-loss N --sim-loss-prob P --sim-straggler-prob P");
     println!("  --sim-straggler-ms MS --sim-seed S");
@@ -124,7 +131,7 @@ fn print_worker_help() {
     println!("  --listen ADDR     bind address (default 127.0.0.1:7070; port 0 = ephemeral,");
     println!("                    the real port is announced on stdout)");
     println!("  --capacity MU     this worker's fixed machine capacity µ (default 200).");
-    println!("                    The worker advertises µ in the protocol-v3 handshake;");
+    println!("                    The worker advertises µ in the protocol-v4 handshake;");
     println!("                    heterogeneous coordinators (`hss run --capacity 500,200,200`)");
     println!("                    dispatch each part only to a worker that can hold it.");
     println!("  --straggle-ms MS  artificial per-request latency (default 0) — straggler");
@@ -179,6 +186,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(c) = args.get("constraint") {
         cfg.constraint = Some(c.to_string());
+    }
+    if let Some(p) = args.get("partitioner") {
+        cfg.partitioner = PartitionStrategy::parse(p)?;
     }
     if let Some(b) = args.get("backend") {
         // only switch kinds: `--backend tcp` re-stated on the CLI must not
@@ -240,7 +250,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let (problem, engine) = cfg.problem_with_engine()?;
     println!(
-        "dataset={} n={} d={} objective={} constraint={} k={} capacity={} algo={} backend={} engine={}",
+        "dataset={} n={} d={} objective={} constraint={} k={} capacity={} algo={} backend={} partitioner={} engine={}",
         cfg.dataset,
         problem.n(),
         problem.dataset.d,
@@ -250,6 +260,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.capacity,
         cfg.algo.name(),
         backend.name(),
+        cfg.partitioner.name(),
         engine.is_some(),
     );
 
@@ -295,6 +306,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     };
                 let res = TreeBuilder::for_profile(cfg.capacity.clone())
                     .compressor(compressor)
+                    .partition_mode(cfg.partitioner)
                     .threads(cfg.threads)
                     .backend(backend.clone())
                     .build()
@@ -309,10 +321,17 @@ fn cmd_run(args: &Args) -> Result<()> {
                 } else {
                     String::new()
                 };
+                // interning telemetry: after round 0 this stays flat —
+                // compress requests ship an O(1) problem id, not the spec
+                let spec = if res.spec_bytes > 0 {
+                    format!(" specKB={:.1}", res.spec_bytes as f64 / 1e3)
+                } else {
+                    String::new()
+                };
                 (
                     res.best.value,
                     format!(
-                        "rounds={}/{} machines={} evals={} shuffleKB={:.1} residentMB={:.1}{requeue}{overlap}",
+                        "rounds={}/{} machines={} evals={} shuffleKB={:.1} residentMB={:.1}{spec}{requeue}{overlap}",
                         res.rounds,
                         res.round_bound,
                         res.total_machines,

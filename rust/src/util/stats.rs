@@ -34,11 +34,14 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
-    /// Sample standard deviation (n-1 normalization).
+    /// Sample standard deviation (n-1 normalization). Undefined for
+    /// n < 2 (the n-1 denominator is 0), so degenerate samples report
+    /// NaN — consistent with [`Summary::mean`] on an empty sample,
+    /// instead of a fabricated 0.0 that read as "perfectly stable".
     pub fn stddev(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {
-            return 0.0;
+            return f64::NAN;
         }
         let m = self.mean();
         let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
@@ -81,12 +84,29 @@ impl Summary {
         self.quantile(0.5)
     }
 
+    /// Smallest sample under [`f64::total_cmp`] — the same order
+    /// [`Summary::quantile`] sorts with, so `min() == quantile(0.0)` on
+    /// every sample, NaN-bearing ones included. (The old `f64::min`
+    /// fold *ignored* NaN, so a NaN-bearing sample reported
+    /// `max() < quantile(1.0)` — the report contradicted itself.)
+    /// Empty samples report NaN, like the other moments.
     pub fn min(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.samples
+            .iter()
+            .copied()
+            .reduce(|a, b| if b.total_cmp(&a).is_lt() { b } else { a })
+            .unwrap_or(f64::NAN)
     }
 
+    /// Largest sample under [`f64::total_cmp`]; `max() == quantile(1.0)`
+    /// on every sample — a NaN sample surfaces as NaN instead of being
+    /// silently dropped. Empty samples report NaN.
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        self.samples
+            .iter()
+            .copied()
+            .reduce(|a, b| if b.total_cmp(&a).is_gt() { b } else { a })
+            .unwrap_or(f64::NAN)
     }
 }
 
@@ -127,11 +147,42 @@ mod tests {
     }
 
     #[test]
+    fn min_max_are_total_cmp_consistent_with_quantile() {
+        // regression: min/max folded with f64::min/f64::max, which
+        // IGNORE NaN while quantile sorts NaN above +inf — so a
+        // NaN-bearing sample reported max() = 3.0 < quantile(1.0) = NaN
+        // and the summary contradicted itself
+        let s = Summary::from_samples(vec![3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.min(), s.quantile(0.0));
+        assert!(s.max().is_nan(), "max must surface the NaN, not drop it");
+        assert!(s.quantile(1.0).is_nan());
+        // NaN-free samples are unchanged
+        let clean = Summary::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(clean.min(), 1.0);
+        assert_eq!(clean.max(), 3.0);
+        // infinities order below NaN but above everything finite
+        let inf = Summary::from_samples(vec![f64::NEG_INFINITY, 0.0, f64::INFINITY]);
+        assert_eq!(inf.min(), f64::NEG_INFINITY);
+        assert_eq!(inf.max(), f64::INFINITY);
+    }
+
+    #[test]
     fn degenerate_cases() {
+        // rationalized conventions: EVERY moment of a degenerate sample
+        // is NaN — no more "mean is NaN but stddev is 0.0 and min is
+        // +inf" mixtures that fabricate certainty from no data
         let empty = Summary::new();
         assert!(empty.mean().is_nan());
+        assert!(empty.stddev().is_nan());
+        assert!(empty.sem().is_nan());
+        assert!(empty.min().is_nan());
+        assert!(empty.max().is_nan());
         let one = Summary::from_samples(vec![7.0]);
         assert_eq!(one.median(), 7.0);
-        assert_eq!(one.stddev(), 0.0);
+        assert_eq!(one.min(), 7.0);
+        assert_eq!(one.max(), 7.0);
+        // sample stddev with n-1 normalization is undefined at n = 1
+        assert!(one.stddev().is_nan());
     }
 }

@@ -62,6 +62,15 @@ fn run_help_documents_both_grammars() {
 }
 
 #[test]
+fn run_help_documents_the_partitioner_flag() {
+    let text = run_hss(&["run", "--help"]);
+    assert!(text.contains("--partitioner"), "{text}");
+    assert!(text.contains("balanced|contiguous"), "{text}");
+    // the speculative-dispatch contract is stated where users enable it
+    assert!(text.contains("speculatively"), "{text}");
+}
+
+#[test]
 fn run_help_documents_the_sim_capacity_schedule_grammar() {
     let text = run_hss(&["run", "--help"]);
     assert!(text.contains("--sim-capacity-schedule"), "{text}");
@@ -85,9 +94,9 @@ fn worker_help_documents_capacity_advertisement_and_grammars() {
     let text = run_hss(&["worker", "--help"]);
     assert!(text.contains("--capacity"), "{text}");
     assert!(text.contains("--listen"), "{text}");
-    // the worker's role in the v3 handshake is documented…
+    // the worker's role in the handshake is documented…
     assert!(text.contains("advertises"), "{text}");
-    assert!(text.contains("protocol-v3"), "{text}");
+    assert!(text.contains("protocol-v4"), "{text}");
     // …and the run-side grammars are cross-referenced verbatim
     for needle in CAPACITY_FORMS.iter().chain(CONSTRAINT_FORMS) {
         assert!(

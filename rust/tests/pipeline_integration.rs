@@ -14,7 +14,7 @@ use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 
-use hss::coordinator::TreeBuilder;
+use hss::coordinator::{PartitionStrategy, TreeBuilder};
 use hss::data::registry;
 use hss::dist::{FaultPlan, SimBackend, TcpBackend};
 use hss::objectives::Problem;
@@ -174,6 +174,98 @@ fn pipelined_tcp_survives_mid_run_worker_kill_bit_identically() {
             .run(&problem, run_seed)
             .unwrap();
         assert_same_tree(&after_kill, &reference);
+        if after_kill.requeued_parts > 0 {
+            saw_requeue = true;
+            break;
+        }
+    }
+    assert!(saw_requeue, "worker kill never surfaced as a requeued part");
+
+    tcp.shutdown_workers();
+}
+
+/// The speculative-dispatch acceptance scenario: `--partitioner
+/// contiguous` over three real worker processes, one a 40 ms straggler.
+/// Under the contiguous strategy the tree runner opens the next round's
+/// streaming session early and dispatches straggler-independent parts
+/// while the current round drains — and the result must still equal the
+/// serial barrier run and the local reference bit-exactly, including
+/// after a mid-run worker kill. After round 0 every compress request
+/// carries an O(1) problem id: the spec-bytes metric must go flat.
+#[test]
+fn speculative_contiguous_tcp_matches_serial_including_straggler_and_kill() {
+    let (k, mu, problem_seed, run_seed) = (20usize, 150usize, 42u64, 7u64);
+    let ds = registry::load("csn-2k", problem_seed).unwrap();
+    let problem = Problem::exemplar(ds, k, problem_seed);
+    let builder =
+        || TreeBuilder::new(mu).partition_mode(PartitionStrategy::Contiguous);
+
+    // local reference: pipelined (speculative) ≡ serial
+    let local_serial = builder().build().run_serial(&problem, run_seed).unwrap();
+    let local_piped = builder().build().run(&problem, run_seed).unwrap();
+    assert_same_tree(&local_piped, &local_serial);
+
+    // real worker processes, one straggler
+    let w1 = WorkerProc::spawn(mu, 0);
+    let mut w2 = Some(WorkerProc::spawn(mu, 0));
+    let straggler = WorkerProc::spawn(mu, 40);
+    let tcp = Arc::new(
+        TcpBackend::new(
+            mu,
+            vec![
+                w1.addr.clone(),
+                w2.as_ref().unwrap().addr.clone(),
+                straggler.addr.clone(),
+            ],
+        )
+        .unwrap(),
+    );
+    let remote = builder()
+        .backend(tcp.clone())
+        .build()
+        .run(&problem, run_seed)
+        .unwrap();
+    assert_same_tree(&remote, &local_serial);
+    assert_eq!(remote.requeued_parts, 0, "healthy workers must not requeue");
+    assert!(
+        remote.straggler_overlap_ms > 0.0,
+        "a 40 ms straggler must open an overlap window, got {}",
+        remote.straggler_overlap_ms
+    );
+    // protocol v4 interning: the spec crossed once per worker in round
+    // 0; every later round shipped O(1) problem ids only
+    assert!(remote.per_round[0].spec_bytes > 0, "round 0 must ship the spec");
+    for r in remote.per_round.iter().skip(1) {
+        assert_eq!(
+            r.spec_bytes, 0,
+            "round {} re-shipped the spec instead of its id",
+            r.round
+        );
+    }
+
+    // the same backend serves a serial-barrier run identically (specs
+    // are already interned on every connection: zero spec bytes now)
+    let remote_serial = builder()
+        .backend(tcp.clone())
+        .build()
+        .run_serial(&problem, run_seed)
+        .unwrap();
+    assert_same_tree(&remote_serial, &local_serial);
+    assert_eq!(remote_serial.spec_bytes, 0, "interned specs must be reused");
+
+    // kill a worker mid-run: the in-flight part requeues onto survivors
+    // (possibly over several attempts — the dead slot is only observed
+    // when the scheduler hands it work) and the answer does not move,
+    // speculation and all
+    w2.take();
+    let mut saw_requeue = false;
+    for _ in 0..5 {
+        let after_kill = builder()
+            .backend(tcp.clone())
+            .build()
+            .run(&problem, run_seed)
+            .unwrap();
+        assert_same_tree(&after_kill, &local_serial);
         if after_kill.requeued_parts > 0 {
             saw_requeue = true;
             break;
