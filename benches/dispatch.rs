@@ -36,7 +36,7 @@ use hss::bench::{fmt_ms, BenchArgs, BenchRunner, Table};
 use hss::coordinator::{PartitionStrategy, TreeBuilder};
 use hss::data::registry;
 use hss::dist::worker::{self, WorkerConfig};
-use hss::dist::{FaultPlan, SimBackend, TcpBackend};
+use hss::dist::{Backend as _, FaultPlan, SimBackend, TcpBackend};
 use hss::objectives::Problem;
 
 fn main() -> hss::Result<()> {
@@ -56,7 +56,16 @@ fn main() -> hss::Result<()> {
             "round dispatch with 1 injected straggler \
              (csn-2k, k={k}, mu={mu}, straggle {straggle_ms}ms)"
         ),
-        &["backend", "partitioner", "mode", "wall", "overlap_ms", "requeued"],
+        &[
+            "backend",
+            "partitioner",
+            "mode",
+            "wall",
+            "overlap_ms",
+            "requeued",
+            "busy_ms",
+            "queue_ms",
+        ],
     );
 
     // ---- tcp: real protocol workers, one of them slow --------------------
@@ -71,11 +80,22 @@ fn main() -> hss::Result<()> {
     let tcp = Arc::new(TcpBackend::new(mu, addrs)?);
     let tree = TreeBuilder::new(mu).backend(tcp.clone()).build();
 
+    // protocol-v5 utilization: worker-reported execute/queue-wait time
+    // accumulated by the shared backend — per-row deltas, per run
+    let runs = (runner.warmup + runner.samples).max(1) as f64;
+    let fleet_busy = |b: &TcpBackend| {
+        b.worker_stats()
+            .iter()
+            .fold((0.0f64, 0.0f64), |acc, w| (acc.0 + w.busy_ms, acc.1 + w.queue_wait_ms))
+    };
+
     let mut requeued = 0u64;
+    let util0 = fleet_busy(&tcp);
     let s_serial = runner.time(|| {
         let r = tree.run_serial(&problem, seed).unwrap();
         requeued = r.requeued_parts;
     });
+    let util1 = fleet_busy(&tcp);
     table.row(vec![
         "tcp".into(),
         "balanced".into(),
@@ -83,14 +103,18 @@ fn main() -> hss::Result<()> {
         fmt_ms(&s_serial),
         "0.0".into(),
         requeued.to_string(),
+        format!("{:.1}", (util1.0 - util0.0) / runs),
+        format!("{:.1}", (util1.1 - util0.1) / runs),
     ]);
 
     let mut overlap = 0.0f64;
+    let util0 = fleet_busy(&tcp);
     let s_piped = runner.time(|| {
         let r = tree.run(&problem, seed).unwrap();
         overlap = r.straggler_overlap_ms;
         requeued = r.requeued_parts;
     });
+    let util1 = fleet_busy(&tcp);
     table.row(vec![
         "tcp".into(),
         "balanced".into(),
@@ -98,6 +122,8 @@ fn main() -> hss::Result<()> {
         fmt_ms(&s_piped),
         format!("{overlap:.1}"),
         requeued.to_string(),
+        format!("{:.1}", (util1.0 - util0.0) / runs),
+        format!("{:.1}", (util1.1 - util0.1) / runs),
     ]);
 
     // ---- tcp + contiguous: speculative next-round dispatch ---------------
@@ -108,10 +134,12 @@ fn main() -> hss::Result<()> {
         .partition_mode(PartitionStrategy::Contiguous)
         .backend(tcp.clone())
         .build();
+    let util0 = fleet_busy(&tcp);
     let s_contig_serial = runner.time(|| {
         let r = contig_tree.run_serial(&problem, seed).unwrap();
         requeued = r.requeued_parts;
     });
+    let util1 = fleet_busy(&tcp);
     table.row(vec![
         "tcp".into(),
         "contiguous".into(),
@@ -119,13 +147,17 @@ fn main() -> hss::Result<()> {
         fmt_ms(&s_contig_serial),
         "0.0".into(),
         requeued.to_string(),
+        format!("{:.1}", (util1.0 - util0.0) / runs),
+        format!("{:.1}", (util1.1 - util0.1) / runs),
     ]);
     let mut contig_overlap = 0.0f64;
+    let util0 = fleet_busy(&tcp);
     let s_contig_spec = runner.time(|| {
         let r = contig_tree.run(&problem, seed).unwrap();
         contig_overlap = r.straggler_overlap_ms;
         requeued = r.requeued_parts;
     });
+    let util1 = fleet_busy(&tcp);
     table.row(vec![
         "tcp".into(),
         "contiguous".into(),
@@ -133,6 +165,8 @@ fn main() -> hss::Result<()> {
         fmt_ms(&s_contig_spec),
         format!("{contig_overlap:.1}"),
         requeued.to_string(),
+        format!("{:.1}", (util1.0 - util0.0) / runs),
+        format!("{:.1}", (util1.1 - util0.1) / runs),
     ]);
     tcp.shutdown_workers();
 
@@ -155,6 +189,8 @@ fn main() -> hss::Result<()> {
         let r = sim_tree(&faults).run(&problem, seed).unwrap();
         sim_overlap = r.straggler_overlap_ms;
     });
+    // the sim backend has no per-worker accounting — no wire, no
+    // worker-reported telemetry
     table.row(vec![
         "sim".into(),
         "balanced".into(),
@@ -162,6 +198,8 @@ fn main() -> hss::Result<()> {
         fmt_ms(&s_sim_serial),
         "0.0".into(),
         "0".into(),
+        "-".into(),
+        "-".into(),
     ]);
     table.row(vec![
         "sim".into(),
@@ -170,6 +208,8 @@ fn main() -> hss::Result<()> {
         fmt_ms(&s_sim_piped),
         format!("{sim_overlap:.1}"),
         "0".into(),
+        "-".into(),
+        "-".into(),
     ]);
 
     table.print();

@@ -39,6 +39,15 @@ pub struct RoundMetrics {
     /// identity), so after round 0 every compress request carries an
     /// O(1) problem id and this is 0). Always 0 on wire-less backends.
     pub spec_bytes: u64,
+    /// Oracle evaluations charged to this round: the delta of the
+    /// problem's shared counter between the round starting and its
+    /// last part reporting (remote workers fold their evals in before
+    /// announcing completion, so the delta covers every backend).
+    /// Under contiguous speculative dispatch, a next-round part that
+    /// executes early is charged to the round whose window it
+    /// completes in — totals stay exact, per-round attribution is
+    /// approximate.
+    pub oracle_evals: u64,
     pub best_value: f64,
 }
 
@@ -118,6 +127,7 @@ mod tests {
             wall_ms: 1.0,
             straggler_overlap_ms: 0.4,
             spec_bytes: 300,
+            oracle_evals: 1_000,
             best_value: 5.0,
         });
         m.record_round(RoundMetrics {
@@ -132,6 +142,7 @@ mod tests {
             wall_ms: 0.5,
             straggler_overlap_ms: 0.0,
             spec_bytes: 0,
+            oracle_evals: 250,
             best_value: 6.0,
         });
         assert_eq!(m.num_rounds(), 2);

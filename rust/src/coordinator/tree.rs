@@ -62,6 +62,7 @@ use crate::coordinator::planner::RoundPlan;
 use crate::dist::{Backend, LocalBackend, PartEvent, RoundSession};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
+use crate::trace;
 use crate::util::rng::Rng;
 
 /// Builder for [`TreeRunner`].
@@ -497,6 +498,11 @@ impl TreeRunner {
                 }
             };
             let r_start = Instant::now();
+            let r_trace_start = trace::now_us();
+            // per-round oracle attribution: the shared counter's delta
+            // over the round's event window (remote evals fold in
+            // before each Done, so the delta is backend-agnostic)
+            let evals_round_start = problem.eval_count();
 
             let mut slots: Vec<Option<Solution>> = vec![None; m_t];
             let mut requeued_parts = 0usize;
@@ -532,6 +538,13 @@ impl TreeRunner {
                 } else {
                     None
                 };
+                if spec.is_some() && trace::enabled() {
+                    trace::instant(
+                        trace::COORDINATOR_TRACK,
+                        "spec.begin",
+                        vec![("round", trace::ArgValue::U64(round as u64))],
+                    );
+                }
                 // Contiguous: open the next round's streaming session
                 // NOW, so straggler-independent next parts execute while
                 // this round's stragglers are still running. If the
@@ -556,6 +569,13 @@ impl TreeRunner {
                 }
                 if kill_spec {
                     spec = None;
+                    if trace::enabled() {
+                        trace::instant(
+                            trace::COORDINATOR_TRACK,
+                            "spec.recompute",
+                            vec![("round", trace::ArgValue::U64(round as u64))],
+                        );
+                    }
                 }
                 let mut first_done: Option<Instant> = None;
                 while let Some(ev) = handle.next_event() {
@@ -583,6 +603,16 @@ impl TreeRunner {
                                 // speculatively dispatched parts
                                 spec = None;
                                 next_session = None;
+                                if trace::enabled() {
+                                    trace::instant(
+                                        trace::COORDINATOR_TRACK,
+                                        "spec.recompute",
+                                        vec![
+                                            ("round", trace::ArgValue::U64(round as u64)),
+                                            ("part", trace::ArgValue::U64(part as u64)),
+                                        ],
+                                    );
+                                }
                             }
                             slots[part] = Some(solution);
                         }
@@ -604,6 +634,19 @@ impl TreeRunner {
                 // the advanced rng and hand over the pre-built partition
                 // (possibly already partially executing)
                 if let Some(s) = spec {
+                    if trace::enabled() {
+                        trace::instant(
+                            trace::COORDINATOR_TRACK,
+                            "spec.adopt",
+                            vec![
+                                ("round", trace::ArgValue::U64(round as u64)),
+                                (
+                                    "dispatched_parts",
+                                    trace::ArgValue::U64(s.next_submitted as u64),
+                                ),
+                            ],
+                        );
+                    }
                     rng = s.rng_after;
                     prepared = Some(match next_session {
                         Some(session) => Upcoming::InFlight {
@@ -662,6 +705,20 @@ impl TreeRunner {
             // the moment each part completes, which is what lets the
             // speculative scatter above fill next-round parts in flight.
 
+            let round_evals = problem.eval_count() - evals_round_start;
+            if trace::enabled() {
+                trace::span(
+                    trace::COORDINATOR_TRACK,
+                    "round",
+                    r_trace_start,
+                    vec![
+                        ("round", trace::ArgValue::U64(round as u64)),
+                        ("machines", trace::ArgValue::U64(m_t as u64)),
+                        ("input_items", trace::ArgValue::U64(a.len() as u64)),
+                        ("oracle_evals", trace::ArgValue::U64(round_evals)),
+                    ],
+                );
+            }
             metrics.record_round(RoundMetrics {
                 round,
                 input_items: a.len(),
@@ -678,6 +735,7 @@ impl TreeRunner {
                 wall_ms: r_start.elapsed().as_secs_f64() * 1e3 + round_delay,
                 straggler_overlap_ms: overlap_ms,
                 spec_bytes: round_spec_bytes,
+                oracle_evals: round_evals,
                 best_value: best.value,
             });
 

@@ -19,6 +19,7 @@ use crate::coordinator::capacity::CapacityProfile;
 use crate::dist::{Backend, PartEvent, RoundSession, RoundSink};
 use crate::error::Result;
 use crate::objectives::Problem;
+use crate::trace;
 
 /// Thread-pool execution backend with hard per-machine capacities.
 pub struct LocalBackend {
@@ -63,10 +64,11 @@ impl RoundSink for LocalSink {
         }
         self.round.cv.notify_one();
         if self.spawned < self.threads {
+            let thread_id = self.spawned;
             self.spawned += 1;
             let round = Arc::clone(&self.round);
             let tx = self.tx.clone();
-            std::thread::spawn(move || worker_loop(round, tx));
+            std::thread::spawn(move || worker_loop(round, tx, thread_id));
         }
         Ok(())
     }
@@ -158,8 +160,9 @@ impl Backend for LocalBackend {
 }
 
 /// One pool thread: drain the round's queue until it is closed and
-/// empty (or the consumer gives up).
-fn worker_loop(round: Arc<LocalRound>, tx: mpsc::Sender<Result<PartEvent>>) {
+/// empty (or the consumer gives up). `thread_id` names the thread's
+/// trace track (`local-<id>`).
+fn worker_loop(round: Arc<LocalRound>, tx: mpsc::Sender<Result<PartEvent>>, thread_id: usize) {
     loop {
         let task = {
             let mut q = round.queue.lock().unwrap();
@@ -174,7 +177,19 @@ fn worker_loop(round: Arc<LocalRound>, tx: mpsc::Sender<Result<PartEvent>>) {
             }
         };
         let Some((idx, part, seed)) = task else { break };
+        let t0 = trace::now_us();
         let sol = round.compressor.compress(&round.problem, &part, seed);
+        if trace::enabled() {
+            trace::span(
+                &format!("local-{thread_id}"),
+                "execute",
+                t0,
+                vec![
+                    ("part", trace::ArgValue::U64(idx as u64)),
+                    ("items", trace::ArgValue::U64(part.len() as u64)),
+                ],
+            );
+        }
         let event = match sol {
             Ok(solution) => Ok(PartEvent::Done { part: idx, solution }),
             Err(e) => Err(e),

@@ -65,6 +65,7 @@ use crate::data::DatasetRef;
 use crate::dist::protocol::ProblemSpec;
 use crate::error::{Error, Result};
 use crate::objectives::{Objective, Problem};
+use crate::trace;
 use crate::util::rng::Rng;
 
 /// Outcome of one compression round executed by a backend.
@@ -87,6 +88,40 @@ pub struct RoundOutcome {
     /// problem identity); after that every compress request carries an
     /// O(1) problem id). 0 on backends with no wire.
     pub spec_bytes: u64,
+}
+
+/// Per-worker utilization and telemetry accumulated over a backend's
+/// lifetime (protocol v5). Produced by [`Backend::worker_stats`]; the
+/// run summary and the dispatch bench report these. Purely
+/// observational — stats never influence dispatch or the answer.
+///
+/// Counter semantics: `parts`, `oracle_evals`, `busy_ms` and
+/// `queue_wait_ms` are *sums* over completed parts; the cache fields
+/// are the worker's own cumulative gauges (dataset cache = process
+/// lifetime, problem-id table = connection lifetime), so the
+/// coordinator keeps the latest reported value rather than summing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerStats {
+    /// Worker identity (`host:port` for TCP fleets).
+    pub addr: String,
+    /// Parts this worker completed (requeued attempts don't count).
+    pub parts: u64,
+    /// Worker-side oracle evaluations folded into completed parts.
+    pub oracle_evals: u64,
+    /// Total worker-reported execute wall time, milliseconds.
+    pub busy_ms: f64,
+    /// Total worker-reported request queue wait, milliseconds.
+    pub queue_wait_ms: f64,
+    /// Worker dataset-cache hits (cumulative gauge, process lifetime).
+    pub dataset_hits: u64,
+    /// Worker dataset-cache misses (cumulative gauge).
+    pub dataset_misses: u64,
+    /// Problem-id-table hits on the worker's current connection.
+    pub problem_hits: u64,
+    /// Problem-id-table misses (unknown id → spec reship needed).
+    pub problem_misses: u64,
+    /// Problem-id-table evictions on the worker's current connection.
+    pub problem_evictions: u64,
 }
 
 /// One observable state change of an in-flight round.
@@ -196,6 +231,41 @@ impl RoundHandle {
                 if matches!(ev, PartEvent::Done { .. }) {
                     self.done += 1;
                 }
+                if trace::enabled() {
+                    match &ev {
+                        PartEvent::Done { part, solution } => trace::instant(
+                            trace::COORDINATOR_TRACK,
+                            "part.done",
+                            vec![
+                                ("part", trace::ArgValue::U64(*part as u64)),
+                                (
+                                    "items",
+                                    trace::ArgValue::U64(solution.items.len() as u64),
+                                ),
+                            ],
+                        ),
+                        PartEvent::Requeued { part, reshipped_ids } => trace::instant(
+                            trace::COORDINATOR_TRACK,
+                            "part.requeued",
+                            vec![
+                                ("part", trace::ArgValue::U64(*part as u64)),
+                                (
+                                    "reshipped_ids",
+                                    trace::ArgValue::U64(*reshipped_ids as u64),
+                                ),
+                            ],
+                        ),
+                        PartEvent::MachineLost { machine, detail } => trace::instant(
+                            trace::COORDINATOR_TRACK,
+                            "machine.lost",
+                            vec![
+                                ("machine", trace::ArgValue::Str(machine.clone())),
+                                ("detail", trace::ArgValue::Str(detail.clone())),
+                            ],
+                        ),
+                        PartEvent::Delay { .. } | PartEvent::SpecShipped { .. } => {}
+                    }
+                }
                 Some(Ok(ev))
             }
             Ok(Err(e)) => {
@@ -299,6 +369,13 @@ impl RoundSession {
         profile: CapacityProfile,
         round_seed: u64,
     ) -> RoundSession {
+        if trace::enabled() {
+            trace::instant(
+                trace::COORDINATOR_TRACK,
+                "open_round",
+                vec![("round_seed", trace::ArgValue::U64(round_seed))],
+            );
+        }
         RoundSession {
             sink: Some(sink),
             rx: Some(rx),
@@ -334,7 +411,18 @@ impl RoundSession {
             .sink
             .as_mut()
             .ok_or_else(|| Error::invalid("round session already closed"))?;
+        let items = part.len();
         sink.submit(idx, part, seed)?;
+        if trace::enabled() {
+            trace::instant(
+                trace::COORDINATOR_TRACK,
+                "submit_part",
+                vec![
+                    ("part", trace::ArgValue::U64(idx as u64)),
+                    ("items", trace::ArgValue::U64(items as u64)),
+                ],
+            );
+        }
         self.seed_rng = advanced;
         self.submitted += 1;
         Ok(())
@@ -356,6 +444,13 @@ impl RoundSession {
             .take()
             .ok_or_else(|| Error::invalid("round session already closed"))?;
         sink.close()?;
+        if trace::enabled() {
+            trace::instant(
+                trace::COORDINATOR_TRACK,
+                "close_round",
+                vec![("parts", trace::ArgValue::U64(self.submitted as u64))],
+            );
+        }
         let rx = self.rx.take().expect("session channel taken before close");
         Ok(RoundHandle::new(rx, self.submitted))
     }
@@ -438,6 +533,15 @@ pub trait Backend: Send + Sync {
         let mut session = self.open_round(problem, compressor, round_seed)?;
         session.submit_parts(parts)?;
         session.close()
+    }
+
+    /// Per-worker utilization and telemetry accumulated so far
+    /// (protocol v5). Backends without per-worker accounting return an
+    /// empty vector; [`TcpBackend`] reports one entry per fleet worker,
+    /// sorted by address. Observational only — never affects dispatch
+    /// or the answer.
+    fn worker_stats(&self) -> Vec<WorkerStats> {
+        Vec::new()
     }
 
     /// Barrier wrapper over [`Backend::submit_round`]: block until every

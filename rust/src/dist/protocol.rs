@@ -47,7 +47,15 @@ use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 /// of the spec — killing the per-round spec re-serialization and
 /// shrinking every subsequent request to O(part). Workers keep the id
 /// table per connection, so a coordinator re-interns transparently on
-/// fresh or reconnected workers. v1–v3 peers are rejected at handshake.
+/// fresh or reconnected workers. v5 adds **telemetry**: the handshake
+/// carries a coordinator clock echo (`clock_ms` → `clock_echo_ms`) so
+/// worker-side timings can be aligned to the coordinator's trace
+/// timeline, and every solution response carries a [`Telemetry`] block
+/// (queue-wait ms plus cumulative dataset-cache and problem-id-table
+/// hit/miss/eviction counters) alongside the per-call `evals` /
+/// `wall_ms` that existed since v1. Telemetry is observational only —
+/// it never changes dispatch decisions or answers. v1–v4 peers are
+/// rejected at handshake.
 ///
 /// Pipelined/streaming dispatch (the coordinator's Backend v3 —
 /// persistent per-worker dispatchers, next-round parts speculatively
@@ -56,7 +64,7 @@ use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 /// boundaries on one warm connection. The normative statement of the
 /// streaming semantics (event ordering, in-flight next-round parts) is
 /// `docs/PROTOCOL.md` §6.1.
-pub const PROTOCOL_VERSION: usize = 4;
+pub const PROTOCOL_VERSION: usize = 5;
 
 /// Hard cap on frame payloads (64 MiB — a part of 10^6 ids is ~8 MB of
 /// JSON; anything bigger than this is a corrupt or hostile frame).
@@ -334,14 +342,80 @@ pub fn compressor_from_name(name: &str) -> Result<Box<dyn Compressor>> {
 }
 
 // ---------------------------------------------------------------------------
+// worker telemetry (protocol v5)
+// ---------------------------------------------------------------------------
+
+/// Worker-side telemetry riding on every [`Response::Solution`]
+/// (protocol v5). `queue_wait_ms` is per-request; the cache counters
+/// are **cumulative gauges** over the worker process (dataset cache)
+/// or the current connection (problem-id table), so the coordinator
+/// keeps the latest value per worker instead of summing. Purely
+/// observational — omitted fields parse as zero and nothing here ever
+/// influences dispatch or answers.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Telemetry {
+    /// Time between the worker reading the request frame and starting
+    /// the compression compute, including any injected straggle sleep —
+    /// the worker-side queueing component of end-to-end latency.
+    pub queue_wait_ms: f64,
+    /// Dataset-cache hits (process lifetime).
+    pub dataset_hits: u64,
+    /// Dataset-cache misses (process lifetime).
+    pub dataset_misses: u64,
+    /// Interned-problem-table hits (connection lifetime).
+    pub problem_hits: u64,
+    /// Compress requests naming an unknown/evicted problem id
+    /// (connection lifetime).
+    pub problem_misses: u64,
+    /// Interned problems evicted by the table bound (connection
+    /// lifetime).
+    pub problem_evictions: u64,
+}
+
+impl Telemetry {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("queue_wait_ms", json::num(self.queue_wait_ms)),
+            ("dataset_hits", ju64(self.dataset_hits)),
+            ("dataset_misses", ju64(self.dataset_misses)),
+            ("problem_hits", ju64(self.problem_hits)),
+            ("problem_misses", ju64(self.problem_misses)),
+            ("problem_evictions", ju64(self.problem_evictions)),
+        ])
+    }
+
+    /// Parse from an optional `telemetry` object; a missing block or
+    /// missing fields default to zero (telemetry must never fail a
+    /// frame that carries a valid solution).
+    pub fn from_json(v: Option<&Json>) -> Telemetry {
+        let Some(v) = v else { return Telemetry::default() };
+        let u = |key: &str| v.get(key).and_then(json::as_lossless_u64).unwrap_or(0);
+        Telemetry {
+            queue_wait_ms: v.get("queue_wait_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            dataset_hits: u("dataset_hits"),
+            dataset_misses: u("dataset_misses"),
+            problem_hits: u("problem_hits"),
+            problem_misses: u("problem_misses"),
+            problem_evictions: u("problem_evictions"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // messages
 // ---------------------------------------------------------------------------
 
 /// Coordinator → worker.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// Handshake: version check, capacity discovery.
-    Hello,
+    /// Handshake: version check, capacity discovery, clock alignment.
+    Hello {
+        /// The coordinator's trace clock (ms since its trace epoch) at
+        /// send time, echoed back by the worker so worker-side spans
+        /// can be aligned to the coordinator timeline (skew bounded by
+        /// the handshake RTT). 0.0 when the coordinator is not tracing.
+        clock_ms: f64,
+    },
     /// Intern a problem on this connection (v4): ship the full
     /// [`ProblemSpec`] once under a coordinator-chosen id; every
     /// subsequent [`Request::Compress`] for the same problem carries
@@ -371,9 +445,10 @@ pub enum Request {
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Hello => json::obj(vec![
+            Request::Hello { clock_ms } => json::obj(vec![
                 ("type", json::s("hello")),
                 ("version", json::num(PROTOCOL_VERSION as f64)),
+                ("clock_ms", json::num(*clock_ms)),
             ]),
             Request::DefineProblem { id, problem } => json::obj(vec![
                 ("type", json::s("define-problem")),
@@ -401,7 +476,10 @@ impl Request {
                         "version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
                     )));
                 }
-                Ok(Request::Hello)
+                // telemetry field: absent or malformed defaults to 0.0
+                // (a coordinator that is not tracing sends 0.0 anyway)
+                let clock_ms = v.get("clock_ms").and_then(Json::as_f64).unwrap_or(0.0);
+                Ok(Request::Hello { clock_ms })
             }
             "define-problem" => {
                 let problem_json = v
@@ -428,13 +506,16 @@ impl Request {
 /// Worker → coordinator.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    /// Handshake reply: the worker's fixed capacity µ.
-    Hello { capacity: usize },
+    /// Handshake reply: the worker's fixed capacity µ, plus the
+    /// coordinator clock echoed back (protocol v5 — lets the
+    /// coordinator bound clock skew by the handshake RTT).
+    Hello { capacity: usize, clock_echo_ms: f64 },
     /// [`Request::DefineProblem`] acknowledged: the id is now live on
     /// this connection.
     Defined { id: u64 },
-    /// One machine's compression result plus its per-call metrics.
-    Solution { items: Vec<u32>, value: f64, evals: u64, wall_ms: f64 },
+    /// One machine's compression result plus its per-call metrics and
+    /// worker telemetry (protocol v5).
+    Solution { items: Vec<u32>, value: f64, evals: u64, wall_ms: f64, telemetry: Telemetry },
     /// The request failed on the worker (capacity violation, bad spec,
     /// unknown problem id…).
     Error { msg: String },
@@ -445,21 +526,23 @@ pub enum Response {
 impl Response {
     pub fn to_json(&self) -> Json {
         match self {
-            Response::Hello { capacity } => json::obj(vec![
+            Response::Hello { capacity, clock_echo_ms } => json::obj(vec![
                 ("type", json::s("hello")),
                 ("version", json::num(PROTOCOL_VERSION as f64)),
                 ("capacity", json::num(*capacity as f64)),
+                ("clock_echo_ms", json::num(*clock_echo_ms)),
             ]),
             Response::Defined { id } => json::obj(vec![
                 ("type", json::s("defined")),
                 ("id", ju64(*id)),
             ]),
-            Response::Solution { items, value, evals, wall_ms } => json::obj(vec![
+            Response::Solution { items, value, evals, wall_ms, telemetry } => json::obj(vec![
                 ("type", json::s("solution")),
                 ("items", items_to_json(items)),
                 ("value", jvalue(*value)),
                 ("evals", ju64(*evals)),
                 ("wall_ms", json::num(*wall_ms)),
+                ("telemetry", telemetry.to_json()),
             ]),
             Response::Error { msg } => json::obj(vec![
                 ("type", json::s("error")),
@@ -478,7 +561,10 @@ impl Response {
                         "version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
                     )));
                 }
-                Ok(Response::Hello { capacity: wire_usize(v, "capacity")? })
+                Ok(Response::Hello {
+                    capacity: wire_usize(v, "capacity")?,
+                    clock_echo_ms: v.get("clock_echo_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                })
             }
             "defined" => Ok(Response::Defined { id: wire_u64(v, "id")? }),
             "solution" => Ok(Response::Solution {
@@ -489,6 +575,7 @@ impl Response {
                 value: value_from_json(v, "value")?,
                 evals: wire_u64(v, "evals")?,
                 wall_ms: wire_f64(v, "wall_ms")?,
+                telemetry: Telemetry::from_json(v.get("telemetry")),
             }),
             "error" => Ok(Response::Error { msg: wire_str(v, "msg")?.to_string() }),
             "bye" => Ok(Response::Bye),
@@ -553,9 +640,61 @@ mod tests {
         };
         let back = Request::from_json(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(req, back);
-        for r in [Request::Hello, Request::Shutdown] {
+        for r in [Request::Hello { clock_ms: 12.5 }, Request::Shutdown] {
             let b = Request::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
             assert_eq!(r, b);
+        }
+    }
+
+    #[test]
+    fn handshake_echoes_the_coordinator_clock() {
+        // v5: the worker reflects the coordinator's trace clock so
+        // worker spans can be aligned to the coordinator timeline
+        let hello = Response::Hello { capacity: 128, clock_echo_ms: 417.25 };
+        let back =
+            Response::from_json(&Json::parse(&hello.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(hello, back);
+        // a hello without the echo (malformed telemetry) still parses,
+        // defaulting the echo to 0 — telemetry must never fail a frame
+        let bare = Json::parse(r#"{"type":"hello","version":5,"capacity":7}"#).unwrap();
+        assert_eq!(
+            Response::from_json(&bare).unwrap(),
+            Response::Hello { capacity: 7, clock_echo_ms: 0.0 }
+        );
+    }
+
+    #[test]
+    fn solution_telemetry_roundtrips_and_defaults_to_zero() {
+        let telemetry = Telemetry {
+            queue_wait_ms: 3.5,
+            dataset_hits: 11,
+            dataset_misses: 2,
+            problem_hits: 40,
+            problem_misses: 1,
+            problem_evictions: 5,
+        };
+        let resp = Response::Solution {
+            items: vec![9],
+            value: 1.0,
+            evals: 77,
+            wall_ms: 0.5,
+            telemetry: telemetry.clone(),
+        };
+        let back =
+            Response::from_json(&Json::parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        match back {
+            Response::Solution { telemetry: t, .. } => assert_eq!(t, telemetry),
+            other => panic!("wrong response {other:?}"),
+        }
+        // a solution frame without the telemetry block parses with a
+        // zeroed block instead of failing
+        let bare = Json::parse(
+            r#"{"type":"solution","items":[1],"value":2.0,"evals":"3","wall_ms":0.25}"#,
+        )
+        .unwrap();
+        match Response::from_json(&bare).unwrap() {
+            Response::Solution { telemetry: t, .. } => assert_eq!(t, Telemetry::default()),
+            other => panic!("wrong response {other:?}"),
         }
     }
 
@@ -598,6 +737,7 @@ mod tests {
             value,
             evals: 987_654_321,
             wall_ms: 1.25,
+            telemetry: Telemetry::default(),
         };
         let back =
             Response::from_json(&Json::parse(&resp.to_json().to_string()).unwrap()).unwrap();
@@ -625,6 +765,7 @@ mod tests {
                 value: v,
                 evals: 10,
                 wall_ms: 0.5,
+                telemetry: Telemetry::default(),
             };
             let text = resp.to_json().to_string();
             let back = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -651,12 +792,13 @@ mod tests {
 
     #[test]
     fn version_mismatch_is_rejected() {
-        // future versions and the retired v1/v2/v3 are all refused
+        // future versions and the retired v1–v4 are all refused
         for bad in [
             r#"{"type":"hello","version":999}"#,
             r#"{"type":"hello","version":1}"#,
             r#"{"type":"hello","version":2}"#,
             r#"{"type":"hello","version":3}"#,
+            r#"{"type":"hello","version":4}"#,
         ] {
             let msg = Json::parse(bad).unwrap();
             assert!(Request::from_json(&msg).is_err(), "{bad}");

@@ -56,6 +56,7 @@ use crate::dist::protocol::{compressor_from_name, compressor_wire_name, ProblemS
 use crate::dist::{Backend, PartEvent, RoundSession, RoundSink, SpecInterner};
 use crate::error::{Error, Result};
 use crate::objectives::{EvalCounter, Problem};
+use crate::trace;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -423,8 +424,20 @@ impl SimRound {
 
         // same part, same positional seed — replacements change cost,
         // never the answer
+        let t0 = trace::now_us();
         match self.compressor.compress(&self.problem, part, seed) {
             Ok(solution) => {
+                if trace::enabled() {
+                    trace::span(
+                        &format!("sim-{i}"),
+                        "execute",
+                        t0,
+                        vec![
+                            ("part", trace::ArgValue::U64(i as u64)),
+                            ("virtual_delay_ms", trace::ArgValue::F64(delay_ms)),
+                        ],
+                    );
+                }
                 // fold BEFORE announcing completion: a consumer that
                 // reads the shared counter the moment the round's
                 // last part reports must see every oracle call

@@ -54,7 +54,7 @@
 //!
 //! [`LocalBackend`]: crate::dist::LocalBackend
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -62,11 +62,13 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use crate::algorithms::{Compressor, Solution};
 use crate::coordinator::capacity::CapacityProfile;
 use crate::dist::protocol::{
-    compressor_wire_name, recv_msg, send_msg, ProblemSpec, Request, Response,
+    compressor_wire_name, recv_msg, send_msg, ProblemSpec, Request, Response, Telemetry,
 };
-use crate::dist::{Backend, PartEvent, RoundSession, RoundSink, SpecInterner};
+use crate::dist::{Backend, PartEvent, RoundSession, RoundSink, SpecInterner, WorkerStats};
 use crate::error::{Error, Result};
 use crate::objectives::{EvalCounter, Problem};
+use crate::trace;
+use crate::util::log;
 
 /// A persistent, handshaken connection to one worker process.
 struct WorkerConn {
@@ -98,10 +100,25 @@ impl WorkerConn {
             capacity: 0,
             defined: HashSet::new(),
         };
-        let reply = conn.roundtrip(&Request::Hello)?;
+        let t0 = trace::now_us();
+        let reply = conn.roundtrip(&Request::Hello { clock_ms: trace::clock_ms() })?;
         conn.stream.set_read_timeout(None).ok();
         match reply {
-            Response::Hello { capacity } => {
+            Response::Hello { capacity, clock_echo_ms } => {
+                if trace::enabled() {
+                    // the echo bounds coordinator↔worker clock alignment
+                    // by this handshake's RTT (docs/OBSERVABILITY.md)
+                    let rtt_ms = trace::now_us().saturating_sub(t0) as f64 / 1e3;
+                    trace::instant(
+                        addr,
+                        "handshake",
+                        vec![
+                            ("capacity", trace::ArgValue::U64(capacity as u64)),
+                            ("clock_echo_ms", trace::ArgValue::F64(clock_echo_ms)),
+                            ("rtt_ms", trace::ArgValue::F64(rtt_ms)),
+                        ],
+                    );
+                }
                 conn.capacity = capacity;
                 Ok(conn)
             }
@@ -201,6 +218,9 @@ struct FleetState {
     epoch: u64,
     dispatchers_alive: usize,
     shutdown: Option<ShutdownKind>,
+    /// Per-worker utilization/telemetry (protocol v5), keyed by address
+    /// so [`Backend::worker_stats`] reports in a stable order.
+    stats: BTreeMap<String, WorkerStats>,
 }
 
 struct Fleet {
@@ -252,6 +272,7 @@ impl TcpBackend {
                 epoch: 0,
                 dispatchers_alive: count,
                 shutdown: None,
+                stats: BTreeMap::new(),
             }),
             cv: Condvar::new(),
         });
@@ -369,6 +390,12 @@ impl Backend for TcpBackend {
         self.profile.clone()
     }
 
+    fn worker_stats(&self) -> Vec<WorkerStats> {
+        let st = self.fleet.state.lock().unwrap();
+        // BTreeMap iteration → sorted by worker address
+        st.stats.values().cloned().collect()
+    }
+
     fn open_round(
         &self,
         problem: &Problem,
@@ -472,6 +499,7 @@ fn check_stall(st: &mut FleetState) {
         };
         match msg {
             Some(m) => {
+                log::error(&format!("round stalled: {m}"));
                 let job = st.jobs.remove(pos).unwrap();
                 let _ = job.ctx.tx.send(Err(Error::Transport(m)));
                 // the next job shifted into `pos`; re-examine it
@@ -495,7 +523,15 @@ enum Step {
 
 /// Everything one part's wire conversation can come back with.
 enum WireOutcome {
-    Done { items: Vec<u32>, value: f64, evals: u64 },
+    Done {
+        items: Vec<u32>,
+        value: f64,
+        evals: u64,
+        /// Worker-reported execute wall time (protocol v5).
+        wall_ms: f64,
+        /// Worker-side telemetry the response carried (protocol v5).
+        telemetry: Telemetry,
+    },
     /// Worker alive but the request failed (or spoke nonsense):
     /// retrying elsewhere cannot help, the round dies.
     Fatal(Error),
@@ -551,8 +587,11 @@ fn dispatch_part(conn: &mut WorkerConn, ctx: &RoundCtx, task: &PartTask) -> (Wir
             seed: task.seed,
         };
         match conn.roundtrip(&request) {
-            Ok(Response::Solution { items, value, evals, .. }) => {
-                return (WireOutcome::Done { items, value, evals }, spec_shipped)
+            Ok(Response::Solution { items, value, evals, wall_ms, telemetry }) => {
+                return (
+                    WireOutcome::Done { items, value, evals, wall_ms, telemetry },
+                    spec_shipped,
+                )
             }
             // the worker evicted our id from its bounded table:
             // re-intern once, transparently
@@ -659,6 +698,9 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                         // allowed to come up late, so the next round
                         // retries the connect. (`dead` is reserved for
                         // mid-flight failures.)
+                        log::debug(&format!(
+                            "connect to {addr} failed ({e}); retrying next round"
+                        ));
                         if st.epoch == epoch {
                             st.slots[id].out_epoch = epoch;
                             if let Some(job) = st.jobs.front_mut() {
@@ -672,6 +714,7 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
             }
             Step::Dispatch(task, ctx, epoch) => {
                 drop(st);
+                let t0 = trace::now_us();
                 let (outcome, spec_shipped) =
                     dispatch_part(conn.as_mut().unwrap(), &ctx, &task);
                 st = fleet.state.lock().unwrap();
@@ -687,7 +730,55 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                 // wire; only account against a job still in the deque.
                 let job_pos = st.jobs.iter().position(|j| j.epoch == epoch);
                 match outcome {
-                    WireOutcome::Done { items, value, evals } => {
+                    WireOutcome::Done { items, value, evals, wall_ms, telemetry } => {
+                        let addr = st.slots[id].addr.clone();
+                        if trace::enabled() {
+                            // receipt-anchored: the rpc span covers the
+                            // wire conversation; the execute span ends at
+                            // receipt and extends the worker-reported
+                            // wall time into the past, clamped into the
+                            // rpc window so same-track spans stay
+                            // well-nested regardless of clock skew
+                            let end = trace::now_us();
+                            let rpc_us = end.saturating_sub(t0);
+                            let exec_us = ((wall_ms * 1e3) as u64).min(rpc_us);
+                            trace::span_at(
+                                &addr,
+                                "rpc",
+                                t0,
+                                rpc_us,
+                                vec![("part", trace::ArgValue::U64(task.idx as u64))],
+                            );
+                            trace::span_at(
+                                &addr,
+                                "execute",
+                                end - exec_us,
+                                exec_us,
+                                vec![
+                                    ("part", trace::ArgValue::U64(task.idx as u64)),
+                                    ("oracle_evals", trace::ArgValue::U64(evals)),
+                                    (
+                                        "queue_wait_ms",
+                                        trace::ArgValue::F64(telemetry.queue_wait_ms),
+                                    ),
+                                ],
+                            );
+                        }
+                        let entry =
+                            st.stats.entry(addr.clone()).or_insert_with(|| WorkerStats {
+                                addr,
+                                ..WorkerStats::default()
+                            });
+                        entry.parts += 1;
+                        entry.oracle_evals += evals;
+                        entry.busy_ms += wall_ms;
+                        entry.queue_wait_ms += telemetry.queue_wait_ms;
+                        // cumulative worker-side gauges: latest wins
+                        entry.dataset_hits = telemetry.dataset_hits;
+                        entry.dataset_misses = telemetry.dataset_misses;
+                        entry.problem_hits = telemetry.problem_hits;
+                        entry.problem_misses = telemetry.problem_misses;
+                        entry.problem_evictions = telemetry.problem_evictions;
                         // fold remote oracle work in BEFORE announcing
                         // completion, so a consumer reading the shared
                         // counter at the last event sees all of it
@@ -717,6 +808,10 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                         // transport failure mid-flight: lose this
                         // machine for good, requeue the part for
                         // surviving workers that can hold it
+                        log::warn(&format!(
+                            "worker {} lost mid-flight ({detail}); requeueing part {}",
+                            st.slots[id].addr, task.idx
+                        ));
                         let _ = ctx.tx.send(Ok(PartEvent::MachineLost {
                             machine: st.slots[id].addr.clone(),
                             detail: detail.clone(),
@@ -856,15 +951,15 @@ mod tests {
                     let Ok(msg) = recv_msg(&mut stream) else { break };
                     let Ok(req) = Request::from_json(&msg) else { break };
                     match req {
-                        Request::Hello => {
+                        Request::Hello { clock_ms } => {
                             if hello_delay_ms > 0 {
                                 std::thread::sleep(std::time::Duration::from_millis(
                                     hello_delay_ms,
                                 ));
                             }
-                            if send_msg(&mut stream, &Response::Hello { capacity }.to_json())
-                                .is_err()
-                            {
+                            let hello =
+                                Response::Hello { capacity, clock_echo_ms: clock_ms };
+                            if send_msg(&mut stream, &hello.to_json()).is_err() {
                                 break;
                             }
                         }
@@ -903,6 +998,7 @@ mod tests {
                                         value: sol.value,
                                         evals: 0,
                                         wall_ms: 0.0,
+                                        telemetry: Telemetry::default(),
                                     }
                                 }
                                 None => Response::Error {
@@ -1110,6 +1206,24 @@ mod tests {
             .run_round(&p, &LazyGreedy::new(), &parts, 9)
             .unwrap();
         assert_bit_identical(&out.solutions, &local.solutions);
+    }
+
+    #[test]
+    fn worker_stats_accumulate_completed_parts() {
+        let addr = spawn_impostor(60, usize::MAX, 0);
+        let backend = TcpBackend::new(60, vec![addr.clone()]).unwrap();
+        assert!(backend.worker_stats().is_empty(), "no parts dispatched yet");
+        let p = wire_problem(4);
+        let parts: Vec<Vec<u32>> =
+            (0..3).map(|i| (i * 20..(i + 1) * 20).collect()).collect();
+        backend.run_round(&p, &LazyGreedy::new(), &parts, 1).unwrap();
+        let stats = backend.worker_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].addr, addr);
+        assert_eq!(stats[0].parts, 3);
+        // the impostor reports zero evals/wall and default telemetry
+        assert_eq!(stats[0].oracle_evals, 0);
+        assert_eq!(stats[0].dataset_misses, 0);
     }
 
     #[test]

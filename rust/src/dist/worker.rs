@@ -31,9 +31,10 @@ use crate::constraints::Constraint;
 
 use crate::algorithms::Compressor as _;
 use crate::data::DatasetRef;
-use crate::dist::protocol::{recv_msg, send_msg, ProblemSpec, Request, Response};
+use crate::dist::protocol::{recv_msg, send_msg, ProblemSpec, Request, Response, Telemetry};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
+use crate::util::log;
 
 /// Worker process configuration.
 #[derive(Debug, Clone)]
@@ -79,7 +80,7 @@ pub fn spawn_in_process(cfg: WorkerConfig) -> Result<String> {
         .name(format!("hss-worker-{addr}"))
         .spawn(move || {
             if let Err(e) = serve_on(listener, &cfg) {
-                eprintln!("hss-worker({addr}): {e}");
+                log::error(&format!("hss-worker({addr}): {e}"));
             }
         })
         .map_err(|e| Error::Worker(format!("spawn in-process worker: {e}")))?;
@@ -100,14 +101,16 @@ fn serve_on(listener: TcpListener, cfg: &WorkerConfig) -> Result<()> {
         let stream = match stream {
             Ok(s) => s,
             Err(e) => {
-                eprintln!("hss-worker: accept failed: {e}");
+                log::warn(&format!("hss-worker: accept failed: {e}"));
                 continue;
             }
         };
         match serve_connection(stream, cfg, &mut cache) {
             Ok(ConnectionEnd::Shutdown) => return Ok(()),
-            Ok(ConnectionEnd::Disconnected) => {}
-            Err(e) => eprintln!("hss-worker: connection error: {e}"),
+            Ok(ConnectionEnd::Disconnected) => {
+                log::debug("hss-worker: coordinator disconnected");
+            }
+            Err(e) => log::warn(&format!("hss-worker: connection error: {e}")),
         }
     }
     Ok(())
@@ -220,6 +223,11 @@ fn serve_connection(
     // table dying with the stream is what makes re-interning after a
     // reconnect automatic instead of a coordination problem.
     let mut problems: HashMap<u64, ProblemSpec> = HashMap::new();
+    // Problem-id-table telemetry (protocol v5), connection-scoped like
+    // the table itself.
+    let mut problem_hits = 0u64;
+    let mut problem_misses = 0u64;
+    let mut problem_evictions = 0u64;
     loop {
         let msg = match recv_msg(&mut stream) {
             Ok(m) => m,
@@ -227,6 +235,10 @@ fn serve_connection(
             Err(Error::Io(_)) => return Ok(ConnectionEnd::Disconnected),
             Err(e) => return Err(e),
         };
+        // queue-wait anchor: everything between reading the frame and
+        // starting the compute (including injected straggle sleep) is
+        // worker-side queueing, reported in the v5 telemetry block
+        let t_recv = std::time::Instant::now();
         let request = match Request::from_json(&msg) {
             Ok(r) => r,
             Err(e) => {
@@ -236,7 +248,11 @@ fn serve_connection(
             }
         };
         let reply = match request {
-            Request::Hello => Response::Hello { capacity: cfg.capacity },
+            Request::Hello { clock_ms } => {
+                // echo the coordinator's trace clock so its spans and
+                // ours share a timeline (skew bounded by handshake RTT)
+                Response::Hello { capacity: cfg.capacity, clock_echo_ms: clock_ms }
+            }
             Request::Shutdown => {
                 send_msg(&mut stream, &Response::Bye.to_json()).ok();
                 return Ok(ConnectionEnd::Shutdown);
@@ -248,6 +264,7 @@ fn serve_connection(
                 if problems.len() >= MAX_PROBLEMS && !problems.contains_key(&id) {
                     if let Some(victim) = problems.keys().next().copied() {
                         problems.remove(&victim);
+                        problem_evictions += 1;
                     }
                 }
                 // re-defining an id overwrites it — the coordinator owns
@@ -262,22 +279,38 @@ fn serve_connection(
                     std::thread::sleep(std::time::Duration::from_millis(cfg.straggle_ms));
                 }
                 match problems.get(&problem_id) {
-                    Some(spec) => handle_compress(
-                        cfg.capacity,
-                        cache,
-                        spec,
-                        &compressor,
-                        &part,
-                        cap,
-                        seed,
-                    )
-                    .unwrap_or_else(|e| Response::Error { msg: e.to_string() }),
-                    None => Response::Error {
-                        msg: format!(
-                            "unknown problem id {problem_id} on this connection — \
-                             re-intern it with define-problem"
-                        ),
-                    },
+                    Some(spec) => {
+                        problem_hits += 1;
+                        let telemetry = Telemetry {
+                            queue_wait_ms: t_recv.elapsed().as_secs_f64() * 1e3,
+                            problem_hits,
+                            problem_misses,
+                            problem_evictions,
+                            // dataset counters filled after the cache
+                            // lookup inside handle_compress
+                            ..Telemetry::default()
+                        };
+                        handle_compress(
+                            cfg.capacity,
+                            cache,
+                            spec,
+                            &compressor,
+                            &part,
+                            cap,
+                            seed,
+                            telemetry,
+                        )
+                        .unwrap_or_else(|e| Response::Error { msg: e.to_string() })
+                    }
+                    None => {
+                        problem_misses += 1;
+                        Response::Error {
+                            msg: format!(
+                                "unknown problem id {problem_id} on this connection — \
+                                 re-intern it with define-problem"
+                            ),
+                        }
+                    }
                 }
             }
         };
@@ -285,6 +318,7 @@ fn serve_connection(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_compress(
     capacity: usize,
     cache: &mut DatasetCache,
@@ -293,6 +327,7 @@ fn handle_compress(
     part: &[u32],
     cap: usize,
     seed: u64,
+    mut telemetry: Telemetry,
 ) -> Result<Response> {
     if part.len() > capacity {
         return Err(Error::CapacityExceeded {
@@ -313,6 +348,10 @@ fn handle_compress(
     }
     let compressor = crate::dist::protocol::compressor_from_name(compressor_name)?;
     let problem = cache.problem(spec)?;
+    // cumulative gauges, read after this request's lookup so the
+    // coordinator's latest-value bookkeeping includes it
+    telemetry.dataset_hits = cache.dataset_hits;
+    telemetry.dataset_misses = cache.dataset_misses;
     problem.check_ids(part)?;
     let evals_before = problem.eval_count();
     let t0 = std::time::Instant::now();
@@ -322,6 +361,7 @@ fn handle_compress(
         value: solution.value,
         evals: problem.eval_count() - evals_before,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        telemetry,
     })
 }
 
@@ -354,9 +394,10 @@ mod tests {
         let (handle, addr) = spawn_worker(64);
         let mut stream = TcpStream::connect(&addr).unwrap();
 
-        protocol::send_msg(&mut stream, &Request::Hello.to_json()).unwrap();
+        // v5 handshake: the worker echoes the coordinator's clock
+        protocol::send_msg(&mut stream, &Request::Hello { clock_ms: 41.5 }.to_json()).unwrap();
         let hello = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
-        assert_eq!(hello, Response::Hello { capacity: 64 });
+        assert_eq!(hello, Response::Hello { capacity: 64, clock_echo_ms: 41.5 });
 
         let spec = ProblemSpec {
             dataset: DatasetSpec::Registry { name: "csn-2k".into(), seed: 42 },
@@ -404,11 +445,19 @@ mod tests {
         protocol::send_msg(&mut stream, &req.to_json()).unwrap();
         let resp = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
         match resp {
-            Response::Solution { items, value, evals, .. } => {
+            Response::Solution { items, value, evals, telemetry, .. } => {
                 assert_eq!(items.len(), 5);
                 assert!(items.iter().all(|&i| i < 50), "leaked items: {items:?}");
                 assert!(value > 0.0);
                 assert!(evals > 0, "worker must report oracle evals");
+                // v5 telemetry: first compress on this connection after
+                // one unknown-id miss; the dataset was a cold miss
+                assert!(telemetry.queue_wait_ms >= 0.0);
+                assert_eq!(telemetry.problem_hits, 1);
+                assert_eq!(telemetry.problem_misses, 1);
+                assert_eq!(telemetry.problem_evictions, 0);
+                assert_eq!(telemetry.dataset_misses, 1);
+                assert_eq!(telemetry.dataset_hits, 0);
                 // bit-identical to compressing locally
                 let local = crate::algorithms::LazyGreedy::new();
                 let p = spec.materialize().unwrap();
@@ -511,9 +560,9 @@ mod tests {
     fn bounded_problem_table_evicts_one_victim_and_hints_reintern() {
         let (handle, addr) = spawn_worker(64);
         let mut stream = TcpStream::connect(&addr).unwrap();
-        protocol::send_msg(&mut stream, &Request::Hello.to_json()).unwrap();
+        protocol::send_msg(&mut stream, &Request::Hello { clock_ms: 0.0 }.to_json()).unwrap();
         let hello = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
-        assert_eq!(hello, Response::Hello { capacity: 64 });
+        assert_eq!(hello, Response::Hello { capacity: 64, clock_echo_ms: 0.0 });
         let base = ProblemSpec {
             dataset: DatasetSpec::Registry { name: "csn-2k".into(), seed: 42 },
             objective: "exemplar".into(),
@@ -548,7 +597,13 @@ mod tests {
             };
             protocol::send_msg(&mut stream, &req.to_json()).unwrap();
             match Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap() {
-                Response::Solution { items, .. } => assert_eq!(items.len(), 3),
+                Response::Solution { items, telemetry, .. } => {
+                    assert_eq!(items.len(), 3);
+                    assert_eq!(
+                        telemetry.problem_evictions, 1,
+                        "v5 telemetry must surface the eviction"
+                    );
+                }
                 Response::Error { msg } => {
                     assert!(msg.contains("unknown problem id"), "{msg}");
                     assert!(msg.contains("define-problem"), "{msg}");

@@ -38,6 +38,7 @@
 //! | [`constraints`] | §3.2 hereditary | cardinality, knapsack, partition matroid, intersections |
 //! | [`analysis`] | Thm 3.3/3.5 | approximation-bound formulas |
 //! | [`dist`] | — (systems) | execution backends, wire protocol (`docs/PROTOCOL.md`) |
+//! | [`trace`] | — (systems) | span/event recorder, Chrome-trace export (`docs/OBSERVABILITY.md`) |
 //! | [`data`] | §4.1 Table 2 | dataset registry, synthetic generators, wire specs |
 //! | [`bench`] | §4 | table/figure report generators |
 //!
@@ -110,6 +111,7 @@ pub mod error;
 pub mod linalg;
 pub mod objectives;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 pub use error::{Error, Result};
@@ -129,7 +131,7 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::dist::{
         Backend, BackendChoice, FaultPlan, LocalBackend, PartEvent, RoundHandle,
-        SimBackend, TcpBackend,
+        SimBackend, TcpBackend, WorkerStats,
     };
     pub use crate::error::{Error, Result};
     pub use crate::objectives::{Objective, Oracle, Problem};

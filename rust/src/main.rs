@@ -31,12 +31,13 @@ use hss::dist::{worker, Backend as _, BackendChoice};
 use hss::error::{Error, Result};
 use hss::runtime::accel::XlaGreedy;
 use hss::util::cli::Args;
+use hss::util::log;
 
 fn main() {
     let code = match real_main() {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e}");
+            log::error(&e.to_string());
             1
         }
     };
@@ -45,6 +46,8 @@ fn main() {
 
 fn real_main() -> Result<()> {
     let args = Args::from_env()?;
+    // HSS_LOG first, --log-level wins (applies to every subcommand)
+    log::init(args.get("log-level"))?;
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args),
         Some("worker") => cmd_worker(&args),
@@ -113,7 +116,7 @@ fn print_run_help() {
     println!("  --no-engine            force the pure-rust oracle path");
     println!("  --backend B            local|tcp|sim");
     println!("  --workers H:P,H:P,...  tcp worker addresses (capacities are discovered");
-    println!("                         via the protocol-v4 handshake; a part only runs on");
+    println!("                         via the protocol-v5 handshake; a part only runs on");
     println!("                         a worker that can hold it)");
     println!("  --sim-loss N --sim-loss-prob P --sim-straggler-prob P");
     println!("  --sim-straggler-ms MS --sim-seed S");
@@ -123,6 +126,11 @@ fn print_run_help() {
     println!("                         r-th capacity profile, the last entry persists (e.g.");
     println!("                         '500,200x2;200x2;200' shrinks the fleet twice).");
     println!("                         Each PROFILE uses the --capacity grammar.");
+    println!("  --trace-out FILE       record per-part lifecycle spans and write them as");
+    println!("                         Chrome trace-event JSON (viewable in Perfetto or");
+    println!("                         chrome://tracing; format in docs/OBSERVABILITY.md)");
+    println!("  --log-level L          error|warn|info|debug (default warn; the HSS_LOG");
+    println!("                         environment variable is the fallback, the flag wins)");
 }
 
 fn print_worker_help() {
@@ -131,11 +139,13 @@ fn print_worker_help() {
     println!("  --listen ADDR     bind address (default 127.0.0.1:7070; port 0 = ephemeral,");
     println!("                    the real port is announced on stdout)");
     println!("  --capacity MU     this worker's fixed machine capacity µ (default 200).");
-    println!("                    The worker advertises µ in the protocol-v4 handshake;");
+    println!("                    The worker advertises µ in the protocol-v5 handshake;");
     println!("                    heterogeneous coordinators (`hss run --capacity 500,200,200`)");
     println!("                    dispatch each part only to a worker that can hold it.");
     println!("  --straggle-ms MS  artificial per-request latency (default 0) — straggler");
     println!("                    injection for dispatch benches and robustness experiments");
+    println!("  --log-level L     error|warn|info|debug (default warn; HSS_LOG env is the");
+    println!("                    fallback, the flag wins)");
     println!();
     println!("run-side grammars (see `hss run --help` and docs/PROTOCOL.md):");
     println!("  --capacity   {CAPACITY_GRAMMAR}");
@@ -246,6 +256,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         // run the pure oracle path end to end
         cfg.use_engine = false;
     }
+    // enable tracing before the backend touches any worker, so the
+    // trace epoch covers handshakes and every dispatch
+    let trace_out = args.get("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        hss::trace::enable();
+    }
     let backend = cfg.build_backend()?;
 
     let (problem, engine) = cfg.problem_with_engine()?;
@@ -264,6 +280,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         engine.is_some(),
     );
 
+    let run_start = std::time::Instant::now();
     let mut values = hss::util::stats::Summary::new();
     for trial in 0..cfg.trials {
         let seed = cfg.seed + trial as u64;
@@ -355,6 +372,47 @@ fn cmd_run(args: &Args) -> Result<()> {
             values.stddev(),
             cfg.trials
         );
+    }
+    // protocol-v5 run summary: per-worker utilization and straggler
+    // attribution (empty on backends without per-worker accounting)
+    let wstats = backend.worker_stats();
+    if !wstats.is_empty() {
+        let run_ms = run_start.elapsed().as_secs_f64() * 1e3;
+        println!("worker utilization over {run_ms:.0} ms:");
+        for w in &wstats {
+            let util = if run_ms > 0.0 { 100.0 * w.busy_ms / run_ms } else { 0.0 };
+            println!(
+                "  {:<21} parts={} evals={} busy={:.0}ms ({:.0}%) queueWait={:.1}ms \
+                 dataset={}h/{}m problems={}h/{}m/{}e",
+                w.addr,
+                w.parts,
+                w.oracle_evals,
+                w.busy_ms,
+                util,
+                w.queue_wait_ms,
+                w.dataset_hits,
+                w.dataset_misses,
+                w.problem_hits,
+                w.problem_misses,
+                w.problem_evictions
+            );
+        }
+    }
+    if let Some(path) = &trace_out {
+        hss::trace::disable();
+        let doc = hss::trace::export_chrome();
+        let events = doc
+            .get("traceEvents")
+            .and_then(hss::util::json::Json::as_arr)
+            .map(Vec::len)
+            .unwrap_or(0);
+        std::fs::write(path, doc.to_string())
+            .map_err(|e| Error::invalid(format!("--trace-out {path}: {e}")))?;
+        let dropped = hss::trace::dropped();
+        if dropped > 0 {
+            log::warn(&format!("trace ring buffer dropped {dropped} events"));
+        }
+        println!("trace: {events} events -> {path}");
     }
     if let Some(e) = &engine {
         let (calls, compiles, exec_ns, upload, hits) = e.stats().snapshot();

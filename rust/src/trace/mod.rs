@@ -1,0 +1,386 @@
+//! Hand-rolled distributed tracing: a thread-safe span/event recorder
+//! with Chrome trace-event export (no external dependencies, consistent
+//! with the offline vendored-only build).
+//!
+//! The coordinator and all three backends thread per-part lifecycle
+//! events through a single process-global recorder: round opens, part
+//! submissions, dispatch, execution, completions, requeues, machine
+//! losses and speculation begin/verify/recompute. Recording is **off by
+//! default** and costs one relaxed atomic load per call site when
+//! disabled; `hss run --trace-out trace.json` enables it and writes the
+//! buffer as Chrome trace-event JSON (the `{"traceEvents": [...]}`
+//! format), viewable in Perfetto or `chrome://tracing` with one track
+//! per worker plus a coordinator track. `docs/OBSERVABILITY.md`
+//! documents the format and track semantics.
+//!
+//! Design constraints:
+//!
+//! * **monotonic clock** — timestamps are microseconds since
+//!   [`enable`] (a [`Instant`] epoch), never wall-clock, so spans
+//!   cannot go backwards across NTP steps.
+//! * **bounded ring buffer** — at most [`MAX_EVENTS`] events are
+//!   retained (oldest dropped first, with a drop counter), so a
+//!   long-running traced job cannot grow without bound.
+//! * **determinism** — tracing observes the run and never feeds back
+//!   into it: the event *set* of a deterministic scenario is itself
+//!   deterministic (modulo timestamps), which is what the trace
+//!   regression tests assert.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Track name for coordinator-side events (round lifecycle, dispatch
+/// decisions, speculation). Worker tracks are named after the worker:
+/// a TCP worker's address, `local-<thread>`, or `sim-<machine>`.
+pub const COORDINATOR_TRACK: &str = "coordinator";
+
+/// Ring-buffer bound: the recorder retains at most this many events
+/// (oldest evicted first; see [`dropped`]).
+pub const MAX_EVENTS: usize = 1 << 16;
+
+/// One recorded argument value (shown in the viewer's detail pane).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+/// Event flavor: a span with a duration, or a zero-duration instant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A complete span (Chrome `ph: "X"`).
+    Span {
+        /// Duration in microseconds.
+        dur_us: u64,
+    },
+    /// A point event (Chrome `ph: "i"`).
+    Instant,
+}
+
+/// One recorded trace event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Track (Chrome thread) this event belongs to.
+    pub track: String,
+    /// Event name (a small fixed vocabulary — see `docs/OBSERVABILITY.md`).
+    pub name: &'static str,
+    /// Microseconds since [`enable`].
+    pub ts_us: u64,
+    pub kind: EventKind,
+    /// Viewer-visible arguments (part index, eval counts, …).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+struct Recorder {
+    epoch: Instant,
+    events: VecDeque<Event>,
+    dropped: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn recorder() -> &'static Mutex<Option<Recorder>> {
+    static R: OnceLock<Mutex<Option<Recorder>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(None))
+}
+
+/// Start (or restart) recording: resets the buffer and the epoch.
+pub fn enable() {
+    let mut r = recorder().lock().unwrap();
+    *r = Some(Recorder { epoch: Instant::now(), events: VecDeque::new(), dropped: 0 });
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Stop recording. The buffer is retained for [`export_chrome`] /
+/// [`snapshot`] until the next [`enable`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// Cheap check for call sites that want to skip argument construction
+/// entirely when tracing is off (one relaxed atomic load).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since [`enable`] (0 when tracing is disabled) — the
+/// coordinator's trace clock. Pair with [`span`] to time a region.
+pub fn now_us() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    let r = recorder().lock().unwrap();
+    r.as_ref().map(|rec| rec.epoch.elapsed().as_micros() as u64).unwrap_or(0)
+}
+
+/// The trace clock in milliseconds — what the coordinator sends as the
+/// protocol-v5 handshake `clock_ms` so worker-side timings can be
+/// aligned to the coordinator timeline (0.0 when tracing is disabled).
+pub fn clock_ms() -> f64 {
+    now_us() as f64 / 1e3
+}
+
+fn push(event: Event) {
+    let mut r = recorder().lock().unwrap();
+    if let Some(rec) = r.as_mut() {
+        if rec.events.len() >= MAX_EVENTS {
+            rec.events.pop_front();
+            rec.dropped += 1;
+        }
+        rec.events.push_back(event);
+    }
+}
+
+/// Record a point event.
+pub fn instant(track: &str, name: &'static str, args: Vec<(&'static str, ArgValue)>) {
+    if !enabled() {
+        return;
+    }
+    let ts_us = now_us();
+    push(Event { track: track.to_string(), name, ts_us, kind: EventKind::Instant, args });
+}
+
+/// Record a span that started at `start_us` (a prior [`now_us`]) and
+/// ends now.
+pub fn span(track: &str, name: &'static str, start_us: u64, args: Vec<(&'static str, ArgValue)>) {
+    if !enabled() {
+        return;
+    }
+    let end = now_us();
+    span_at(track, name, start_us, end.saturating_sub(start_us), args);
+}
+
+/// Record a span with explicit start and duration — used to synthesize
+/// worker-side execute spans from telemetry the response carried back
+/// (receipt-anchored: the span ends at receipt and extends `wall_ms`
+/// into the past, so it lands on the coordinator timeline without a
+/// shared clock).
+pub fn span_at(
+    track: &str,
+    name: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    args: Vec<(&'static str, ArgValue)>,
+) {
+    if !enabled() {
+        return;
+    }
+    push(Event {
+        track: track.to_string(),
+        name,
+        ts_us,
+        kind: EventKind::Span { dur_us },
+        args,
+    });
+}
+
+/// Clone the recorded events (test introspection).
+pub fn snapshot() -> Vec<Event> {
+    let r = recorder().lock().unwrap();
+    r.as_ref().map(|rec| rec.events.iter().cloned().collect()).unwrap_or_default()
+}
+
+/// Events evicted by the ring-buffer bound since [`enable`].
+pub fn dropped() -> u64 {
+    let r = recorder().lock().unwrap();
+    r.as_ref().map(|rec| rec.dropped).unwrap_or(0)
+}
+
+fn arg_to_json(v: &ArgValue) -> Json {
+    match v {
+        // u64 counters fit f64 exactly for any realistic trace; the
+        // viewer wants numbers, not strings
+        ArgValue::U64(x) => json::num(*x as f64),
+        ArgValue::F64(x) => json::num(*x),
+        ArgValue::Str(s) => json::s(s),
+    }
+}
+
+/// Export the buffer as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`): one `M` thread-name metadata record per
+/// track, `X` records for spans, `i` records for instants. Track ids
+/// are assigned in first-appearance order with the coordinator pinned
+/// to tid 0, so the coordinator track sorts first in the viewer.
+pub fn export_chrome() -> Json {
+    let events = snapshot();
+    let mut tracks: Vec<String> = vec![COORDINATOR_TRACK.to_string()];
+    for e in &events {
+        if !tracks.iter().any(|t| *t == e.track) {
+            tracks.push(e.track.clone());
+        }
+    }
+    let tid_of = |track: &str| tracks.iter().position(|t| t == track).unwrap() as f64;
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + tracks.len());
+    for (tid, name) in tracks.iter().enumerate() {
+        out.push(json::obj(vec![
+            ("name", json::s("thread_name")),
+            ("ph", json::s("M")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(tid as f64)),
+            ("args", json::obj(vec![("name", json::s(name))])),
+        ]));
+    }
+    for e in &events {
+        let args =
+            Json::Obj(e.args.iter().map(|(k, v)| (k.to_string(), arg_to_json(v))).collect());
+        let mut fields = vec![
+            ("name", json::s(e.name)),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(tid_of(&e.track))),
+            ("ts", json::num(e.ts_us as f64)),
+        ];
+        match &e.kind {
+            EventKind::Span { dur_us } => {
+                fields.push(("ph", json::s("X")));
+                fields.push(("dur", json::num(*dur_us as f64)));
+            }
+            EventKind::Instant => {
+                fields.push(("ph", json::s("i")));
+                // thread-scoped instant marker
+                fields.push(("s", json::s("t")));
+            }
+        }
+        fields.push(("args", args));
+        out.push(json::obj(fields));
+    }
+    json::obj(vec![("traceEvents", Json::Arr(out))])
+}
+
+/// `true` when every pair of spans on the same track is either disjoint
+/// or properly nested (one contains the other) — the well-formedness
+/// invariant the trace regression tests assert. Instants are ignored.
+pub fn spans_well_nested(events: &[Event]) -> bool {
+    let mut by_track: std::collections::BTreeMap<&str, Vec<(u64, u64)>> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        if let EventKind::Span { dur_us } = e.kind {
+            by_track.entry(&e.track).or_default().push((e.ts_us, e.ts_us + dur_us));
+        }
+    }
+    for spans in by_track.values() {
+        for (i, &(a0, a1)) in spans.iter().enumerate() {
+            for &(b0, b1) in spans.iter().skip(i + 1) {
+                let disjoint = a1 <= b0 || b1 <= a0;
+                let nested = (a0 <= b0 && b1 <= a1) || (b0 <= a0 && a1 <= b1);
+                if !disjoint && !nested {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The recorder is process-global; tests that enable it must not
+    /// interleave (cargo runs tests in parallel threads).
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static M: Mutex<()> = Mutex::new(());
+        M.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_recorder_drops_everything_and_reports_zero_time() {
+        let _g = lock();
+        disable();
+        // a stale buffer from an earlier enable() may exist; what
+        // matters is that new events are not recorded
+        let before = snapshot().len();
+        instant("coordinator", "noop", vec![]);
+        span("coordinator", "noop", 0, vec![]);
+        assert_eq!(snapshot().len(), before);
+        assert_eq!(now_us(), 0);
+        assert_eq!(clock_ms(), 0.0);
+    }
+
+    #[test]
+    fn records_spans_and_instants_with_args() {
+        let _g = lock();
+        enable();
+        let t0 = now_us();
+        instant("coordinator", "open_round", vec![("round", ArgValue::U64(0))]);
+        span(
+            "w1",
+            "execute",
+            t0,
+            vec![("part", ArgValue::U64(3)), ("wall_ms", ArgValue::F64(1.5))],
+        );
+        let events = snapshot();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].name, "open_round");
+        assert!(matches!(events[0].kind, EventKind::Instant));
+        assert_eq!(events[1].track, "w1");
+        assert!(matches!(events[1].kind, EventKind::Span { .. }));
+        assert_eq!(events[1].args[0], ("part", ArgValue::U64(3)));
+        disable();
+    }
+
+    #[test]
+    fn ring_buffer_drops_oldest_and_counts() {
+        let _g = lock();
+        enable();
+        for i in 0..(MAX_EVENTS + 10) {
+            instant("coordinator", "tick", vec![("i", ArgValue::U64(i as u64))]);
+        }
+        let events = snapshot();
+        assert_eq!(events.len(), MAX_EVENTS);
+        assert_eq!(dropped(), 10);
+        // the survivors are the newest events
+        assert_eq!(events[0].args[0], ("i", ArgValue::U64(10)));
+        disable();
+    }
+
+    #[test]
+    fn export_parses_back_with_tracks_and_phases() {
+        let _g = lock();
+        enable();
+        instant(COORDINATOR_TRACK, "open_round", vec![("round", ArgValue::U64(0))]);
+        span_at("worker-a", "execute", 100, 50, vec![("part", ArgValue::U64(0))]);
+        let text = export_chrome().to_string();
+        disable();
+        let back = Json::parse(&text).unwrap();
+        let evs = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 2 thread_name metadata records + 2 events
+        assert_eq!(evs.len(), 4);
+        let phases: Vec<&str> =
+            evs.iter().map(|e| e.get("ph").and_then(Json::as_str).unwrap()).collect();
+        assert_eq!(phases, vec!["M", "M", "i", "X"]);
+        // the coordinator is pinned to tid 0
+        assert_eq!(
+            evs[0].get("args").and_then(|a| a.get("name")).and_then(Json::as_str),
+            Some(COORDINATOR_TRACK)
+        );
+        assert_eq!(evs[0].get("tid").and_then(Json::as_f64), Some(0.0));
+        let x = &evs[3];
+        assert_eq!(x.get("ts").and_then(Json::as_f64), Some(100.0));
+        assert_eq!(x.get("dur").and_then(Json::as_f64), Some(50.0));
+    }
+
+    #[test]
+    fn well_nestedness_check_accepts_nesting_and_rejects_partial_overlap() {
+        let ev = |track: &str, ts: u64, dur: u64| Event {
+            track: track.into(),
+            name: "s",
+            ts_us: ts,
+            kind: EventKind::Span { dur_us: dur },
+            args: vec![],
+        };
+        // disjoint + properly nested on one track
+        assert!(spans_well_nested(&[ev("a", 0, 10), ev("a", 2, 3), ev("a", 20, 5)]));
+        // identical intervals count as nested
+        assert!(spans_well_nested(&[ev("a", 0, 10), ev("a", 0, 10)]));
+        // partial overlap on one track is rejected
+        assert!(!spans_well_nested(&[ev("a", 0, 10), ev("a", 5, 10)]));
+        // overlap across different tracks is fine
+        assert!(spans_well_nested(&[ev("a", 0, 10), ev("b", 5, 10)]));
+    }
+}

@@ -1,0 +1,161 @@
+//! Minimal leveled stderr logger (the offline build's substitute for
+//! `log`/`env_logger`).
+//!
+//! Four levels (error > warn > info > debug) behind one process-global
+//! atomic threshold; the default is [`Level::Warn`] so workers and the
+//! coordinator stay quiet unless something is actually wrong. The `hss`
+//! binary sets the threshold from `--log-level` (which wins) or the
+//! `HSS_LOG` environment variable. Dispatcher-thread events route
+//! through here: worker death and requeues at warn, stall detection at
+//! error, connect retries at debug.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::error::{Error, Result};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `--log-level` / `HSS_LOG` value.
+    pub fn parse(s: &str) -> Result<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(Error::invalid(format!(
+                "unknown log level '{other}' (expected error|warn|info|debug)"
+            ))),
+        }
+    }
+}
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// Set the global threshold: messages at `level` or more severe print.
+pub fn set_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current threshold.
+pub fn level() -> Level {
+    match THRESHOLD.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Initialize from `HSS_LOG` then an optional explicit override (the
+/// `--log-level` flag, which wins). Returns an error only for an
+/// explicit override that does not parse — a malformed env var is
+/// ignored rather than killing the process.
+pub fn init(flag: Option<&str>) -> Result<()> {
+    if let Ok(env) = std::env::var("HSS_LOG") {
+        if let Ok(l) = Level::parse(&env) {
+            set_level(l);
+        }
+    }
+    if let Some(s) = flag {
+        set_level(Level::parse(s)?);
+    }
+    Ok(())
+}
+
+/// `true` when a message at `l` would print — callers can skip building
+/// expensive messages.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= THRESHOLD.load(Ordering::Relaxed)
+}
+
+fn emit(l: Level, msg: &str) {
+    if enabled(l) {
+        eprintln!("hss[{}] {msg}", l.tag());
+    }
+}
+
+/// Log at error level.
+pub fn error(msg: &str) {
+    emit(Level::Error, msg);
+}
+
+/// Log at warn level.
+pub fn warn(msg: &str) {
+    emit(Level::Warn, msg);
+}
+
+/// Log at info level.
+pub fn info(msg: &str) {
+    emit(Level::Info, msg);
+}
+
+/// Log at debug level.
+pub fn debug(msg: &str) {
+    emit(Level::Debug, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// The threshold is process-global; tests that mutate it serialize.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static M: Mutex<()> = Mutex::new(());
+        M.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("error").unwrap(), Level::Error);
+        assert_eq!(Level::parse("WARN").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("warning").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("Info").unwrap(), Level::Info);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert!(Level::parse("verbose").is_err());
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Debug);
+    }
+
+    #[test]
+    fn threshold_gates_levels() {
+        let _g = lock();
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(prev);
+    }
+
+    #[test]
+    fn explicit_flag_overrides_and_bad_flag_errors() {
+        let _g = lock();
+        let prev = level();
+        init(Some("debug")).unwrap();
+        assert_eq!(level(), Level::Debug);
+        assert!(init(Some("nope")).is_err());
+        set_level(prev);
+    }
+}

@@ -96,7 +96,7 @@ fn worker_help_documents_capacity_advertisement_and_grammars() {
     assert!(text.contains("--listen"), "{text}");
     // the worker's role in the handshake is documented…
     assert!(text.contains("advertises"), "{text}");
-    assert!(text.contains("protocol-v4"), "{text}");
+    assert!(text.contains("protocol-v5"), "{text}");
     // …and the run-side grammars are cross-referenced verbatim
     for needle in CAPACITY_FORMS.iter().chain(CONSTRAINT_FORMS) {
         assert!(

@@ -95,6 +95,29 @@ fn tcp_backend_matches_local_backend_exactly() {
     assert_eq!(remote.requeued_parts, 0, "healthy workers must not requeue");
     // remote oracle work is folded into the shared eval counter
     assert!(remote.oracle_evals > 0, "tcp run reported no oracle evals");
+    // protocol-v5 accounting: workers fold their evals in before the
+    // part completion event, so the per-round deltas — not just the
+    // total — are identical local-vs-tcp
+    assert_eq!(remote.per_round.len(), local.per_round.len());
+    for (r, l) in remote.per_round.iter().zip(&local.per_round) {
+        assert_eq!(
+            r.oracle_evals, l.oracle_evals,
+            "round {}: per-round oracle evals differ local vs tcp",
+            r.round
+        );
+    }
+
+    // v5 telemetry: the backend accumulated per-worker utilization
+    let stats = tcp.worker_stats();
+    assert_eq!(stats.len(), 2, "both workers should have completed parts");
+    assert!(stats.iter().all(|w| w.parts > 0 && w.oracle_evals > 0));
+    assert_eq!(
+        stats.iter().map(|w| w.oracle_evals).sum::<u64>(),
+        remote.oracle_evals,
+        "worker-reported evals must sum to the run total"
+    );
+    // every part's spec/dataset lookup after the first is a cache hit
+    assert!(stats.iter().all(|w| w.dataset_misses >= 1));
 
     tcp.shutdown_workers();
 }

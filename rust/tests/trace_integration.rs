@@ -1,0 +1,126 @@
+//! Trace regression suite: a deterministic SimBackend scenario with
+//! scripted faults must produce a deterministic trace — the same event
+//! set on every run (modulo timestamps), well-nested spans per track,
+//! and a Chrome export that parses back through `util::json` with the
+//! structure documented in `docs/OBSERVABILITY.md`.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use hss::coordinator::TreeBuilder;
+use hss::data::registry;
+use hss::dist::{FaultPlan, SimBackend};
+use hss::objectives::Problem;
+use hss::trace::{self, Event};
+use hss::util::json::Json;
+
+/// The trace recorder is process-global; tests that enable it must not
+/// interleave (cargo runs tests in parallel threads).
+fn lock() -> MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    M.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One traced run of the acceptance fault scenario (one machine lost
+/// per round, seeded stragglers); returns the recorded events, leaving
+/// the buffer in place for export.
+fn traced_faulted_run() -> Vec<Event> {
+    let ds = registry::load("csn-2k", 4).unwrap();
+    let problem = Problem::exemplar(ds, 20, 4);
+    let sim = Arc::new(SimBackend::new(150).with_faults(FaultPlan {
+        machine_loss_per_round: 1,
+        straggler_prob: 0.25,
+        straggler_delay_ms: 30.0,
+        ..FaultPlan::default()
+    }));
+    trace::enable();
+    let res = TreeBuilder::new(150).backend(sim).build().run(&problem, 6).unwrap();
+    trace::disable();
+    assert!(!res.best.items.is_empty());
+    assert!(res.rounds >= 2, "scenario should be multi-round");
+    assert_eq!(trace::dropped(), 0, "scenario must fit the ring buffer");
+    trace::snapshot()
+}
+
+/// Timestamp-free identity of an event: track, name, and recorded args
+/// (part indices, eval counts, reshipped ids — all deterministic in the
+/// sim). Sorted multisets of these must match across identical runs.
+fn event_set(events: &[Event]) -> Vec<(String, &'static str, String)> {
+    let mut set: Vec<_> =
+        events.iter().map(|e| (e.track.clone(), e.name, format!("{:?}", e.args))).collect();
+    set.sort();
+    set
+}
+
+#[test]
+fn faulted_sim_trace_is_deterministic_and_well_nested() {
+    let _g = lock();
+    let a = traced_faulted_run();
+    let b = traced_faulted_run();
+    assert_eq!(
+        event_set(&a),
+        event_set(&b),
+        "identical runs must record the identical event set"
+    );
+    assert!(trace::spans_well_nested(&a), "spans overlap partially on a track");
+
+    // the scripted faults surface as lifecycle events…
+    assert!(a.iter().any(|e| e.name == "machine.lost"), "scripted loss not traced");
+    assert!(a.iter().any(|e| e.name == "part.requeued"), "requeue not traced");
+    // …alongside the ordinary round/part vocabulary
+    for name in ["open_round", "submit_part", "close_round", "part.done", "round"] {
+        assert!(
+            a.iter().any(|e| e.track == trace::COORDINATOR_TRACK && e.name == name),
+            "missing coordinator event {name:?}"
+        );
+    }
+    assert!(
+        a.iter().any(|e| e.track.starts_with("sim-") && e.name == "execute"),
+        "no execute span on a sim machine track"
+    );
+}
+
+#[test]
+fn chrome_export_parses_back_with_documented_structure() {
+    let _g = lock();
+    traced_faulted_run();
+    let text = trace::export_chrome().to_string();
+    let back = Json::parse(&text).expect("exported trace must be valid JSON");
+    let evs = back.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!evs.is_empty());
+
+    // M records map tid -> track label; the coordinator is pinned to 0
+    let mut tid_name: Vec<(f64, String)> = Vec::new();
+    for e in evs {
+        let ph = e.get("ph").and_then(Json::as_str).expect("every record has ph");
+        match ph {
+            "M" => {
+                let tid = e.get("tid").and_then(Json::as_f64).unwrap();
+                let name = e
+                    .get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .to_string();
+                tid_name.push((tid, name));
+            }
+            "X" => {
+                assert!(e.get("dur").and_then(Json::as_f64).is_some(), "span without dur");
+            }
+            "i" => {
+                assert_eq!(e.get("s").and_then(Json::as_str), Some("t"));
+            }
+            other => panic!("unknown phase {other:?}"),
+        }
+        if ph != "M" {
+            assert!(e.get("ts").and_then(Json::as_f64).is_some(), "event without ts");
+        }
+    }
+    assert!(
+        tid_name.contains(&(0.0, trace::COORDINATOR_TRACK.to_string())),
+        "coordinator track must be tid 0: {tid_name:?}"
+    );
+    assert!(
+        tid_name.iter().any(|(tid, name)| *tid > 0.0 && name.starts_with("sim-")),
+        "sim machine tracks missing: {tid_name:?}"
+    );
+}
