@@ -106,7 +106,9 @@ pub(crate) fn lazy_greedy_over(
     }
     impl PartialEq for Entry {
         fn eq(&self, other: &Self) -> bool {
-            self.ub == other.ub && self.j == other.j
+            // consistent with Ord below (== on f64 would disagree with
+            // total_cmp on NaN and signed zero)
+            self.cmp(other) == CmpOrd::Equal
         }
     }
     impl Eq for Entry {}
@@ -117,10 +119,13 @@ pub(crate) fn lazy_greedy_over(
     }
     impl Ord for Entry {
         fn cmp(&self, other: &Self) -> CmpOrd {
-            // max-heap on ub, then min on index (first-max tie-break)
+            // max-heap on ub, then min on index (first-max tie-break).
+            // total_cmp keeps the heap order coherent even if an oracle
+            // returns NaN: the old partial_cmp().unwrap_or(Equal) made
+            // NaN compare equal to *everything*, which violates
+            // transitivity and silently scrambles the heap.
             self.ub
-                .partial_cmp(&other.ub)
-                .unwrap_or(CmpOrd::Equal)
+                .total_cmp(&other.ub)
                 .then_with(|| other.j.cmp(&self.j))
         }
     }
@@ -233,6 +238,25 @@ mod tests {
             }
         }
         Solution { value: oracle.value(), items: selected }
+    }
+
+    #[test]
+    fn nan_gain_is_deterministic_and_surfaces_in_the_value() {
+        // Regression for the heap comparator (the bug class re-fixed in
+        // PRs 2/4/5): partial-comparison fallbacks made a NaN gain
+        // compare "equal" to everything, which breaks transitivity and
+        // scrambles the heap nondeterministically. Under total_cmp a
+        // positive NaN outranks every finite gain, so the poisoned item
+        // is selected deterministically and the NaN *surfaces* in the
+        // solution value instead of silently reordering unrelated items.
+        let weights = vec![1.0, f64::NAN, 3.0, 2.0];
+        let p = Problem::modular(weights, 2, 0);
+        let cands: Vec<u32> = (0..4).collect();
+        let a = lazy_greedy_core(&p, &cands, None).unwrap();
+        let b = lazy_greedy_core(&p, &cands, None).unwrap();
+        assert_eq!(a.items, b.items, "NaN gains must not make selection nondeterministic");
+        assert_eq!(a.items, vec![1, 2], "NaN-gain item pops first, then the best finite gain");
+        assert!(a.value.is_nan(), "the poisoned objective must surface, got {}", a.value);
     }
 
     #[test]

@@ -90,6 +90,7 @@ impl Table {
     }
 
     pub fn print(&self) {
+        // lint:allow(logging): bench tables are the harness's primary stdout artifact (CI diffs them), not diagnostics for the leveled logger
         print!("{}", self.render());
     }
 

@@ -142,6 +142,8 @@ impl CapacityProfile {
 
     /// Smallest machine capacity (the last class).
     pub fn min_capacity(&self) -> usize {
+        // invariant: construction rejects empty profiles, so caps is
+        // never empty
         *self.caps.last().unwrap()
     }
 

@@ -68,42 +68,56 @@ impl Metrics {
     }
 
     pub fn record_round(&self, r: RoundMetrics) {
+        // relaxed: monotone statistics counters — no other memory is
+        // published through them, and the totals are only read after the
+        // run's rounds have completed (round completion itself
+        // synchronizes via the rounds mutex below / backend joins)
         self.bytes_shuffled.fetch_add(r.bytes_shuffled, Ordering::Relaxed);
         self.rows_resident_bytes
-            .fetch_add(r.rows_resident_bytes, Ordering::Relaxed);
+            .fetch_add(r.rows_resident_bytes, Ordering::Relaxed); // relaxed: see above
         self.machines_provisioned
-            .fetch_add(r.machines as u64, Ordering::Relaxed);
+            .fetch_add(r.machines as u64, Ordering::Relaxed); // relaxed: see above
         self.parts_requeued
-            .fetch_add(r.requeued_parts as u64, Ordering::Relaxed);
+            .fetch_add(r.requeued_parts as u64, Ordering::Relaxed); // relaxed: see above
+        // relaxed: see above — independent monotone counter
         self.spec_bytes.fetch_add(r.spec_bytes, Ordering::Relaxed);
+        // invariant: the rounds mutex cannot be poisoned — the only
+        // critical sections are push/clone/len, none of which panic
         self.rounds.lock().unwrap().push(r);
     }
 
     pub fn rounds(&self) -> Vec<RoundMetrics> {
+        // invariant: push/clone/len critical sections never panic
         self.rounds.lock().unwrap().clone()
     }
 
     pub fn num_rounds(&self) -> usize {
+        // invariant: push/clone/len critical sections never panic
         self.rounds.lock().unwrap().len()
     }
 
     pub fn total_bytes_shuffled(&self) -> u64 {
+        // relaxed: monotone counter read after the recording rounds end
         self.bytes_shuffled.load(Ordering::Relaxed)
     }
 
     pub fn total_rows_resident_bytes(&self) -> u64 {
+        // relaxed: monotone counter read after the recording rounds end
         self.rows_resident_bytes.load(Ordering::Relaxed)
     }
 
     pub fn total_machines(&self) -> u64 {
+        // relaxed: monotone counter read after the recording rounds end
         self.machines_provisioned.load(Ordering::Relaxed)
     }
 
     pub fn total_requeued(&self) -> u64 {
+        // relaxed: monotone counter read after the recording rounds end
         self.parts_requeued.load(Ordering::Relaxed)
     }
 
     pub fn total_spec_bytes(&self) -> u64 {
+        // relaxed: monotone counter read after the recording rounds end
         self.spec_bytes.load(Ordering::Relaxed)
     }
 }

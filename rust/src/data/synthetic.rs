@@ -203,7 +203,7 @@ mod tests {
         let ds = csn_like(5_000, 4);
         let norms: Vec<f64> = (0..ds.n).map(|i| sq_norm(ds.row(i as u32)).sqrt()).collect();
         let mean = norms.iter().sum::<f64>() / norms.len() as f64;
-        let max = norms.iter().cloned().fold(0.0, f64::max);
+        let max = norms.iter().copied().max_by(f64::total_cmp).unwrap_or(0.0);
         assert!(max > 2.0 * mean, "expected heavy tail: max {max} mean {mean}");
     }
 

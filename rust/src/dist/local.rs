@@ -59,6 +59,9 @@ struct LocalSink {
 impl RoundSink for LocalSink {
     fn submit(&mut self, idx: usize, part: Vec<u32>, seed: u64) -> Result<()> {
         {
+            // invariant: queue critical sections only push/pop/flag —
+            // compression runs outside the lock, so no holder panics
+            // and the mutex is never poisoned
             let mut q = self.round.queue.lock().unwrap();
             q.tasks.push_back((idx, part, seed));
         }
@@ -74,6 +77,7 @@ impl RoundSink for LocalSink {
     }
 
     fn close(&mut self) -> Result<()> {
+        // invariant: non-panicking critical section (see submit)
         let mut q = self.round.queue.lock().unwrap();
         q.closed = true;
         drop(q);
@@ -82,6 +86,7 @@ impl RoundSink for LocalSink {
     }
 
     fn abort(&mut self) {
+        // invariant: non-panicking critical section (see submit)
         let mut q = self.round.queue.lock().unwrap();
         // discard queued work; in-flight results go to a channel whose
         // receiver is gone, which stops the workers
@@ -165,6 +170,7 @@ impl Backend for LocalBackend {
 fn worker_loop(round: Arc<LocalRound>, tx: mpsc::Sender<Result<PartEvent>>, thread_id: usize) {
     loop {
         let task = {
+            // invariant: non-panicking critical section (see submit)
             let mut q = round.queue.lock().unwrap();
             loop {
                 if let Some(t) = q.tasks.pop_front() {
@@ -173,6 +179,8 @@ fn worker_loop(round: Arc<LocalRound>, tx: mpsc::Sender<Result<PartEvent>>, thre
                 if q.closed {
                     break None;
                 }
+                // invariant: wait() re-acquires the same never-poisoned
+                // queue mutex
                 q = round.cv.wait(q).unwrap();
             }
         };

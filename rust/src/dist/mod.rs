@@ -451,6 +451,8 @@ impl RoundSession {
                 vec![("parts", trace::ArgValue::U64(self.submitted as u64))],
             );
         }
+        // invariant: rx is populated at construction and taken exactly
+        // once, here — close() consumes self
         let rx = self.rx.take().expect("session channel taken before close");
         Ok(RoundHandle::new(rx, self.submitted))
     }
@@ -734,6 +736,8 @@ impl SpecInterner {
 
     pub fn intern(&self, p: &Problem) -> Result<InternedSpec> {
         let key = ProblemKey::of(p);
+        // invariant: interner critical sections only compare keys and
+        // clone Arcs — they cannot panic, so the mutex is never poisoned
         let mut entries = self.entries.lock().unwrap();
         if let Some(e) = entries.iter().find(|e| e.key.matches(&key)) {
             return Ok(InternedSpec {

@@ -166,6 +166,9 @@ impl SimBackend {
     /// Rewind the capacity schedule to round 0, so the next run replays
     /// the scripted fleet evolution from the start.
     pub fn reset_schedule(&self) {
+        // relaxed: rounds advance strictly from the coordinator thread
+        // (open/close are &self but serial per run); the counter carries
+        // no other state
         self.rounds_run.store(0, Ordering::Relaxed);
     }
 
@@ -196,6 +199,7 @@ impl Backend for SimBackend {
         if self.capacity_schedule.is_empty() {
             return self.profile.clone();
         }
+        // relaxed: read on the coordinator thread that also advances it
         let r = self.rounds_run.load(Ordering::Relaxed);
         self.capacity_schedule[r.min(self.capacity_schedule.len() - 1)].clone()
     }
@@ -228,6 +232,9 @@ impl Backend for SimBackend {
                 interned.spec.constraint.to_json().to_string(),
             );
             let (ds, constraint) = {
+                // invariant: wire_memo critical sections only clone Arcs
+                // and compare keys — they cannot panic, so the mutex is
+                // never poisoned
                 let mut memo = self.wire_memo.lock().unwrap();
                 match &*memo {
                     Some((k, ds, c)) if *k == key => (ds.clone(), c.clone()),
@@ -305,7 +312,7 @@ impl RoundSink for SimSink {
             // the scripted fleet schedule advances only when a round is
             // actually sealed for execution — an aborted speculation or
             // a failed submission must not consume a scheduled fleet
-            self.rounds_run.fetch_add(1, Ordering::Relaxed);
+            self.rounds_run.fetch_add(1, Ordering::Relaxed); // relaxed: coordinator-thread counter
         }
         Ok(())
     }
@@ -443,6 +450,9 @@ impl SimRound {
                 // last part reports must see every oracle call
                 if let Some(evals) = &self.fold_evals {
                     let now = self.problem.eval_count();
+                    // relaxed: the channel send below is the publishing
+                    // edge — its internal synchronization makes this
+                    // fold visible to whoever receives the Done event
                     evals.fetch_add(now - *folded, std::sync::atomic::Ordering::Relaxed);
                     *folded = now;
                 }

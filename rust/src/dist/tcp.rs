@@ -228,6 +228,32 @@ struct Fleet {
     cv: Condvar,
 }
 
+impl Fleet {
+    /// Acquire the fleet state, surviving mutex poisoning. If a peer
+    /// dispatcher panicked while holding the lock, cascading that panic
+    /// here would kill the remaining dispatchers and strand every open
+    /// round with no event sender — a silent coordinator hang. The
+    /// state stays structurally sound under poison (a panicking holder
+    /// can at worst leave one job's in_flight count high, which the
+    /// stall detector eventually converts into a round error), so the
+    /// surviving dispatchers keep draining work instead.
+    fn lock(&self) -> std::sync::MutexGuard<'_, FleetState> {
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Condvar wait with the same poison policy as [`Fleet::lock`].
+    fn wait<'a>(
+        &'a self,
+        guard: std::sync::MutexGuard<'a, FleetState>,
+    ) -> std::sync::MutexGuard<'a, FleetState> {
+        self.cv
+            .wait(guard)
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
 /// Execution backend over real worker processes at `host:port` addresses.
 pub struct TcpBackend {
     profile: CapacityProfile,
@@ -288,7 +314,7 @@ impl TcpBackend {
 
     /// Addresses this backend was configured with.
     pub fn worker_addrs(&self) -> Vec<String> {
-        let st = self.fleet.state.lock().unwrap();
+        let st = self.fleet.lock();
         st.slots.iter().map(|s| s.addr.clone()).collect()
     }
 
@@ -296,11 +322,11 @@ impl TcpBackend {
     /// orderly teardown paths and tests). Blocks until the dispatcher
     /// threads have exited.
     pub fn shutdown_workers(&self) {
-        let mut st = self.fleet.state.lock().unwrap();
+        let mut st = self.fleet.lock();
         st.shutdown = Some(ShutdownKind::Workers);
         self.fleet.cv.notify_all();
         while st.dispatchers_alive > 0 {
-            st = self.fleet.cv.wait(st).unwrap();
+            st = self.fleet.wait(st);
         }
     }
 }
@@ -309,7 +335,7 @@ impl Drop for TcpBackend {
     fn drop(&mut self) {
         // Wake parked dispatchers so they exit and close their worker
         // connections; don't block the dropping thread on it.
-        let mut st = self.fleet.state.lock().unwrap();
+        let mut st = self.fleet.lock();
         if st.shutdown.is_none() {
             st.shutdown = Some(ShutdownKind::Quiet);
         }
@@ -329,7 +355,7 @@ struct TcpRoundSink {
 impl RoundSink for TcpRoundSink {
     fn submit(&mut self, idx: usize, part: Vec<u32>, seed: u64) -> Result<()> {
         let cap = self.profile.virtual_capacity(idx);
-        let mut st = self.fleet.state.lock().unwrap();
+        let mut st = self.fleet.lock();
         match st.jobs.iter_mut().find(|j| j.epoch == self.epoch) {
             Some(job) => {
                 job.queue.push_back(PartTask { idx, part, cap, seed });
@@ -352,7 +378,7 @@ impl RoundSink for TcpRoundSink {
             return Ok(());
         }
         self.open = false;
-        let mut st = self.fleet.state.lock().unwrap();
+        let mut st = self.fleet.lock();
         if let Some(pos) = st.jobs.iter().position(|j| j.epoch == self.epoch) {
             let complete = {
                 let job = &mut st.jobs[pos];
@@ -371,7 +397,7 @@ impl RoundSink for TcpRoundSink {
             return;
         }
         self.open = false;
-        let mut st = self.fleet.state.lock().unwrap();
+        let mut st = self.fleet.lock();
         if let Some(pos) = st.jobs.iter().position(|j| j.epoch == self.epoch) {
             // queued parts are discarded; in-flight replies find the
             // job gone (epoch lookup) and are dropped on arrival
@@ -383,6 +409,7 @@ impl RoundSink for TcpRoundSink {
 
 impl Backend for TcpBackend {
     fn name(&self) -> &'static str {
+        // lint:allow(protocol-doc): backend display name for CLI/bench output, not a wire or trace token
         "tcp"
     }
 
@@ -391,7 +418,7 @@ impl Backend for TcpBackend {
     }
 
     fn worker_stats(&self) -> Vec<WorkerStats> {
-        let st = self.fleet.state.lock().unwrap();
+        let st = self.fleet.lock();
         // BTreeMap iteration → sorted by worker address
         st.stats.values().cloned().collect()
     }
@@ -406,7 +433,7 @@ impl Backend for TcpBackend {
         let interned = self.interner.intern(problem)?;
         let comp_name = compressor_wire_name(compressor)?;
         let (tx, rx) = mpsc::channel();
-        let mut st = self.fleet.state.lock().unwrap();
+        let mut st = self.fleet.lock();
         if st.shutdown.is_some() {
             return Err(Error::invalid("tcp backend is shut down"));
         }
@@ -500,8 +527,9 @@ fn check_stall(st: &mut FleetState) {
         match msg {
             Some(m) => {
                 log::error(&format!("round stalled: {m}"));
-                let job = st.jobs.remove(pos).unwrap();
-                let _ = job.ctx.tx.send(Err(Error::Transport(m)));
+                if let Some(job) = st.jobs.remove(pos) {
+                    let _ = job.ctx.tx.send(Err(Error::Transport(m)));
+                }
                 // the next job shifted into `pos`; re-examine it
             }
             None => pos += 1,
@@ -636,7 +664,7 @@ fn dispatch_part(conn: &mut WorkerConn, ctx: &RoundCtx, task: &PartTask) -> (Wir
 /// in flight, exits on shutdown or when its worker dies mid-flight.
 fn dispatcher(fleet: Arc<Fleet>, id: usize) {
     let mut conn: Option<WorkerConn> = None;
-    let mut st = fleet.state.lock().unwrap();
+    let mut st = fleet.lock();
     loop {
         // decide under the lock… (reborrow the guard once so the
         // decision can take disjoint field borrows of the state)
@@ -651,20 +679,26 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                 Step::Park
             } else if conn.is_none() {
                 Step::Connect(stx.slots[id].addr.clone())
-            } else {
-                let my_cap = conn.as_ref().unwrap().capacity;
+            } else if let Some(my) = conn.as_ref() {
+                let my_cap = my.capacity;
                 let mut claimed = None;
                 for job in stx.jobs.iter_mut() {
                     if let Some(pos) =
                         job.queue.iter().position(|t| t.part.len() <= my_cap)
                     {
-                        let task = job.queue.remove(pos).unwrap();
-                        job.in_flight += 1;
-                        claimed = Some(Step::Dispatch(task, Arc::clone(&job.ctx), job.epoch));
+                        if let Some(task) = job.queue.remove(pos) {
+                            job.in_flight += 1;
+                            claimed =
+                                Some(Step::Dispatch(task, Arc::clone(&job.ctx), job.epoch));
+                        }
                         break;
                     }
                 }
                 claimed.unwrap_or(Step::Park)
+            } else {
+                // conn.is_none() is handled by the Connect arm above, so
+                // this is unreachable — parking is the safe fallback
+                Step::Park
             }
         };
 
@@ -677,13 +711,13 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                 // it). Before parking, make sure a part that fits NO
                 // live worker fails its round instead of hanging it.
                 check_stall(&mut st);
-                st = fleet.cv.wait(st).unwrap();
+                st = fleet.wait(st);
             }
             Step::Connect(addr) => {
                 let epoch = st.epoch;
                 drop(st);
                 let attempt = WorkerConn::connect(&addr);
-                st = fleet.state.lock().unwrap();
+                st = fleet.lock();
                 match attempt {
                     Ok(c) => {
                         // register the capacity the moment the handshake
@@ -715,9 +749,18 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
             Step::Dispatch(task, ctx, epoch) => {
                 drop(st);
                 let t0 = trace::now_us();
-                let (outcome, spec_shipped) =
-                    dispatch_part(conn.as_mut().unwrap(), &ctx, &task);
-                st = fleet.state.lock().unwrap();
+                let (outcome, spec_shipped) = match conn.as_mut() {
+                    Some(c) => dispatch_part(c, &ctx, &task),
+                    // Dispatch is only decided while conn is Some; if
+                    // that invariant ever breaks, degrade to the
+                    // lost-worker path (the part requeues) instead of
+                    // panicking a dispatcher mid-fleet.
+                    None => (
+                        WireOutcome::Lost("dispatcher lost its connection".into()),
+                        false,
+                    ),
+                };
+                st = fleet.lock();
                 if spec_shipped {
                     // spec-byte telemetry rides the round's event
                     // stream, ahead of the part's own event
@@ -782,6 +825,9 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                         // fold remote oracle work in BEFORE announcing
                         // completion, so a consumer reading the shared
                         // counter at the last event sees all of it
+                        // relaxed: the Done send below is the publishing
+                        // edge — channel synchronization makes the fold
+                        // visible to whoever receives the event
                         ctx.evals.fetch_add(evals, Ordering::Relaxed);
                         let _ = ctx.tx.send(Ok(PartEvent::Done {
                             part: task.idx,
@@ -846,7 +892,7 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                     if let Some(mut c) = c {
                         let _ = c.roundtrip(&Request::Shutdown);
                     }
-                    st = fleet.state.lock().unwrap();
+                    st = fleet.lock();
                     st.slots[id].dead = true;
                 }
                 break;

@@ -63,6 +63,7 @@ pub fn serve(cfg: &WorkerConfig) -> Result<()> {
     let local = listener.local_addr()?;
     // Discovery line for launchers/tests; flush because stdout is
     // block-buffered when piped.
+    // lint:allow(logging): the listen line is the worker CLI's machine-readable contract — launchers and tests parse it off stdout, so it must not go through the leveled logger
     println!("hss-worker listening on {local} (capacity {})", cfg.capacity);
     std::io::stdout().flush().ok();
     serve_on(listener, cfg)
@@ -160,24 +161,30 @@ impl DatasetCache {
 
     fn problem(&mut self, spec: &ProblemSpec) -> Result<Problem> {
         let key = spec.dataset.cache_key();
-        if self.datasets.contains_key(&key) {
-            self.dataset_hits += 1;
-        } else {
-            self.dataset_misses += 1;
-            if self.datasets.len() >= Self::MAX_DATASETS {
-                if let Some(victim) = self.admitted.pop() {
-                    self.datasets.remove(&victim);
-                    // drop only the victim's constraints; survivors keep
-                    // their O(n·d) tables
-                    self.constraints
-                        .retain(|k, _| !(k.0 == victim.0 && k.1 == victim.1));
-                }
+        // hit/miss branches each produce the Arc directly — no
+        // post-insert re-lookup (and no unwrap on it) needed
+        let ds = match self.datasets.get(&key) {
+            Some(ds) => {
+                self.dataset_hits += 1;
+                ds.clone()
             }
-            let ds = spec.dataset.load()?;
-            self.datasets.insert(key.clone(), ds);
-            self.admitted.push(key.clone());
-        }
-        let ds = self.datasets.get(&key).unwrap().clone();
+            None => {
+                self.dataset_misses += 1;
+                if self.datasets.len() >= Self::MAX_DATASETS {
+                    if let Some(victim) = self.admitted.pop() {
+                        self.datasets.remove(&victim);
+                        // drop only the victim's constraints; survivors keep
+                        // their O(n·d) tables
+                        self.constraints
+                            .retain(|k, _| !(k.0 == victim.0 && k.1 == victim.1));
+                    }
+                }
+                let ds = spec.dataset.load()?;
+                self.datasets.insert(key.clone(), ds.clone());
+                self.admitted.push(key.clone());
+                ds
+            }
+        };
         // Memoize only generator-spec'd constraints: their JSON key is a
         // few bytes and their build is the O(n·d) cost worth saving. For
         // explicit tables the key itself would be O(n) per request and

@@ -41,6 +41,7 @@
 //! | [`trace`] | — (systems) | span/event recorder, Chrome-trace export (`docs/OBSERVABILITY.md`) |
 //! | [`data`] | §4.1 Table 2 | dataset registry, synthetic generators, wire specs |
 //! | [`bench`] | §4 | table/figure report generators |
+//! | [`lint`] | — (systems) | repo static analysis, `hss lint` (`docs/STATIC_ANALYSIS.md`) |
 //!
 //! ## Distributed execution
 //!
@@ -109,6 +110,7 @@ pub mod data;
 pub mod dist;
 pub mod error;
 pub mod linalg;
+pub mod lint;
 pub mod objectives;
 pub mod runtime;
 pub mod trace;

@@ -1,0 +1,172 @@
+//! `hss lint` — a dependency-free static-analysis pass over the repo's
+//! own sources (`rust/src/**` and `benches/**`).
+//!
+//! The repo hand-rolls concurrent machinery (condvar dispatcher threads,
+//! a relaxed-atomic trace recorder, speculative dispatch that must stay
+//! bit-identical to serial) — exactly the code where NaN-ordering bugs,
+//! unjustified relaxed atomics, lock-order inversions, stray panics and
+//! protocol-doc rot hide. The lint pass machine-checks those invariants
+//! in CI; `docs/STATIC_ANALYSIS.md` is the user-facing spec.
+//!
+//! Rules (named in findings and in suppression markers):
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `nan-ordering` | float comparisons go through `total_cmp` |
+//! | `relaxed-atomics` | `Ordering::Relaxed` carries a `// relaxed:` reason |
+//! | `lock-order` | the dispatcher's lock acquisition graph is acyclic |
+//! | `panic-freedom` | dist/coordinator panics carry an `// invariant:` reason |
+//! | `logging` | print macros only in `util/log.rs` and `main.rs` |
+//! | `protocol-doc` | wire literals and docs/PROTOCOL.md agree both ways |
+//! | `suppression` | every `lint:allow` names a real rule and a reason |
+//!
+//! Any finding can be suppressed where it fires with a justified marker
+//! on the line or in the comment block directly above, e.g.
+//! `// lint:allow(logging): stdout is this path's artifact` — the rule
+//! name must be real and the reason must be non-empty, otherwise the
+//! marker itself becomes a `suppression` finding.
+//!
+//! The analyzer is deliberately line/token-level, not a Rust parser:
+//! [`source`] blanks string contents and strips comments so token
+//! matches are trustworthy, and that is all the precision these rules
+//! need. No dependencies, no syn, no rustc plumbing — the same ADR-002
+//! trade the rest of the repo makes.
+
+pub mod rules;
+pub mod source;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use crate::error::Result;
+use source::Line;
+
+pub const NAN_ORDERING: &str = "nan-ordering";
+pub const RELAXED_ATOMICS: &str = "relaxed-atomics";
+pub const LOCK_ORDER: &str = "lock-order";
+pub const PANIC_FREEDOM: &str = "panic-freedom";
+pub const LOGGING: &str = "logging";
+pub const PROTOCOL_DOC: &str = "protocol-doc";
+pub const SUPPRESSION: &str = "suppression";
+
+/// Every rule name a `lint:allow` marker may reference (`suppression`
+/// is listed for completeness but cannot itself be suppressed).
+pub const RULES: [&str; 7] = [
+    NAN_ORDERING,
+    RELAXED_ATOMICS,
+    LOCK_ORDER,
+    PANIC_FREEDOM,
+    LOGGING,
+    PROTOCOL_DOC,
+    SUPPRESSION,
+];
+
+/// One finding. Ordering (derived, field order matters) groups output
+/// by file, then line, then rule, then message.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    /// Repo-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Violation {
+    pub(crate) fn new(
+        file: &str,
+        line: usize,
+        rule: &'static str,
+        msg: impl Into<String>,
+    ) -> Violation {
+        Violation { file: file.to_string(), line, rule, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Run every rule over the tree rooted at `root` (the repo checkout:
+/// `rust/src/**` and `benches/**` are scanned; either may be absent).
+/// Returns the findings sorted for stable output; empty means clean.
+pub fn run(root: &Path) -> Result<Vec<Violation>> {
+    let files = collect_files(root)?;
+    let mut out = Vec::new();
+    for (rel, lines) in &files {
+        rules::check_suppressions(rel, lines, &mut out);
+        rules::nan_ordering(rel, lines, &mut out);
+        rules::relaxed_atomics(rel, lines, &mut out);
+        rules::panic_freedom(rel, lines, &mut out);
+        rules::logging(rel, lines, &mut out);
+    }
+    rules::lock_order(&files, &mut out);
+    rules::protocol_doc(&files, root, &mut out);
+    out.sort();
+    Ok(out)
+}
+
+/// Recursively gather `.rs` files under `<root>/rust/src` and
+/// `<root>/benches`, keyed by repo-relative forward-slash path.
+fn collect_files(root: &Path) -> Result<BTreeMap<String, Vec<Line>>> {
+    let mut files = BTreeMap::new();
+    for base in ["rust/src", "benches"] {
+        let dir = root.join(base);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut pending = vec![dir];
+        while let Some(d) = pending.pop() {
+            for entry in fs::read_dir(&d)? {
+                let path = entry?.path();
+                if path.is_dir() {
+                    pending.push(path);
+                } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                    let text = fs::read_to_string(&path)?;
+                    let rel = match path.strip_prefix(root) {
+                        Ok(r) => r.to_string_lossy().replace('\\', "/"),
+                        Err(_) => path.to_string_lossy().replace('\\', "/"),
+                    };
+                    files.insert(rel, source::preprocess(&text));
+                }
+            }
+        }
+    }
+    Ok(files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn violations_render_and_sort_stably() {
+        let mut v = vec![
+            Violation::new("b.rs", 2, LOGGING, "later file"),
+            Violation::new("a.rs", 9, LOGGING, "later line"),
+            Violation::new("a.rs", 1, NAN_ORDERING, "first"),
+        ];
+        v.sort();
+        assert_eq!(v[0].file, "a.rs");
+        assert_eq!(v[0].line, 1);
+        assert_eq!(v[2].file, "b.rs");
+        assert_eq!(v[0].to_string(), "a.rs:1: [nan-ordering] first");
+    }
+
+    #[test]
+    fn a_missing_root_scans_nothing_but_still_checks_docs() {
+        let root = std::env::temp_dir().join(format!("hss-lint-empty-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let got = run(&root).unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+        // no sources → the only possible finding is the missing doc
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rule, PROTOCOL_DOC);
+    }
+}

@@ -1,0 +1,716 @@
+//! The six rules behind `hss lint`, plus the suppression-grammar check.
+//!
+//! Every rule works on the preprocessed [`Line`] view from
+//! [`super::source`]: tokens are matched against `Line::code` (string
+//! contents blanked, comments stripped), so mentioning a forbidden
+//! token in a comment or a string literal never trips a rule. Findings
+//! are suppressible per line with a justified `lint:allow` marker —
+//! see [`source::suppressed`] for the grammar.
+//!
+//! Scopes differ per rule and are part of the contract:
+//!
+//! * `nan-ordering` — every scanned file, tests included (a NaN-ordering
+//!   bug in a test comparator hides real failures just as well).
+//! * `relaxed-atomics`, `logging` — non-test code under `rust/src/`.
+//! * `panic-freedom` — non-test code under `rust/src/dist/` and
+//!   `rust/src/coordinator/` (the always-on concurrent core).
+//! * `lock-order` — the dispatcher files listed in [`LOCK_ORDER_FILES`].
+//! * `protocol-doc` — wire literals in [`PROTOCOL_FILES`] against
+//!   `docs/PROTOCOL.md` (both directions, plus version consistency).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use super::source::{self, Line};
+use super::{
+    Violation, LOCK_ORDER, LOGGING, NAN_ORDERING, PANIC_FREEDOM, PROTOCOL_DOC, RELAXED_ATOMICS,
+    RULES, SUPPRESSION,
+};
+
+/// Files whose per-function lock-acquisition order is checked for
+/// cross-function cycles (the condvar dispatcher and its neighbors).
+pub const LOCK_ORDER_FILES: [&str; 4] = [
+    "rust/src/dist/tcp.rs",
+    "rust/src/dist/local.rs",
+    "rust/src/dist/sim.rs",
+    "rust/src/trace/mod.rs",
+];
+
+/// Files whose string literals are treated as candidate wire tokens.
+pub const PROTOCOL_FILES: [&str; 3] = [
+    "rust/src/dist/protocol.rs",
+    "rust/src/dist/worker.rs",
+    "rust/src/dist/tcp.rs",
+];
+
+/// Files allowed to use raw print macros: the leveled logger itself and
+/// the CLI entry point (stdout *is* the CLI's artifact).
+pub const LOGGING_ALLOWED: [&str; 2] = ["rust/src/util/log.rs", "rust/src/main.rs"];
+
+/// Validate every `lint:allow` marker in the file: the named rule must
+/// exist (and not be `suppression` itself) and a written reason must
+/// follow the closing paren. Malformed markers are findings of their
+/// own — a suppression that silently fails to parse would otherwise
+/// read as "allowed".
+pub fn check_suppressions(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    for (i, ln) in lines.iter().enumerate() {
+        match source::parse_allow(&ln.comment) {
+            None => {}
+            Some(Err(msg)) => out.push(Violation::new(relpath, i + 1, SUPPRESSION, msg)),
+            Some(Ok(allow)) => {
+                if !RULES.contains(&allow.rule) || allow.rule == SUPPRESSION {
+                    out.push(Violation::new(
+                        relpath,
+                        i + 1,
+                        SUPPRESSION,
+                        format!("lint:allow names unknown rule '{}'", allow.rule),
+                    ));
+                } else if !source::allow_has_reason(allow.tail) {
+                    out.push(Violation::new(
+                        relpath,
+                        i + 1,
+                        SUPPRESSION,
+                        "lint:allow without a written reason",
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn ident_tail_is_clear(code: &str, pos: usize) -> bool {
+    match code[pos..].chars().next() {
+        None => true,
+        Some(c) => !(c.is_alphanumeric() || c == '_'),
+    }
+}
+
+/// Rule `nan-ordering`: the bug class re-fixed in PRs 2, 4 and 5.
+/// Comparator tokens that absorb or mis-order NaN are forbidden in
+/// favor of `total_cmp`; applies everywhere, tests included.
+pub fn nan_ordering(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    for (i, ln) in lines.iter().enumerate() {
+        let code = &ln.code;
+        if code.contains(".partial_cmp(")
+            && !code.contains("total_cmp")
+            && !source::suppressed(lines, i, NAN_ORDERING)
+        {
+            out.push(Violation::new(
+                relpath,
+                i + 1,
+                NAN_ORDERING,
+                ".partial_cmp( on floats — use total_cmp",
+            ));
+        }
+        for tok in ["f64::max", "f64::min"] {
+            if let Some(p) = code.find(tok) {
+                if ident_tail_is_clear(code, p + tok.len())
+                    && !source::suppressed(lines, i, NAN_ORDERING)
+                {
+                    out.push(Violation::new(
+                        relpath,
+                        i + 1,
+                        NAN_ORDERING,
+                        format!("{tok} is NaN-absorbing — use total_cmp"),
+                    ));
+                }
+            }
+        }
+        if code.contains(".sort_by(") {
+            // the comparator often sits on the following lines; give it
+            // a 4-line window to mention total_cmp
+            let window: String = lines[i..lines.len().min(i + 4)]
+                .iter()
+                .map(|l| l.code.as_str())
+                .collect();
+            if !window.contains("total_cmp") && !source::suppressed(lines, i, NAN_ORDERING) {
+                out.push(Violation::new(
+                    relpath,
+                    i + 1,
+                    NAN_ORDERING,
+                    ".sort_by( without total_cmp in the comparator",
+                ));
+            }
+        }
+    }
+}
+
+/// Rule `relaxed-atomics`: every `Ordering::Relaxed` in non-test
+/// `rust/src/` code needs an adjacent `// relaxed: <why it is sound>`.
+pub fn relaxed_atomics(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    if !relpath.starts_with("rust/src/") {
+        return;
+    }
+    for (i, ln) in lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        if ln.code.contains("Ordering::Relaxed")
+            && !source::comment_has(lines, i, "relaxed:")
+            && !source::suppressed(lines, i, RELAXED_ATOMICS)
+        {
+            out.push(Violation::new(
+                relpath,
+                i + 1,
+                RELAXED_ATOMICS,
+                "Ordering::Relaxed without an adjacent `// relaxed:` justification",
+            ));
+        }
+    }
+}
+
+/// Rule `panic-freedom`: no unwrap/expect/panic in the non-test
+/// dist/coordinator core without an `// invariant: <why it holds>`.
+pub fn panic_freedom(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    if !(relpath.starts_with("rust/src/dist/") || relpath.starts_with("rust/src/coordinator/")) {
+        return;
+    }
+    for (i, ln) in lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        let code = &ln.code;
+        let mut hits: Vec<&str> = Vec::new();
+        if code.contains(".unwrap()") {
+            hits.push(".unwrap()");
+        }
+        if code.contains(".expect(") {
+            hits.push(".expect(");
+        }
+        if code.contains("panic!") {
+            hits.push("panic!");
+        }
+        for tok in hits {
+            if source::comment_has(lines, i, "invariant:") {
+                continue;
+            }
+            if !source::suppressed(lines, i, PANIC_FREEDOM) {
+                out.push(Violation::new(
+                    relpath,
+                    i + 1,
+                    PANIC_FREEDOM,
+                    format!("{tok} in dist/coordinator without `// invariant:` justification"),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule `logging`: raw print macros bypass the leveled logger; only the
+/// logger itself and the CLI entry point may use them.
+pub fn logging(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    if !relpath.starts_with("rust/src/") || LOGGING_ALLOWED.contains(&relpath) {
+        return;
+    }
+    for (i, ln) in lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        for tok in ["println!", "eprintln!", "print!(", "eprint!("] {
+            if ln.code.contains(tok) {
+                if !source::suppressed(lines, i, LOGGING) {
+                    out.push(Violation::new(
+                        relpath,
+                        i + 1,
+                        LOGGING,
+                        format!(
+                            "raw {} outside util/log.rs — use util::log",
+                            tok.trim_end_matches('(')
+                        ),
+                    ));
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// The identifier path segment immediately before a `.lock()` call at
+/// byte `pos` — the "lock class" used as a graph node. A chained-call
+/// receiver (`recorder().lock()`) has no identifier segment and yields
+/// an empty class, which the caller skips.
+fn lock_class(code: &str, pos: usize) -> String {
+    let bytes = code.as_bytes();
+    let mut j = pos;
+    while j > 0 {
+        let b = bytes[j - 1];
+        if b.is_ascii_alphanumeric() || b == b'_' || b == b'.' || b == b':' {
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    code[j..pos]
+        .replace("::", ".")
+        .split('.')
+        .filter(|s| !s.is_empty())
+        .last()
+        .map(str::to_string)
+        .unwrap_or_default()
+}
+
+/// Rule `lock-order`: build the per-function lock acquisition graph
+/// over [`LOCK_ORDER_FILES`] (edge a→b when a function acquires lock
+/// class `b` while holding `a`) and report a cycle if one exists —
+/// static deadlock detection for the dispatcher. At most one cycle is
+/// reported per run; fixing it re-exposes any next one.
+pub fn lock_order(files: &BTreeMap<String, Vec<Line>>, out: &mut Vec<Violation>) {
+    // (a, b) -> the "file::fn" witnesses that acquire b while holding a
+    let mut edges: BTreeMap<(String, String), Vec<String>> = BTreeMap::new();
+    for (relpath, lines) in files {
+        if !LOCK_ORDER_FILES.contains(&relpath.as_str()) {
+            continue;
+        }
+        let mut cur_fn = String::from("?");
+        let mut acquired: Vec<String> = Vec::new();
+        for ln in lines {
+            if ln.in_test {
+                continue;
+            }
+            let code = &ln.code;
+            if let Some(p) = code.find("fn ") {
+                let boundary = p == 0 || {
+                    let b = code.as_bytes()[p - 1];
+                    !(b.is_ascii_alphanumeric() || b == b'_')
+                };
+                if boundary {
+                    let name: String = code[p + 3..]
+                        .chars()
+                        .take_while(|c| c.is_alphanumeric() || *c == '_')
+                        .collect();
+                    if !name.is_empty() {
+                        cur_fn = name;
+                        acquired.clear();
+                    }
+                }
+            }
+            let mut start = 0usize;
+            while let Some(off) = code[start..].find(".lock()") {
+                let p = start + off;
+                let cls = lock_class(code, p);
+                if !cls.is_empty() {
+                    for prev in &acquired {
+                        if prev != &cls {
+                            edges
+                                .entry((prev.clone(), cls.clone()))
+                                .or_default()
+                                .push(format!("{relpath}::{cur_fn}"));
+                        }
+                    }
+                    acquired.push(cls);
+                }
+                start = p + ".lock()".len();
+            }
+        }
+    }
+
+    let mut graph: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    let mut nodes: BTreeSet<&str> = BTreeSet::new();
+    for (a, b) in edges.keys() {
+        graph.entry(a.as_str()).or_default().insert(b.as_str());
+        nodes.insert(a.as_str());
+        nodes.insert(b.as_str());
+    }
+    let mut color: BTreeMap<&str, u8> = nodes.iter().map(|n| (*n, 0u8)).collect();
+    let mut stack: Vec<&str> = Vec::new();
+    for &n in &nodes {
+        let white = color.get(n).copied().unwrap_or(0) == 0;
+        if white && dfs_cycle(n, &graph, &mut color, &mut stack, &edges, out) {
+            break;
+        }
+    }
+}
+
+const GRAY: u8 = 1;
+const BLACK: u8 = 2;
+
+fn dfs_cycle<'a>(
+    n: &'a str,
+    graph: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    color: &mut BTreeMap<&'a str, u8>,
+    stack: &mut Vec<&'a str>,
+    edges: &BTreeMap<(String, String), Vec<String>>,
+    out: &mut Vec<Violation>,
+) -> bool {
+    color.insert(n, GRAY);
+    stack.push(n);
+    let succs: Vec<&str> = graph.get(n).map(|s| s.iter().copied().collect()).unwrap_or_default();
+    for m in succs {
+        let cm = color.get(m).copied().unwrap_or(0);
+        if cm == GRAY {
+            let k = stack.iter().position(|x| *x == m).unwrap_or(0);
+            let mut cyc: Vec<&str> = stack[k..].to_vec();
+            cyc.push(m);
+            let mut fns: BTreeSet<&str> = BTreeSet::new();
+            for w in cyc.windows(2) {
+                if let Some(v) = edges.get(&(w[0].to_string(), w[1].to_string())) {
+                    for f in v {
+                        fns.insert(f.as_str());
+                    }
+                }
+            }
+            let via: Vec<&str> = fns.into_iter().collect();
+            out.push(Violation::new(
+                "rust/src/dist/tcp.rs",
+                1,
+                LOCK_ORDER,
+                format!(
+                    "lock acquisition cycle: {} (via {})",
+                    cyc.join(" -> "),
+                    via.join(", ")
+                ),
+            ));
+            return true;
+        }
+        if cm == 0 && dfs_cycle(m, graph, color, stack, edges, out) {
+            return true;
+        }
+    }
+    stack.pop();
+    color.insert(n, BLACK);
+    false
+}
+
+/// A string literal that plausibly names a wire field: starts with an
+/// ASCII lowercase letter, continues with lowercase/digit/`_`/`-`.
+fn is_wire_token(s: &str) -> bool {
+    match s.chars().next() {
+        Some(c) if c.is_ascii_lowercase() => s
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-'),
+        _ => false,
+    }
+}
+
+/// Does the doc mention the token as `` `tok` `` or `"tok"`?
+fn doc_mentions(doc: &str, tok: &str) -> bool {
+    doc.contains(&format!("`{tok}`")) || doc.contains(&format!("\"{tok}\""))
+}
+
+/// Rule `protocol-doc`: keep docs/PROTOCOL.md and the wire code from
+/// drifting apart. Forward: every wire-token string literal in
+/// [`PROTOCOL_FILES`] must be documented (tcp.rs trace literals may
+/// alternatively live in docs/OBSERVABILITY.md). Reverse: every row of
+/// the doc's wire field registry must still appear in the code. Plus:
+/// `PROTOCOL_VERSION` must match the version stated in the doc title.
+pub fn protocol_doc(files: &BTreeMap<String, Vec<Line>>, root: &Path, out: &mut Vec<Violation>) {
+    let proto = match std::fs::read_to_string(root.join("docs/PROTOCOL.md")) {
+        Ok(s) => s,
+        Err(_) => {
+            out.push(Violation::new(
+                "docs/PROTOCOL.md",
+                1,
+                PROTOCOL_DOC,
+                "docs/PROTOCOL.md missing",
+            ));
+            return;
+        }
+    };
+    let obs = std::fs::read_to_string(root.join("docs/OBSERVABILITY.md")).unwrap_or_default();
+
+    let mut code_lits: BTreeSet<&str> = BTreeSet::new();
+    for relpath in PROTOCOL_FILES {
+        let Some(lines) = files.get(relpath) else { continue };
+        for (i, ln) in lines.iter().enumerate() {
+            if ln.in_test {
+                continue;
+            }
+            for s in &ln.strings {
+                if !is_wire_token(s) {
+                    continue;
+                }
+                code_lits.insert(s.as_str());
+                let ok = doc_mentions(&proto, s)
+                    || (relpath == "rust/src/dist/tcp.rs" && doc_mentions(&obs, s));
+                if !ok && !source::suppressed(lines, i, PROTOCOL_DOC) {
+                    out.push(Violation::new(
+                        relpath,
+                        i + 1,
+                        PROTOCOL_DOC,
+                        format!("wire token \"{s}\" is not documented in docs/PROTOCOL.md"),
+                    ));
+                }
+            }
+        }
+    }
+
+    let mut in_registry = false;
+    for (i, line) in proto.split('\n').enumerate() {
+        if line.starts_with("## ") && line.to_lowercase().contains("field registry") {
+            in_registry = true;
+            continue;
+        }
+        if in_registry && line.starts_with("## ") {
+            in_registry = false;
+        }
+        if in_registry && line.starts_with("| `") {
+            if let Some(e) = line[3..].find('`') {
+                let tok = &line[3..3 + e];
+                if !tok.is_empty() && !code_lits.contains(tok) {
+                    out.push(Violation::new(
+                        "docs/PROTOCOL.md",
+                        i + 1,
+                        PROTOCOL_DOC,
+                        format!("registry field `{tok}` no longer appears in the wire code"),
+                    ));
+                }
+            }
+        }
+    }
+
+    let mut code_ver: Option<u64> = None;
+    if let Some(lines) = files.get("rust/src/dist/protocol.rs") {
+        let tag = "PROTOCOL_VERSION: usize = ";
+        for ln in lines {
+            if let Some(p) = ln.code.find(tag) {
+                let num: String = ln.code[p + tag.len()..]
+                    .chars()
+                    .take_while(char::is_ascii_digit)
+                    .collect();
+                if !num.is_empty() {
+                    code_ver = num.parse().ok();
+                }
+            }
+        }
+    }
+    let mut doc_ver: Option<u64> = None;
+    let first = proto.split('\n').next().unwrap_or("");
+    if let Some(p) = first.find("version ") {
+        let num: String = first[p + "version ".len()..]
+            .chars()
+            .take_while(char::is_ascii_digit)
+            .collect();
+        if !num.is_empty() {
+            doc_ver = num.parse().ok();
+        }
+    }
+    if let (Some(cv), Some(dv)) = (code_ver, doc_ver) {
+        if cv != dv {
+            out.push(Violation::new(
+                "docs/PROTOCOL.md",
+                1,
+                PROTOCOL_DOC,
+                format!("PROTOCOL_VERSION is {cv} but the doc title says version {dv}"),
+            ));
+        }
+    }
+    if doc_ver.is_none() {
+        out.push(Violation::new(
+            "docs/PROTOCOL.md",
+            1,
+            PROTOCOL_DOC,
+            "doc title does not state a protocol version",
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pp(src: &str) -> Vec<Line> {
+        source::preprocess(src)
+    }
+
+    /// Run every per-file rule over one fixture.
+    fn lint_one(relpath: &str, src: &str) -> Vec<Violation> {
+        let lines = pp(src);
+        let mut out = Vec::new();
+        check_suppressions(relpath, &lines, &mut out);
+        nan_ordering(relpath, &lines, &mut out);
+        relaxed_atomics(relpath, &lines, &mut out);
+        panic_freedom(relpath, &lines, &mut out);
+        logging(relpath, &lines, &mut out);
+        out
+    }
+
+    fn rules_of(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn nan_ordering_catches_the_thrice_fixed_bug_class() {
+        let bad = "let c = a.partial_cmp(&b);";
+        assert_eq!(rules_of(&lint_one("rust/src/a.rs", bad)), vec![NAN_ORDERING]);
+        let good = "let c = a.total_cmp(&b);";
+        assert!(lint_one("rust/src/a.rs", good).is_empty());
+        let absorb = "let m = xs.iter().cloned().fold(0.0, f64::max);";
+        assert_eq!(rules_of(&lint_one("benches/b.rs", absorb)), vec![NAN_ORDERING]);
+        // identifier tails are not the token
+        assert!(lint_one("rust/src/a.rs", "let m = f64::max_value();").is_empty());
+        // sort_by is fine when the comparator uses total_cmp nearby
+        let sorted_ok = "xs.sort_by(|a, b| {\n    a.total_cmp(b)\n});";
+        assert!(lint_one("rust/src/a.rs", sorted_ok).is_empty());
+        let sorted_bad = "xs.sort_by(|a, b| a.cmp(b));";
+        assert_eq!(rules_of(&lint_one("rust/src/a.rs", sorted_bad)), vec![NAN_ORDERING]);
+    }
+
+    #[test]
+    fn nan_ordering_applies_to_test_code_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(a: f64, b: f64) { a.partial_cmp(&b); }\n}";
+        assert_eq!(rules_of(&lint_one("rust/src/a.rs", src)), vec![NAN_ORDERING]);
+    }
+
+    #[test]
+    fn nan_ordering_in_strings_and_comments_is_harmless() {
+        let src = "// mentions partial_cmp and f64::max freely\nlet s = \"uses .partial_cmp( and .sort_by(\";";
+        assert!(lint_one("rust/src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn relaxed_atomics_needs_an_adjacent_justification() {
+        let bad = "c.fetch_add(1, Ordering::Relaxed);";
+        assert_eq!(rules_of(&lint_one("rust/src/c.rs", bad)), vec![RELAXED_ATOMICS]);
+        let good = "// relaxed: monotone counter, read only for reporting\nc.fetch_add(1, Ordering::Relaxed);";
+        assert!(lint_one("rust/src/c.rs", good).is_empty());
+        // multi-line comment blocks above the site count
+        let block = "// relaxed: monotone counter,\n// read only for reporting\nc.fetch_add(1, Ordering::Relaxed);";
+        assert!(lint_one("rust/src/c.rs", block).is_empty());
+        // out of scope: benches and test regions
+        assert!(lint_one("benches/c.rs", bad).is_empty());
+        let test_code = "#[cfg(test)]\nmod tests {\n    fn t() { c.load(Ordering::Relaxed); }\n}";
+        assert!(lint_one("rust/src/c.rs", test_code).is_empty());
+    }
+
+    #[test]
+    fn panic_freedom_guards_dist_and_coordinator_only() {
+        let bad = "let v = maybe.unwrap();";
+        assert_eq!(rules_of(&lint_one("rust/src/dist/d.rs", bad)), vec![PANIC_FREEDOM]);
+        assert_eq!(
+            rules_of(&lint_one("rust/src/coordinator/d.rs", bad)),
+            vec![PANIC_FREEDOM]
+        );
+        assert!(lint_one("rust/src/algorithms/d.rs", bad).is_empty());
+        let justified = "// invariant: key inserted two lines up\nlet v = maybe.unwrap();";
+        assert!(lint_one("rust/src/dist/d.rs", justified).is_empty());
+        let expects = "let v = maybe.expect(\"always set\");\nworkers.iter().for_each(|w| panic!());";
+        let got = lint_one("rust/src/dist/d.rs", expects);
+        assert_eq!(rules_of(&got), vec![PANIC_FREEDOM, PANIC_FREEDOM]);
+    }
+
+    #[test]
+    fn logging_is_confined_to_the_logger_and_the_cli() {
+        let bad = "println!(\"done\");";
+        assert_eq!(rules_of(&lint_one("rust/src/foo.rs", bad)), vec![LOGGING]);
+        assert!(lint_one("rust/src/util/log.rs", bad).is_empty());
+        assert!(lint_one("rust/src/main.rs", bad).is_empty());
+        let e = "eprintln!(\"{x}\");";
+        let got = lint_one("rust/src/foo.rs", e);
+        assert_eq!(rules_of(&got), vec![LOGGING]);
+        // one finding per line even when several macros appear
+        let two = "print!(\"a\"); println!(\"b\");";
+        assert_eq!(rules_of(&lint_one("rust/src/foo.rs", two)), vec![LOGGING]);
+    }
+
+    #[test]
+    fn suppression_grammar_is_validated() {
+        let unknown = "// lint:allow(bogus-rule): hmm\nlet x = 1;";
+        let got = lint_one("rust/src/s.rs", unknown);
+        assert_eq!(rules_of(&got), vec![SUPPRESSION]);
+        assert!(got[0].msg.contains("bogus-rule"));
+        let reasonless = "// lint:allow(logging):\nprintln!(\"x\");";
+        let got = lint_one("rust/src/s.rs", reasonless);
+        // the reasonless marker is a finding AND does not suppress
+        assert!(rules_of(&got).contains(&SUPPRESSION));
+        assert!(rules_of(&got).contains(&LOGGING));
+        let justified = "// lint:allow(logging): progress output is this path's artifact\nprintln!(\"x\");";
+        assert!(lint_one("rust/src/s.rs", justified).is_empty());
+    }
+
+    #[test]
+    fn lock_class_takes_the_last_path_segment() {
+        let code = "let st = fleet.state.lock();";
+        let p = code.find(".lock()").unwrap();
+        assert_eq!(lock_class(code, p), "state");
+        let chained = "let r = recorder().lock();";
+        let p = chained.find(".lock()").unwrap();
+        assert_eq!(lock_class(chained, p), "");
+    }
+
+    fn lock_files(src: &str) -> BTreeMap<String, Vec<Line>> {
+        let mut m = BTreeMap::new();
+        m.insert("rust/src/dist/tcp.rs".to_string(), pp(src));
+        m
+    }
+
+    #[test]
+    fn opposite_acquisition_orders_are_a_cycle() {
+        let src = "fn ab(s: &S) {\n    let a = s.alpha.lock();\n    let b = s.beta.lock();\n}\nfn ba(s: &S) {\n    let b = s.beta.lock();\n    let a = s.alpha.lock();\n}\n";
+        let mut out = Vec::new();
+        lock_order(&lock_files(src), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, LOCK_ORDER);
+        assert!(out[0].msg.contains("alpha -> beta -> alpha"), "{}", out[0].msg);
+        assert!(out[0].msg.contains("::ab") && out[0].msg.contains("::ba"), "{}", out[0].msg);
+    }
+
+    #[test]
+    fn consistent_acquisition_orders_are_clean() {
+        let src = "fn ab(s: &S) {\n    let a = s.alpha.lock();\n    let b = s.beta.lock();\n}\nfn also_ab(s: &S) {\n    let a = s.alpha.lock();\n    let b = s.beta.lock();\n}\n";
+        let mut out = Vec::new();
+        lock_order(&lock_files(src), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // files outside the lock-order scope are ignored entirely
+        let mut m = BTreeMap::new();
+        m.insert(
+            "rust/src/other.rs".to_string(),
+            pp("fn ab(s: &S) { s.alpha.lock(); s.beta.lock(); }\nfn ba(s: &S) { s.beta.lock(); s.alpha.lock(); }"),
+        );
+        let mut out = Vec::new();
+        lock_order(&m, &mut out);
+        assert!(out.is_empty());
+    }
+
+    fn fake_root(name: &str, protocol_md: &str) -> std::path::PathBuf {
+        let root = std::env::temp_dir().join(format!("hss-lint-unit-{name}-{}", std::process::id()));
+        std::fs::create_dir_all(root.join("docs")).unwrap();
+        std::fs::write(root.join("docs/PROTOCOL.md"), protocol_md).unwrap();
+        root
+    }
+
+    #[test]
+    fn protocol_doc_checks_both_directions_and_the_version() {
+        let root = fake_root(
+            "proto",
+            "# fake wire protocol — version 3\n\nThe `documented` field.\n\n## Appendix A — wire field registry\n\n| `documented` | field | ok |\n| `ghost` | field | removed from code |\n",
+        );
+        let mut files = BTreeMap::new();
+        files.insert(
+            "rust/src/dist/protocol.rs".to_string(),
+            pp("pub const PROTOCOL_VERSION: usize = 4;\npub const A: &str = \"documented\";\npub const B: &str = \"undocumented_knob\";\n"),
+        );
+        let mut out = Vec::new();
+        protocol_doc(&files, &root, &mut out);
+        let _ = std::fs::remove_dir_all(&root);
+        assert!(out.iter().any(|v| v.msg.contains("undocumented_knob")), "{out:?}");
+        assert!(out.iter().any(|v| v.msg.contains("`ghost`")), "{out:?}");
+        assert!(
+            out.iter().any(|v| v.msg.contains("PROTOCOL_VERSION is 4")),
+            "{out:?}"
+        );
+        assert!(!out.iter().any(|v| v.msg.contains("\"documented\"")), "{out:?}");
+    }
+
+    #[test]
+    fn protocol_doc_reports_a_missing_doc() {
+        let root = std::env::temp_dir().join(format!("hss-lint-unit-nodoc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let files = BTreeMap::new();
+        let mut out = Vec::new();
+        protocol_doc(&files, &root, &mut out);
+        let _ = std::fs::remove_dir_all(&root);
+        assert_eq!(rules_of(&out), vec![PROTOCOL_DOC]);
+        assert!(out[0].msg.contains("missing"));
+    }
+
+    #[test]
+    fn wire_tokens_are_lowercase_snake_or_kebab() {
+        assert!(is_wire_token("dataset_hits"));
+        assert!(is_wire_token("round-trip2"));
+        assert!(!is_wire_token("CamelCase"));
+        assert!(!is_wire_token("9starts_with_digit"));
+        assert!(!is_wire_token(""));
+        assert!(!is_wire_token("has space"));
+    }
+}

@@ -1,0 +1,393 @@
+//! Line/token-level source model for `hss lint`.
+//!
+//! The analyzer never parses Rust properly — it preprocesses each file
+//! into a per-line view that is just structured enough for the rules in
+//! [`super::rules`] to be reliable:
+//!
+//! * **`code`** — the line with comments stripped and string-literal
+//!   *contents* blanked to spaces (delimiters kept, lengths preserved,
+//!   so byte offsets into `code` line up with the original line). Rules
+//!   match tokens here, which is what makes a mention of a forbidden
+//!   token inside a string or a comment harmless.
+//! * **`comment`** — the text after a `//` (line, doc or inner-doc)
+//!   comment, where justification tags (`relaxed:`, `invariant:`) and
+//!   suppressions live.
+//! * **`strings`** — the recorded contents of string literals opened on
+//!   the line (the protocol-doc rule reads wire field names from these).
+//! * **`in_test`** — whether the line sits inside a `#[cfg(test)]`
+//!   brace region; most rules skip test code.
+//!
+//! The scanner is a small state machine carried across lines: block
+//! comments nest, normal strings and raw strings (`r"…"`, `r#"…"#`,
+//! `br"…"`) may span lines, and char literals (`'"'`, `'\''`) are
+//! skipped wholesale so a quote inside one can never open a string.
+
+/// One preprocessed source line. See the module docs for field
+/// semantics.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code text: comments stripped, string contents blanked to spaces.
+    pub code: String,
+    /// Text after `//` on this line (empty when there is no comment).
+    pub comment: String,
+    /// True inside a `#[cfg(test)]` brace region.
+    pub in_test: bool,
+    /// Contents of string literals opened on this line (per-line
+    /// fragments for literals that span lines).
+    pub strings: Vec<String>,
+}
+
+/// Preprocess a whole file into per-line [`Line`] records.
+pub fn preprocess(text: &str) -> Vec<Line> {
+    let mut lines: Vec<Line> = Vec::new();
+    let mut in_block: usize = 0; // block-comment nesting depth
+    let mut in_str = false; // inside a normal "…" string
+    let mut in_raw: i32 = -1; // >= 0: inside a raw string, value = hash count
+
+    for raw_line in text.split('\n') {
+        let raw: Vec<char> = raw_line.chars().collect();
+        let n = raw.len();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut strings: Vec<String> = Vec::new();
+        let mut cur = String::new();
+        let mut i = 0usize;
+        while i < n {
+            let c = raw[i];
+            if in_block > 0 {
+                if c == '*' && i + 1 < n && raw[i + 1] == '/' {
+                    in_block -= 1;
+                    i += 2;
+                    code.push_str("  ");
+                } else if c == '/' && i + 1 < n && raw[i + 1] == '*' {
+                    in_block += 1;
+                    i += 2;
+                    code.push_str("  ");
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if in_raw >= 0 {
+                let h = in_raw as usize;
+                if c == '"' && i + 1 + h <= n && (0..h).all(|t| raw[i + 1 + t] == '#') {
+                    strings.push(std::mem::take(&mut cur));
+                    code.push('"');
+                    for _ in 0..h {
+                        code.push('#');
+                    }
+                    i += 1 + h;
+                    in_raw = -1;
+                } else {
+                    cur.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if in_str {
+                if c == '\\' && i + 1 < n {
+                    cur.push(c);
+                    cur.push(raw[i + 1]);
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    strings.push(std::mem::take(&mut cur));
+                    in_str = false;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    cur.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if c == '/' && i + 1 < n && raw[i + 1] == '/' {
+                comment = raw[i + 2..].iter().collect();
+                break;
+            }
+            if c == '/' && i + 1 < n && raw[i + 1] == '*' {
+                in_block += 1;
+                code.push_str("  ");
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                in_str = true;
+                code.push('"');
+                i += 1;
+                continue;
+            }
+            // raw string openers: r"…", r#"…"#, br"…" (the prefix must
+            // not be the tail of an identifier)
+            if (c == 'r' || c == 'b') && (i == 0 || !(raw[i - 1].is_alphanumeric() || raw[i - 1] == '_'))
+            {
+                let mut j = i + 1;
+                if c == 'b' && j < n && raw[j] == 'r' {
+                    j += 1;
+                }
+                if c == 'r' || j > i + 1 {
+                    let mut h = 0usize;
+                    while j < n && raw[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && raw[j] == '"' {
+                        in_raw = h as i32;
+                        for t in i..=j {
+                            code.push(raw[t]);
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                }
+            }
+            // char literals 'x' / '\x': skip wholesale so '"' cannot
+            // open a string (lifetimes like <'a> fall through harmlessly)
+            if c == '\'' {
+                if i + 3 < n && raw[i + 1] == '\\' && raw[i + 3] == '\'' {
+                    code.push_str("    ");
+                    i += 4;
+                    continue;
+                }
+                if i + 2 < n && raw[i + 1] != '\\' && raw[i + 1] != '\'' && raw[i + 2] == '\'' {
+                    code.push_str("   ");
+                    i += 3;
+                    continue;
+                }
+            }
+            code.push(c);
+            i += 1;
+        }
+        if (in_str || in_raw >= 0) && !cur.is_empty() {
+            // a string literal continues onto the next line: record the
+            // fragment opened on this one
+            strings.push(cur);
+        }
+        lines.push(Line { code, comment, in_test: false, strings });
+    }
+
+    mark_test_regions(&mut lines);
+    lines
+}
+
+/// Mark `#[cfg(test)]` brace regions. The attribute arms a pending
+/// flag; the next `{` opens a test region at that depth, and the region
+/// closes when the depth unwinds back past it.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut test_stack: Vec<i64> = Vec::new();
+    for ln in lines.iter_mut() {
+        let started_in = !test_stack.is_empty();
+        if ln.code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        for c in ln.code.chars() {
+            if c == '{' {
+                if pending {
+                    test_stack.push(depth);
+                    pending = false;
+                }
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                if let Some(&top) = test_stack.last() {
+                    if depth == top {
+                        test_stack.pop();
+                    }
+                }
+            }
+        }
+        ln.in_test = started_in || !test_stack.is_empty();
+    }
+}
+
+/// Line `idx` itself plus the contiguous block of comment-only lines
+/// immediately above it — the region where a justification or
+/// suppression for a finding on `idx` may live.
+pub fn adjacent_comment_lines(lines: &[Line], idx: usize) -> Vec<usize> {
+    let mut v = vec![idx];
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        if lines[j].code.trim().is_empty() && !lines[j].comment.is_empty() {
+            v.push(j);
+        } else {
+            break;
+        }
+    }
+    v
+}
+
+/// Is a justification tag (`relaxed:` / `invariant:`) with nonempty
+/// trailing text present on line `idx` or in the comment block above?
+pub fn comment_has(lines: &[Line], idx: usize, tag: &str) -> bool {
+    adjacent_comment_lines(lines, idx).into_iter().any(|j| {
+        let c = &lines[j].comment;
+        match c.find(tag) {
+            Some(p) => !c[p + tag.len()..].trim().is_empty(),
+            None => false,
+        }
+    })
+}
+
+const ALLOW_OPEN: &str = "lint:allow(";
+
+/// Parsed pieces of a `lint:allow` marker found in a comment: the rule
+/// name between the parens and the tail after the closing paren.
+pub struct Allow<'a> {
+    pub rule: &'a str,
+    pub tail: &'a str,
+}
+
+/// Find a `lint:allow` marker in a comment, if any. Returns `None`
+/// when the comment has no marker at all, `Some(Err(line_msg))` when the
+/// marker is malformed (no closing paren), and `Some(Ok(allow))` with
+/// the rule/tail split otherwise. Validation of the rule name and
+/// reason is the caller's job.
+pub fn parse_allow(comment: &str) -> Option<std::result::Result<Allow<'_>, &'static str>> {
+    let p = comment.find(ALLOW_OPEN)?;
+    let rest = &comment[p + ALLOW_OPEN.len()..];
+    let q = match rest.find(')') {
+        Some(q) => q,
+        None => return Some(Err("malformed lint:allow (no closing paren)")),
+    };
+    Some(Ok(Allow { rule: rest[..q].trim(), tail: rest[q + 1..].trim() }))
+}
+
+/// Does `tail` (the text after the closing paren) carry a written
+/// reason, i.e. `: <nonempty>`?
+pub fn allow_has_reason(tail: &str) -> bool {
+    match tail.strip_prefix(':') {
+        Some(reason) => !reason.trim().is_empty(),
+        None => false,
+    }
+}
+
+/// Is a finding of `rule` on line `idx` suppressed by a well-formed,
+/// reason-carrying `lint:allow` on the line or in the comment block
+/// above? Malformed or reason-less markers never suppress — they are
+/// themselves reported by the `suppression` rule.
+pub fn suppressed(lines: &[Line], idx: usize, rule: &str) -> bool {
+    for j in adjacent_comment_lines(lines, idx) {
+        if let Some(Ok(allow)) = parse_allow(&lines[j].comment) {
+            if allow.rule == rule && allow_has_reason(allow.tail) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn string_contents_are_blanked_but_delimiters_kept() {
+        let lines = preprocess("let x = \"panic! inside\"; call();");
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains("panic!"));
+        assert!(lines[0].code.contains("call()"));
+        assert_eq!(lines[0].code.len(), "let x = \"panic! inside\"; call();".len());
+        assert_eq!(lines[0].strings, vec!["panic! inside".to_string()]);
+    }
+
+    #[test]
+    fn line_comments_are_captured_and_stripped() {
+        let lines = preprocess("foo(); // trailing note");
+        assert!(lines[0].code.contains("foo()"));
+        assert!(!lines[0].code.contains("trailing"));
+        assert_eq!(lines[0].comment, " trailing note");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let lines = preprocess("a(); /* one /* two */ still */ b();\n/* open\nclose */ c();");
+        assert!(lines[0].code.contains("a()"));
+        assert!(lines[0].code.contains("b()"));
+        assert!(!lines[0].code.contains("two"));
+        assert!(!lines[1].code.contains("open"));
+        assert!(!lines[2].code.contains("close"));
+        assert!(lines[2].code.contains("c()"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_blanked() {
+        let lines = preprocess("let r = r#\"quote \" inside\"#; after();");
+        assert!(lines[0].code.contains("after()"));
+        assert!(!lines[0].code.contains("inside"));
+        assert_eq!(lines[0].strings, vec!["quote \" inside".to_string()]);
+    }
+
+    #[test]
+    fn identifier_tails_do_not_open_raw_strings() {
+        // `var` ends in r but the following string is a normal one
+        let lines = preprocess("var(\"content\");");
+        assert_eq!(lines[0].strings, vec!["content".to_string()]);
+    }
+
+    #[test]
+    fn char_literal_quote_cannot_open_a_string() {
+        let lines = preprocess("if c == '\"' { panic!(\"q\") }");
+        // the " inside the char literal must not flip string state:
+        // panic! is real code here and survives into `code`
+        assert!(lines[0].code.contains("panic!"));
+        assert_eq!(lines[0].strings, vec!["q".to_string()]);
+    }
+
+    #[test]
+    fn multi_line_strings_record_per_line_fragments() {
+        let lines = preprocess("let s = \"first\nsecond\";\ntail();");
+        assert_eq!(lines[0].strings, vec!["first".to_string()]);
+        assert_eq!(lines[1].strings, vec!["second".to_string()]);
+        assert!(lines[2].code.contains("tail()"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}";
+        let lines = preprocess(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[2].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn adjacency_walks_contiguous_comment_blocks_only() {
+        let src = "code();\n// a\n// b\ntarget();";
+        let lines = preprocess(src);
+        let adj = adjacent_comment_lines(&lines, 3);
+        assert_eq!(adj, vec![3, 2, 1]);
+        // a code line breaks the block
+        let src2 = "// a\ncode();\ntarget();";
+        let lines2 = preprocess(src2);
+        assert_eq!(adjacent_comment_lines(&lines2, 2), vec![2]);
+    }
+
+    #[test]
+    fn comment_has_requires_a_nonempty_reason() {
+        let ok = preprocess("// relaxed: monotone counter\nx.load(o);");
+        assert!(comment_has(&ok, 1, "relaxed:"));
+        let empty = preprocess("// relaxed:\nx.load(o);");
+        assert!(!comment_has(&empty, 1, "relaxed:"));
+        let absent = preprocess("x.load(o);");
+        assert!(!comment_has(&absent, 0, "relaxed:"));
+    }
+
+    #[test]
+    fn suppression_requires_matching_rule_and_written_reason() {
+        let good = preprocess("// lint:allow(logging): stdout is this tool's artifact\nx();");
+        assert!(suppressed(&good, 1, "logging"));
+        assert!(!suppressed(&good, 1, "nan-ordering"));
+        let reasonless = preprocess("// lint:allow(logging):\nx();");
+        assert!(!suppressed(&reasonless, 1, "logging"));
+        let unclosed = preprocess("// lint:allow(logging without a paren\nx();");
+        assert!(!suppressed(&unclosed, 1, "logging"));
+    }
+}

@@ -15,6 +15,7 @@
 //! hss plan   --n 100000 --k 50 --capacity 800    # round plan / bounds
 //! hss datasets                                    # list registry
 //! hss artifacts                                   # list AOT artifacts
+//! hss lint   [--root .]                           # repo static analysis
 //! ```
 //!
 //! `hss <cmd> --help` prints the full flag reference, including the
@@ -54,6 +55,7 @@ fn real_main() -> Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("datasets") => cmd_datasets(),
         Some("artifacts") => cmd_artifacts(),
+        Some("lint") => cmd_lint(&args),
         Some("help") => {
             print_main_help();
             Ok(())
@@ -83,6 +85,8 @@ fn print_main_help() {
     println!("  plan       print the round plan and Prop 3.1 bounds for (n, k, capacity)");
     println!("  datasets   list the dataset registry");
     println!("  artifacts  list compiled XLA artifacts");
+    println!("  lint       static-analysis pass over the repo's own sources");
+    println!("             (see `hss lint --help` and docs/STATIC_ANALYSIS.md)");
     println!();
     println!("grammars (shared by CLI flags, config files and the wire protocol;");
     println!("normative spec in docs/PROTOCOL.md):");
@@ -484,4 +488,56 @@ fn cmd_artifacts() -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn print_lint_help() {
+    println!("usage: hss lint [--root DIR]");
+    println!();
+    println!("dependency-free static analysis over rust/src/** and benches/**;");
+    println!("full rule spec in docs/STATIC_ANALYSIS.md. Rules:");
+    println!("  nan-ordering     partial_cmp / f64::max / f64::min / sort_by on floats");
+    println!("                   — comparators must use total_cmp");
+    println!("  relaxed-atomics  every Ordering::Relaxed needs an adjacent");
+    println!("                   `// relaxed: <reason>` justification");
+    println!("  lock-order       cross-function lock-acquisition cycles in the");
+    println!("                   dispatcher files (static deadlock detection)");
+    println!("  panic-freedom    unwrap/expect/panic in non-test dist/ and coordinator/");
+    println!("                   need an adjacent `// invariant: <reason>` justification");
+    println!("  logging          raw print macros outside util/log.rs and main.rs");
+    println!("  protocol-doc     wire field literals must appear in docs/PROTOCOL.md,");
+    println!("                   registry rows must still exist in code, and");
+    println!("                   PROTOCOL_VERSION must match the doc title");
+    println!();
+    println!("  --root DIR       repo checkout to analyze (default .)");
+    println!();
+    println!("suppress a single finding with a justified marker on the line or in");
+    println!("the comment block directly above it:");
+    println!("  // lint:allow(nan-ordering): ids are compared here, not objective values");
+    println!();
+    println!("exit status: 0 when clean; 1 with one `file:line: [rule] message`");
+    println!("per finding on stdout.");
+}
+
+/// `hss lint`: run the [`hss::lint`] rules over a repo checkout and
+/// report findings on stdout. CI runs this as a blocking job.
+fn cmd_lint(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        print_lint_help();
+        return Ok(());
+    }
+    let root = std::path::PathBuf::from(args.get_or("root", "."));
+    let violations = hss::lint::run(&root)?;
+    for v in &violations {
+        println!("{v}");
+    }
+    println!("{} violation(s)", violations.len());
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::invalid(format!(
+            "lint found {} violation(s) under {}",
+            violations.len(),
+            root.display()
+        )))
+    }
 }

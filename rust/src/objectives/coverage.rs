@@ -51,6 +51,7 @@ impl Oracle for CoverageOracle {
     }
 
     fn gain(&mut self, j: usize) -> f64 {
+        // relaxed: oracle-eval statistics counter, no ordering dependence
         self.evals.fetch_add(1, Ordering::Relaxed);
         self.gain_inner(j)
     }

@@ -91,6 +91,7 @@ impl Oracle for ExemplarOracle {
     }
 
     fn gain(&mut self, j: usize) -> f64 {
+        // relaxed: oracle-eval statistics counter, no ordering dependence
         self.evals.fetch_add(1, Ordering::Relaxed);
         self.gain_inner(j)
     }
@@ -116,7 +117,7 @@ impl Oracle for ExemplarOracle {
 
     fn bulk_gains(&mut self) -> Vec<f64> {
         self.evals
-            .fetch_add(self.candidates.len() as u64, Ordering::Relaxed);
+            .fetch_add(self.candidates.len() as u64, Ordering::Relaxed); // relaxed: eval counter
         (0..self.candidates.len()).map(|j| self.gain_inner(j)).collect()
     }
 }

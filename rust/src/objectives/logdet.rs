@@ -142,6 +142,7 @@ impl<K: KernelSource> Oracle for LogDetOracle<K> {
     }
 
     fn gain(&mut self, j: usize) -> f64 {
+        // relaxed: oracle-eval statistics counter, no ordering dependence
         self.evals.fetch_add(1, Ordering::Relaxed);
         self.gain_inner(j)
     }

@@ -196,6 +196,8 @@ impl Problem {
 
     /// Number of oracle evaluations performed so far.
     pub fn eval_count(&self) -> u64 {
+        // relaxed: statistics read; callers that need exact per-round
+        // deltas read after the round's parts have joined/acked
         self.evals.load(Ordering::Relaxed)
     }
 

@@ -30,6 +30,7 @@ impl Oracle for ModularOracle {
     }
 
     fn gain(&mut self, j: usize) -> f64 {
+        // relaxed: oracle-eval statistics counter, no ordering dependence
         self.evals.fetch_add(1, Ordering::Relaxed);
         if self.taken[j] {
             0.0

@@ -118,7 +118,7 @@ impl XlaGreedy {
         };
         problem
             .evals
-            .fetch_add(per_step * problem.k.min(k_art) as u64, Ordering::Relaxed);
+            .fetch_add(per_step * problem.k.min(k_art) as u64, Ordering::Relaxed); // relaxed: eval counter
 
         let mut items = Vec::with_capacity(problem.k);
         for (t, &j) in idxs.iter().enumerate() {
@@ -286,6 +286,7 @@ impl crate::objectives::Oracle for XlaExemplarOracle {
                 gains.push(a / m as f64);
             }
         }
+        // relaxed: oracle-eval statistics counter, no ordering dependence
         self.evals.fetch_add(n as u64, Ordering::Relaxed);
         gains
     }

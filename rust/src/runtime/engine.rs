@@ -59,12 +59,14 @@ pub struct EngineStats {
 
 impl EngineStats {
     pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        // relaxed (all five): monotone statistics counters snapshotted
+        // for display; no cross-counter consistency is required
         (
-            self.calls.load(Ordering::Relaxed),
-            self.compiles.load(Ordering::Relaxed),
-            self.exec_ns.load(Ordering::Relaxed),
-            self.upload_bytes.load(Ordering::Relaxed),
-            self.cache_hits.load(Ordering::Relaxed),
+            self.calls.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.compiles.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.exec_ns.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.upload_bytes.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.cache_hits.load(Ordering::Relaxed), // relaxed: stats snapshot
         )
     }
 }
@@ -314,6 +316,7 @@ fn serve(
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp)?;
+        // relaxed: monotone stats counter, no ordering dependence
         stats.compiles.fetch_add(1, Ordering::Relaxed);
         compiled.insert(art.name.clone(), exe);
     }
@@ -344,6 +347,7 @@ fn serve(
                         upload(client, &Tensor::F32(data.clone()), &spec.shape, stats)?;
                     buffer_cache.insert(cache_key.clone(), buf);
                 } else {
+                    // relaxed: monotone stats counter, no ordering dependence
                     stats.cache_hits.fetch_add(1, Ordering::Relaxed);
                 }
                 slots.push(Slot::Cached(cache_key.0, cache_key.1));
@@ -362,6 +366,7 @@ fn serve(
 
     let t0 = std::time::Instant::now();
     let result = exe.execute_b(&args)?;
+    // relaxed: monotone stats counter, no ordering dependence
     stats.calls.fetch_add(1, Ordering::Relaxed);
 
     // aot.py lowers with return_tuple=True: single tuple output.
@@ -372,7 +377,7 @@ fn serve(
         .to_literal_sync()?;
     stats
         .exec_ns
-        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed); // relaxed: stats counter
     let parts = tuple
         .to_tuple()
         .map_err(|e| Error::Xla(format!("tuple decompose: {e}")))?;
@@ -405,13 +410,13 @@ fn upload(
         Tensor::F32(v) => {
             stats
                 .upload_bytes
-                .fetch_add((v.len() * 4) as u64, Ordering::Relaxed);
+                .fetch_add((v.len() * 4) as u64, Ordering::Relaxed); // relaxed: stats counter
             client.buffer_from_host_buffer::<f32>(v, shape, None)?
         }
         Tensor::I32(v) => {
             stats
                 .upload_bytes
-                .fetch_add((v.len() * 4) as u64, Ordering::Relaxed);
+                .fetch_add((v.len() * 4) as u64, Ordering::Relaxed); // relaxed: stats counter
             client.buffer_from_host_buffer::<i32>(v, shape, None)?
         }
     };

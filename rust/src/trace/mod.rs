@@ -106,6 +106,11 @@ pub fn disable() {
 /// entirely when tracing is off (one relaxed atomic load).
 #[inline]
 pub fn enabled() -> bool {
+    // relaxed: pure on/off gate — no data is published through this
+    // flag. Recorder state is guarded by the recorder() mutex, a stale read
+    // here only means an event lands just before/after a toggle, which
+    // the bounded ring tolerates by design. enable()/disable() store
+    // with Release purely so the epoch reset is visible promptly.
     ENABLED.load(Ordering::Relaxed)
 }
 

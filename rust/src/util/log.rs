@@ -50,11 +50,15 @@ static THRESHOLD: AtomicU8 = AtomicU8::new(Level::Warn as u8);
 
 /// Set the global threshold: messages at `level` or more severe print.
 pub fn set_level(level: Level) {
+    // relaxed: the threshold is an isolated u8 knob — no other memory
+    // is published through it; a racing logger printing one message at
+    // the old level during init is acceptable
     THRESHOLD.store(level as u8, Ordering::Relaxed);
 }
 
 /// Current threshold.
 pub fn level() -> Level {
+    // relaxed: isolated knob, see set_level
     match THRESHOLD.load(Ordering::Relaxed) {
         0 => Level::Error,
         1 => Level::Warn,
@@ -83,6 +87,7 @@ pub fn init(flag: Option<&str>) -> Result<()> {
 /// expensive messages.
 #[inline]
 pub fn enabled(l: Level) -> bool {
+    // relaxed: isolated knob, see set_level
     (l as u8) <= THRESHOLD.load(Ordering::Relaxed)
 }
 

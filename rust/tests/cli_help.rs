@@ -126,3 +126,32 @@ fn bare_invocation_prints_usage_not_an_error() {
     assert!(text.contains("usage: hss"), "{text}");
     assert!(text.contains("docs/PROTOCOL.md"), "{text}");
 }
+
+#[test]
+fn top_level_help_lists_the_lint_subcommand() {
+    let text = run_hss(&["help"]);
+    assert!(text.contains("lint"), "{text}");
+    assert!(text.contains("docs/STATIC_ANALYSIS.md"), "{text}");
+}
+
+#[test]
+fn lint_help_documents_every_rule_and_the_suppression_grammar() {
+    let text = run_hss(&["lint", "--help"]);
+    for rule in [
+        "nan-ordering",
+        "relaxed-atomics",
+        "lock-order",
+        "panic-freedom",
+        "logging",
+        "protocol-doc",
+    ] {
+        assert!(text.contains(rule), "`hss lint --help` lacks rule '{rule}':\n{text}");
+    }
+    // the suppression grammar and its justification cousins are shown
+    assert!(text.contains("lint:allow("), "{text}");
+    assert!(text.contains("// relaxed:"), "{text}");
+    assert!(text.contains("// invariant:"), "{text}");
+    assert!(text.contains("docs/STATIC_ANALYSIS.md"), "{text}");
+    // help must not run a lint pass
+    assert!(!text.contains("violation(s)"), "{text}");
+}

@@ -1,0 +1,212 @@
+//! Lint-engine integration tests: the shipped tree lints clean (and the
+//! CLI exits 0 on it), every seeded violation class is caught with a
+//! non-zero exit, and the protocol-doc drift rule fails when a wire
+//! field is removed from docs/PROTOCOL.md.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use hss::lint;
+
+/// The real repo checkout (Cargo.toml sits at the repo root, so the
+/// manifest dir *is* the lint root).
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn render(v: &[lint::Violation]) -> String {
+    v.iter().map(|x| format!("{x}\n")).collect()
+}
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// A throwaway fake repo checkout under the system temp dir, seeded
+/// with a minimal docs/PROTOCOL.md so the protocol-doc rule has a doc
+/// to read and trees with no wire code stay clean.
+struct FakeTree {
+    root: PathBuf,
+}
+
+impl FakeTree {
+    fn new() -> FakeTree {
+        let id = DIR_SEQ.fetch_add(1, Ordering::SeqCst);
+        let root = std::env::temp_dir()
+            .join(format!("hss-lint-it-{}-{id}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        let tree = FakeTree { root };
+        tree.write("docs/PROTOCOL.md", "# fake wire protocol — version 1\n");
+        tree
+    }
+
+    fn write(&self, rel: &str, content: &str) {
+        let path = self.root.join(rel);
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(path, content).unwrap();
+    }
+
+    fn lint(&self) -> Vec<lint::Violation> {
+        lint::run(&self.root).unwrap()
+    }
+}
+
+impl Drop for FakeTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn shipped_tree_lints_clean() {
+    let got = lint::run(&repo_root()).unwrap();
+    assert!(got.is_empty(), "shipped tree has lint violations:\n{}", render(&got));
+}
+
+#[test]
+fn cli_exits_zero_on_the_shipped_tree() {
+    let out = Command::new(env!("CARGO_BIN_EXE_hss"))
+        .args(["lint", "--root"])
+        .arg(repo_root())
+        .output()
+        .expect("spawn hss lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "hss lint failed on the shipped tree:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("0 violation(s)"), "{stdout}");
+}
+
+#[test]
+fn cli_exits_nonzero_on_a_seeded_violation() {
+    let tree = FakeTree::new();
+    tree.write("rust/src/noisy.rs", "pub fn noisy() {\n    println!(\"direct\");\n}\n");
+    let out = Command::new(env!("CARGO_BIN_EXE_hss"))
+        .args(["lint", "--root"])
+        .arg(&tree.root)
+        .output()
+        .expect("spawn hss lint");
+    assert!(!out.status.success(), "seeded violation must fail the lint run");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[logging]"), "{stdout}");
+    assert!(stdout.contains("rust/src/noisy.rs:2"), "{stdout}");
+}
+
+#[test]
+fn each_seeded_violation_class_is_caught() {
+    // (file to seed, contents, rule expected to fire)
+    let seeds: [(&str, &str, &str); 6] = [
+        (
+            "rust/src/a.rs",
+            "pub fn close(a: f64, b: f64) -> bool {\n    a.partial_cmp(&b).is_some()\n}\n",
+            "nan-ordering",
+        ),
+        (
+            "rust/src/c.rs",
+            "use std::sync::atomic::{AtomicU64, Ordering};\npub fn bump(c: &AtomicU64) {\n    c.fetch_add(1, Ordering::Relaxed);\n}\n",
+            "relaxed-atomics",
+        ),
+        (
+            "rust/src/dist/d.rs",
+            "pub fn take(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n",
+            "panic-freedom",
+        ),
+        (
+            "rust/src/foo.rs",
+            "pub fn noisy() {\n    println!(\"direct\");\n}\n",
+            "logging",
+        ),
+        (
+            "rust/src/s.rs",
+            "// lint:allow(bogus-rule): hmm\npub fn f() {}\n",
+            "suppression",
+        ),
+        (
+            "rust/src/dist/protocol.rs",
+            "pub const PROTOCOL_VERSION: usize = 7;\n",
+            "protocol-doc",
+        ),
+    ];
+    for (rel, src, rule) in seeds {
+        let tree = FakeTree::new();
+        tree.write(rel, src);
+        let got = tree.lint();
+        assert!(
+            got.iter().any(|v| v.rule == rule),
+            "seeding {rel} should trip [{rule}], got:\n{}",
+            render(&got)
+        );
+    }
+}
+
+#[test]
+fn opposite_lock_orders_in_the_dispatcher_are_caught() {
+    let tree = FakeTree::new();
+    tree.write(
+        "rust/src/dist/tcp.rs",
+        "pub fn ab(s: &S) {\n    let a = s.alpha.lock();\n    let b = s.beta.lock();\n}\npub fn ba(s: &S) {\n    let b = s.beta.lock();\n    let a = s.alpha.lock();\n}\n",
+    );
+    let got = tree.lint();
+    assert!(
+        got.iter().any(|v| v.rule == "lock-order" && v.msg.contains("alpha")),
+        "{}",
+        render(&got)
+    );
+}
+
+#[test]
+fn a_justified_suppression_silences_the_finding() {
+    let tree = FakeTree::new();
+    tree.write(
+        "rust/src/ids.rs",
+        "pub fn order(xs: &mut Vec<(u32, u32)>) {\n    // lint:allow(nan-ordering): comparing integer ids, not objective values\n    xs.sort_by(|a, b| a.0.cmp(&b.0));\n}\n",
+    );
+    let got = tree.lint();
+    assert!(got.is_empty(), "{}", render(&got));
+}
+
+/// The acceptance-criteria demonstration: take the *real* wire sources
+/// and the *real* docs, delete one wire field (`dataset_hits`, a v5
+/// telemetry field) from the doc copy, and the drift rule must fail in
+/// both directions (undocumented code token + orphaned registry row).
+#[test]
+fn removing_a_wire_field_from_the_real_protocol_doc_fails_the_drift_rule() {
+    let real = repo_root();
+    let tree = FakeTree::new();
+    for rel in [
+        "rust/src/dist/protocol.rs",
+        "rust/src/dist/worker.rs",
+        "rust/src/dist/tcp.rs",
+    ] {
+        tree.write(rel, &fs::read_to_string(real.join(rel)).unwrap());
+    }
+    tree.write(
+        "docs/OBSERVABILITY.md",
+        &fs::read_to_string(real.join("docs/OBSERVABILITY.md")).unwrap(),
+    );
+    let doc = fs::read_to_string(real.join("docs/PROTOCOL.md")).unwrap();
+    assert!(doc.contains("`dataset_hits`"), "fixture field left the real doc");
+
+    // unmodified copies must agree — the doc-side edit alone causes drift
+    tree.write("docs/PROTOCOL.md", &doc);
+    let before = tree.lint();
+    assert!(before.is_empty(), "{}", render(&before));
+
+    tree.write("docs/PROTOCOL.md", &doc.replace("dataset_hits", "dataset_hits_gone"));
+    let got = tree.lint();
+    assert!(
+        got.iter()
+            .any(|v| v.rule == "protocol-doc" && v.msg.contains("\"dataset_hits\"")),
+        "undocumented wire token not reported:\n{}",
+        render(&got)
+    );
+    assert!(
+        got.iter()
+            .any(|v| v.rule == "protocol-doc" && v.msg.contains("`dataset_hits_gone`")),
+        "orphaned registry row not reported:\n{}",
+        render(&got)
+    );
+    assert!(got.iter().all(|v| v.rule == "protocol-doc"), "{}", render(&got));
+}
