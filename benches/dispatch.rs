@@ -74,6 +74,7 @@ fn main() -> hss::Result<()> {
             listen: "127.0.0.1:0".into(),
             capacity: mu,
             straggle_ms: ms,
+            ..WorkerConfig::default()
         })
     };
     let addrs = vec![spawn(0)?, spawn(0)?, spawn(straggle_ms)?];

@@ -1,0 +1,204 @@
+//! Wire-serialization bench — protocol-v6 binary row payloads vs pure
+//! JSON, and lazy byte-scanner vs full-tree control-frame reads.
+//!
+//! Measures the two hot frames end to end (`compress` requests carrying
+//! a row-id block, `solution` responses carrying an item block):
+//!
+//! * **encode**: message → frame payload, per encoding;
+//! * **decode**: frame payload → message, per encoding — the binary
+//!   path reads the id block zero-copy from the blob section, the JSON
+//!   path goes through the `parse_u32_array` fast path;
+//! * **control reads**: the same JSON `solution` frame decoded via the
+//!   lazy scanner ([`Response::decode`]) vs the full-tree parser
+//!   ([`Json::parse`] + [`Response::from_json`]).
+//!
+//! Emits `bench_results/BENCH_serialization.json` (diffed against the
+//! committed `BENCH_serialization.json` baseline by the advisory CI
+//! job) and exits non-zero if binary row-block decode falls under the
+//! issue's acceptance floor of 2× the JSON decode throughput.
+//!
+//! ```bash
+//! cargo bench --bench serialization [-- --quick] [--rows 200000]
+//! ```
+
+use std::hint::black_box;
+
+use hss::bench::{fmt_ms, BenchArgs, BenchRunner, Table};
+use hss::dist::protocol::{PayloadMode, Request, Response, Telemetry};
+use hss::util::json::Json;
+
+/// One throughput measurement: mean wall ms → rows/sec and MB/sec over
+/// the fixed `rows`-id block.
+fn throughput(mean_ms: f64, rows: usize, bytes: usize) -> (f64, f64) {
+    let secs = (mean_ms / 1e3).max(1e-12);
+    (rows as f64 / secs, bytes as f64 / secs / (1024.0 * 1024.0))
+}
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(5);
+    let runner = if bargs.quick {
+        BenchRunner::quick()
+    } else {
+        BenchRunner { warmup: 1, samples: bargs.trials }
+    };
+    let rows = bargs.args.usize("rows", if bargs.quick { 20_000 } else { 200_000 })?;
+
+    let ids: Vec<u32> = (0..rows as u32).map(|i| i.wrapping_mul(2_654_435_761) >> 8).collect();
+    let request = Request::Compress {
+        problem_id: 3,
+        compressor: "greedy".into(),
+        part: ids.clone(),
+        cap: rows,
+        seed: 42,
+    };
+    let response = Response::Solution {
+        items: ids,
+        value: 1234.5678,
+        evals: 987_654_321,
+        wall_ms: 12.5,
+        telemetry: Telemetry { queue_wait_ms: 0.25, ..Telemetry::default() },
+    };
+
+    let mut table = Table::new(
+        &format!("wire serialization, {rows}-id row blocks (protocol v6)"),
+        &["frame", "op", "encoding", "wall", "Mrows_s", "MB_s", "bytes"],
+    );
+
+    /// Bench one (frame, mode) pair: encode and decode rows, returning
+    /// the decode throughput in rows/sec for the acceptance gate.
+    fn bench_frame<E, D>(
+        table: &mut Table,
+        runner: &BenchRunner,
+        rows: usize,
+        frame_name: &str,
+        mode: PayloadMode,
+        encode: E,
+        decode: D,
+    ) -> f64
+    where
+        E: Fn() -> Vec<u8>,
+        D: Fn(&[u8]),
+    {
+        let payload = encode();
+        let bytes = payload.len();
+
+        let s_enc = runner.time(|| {
+            black_box(encode());
+        });
+        let (rs, mbs) = throughput(s_enc.mean(), rows, bytes);
+        table.row(vec![
+            frame_name.into(),
+            "encode".into(),
+            mode.wire_name().into(),
+            fmt_ms(&s_enc),
+            format!("{:.2}", rs / 1e6),
+            format!("{mbs:.1}"),
+            bytes.to_string(),
+        ]);
+
+        let s_dec = runner.time(|| decode(&payload));
+        let (rs, mbs) = throughput(s_dec.mean(), rows, bytes);
+        table.row(vec![
+            frame_name.into(),
+            "decode".into(),
+            mode.wire_name().into(),
+            fmt_ms(&s_dec),
+            format!("{:.2}", rs / 1e6),
+            format!("{mbs:.1}"),
+            bytes.to_string(),
+        ]);
+        rs
+    }
+
+    // decode throughputs the acceptance gate reads back, keyed below
+    let mut decode_rows_per_sec: Vec<(&'static str, PayloadMode, f64)> = Vec::new();
+    for mode in [PayloadMode::Json, PayloadMode::Binary] {
+        let rs = bench_frame(
+            &mut table,
+            &runner,
+            rows,
+            "compress-request",
+            mode,
+            || request.encode(mode),
+            |payload| {
+                black_box(Request::decode(black_box(payload), mode).unwrap());
+            },
+        );
+        decode_rows_per_sec.push(("compress-request", mode, rs));
+        let rs = bench_frame(
+            &mut table,
+            &runner,
+            rows,
+            "solution-response",
+            mode,
+            || response.encode(mode),
+            |payload| {
+                black_box(Response::decode(black_box(payload), mode).unwrap());
+            },
+        );
+        decode_rows_per_sec.push(("solution-response", mode, rs));
+    }
+
+    // ---- lazy scanner vs full-tree parse on the same JSON frame ----------
+    let json_payload = response.encode(PayloadMode::Json);
+    let s_lazy = runner.time(|| {
+        black_box(Response::decode(black_box(&json_payload), PayloadMode::Json).unwrap());
+    });
+    let s_full = runner.time(|| {
+        let text = std::str::from_utf8(black_box(&json_payload)).unwrap();
+        black_box(Response::from_json(&Json::parse(text).unwrap()).unwrap());
+    });
+    for (name, summary) in [("lazy-scan", &s_lazy), ("full-tree", &s_full)] {
+        let (rs, mbs) = throughput(summary.mean(), rows, json_payload.len());
+        table.row(vec![
+            "solution-response".into(),
+            "decode".into(),
+            name.into(),
+            fmt_ms(summary),
+            format!("{:.2}", rs / 1e6),
+            format!("{mbs:.1}"),
+            json_payload.len().to_string(),
+        ]);
+    }
+
+    table.print();
+    table.save_json("BENCH_serialization").map_err(hss::error::Error::Io)?;
+
+    // Smoke gates (CI runs this job non-blocking). The issue's
+    // acceptance floor: binary row-block decode ≥ 2× JSON decode.
+    let rate = |frame: &str, mode: PayloadMode| {
+        decode_rows_per_sec
+            .iter()
+            .find(|(f, m, _)| *f == frame && *m == mode)
+            .map(|(_, _, r)| *r)
+            .unwrap_or(0.0)
+    };
+    let mut failed = false;
+    for frame in ["compress-request", "solution-response"] {
+        let (bin, json) = (rate(frame, PayloadMode::Binary), rate(frame, PayloadMode::Json));
+        let speedup = bin / json.max(1e-12);
+        println!("{frame}: binary decode {speedup:.2}x the JSON decode throughput");
+        if speedup < 2.0 {
+            eprintln!(
+                "SERIALIZATION REGRESSION: {frame} binary decode is only {speedup:.2}x \
+                 JSON (issue floor: 2x)"
+            );
+            failed = true;
+        }
+    }
+    let lazy_speedup = (rows as f64 / (s_lazy.mean() / 1e3)) / (rows as f64 / (s_full.mean() / 1e3));
+    println!("solution-response JSON: lazy scan {lazy_speedup:.2}x the full-tree decode");
+    if s_lazy.mean() > s_full.mean() * 1.10 {
+        eprintln!(
+            "SERIALIZATION REGRESSION: lazy scan {:.2} ms is slower than the full-tree \
+             parse {:.2} ms it replaces",
+            s_lazy.mean(),
+            s_full.mean()
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -122,6 +122,13 @@ pub struct WorkerStats {
     pub problem_misses: u64,
     /// Problem-id-table evictions on the worker's current connection.
     pub problem_evictions: u64,
+    /// Payload bytes (sent + received) exchanged with this worker over
+    /// binary-negotiated connections (protocol v6). Sum over the
+    /// backend's lifetime, charged whatever the part's outcome.
+    pub payload_bytes_binary: u64,
+    /// Payload bytes exchanged over JSON-mode connections — nonzero for
+    /// JSON-only peers and for pre-negotiation handshake traffic.
+    pub payload_bytes_json: u64,
 }
 
 /// One observable state change of an in-flight round.

@@ -3,8 +3,17 @@
 //! `docs/PROTOCOL.md`; this module is the reference implementation.
 //!
 //! Transport: length-prefixed frames — a 4-byte big-endian payload
-//! length followed by a UTF-8 JSON document (the crate's own
+//! length followed by a UTF-8 JSON control document (the crate's own
 //! [`crate::util::json`] codec; no external serialization dependency).
+//! On connections negotiated to [`PayloadMode::Binary`] (protocol v6),
+//! bulk number arrays leave the control document: each becomes a
+//! length-prefixed little-endian blob appended *after* the document
+//! inside the same frame, with a small `{"blob":i,"elem":…,"count":n}`
+//! marker object left in its place. Blobs decode by bounds-checked
+//! slice reinterpretation (`chunks_exact` + `from_le_bytes`), never a
+//! per-element text parse, and hot control-frame fields are read with
+//! the [`lazy`](crate::util::json::lazy) byte scanner instead of a
+//! full-tree parse.
 //!
 //! Losslessness: item ids are `u32` (exact in JSON's f64 numbers) and
 //! objective values are `f64` serialized via Rust's shortest-roundtrip
@@ -30,6 +39,7 @@ use crate::data::spec::DatasetSpec;
 use crate::data::DatasetRef;
 use crate::error::{Error, Result};
 use crate::objectives::{Objective, Problem};
+use crate::util::json::lazy::{self, LazyDoc};
 use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 
 /// Protocol version — bumped on any incompatible message change; worker
@@ -54,8 +64,19 @@ use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 /// (queue-wait ms plus cumulative dataset-cache and problem-id-table
 /// hit/miss/eviction counters) alongside the per-call `evals` /
 /// `wall_ms` that existed since v1. Telemetry is observational only —
-/// it never changes dispatch decisions or answers. v1–v4 peers are
-/// rejected at handshake.
+/// it never changes dispatch decisions or answers. v6 adds the
+/// **negotiated binary payload encoding**: a worker that is willing to
+/// receive blob sections advertises `payload: "binary"` in its hello
+/// reply (after the coordinator advertised it first), and from then on
+/// both sides of that connection may append length-prefixed
+/// little-endian blobs after the JSON control document — `compress`
+/// part ids and `solution` item ids as u32 blocks, explicit
+/// constraint weight/group tables inside `define-problem` as f64/u32
+/// blocks. Handshake frames themselves are always pure JSON, a peer
+/// that stays silent about `payload` gets pure-JSON frames for the
+/// whole connection, and both encodings are bit-identical in decoded
+/// meaning (the differential tests in `rust/tests/protocol_fuzz.rs`
+/// enforce it). v1–v5 peers are rejected at handshake.
 ///
 /// Pipelined/streaming dispatch (the coordinator's Backend v3 —
 /// persistent per-worker dispatchers, next-round parts speculatively
@@ -64,7 +85,7 @@ use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 /// boundaries on one warm connection. The normative statement of the
 /// streaming semantics (event ordering, in-flight next-round parts) is
 /// `docs/PROTOCOL.md` §6.1.
-pub const PROTOCOL_VERSION: usize = 5;
+pub const PROTOCOL_VERSION: usize = 6;
 
 /// Hard cap on frame payloads (64 MiB — a part of 10^6 ids is ~8 MB of
 /// JSON; anything bigger than this is a corrupt or hostile frame).
@@ -117,6 +138,374 @@ pub fn recv_msg<R: Read>(r: &mut R) -> Result<Json> {
 }
 
 // ---------------------------------------------------------------------------
+// negotiated payload encoding (protocol v6)
+// ---------------------------------------------------------------------------
+
+/// Per-connection payload encoding, fixed at handshake time (protocol
+/// v6). The coordinator advertises `payload: "binary"` in its hello;
+/// a binary-capable worker echoes it back and the connection switches
+/// to [`PayloadMode::Binary`] for every subsequent frame. A peer that
+/// omits the field — or a worker launched with `--payload json` —
+/// keeps the connection on pure-JSON frames, so mixed fleets work
+/// per-connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PayloadMode {
+    /// Pure JSON frames — the handshake default and the fallback for
+    /// peers that never advertise `binary`.
+    #[default]
+    Json,
+    /// JSON control document followed by a blob section: bulk number
+    /// arrays ship as length-prefixed little-endian blocks and are
+    /// replaced in the document by `{"blob":…}` markers.
+    Binary,
+}
+
+impl PayloadMode {
+    /// The handshake token for this mode.
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            PayloadMode::Json => "json",
+            PayloadMode::Binary => "binary",
+        }
+    }
+
+    /// Read an optional `payload` field from a hello frame; absent
+    /// means JSON (pre-announcement peers and `--payload json` workers
+    /// never emit the field).
+    fn from_hello(v: &Json) -> Result<PayloadMode> {
+        match v.get("payload") {
+            None => Ok(PayloadMode::Json),
+            Some(Json::Str(s)) if s == "json" => Ok(PayloadMode::Json),
+            Some(Json::Str(s)) if s == "binary" => Ok(PayloadMode::Binary),
+            Some(other) => Err(Error::Protocol(format!(
+                "unknown payload encoding {other}"
+            ))),
+        }
+    }
+}
+
+/// Builder for a frame's blob section: each `push_*` appends one
+/// `[u32 LE byte-length][bytes]` block and returns the marker object
+/// (`{"blob":index,"count":elements,"elem":"u32"|"f64"}`) to embed in
+/// the control document where the array used to be.
+#[derive(Default)]
+struct BlobWriter {
+    section: Vec<u8>,
+    count: usize,
+}
+
+impl BlobWriter {
+    fn marker(idx: usize, elem: &str, count: usize) -> Json {
+        json::obj(vec![
+            ("blob", json::num(idx as f64)),
+            ("elem", json::s(elem)),
+            ("count", json::num(count as f64)),
+        ])
+    }
+
+    fn push_u32s(&mut self, items: &[u32]) -> Json {
+        self.section.extend_from_slice(&((items.len() * 4) as u32).to_le_bytes());
+        for &x in items {
+            self.section.extend_from_slice(&x.to_le_bytes());
+        }
+        let m = Self::marker(self.count, "u32", items.len());
+        self.count += 1;
+        m
+    }
+
+    fn push_f64s(&mut self, xs: &[f64]) -> Json {
+        self.section.extend_from_slice(&((xs.len() * 8) as u32).to_le_bytes());
+        for &x in xs {
+            self.section.extend_from_slice(&x.to_le_bytes());
+        }
+        let m = Self::marker(self.count, "f64", xs.len());
+        self.count += 1;
+        m
+    }
+}
+
+/// Serialize a control document and append the blob section: the
+/// complete frame payload for a binary-mode message. (Oversized
+/// results are caught by [`write_frame`]'s [`MAX_FRAME`] check.)
+fn doc_with_blobs(doc: Json, blobs: BlobWriter) -> Vec<u8> {
+    let mut bytes = doc.to_string().into_bytes();
+    bytes.extend_from_slice(&blobs.section);
+    bytes
+}
+
+/// Zero-copy view of a received frame's blob section: borrows the
+/// frame buffer and hands out bounds-checked typed vectors. Every
+/// malformation — truncated length prefix, declared length past the
+/// end of the frame, byte length disagreeing with a marker's element
+/// count — is a structured [`Error::Protocol`], never a panic.
+struct BlobSection<'a> {
+    blobs: Vec<&'a [u8]>,
+}
+
+impl<'a> BlobSection<'a> {
+    /// Split `tail` (the frame bytes after the JSON control document)
+    /// into its length-prefixed blobs.
+    fn parse(tail: &'a [u8]) -> Result<BlobSection<'a>> {
+        let mut blobs = Vec::new();
+        let mut rest = tail;
+        while !rest.is_empty() {
+            if rest.len() < 4 {
+                return Err(Error::Protocol(format!(
+                    "truncated blob length prefix: {} trailing bytes",
+                    rest.len()
+                )));
+            }
+            let (len_bytes, after) = rest.split_at(4);
+            let len =
+                u32::from_le_bytes([len_bytes[0], len_bytes[1], len_bytes[2], len_bytes[3]])
+                    as usize;
+            if len > after.len() {
+                return Err(Error::Protocol(format!(
+                    "blob of {len} bytes overruns the frame ({} bytes left)",
+                    after.len()
+                )));
+            }
+            let (body, next) = after.split_at(len);
+            blobs.push(body);
+            rest = next;
+        }
+        Ok(BlobSection { blobs })
+    }
+
+    /// Resolve a marker object to its raw blob plus declared element
+    /// count, validating the element tag.
+    fn resolve(&self, marker: &Json, elem: &str, elem_size: usize) -> Result<(&'a [u8], usize)> {
+        let idx = wire_usize(marker, "blob")?;
+        let tag = wire_str(marker, "elem")?;
+        let count = wire_usize(marker, "count")?;
+        if tag != elem {
+            return Err(Error::Protocol(format!(
+                "expected a {elem} blob, marker says '{tag}'"
+            )));
+        }
+        let body = self.blobs.get(idx).copied().ok_or_else(|| {
+            Error::Protocol(format!(
+                "marker names blob {idx} but the frame carries {}",
+                self.blobs.len()
+            ))
+        })?;
+        // detects both misaligned blobs (length not a multiple of the
+        // element size) and count/length disagreements
+        if body.len() != count.saturating_mul(elem_size) {
+            return Err(Error::Protocol(format!(
+                "{elem} blob is {} bytes but its marker declares {count} elements",
+                body.len()
+            )));
+        }
+        Ok((body, count))
+    }
+
+    fn u32s(&self, marker: &Json) -> Result<Vec<u32>> {
+        let (body, _) = self.resolve(marker, "u32", 4)?;
+        Ok(body.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn f64s(&self, marker: &Json) -> Result<Vec<f64>> {
+        let (body, _) = self.resolve(marker, "f64", 8)?;
+        Ok(body
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    /// Materialize a marker back into the number array it replaced —
+    /// bit-exact, because the values never pass through decimal text.
+    fn inline(&self, marker: &Json) -> Result<Json> {
+        match wire_str(marker, "elem")? {
+            "u32" => Ok(Json::Arr(
+                self.u32s(marker)?.into_iter().map(|i| Json::Num(i as f64)).collect(),
+            )),
+            "f64" => Ok(Json::Arr(self.f64s(marker)?.into_iter().map(Json::Num).collect())),
+            other => Err(Error::Protocol(format!("unknown blob element type '{other}'"))),
+        }
+    }
+}
+
+/// Split a received frame payload at the end of its JSON control
+/// document (`end`, from [`LazyDoc::scan`]). Binary-mode connections
+/// may carry a blob section there; on a JSON-mode connection anything
+/// but trailing whitespace is a protocol violation — an unnegotiated
+/// peer must never be handed blob bytes.
+fn split_blob_section(
+    payload: &[u8],
+    end: usize,
+    mode: PayloadMode,
+) -> Result<Option<BlobSection<'_>>> {
+    let tail = payload.get(end..).unwrap_or(&[]);
+    match mode {
+        PayloadMode::Binary => Ok(Some(BlobSection::parse(tail)?)),
+        PayloadMode::Json => {
+            if tail.iter().any(|b| !b.is_ascii_whitespace()) {
+                return Err(Error::Protocol(
+                    "trailing bytes after the document on a json-payload connection".into(),
+                ));
+            }
+            Ok(None)
+        }
+    }
+}
+
+/// Full-tree parse of a frame's control document (`payload[..end]`) —
+/// the cold-path decoder and the reference the lazy path must agree
+/// with.
+fn control_doc(payload: &[u8], end: usize) -> Result<Json> {
+    let text = std::str::from_utf8(payload.get(..end).unwrap_or(payload))
+        .map_err(|_| Error::Protocol("frame is not UTF-8".into()))?;
+    Json::parse(text)
+}
+
+/// Decode an id array field that may arrive as a JSON number array or
+/// (binary mode) a blob marker. The JSON spelling takes the
+/// tree-free [`lazy::parse_u32_array`] fast path with a full-parse
+/// fallback, so both spellings decode without materializing the
+/// document.
+fn ids_from_doc(doc: &LazyDoc, key: &str, blobs: &Option<BlobSection>) -> Result<Vec<u32>> {
+    let raw = doc
+        .raw(key)
+        .ok_or_else(|| Error::Protocol(format!("missing array field '{key}'")))?;
+    match raw.first() {
+        Some(b'{') => {
+            let Some(blobs) = blobs else {
+                return Err(Error::Protocol(format!(
+                    "'{key}' is a blob marker on a json-payload connection"
+                )));
+            };
+            let marker = Json::parse(
+                std::str::from_utf8(raw)
+                    .map_err(|_| Error::Protocol("frame is not UTF-8".into()))?,
+            )?;
+            blobs.u32s(&marker)
+        }
+        Some(b'[') => {
+            if let Some(ids) = lazy::parse_u32_array(raw)? {
+                return Ok(ids);
+            }
+            let arr = Json::parse(
+                std::str::from_utf8(raw)
+                    .map_err(|_| Error::Protocol("frame is not UTF-8".into()))?,
+            )?;
+            let items = arr
+                .as_arr()
+                .ok_or_else(|| Error::Protocol(format!("missing array field '{key}'")))?;
+            u32s_from_arr(items, key)
+        }
+        _ => Err(Error::Protocol(format!("missing array field '{key}'"))),
+    }
+}
+
+/// Pull explicit constraint tables out of a spec document into the
+/// blob section: `{"gen":"explicit","w":[…]}` weight tables become f64
+/// blobs and `{"gen":"explicit","of":[…]}` group tables become u32
+/// blobs, each replaced by its marker. Everything else rides in the
+/// document verbatim — generator-spec'd constraints are already a few
+/// bytes.
+fn extract_table_blobs(v: &mut Json, blobs: &mut BlobWriter) {
+    match v {
+        Json::Obj(map) => {
+            let explicit = matches!(map.get("gen"), Some(Json::Str(s)) if s == "explicit");
+            for (key, child) in map.iter_mut() {
+                if explicit && key == "w" {
+                    if let Some(xs) = as_f64_table(child) {
+                        *child = blobs.push_f64s(&xs);
+                        continue;
+                    }
+                }
+                if explicit && key == "of" {
+                    if let Some(ids) = as_u32_table(child) {
+                        *child = blobs.push_u32s(&ids);
+                        continue;
+                    }
+                }
+                extract_table_blobs(child, blobs);
+            }
+        }
+        Json::Arr(arr) => {
+            for child in arr {
+                extract_table_blobs(child, blobs);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn as_f64_table(v: &Json) -> Option<Vec<f64>> {
+    v.as_arr()?.iter().map(Json::as_f64).collect()
+}
+
+fn as_u32_table(v: &Json) -> Option<Vec<u32>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|v| *v >= 0.0 && v.fract() == 0.0 && *v <= u32::MAX as f64)
+                .map(|v| v as u32)
+        })
+        .collect()
+}
+
+/// Inverse of [`extract_table_blobs`]: replace every blob marker in a
+/// decoded spec document with its number array, so `from_json` sees
+/// exactly what a JSON-mode frame would have carried.
+fn inline_table_blobs(v: &mut Json, blobs: &BlobSection) -> Result<()> {
+    let is_marker = matches!(
+        v,
+        Json::Obj(m) if m.contains_key("blob") && m.contains_key("elem") && m.contains_key("count")
+    );
+    if is_marker {
+        let inlined = blobs.inline(v)?;
+        *v = inlined;
+        return Ok(());
+    }
+    match v {
+        Json::Obj(map) => {
+            for child in map.values_mut() {
+                inline_table_blobs(child, blobs)?;
+            }
+        }
+        Json::Arr(arr) => {
+            for child in arr {
+                inline_table_blobs(child, blobs)?;
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Frame + send one request on a connection negotiated to `mode`,
+/// returning the payload size in bytes (the per-worker
+/// binary-vs-json byte split).
+pub fn send_request<W: Write>(w: &mut W, req: &Request, mode: PayloadMode) -> Result<usize> {
+    let payload = req.encode(mode);
+    write_frame(w, &payload)?;
+    Ok(payload.len())
+}
+
+/// Receive + decode one request, returning it with the payload size.
+pub fn recv_request<R: Read>(r: &mut R, mode: PayloadMode) -> Result<(Request, usize)> {
+    let payload = read_frame(r)?;
+    Ok((Request::decode(&payload, mode)?, payload.len()))
+}
+
+/// Frame + send one response (see [`send_request`]).
+pub fn send_response<W: Write>(w: &mut W, resp: &Response, mode: PayloadMode) -> Result<usize> {
+    let payload = resp.encode(mode);
+    write_frame(w, &payload)?;
+    Ok(payload.len())
+}
+
+/// Receive + decode one response, returning it with the payload size.
+pub fn recv_response<R: Read>(r: &mut R, mode: PayloadMode) -> Result<(Response, usize)> {
+    let payload = read_frame(r)?;
+    Ok((Response::decode(&payload, mode)?, payload.len()))
+}
+
+// ---------------------------------------------------------------------------
 // lossless u64 encoding
 // ---------------------------------------------------------------------------
 
@@ -137,7 +526,15 @@ fn jvalue(x: f64) -> Json {
 }
 
 fn value_from_json(v: &Json, key: &str) -> Result<f64> {
-    match v.get(key) {
+    scalar_value(v.get(key), key)
+}
+
+/// The objective-value decoding convention on one scalar (shared by the
+/// full-tree and lazy readers): string tokens must be non-finite, null
+/// tolerated as NaN (the generic writer's encoding for non-finite),
+/// numbers pass through.
+fn scalar_value(x: Option<&Json>, key: &str) -> Result<f64> {
+    match x {
         Some(Json::Str(s)) => s
             .parse::<f64>()
             .ok()
@@ -145,9 +542,9 @@ fn value_from_json(v: &Json, key: &str) -> Result<f64> {
             .ok_or_else(|| {
                 Error::Protocol(format!("field '{key}' is not a non-finite token"))
             }),
-        // tolerate null (the generic writer's encoding for non-finite)
         Some(Json::Null) => Ok(f64::NAN),
-        _ => wire_f64(v, key),
+        Some(Json::Num(n)) => Ok(*n),
+        _ => Err(Error::Protocol(format!("missing number field '{key}'"))),
     }
 }
 
@@ -160,6 +557,10 @@ fn items_from_json(v: &Json, key: &str) -> Result<Vec<u32>> {
         .get(key)
         .and_then(Json::as_arr)
         .ok_or_else(|| Error::Protocol(format!("missing array field '{key}'")))?;
+    u32s_from_arr(arr, key)
+}
+
+fn u32s_from_arr(arr: &[Json], key: &str) -> Result<Vec<u32>> {
     arr.iter()
         .map(|x| {
             x.as_f64()
@@ -408,13 +809,19 @@ impl Telemetry {
 /// Coordinator → worker.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// Handshake: version check, capacity discovery, clock alignment.
+    /// Handshake: version check, capacity discovery, clock alignment,
+    /// payload-encoding negotiation (v6).
     Hello {
         /// The coordinator's trace clock (ms since its trace epoch) at
         /// send time, echoed back by the worker so worker-side spans
         /// can be aligned to the coordinator timeline (skew bounded by
         /// the handshake RTT). 0.0 when the coordinator is not tracing.
         clock_ms: f64,
+        /// The payload encoding the coordinator is willing to receive
+        /// and send on this connection. The connection runs binary only
+        /// if the worker echoes `binary` back; hello frames themselves
+        /// are always pure JSON.
+        payload: PayloadMode,
     },
     /// Intern a problem on this connection (v4): ship the full
     /// [`ProblemSpec`] once under a coordinator-chosen id; every
@@ -445,11 +852,19 @@ pub enum Request {
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Hello { clock_ms } => json::obj(vec![
-                ("type", json::s("hello")),
-                ("version", json::num(PROTOCOL_VERSION as f64)),
-                ("clock_ms", json::num(*clock_ms)),
-            ]),
+            Request::Hello { clock_ms, payload } => {
+                let mut fields = vec![
+                    ("type", json::s("hello")),
+                    ("version", json::num(PROTOCOL_VERSION as f64)),
+                    ("clock_ms", json::num(*clock_ms)),
+                ];
+                // emitted only when advertising binary, so JSON-mode
+                // hellos are byte-identical to their pre-v6 shape
+                if *payload == PayloadMode::Binary {
+                    fields.push(("payload", json::s(payload.wire_name())));
+                }
+                json::obj(fields)
+            }
             Request::DefineProblem { id, problem } => json::obj(vec![
                 ("type", json::s("define-problem")),
                 ("id", ju64(*id)),
@@ -479,7 +894,7 @@ impl Request {
                 // telemetry field: absent or malformed defaults to 0.0
                 // (a coordinator that is not tracing sends 0.0 anyway)
                 let clock_ms = v.get("clock_ms").and_then(Json::as_f64).unwrap_or(0.0);
-                Ok(Request::Hello { clock_ms })
+                Ok(Request::Hello { clock_ms, payload: PayloadMode::from_hello(v)? })
             }
             "define-problem" => {
                 let problem_json = v
@@ -501,15 +916,80 @@ impl Request {
             other => Err(Error::Protocol(format!("unknown request type '{other}'"))),
         }
     }
+
+    /// Encode for a connection negotiated to `mode`: the complete frame
+    /// payload. [`PayloadMode::Json`] frames are exactly
+    /// `to_json().to_string()`; binary-mode `compress` frames ship the
+    /// part as a u32 blob and `define-problem` frames ship explicit
+    /// constraint tables as f64/u32 blobs. Hello and shutdown frames
+    /// are identical in both modes.
+    pub fn encode(&self, mode: PayloadMode) -> Vec<u8> {
+        if mode == PayloadMode::Json {
+            return self.to_json().to_string().into_bytes();
+        }
+        match self {
+            Request::Compress { problem_id, compressor, part, cap, seed } => {
+                let mut blobs = BlobWriter::default();
+                let doc = json::obj(vec![
+                    ("type", json::s("compress")),
+                    ("problem_id", ju64(*problem_id)),
+                    ("compressor", json::s(compressor)),
+                    ("part", blobs.push_u32s(part)),
+                    ("cap", json::num(*cap as f64)),
+                    ("seed", ju64(*seed)),
+                ]);
+                doc_with_blobs(doc, blobs)
+            }
+            Request::DefineProblem { .. } => {
+                let mut doc = self.to_json();
+                let mut blobs = BlobWriter::default();
+                extract_table_blobs(&mut doc, &mut blobs);
+                doc_with_blobs(doc, blobs)
+            }
+            _ => self.to_json().to_string().into_bytes(),
+        }
+    }
+
+    /// Decode a frame payload received on a connection negotiated to
+    /// `mode`. The hot frame (`compress`) takes the lazy-scanner path:
+    /// only the fields the worker dispatches on are materialized, and
+    /// the part ids come straight from the blob section (binary mode)
+    /// or the [`lazy::parse_u32_array`] fast path (JSON mode) without
+    /// building a [`Json`] tree. Everything else goes through the
+    /// full-tree parser, whose semantics the lazy path must match.
+    pub fn decode(payload: &[u8], mode: PayloadMode) -> Result<Request> {
+        let (doc, end) = LazyDoc::scan(payload)?;
+        let blobs = split_blob_section(payload, end, mode)?;
+        match doc.str("type")?.as_str() {
+            "compress" => Ok(Request::Compress {
+                problem_id: doc.u64("problem_id")?,
+                compressor: doc.str("compressor")?,
+                part: ids_from_doc(&doc, "part", &blobs)?,
+                cap: doc.usize("cap")?,
+                seed: doc.u64("seed")?,
+            }),
+            "define-problem" => {
+                let mut tree = control_doc(payload, end)?;
+                if let Some(blobs) = &blobs {
+                    inline_table_blobs(&mut tree, blobs)?;
+                }
+                Request::from_json(&tree)
+            }
+            _ => Request::from_json(&control_doc(payload, end)?),
+        }
+    }
 }
 
 /// Worker → coordinator.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    /// Handshake reply: the worker's fixed capacity µ, plus the
-    /// coordinator clock echoed back (protocol v5 — lets the
-    /// coordinator bound clock skew by the handshake RTT).
-    Hello { capacity: usize, clock_echo_ms: f64 },
+    /// Handshake reply: the worker's fixed capacity µ, the coordinator
+    /// clock echoed back (protocol v5 — lets the coordinator bound
+    /// clock skew by the handshake RTT), and the negotiated payload
+    /// encoding (v6): `binary` only if the worker is binary-capable
+    /// *and* the coordinator advertised it; everything after this
+    /// frame uses the mode stated here.
+    Hello { capacity: usize, clock_echo_ms: f64, payload: PayloadMode },
     /// [`Request::DefineProblem`] acknowledged: the id is now live on
     /// this connection.
     Defined { id: u64 },
@@ -526,12 +1006,18 @@ pub enum Response {
 impl Response {
     pub fn to_json(&self) -> Json {
         match self {
-            Response::Hello { capacity, clock_echo_ms } => json::obj(vec![
-                ("type", json::s("hello")),
-                ("version", json::num(PROTOCOL_VERSION as f64)),
-                ("capacity", json::num(*capacity as f64)),
-                ("clock_echo_ms", json::num(*clock_echo_ms)),
-            ]),
+            Response::Hello { capacity, clock_echo_ms, payload } => {
+                let mut fields = vec![
+                    ("type", json::s("hello")),
+                    ("version", json::num(PROTOCOL_VERSION as f64)),
+                    ("capacity", json::num(*capacity as f64)),
+                    ("clock_echo_ms", json::num(*clock_echo_ms)),
+                ];
+                if *payload == PayloadMode::Binary {
+                    fields.push(("payload", json::s(payload.wire_name())));
+                }
+                json::obj(fields)
+            }
             Response::Defined { id } => json::obj(vec![
                 ("type", json::s("defined")),
                 ("id", ju64(*id)),
@@ -564,6 +1050,7 @@ impl Response {
                 Ok(Response::Hello {
                     capacity: wire_usize(v, "capacity")?,
                     clock_echo_ms: v.get("clock_echo_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                    payload: PayloadMode::from_hello(v)?,
                 })
             }
             "defined" => Ok(Response::Defined { id: wire_u64(v, "id")? }),
@@ -580,6 +1067,50 @@ impl Response {
             "error" => Ok(Response::Error { msg: wire_str(v, "msg")?.to_string() }),
             "bye" => Ok(Response::Bye),
             other => Err(Error::Protocol(format!("unknown response type '{other}'"))),
+        }
+    }
+
+    /// Encode for a connection negotiated to `mode` (see
+    /// [`Request::encode`]): binary-mode `solution` frames ship their
+    /// item ids as a u32 blob; every other response is identical in
+    /// both modes.
+    pub fn encode(&self, mode: PayloadMode) -> Vec<u8> {
+        if mode == PayloadMode::Json {
+            return self.to_json().to_string().into_bytes();
+        }
+        match self {
+            Response::Solution { items, value, evals, wall_ms, telemetry } => {
+                let mut blobs = BlobWriter::default();
+                let doc = json::obj(vec![
+                    ("type", json::s("solution")),
+                    ("items", blobs.push_u32s(items)),
+                    ("value", jvalue(*value)),
+                    ("evals", ju64(*evals)),
+                    ("wall_ms", json::num(*wall_ms)),
+                    ("telemetry", telemetry.to_json()),
+                ]);
+                doc_with_blobs(doc, blobs)
+            }
+            _ => self.to_json().to_string().into_bytes(),
+        }
+    }
+
+    /// Decode a frame payload received on a connection negotiated to
+    /// `mode`. The hot frame (`solution`) takes the lazy-scanner path —
+    /// the coordinator's dispatcher reads every solution the fleet
+    /// produces; everything else goes through the full-tree parser.
+    pub fn decode(payload: &[u8], mode: PayloadMode) -> Result<Response> {
+        let (doc, end) = LazyDoc::scan(payload)?;
+        let blobs = split_blob_section(payload, end, mode)?;
+        match doc.str("type")?.as_str() {
+            "solution" => Ok(Response::Solution {
+                items: ids_from_doc(&doc, "items", &blobs)?,
+                value: scalar_value(doc.json_opt("value")?.as_ref(), "value")?,
+                evals: doc.u64("evals")?,
+                wall_ms: doc.f64("wall_ms")?,
+                telemetry: Telemetry::from_json(doc.json_opt("telemetry")?.as_ref()),
+            }),
+            _ => Response::from_json(&control_doc(payload, end)?),
         }
     }
 }
@@ -640,7 +1171,11 @@ mod tests {
         };
         let back = Request::from_json(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(req, back);
-        for r in [Request::Hello { clock_ms: 12.5 }, Request::Shutdown] {
+        for r in [
+            Request::Hello { clock_ms: 12.5, payload: PayloadMode::Binary },
+            Request::Hello { clock_ms: 0.0, payload: PayloadMode::Json },
+            Request::Shutdown,
+        ] {
             let b = Request::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
             assert_eq!(r, b);
         }
@@ -650,17 +1185,27 @@ mod tests {
     fn handshake_echoes_the_coordinator_clock() {
         // v5: the worker reflects the coordinator's trace clock so
         // worker spans can be aligned to the coordinator timeline
-        let hello = Response::Hello { capacity: 128, clock_echo_ms: 417.25 };
+        let hello = Response::Hello {
+            capacity: 128,
+            clock_echo_ms: 417.25,
+            payload: PayloadMode::Binary,
+        };
         let back =
             Response::from_json(&Json::parse(&hello.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(hello, back);
         // a hello without the echo (malformed telemetry) still parses,
-        // defaulting the echo to 0 — telemetry must never fail a frame
-        let bare = Json::parse(r#"{"type":"hello","version":5,"capacity":7}"#).unwrap();
+        // defaulting the echo to 0 — telemetry must never fail a frame —
+        // and a hello silent about `payload` negotiates JSON
+        let bare = Json::parse(r#"{"type":"hello","version":6,"capacity":7}"#).unwrap();
         assert_eq!(
             Response::from_json(&bare).unwrap(),
-            Response::Hello { capacity: 7, clock_echo_ms: 0.0 }
+            Response::Hello { capacity: 7, clock_echo_ms: 0.0, payload: PayloadMode::Json }
         );
+        // an unknown payload token is a loud mismatch, not a silent
+        // JSON fallback that would desync the two ends of a connection
+        let odd =
+            Json::parse(r#"{"type":"hello","version":6,"capacity":7,"payload":"zstd"}"#).unwrap();
+        assert!(Response::from_json(&odd).is_err());
     }
 
     #[test]
@@ -792,13 +1337,14 @@ mod tests {
 
     #[test]
     fn version_mismatch_is_rejected() {
-        // future versions and the retired v1–v4 are all refused
+        // future versions and the retired v1–v5 are all refused
         for bad in [
             r#"{"type":"hello","version":999}"#,
             r#"{"type":"hello","version":1}"#,
             r#"{"type":"hello","version":2}"#,
             r#"{"type":"hello","version":3}"#,
             r#"{"type":"hello","version":4}"#,
+            r#"{"type":"hello","version":5}"#,
         ] {
             let msg = Json::parse(bad).unwrap();
             assert!(Request::from_json(&msg).is_err(), "{bad}");
@@ -945,5 +1491,188 @@ mod tests {
         }
         assert!(compressor_from_name("xla-greedy").is_err());
         assert!(compressor_from_name("stochastic-greedy(eps=2.0)").is_err());
+    }
+
+    // -- protocol v6: negotiated binary payloads ---------------------------
+
+    #[test]
+    fn compress_frames_decode_identically_in_both_modes() {
+        let req = Request::Compress {
+            problem_id: u64::MAX - 9,
+            compressor: "stochastic-greedy(eps=0.5)".into(),
+            part: vec![0, 7, 4_000_000_000, u32::MAX],
+            cap: 200,
+            seed: 0xDEAD_BEEF_DEAD_BEEF,
+        };
+        for mode in [PayloadMode::Json, PayloadMode::Binary] {
+            let payload = req.encode(mode);
+            assert_eq!(Request::decode(&payload, mode).unwrap(), req, "{mode:?}");
+        }
+        // the binary doc carries a marker, not the id array
+        let bin = req.encode(PayloadMode::Binary);
+        let (doc, end) = LazyDoc::scan(&bin).unwrap();
+        assert!(doc.raw("part").unwrap().starts_with(b"{"));
+        assert_eq!(&bin[end..end + 4], &16u32.to_le_bytes(), "4 ids = 16 blob bytes");
+        // an empty part still frames and decodes cleanly
+        let empty = Request::Compress {
+            problem_id: 1,
+            compressor: "greedy".into(),
+            part: vec![],
+            cap: 1,
+            seed: 0,
+        };
+        let payload = empty.encode(PayloadMode::Binary);
+        assert_eq!(Request::decode(&payload, PayloadMode::Binary).unwrap(), empty);
+    }
+
+    #[test]
+    fn solution_frames_round_trip_bit_exactly_in_both_modes() {
+        for value in
+            [1.5, 123.456_789_012_345_67 / 3.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY]
+        {
+            let resp = Response::Solution {
+                items: vec![3, 1, 4, 1_000_000_000],
+                value,
+                evals: u64::MAX - 1,
+                wall_ms: 0.125,
+                telemetry: Telemetry { queue_wait_ms: 1.5, dataset_hits: 2, ..Default::default() },
+            };
+            for mode in [PayloadMode::Json, PayloadMode::Binary] {
+                let payload = resp.encode(mode);
+                match Response::decode(&payload, mode).unwrap() {
+                    Response::Solution { items, value: v, evals, wall_ms, telemetry } => {
+                        assert_eq!(items, vec![3, 1, 4, 1_000_000_000]);
+                        if value.is_nan() {
+                            assert!(v.is_nan());
+                        } else {
+                            assert_eq!(v.to_bits(), value.to_bits(), "{mode:?}");
+                        }
+                        assert_eq!(evals, u64::MAX - 1);
+                        assert_eq!(wall_ms, 0.125);
+                        assert_eq!(telemetry.dataset_hits, 2);
+                    }
+                    other => panic!("wrong response {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_constraint_tables_ride_as_blobs_bit_exactly() {
+        use crate::constraints::spec::{GroupSpec, WeightSpec};
+        // weights with long mantissas that decimal text could mangle
+        let w: Vec<f64> = (0..64).map(|i| (i as f64 + 0.1) / 3.0).collect();
+        let of: Vec<u32> = (0..64).map(|i| i % 5).collect();
+        let mut spec = card_spec("csn-2k", 5, 1, 100);
+        spec.constraint = ConstraintSpec::Intersection(vec![
+            ConstraintSpec::Knapsack {
+                budget: 10.0,
+                k: 5,
+                weights: WeightSpec::Explicit(w.clone()),
+            },
+            ConstraintSpec::PartitionMatroid {
+                k: 5,
+                caps: vec![1; 5],
+                groups: GroupSpec::Explicit(of.clone()),
+            },
+        ]);
+        let req = Request::DefineProblem { id: 3, problem: spec };
+        let bin = req.encode(PayloadMode::Binary);
+        // both tables left the document for the blob section
+        let (_, end) = LazyDoc::scan(&bin).unwrap();
+        let text = std::str::from_utf8(&bin[..end]).unwrap();
+        assert!(text.contains(r#""blob":0"#) && text.contains(r#""blob":1"#), "{text}");
+        assert!(
+            !text.contains(r#""w":["#) && !text.contains(r#""of":["#),
+            "tables still inline: {text}"
+        );
+        assert_eq!(Request::decode(&bin, PayloadMode::Binary).unwrap(), req);
+        // and the JSON mode still carries them inline, identically
+        let json = req.encode(PayloadMode::Json);
+        assert_eq!(Request::decode(&json, PayloadMode::Json).unwrap(), req);
+    }
+
+    #[test]
+    fn malformed_blob_sections_surface_structured_errors() {
+        let req = Request::Compress {
+            problem_id: 1,
+            compressor: "greedy".into(),
+            part: vec![1, 2, 3],
+            cap: 8,
+            seed: 4,
+        };
+        let good = req.encode(PayloadMode::Binary);
+        let (_, end) = LazyDoc::scan(&good).unwrap();
+        // truncated length prefix (1–3 trailing bytes)
+        for cut in 1..4usize {
+            let bad = &good[..end + cut];
+            let err = Request::decode(bad, PayloadMode::Binary).unwrap_err();
+            assert!(matches!(err, Error::Protocol(_)), "cut={cut}: {err}");
+        }
+        // declared length runs past the end of the frame
+        let mut overrun = good[..end].to_vec();
+        overrun.extend_from_slice(&(u32::MAX).to_le_bytes());
+        overrun.extend_from_slice(&[0u8; 8]);
+        let err = Request::decode(&overrun, PayloadMode::Binary).unwrap_err();
+        assert!(err.to_string().contains("overruns"), "{err}");
+        // misaligned blob: 13 bytes cannot hold 3 u32s
+        let mut misaligned = good[..end].to_vec();
+        misaligned.extend_from_slice(&13u32.to_le_bytes());
+        misaligned.extend_from_slice(&[0u8; 13]);
+        let err = Request::decode(&misaligned, PayloadMode::Binary).unwrap_err();
+        assert!(err.to_string().contains("declares"), "{err}");
+        // marker pointing at a blob the frame does not carry
+        let doc_only = &good[..end];
+        let err = Request::decode(doc_only, PayloadMode::Binary).unwrap_err();
+        assert!(err.to_string().contains("marker names blob"), "{err}");
+        // a binary frame handed to a json-mode connection is refused
+        let err = Request::decode(&good, PayloadMode::Json).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+    }
+
+    #[test]
+    fn hello_and_shutdown_frames_are_mode_invariant() {
+        // handshake frames must be identical bytes in both modes —
+        // negotiation happens *inside* them, so they can never depend
+        // on its outcome
+        let hello = Request::Hello { clock_ms: 2.5, payload: PayloadMode::Binary };
+        assert_eq!(hello.encode(PayloadMode::Json), hello.encode(PayloadMode::Binary));
+        assert_eq!(
+            Request::Shutdown.encode(PayloadMode::Json),
+            Request::Shutdown.encode(PayloadMode::Binary)
+        );
+        let reply =
+            Response::Hello { capacity: 4, clock_echo_ms: 2.5, payload: PayloadMode::Binary };
+        assert_eq!(reply.encode(PayloadMode::Json), reply.encode(PayloadMode::Binary));
+        assert_eq!(
+            Response::Bye.encode(PayloadMode::Json),
+            Response::Bye.encode(PayloadMode::Binary)
+        );
+        // and they decode on a binary connection (empty blob section)
+        let payload = hello.encode(PayloadMode::Binary);
+        assert_eq!(Request::decode(&payload, PayloadMode::Binary).unwrap(), hello);
+    }
+
+    #[test]
+    fn send_recv_helpers_report_payload_bytes() {
+        let req = Request::Compress {
+            problem_id: 2,
+            compressor: "greedy".into(),
+            part: (0..1000).collect(),
+            cap: 1000,
+            seed: 7,
+        };
+        for mode in [PayloadMode::Json, PayloadMode::Binary] {
+            let mut buf = Vec::new();
+            let sent = send_request(&mut buf, &req, mode).unwrap();
+            assert_eq!(sent, buf.len() - 4, "prefix excluded from the byte count");
+            let (back, received) = recv_request(&mut Cursor::new(buf), mode).unwrap();
+            assert_eq!(back, req);
+            assert_eq!(received, sent);
+        }
+        // binary moves 1000 ids in 4 bytes each vs ≥2 digits + comma
+        let jn = req.encode(PayloadMode::Json).len();
+        let bn = req.encode(PayloadMode::Binary).len();
+        assert!(bn < jn, "binary frame ({bn} B) not smaller than JSON ({jn} B)");
     }
 }

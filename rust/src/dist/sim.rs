@@ -43,6 +43,13 @@
 //! problem, surfaces as one [`crate::dist::PartEvent::SpecShipped`],
 //! and later rounds reuse the interned spec — the sim analogue of the
 //! TCP backend's once-per-connection `define-problem`.
+//!
+//! Wire-faithful mode also round-trips **both protocol v6 payload
+//! encodings**: the interned spec must survive a `define-problem` frame
+//! in JSON *and* binary form, and every machine's part ids and solution
+//! echo through both encodings bit-exactly before the part reports —
+//! so an encoding divergence fails the round instead of silently
+//! changing an answer.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -52,7 +59,10 @@ use crate::algorithms::Compressor;
 use crate::constraints::Constraint;
 use crate::coordinator::capacity::CapacityProfile;
 use crate::data::DatasetRef;
-use crate::dist::protocol::{compressor_from_name, compressor_wire_name, ProblemSpec};
+use crate::dist::protocol::{
+    compressor_from_name, compressor_wire_name, PayloadMode, ProblemSpec, Request, Response,
+    Telemetry,
+};
 use crate::dist::{Backend, PartEvent, RoundSession, RoundSink, SpecInterner};
 use crate::error::{Error, Result};
 use crate::objectives::{EvalCounter, Problem};
@@ -224,6 +234,26 @@ impl Backend for SimBackend {
                     return Err(Error::Protocol(
                         "problem spec did not survive a JSON round-trip".into(),
                     ));
+                }
+                // v6: the spec must also survive a define-problem frame
+                // in BOTH payload encodings (the binary encoder lifts
+                // explicit constraint tables into little-endian blobs)
+                let define = Request::DefineProblem {
+                    id: interned.id,
+                    problem: (*interned.spec).clone(),
+                };
+                for mode in [PayloadMode::Json, PayloadMode::Binary] {
+                    match Request::decode(&define.encode(mode), mode)? {
+                        Request::DefineProblem { problem, .. }
+                            if problem == *interned.spec => {}
+                        _ => {
+                            return Err(Error::Protocol(format!(
+                                "problem spec did not survive a {} define-problem \
+                                 round-trip",
+                                mode.wire_name()
+                            )))
+                        }
+                    }
                 }
             }
             let comp = compressor_from_name(&compressor_wire_name(compressor)?)?;
@@ -429,11 +459,28 @@ impl SimRound {
             let _ = tx.send(Ok(PartEvent::Delay { part: i, virtual_ms: delay_ms }));
         }
 
+        // wire-faithful (v6): the part's ids cross the simulated wire in
+        // both payload encodings before executing; a divergent echo
+        // fails the round instead of silently changing an answer
+        if self.fold_evals.is_some() {
+            if let Err(e) = self.echo_part_both_encodings(part, seed) {
+                let _ = tx.send(Err(e));
+                return false;
+            }
+        }
         // same part, same positional seed — replacements change cost,
         // never the answer
         let t0 = trace::now_us();
         match self.compressor.compress(&self.problem, part, seed) {
             Ok(solution) => {
+                // wire-faithful (v6): the solution echoes through both
+                // payload encodings bit-exactly before it reports
+                if self.fold_evals.is_some() {
+                    if let Err(e) = echo_solution_both_encodings(&solution) {
+                        let _ = tx.send(Err(e));
+                        return false;
+                    }
+                }
                 if trace::enabled() {
                     trace::span(
                         &format!("sim-{i}"),
@@ -465,6 +512,58 @@ impl SimRound {
             }
         }
     }
+
+    /// Wire-faithful echo of one machine's compress request through
+    /// BOTH payload encodings (protocol v6): the decoded frame must be
+    /// identical to the original in each — the socket-free analogue of
+    /// the TCP backend's binary/JSON bit-identity guarantee.
+    fn echo_part_both_encodings(&self, part: &[u32], seed: u64) -> Result<()> {
+        let req = Request::Compress {
+            // the id is immaterial here: this echoes the encoding, not
+            // the interning protocol
+            problem_id: 0,
+            compressor: compressor_wire_name(self.compressor.as_ref())?,
+            part: part.to_vec(),
+            cap: part.len(),
+            seed,
+        };
+        for mode in [PayloadMode::Json, PayloadMode::Binary] {
+            if Request::decode(&req.encode(mode), mode)? != req {
+                return Err(Error::Protocol(format!(
+                    "compress request did not survive the {} payload encoding",
+                    mode.wire_name()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Wire-faithful echo of one machine's solution through BOTH payload
+/// encodings (protocol v6): items and value must come back bit-exact
+/// (NaN/±inf values included, which is why the comparison is on bits).
+fn echo_solution_both_encodings(solution: &crate::algorithms::Solution) -> Result<()> {
+    let resp = Response::Solution {
+        items: solution.items.clone(),
+        value: solution.value,
+        evals: 0,
+        wall_ms: 0.0,
+        telemetry: Telemetry::default(),
+    };
+    for mode in [PayloadMode::Json, PayloadMode::Binary] {
+        match Response::decode(&resp.encode(mode), mode)? {
+            Response::Solution { items, value, .. }
+                if items == solution.items
+                    && value.to_bits() == solution.value.to_bits() => {}
+            _ => {
+                return Err(Error::Protocol(format!(
+                    "solution did not survive the {} payload encoding",
+                    mode.wire_name()
+                )))
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -62,7 +62,8 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use crate::algorithms::{Compressor, Solution};
 use crate::coordinator::capacity::CapacityProfile;
 use crate::dist::protocol::{
-    compressor_wire_name, recv_msg, send_msg, ProblemSpec, Request, Response, Telemetry,
+    compressor_wire_name, recv_response, send_request, PayloadMode, ProblemSpec, Request,
+    Response, Telemetry,
 };
 use crate::dist::{Backend, PartEvent, RoundSession, RoundSink, SpecInterner, WorkerStats};
 use crate::error::{Error, Result};
@@ -79,6 +80,15 @@ struct WorkerConn {
     /// Problem ids already interned on THIS connection (protocol v4).
     /// Dies with the connection, so reconnects re-intern transparently.
     defined: HashSet<u64>,
+    /// Negotiated payload encoding (protocol v6): the coordinator always
+    /// advertises binary; the worker's hello reply decides. Fixed for
+    /// the connection's lifetime.
+    mode: PayloadMode,
+    /// Payload bytes (sent + received) since the last drain, attributed
+    /// by the connection's negotiated mode — drained into the per-worker
+    /// [`WorkerStats`] split after every dispatched part.
+    bytes_binary: u64,
+    bytes_json: u64,
 }
 
 impl WorkerConn {
@@ -99,12 +109,19 @@ impl WorkerConn {
             stream,
             capacity: 0,
             defined: HashSet::new(),
+            // handshake frames are exchanged pre-negotiation, in the
+            // JSON shape any peer understands (protocol v6)
+            mode: PayloadMode::Json,
+            bytes_binary: 0,
+            bytes_json: 0,
         };
         let t0 = trace::now_us();
-        let reply = conn.roundtrip(&Request::Hello { clock_ms: trace::clock_ms() })?;
+        let hello =
+            Request::Hello { clock_ms: trace::clock_ms(), payload: PayloadMode::Binary };
+        let reply = conn.roundtrip(&hello)?;
         conn.stream.set_read_timeout(None).ok();
         match reply {
-            Response::Hello { capacity, clock_echo_ms } => {
+            Response::Hello { capacity, clock_echo_ms, payload } => {
                 if trace::enabled() {
                     // the echo bounds coordinator↔worker clock alignment
                     // by this handshake's RTT (docs/OBSERVABILITY.md)
@@ -120,6 +137,10 @@ impl WorkerConn {
                     );
                 }
                 conn.capacity = capacity;
+                // the worker echoes binary only when it accepts it; a
+                // JSON-only (or pinned) worker answers "json" — or, for
+                // a silent pre-v6-shaped hello, defaults to it
+                conn.mode = payload;
                 Ok(conn)
             }
             other => Err(Error::Protocol(format!(
@@ -129,10 +150,24 @@ impl WorkerConn {
     }
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response> {
-        send_msg(&mut self.stream, &req.to_json())
+        let sent = send_request(&mut self.stream, req, self.mode)
             .map_err(|e| Error::transport(&self.addr, e))?;
-        let msg = recv_msg(&mut self.stream).map_err(|e| Error::transport(&self.addr, e))?;
-        Response::from_json(&msg)
+        let (resp, received) = recv_response(&mut self.stream, self.mode)
+            .map_err(|e| Error::transport(&self.addr, e))?;
+        let bytes = (sent + received) as u64;
+        match self.mode {
+            PayloadMode::Binary => self.bytes_binary += bytes,
+            PayloadMode::Json => self.bytes_json += bytes,
+        }
+        Ok(resp)
+    }
+
+    /// Drain the payload-byte counters accumulated since the last call.
+    fn take_payload_bytes(&mut self) -> (u64, u64) {
+        (
+            std::mem::take(&mut self.bytes_binary),
+            std::mem::take(&mut self.bytes_json),
+        )
     }
 }
 
@@ -760,7 +795,20 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                         false,
                     ),
                 };
+                // payload-byte split (protocol v6): charged per worker
+                // whatever the outcome — the bytes did cross the wire
+                let (bytes_binary, bytes_json) =
+                    conn.as_mut().map(WorkerConn::take_payload_bytes).unwrap_or((0, 0));
                 st = fleet.lock();
+                if bytes_binary > 0 || bytes_json > 0 {
+                    let addr = st.slots[id].addr.clone();
+                    let entry = st.stats.entry(addr.clone()).or_insert_with(|| WorkerStats {
+                        addr,
+                        ..WorkerStats::default()
+                    });
+                    entry.payload_bytes_binary += bytes_binary;
+                    entry.payload_bytes_json += bytes_json;
+                }
                 if spec_shipped {
                     // spec-byte telemetry rides the round's event
                     // stream, ahead of the part's own event
@@ -907,6 +955,7 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
 mod tests {
     use super::*;
     use crate::algorithms::LazyGreedy;
+    use crate::dist::protocol::{recv_msg, send_msg};
     use std::net::TcpListener;
 
     #[test]
@@ -997,14 +1046,20 @@ mod tests {
                     let Ok(msg) = recv_msg(&mut stream) else { break };
                     let Ok(req) = Request::from_json(&msg) else { break };
                     match req {
-                        Request::Hello { clock_ms } => {
+                        Request::Hello { clock_ms, .. } => {
                             if hello_delay_ms > 0 {
                                 std::thread::sleep(std::time::Duration::from_millis(
                                     hello_delay_ms,
                                 ));
                             }
-                            let hello =
-                                Response::Hello { capacity, clock_echo_ms: clock_ms };
+                            // impostors are JSON-only peers: declining
+                            // the binary advertisement keeps every frame
+                            // they exchange a plain JSON document
+                            let hello = Response::Hello {
+                                capacity,
+                                clock_echo_ms: clock_ms,
+                                payload: PayloadMode::Json,
+                            };
                             if send_msg(&mut stream, &hello.to_json()).is_err() {
                                 break;
                             }
@@ -1270,6 +1325,10 @@ mod tests {
         // the impostor reports zero evals/wall and default telemetry
         assert_eq!(stats[0].oracle_evals, 0);
         assert_eq!(stats[0].dataset_misses, 0);
+        // it also declined the binary advertisement, so every payload
+        // byte on this connection lands in the JSON bucket (v6 split)
+        assert!(stats[0].payload_bytes_json > 0, "JSON payload bytes must be charged");
+        assert_eq!(stats[0].payload_bytes_binary, 0);
     }
 
     #[test]

@@ -21,6 +21,14 @@
 //! request (protocol v3) is answered with an error response, never
 //! silently spilled. The worker advertises its µ in the handshake so
 //! heterogeneous coordinators dispatch by capacity fit.
+//!
+//! Payload encoding (protocol v6) is negotiated per connection in the
+//! same handshake: when the coordinator advertises `payload: "binary"`
+//! and the worker was not pinned to `--payload json`, the hello reply
+//! echoes `binary` and every later frame on the connection may carry
+//! blob sections; otherwise the connection stays pure JSON. Mixed
+//! fleets are therefore fine — each connection negotiates
+//! independently.
 
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -31,7 +39,9 @@ use crate::constraints::Constraint;
 
 use crate::algorithms::Compressor as _;
 use crate::data::DatasetRef;
-use crate::dist::protocol::{recv_msg, send_msg, ProblemSpec, Request, Response, Telemetry};
+use crate::dist::protocol::{
+    read_frame, send_response, PayloadMode, ProblemSpec, Request, Response, Telemetry,
+};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
 use crate::util::log;
@@ -48,11 +58,22 @@ pub struct WorkerConfig {
     /// robustness experiments over *real* workers. 0 (the default)
     /// means an honest worker.
     pub straggle_ms: u64,
+    /// The richest payload encoding this worker will negotiate
+    /// (`--payload`). [`PayloadMode::Binary`] (the default) lets
+    /// binary-advertising coordinators ship blob payloads;
+    /// [`PayloadMode::Json`] pins every connection to pure JSON — the
+    /// knob behind mixed-fleet tests and wire debugging.
+    pub payload: PayloadMode,
 }
 
 impl Default for WorkerConfig {
     fn default() -> Self {
-        WorkerConfig { listen: "127.0.0.1:7070".into(), capacity: 200, straggle_ms: 0 }
+        WorkerConfig {
+            listen: "127.0.0.1:7070".into(),
+            capacity: 200,
+            straggle_ms: 0,
+            payload: PayloadMode::Binary,
+        }
     }
 }
 
@@ -235,9 +256,13 @@ fn serve_connection(
     let mut problem_hits = 0u64;
     let mut problem_misses = 0u64;
     let mut problem_evictions = 0u64;
+    // Payload mode for THIS connection (protocol v6): JSON until the
+    // handshake negotiates otherwise, so pre-negotiation frames are
+    // decoded exactly as a v5-shaped peer would send them.
+    let mut mode = PayloadMode::Json;
     loop {
-        let msg = match recv_msg(&mut stream) {
-            Ok(m) => m,
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
             // EOF / reset: coordinator went away, wait for the next one
             Err(Error::Io(_)) => return Ok(ConnectionEnd::Disconnected),
             Err(e) => return Err(e),
@@ -246,22 +271,34 @@ fn serve_connection(
         // starting the compute (including injected straggle sleep) is
         // worker-side queueing, reported in the v5 telemetry block
         let t_recv = std::time::Instant::now();
-        let request = match Request::from_json(&msg) {
+        let request = match Request::decode(&frame, mode) {
             Ok(r) => r,
             Err(e) => {
                 // protocol violation: tell the peer, drop the connection
-                send_msg(&mut stream, &Response::Error { msg: e.to_string() }.to_json()).ok();
+                send_response(&mut stream, &Response::Error { msg: e.to_string() }, mode).ok();
                 return Err(e);
             }
         };
         let reply = match request {
-            Request::Hello { clock_ms } => {
-                // echo the coordinator's trace clock so its spans and
-                // ours share a timeline (skew bounded by handshake RTT)
-                Response::Hello { capacity: cfg.capacity, clock_echo_ms: clock_ms }
+            Request::Hello { clock_ms, payload } => {
+                // negotiate the payload encoding: binary only when the
+                // coordinator advertised it AND this worker allows it —
+                // then echo the coordinator's trace clock so its spans
+                // and ours share a timeline (skew bounded by RTT)
+                mode = if cfg.payload == PayloadMode::Binary && payload == PayloadMode::Binary
+                {
+                    PayloadMode::Binary
+                } else {
+                    PayloadMode::Json
+                };
+                Response::Hello {
+                    capacity: cfg.capacity,
+                    clock_echo_ms: clock_ms,
+                    payload: mode,
+                }
             }
             Request::Shutdown => {
-                send_msg(&mut stream, &Response::Bye.to_json()).ok();
+                send_response(&mut stream, &Response::Bye, mode).ok();
                 return Ok(ConnectionEnd::Shutdown);
             }
             Request::DefineProblem { id, problem } => {
@@ -321,7 +358,7 @@ fn serve_connection(
                 }
             }
         };
-        send_msg(&mut stream, &reply.to_json())?;
+        send_response(&mut stream, &reply, mode)?;
     }
 }
 
@@ -383,11 +420,16 @@ mod tests {
     /// In-process worker on an ephemeral port (the *process*-boundary
     /// version lives in rust/tests/dist_integration.rs).
     fn spawn_worker(capacity: usize) -> (std::thread::JoinHandle<Result<()>>, String) {
+        spawn_worker_cfg(WorkerConfig { capacity, ..WorkerConfig::default() })
+    }
+
+    /// Same, but with the full config exposed — the payload-negotiation
+    /// tests need to pin `payload` on the worker side.
+    fn spawn_worker_cfg(cfg: WorkerConfig) -> (std::thread::JoinHandle<Result<()>>, String) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let handle = std::thread::spawn(move || {
             let mut cache = DatasetCache::default();
-            let cfg = WorkerConfig { capacity, ..WorkerConfig::default() };
             let (stream, _) = listener.accept().map_err(Error::Io)?;
             match serve_connection(stream, &cfg, &mut cache)? {
                 ConnectionEnd::Shutdown | ConnectionEnd::Disconnected => Ok(()),
@@ -401,10 +443,15 @@ mod tests {
         let (handle, addr) = spawn_worker(64);
         let mut stream = TcpStream::connect(&addr).unwrap();
 
-        // v5 handshake: the worker echoes the coordinator's clock
-        protocol::send_msg(&mut stream, &Request::Hello { clock_ms: 41.5 }.to_json()).unwrap();
+        // v5 handshake: the worker echoes the coordinator's clock; a
+        // JSON-only coordinator keeps the connection in JSON mode
+        let hi = Request::Hello { clock_ms: 41.5, payload: PayloadMode::Json };
+        protocol::send_msg(&mut stream, &hi.to_json()).unwrap();
         let hello = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
-        assert_eq!(hello, Response::Hello { capacity: 64, clock_echo_ms: 41.5 });
+        assert_eq!(
+            hello,
+            Response::Hello { capacity: 64, clock_echo_ms: 41.5, payload: PayloadMode::Json }
+        );
 
         let spec = ProblemSpec {
             dataset: DatasetSpec::Registry { name: "csn-2k".into(), seed: 42 },
@@ -563,13 +610,105 @@ mod tests {
         handle.join().unwrap().unwrap();
     }
 
+    /// v6: one connection negotiates binary, one stays JSON; the same
+    /// define + compress sequence must yield bit-identical solutions.
+    #[test]
+    fn binary_negotiation_switches_the_connection_and_matches_json() {
+        use crate::dist::protocol::{recv_response, send_request};
+
+        let spec = ProblemSpec {
+            dataset: DatasetSpec::Registry { name: "csn-2k".into(), seed: 7 },
+            objective: "exemplar".into(),
+            k: 4,
+            seed: 7,
+            eval_m: 500,
+            h2: 0.0,
+            sigma2: 0.0,
+            constraint: ConstraintSpec::Cardinality { k: 4 },
+        };
+        let define = Request::DefineProblem { id: 1, problem: spec };
+        let compress = Request::Compress {
+            problem_id: 1,
+            compressor: "greedy".into(),
+            part: (0..12).collect(),
+            cap: 64,
+            seed: 3,
+        };
+
+        let run = |advertise: PayloadMode| -> (PayloadMode, Response) {
+            let (handle, addr) = spawn_worker(64);
+            let mut stream = TcpStream::connect(&addr).unwrap();
+            // hello frames are mode-invariant: sent pre-negotiation
+            let hi = Request::Hello { clock_ms: 7.0, payload: advertise };
+            send_request(&mut stream, &hi, PayloadMode::Json).unwrap();
+            let (resp, _) = recv_response(&mut stream, PayloadMode::Json).unwrap();
+            let mode = match resp {
+                Response::Hello { payload, .. } => payload,
+                other => panic!("expected hello, got {other:?}"),
+            };
+            send_request(&mut stream, &define, mode).unwrap();
+            let (defined, _) = recv_response(&mut stream, mode).unwrap();
+            assert_eq!(defined, Response::Defined { id: 1 });
+            send_request(&mut stream, &compress, mode).unwrap();
+            let (solution, _) = recv_response(&mut stream, mode).unwrap();
+            send_request(&mut stream, &Request::Shutdown, mode).unwrap();
+            let (bye, _) = recv_response(&mut stream, mode).unwrap();
+            assert_eq!(bye, Response::Bye);
+            handle.join().unwrap().unwrap();
+            (mode, solution)
+        };
+
+        let (bin_mode, bin) = run(PayloadMode::Binary);
+        let (json_mode, json) = run(PayloadMode::Json);
+        assert_eq!(bin_mode, PayloadMode::Binary, "default worker must accept binary");
+        assert_eq!(json_mode, PayloadMode::Json);
+        match (&bin, &json) {
+            (
+                Response::Solution { items: a, value: va, evals: ea, .. },
+                Response::Solution { items: b, value: vb, evals: eb, .. },
+            ) => {
+                assert_eq!(a, b, "items must be bit-identical across encodings");
+                assert_eq!(va.to_bits(), vb.to_bits(), "values must be bit-identical");
+                assert_eq!(ea, eb);
+            }
+            other => panic!("expected two solutions, got {other:?}"),
+        }
+    }
+
+    /// v6: a worker pinned to `--payload json` declines a binary
+    /// advertisement, and the connection stays JSON end-to-end.
+    #[test]
+    fn json_pinned_worker_declines_binary_advertisement() {
+        use crate::dist::protocol::{recv_response, send_request};
+
+        let cfg =
+            WorkerConfig { capacity: 64, payload: PayloadMode::Json, ..WorkerConfig::default() };
+        let (handle, addr) = spawn_worker_cfg(cfg);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let hi = Request::Hello { clock_ms: 0.25, payload: PayloadMode::Binary };
+        send_request(&mut stream, &hi, PayloadMode::Json).unwrap();
+        let (resp, _) = recv_response(&mut stream, PayloadMode::Json).unwrap();
+        assert_eq!(
+            resp,
+            Response::Hello { capacity: 64, clock_echo_ms: 0.25, payload: PayloadMode::Json }
+        );
+        send_request(&mut stream, &Request::Shutdown, PayloadMode::Json).unwrap();
+        let (bye, _) = recv_response(&mut stream, PayloadMode::Json).unwrap();
+        assert_eq!(bye, Response::Bye);
+        handle.join().unwrap().unwrap();
+    }
+
     #[test]
     fn bounded_problem_table_evicts_one_victim_and_hints_reintern() {
         let (handle, addr) = spawn_worker(64);
         let mut stream = TcpStream::connect(&addr).unwrap();
-        protocol::send_msg(&mut stream, &Request::Hello { clock_ms: 0.0 }.to_json()).unwrap();
+        let hi = Request::Hello { clock_ms: 0.0, payload: PayloadMode::Json };
+        protocol::send_msg(&mut stream, &hi.to_json()).unwrap();
         let hello = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
-        assert_eq!(hello, Response::Hello { capacity: 64, clock_echo_ms: 0.0 });
+        assert_eq!(
+            hello,
+            Response::Hello { capacity: 64, clock_echo_ms: 0.0, payload: PayloadMode::Json }
+        );
         let base = ProblemSpec {
             dataset: DatasetSpec::Registry { name: "csn-2k".into(), seed: 42 },
             objective: "exemplar".into(),

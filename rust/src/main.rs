@@ -11,7 +11,7 @@
 //!            [--backend local|tcp|sim] [--workers host:port,host:port…]
 //!            [--sim-loss 1] [--sim-loss-prob 0.0]
 //!            [--sim-straggler-prob 0.0] [--sim-straggler-ms 0] [--sim-seed 0]
-//! hss worker --listen 127.0.0.1:7070 --capacity 200   # host one machine
+//! hss worker --listen 127.0.0.1:7070 --capacity 200 [--payload binary|json]
 //! hss plan   --n 100000 --k 50 --capacity 800    # round plan / bounds
 //! hss datasets                                    # list registry
 //! hss artifacts                                   # list AOT artifacts
@@ -148,6 +148,11 @@ fn print_worker_help() {
     println!("                    dispatch each part only to a worker that can hold it.");
     println!("  --straggle-ms MS  artificial per-request latency (default 0) — straggler");
     println!("                    injection for dispatch benches and robustness experiments");
+    println!("  --payload ENC     richest payload encoding to negotiate: binary|json");
+    println!("                    (default binary). Protocol v6 coordinators advertise");
+    println!("                    binary row/id blocks at handshake; 'json' pins this");
+    println!("                    worker to plain JSON frames (mixed fleets are fine —");
+    println!("                    negotiation is per connection, answers are bit-identical)");
     println!("  --log-level L     error|warn|info|debug (default warn; HSS_LOG env is the");
     println!("                    fallback, the flag wins)");
     println!();
@@ -163,10 +168,20 @@ fn cmd_worker(args: &Args) -> Result<()> {
         print_worker_help();
         return Ok(());
     }
+    let payload = match args.get_or("payload", "binary") {
+        "binary" => hss::dist::protocol::PayloadMode::Binary,
+        "json" => hss::dist::protocol::PayloadMode::Json,
+        other => {
+            return Err(Error::invalid(format!(
+                "--payload must be binary or json, got '{other}'"
+            )))
+        }
+    };
     let cfg = worker::WorkerConfig {
         listen: args.get_or("listen", "127.0.0.1:7070").to_string(),
         capacity: args.usize("capacity", 200)?,
         straggle_ms: args.u64("straggle-ms", 0)?,
+        payload,
     };
     worker::serve(&cfg)
 }
@@ -387,7 +402,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             let util = if run_ms > 0.0 { 100.0 * w.busy_ms / run_ms } else { 0.0 };
             println!(
                 "  {:<21} parts={} evals={} busy={:.0}ms ({:.0}%) queueWait={:.1}ms \
-                 dataset={}h/{}m problems={}h/{}m/{}e",
+                 dataset={}h/{}m problems={}h/{}m/{}e payload={}B bin/{}B json",
                 w.addr,
                 w.parts,
                 w.oracle_evals,
@@ -398,7 +413,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 w.dataset_misses,
                 w.problem_hits,
                 w.problem_misses,
-                w.problem_evictions
+                w.problem_evictions,
+                w.payload_bytes_binary,
+                w.payload_bytes_json
             );
         }
     }
@@ -501,8 +518,9 @@ fn print_lint_help() {
     println!("                   `// relaxed: <reason>` justification");
     println!("  lock-order       cross-function lock-acquisition cycles in the");
     println!("                   dispatcher files (static deadlock detection)");
-    println!("  panic-freedom    unwrap/expect/panic in non-test dist/ and coordinator/");
-    println!("                   need an adjacent `// invariant: <reason>` justification");
+    println!("  panic-freedom    unwrap/expect/panic in non-test dist/, coordinator/ and");
+    println!("                   util/json/ (the wire decode paths) need an adjacent");
+    println!("                   `// invariant: <reason>` justification");
     println!("  logging          raw print macros outside util/log.rs and main.rs");
     println!("  protocol-doc     wire field literals must appear in docs/PROTOCOL.md,");
     println!("                   registry rows must still exist in code, and");

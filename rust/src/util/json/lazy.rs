@@ -1,0 +1,486 @@
+//! Lazy byte scanner over JSON documents (the ADR-002 trade, measured
+//! at ~33× for partial field extraction): instead of building a
+//! [`Json`](super::Json) tree, scan the raw bytes once, record where
+//! each *top-level* field's value starts and ends, and materialize only
+//! the fields the caller asks for. Values that are never requested —
+//! typically the large id/row arrays in a wire frame — are skipped with
+//! a string-and-escape-aware bracket matcher and never allocated.
+//!
+//! The scanner is also how the protocol-v6 binary framing finds the
+//! boundary between a frame's JSON control document and the blob
+//! section appended after it ([`end_of_value`]).
+//!
+//! Agreement contract with the full parser: every field the scanner
+//! *materializes* (via [`LazyDoc::str`], [`LazyDoc::f64`], …) yields the
+//! same value — or the same rejection — as
+//! [`Json::parse`](super::Json::parse) on the whole document. Fields
+//! that are never read are only structurally skipped, so a document
+//! with garbage in an untouched field can pass the scanner while the
+//! full parser rejects it; the differential tests in
+//! `rust/tests/protocol_fuzz.rs` hold the two implementations to the
+//! materialized-field agreement on every corpus frame. Malformed input
+//! surfaces a structured [`Error`], never a panic — this module sits
+//! inside the `hss lint` panic-freedom scope.
+
+use crate::error::{Error, Result};
+
+use super::{as_lossless_u64, Json};
+
+/// Byte offset one past the end of the single JSON value starting at
+/// `start` (which must not be whitespace). Strings, escapes and nested
+/// brackets are honoured; the value's *internal* grammar is not fully
+/// validated (that is the full parser's job — a frame decoder calls
+/// this to find the end of the control document, then parses fields
+/// from within it).
+pub fn end_of_value(b: &[u8], start: usize) -> Result<usize> {
+    let err = |i: usize, msg: &str| Error::Json { offset: i, msg: msg.to_string() };
+    let mut i = start;
+    let first = *b.get(i).ok_or_else(|| err(i, "unexpected end"))?;
+    match first {
+        b'"' => skip_string(b, i),
+        b'{' | b'[' => {
+            // bracket depth over both delimiter kinds; strings are
+            // skipped wholesale so braces inside them never count
+            let mut depth = 0usize;
+            while i < b.len() {
+                match b[i] {
+                    b'"' => {
+                        i = skip_string(b, i)?;
+                        continue;
+                    }
+                    b'{' | b'[' => depth += 1,
+                    b'}' | b']' => {
+                        depth = depth
+                            .checked_sub(1)
+                            .ok_or_else(|| err(i, "unbalanced bracket"))?;
+                        if depth == 0 {
+                            return Ok(i + 1);
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            Err(err(i, "unterminated value"))
+        }
+        b't' | b'f' | b'n' | b'-' | b'0'..=b'9' => {
+            // scalar: runs to the next structural byte or whitespace
+            while i < b.len()
+                && !matches!(b[i], b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r')
+            {
+                i += 1;
+            }
+            Ok(i)
+        }
+        c => Err(err(i, &format!("unexpected byte 0x{c:02x}"))),
+    }
+}
+
+/// Offset one past the closing quote of the string starting at `i`
+/// (which must hold `"`), honouring backslash escapes.
+fn skip_string(b: &[u8], i: usize) -> Result<usize> {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'"' => return Ok(j + 1),
+            b'\\' => j += 2,
+            _ => j += 1,
+        }
+    }
+    Err(Error::Json { offset: i, msg: "unterminated string".to_string() })
+}
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && matches!(b[i], b' ' | b'\t' | b'\n' | b'\r') {
+        i += 1;
+    }
+    i
+}
+
+/// Parse a numeric token under exactly the full parser's number grammar
+/// (the same scan, then `str::parse`) so the lazy and full readers
+/// accept the same spellings — Rust-only forms like `nan`, `inf` or a
+/// leading `+`, which `Json::parse` rejects, are rejected here too.
+fn number_token(raw: &[u8]) -> Option<f64> {
+    let mut i = 0;
+    if raw.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    while matches!(raw.get(i), Some(b'0'..=b'9')) {
+        i += 1;
+    }
+    if raw.get(i) == Some(&b'.') {
+        i += 1;
+        while matches!(raw.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    if matches!(raw.get(i), Some(b'e') | Some(b'E')) {
+        i += 1;
+        if matches!(raw.get(i), Some(b'+') | Some(b'-')) {
+            i += 1;
+        }
+        while matches!(raw.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    if i != raw.len() {
+        return None;
+    }
+    std::str::from_utf8(raw).ok()?.parse::<f64>().ok()
+}
+
+/// One scanned top-level object: field keys (raw bytes between their
+/// quotes) and the byte range of each value, in document order.
+///
+/// ```
+/// use hss::util::json::lazy::LazyDoc;
+/// let (doc, end) = LazyDoc::scan(br#"{"type":"solution","value":2.5} trailing"#).unwrap();
+/// assert_eq!(doc.str("type").unwrap(), "solution");
+/// assert_eq!(doc.f64("value").unwrap(), 2.5);
+/// assert_eq!(end, 31); // where the blob section of a binary frame would start
+/// ```
+pub struct LazyDoc<'a> {
+    b: &'a [u8],
+    fields: Vec<(&'a [u8], std::ops::Range<usize>)>,
+}
+
+impl<'a> LazyDoc<'a> {
+    /// Scan the top-level object starting at the beginning of `b`
+    /// (leading whitespace allowed). Returns the doc and the offset one
+    /// past the object's closing brace — everything after that offset
+    /// is *not* part of the document (a binary frame's blob section).
+    pub fn scan(b: &'a [u8]) -> Result<(LazyDoc<'a>, usize)> {
+        let err = |i: usize, msg: &str| Error::Json { offset: i, msg: msg.to_string() };
+        let mut i = skip_ws(b, 0);
+        if b.get(i) != Some(&b'{') {
+            return Err(err(i, "expected top-level object"));
+        }
+        i += 1;
+        let mut fields = Vec::new();
+        i = skip_ws(b, i);
+        if b.get(i) == Some(&b'}') {
+            return Ok((LazyDoc { b, fields }, i + 1));
+        }
+        loop {
+            i = skip_ws(b, i);
+            if b.get(i) != Some(&b'"') {
+                return Err(err(i, "expected field name"));
+            }
+            let key_end = skip_string(b, i)?;
+            let key = &b[i + 1..key_end - 1];
+            i = skip_ws(b, key_end);
+            if b.get(i) != Some(&b':') {
+                return Err(err(i, "expected ':'"));
+            }
+            i = skip_ws(b, i + 1);
+            let val_end = end_of_value(b, i)?;
+            fields.push((key, i..val_end));
+            i = skip_ws(b, val_end);
+            match b.get(i) {
+                Some(b',') => i += 1,
+                Some(b'}') => return Ok((LazyDoc { b, fields }, i + 1)),
+                _ => return Err(err(i, "expected ',' or '}'")),
+            }
+        }
+    }
+
+    /// Top-level keys in document order, raw spelling (bytes between
+    /// the quotes; non-UTF-8 keys are skipped). Differential-testing
+    /// aid: lets a harness materialize every field a scanned document
+    /// claims to carry (`rust/tests/protocol_fuzz.rs`).
+    pub fn keys(&self) -> Vec<&'a str> {
+        self.fields.iter().filter_map(|(k, _)| std::str::from_utf8(k).ok()).collect()
+    }
+
+    /// Raw bytes of a top-level field's value (`None` when absent).
+    /// Duplicate keys resolve to the *last* occurrence, matching the
+    /// full parser's `BTreeMap::insert` semantics.
+    pub fn raw(&self, key: &str) -> Option<&'a [u8]> {
+        self.fields
+            .iter()
+            .rev()
+            .find(|(k, _)| *k == key.as_bytes())
+            .map(|(_, r)| &self.b[r.clone()])
+    }
+
+    fn required(&self, key: &str) -> Result<&'a [u8]> {
+        self.raw(key)
+            .ok_or_else(|| Error::Protocol(format!("missing field '{key}'")))
+    }
+
+    /// Required string field, unescaped. The no-escape fast path
+    /// borrows nothing and allocates once; values containing
+    /// backslashes or control bytes fall back to the full parser on the
+    /// field's slice (which also rejects what JSON rejects — raw
+    /// control characters are invalid inside strings).
+    pub fn str(&self, key: &str) -> Result<String> {
+        let raw = self.required(key)?;
+        if raw.first() != Some(&b'"') {
+            return Err(Error::Protocol(format!("field '{key}' is not a string")));
+        }
+        let inner = &raw[1..raw.len() - 1];
+        if !inner.iter().any(|&b| b == b'\\' || b < 0x20) {
+            return String::from_utf8(inner.to_vec())
+                .map_err(|_| Error::Protocol(format!("field '{key}' is not utf-8")));
+        }
+        match self.json(key)? {
+            Json::Str(s) => Ok(s),
+            _ => Err(Error::Protocol(format!("field '{key}' is not a string"))),
+        }
+    }
+
+    /// Required number field.
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        let raw = self.required(key)?;
+        number_token(raw)
+            .ok_or_else(|| Error::Protocol(format!("missing number field '{key}'")))
+    }
+
+    /// Required non-negative integer field.
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        let x = self
+            .f64(key)
+            .map_err(|_| Error::Protocol(format!("missing integer field '{key}'")))?;
+        if x >= 0.0 && x.fract() == 0.0 {
+            Ok(x as usize)
+        } else {
+            Err(Error::Protocol(format!("missing integer field '{key}'")))
+        }
+    }
+
+    /// Required lossless u64 field (decimal-string convention — the
+    /// lazy twin of [`super::wire_u64`]).
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        let raw = self.required(key)?;
+        let bad = || Error::Protocol(format!("field '{key}' is not a u64"));
+        if raw.first() == Some(&b'"') {
+            let inner = &raw[1..raw.len() - 1];
+            if inner.iter().any(|&b| b == b'\\' || b < 0x20) {
+                // escaped or control-byte spellings: let the full
+                // parser judge the string, then apply the convention
+                let v = self.json(key)?;
+                return as_lossless_u64(&v).ok_or_else(bad);
+            }
+            return std::str::from_utf8(inner)
+                .ok()
+                .and_then(|t| t.parse::<u64>().ok())
+                .ok_or_else(bad);
+        }
+        let x = number_token(raw).ok_or_else(bad)?;
+        as_lossless_u64(&Json::Num(x)).ok_or_else(bad)
+    }
+
+    /// Fully parse one field's value into a [`Json`] tree (for small
+    /// nested blocks like telemetry, where per-field laziness stops
+    /// paying).
+    pub fn json(&self, key: &str) -> Result<Json> {
+        let raw = self.required(key)?;
+        let text = std::str::from_utf8(raw)
+            .map_err(|_| Error::Protocol(format!("field '{key}' is not utf-8")))?;
+        Json::parse(text)
+    }
+
+    /// Like [`LazyDoc::json`] but `Ok(None)` when the field is absent.
+    pub fn json_opt(&self, key: &str) -> Result<Option<Json>> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(_) => self.json(key).map(Some),
+        }
+    }
+}
+
+/// Fast path for the wire's id arrays: parse a JSON array of plain
+/// non-negative integers (`[7,81,3]`) straight into `Vec<u32>` without
+/// building a tree. Returns `Ok(None)` when the array uses any
+/// construct outside that happy path (floats, exponents, nested values,
+/// whitespace variations are fine) — the caller falls back to the full
+/// parser so lazy and full decoding accept exactly the same documents.
+pub fn parse_u32_array(raw: &[u8]) -> Result<Option<Vec<u32>>> {
+    let mut i = skip_ws(raw, 0);
+    if raw.get(i) != Some(&b'[') {
+        return Ok(None);
+    }
+    i = skip_ws(raw, i + 1);
+    let mut out = Vec::new();
+    if raw.get(i) == Some(&b']') {
+        return if skip_ws(raw, i + 1) == raw.len() { Ok(Some(out)) } else { Ok(None) };
+    }
+    loop {
+        let start = i;
+        let mut val: u64 = 0;
+        while let Some(c @ b'0'..=b'9') = raw.get(i) {
+            val = val * 10 + u64::from(c - b'0');
+            if val > u64::from(u32::MAX) {
+                return Err(Error::Protocol("item id out of u32 range".to_string()));
+            }
+            i += 1;
+        }
+        if i == start {
+            // not a plain digit run (float, exponent, minus, garbage):
+            // let the full parser judge it
+            return Ok(None);
+        }
+        if matches!(raw.get(i), Some(b'.') | Some(b'e') | Some(b'E')) {
+            return Ok(None);
+        }
+        out.push(val as u32);
+        i = skip_ws(raw, i);
+        match raw.get(i) {
+            Some(b',') => i = skip_ws(raw, i + 1),
+            Some(b']') => {
+                return if skip_ws(raw, i + 1) == raw.len() {
+                    Ok(Some(out))
+                } else {
+                    Ok(None)
+                };
+            }
+            _ => return Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_of_value_spans_scalars_strings_and_nests() {
+        let b = br#"{"a":[1,{"b":"}]"},3],"c":null} tail"#;
+        assert_eq!(end_of_value(b, 0).unwrap(), b.len() - 5);
+        assert_eq!(end_of_value(b"42,", 0).unwrap(), 2);
+        assert_eq!(end_of_value(br#""x\"y" "#, 0).unwrap(), 6);
+        assert_eq!(end_of_value(b"true]", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn end_of_value_rejects_truncation() {
+        for bad in [&b"{\"a\":1"[..], b"[1,2", b"\"unterminated", b"{\"s\":\"x"] {
+            assert!(end_of_value(bad, 0).is_err(), "accepted {bad:?}");
+        }
+        assert!(end_of_value(b"", 0).is_err());
+    }
+
+    #[test]
+    fn scan_extracts_fields_without_touching_others() {
+        let b = br#"{"type":"solution","items":[1,2,3],"value":-2.5e1,"seed":"18446744073709551615","n":7}"#;
+        let (doc, end) = LazyDoc::scan(b).unwrap();
+        assert_eq!(end, b.len());
+        assert_eq!(doc.str("type").unwrap(), "solution");
+        assert_eq!(doc.f64("value").unwrap(), -25.0);
+        assert_eq!(doc.u64("seed").unwrap(), u64::MAX);
+        assert_eq!(doc.usize("n").unwrap(), 7);
+        assert_eq!(doc.raw("items").unwrap(), b"[1,2,3]");
+        assert!(doc.raw("missing").is_none());
+        assert!(matches!(doc.str("missing").unwrap_err(), Error::Protocol(_)));
+    }
+
+    #[test]
+    fn scan_returns_end_offset_before_trailing_bytes() {
+        let b = b"{\"a\":1}\x03\x00\x00\x00xyz";
+        let (doc, end) = LazyDoc::scan(b).unwrap();
+        assert_eq!(end, 7);
+        assert_eq!(doc.usize("a").unwrap(), 1);
+    }
+
+    #[test]
+    fn escaped_strings_fall_back_to_the_full_parser() {
+        let b = br#"{"msg":"line\nbreak \"q\""}"#;
+        let (doc, _) = LazyDoc::scan(b).unwrap();
+        assert_eq!(doc.str("msg").unwrap(), "line\nbreak \"q\"");
+    }
+
+    #[test]
+    fn duplicate_keys_resolve_like_the_full_parser() {
+        let b = br#"{"a":1,"a":2}"#;
+        let (doc, _) = LazyDoc::scan(b).unwrap();
+        assert_eq!(doc.usize("a").unwrap(), 2);
+        let full = Json::parse(std::str::from_utf8(b).unwrap()).unwrap();
+        assert_eq!(full.get("a").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn scan_rejects_malformed_documents() {
+        for bad in [
+            &b""[..],
+            b"[1,2]",
+            b"{\"a\" 1}",
+            b"{\"a\":1,}",
+            b"{\"a\":}",
+            b"{\"a\":1",
+            b"{a:1}",
+        ] {
+            assert!(LazyDoc::scan(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rust_only_number_spellings_are_rejected_like_the_full_parser() {
+        // `nan`, `inf`, `+1`, `1_000` all parse under Rust's
+        // `str::parse::<f64>` but are not JSON numbers; accepting them
+        // lazily would let a frame through that the full-tree reader
+        // rejects
+        for doc in [&br#"{"v":nan}"#[..], br#"{"v":1_000}"#, br#"{"v":-inf}"#] {
+            let (d, _) = LazyDoc::scan(doc).unwrap();
+            assert!(d.f64("v").is_err(), "accepted {doc:?}");
+            assert!(d.u64("v").is_err(), "accepted {doc:?} as u64");
+        }
+        // `inf` / `+1` don't even start a JSON value: rejected at scan
+        for doc in [&br#"{"v":inf}"#[..], br#"{"v":+1}"#] {
+            assert!(LazyDoc::scan(doc).is_err(), "scanned {doc:?}");
+        }
+        // the same spellings in the JSON grammar still work
+        let (d, _) = LazyDoc::scan(br#"{"a":-1.5e3,"b":0.25,"c":"123"}"#).unwrap();
+        assert_eq!(d.f64("a").unwrap(), -1500.0);
+        assert_eq!(d.f64("b").unwrap(), 0.25);
+        assert_eq!(d.u64("c").unwrap(), 123);
+    }
+
+    #[test]
+    fn control_bytes_in_strings_are_rejected_like_the_full_parser() {
+        // a raw newline inside a string is invalid JSON; the no-escape
+        // fast path must not smuggle it through
+        let doc = b"{\"s\":\"a\nb\"}";
+        let (d, _) = LazyDoc::scan(doc).unwrap();
+        assert!(d.str("s").is_err());
+        assert!(Json::parse(std::str::from_utf8(doc).unwrap()).is_err());
+    }
+
+    #[test]
+    fn u32_array_fast_path_matches_grammar() {
+        assert_eq!(parse_u32_array(b"[1,2,3]").unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(parse_u32_array(b"[]").unwrap(), Some(vec![]));
+        assert_eq!(parse_u32_array(b" [ 7 , 8 ] ").unwrap(), Some(vec![7, 8]));
+        assert_eq!(parse_u32_array(&u32::MAX.to_string().into_bytes()).unwrap(), None);
+        let max = format!("[{}]", u32::MAX);
+        assert_eq!(parse_u32_array(max.as_bytes()).unwrap(), Some(vec![u32::MAX]));
+        // out of range is an error, not a fallback — the full parser
+        // would accept the number and produce a wrong id
+        assert!(parse_u32_array(b"[4294967296]").is_err());
+        // non-happy-path constructs defer to the full parser
+        for fallback in
+            [&b"[1.5]"[..], b"[1e3]", b"[-1]", b"[1,[2]]", b"[null]", b"[1,]", b"[1 2]"]
+        {
+            assert_eq!(parse_u32_array(fallback).unwrap(), None, "{fallback:?}");
+        }
+    }
+
+    #[test]
+    fn lazy_and_full_agree_on_a_wire_like_frame() {
+        let text = r#"{"type":"compress","problem_id":"123","compressor":"greedy","part":[5,6,7],"cap":10,"seed":"42"}"#;
+        let (doc, end) = LazyDoc::scan(text.as_bytes()).unwrap();
+        assert_eq!(end, text.len());
+        let full = Json::parse(text).unwrap();
+        assert_eq!(doc.str("type").unwrap(), full.get("type").unwrap().as_str().unwrap());
+        assert_eq!(
+            doc.u64("problem_id").unwrap(),
+            super::super::wire_u64(&full, "problem_id").unwrap()
+        );
+        assert_eq!(
+            doc.usize("cap").unwrap(),
+            full.get("cap").unwrap().as_usize().unwrap()
+        );
+        let items = parse_u32_array(doc.raw("part").unwrap()).unwrap().unwrap();
+        assert_eq!(items, vec![5, 6, 7]);
+    }
+}

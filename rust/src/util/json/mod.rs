@@ -3,6 +3,14 @@
 //! Supports the full JSON grammar; numbers are kept as f64 (adequate for
 //! the artifact manifest, experiment configs and bench reports that flow
 //! through it).
+//!
+//! Two readers share this module: the full-tree [`Json::parse`] below
+//! (configs, manifests, cold wire frames) and the [`lazy`] byte scanner
+//! (hot wire frames — extracts only the fields a dispatcher touches and
+//! locates the end of a document inside a larger buffer, without
+//! building a tree).
+
+pub mod lazy;
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -20,9 +28,16 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum container nesting [`Json::parse`] accepts. Real wire frames
+/// are a handful of levels deep; the cap turns adversarially deep
+/// documents — which would otherwise exhaust the recursive parser's
+/// stack and abort the process — into a structured parse error (see
+/// `rust/tests/protocol_fuzz.rs`).
+pub const MAX_PARSE_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -272,6 +287,8 @@ pub fn arr<I: IntoIterator<Item = Json>>(xs: I) -> Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current container nesting, bounded by [`MAX_PARSE_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -313,11 +330,23 @@ impl<'a> Parser<'a> {
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
             b'"' => Ok(Json::Str(self.string()?)),
-            b'[' => self.array(),
-            b'{' => self.object(),
+            b'[' => self.nested(Parser::array),
+            b'{' => self.nested(Parser::object),
             b'-' | b'0'..=b'9' => self.number(),
             c => Err(self.err(&format!("unexpected byte 0x{c:02x}"))),
         }
+    }
+
+    /// Recurse into a container, refusing pathological nesting before
+    /// it can exhaust the parse stack.
+    fn nested(&mut self, f: fn(&mut Parser<'a>) -> Result<Json>) -> Result<Json> {
+        if self.depth >= MAX_PARSE_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let v = f(self);
+        self.depth -= 1;
+        v
     }
 
     fn array(&mut self) -> Result<Json> {
@@ -484,7 +513,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let txt = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
         txt.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -503,6 +533,24 @@ mod tests {
         assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
         assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
         assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn pathological_nesting_is_a_parse_error_not_a_stack_overflow() {
+        // without the depth cap this would exhaust the parse stack and
+        // abort the process — found by the protocol fuzz harness design
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.to_string().contains("nesting too deep"), "{err}");
+        // exact boundary: MAX_PARSE_DEPTH containers parse, one more errs
+        let ok = format!("{}1{}", "[".repeat(MAX_PARSE_DEPTH), "]".repeat(MAX_PARSE_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let over = format!(
+            "{}1{}",
+            "[".repeat(MAX_PARSE_DEPTH + 1),
+            "]".repeat(MAX_PARSE_DEPTH + 1)
+        );
+        assert!(Json::parse(&over).is_err());
     }
 
     #[test]

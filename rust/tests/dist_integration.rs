@@ -26,6 +26,12 @@ struct WorkerProc {
 
 impl WorkerProc {
     fn spawn(capacity: usize) -> WorkerProc {
+        WorkerProc::spawn_args(capacity, &[])
+    }
+
+    /// Spawn with extra `hss worker` CLI flags (e.g. `--payload json`
+    /// to pin a worker to the pre-v6 pure-JSON encoding).
+    fn spawn_args(capacity: usize, extra: &[&str]) -> WorkerProc {
         let mut child = Command::new(env!("CARGO_BIN_EXE_hss"))
             .args([
                 "worker",
@@ -34,6 +40,7 @@ impl WorkerProc {
                 "--capacity",
                 &capacity.to_string(),
             ])
+            .args(extra)
             .stdout(Stdio::piped())
             .stderr(Stdio::null())
             .spawn()
@@ -384,6 +391,84 @@ fn tcp_capacity_fit_refuses_parts_no_live_worker_can_hold() {
         .run_round(&problem, &hss::algorithms::LazyGreedy::new(), &parts, 1)
         .unwrap();
     assert_eq!(out.solutions.len(), 2);
+    tcp.shutdown_workers();
+}
+
+/// Protocol-v6 acceptance (bugfix carried from the PR 5 review): a
+/// *mixed* fleet — one binary-capable worker and one pinned to
+/// `--payload json` — must return the identical answer as the local
+/// backend. Negotiation is per connection, so the coordinator speaks
+/// binary to one worker and pure JSON to the other inside the same
+/// round; the per-worker payload accounting must reflect that split.
+/// The answer must also survive killing the binary worker mid-run (the
+/// in-flight part requeues onto the JSON-only survivor).
+#[test]
+fn tcp_mixed_payload_fleet_matches_local_including_binary_worker_kill() {
+    let (k, mu, seed) = (10usize, 100usize, 8u64);
+    let ds = registry::load("csn-2k", seed).unwrap();
+    let problem = Problem::exemplar(ds, k, seed);
+    let local = TreeBuilder::new(mu).build().run(&problem, 19).unwrap();
+
+    let binary = WorkerProc::spawn(mu);
+    let json_only = WorkerProc::spawn_args(mu, &["--payload", "json"]);
+    let tcp = Arc::new(
+        TcpBackend::new(mu, vec![binary.addr.clone(), json_only.addr.clone()]).unwrap(),
+    );
+    let runner = TreeBuilder::new(mu).backend(tcp.clone()).build();
+
+    let remote = runner.run(&problem, 19).unwrap();
+    assert_eq!(remote.best.items, local.best.items, "mixed fleet changed the items");
+    assert_eq!(
+        remote.best.value.to_bits(),
+        local.best.value.to_bits(),
+        "objective value not bit-identical over a mixed fleet"
+    );
+    assert_eq!(remote.requeued_parts, 0, "healthy workers must not requeue");
+
+    // the negotiation split is visible in the payload accounting: the
+    // binary worker's traffic beyond the (always-JSON) handshake is
+    // binary, the pinned worker's traffic is JSON end to end
+    let stats = tcp.worker_stats();
+    let by_addr = |addr: &str| {
+        stats
+            .iter()
+            .find(|w| w.addr == addr)
+            .unwrap_or_else(|| panic!("no stats for {addr}"))
+    };
+    let b = by_addr(&binary.addr);
+    assert!(b.parts > 0, "binary worker completed no parts");
+    assert!(
+        b.payload_bytes_binary > 0,
+        "binary-negotiated connection reported no binary payload bytes"
+    );
+    let j = by_addr(&json_only.addr);
+    assert!(j.parts > 0, "json worker completed no parts");
+    assert!(j.payload_bytes_json > 0, "json connection reported no payload bytes");
+    assert_eq!(
+        j.payload_bytes_binary, 0,
+        "a --payload json worker must never see binary payloads"
+    );
+
+    // kill the binary worker: the requeued part lands on the JSON-only
+    // survivor and the answer must not move. (The dead slot is only
+    // observed when the scheduler hands it work, so allow a few
+    // attempts — the answer must match on every one of them.)
+    drop(binary);
+    let mut saw_requeue = false;
+    for _ in 0..5 {
+        let wounded = runner.run(&problem, 19).unwrap();
+        assert_eq!(
+            wounded.best.items, local.best.items,
+            "losing the binary worker changed the solution"
+        );
+        assert_eq!(wounded.best.value.to_bits(), local.best.value.to_bits());
+        if wounded.requeued_parts >= 1 {
+            saw_requeue = true;
+            break;
+        }
+    }
+    assert!(saw_requeue, "binary-worker kill never surfaced as a requeued part");
+
     tcp.shutdown_workers();
 }
 

@@ -1,0 +1,597 @@
+//! Fuzz + differential hardening for the v6 wire decoders (ISSUE 8).
+//!
+//! Three layers, all dependency-free and deterministic:
+//!
+//! 1. **Regression corpus** — committed frames under `rust/tests/corpus/`
+//!    (hex text, `#` comments). Filenames encode the contract: the
+//!    prefix (`binary-` / `json-`) is the connection mode the frame is
+//!    decoded under, and a `-valid-` infix means the frame must decode
+//!    `Ok` as a [`Request`] or a [`Response`]; every other file must
+//!    yield a structured [`Err`] from *both* decoders — never a panic.
+//!    Each invalid file is one minimized crash/robustness class from
+//!    the issue list (truncated blob prefixes, overrunning lengths,
+//!    misaligned blobs, deep nesting, non-UTF-8, Rust-only number
+//!    spellings, trailing bytes on JSON connections).
+//! 2. **Differential property tests** — random messages (including
+//!    NaN/±inf solution values, empty and ~100k-id blocks, every
+//!    [`ProblemSpec`] constraint family) must round-trip bit-identically
+//!    through both encodings, and the lazy scanner must agree with the
+//!    full-tree parser on every corpus control document.
+//! 3. **Structure-aware mutator** — valid frames are mutated (bit
+//!    flips, truncation, chunk splice/delete, length-prefix edits) and
+//!    fed to both decoders in both modes under `catch_unwind`; any
+//!    panic is reported with the seed and frame hex so it can be
+//!    minimized into a new corpus file.
+//!
+//! Iteration counts are bounded for `cargo test`; the CI smoke job
+//! raises them via `HSS_FUZZ_ITERS` (see `.github/workflows/ci.yml`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+
+use hss::constraints::spec::{ConstraintSpec, GroupSpec, WeightSpec};
+use hss::data::spec::DatasetSpec;
+use hss::dist::protocol::{
+    read_frame, write_frame, PayloadMode, ProblemSpec, Request, Response, Telemetry, MAX_FRAME,
+};
+use hss::util::json::lazy::LazyDoc;
+use hss::util::json::Json;
+use hss::util::rng::Rng;
+
+const MODES: [PayloadMode; 2] = [PayloadMode::Json, PayloadMode::Binary];
+
+/// Bounded default so `cargo test` stays fast; the CI fuzz smoke job
+/// sets `HSS_FUZZ_ITERS` to run the same harness longer.
+fn fuzz_iters(default: usize) -> usize {
+    std::env::var("HSS_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(default)
+}
+
+// ---------------------------------------------------------------------------
+// corpus loading
+// ---------------------------------------------------------------------------
+
+struct CorpusEntry {
+    name: String,
+    mode: PayloadMode,
+    valid: bool,
+    payload: Vec<u8>,
+}
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/corpus")
+}
+
+fn parse_hex_file(name: &str, text: &str) -> Vec<u8> {
+    let mut nibbles = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        for ch in line.chars().filter(|c| !c.is_whitespace()) {
+            nibbles.push(
+                ch.to_digit(16)
+                    .unwrap_or_else(|| panic!("corpus file {name}: non-hex character {ch:?}"))
+                    as u8,
+            );
+        }
+    }
+    assert!(nibbles.len() % 2 == 0, "corpus file {name}: odd number of hex digits");
+    nibbles.chunks(2).map(|p| (p[0] << 4) | p[1]).collect()
+}
+
+fn load_corpus() -> Vec<CorpusEntry> {
+    let dir = corpus_dir();
+    let mut entries = Vec::new();
+    let listing = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {} unreadable: {e}", dir.display()));
+    for file in listing {
+        let path = file.expect("corpus dir entry").path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if !name.ends_with(".hex") {
+            continue;
+        }
+        let mode = if name.starts_with("binary-") {
+            PayloadMode::Binary
+        } else if name.starts_with("json-") {
+            PayloadMode::Json
+        } else {
+            panic!("corpus file {name}: name must start with 'binary-' or 'json-'");
+        };
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("corpus file {name} unreadable: {e}"));
+        entries.push(CorpusEntry {
+            payload: parse_hex_file(&name, &text),
+            valid: name.contains("-valid-"),
+            mode,
+            name,
+        });
+    }
+    entries.sort_by_key(|e| e.name.clone());
+    assert!(
+        entries.len() >= 10,
+        "corpus at {} looks truncated: only {} entries",
+        dir.display(),
+        entries.len()
+    );
+    entries
+}
+
+// ---------------------------------------------------------------------------
+// random message generators (structure-aware seeds for the mutator and
+// the differential round-trip property)
+// ---------------------------------------------------------------------------
+
+fn random_ids(rng: &mut Rng, max_len: usize) -> Vec<u32> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    (0..len).map(|_| rng.below(1 << 20) as u32).collect()
+}
+
+/// Finite, non-negative weights only: NaN/±inf weight tables are not
+/// JSON-representable (the writer prints non-finite numbers as `null`)
+/// and the spec layer rejects them by contract.
+fn random_weights(rng: &mut Rng, max_len: usize) -> Vec<f64> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    (0..len).map(|_| rng.f64() * 10.0).collect()
+}
+
+/// Solution values *can* be non-finite on the wire (NaN-safe round-best
+/// selection), so the generator mixes the special values in.
+fn random_value(rng: &mut Rng) -> f64 {
+    match rng.below(8) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => 0.0,
+        _ => (rng.f64() - 0.5) * 1e6,
+    }
+}
+
+fn random_weight_spec(rng: &mut Rng) -> WeightSpec {
+    match rng.below(4) {
+        0 => WeightSpec::Unit,
+        1 => WeightSpec::RowNorm2,
+        2 => {
+            let lo = rng.f64() * 5.0;
+            WeightSpec::Seeded { seed: rng.next_u64(), lo, hi: lo + rng.f64() * 5.0 }
+        }
+        _ => WeightSpec::Explicit(random_weights(rng, 64)),
+    }
+}
+
+fn random_constraint(rng: &mut Rng, depth: usize) -> ConstraintSpec {
+    match rng.below(if depth == 0 { 4 } else { 3 }) {
+        0 => ConstraintSpec::Cardinality { k: rng.below(100) as usize },
+        1 => ConstraintSpec::Knapsack {
+            budget: rng.f64() * 100.0,
+            k: rng.below(100) as usize,
+            weights: random_weight_spec(rng),
+        },
+        2 => {
+            let groups = 1 + rng.below(8) as usize;
+            let caps = (0..groups).map(|_| 1 + rng.below(4) as usize).collect();
+            let group_table = (0..rng.below(64)).map(|_| rng.below(groups as u64) as u32).collect();
+            ConstraintSpec::PartitionMatroid {
+                k: rng.below(100) as usize,
+                caps,
+                groups: if rng.bool(0.5) {
+                    GroupSpec::RoundRobin { groups }
+                } else {
+                    GroupSpec::Explicit(group_table)
+                },
+            }
+        }
+        _ => ConstraintSpec::Intersection(
+            (0..1 + rng.below(3)).map(|_| random_constraint(rng, depth + 1)).collect(),
+        ),
+    }
+}
+
+fn random_spec(rng: &mut Rng) -> ProblemSpec {
+    let logdet = rng.bool(0.5);
+    ProblemSpec {
+        dataset: if rng.bool(0.5) {
+            DatasetSpec::Registry { name: "csn-2k".into(), seed: rng.next_u64() }
+        } else {
+            DatasetSpec::Synthetic {
+                generator: "tiny".into(),
+                n: 1 + rng.below(512) as usize,
+                d: 1 + rng.below(32) as usize,
+                seed: rng.next_u64(),
+            }
+        },
+        objective: if logdet { "logdet".into() } else { "exemplar".into() },
+        k: 1 + rng.below(64) as usize,
+        seed: rng.next_u64(),
+        eval_m: if logdet { 0 } else { rng.below(256) as usize },
+        h2: if logdet { rng.f64() + 0.1 } else { 0.0 },
+        sigma2: if logdet { rng.f64() + 0.1 } else { 0.0 },
+        constraint: random_constraint(rng, 0),
+    }
+}
+
+fn random_request(rng: &mut Rng) -> Request {
+    match rng.below(4) {
+        0 => Request::Hello {
+            clock_ms: rng.f64() * 1e4,
+            payload: if rng.bool(0.5) { PayloadMode::Binary } else { PayloadMode::Json },
+        },
+        1 => Request::DefineProblem { id: rng.next_u64(), problem: random_spec(rng) },
+        2 => Request::Compress {
+            problem_id: rng.next_u64(),
+            compressor: "greedy".into(),
+            part: random_ids(rng, 512),
+            cap: rng.below(1024) as usize,
+            seed: rng.next_u64(),
+        },
+        _ => Request::Shutdown,
+    }
+}
+
+fn random_response(rng: &mut Rng) -> Response {
+    match rng.below(5) {
+        0 => Response::Hello {
+            capacity: rng.below(4096) as usize,
+            clock_echo_ms: rng.f64() * 1e4,
+            payload: if rng.bool(0.5) { PayloadMode::Binary } else { PayloadMode::Json },
+        },
+        1 => Response::Defined { id: rng.next_u64() },
+        2 => Response::Solution {
+            items: random_ids(rng, 512),
+            value: random_value(rng),
+            evals: rng.next_u64(),
+            wall_ms: rng.f64() * 1e4,
+            telemetry: Telemetry {
+                queue_wait_ms: rng.f64() * 100.0,
+                dataset_hits: rng.below(1 << 30),
+                dataset_misses: rng.below(1 << 30),
+                problem_hits: rng.below(1 << 30),
+                problem_misses: rng.below(1 << 30),
+                problem_evictions: rng.below(1 << 30),
+            },
+        },
+        3 => Response::Error { msg: "worker exploded: part overruns µ".into() },
+        _ => Response::Bye,
+    }
+}
+
+/// Message equality that treats f64 fields bit-for-bit, so NaN
+/// solutions compare equal and -0.0 vs 0.0 regressions are caught.
+fn assert_request_roundtrips(req: &Request, mode: PayloadMode) {
+    let decoded = Request::decode(&req.encode(mode), mode)
+        .unwrap_or_else(|e| panic!("{} re-decode failed: {e}\nrequest: {req:?}", mode.wire_name()));
+    assert_eq!(&decoded, req, "{} round-trip changed the request", mode.wire_name());
+}
+
+fn assert_response_roundtrips(resp: &Response, mode: PayloadMode) {
+    let decoded = Response::decode(&resp.encode(mode), mode).unwrap_or_else(|e| {
+        panic!("{} re-decode failed: {e}\nresponse: {resp:?}", mode.wire_name())
+    });
+    match (&decoded, resp) {
+        (
+            Response::Solution { items, value, evals, wall_ms, telemetry },
+            Response::Solution {
+                items: i2,
+                value: v2,
+                evals: e2,
+                wall_ms: w2,
+                telemetry: t2,
+            },
+        ) => {
+            assert_eq!(items, i2, "{} round-trip changed the items", mode.wire_name());
+            assert_eq!(
+                value.to_bits(),
+                v2.to_bits(),
+                "{} round-trip changed the value bits ({value} vs {v2})",
+                mode.wire_name()
+            );
+            assert_eq!((evals, telemetry), (e2, t2));
+            assert_eq!(wall_ms.to_bits(), w2.to_bits());
+        }
+        _ => assert_eq!(&decoded, resp, "{} round-trip changed the response", mode.wire_name()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// corpus replay
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corpus_valid_frames_decode_and_reencode() {
+    for entry in load_corpus().iter().filter(|e| e.valid) {
+        let req = Request::decode(&entry.payload, entry.mode);
+        let resp = Response::decode(&entry.payload, entry.mode);
+        match (req, resp) {
+            (Ok(req), _) => assert_request_roundtrips(&req, entry.mode),
+            (_, Ok(resp)) => assert_response_roundtrips(&resp, entry.mode),
+            (Err(e1), Err(e2)) => panic!(
+                "{}: valid corpus frame decodes as neither message\n  as request: {e1}\n  as response: {e2}",
+                entry.name
+            ),
+        }
+    }
+}
+
+#[test]
+fn corpus_invalid_frames_error_without_panicking() {
+    for entry in load_corpus().iter().filter(|e| !e.valid) {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            (
+                Request::decode(&entry.payload, entry.mode).err(),
+                Response::decode(&entry.payload, entry.mode).err(),
+            )
+        }));
+        let (req_err, resp_err) =
+            outcome.unwrap_or_else(|_| panic!("{}: decoder panicked", entry.name));
+        let req_err =
+            req_err.unwrap_or_else(|| panic!("{}: Request::decode accepted the frame", entry.name));
+        let resp_err = resp_err
+            .unwrap_or_else(|| panic!("{}: Response::decode accepted the frame", entry.name));
+        // structured errors, not Display of a panic payload
+        for err in [&req_err, &resp_err] {
+            assert!(
+                !err.to_string().is_empty(),
+                "{}: empty error message from {err:?}",
+                entry.name
+            );
+        }
+    }
+}
+
+/// The lazy byte scanner and the full-tree parser must agree on every
+/// corpus control document: same field values when the document parses,
+/// and a rejection from at least one materialization when it does not.
+#[test]
+fn corpus_lazy_scanner_agrees_with_full_parser() {
+    for entry in load_corpus() {
+        let scan = LazyDoc::scan(&entry.payload);
+        let Ok((doc, end)) = scan else {
+            // the scanner rejected the frame outright; the full parser
+            // must reject the same bytes
+            let text = String::from_utf8_lossy(&entry.payload);
+            assert!(
+                Json::parse(&text).is_err(),
+                "{}: scanner rejected a frame the full parser accepts",
+                entry.name
+            );
+            continue;
+        };
+        let control = &entry.payload[..end];
+        match std::str::from_utf8(control).ok().and_then(|t| Json::parse(t).ok()) {
+            Some(Json::Obj(fields)) => {
+                for (key, value) in &fields {
+                    let lazy = doc.json(key).unwrap_or_else(|e| {
+                        panic!("{}: lazy json({key:?}) failed on a parseable doc: {e}", entry.name)
+                    });
+                    assert_eq!(
+                        &lazy, value,
+                        "{}: lazy and full parse disagree on field {key:?}",
+                        entry.name
+                    );
+                }
+            }
+            Some(other) => panic!("{}: control document is not an object: {other}", entry.name),
+            None => {
+                // scan passed but the full parse did not (deep nesting,
+                // non-UTF-8, Rust-only number spellings): materializing
+                // the whole document lazily must fail the same way
+                let whole_doc_ok = doc.keys().into_iter().all(|key| doc.json(key).is_ok());
+                assert!(
+                    !whole_doc_ok,
+                    "{}: full parse rejects the doc but every lazy field materializes",
+                    entry.name
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// differential round-trip properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_messages_roundtrip_bit_identically_in_both_modes() {
+    let mut rng = Rng::seed_from(0x1550_0008);
+    for _ in 0..fuzz_iters(200) {
+        let req = random_request(&mut rng);
+        let resp = random_response(&mut rng);
+        for mode in MODES {
+            assert_request_roundtrips(&req, mode);
+            assert_response_roundtrips(&resp, mode);
+        }
+    }
+}
+
+#[test]
+fn empty_and_max_size_blocks_roundtrip() {
+    // empty part / empty items
+    let req = Request::Compress {
+        problem_id: 7,
+        compressor: "greedy".into(),
+        part: Vec::new(),
+        cap: 0,
+        seed: 3,
+    };
+    let resp = Response::Solution {
+        items: Vec::new(),
+        value: f64::NEG_INFINITY,
+        evals: 0,
+        wall_ms: 0.0,
+        telemetry: Telemetry::default(),
+    };
+    // a large block (≈100k ids — bounded well under MAX_FRAME but big
+    // enough to cross every buffer-growth path)
+    let big: Vec<u32> = (0..100_000).map(|i| i * 3 + 1).collect();
+    let big_req = Request::Compress {
+        problem_id: u64::MAX,
+        compressor: "stochastic-greedy(eps=0.1)".into(),
+        part: big.clone(),
+        cap: big.len(),
+        seed: u64::MAX,
+    };
+    let big_resp = Response::Solution {
+        items: big,
+        value: f64::NAN,
+        evals: u64::MAX,
+        wall_ms: 12.5,
+        telemetry: Telemetry::default(),
+    };
+    for mode in MODES {
+        assert_request_roundtrips(&req, mode);
+        assert_response_roundtrips(&resp, mode);
+        assert_request_roundtrips(&big_req, mode);
+        assert_response_roundtrips(&big_resp, mode);
+    }
+}
+
+/// Binary and JSON encodings of the same message must decode to the
+/// same message — the cross-encoding differential the mixed-fleet path
+/// relies on.
+#[test]
+fn binary_and_json_encodings_decode_to_the_same_message() {
+    let mut rng = Rng::seed_from(0x1550_0009);
+    for _ in 0..fuzz_iters(100) {
+        let req = random_request(&mut rng);
+        let a = Request::decode(&req.encode(PayloadMode::Json), PayloadMode::Json).unwrap();
+        let b = Request::decode(&req.encode(PayloadMode::Binary), PayloadMode::Binary).unwrap();
+        assert_eq!(a, b, "encodings diverged for {req:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// structure-aware mutator
+// ---------------------------------------------------------------------------
+
+fn mutate(rng: &mut Rng, payload: &mut Vec<u8>) {
+    match rng.below(6) {
+        // flip a random bit
+        0 if !payload.is_empty() => {
+            let i = rng.below(payload.len() as u64) as usize;
+            payload[i] ^= 1 << rng.below(8);
+        }
+        // truncate (mid-blob / mid-document disconnect)
+        1 if !payload.is_empty() => {
+            let keep = rng.below(payload.len() as u64) as usize;
+            payload.truncate(keep);
+        }
+        // splice random little-endian u32 (length-prefix confusion)
+        2 => {
+            let i = rng.below(payload.len() as u64 + 1) as usize;
+            let v = match rng.below(4) {
+                0 => 0u32,
+                1 => u32::MAX,
+                2 => MAX_FRAME as u32 + 1,
+                _ => rng.next_u64() as u32,
+            };
+            payload.splice(i..i, v.to_le_bytes());
+        }
+        // duplicate a chunk
+        3 if !payload.is_empty() => {
+            let start = rng.below(payload.len() as u64) as usize;
+            let end = start + rng.below((payload.len() - start) as u64 + 1) as usize;
+            let chunk: Vec<u8> = payload[start..end].to_vec();
+            payload.splice(end..end, chunk);
+        }
+        // delete a chunk
+        4 if !payload.is_empty() => {
+            let start = rng.below(payload.len() as u64) as usize;
+            let end = start + rng.below((payload.len() - start) as u64 + 1) as usize;
+            payload.drain(start..end);
+        }
+        // append raw noise
+        _ => {
+            let extra = rng.below(16) + 1;
+            for _ in 0..extra {
+                payload.push(rng.next_u64() as u8);
+            }
+        }
+    }
+}
+
+#[test]
+fn mutated_frames_never_panic_either_decoder() {
+    let seed = 0x1550_000A;
+    let mut rng = Rng::seed_from(seed);
+    for iter in 0..fuzz_iters(300) {
+        let mut payload = if rng.bool(0.5) {
+            random_request(&mut rng).encode(if rng.bool(0.5) {
+                PayloadMode::Binary
+            } else {
+                PayloadMode::Json
+            })
+        } else {
+            random_response(&mut rng).encode(if rng.bool(0.5) {
+                PayloadMode::Binary
+            } else {
+                PayloadMode::Json
+            })
+        };
+        for _ in 0..1 + rng.below(8) {
+            mutate(&mut rng, &mut payload);
+        }
+        for mode in MODES {
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                let _ = Request::decode(&payload, mode);
+                let _ = Response::decode(&payload, mode);
+            }));
+            if outcome.is_err() {
+                panic!(
+                    "decoder panicked (seed {seed:#x}, iter {iter}, mode {}); minimize this \
+                     into rust/tests/corpus/:\n{}",
+                    mode.wire_name(),
+                    payload.iter().map(|b| format!("{b:02x}")).collect::<String>()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frame-layer malformations (length prefix, MAX_FRAME cap, disconnects)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_length_prefix_is_an_io_error() {
+    for cut in 0..4 {
+        let bytes = vec![0u8; cut];
+        let err = read_frame(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(
+            matches!(err, hss::Error::Io(_)),
+            "truncated prefix ({cut} bytes) gave {err:?}, expected Io"
+        );
+    }
+}
+
+#[test]
+fn declared_length_past_the_frame_cap_is_rejected_before_allocation() {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&((MAX_FRAME as u32) + 1).to_be_bytes());
+    bytes.extend_from_slice(b"junk");
+    let err = read_frame(&mut std::io::Cursor::new(bytes)).unwrap_err();
+    assert!(
+        err.to_string().contains("MAX_FRAME"),
+        "oversized declaration gave '{err}', expected a MAX_FRAME rejection"
+    );
+}
+
+#[test]
+fn mid_frame_disconnect_is_an_io_error() {
+    // declared 100 bytes, connection drops after 10 — the exact shape of
+    // a worker killed mid-blob
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&100u32.to_be_bytes());
+    bytes.extend_from_slice(&[0xAB; 10]);
+    let err = read_frame(&mut std::io::Cursor::new(bytes)).unwrap_err();
+    assert!(matches!(err, hss::Error::Io(_)), "mid-frame EOF gave {err:?}, expected Io");
+}
+
+#[test]
+fn outgoing_frames_respect_the_cap() {
+    let payload = vec![0u8; MAX_FRAME + 1];
+    let err = write_frame(&mut Vec::new(), &payload).unwrap_err();
+    assert!(err.to_string().contains("MAX_FRAME"));
+}
