@@ -9,16 +9,16 @@ use hss::coordinator::baselines;
 use hss::error::Result;
 use hss::objectives::Problem;
 use hss::runtime::accel::XlaGreedy;
-use hss::runtime::{Engine, EngineHandle};
+use hss::runtime::{EngineHandle, XlaRuntime};
 
-/// Start the XLA engine if artifacts are built.
+/// Start the XLA device thread if artifacts are built.
 pub fn maybe_engine() -> Option<EngineHandle> {
     let dir = hss::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("note: artifacts/ not built — running pure-rust oracles");
         return None;
     }
-    match Engine::start(&dir) {
+    match XlaRuntime::start(&dir) {
         Ok(e) => Some(e),
         Err(e) => {
             eprintln!("note: engine failed to start ({e}); pure-rust oracles");

@@ -1,0 +1,127 @@
+//! Oracle-kernel bench — the batched engine gain path vs the scalar
+//! one-at-a-time loop, per objective × engine × machine capacity µ.
+//!
+//! This is the per-machine hot loop the pluggable-engine refactor
+//! targets: `lazy_greedy_over` refreshes stale heap entries in blocks
+//! through `Oracle::gains_for`, which lands in the engine's blocked
+//! kernels (`linalg/block.rs`) as one call instead of µ virtual
+//! dispatches + eval-counter atomics. Both paths compute bit-identical
+//! gains (the differential tests in `objectives/` enforce it); this
+//! bench measures what the batching buys.
+//!
+//! For each objective (exemplar, logdet) × engine (native, xla) ×
+//! µ ∈ {128, 512, 2048}, a µ-candidate oracle with a warm selection
+//! state serves one full sweep of gains, scalar (`gain(j)` µ times)
+//! and batched (`bulk_gains()`), reporting wall-ms and oracle-evals/sec.
+//!
+//! Emits `bench_results/BENCH_oracle.json` (diffed against the
+//! committed `BENCH_oracle.json` baseline by the advisory CI job) and
+//! exits non-zero if the NativeEngine batched path falls under the
+//! issue's acceptance floor of 2× the scalar evals/sec on logdet at
+//! µ = 2048.
+//!
+//! ```bash
+//! cargo bench --bench oracle [-- --quick] [--eval-rows 512]
+//! ```
+
+use std::hint::black_box;
+use std::sync::Arc;
+
+use hss::bench::{fmt_ms, BenchArgs, BenchRunner, Table};
+use hss::data::{synthetic, DatasetRef};
+use hss::objectives::Problem;
+use hss::runtime::EngineChoice;
+
+fn main() -> hss::Result<()> {
+    let bargs = BenchArgs::from_env(5);
+    let runner = if bargs.quick {
+        BenchRunner::quick()
+    } else {
+        BenchRunner { warmup: 1, samples: bargs.trials }
+    };
+    // exemplar evaluation-subsample size: fixed so per-candidate work is
+    // constant while µ scales (the paper's high-d setting uses 512)
+    let eval_m = bargs.args.usize("eval-rows", 512)?;
+    let mus = [128usize, 512, 2048];
+
+    let mut table = Table::new(
+        &format!(
+            "oracle gain kernels, batched engine path vs scalar loop \
+             (exemplar over {eval_m} eval rows)"
+        ),
+        &["objective", "engine", "mu", "path", "wall", "evals_s"],
+    );
+
+    // "<objective>/<engine>/<mu>/<path>" -> evals/sec, for the gate
+    let mut rates: Vec<(String, f64)> = Vec::new();
+
+    for &mu in &mus {
+        let ds: DatasetRef = Arc::new(synthetic::csn_like(mu, 11));
+        for engine in [EngineChoice::Native, EngineChoice::Xla] {
+            let problems = [
+                ("exemplar", Problem::exemplar_with_eval(ds.clone(), 8, 11, eval_m)),
+                ("logdet", Problem::logdet(ds.clone(), 8, 11)),
+            ];
+            for (name, p) in problems {
+                let p = p.with_compute(engine.build());
+                let cands: Vec<u32> = (0..mu as u32).collect();
+                // warm selection state: a few committed items so gains
+                // take the mid-run path, not the empty-set shortcut
+                let mut oracle = p.oracle(&cands);
+                for j in [0usize, mu / 2, mu - 1] {
+                    oracle.commit(j);
+                }
+                let js: Vec<usize> = (0..mu).collect();
+                let s_scalar = runner.time(|| {
+                    for &j in &js {
+                        black_box(oracle.gain(j));
+                    }
+                });
+                let s_batched = runner.time(|| {
+                    black_box(oracle.bulk_gains());
+                });
+                for (path, summary) in [("scalar", s_scalar), ("batched", s_batched)] {
+                    let evals_s = mu as f64 / (summary.mean() / 1e3).max(1e-12);
+                    table.row(vec![
+                        name.into(),
+                        engine.wire_name().into(),
+                        mu.to_string(),
+                        path.into(),
+                        fmt_ms(&summary),
+                        format!("{evals_s:.0}"),
+                    ]);
+                    rates.push((
+                        format!("{name}/{}/{mu}/{path}", engine.wire_name()),
+                        evals_s,
+                    ));
+                }
+            }
+        }
+    }
+
+    table.print();
+    table.save_json("BENCH_oracle").map_err(hss::error::Error::Io)?;
+
+    // Smoke gate (CI runs this job non-blocking). The issue's acceptance
+    // floor: NativeEngine batched ≥ 2× scalar evals/sec on logdet at
+    // µ = 2048.
+    let rate = |key: &str| {
+        rates
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, r)| *r)
+            .unwrap_or(0.0)
+    };
+    let scalar = rate("logdet/native/2048/scalar");
+    let batched = rate("logdet/native/2048/batched");
+    let speedup = batched / scalar.max(1e-12);
+    println!("logdet mu=2048 native: batched path {speedup:.2}x the scalar evals/sec");
+    if speedup < 2.0 {
+        eprintln!(
+            "ORACLE REGRESSION: logdet mu=2048 batched gains are only {speedup:.2}x \
+             the scalar path (issue floor: 2x)"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

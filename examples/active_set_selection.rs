@@ -28,7 +28,7 @@ fn main() -> Result<()> {
     let engine = if args.flag("no-engine") {
         None
     } else {
-        Engine::start_default().ok()
+        XlaRuntime::start_default().ok()
     };
     if let Some(e) = &engine {
         problem = problem.with_engine(e.clone());

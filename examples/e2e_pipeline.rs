@@ -42,7 +42,7 @@ fn main() -> Result<()> {
     );
 
     let t_eng = std::time::Instant::now();
-    let engine = Engine::start_default()?;
+    let engine = XlaRuntime::start_default()?;
     println!(
         "[runtime] PJRT engine up with {} AOT artifacts ({:.0} ms)",
         engine.manifest().artifacts.len(),

@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     let engine = if args.flag("no-engine") {
         None
     } else {
-        match Engine::start_default() {
+        match XlaRuntime::start_default() {
             Ok(e) => Some(e),
             Err(e) => {
                 eprintln!("engine unavailable ({e}); using the pure-rust oracle");

@@ -170,7 +170,19 @@ pub(crate) fn lazy_greedy_over(
     }
 
     // Lazy (Minoux) greedy: initial bulk pass builds the heap of upper
-    // bounds; thereafter stale bounds are refreshed on demand.
+    // bounds; thereafter stale bounds are refreshed in blocks through
+    // the batched oracle path (`gains_for`).
+    //
+    // Block refresh is selection-identical to the one-at-a-time Minoux
+    // refresh: gains are *exact* (not estimates), no commit happens
+    // mid-block, and every refreshed entry re-enters the heap with its
+    // exact gain at the current selection state — so the committed
+    // argmax (and the smaller-index tie-break, and the `ub <= 0` stop
+    // condition) are unchanged; the block merely front-loads refreshes
+    // the scalar queue would have performed later. The differential
+    // tests in this module hold the two byte-identical.
+    const REFRESH_BLOCK: usize = 32;
+
     let gains = oracle.bulk_gains();
     let mut heap: BinaryHeap<Entry> = gains
         .into_iter()
@@ -188,7 +200,8 @@ pub(crate) fn lazy_greedy_over(
             // stays infeasible, so drop it
             continue;
         }
-        if top.stamp == selected.len() {
+        let stamp = selected.len();
+        if top.stamp == stamp {
             // fresh bound: this is the true argmax
             if top.ub <= 0.0 {
                 break; // no positive marginal gain anywhere
@@ -197,8 +210,29 @@ pub(crate) fn lazy_greedy_over(
             selected_local.push(top.j);
             selected.push(candidates[top.j]);
         } else {
-            let g = oracle.gain(top.j);
-            heap.push(Entry { ub: g, j: top.j, stamp: selected.len() });
+            // gather up to REFRESH_BLOCK stale entries off the top of
+            // the heap (dropping infeasible ones — hereditary
+            // constraints keep them infeasible forever) and refresh
+            // them in one batched call
+            let mut js = Vec::with_capacity(REFRESH_BLOCK);
+            js.push(top.j);
+            while js.len() < REFRESH_BLOCK {
+                if !matches!(heap.peek(), Some(e) if e.stamp != stamp) {
+                    break;
+                }
+                let Some(e) = heap.pop() else { break };
+                if !problem
+                    .constraint
+                    .can_add(&selected, candidates[e.j], &problem.dataset)
+                {
+                    continue;
+                }
+                js.push(e.j);
+            }
+            let refreshed = oracle.gains_for(&js);
+            for (&j, ub) in js.iter().zip(refreshed) {
+                heap.push(Entry { ub, j, stamp });
+            }
         }
     }
 
@@ -257,6 +291,154 @@ mod tests {
         assert_eq!(a.items, b.items, "NaN gains must not make selection nondeterministic");
         assert_eq!(a.items, vec![1, 2], "NaN-gain item pops first, then the best finite gain");
         assert!(a.value.is_nan(), "the poisoned objective must surface, got {}", a.value);
+    }
+
+    /// The seed's one-at-a-time Minoux queue, kept verbatim as the
+    /// reference the block-refresh implementation must match bitwise.
+    fn scalar_minoux(problem: &Problem, candidates: &[u32]) -> Solution {
+        use std::cmp::Ordering as CmpOrd;
+        use std::collections::BinaryHeap;
+        struct Entry {
+            ub: f64,
+            j: usize,
+            stamp: usize,
+        }
+        impl PartialEq for Entry {
+            fn eq(&self, other: &Self) -> bool {
+                self.cmp(other) == CmpOrd::Equal
+            }
+        }
+        impl Eq for Entry {}
+        impl PartialOrd for Entry {
+            fn partial_cmp(&self, other: &Self) -> Option<CmpOrd> {
+                Some(self.cmp(other))
+            }
+        }
+        impl Ord for Entry {
+            fn cmp(&self, other: &Self) -> CmpOrd {
+                self.ub.total_cmp(&other.ub).then_with(|| other.j.cmp(&self.j))
+            }
+        }
+        let mut oracle = problem.oracle(candidates);
+        let k = problem.k.min(problem.constraint.max_cardinality());
+        let mut selected: Vec<u32> = Vec::with_capacity(k);
+        let gains = oracle.bulk_gains();
+        let mut heap: BinaryHeap<Entry> = gains
+            .into_iter()
+            .enumerate()
+            .map(|(j, ub)| Entry { ub, j, stamp: 0 })
+            .collect();
+        while selected.len() < k {
+            let Some(top) = heap.pop() else { break };
+            if !problem
+                .constraint
+                .can_add(&selected, candidates[top.j], &problem.dataset)
+            {
+                continue;
+            }
+            if top.stamp == selected.len() {
+                if top.ub <= 0.0 {
+                    break;
+                }
+                oracle.commit(top.j);
+                selected.push(candidates[top.j]);
+            } else {
+                let g = oracle.gain(top.j);
+                heap.push(Entry { ub: g, j: top.j, stamp: selected.len() });
+            }
+        }
+        Solution { value: oracle.value(), items: selected }
+    }
+
+    #[test]
+    fn block_refresh_is_byte_identical_to_scalar_minoux() {
+        use crate::constraints::{Cardinality, Constraint, Intersection, Knapsack, PartitionMatroid};
+        use crate::data::{synthetic, DatasetRef};
+        use std::sync::Arc;
+
+        let n: usize = 120;
+        let k = 9;
+        let ds: DatasetRef = Arc::new(synthetic::csn_like(n, 9));
+        let mut rng = crate::util::rng::Rng::seed_from(42);
+        let covers: Vec<Vec<u32>> = (0..n)
+            .map(|_| (0..6).map(|_| rng.below(40) as u32).collect())
+            .collect();
+        let weights: Vec<f64> = (0..40).map(|_| rng.f64() + 0.1).collect();
+        let modular_w: Vec<f64> = (0..n).map(|_| rng.f64() * 5.0).collect();
+        let problems: Vec<Problem> = vec![
+            Problem::exemplar(ds.clone(), k, 1),
+            Problem::logdet(ds.clone(), k, 1),
+            Problem::coverage(CoverageData { covers, weights }, k, 1),
+            Problem::modular(modular_w, k, 1),
+        ];
+        let knap_w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+        let groups: Vec<u32> = (0..n).map(|i| (i % 5) as u32).collect();
+        let constraints: Vec<Arc<dyn Constraint>> = vec![
+            Arc::new(Cardinality::new(k)),
+            Arc::new(Knapsack::new(knap_w.clone(), 25.0, k)),
+            Arc::new(PartitionMatroid::new(groups.clone(), vec![2; 5], k)),
+            Arc::new(Intersection::new(vec![
+                Arc::new(Knapsack::new(knap_w, 30.0, k)),
+                Arc::new(PartitionMatroid::new(groups, vec![3; 5], k)),
+            ])),
+        ];
+        let cands: Vec<u32> = (0..n as u32).collect();
+        for p0 in &problems {
+            for c in &constraints {
+                let p = p0.clone().with_constraint(c.clone());
+                let blocked = lazy_greedy_core(&p, &cands, None).unwrap();
+                let scalar = scalar_minoux(&p, &cands);
+                assert_eq!(
+                    blocked.items, scalar.items,
+                    "selection diverged: {} under {}",
+                    p.objective.name(),
+                    c.name()
+                );
+                assert_eq!(
+                    blocked.value.to_bits(),
+                    scalar.value.to_bits(),
+                    "value not bit-identical: {} under {}",
+                    p.objective.name(),
+                    c.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_compressors_are_byte_identical_across_engines() {
+        // the Engine bit-identity contract, observed end to end: every
+        // compressor must produce the same Solution whether the problem
+        // computes on the native engine or the xla engine (whose oracle
+        // kernels run the same blocked code; a device, when one starts,
+        // only serves the fused compressor paths, which are not in play
+        // here)
+        use crate::data::{synthetic, DatasetRef};
+        use crate::runtime::EngineChoice;
+        use std::sync::Arc;
+        let ds: DatasetRef = Arc::new(synthetic::csn_like(80, 5));
+        let cands: Vec<u32> = (0..80).collect();
+        let compressors: Vec<Box<dyn Compressor>> = vec![
+            Box::new(LazyGreedy::new()),
+            Box::new(ThresholdGreedy::new(0.2)),
+            Box::new(StochasticGreedy::new(0.5)),
+            Box::new(RandomCompressor::new()),
+        ];
+        for base in [Problem::exemplar(ds.clone(), 6, 3), Problem::logdet(ds.clone(), 6, 3)] {
+            for c in &compressors {
+                let native = base.clone().with_compute(EngineChoice::Native.build());
+                let xla = base.clone().with_compute(EngineChoice::Xla.build());
+                let a = c.compress(&native, &cands, 7).unwrap();
+                let b = c.compress(&xla, &cands, 7).unwrap();
+                assert_eq!(a.items, b.items, "{} selection diverged", c.name());
+                assert_eq!(
+                    a.value.to_bits(),
+                    b.value.to_bits(),
+                    "{} value not bit-identical",
+                    c.name()
+                );
+            }
+        }
     }
 
     #[test]

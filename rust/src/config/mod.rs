@@ -12,6 +12,7 @@ use crate::data::registry;
 use crate::dist::{Backend, BackendChoice, FaultPlan};
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
+use crate::runtime::EngineChoice;
 use crate::util::json::Json;
 
 /// Which algorithm a run executes.
@@ -62,7 +63,17 @@ pub struct RunConfig {
     pub capacity: CapacityProfile,
     pub seed: u64,
     pub trials: usize,
+    /// Legacy device-offload gate: `false` (`--no-engine`) pins the run
+    /// to [`EngineChoice::Native`] regardless of `engine`, exactly like
+    /// the pre-engine "pure rust" mode.
     pub use_engine: bool,
+    /// Compute engine for oracles and kernels (`engine` config key,
+    /// `--engine` flag): `native` (default) is the dependency-free
+    /// batched CPU backend; `xla` adds the device thread when artifacts
+    /// are built, falling back to the native kernels otherwise. Under a
+    /// tcp backend the choice is also requested from every worker at
+    /// handshake.
+    pub engine: EngineChoice,
     pub threads: usize,
     /// Execution backend for compression rounds (local | tcp | sim).
     pub backend: BackendChoice,
@@ -88,6 +99,7 @@ impl Default for RunConfig {
             seed: 42,
             trials: 1,
             use_engine: true,
+            engine: EngineChoice::Native,
             threads: 2,
             backend: BackendChoice::Local,
             partitioner: PartitionStrategy::Balanced,
@@ -128,6 +140,9 @@ impl RunConfig {
         }
         if let Some(x) = v.get("use_engine").and_then(Json::as_bool) {
             cfg.use_engine = x;
+        }
+        if let Some(e) = v.get("engine").and_then(Json::as_str) {
+            cfg.engine = EngineChoice::parse(e)?;
         }
         if let Some(x) = v.get("threads").and_then(Json::as_usize) {
             cfg.threads = x.max(1);
@@ -173,9 +188,23 @@ impl RunConfig {
         Ok(cfg)
     }
 
-    /// Build the concrete execution backend this config selects.
+    /// Build the concrete execution backend this config selects. Tcp
+    /// backends request this config's engine from every worker at
+    /// handshake; local and sim execution follow the problem's own
+    /// engine.
     pub fn build_backend(&self) -> Result<Arc<dyn Backend>> {
-        self.backend.build(&self.capacity, Some(self.threads))
+        self.backend
+            .build_with_engine(&self.capacity, Some(self.threads), self.engine_choice())
+    }
+
+    /// The effective engine choice: `engine`, unless the legacy
+    /// `--no-engine` gate pins the run to native.
+    pub fn engine_choice(&self) -> EngineChoice {
+        if self.use_engine {
+            self.engine
+        } else {
+            EngineChoice::Native
+        }
     }
 
     /// Materialize the problem this config describes (objective follows
@@ -195,21 +224,16 @@ impl RunConfig {
         Ok(p)
     }
 
-    /// Attach the XLA engine if requested and available.
+    /// Materialize the problem with this config's compute engine
+    /// attached. The returned handle is the XLA device thread when the
+    /// engine is `xla` *and* its artifacts are built — `None` otherwise
+    /// (the engine then serves the same batched native kernels, so
+    /// results are bit-identical either way).
     pub fn problem_with_engine(&self) -> Result<(Problem, Option<crate::runtime::EngineHandle>)> {
-        let mut p = self.problem()?;
-        let engine = if self.use_engine {
-            match crate::runtime::Engine::start_default() {
-                Ok(e) => {
-                    p = p.with_engine(e.clone());
-                    Some(e)
-                }
-                Err(_) => None, // artifacts not built: pure path
-            }
-        } else {
-            None
-        };
-        Ok((p, engine))
+        let engine = self.engine_choice().build();
+        let handle = engine.xla_handle().cloned();
+        let p = self.problem()?.with_compute(engine);
+        Ok((p, handle))
     }
 }
 
@@ -364,6 +388,20 @@ mod tests {
     fn rejects_unknown_dataset_and_algo() {
         assert!(RunConfig::from_json_text(r#"{"dataset":"nope"}"#).is_err());
         assert!(RunConfig::from_json_text(r#"{"algo":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_engine_choice_and_no_engine_pins_native() {
+        let cfg = RunConfig::from_json_text(r#"{"engine":"xla"}"#).unwrap();
+        assert_eq!(cfg.engine, EngineChoice::Xla);
+        assert_eq!(cfg.engine_choice(), EngineChoice::Xla);
+        // the legacy gate wins over the engine name
+        let pinned =
+            RunConfig::from_json_text(r#"{"engine":"xla","use_engine":false}"#).unwrap();
+        assert_eq!(pinned.engine_choice(), EngineChoice::Native);
+        // default runs native
+        assert_eq!(RunConfig::default().engine_choice(), EngineChoice::Native);
+        assert!(RunConfig::from_json_text(r#"{"engine":"gpu9000"}"#).is_err());
     }
 
     #[test]

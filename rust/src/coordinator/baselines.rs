@@ -22,7 +22,7 @@ pub fn centralized(problem: &Problem) -> Result<Solution> {
 /// Centralized GREEDY restricted to a subset (shared helper).
 pub fn centralized_on(problem: &Problem, items: &[u32]) -> Result<Solution> {
     if let (Some(engine), crate::objectives::Objective::Exemplar) =
-        (&problem.engine, &problem.objective)
+        (problem.compute.xla_handle(), &problem.objective)
     {
         let mut oracle =
             crate::runtime::accel::XlaExemplarOracle::new(engine.clone(), problem, items)?;

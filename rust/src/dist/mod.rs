@@ -65,6 +65,7 @@ use crate::data::DatasetRef;
 use crate::dist::protocol::ProblemSpec;
 use crate::error::{Error, Result};
 use crate::objectives::{Objective, Problem};
+use crate::runtime::EngineChoice;
 use crate::trace;
 use crate::util::rng::Rng;
 
@@ -95,11 +96,13 @@ pub struct RoundOutcome {
 /// run summary and the dispatch bench report these. Purely
 /// observational — stats never influence dispatch or the answer.
 ///
-/// Counter semantics: `parts`, `oracle_evals`, `busy_ms` and
-/// `queue_wait_ms` are *sums* over completed parts; the cache fields
-/// are the worker's own cumulative gauges (dataset cache = process
-/// lifetime, problem-id table = connection lifetime), so the
-/// coordinator keeps the latest reported value rather than summing.
+/// Counter semantics: `parts`, `oracle_evals`, `busy_ms`,
+/// `queue_wait_ms` and the `bulk_gain_*` pair are *sums* over completed
+/// parts; the cache fields are the worker's own cumulative gauges
+/// (dataset cache = process lifetime, problem-id table = connection
+/// lifetime), so the coordinator keeps the latest reported value rather
+/// than summing; `engine` is likewise a latest-wins gauge naming the
+/// compute engine serving the worker's current connection.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct WorkerStats {
     /// Worker identity (`host:port` for TCP fleets).
@@ -129,6 +132,15 @@ pub struct WorkerStats {
     /// Payload bytes exchanged over JSON-mode connections — nonzero for
     /// JSON-only peers and for pre-negotiation handshake traffic.
     pub payload_bytes_json: u64,
+    /// Wire name of the compute engine serving this worker's current
+    /// connection (`native` / `xla`), set at handshake and reconfirmed
+    /// by each solution's telemetry. Empty until a handshake resolves.
+    pub engine: String,
+    /// Batched-gain (`gains_for`) calls this worker's oracles answered,
+    /// summed over completed parts (protocol v6 engine telemetry).
+    pub bulk_gain_calls: u64,
+    /// Candidates evaluated across those batched calls (sum).
+    pub bulk_gain_candidates: u64,
 }
 
 /// One observable state change of an in-flight round.
@@ -613,6 +625,20 @@ impl BackendChoice {
         profile: &CapacityProfile,
         threads: Option<usize>,
     ) -> Result<Arc<dyn Backend>> {
+        self.build_with_engine(profile, threads, EngineChoice::Native)
+    }
+
+    /// [`BackendChoice::build`] plus the compute engine to request from
+    /// tcp workers at handshake. Local and sim backends execute against
+    /// the submitted problem's own engine in-process, so `engine` only
+    /// reaches tcp fleets (where workers pinned with `--engine` still
+    /// win per connection).
+    pub fn build_with_engine(
+        &self,
+        profile: &CapacityProfile,
+        threads: Option<usize>,
+        engine: EngineChoice,
+    ) -> Result<Arc<dyn Backend>> {
         Ok(match self {
             BackendChoice::Local => {
                 let mut b = LocalBackend::with_profile(profile.clone());
@@ -621,9 +647,10 @@ impl BackendChoice {
                 }
                 Arc::new(b)
             }
-            BackendChoice::Tcp { workers } => {
-                Arc::new(TcpBackend::with_profile(profile.clone(), workers.clone())?)
-            }
+            BackendChoice::Tcp { workers } => Arc::new(
+                TcpBackend::with_profile(profile.clone(), workers.clone())?
+                    .with_engine_choice(engine),
+            ),
             BackendChoice::Sim { faults, schedule } => {
                 let mut b =
                     SimBackend::with_profile(profile.clone()).with_faults(faults.clone());

@@ -39,6 +39,7 @@ use crate::data::spec::DatasetSpec;
 use crate::data::DatasetRef;
 use crate::error::{Error, Result};
 use crate::objectives::{Objective, Problem};
+use crate::runtime::EngineChoice;
 use crate::util::json::lazy::{self, LazyDoc};
 use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 
@@ -76,7 +77,16 @@ use crate::util::json::{self, wire_f64, wire_str, wire_u64, wire_usize, Json};
 /// that stays silent about `payload` gets pure-JSON frames for the
 /// whole connection, and both encodings are bit-identical in decoded
 /// meaning (the differential tests in `rust/tests/protocol_fuzz.rs`
-/// enforce it). v1–v5 peers are rejected at handshake.
+/// enforce it). v1–v5 peers are rejected at handshake. v6 also carries
+/// the **negotiated compute engine** (additive — no version bump): a
+/// coordinator may request `engine: "xla"` in its hello, a worker
+/// answers with the engine it will actually serve the connection with
+/// (its pinned `--engine` wins over the request), an absent token means
+/// `native` — the dependency-free batched kernel backend every build
+/// carries — so engine-silent peers keep handshaking unchanged, and an
+/// unknown engine name is a protocol error. Solution telemetry gained
+/// `engine` / `bulk_gain_calls` / `bulk_gain_candidates` under the same
+/// additive rule (absent parses as empty/zero).
 ///
 /// Pipelined/streaming dispatch (the coordinator's Backend v3 —
 /// persistent per-worker dispatchers, next-round parts speculatively
@@ -181,6 +191,21 @@ impl PayloadMode {
                 "unknown payload encoding {other}"
             ))),
         }
+    }
+}
+
+/// Read the optional `engine` token from a hello frame (v6, additive):
+/// absent means [`EngineChoice::Native`] — the batched CPU kernel
+/// backend every build carries — so engine-silent peers keep
+/// handshaking unchanged; an unknown name is a protocol error rather
+/// than a silent fallback, because the peers would disagree about
+/// which compute substrate served the connection.
+fn engine_from_hello(v: &Json) -> Result<EngineChoice> {
+    match v.get("engine") {
+        None => Ok(EngineChoice::Native),
+        Some(Json::Str(s)) if s == "native" => Ok(EngineChoice::Native),
+        Some(Json::Str(s)) if s == "xla" => Ok(EngineChoice::Xla),
+        Some(other) => Err(Error::Protocol(format!("unknown engine {other}"))),
     }
 }
 
@@ -771,6 +796,17 @@ pub struct Telemetry {
     /// Interned problems evicted by the table bound (connection
     /// lifetime).
     pub problem_evictions: u64,
+    /// Wire name of the compute engine that served this request
+    /// (`native` / `xla`). A gauge like the cache counters — the
+    /// coordinator keeps the latest value per worker. Absent (pre-engine
+    /// workers) parses as `""`.
+    pub engine: String,
+    /// Batched-gain (`gains_for`) calls the oracle answered while
+    /// compressing this part (per-request sum).
+    pub bulk_gain_calls: u64,
+    /// Total candidates evaluated across those batched calls
+    /// (per-request sum).
+    pub bulk_gain_candidates: u64,
 }
 
 impl Telemetry {
@@ -782,6 +818,9 @@ impl Telemetry {
             ("problem_hits", ju64(self.problem_hits)),
             ("problem_misses", ju64(self.problem_misses)),
             ("problem_evictions", ju64(self.problem_evictions)),
+            ("engine", json::s(&self.engine)),
+            ("bulk_gain_calls", ju64(self.bulk_gain_calls)),
+            ("bulk_gain_candidates", ju64(self.bulk_gain_candidates)),
         ])
     }
 
@@ -798,6 +837,9 @@ impl Telemetry {
             problem_hits: u("problem_hits"),
             problem_misses: u("problem_misses"),
             problem_evictions: u("problem_evictions"),
+            engine: v.get("engine").and_then(Json::as_str).unwrap_or("").to_string(),
+            bulk_gain_calls: u("bulk_gain_calls"),
+            bulk_gain_candidates: u("bulk_gain_candidates"),
         }
     }
 }
@@ -822,6 +864,12 @@ pub enum Request {
         /// if the worker echoes `binary` back; hello frames themselves
         /// are always pure JSON.
         payload: PayloadMode,
+        /// The compute engine the coordinator asks the worker to serve
+        /// this connection with. Advisory — a worker pinned with
+        /// `--engine` answers with its own choice; the response states
+        /// the engine actually in effect. Absent on the wire means
+        /// `native`.
+        engine: EngineChoice,
     },
     /// Intern a problem on this connection (v4): ship the full
     /// [`ProblemSpec`] once under a coordinator-chosen id; every
@@ -852,7 +900,7 @@ pub enum Request {
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Hello { clock_ms, payload } => {
+            Request::Hello { clock_ms, payload, engine } => {
                 let mut fields = vec![
                     ("type", json::s("hello")),
                     ("version", json::num(PROTOCOL_VERSION as f64)),
@@ -862,6 +910,11 @@ impl Request {
                 // hellos are byte-identical to their pre-v6 shape
                 if *payload == PayloadMode::Binary {
                     fields.push(("payload", json::s(payload.wire_name())));
+                }
+                // same rule for the engine token: `native` is the
+                // wire default and stays off the wire
+                if *engine != EngineChoice::Native {
+                    fields.push(("engine", json::s(engine.wire_name())));
                 }
                 json::obj(fields)
             }
@@ -894,7 +947,11 @@ impl Request {
                 // telemetry field: absent or malformed defaults to 0.0
                 // (a coordinator that is not tracing sends 0.0 anyway)
                 let clock_ms = v.get("clock_ms").and_then(Json::as_f64).unwrap_or(0.0);
-                Ok(Request::Hello { clock_ms, payload: PayloadMode::from_hello(v)? })
+                Ok(Request::Hello {
+                    clock_ms,
+                    payload: PayloadMode::from_hello(v)?,
+                    engine: engine_from_hello(v)?,
+                })
             }
             "define-problem" => {
                 let problem_json = v
@@ -988,8 +1045,10 @@ pub enum Response {
     /// clock skew by the handshake RTT), and the negotiated payload
     /// encoding (v6): `binary` only if the worker is binary-capable
     /// *and* the coordinator advertised it; everything after this
-    /// frame uses the mode stated here.
-    Hello { capacity: usize, clock_echo_ms: f64, payload: PayloadMode },
+    /// frame uses the mode stated here. `engine` is the compute engine
+    /// the worker will actually serve this connection with — its pinned
+    /// `--engine` wins over the coordinator's request.
+    Hello { capacity: usize, clock_echo_ms: f64, payload: PayloadMode, engine: EngineChoice },
     /// [`Request::DefineProblem`] acknowledged: the id is now live on
     /// this connection.
     Defined { id: u64 },
@@ -1006,7 +1065,7 @@ pub enum Response {
 impl Response {
     pub fn to_json(&self) -> Json {
         match self {
-            Response::Hello { capacity, clock_echo_ms, payload } => {
+            Response::Hello { capacity, clock_echo_ms, payload, engine } => {
                 let mut fields = vec![
                     ("type", json::s("hello")),
                     ("version", json::num(PROTOCOL_VERSION as f64)),
@@ -1015,6 +1074,9 @@ impl Response {
                 ];
                 if *payload == PayloadMode::Binary {
                     fields.push(("payload", json::s(payload.wire_name())));
+                }
+                if *engine != EngineChoice::Native {
+                    fields.push(("engine", json::s(engine.wire_name())));
                 }
                 json::obj(fields)
             }
@@ -1051,6 +1113,7 @@ impl Response {
                     capacity: wire_usize(v, "capacity")?,
                     clock_echo_ms: v.get("clock_echo_ms").and_then(Json::as_f64).unwrap_or(0.0),
                     payload: PayloadMode::from_hello(v)?,
+                    engine: engine_from_hello(v)?,
                 })
             }
             "defined" => Ok(Response::Defined { id: wire_u64(v, "id")? }),
@@ -1172,13 +1235,58 @@ mod tests {
         let back = Request::from_json(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(req, back);
         for r in [
-            Request::Hello { clock_ms: 12.5, payload: PayloadMode::Binary },
-            Request::Hello { clock_ms: 0.0, payload: PayloadMode::Json },
+            Request::Hello {
+                clock_ms: 12.5,
+                payload: PayloadMode::Binary,
+                engine: EngineChoice::Native,
+            },
+            Request::Hello {
+                clock_ms: 0.0,
+                payload: PayloadMode::Json,
+                engine: EngineChoice::Xla,
+            },
             Request::Shutdown,
         ] {
             let b = Request::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
             assert_eq!(r, b);
         }
+    }
+
+    #[test]
+    fn engine_token_negotiates_and_rejects_unknown_names() {
+        // silent peers mean native — the additive-token rule that keeps
+        // pre-engine hellos handshaking unchanged
+        let bare = Json::parse(r#"{"type":"hello","version":6,"clock_ms":0}"#).unwrap();
+        match Request::from_json(&bare).unwrap() {
+            Request::Hello { engine, .. } => assert_eq!(engine, EngineChoice::Native),
+            other => panic!("wrong request {other:?}"),
+        }
+        // a native hello stays byte-identical to the pre-engine shape
+        let native = Request::Hello {
+            clock_ms: 0.0,
+            payload: PayloadMode::Json,
+            engine: EngineChoice::Native,
+        };
+        assert!(!native.to_json().to_string().contains("engine"));
+        // xla round-trips through the explicit token
+        let xla = Response::Hello {
+            capacity: 9,
+            clock_echo_ms: 1.5,
+            payload: PayloadMode::Json,
+            engine: EngineChoice::Xla,
+        };
+        let text = xla.to_json().to_string();
+        assert!(text.contains(r#""engine":"xla""#), "{text}");
+        assert_eq!(Response::from_json(&Json::parse(&text).unwrap()).unwrap(), xla);
+        // an unknown engine is a loud protocol error, not a silent
+        // fallback that would leave the ends disagreeing about the
+        // compute substrate
+        let odd = Json::parse(
+            r#"{"type":"hello","version":6,"capacity":7,"engine":"tpu-pod"}"#,
+        )
+        .unwrap();
+        let err = Response::from_json(&odd).unwrap_err();
+        assert!(err.to_string().contains("unknown engine"), "{err}");
     }
 
     #[test]
@@ -1189,6 +1297,7 @@ mod tests {
             capacity: 128,
             clock_echo_ms: 417.25,
             payload: PayloadMode::Binary,
+            engine: EngineChoice::Native,
         };
         let back =
             Response::from_json(&Json::parse(&hello.to_json().to_string()).unwrap()).unwrap();
@@ -1199,7 +1308,12 @@ mod tests {
         let bare = Json::parse(r#"{"type":"hello","version":6,"capacity":7}"#).unwrap();
         assert_eq!(
             Response::from_json(&bare).unwrap(),
-            Response::Hello { capacity: 7, clock_echo_ms: 0.0, payload: PayloadMode::Json }
+            Response::Hello {
+                capacity: 7,
+                clock_echo_ms: 0.0,
+                payload: PayloadMode::Json,
+                engine: EngineChoice::Native,
+            }
         );
         // an unknown payload token is a loud mismatch, not a silent
         // JSON fallback that would desync the two ends of a connection
@@ -1217,6 +1331,9 @@ mod tests {
             problem_hits: 40,
             problem_misses: 1,
             problem_evictions: 5,
+            engine: "native".into(),
+            bulk_gain_calls: 6,
+            bulk_gain_candidates: 190,
         };
         let resp = Response::Solution {
             items: vec![9],
@@ -1635,14 +1752,22 @@ mod tests {
         // handshake frames must be identical bytes in both modes —
         // negotiation happens *inside* them, so they can never depend
         // on its outcome
-        let hello = Request::Hello { clock_ms: 2.5, payload: PayloadMode::Binary };
+        let hello = Request::Hello {
+            clock_ms: 2.5,
+            payload: PayloadMode::Binary,
+            engine: EngineChoice::Xla,
+        };
         assert_eq!(hello.encode(PayloadMode::Json), hello.encode(PayloadMode::Binary));
         assert_eq!(
             Request::Shutdown.encode(PayloadMode::Json),
             Request::Shutdown.encode(PayloadMode::Binary)
         );
-        let reply =
-            Response::Hello { capacity: 4, clock_echo_ms: 2.5, payload: PayloadMode::Binary };
+        let reply = Response::Hello {
+            capacity: 4,
+            clock_echo_ms: 2.5,
+            payload: PayloadMode::Binary,
+            engine: EngineChoice::Native,
+        };
         assert_eq!(reply.encode(PayloadMode::Json), reply.encode(PayloadMode::Binary));
         assert_eq!(
             Response::Bye.encode(PayloadMode::Json),

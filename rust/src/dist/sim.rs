@@ -277,7 +277,12 @@ impl Backend for SimBackend {
                 }
             };
             let shipped = if interned.fresh { Some(interned.bytes) } else { None };
-            Some((interned.spec.materialize_with(ds, constraint)?, comp, shipped))
+            // the reconstructed problem serves with the submitter's
+            // compute engine — the sim analogue of a worker honoring
+            // the engine negotiated for the connection
+            let problem_run =
+                interned.spec.materialize_with(ds, constraint)?.with_compute(problem.compute.clone());
+            Some((problem_run, comp, shipped))
         } else {
             None
         };

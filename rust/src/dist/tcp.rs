@@ -68,6 +68,7 @@ use crate::dist::protocol::{
 use crate::dist::{Backend, PartEvent, RoundSession, RoundSink, SpecInterner, WorkerStats};
 use crate::error::{Error, Result};
 use crate::objectives::{EvalCounter, Problem};
+use crate::runtime::EngineChoice;
 use crate::trace;
 use crate::util::log;
 
@@ -89,10 +90,13 @@ struct WorkerConn {
     /// [`WorkerStats`] split after every dispatched part.
     bytes_binary: u64,
     bytes_json: u64,
+    /// Compute engine the worker granted at handshake (its pin wins
+    /// over our request) — surfaced in [`WorkerStats`].
+    engine: EngineChoice,
 }
 
 impl WorkerConn {
-    fn connect(addr: &str) -> Result<WorkerConn> {
+    fn connect(addr: &str, engine: EngineChoice) -> Result<WorkerConn> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| Error::transport(addr, format!("connect failed: {e}")))?;
         stream.set_nodelay(true).ok();
@@ -114,14 +118,18 @@ impl WorkerConn {
             mode: PayloadMode::Json,
             bytes_binary: 0,
             bytes_json: 0,
+            engine: EngineChoice::Native,
         };
         let t0 = trace::now_us();
-        let hello =
-            Request::Hello { clock_ms: trace::clock_ms(), payload: PayloadMode::Binary };
+        let hello = Request::Hello {
+            clock_ms: trace::clock_ms(),
+            payload: PayloadMode::Binary,
+            engine,
+        };
         let reply = conn.roundtrip(&hello)?;
         conn.stream.set_read_timeout(None).ok();
         match reply {
-            Response::Hello { capacity, clock_echo_ms, payload } => {
+            Response::Hello { capacity, clock_echo_ms, payload, engine } => {
                 if trace::enabled() {
                     // the echo bounds coordinator↔worker clock alignment
                     // by this handshake's RTT (docs/OBSERVABILITY.md)
@@ -141,6 +149,9 @@ impl WorkerConn {
                 // JSON-only (or pinned) worker answers "json" — or, for
                 // a silent pre-v6-shaped hello, defaults to it
                 conn.mode = payload;
+                // the engine the worker will actually serve with — its
+                // own pin wins over our request
+                conn.engine = engine;
                 Ok(conn)
             }
             other => Err(Error::Protocol(format!(
@@ -256,6 +267,10 @@ struct FleetState {
     /// Per-worker utilization/telemetry (protocol v5), keyed by address
     /// so [`Backend::worker_stats`] reports in a stable order.
     stats: BTreeMap<String, WorkerStats>,
+    /// Compute engine requested in every worker handshake (v6) — each
+    /// worker's pin may override it per connection, so a mixed fleet is
+    /// fine; the granted engine lands in [`WorkerStats::engine`].
+    engine: EngineChoice,
 }
 
 struct Fleet {
@@ -334,6 +349,7 @@ impl TcpBackend {
                 dispatchers_alive: count,
                 shutdown: None,
                 stats: BTreeMap::new(),
+                engine: EngineChoice::Native,
             }),
             cv: Condvar::new(),
         });
@@ -345,6 +361,18 @@ impl TcpBackend {
                 .map_err(|e| Error::Worker(format!("spawn dispatcher: {e}")))?;
         }
         Ok(TcpBackend { profile, fleet, interner: SpecInterner::new() })
+    }
+
+    /// Set the compute engine requested in every worker handshake
+    /// (`hss run --engine`). Takes effect for connections established
+    /// after the call — set it before the first round. Workers pinned
+    /// with their own `--engine` override it per connection.
+    pub fn with_engine_choice(self, engine: EngineChoice) -> TcpBackend {
+        {
+            let mut st = self.fleet.lock();
+            st.engine = engine;
+        }
+        self
     }
 
     /// Addresses this backend was configured with.
@@ -750,8 +778,9 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
             }
             Step::Connect(addr) => {
                 let epoch = st.epoch;
+                let engine = st.engine;
                 drop(st);
-                let attempt = WorkerConn::connect(&addr);
+                let attempt = WorkerConn::connect(&addr, engine);
                 st = fleet.lock();
                 match attempt {
                     Ok(c) => {
@@ -759,6 +788,15 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                         // resolves: peers' stall checks must see every
                         // successful worker before concluding "no fit"
                         st.slots[id].capacity = Some(c.capacity);
+                        // record the granted engine up front so stats
+                        // name it even before the first part completes
+                        let addr = st.slots[id].addr.clone();
+                        let entry =
+                            st.stats.entry(addr.clone()).or_insert_with(|| WorkerStats {
+                                addr,
+                                ..WorkerStats::default()
+                            });
+                        entry.engine = c.engine.wire_name().to_string();
                         conn = Some(c);
                     }
                     Err(e) => {
@@ -864,7 +902,16 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                         entry.oracle_evals += evals;
                         entry.busy_ms += wall_ms;
                         entry.queue_wait_ms += telemetry.queue_wait_ms;
+                        // per-request batched-eval sums (v6 engine
+                        // telemetry)
+                        entry.bulk_gain_calls += telemetry.bulk_gain_calls;
+                        entry.bulk_gain_candidates += telemetry.bulk_gain_candidates;
                         // cumulative worker-side gauges: latest wins
+                        // (an engine-silent pre-v6 frame parses as ""
+                        // and must not wipe the handshake's answer)
+                        if !telemetry.engine.is_empty() {
+                            entry.engine = telemetry.engine.clone();
+                        }
                         entry.dataset_hits = telemetry.dataset_hits;
                         entry.dataset_misses = telemetry.dataset_misses;
                         entry.problem_hits = telemetry.problem_hits;
@@ -1059,6 +1106,7 @@ mod tests {
                                 capacity,
                                 clock_echo_ms: clock_ms,
                                 payload: PayloadMode::Json,
+                                engine: EngineChoice::Native,
                             };
                             if send_msg(&mut stream, &hello.to_json()).is_err() {
                                 break;

@@ -29,6 +29,13 @@
 //! blob sections; otherwise the connection stays pure JSON. Mixed
 //! fleets are therefore fine — each connection negotiates
 //! independently.
+//!
+//! The compute engine serving a connection is negotiated in the same
+//! handshake (v6, additive token): a worker pinned with `--engine`
+//! answers with its own choice regardless of the request; an unpinned
+//! worker follows the coordinator's `engine` token, defaulting to the
+//! native batched kernel backend for engine-silent peers. Each
+//! solution's telemetry names the engine that served it.
 
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -44,6 +51,7 @@ use crate::dist::protocol::{
 };
 use crate::error::{Error, Result};
 use crate::objectives::Problem;
+use crate::runtime::{Engine, EngineChoice};
 use crate::util::log;
 
 /// Worker process configuration.
@@ -64,6 +72,13 @@ pub struct WorkerConfig {
     /// [`PayloadMode::Json`] pins every connection to pure JSON — the
     /// knob behind mixed-fleet tests and wire debugging.
     pub payload: PayloadMode,
+    /// Compute engine pin (`--engine`). `Some(choice)` serves every
+    /// connection with that engine regardless of what the coordinator
+    /// requests; `None` (the default) follows the coordinator's hello
+    /// token, falling back to [`EngineChoice::Native`] for
+    /// engine-silent peers. The hello reply always states the engine
+    /// actually in effect.
+    pub engine: Option<EngineChoice>,
 }
 
 impl Default for WorkerConfig {
@@ -73,6 +88,7 @@ impl Default for WorkerConfig {
             capacity: 200,
             straggle_ms: 0,
             payload: PayloadMode::Binary,
+            engine: None,
         }
     }
 }
@@ -260,6 +276,13 @@ fn serve_connection(
     // handshake negotiates otherwise, so pre-negotiation frames are
     // decoded exactly as a v5-shaped peer would send them.
     let mut mode = PayloadMode::Json;
+    // Compute engine for THIS connection: a pinned worker serves its
+    // own choice, otherwise the coordinator's hello token decides
+    // (absent → native). Built lazily on the first compress so hellos
+    // stay cheap and a connection that never compresses never pays
+    // engine startup.
+    let mut engine_choice = cfg.engine.unwrap_or_default();
+    let mut engine: Option<Arc<dyn Engine>> = None;
     loop {
         let frame = match read_frame(&mut stream) {
             Ok(f) => f,
@@ -280,7 +303,7 @@ fn serve_connection(
             }
         };
         let reply = match request {
-            Request::Hello { clock_ms, payload } => {
+            Request::Hello { clock_ms, payload, engine: requested } => {
                 // negotiate the payload encoding: binary only when the
                 // coordinator advertised it AND this worker allows it —
                 // then echo the coordinator's trace clock so its spans
@@ -291,10 +314,16 @@ fn serve_connection(
                 } else {
                     PayloadMode::Json
                 };
+                // engine negotiation: a pinned worker overrides the
+                // request; the reply states the engine actually in
+                // effect so the coordinator's telemetry is truthful
+                engine_choice = cfg.engine.unwrap_or(requested);
+                engine = None;
                 Response::Hello {
                     capacity: cfg.capacity,
                     clock_echo_ms: clock_ms,
                     payload: mode,
+                    engine: engine_choice,
                 }
             }
             Request::Shutdown => {
@@ -334,6 +363,10 @@ fn serve_connection(
                             // lookup inside handle_compress
                             ..Telemetry::default()
                         };
+                        // per-connection engine, built once on first use
+                        let eng = engine
+                            .get_or_insert_with(|| engine_choice.build())
+                            .clone();
                         handle_compress(
                             cfg.capacity,
                             cache,
@@ -342,6 +375,7 @@ fn serve_connection(
                             &part,
                             cap,
                             seed,
+                            eng,
                             telemetry,
                         )
                         .unwrap_or_else(|e| Response::Error { msg: e.to_string() })
@@ -371,6 +405,7 @@ fn handle_compress(
     part: &[u32],
     cap: usize,
     seed: u64,
+    eng: Arc<dyn Engine>,
     mut telemetry: Telemetry,
 ) -> Result<Response> {
     if part.len() > capacity {
@@ -391,7 +426,10 @@ fn handle_compress(
         });
     }
     let compressor = crate::dist::protocol::compressor_from_name(compressor_name)?;
-    let problem = cache.problem(spec)?;
+    // the problem is rebuilt per request, so its bulk counter starts at
+    // zero and the post-compress snapshot is this request's own sums
+    telemetry.engine = eng.name().to_string();
+    let problem = cache.problem(spec)?.with_compute(eng);
     // cumulative gauges, read after this request's lookup so the
     // coordinator's latest-value bookkeeping includes it
     telemetry.dataset_hits = cache.dataset_hits;
@@ -400,6 +438,9 @@ fn handle_compress(
     let evals_before = problem.eval_count();
     let t0 = std::time::Instant::now();
     let solution = compressor.compress(&problem, part, seed)?;
+    let (bulk_gain_calls, bulk_gain_candidates) = problem.bulk.snapshot();
+    telemetry.bulk_gain_calls = bulk_gain_calls;
+    telemetry.bulk_gain_candidates = bulk_gain_candidates;
     Ok(Response::Solution {
         items: solution.items,
         value: solution.value,
@@ -445,12 +486,21 @@ mod tests {
 
         // v5 handshake: the worker echoes the coordinator's clock; a
         // JSON-only coordinator keeps the connection in JSON mode
-        let hi = Request::Hello { clock_ms: 41.5, payload: PayloadMode::Json };
+        let hi = Request::Hello {
+            clock_ms: 41.5,
+            payload: PayloadMode::Json,
+            engine: EngineChoice::Native,
+        };
         protocol::send_msg(&mut stream, &hi.to_json()).unwrap();
         let hello = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
         assert_eq!(
             hello,
-            Response::Hello { capacity: 64, clock_echo_ms: 41.5, payload: PayloadMode::Json }
+            Response::Hello {
+                capacity: 64,
+                clock_echo_ms: 41.5,
+                payload: PayloadMode::Json,
+                engine: EngineChoice::Native,
+            }
         );
 
         let spec = ProblemSpec {
@@ -512,6 +562,15 @@ mod tests {
                 assert_eq!(telemetry.problem_evictions, 0);
                 assert_eq!(telemetry.dataset_misses, 1);
                 assert_eq!(telemetry.dataset_hits, 0);
+                // engine telemetry: the default fleet serves native and
+                // lazy greedy's heap build is at least one batched call
+                assert_eq!(telemetry.engine, "native");
+                assert!(telemetry.bulk_gain_calls >= 1, "{}", telemetry.bulk_gain_calls);
+                assert!(
+                    telemetry.bulk_gain_candidates >= 50,
+                    "{}",
+                    telemetry.bulk_gain_candidates
+                );
                 // bit-identical to compressing locally
                 let local = crate::algorithms::LazyGreedy::new();
                 let p = spec.materialize().unwrap();
@@ -639,7 +698,11 @@ mod tests {
             let (handle, addr) = spawn_worker(64);
             let mut stream = TcpStream::connect(&addr).unwrap();
             // hello frames are mode-invariant: sent pre-negotiation
-            let hi = Request::Hello { clock_ms: 7.0, payload: advertise };
+            let hi = Request::Hello {
+                clock_ms: 7.0,
+                payload: advertise,
+                engine: EngineChoice::Native,
+            };
             send_request(&mut stream, &hi, PayloadMode::Json).unwrap();
             let (resp, _) = recv_response(&mut stream, PayloadMode::Json).unwrap();
             let mode = match resp {
@@ -685,12 +748,21 @@ mod tests {
             WorkerConfig { capacity: 64, payload: PayloadMode::Json, ..WorkerConfig::default() };
         let (handle, addr) = spawn_worker_cfg(cfg);
         let mut stream = TcpStream::connect(&addr).unwrap();
-        let hi = Request::Hello { clock_ms: 0.25, payload: PayloadMode::Binary };
+        let hi = Request::Hello {
+            clock_ms: 0.25,
+            payload: PayloadMode::Binary,
+            engine: EngineChoice::Native,
+        };
         send_request(&mut stream, &hi, PayloadMode::Json).unwrap();
         let (resp, _) = recv_response(&mut stream, PayloadMode::Json).unwrap();
         assert_eq!(
             resp,
-            Response::Hello { capacity: 64, clock_echo_ms: 0.25, payload: PayloadMode::Json }
+            Response::Hello {
+                capacity: 64,
+                clock_echo_ms: 0.25,
+                payload: PayloadMode::Json,
+                engine: EngineChoice::Native,
+            }
         );
         send_request(&mut stream, &Request::Shutdown, PayloadMode::Json).unwrap();
         let (bye, _) = recv_response(&mut stream, PayloadMode::Json).unwrap();
@@ -698,16 +770,68 @@ mod tests {
         handle.join().unwrap().unwrap();
     }
 
+    /// v6 engine negotiation: an unpinned worker follows the
+    /// coordinator's request; a pinned worker answers with its own
+    /// engine regardless of what was asked for.
+    #[test]
+    fn engine_negotiation_follows_request_unless_pinned() {
+        use crate::dist::protocol::{recv_response, send_request};
+
+        let handshake = |cfg: WorkerConfig, ask: EngineChoice| -> EngineChoice {
+            let (handle, addr) = spawn_worker_cfg(cfg);
+            let mut stream = TcpStream::connect(&addr).unwrap();
+            let hi = Request::Hello {
+                clock_ms: 0.0,
+                payload: PayloadMode::Json,
+                engine: ask,
+            };
+            send_request(&mut stream, &hi, PayloadMode::Json).unwrap();
+            let (resp, _) = recv_response(&mut stream, PayloadMode::Json).unwrap();
+            let granted = match resp {
+                Response::Hello { engine, .. } => engine,
+                other => panic!("expected hello, got {other:?}"),
+            };
+            send_request(&mut stream, &Request::Shutdown, PayloadMode::Json).unwrap();
+            let (bye, _) = recv_response(&mut stream, PayloadMode::Json).unwrap();
+            assert_eq!(bye, Response::Bye);
+            handle.join().unwrap().unwrap();
+            granted
+        };
+
+        let unpinned = |cap| WorkerConfig { capacity: cap, ..WorkerConfig::default() };
+        assert_eq!(handshake(unpinned(64), EngineChoice::Native), EngineChoice::Native);
+        assert_eq!(handshake(unpinned(64), EngineChoice::Xla), EngineChoice::Xla);
+        let pinned = WorkerConfig {
+            capacity: 64,
+            engine: Some(EngineChoice::Native),
+            ..WorkerConfig::default()
+        };
+        assert_eq!(
+            handshake(pinned, EngineChoice::Xla),
+            EngineChoice::Native,
+            "a pinned worker must win the negotiation"
+        );
+    }
+
     #[test]
     fn bounded_problem_table_evicts_one_victim_and_hints_reintern() {
         let (handle, addr) = spawn_worker(64);
         let mut stream = TcpStream::connect(&addr).unwrap();
-        let hi = Request::Hello { clock_ms: 0.0, payload: PayloadMode::Json };
+        let hi = Request::Hello {
+            clock_ms: 0.0,
+            payload: PayloadMode::Json,
+            engine: EngineChoice::Native,
+        };
         protocol::send_msg(&mut stream, &hi.to_json()).unwrap();
         let hello = Response::from_json(&protocol::recv_msg(&mut stream).unwrap()).unwrap();
         assert_eq!(
             hello,
-            Response::Hello { capacity: 64, clock_echo_ms: 0.0, payload: PayloadMode::Json }
+            Response::Hello {
+                capacity: 64,
+                clock_echo_ms: 0.0,
+                payload: PayloadMode::Json,
+                engine: EngineChoice::Native,
+            }
         );
         let base = ProblemSpec {
             dataset: DatasetSpec::Registry { name: "csn-2k".into(), seed: 42 },

@@ -137,6 +137,6 @@ pub mod prelude {
     };
     pub use crate::error::{Error, Result};
     pub use crate::objectives::{Objective, Oracle, Problem};
-    pub use crate::runtime::Engine;
+    pub use crate::runtime::{Engine, EngineChoice, NativeEngine, XlaEngine, XlaRuntime};
     pub use crate::util::rng::Rng;
 }

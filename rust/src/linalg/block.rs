@@ -1,0 +1,214 @@
+//! Blocked (cache-tiled) batch kernels behind [`crate::runtime::Engine`].
+//!
+//! These are the worker hot path: `lazy_greedy_over` refreshes stale heap
+//! entries in blocks, and each refresh lands here as one batched call
+//! instead of µ independent `gain` invocations. The win is memory reuse —
+//! a tile of resident rows (or prior Cholesky rows) is streamed once and
+//! applied to every candidate in the batch — plus the amortized per-call
+//! overhead (virtual dispatch, eval-counter atomics) measured by
+//! `benches/oracle.rs`.
+//!
+//! **Bit-identity contract:** every kernel performs, per output element,
+//! exactly the f64 operations of the scalar oracle loop in the same order.
+//! Blocking only re-tiles the *iteration space*; it never reassociates a
+//! floating-point reduction (e.g. no ‖a‖² + ‖b‖² − 2a·b rewrite of
+//! `sq_dist`). Batched engine-backed runs must produce byte-identical
+//! `Solution`s to the scalar path, and the differential tests in
+//! `objectives/` hold each kernel to that.
+
+use crate::linalg::sq_dist;
+
+/// Rows per tile. Sized so a tile of f32 rows (up to ~d=1536) plus the
+/// curmin/colnorm2 slices stay L1/L2-resident while every candidate in
+/// the batch re-reads them.
+pub const BLOCK: usize = 64;
+
+/// Batched exemplar marginal gains: for each candidate row `c`,
+/// `1/m · Σ_i max(0, curmin[i] − ‖w_i − c‖²)` over the gathered
+/// evaluation rows (`eval_rows` is row-major `[m, d]`).
+///
+/// Tiled i-outer / candidate-mid / i-in-tile-inner: each tile of
+/// evaluation rows is loaded once and scored against the whole batch.
+/// Per candidate the accumulator still sees i = 0..m in increasing
+/// order, so the sum is bit-identical to the scalar `gain` loop.
+pub fn exemplar_gains(
+    eval_rows: &[f32],
+    d: usize,
+    curmin: &[f64],
+    cands: &[&[f32]],
+) -> Vec<f64> {
+    let m = curmin.len();
+    debug_assert_eq!(eval_rows.len(), m * d);
+    let mut acc = vec![0.0f64; cands.len()];
+    let mut lo = 0;
+    while lo < m {
+        let hi = (lo + BLOCK).min(m);
+        for (a, cand) in acc.iter_mut().zip(cands.iter()) {
+            for i in lo..hi {
+                let d2 = sq_dist(&eval_rows[i * d..(i + 1) * d], cand);
+                let diff = curmin[i] - d2;
+                if diff > 0.0 {
+                    *a += diff;
+                }
+            }
+        }
+        lo = hi;
+    }
+    acc.iter().map(|&a| a / m as f64).collect()
+}
+
+/// Exemplar commit: fold one selected candidate's distances into the
+/// `curmin` row vector, returning the realized gain `1/m · Σ max(0, ·)`.
+/// Single streaming pass over the resident rows (one candidate — there
+/// is nothing to tile), identical to the scalar commit loop.
+pub fn exemplar_commit(
+    eval_rows: &[f32],
+    d: usize,
+    curmin: &mut [f64],
+    cand: &[f32],
+) -> f64 {
+    let m = curmin.len();
+    debug_assert_eq!(eval_rows.len(), m * d);
+    let mut acc = 0.0f64;
+    for (i, cur) in curmin.iter_mut().enumerate() {
+        let d2 = sq_dist(&eval_rows[i * d..(i + 1) * d], cand);
+        if d2 < *cur {
+            acc += *cur - d2;
+            *cur = d2;
+        }
+    }
+    acc / m as f64
+}
+
+/// Rank-1 blocked Cholesky row update (the log-det commit): given the
+/// new pivot `λ`, the σ⁻²-scaled kernel column `kcol` of the committed
+/// item, its z-column `zj` over the prior rows, and the prior z-rows,
+/// produce the new z-row `z[i] = (kcol[i] − Σ_u zj[u]·zrows[u][i]) / λ`
+/// and fold `z²` into `colnorm2`.
+///
+/// i-chunked / u-inner-contiguous: each prior row's chunk `zrows[u][lo..hi]`
+/// streams once per tile instead of being gathered column-wise per i.
+/// Per output element the subtraction order is u = 0..t increasing,
+/// exactly the scalar commit loop.
+pub fn cholesky_rank1_row(
+    kcol: &[f64],
+    zj: &[f64],
+    zrows: &[Vec<f64>],
+    lambda: f64,
+    colnorm2: &mut [f64],
+) -> Vec<f64> {
+    let n = kcol.len();
+    debug_assert_eq!(colnorm2.len(), n);
+    debug_assert_eq!(zj.len(), zrows.len());
+    let mut row = vec![0.0f64; n];
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + BLOCK).min(n);
+        row[lo..hi].copy_from_slice(&kcol[lo..hi]);
+        for (zju, zrow) in zj.iter().zip(zrows.iter()) {
+            for (r, &z) in row[lo..hi].iter_mut().zip(&zrow[lo..hi]) {
+                *r -= zju * z;
+            }
+        }
+        for (r, c2) in row[lo..hi].iter_mut().zip(&mut colnorm2[lo..hi]) {
+            let z = *r / lambda;
+            *r = z;
+            *c2 += z * z;
+        }
+        lo = hi;
+    }
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sq_norm;
+
+    fn rows(m: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::seed_from(seed);
+        (0..m * d).map(|_| rng.f32() * 4.0 - 2.0).collect()
+    }
+
+    #[test]
+    fn exemplar_gains_bit_match_scalar_across_tile_boundaries() {
+        // m > BLOCK so the tiling actually splits the reduction
+        let (m, d) = (BLOCK * 2 + 17, 5);
+        let eval = rows(m, d, 1);
+        let curmin: Vec<f64> =
+            (0..m).map(|i| sq_norm(&eval[i * d..(i + 1) * d])).collect();
+        let cand_rows = rows(6, d, 2);
+        let cands: Vec<&[f32]> =
+            (0..6).map(|c| &cand_rows[c * d..(c + 1) * d]).collect();
+        let batched = exemplar_gains(&eval, d, &curmin, &cands);
+        for (c, cand) in cands.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for i in 0..m {
+                let diff = curmin[i] - sq_dist(&eval[i * d..(i + 1) * d], cand);
+                if diff > 0.0 {
+                    acc += diff;
+                }
+            }
+            assert_eq!(batched[c].to_bits(), (acc / m as f64).to_bits());
+        }
+    }
+
+    #[test]
+    fn exemplar_commit_updates_curmin_exactly() {
+        let (m, d) = (40, 3);
+        let eval = rows(m, d, 3);
+        let mut curmin: Vec<f64> =
+            (0..m).map(|i| sq_norm(&eval[i * d..(i + 1) * d])).collect();
+        let mut expect = curmin.clone();
+        let cand_row = rows(1, d, 4);
+        let mut acc = 0.0f64;
+        for (i, cur) in expect.iter_mut().enumerate() {
+            let d2 = sq_dist(&eval[i * d..(i + 1) * d], &cand_row);
+            if d2 < *cur {
+                acc += *cur - d2;
+                *cur = d2;
+            }
+        }
+        let g = exemplar_commit(&eval, d, &mut curmin, &cand_row);
+        assert_eq!(g.to_bits(), (acc / m as f64).to_bits());
+        for (a, b) in curmin.iter().zip(&expect) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn cholesky_rank1_row_bit_matches_scalar() {
+        let n = BLOCK + 9;
+        let mut rng = crate::util::rng::Rng::seed_from(7);
+        let mut f = || rng.f64() - 0.5;
+        let kcol: Vec<f64> = (0..n).map(|_| f()).collect();
+        let zrows: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..n).map(|_| f()).collect()).collect();
+        let zj: Vec<f64> = (0..3).map(|_| f()).collect();
+        let lambda = 1.3;
+        let mut colnorm2: Vec<f64> = (0..n).map(|_| f().abs()).collect();
+        let mut expect_c2 = colnorm2.clone();
+        let mut expect_row = vec![0.0f64; n];
+        for i in 0..n {
+            let mut acc = kcol[i];
+            for (u, zju) in zj.iter().enumerate() {
+                acc -= zju * zrows[u][i];
+            }
+            let z = acc / lambda;
+            expect_row[i] = z;
+            expect_c2[i] += z * z;
+        }
+        let row = cholesky_rank1_row(&kcol, &zj, &zrows, lambda, &mut colnorm2);
+        for i in 0..n {
+            assert_eq!(row[i].to_bits(), expect_row[i].to_bits());
+            assert_eq!(colnorm2[i].to_bits(), expect_c2[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_empty_rows_are_safe() {
+        assert!(exemplar_gains(&[], 3, &[], &[]).is_empty());
+        let row = cholesky_rank1_row(&[], &[], &[], 1.0, &mut []);
+        assert!(row.is_empty());
+    }
+}

@@ -1,10 +1,12 @@
-//! Dense linear algebra primitives for the pure-rust oracle paths.
+//! Dense linear algebra primitives for the oracle paths.
 //!
-//! The hot production path runs through the XLA artifacts ([`crate::runtime`]);
-//! these routines back the reference oracles used for validation, the
-//! lazy-greedy re-evaluations (single candidate, O(m·d)), and the
+//! [`block`] holds the cache-tiled batch kernels that back the default
+//! [`crate::runtime::NativeEngine`] (the worker hot path); the scalar
+//! routines here back single-candidate lazy-greedy re-evaluations
+//! (O(m·d)), the reference oracles used for validation, and the
 //! incremental Cholesky machinery of the log-det objective.
 
+pub mod block;
 pub mod cholesky;
 
 pub use cholesky::IncrementalCholesky;

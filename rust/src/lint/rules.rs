@@ -164,12 +164,17 @@ pub fn relaxed_atomics(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) 
 /// dist/coordinator core — or the JSON codec the wire decoders are
 /// built on (v6: `util/json` parses attacker-shaped frame bytes, so
 /// its panic-freedom is part of the decode contract fuzzed by
-/// `rust/tests/protocol_fuzz.rs`) — without an
+/// `rust/tests/protocol_fuzz.rs`), or the compute substrate
+/// (`runtime/` engine dispatch and `linalg/` kernels now sit under
+/// every oracle call a worker serves, so a panic there is a fleet
+/// outage, not a local bug) — without an
 /// `// invariant: <why it holds>`.
 pub fn panic_freedom(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
     if !(relpath.starts_with("rust/src/dist/")
         || relpath.starts_with("rust/src/coordinator/")
-        || relpath.starts_with("rust/src/util/json/"))
+        || relpath.starts_with("rust/src/util/json/")
+        || relpath.starts_with("rust/src/runtime/")
+        || relpath.starts_with("rust/src/linalg/"))
     {
         return;
     }
@@ -198,7 +203,8 @@ pub fn panic_freedom(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
                     i + 1,
                     PANIC_FREEDOM,
                     format!(
-                        "{tok} in dist/coordinator/util-json without `// invariant:` justification"
+                        "{tok} in dist/coordinator/util-json/runtime/linalg without \
+                         `// invariant:` justification"
                     ),
                 ));
             }
@@ -592,6 +598,16 @@ mod tests {
         );
         assert_eq!(
             rules_of(&lint_one("rust/src/util/json/lazy.rs", bad)),
+            vec![PANIC_FREEDOM]
+        );
+        // the compute substrate joined the scope with the engine refactor:
+        // these paths run under every worker-served oracle call
+        assert_eq!(
+            rules_of(&lint_one("rust/src/runtime/engine.rs", bad)),
+            vec![PANIC_FREEDOM]
+        );
+        assert_eq!(
+            rules_of(&lint_one("rust/src/linalg/block.rs", bad)),
             vec![PANIC_FREEDOM]
         );
         assert!(lint_one("rust/src/algorithms/d.rs", bad).is_empty());

@@ -4,14 +4,15 @@
 //! ```text
 //! hss run    [--config cfg.json] [--dataset csn-2k] [--algo tree]
 //!            [--k 50] [--capacity 200|500,200,200|200x8] [--seed 42]
-//!            [--trials 3] [--epsilon 0.5] [--no-engine] [--threads 2]
-//!            [--partitioner balanced|contiguous]
+//!            [--trials 3] [--epsilon 0.5] [--engine native|xla] [--no-engine]
+//!            [--threads 2] [--partitioner balanced|contiguous]
 //!            [--constraint card|knapsack:b=30[,w=unit|rownorm2|seeded:S:LO:HI]
 //!                         |pmatroid:groups=G,cap=C   (combine with '+')]
 //!            [--backend local|tcp|sim] [--workers host:port,host:port…]
 //!            [--sim-loss 1] [--sim-loss-prob 0.0]
 //!            [--sim-straggler-prob 0.0] [--sim-straggler-ms 0] [--sim-seed 0]
 //! hss worker --listen 127.0.0.1:7070 --capacity 200 [--payload binary|json]
+//!            [--engine native|xla]
 //! hss plan   --n 100000 --k 50 --capacity 800    # round plan / bounds
 //! hss datasets                                    # list registry
 //! hss artifacts                                   # list AOT artifacts
@@ -117,7 +118,15 @@ fn print_run_help() {
     println!("  --seed S --trials T    experiment replication");
     println!("  --epsilon E            stochastic-greedy subsampling parameter");
     println!("  --threads N            local thread-pool width");
-    println!("  --no-engine            force the pure-rust oracle path");
+    println!("  --engine E             compute engine: native|xla (default native).");
+    println!("                         'native' is the dependency-free batched kernel");
+    println!("                         backend; 'xla' adds the device thread when AOT");
+    println!("                         artifacts are built and falls back to the native");
+    println!("                         kernels otherwise. On tcp backends the choice is");
+    println!("                         requested from every worker at handshake (a worker");
+    println!("                         pinned with its own --engine wins per connection)");
+    println!("  --no-engine            force the pure-rust oracle path (pins the run to");
+    println!("                         the native engine regardless of --engine)");
     println!("  --backend B            local|tcp|sim");
     println!("  --workers H:P,H:P,...  tcp worker addresses (capacities are discovered");
     println!("                         via the protocol-v5 handshake; a part only runs on");
@@ -153,6 +162,12 @@ fn print_worker_help() {
     println!("                    binary row/id blocks at handshake; 'json' pins this");
     println!("                    worker to plain JSON frames (mixed fleets are fine —");
     println!("                    negotiation is per connection, answers are bit-identical)");
+    println!("  --engine E        pin this worker's compute engine: native|xla. Without");
+    println!("                    the flag the worker serves each connection with the");
+    println!("                    engine the coordinator requested at handshake (absent");
+    println!("                    means native); with it the pin wins and the granted");
+    println!("                    engine is echoed in the hello reply. Mixed fleets are");
+    println!("                    fine — answers are bit-identical across engines");
     println!("  --log-level L     error|warn|info|debug (default warn; HSS_LOG env is the");
     println!("                    fallback, the flag wins)");
     println!();
@@ -177,11 +192,16 @@ fn cmd_worker(args: &Args) -> Result<()> {
             )))
         }
     };
+    let engine = match args.get("engine") {
+        Some(e) => Some(hss::runtime::EngineChoice::parse(e)?),
+        None => None,
+    };
     let cfg = worker::WorkerConfig {
         listen: args.get_or("listen", "127.0.0.1:7070").to_string(),
         capacity: args.usize("capacity", 200)?,
         straggle_ms: args.u64("straggle-ms", 0)?,
         payload,
+        engine,
     };
     worker::serve(&cfg)
 }
@@ -210,6 +230,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.seed = args.u64("seed", cfg.seed)?;
     cfg.trials = args.usize("trials", cfg.trials)?.max(1);
     cfg.threads = args.usize("threads", cfg.threads)?;
+    if let Some(e) = args.get("engine") {
+        cfg.engine = hss::runtime::EngineChoice::parse(e)?;
+    }
     if args.flag("no-engine") {
         cfg.use_engine = false;
     }
@@ -270,11 +293,6 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
         }
     }
-    if cfg.backend != BackendChoice::Local {
-        // XLA compressors are not wire-representable; non-local backends
-        // run the pure oracle path end to end
-        cfg.use_engine = false;
-    }
     // enable tracing before the backend touches any worker, so the
     // trace epoch covers handshakes and every dispatch
     let trace_out = args.get("trace-out").map(str::to_string);
@@ -284,6 +302,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let backend = cfg.build_backend()?;
 
     let (problem, engine) = cfg.problem_with_engine()?;
+    // XLA device compressors are not wire-representable; on non-local
+    // backends the device handle stays out of compressor dispatch and
+    // the engine choice instead rides the hello handshake to each worker
+    let engine = if cfg.backend == BackendChoice::Local { engine } else { None };
     println!(
         "dataset={} n={} d={} objective={} constraint={} k={} capacity={} algo={} backend={} partitioner={} engine={}",
         cfg.dataset,
@@ -296,7 +318,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.algo.name(),
         backend.name(),
         cfg.partitioner.name(),
-        engine.is_some(),
+        problem.compute.name(),
     );
 
     let run_start = std::time::Instant::now();
@@ -402,7 +424,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             let util = if run_ms > 0.0 { 100.0 * w.busy_ms / run_ms } else { 0.0 };
             println!(
                 "  {:<21} parts={} evals={} busy={:.0}ms ({:.0}%) queueWait={:.1}ms \
-                 dataset={}h/{}m problems={}h/{}m/{}e payload={}B bin/{}B json",
+                 dataset={}h/{}m problems={}h/{}m/{}e payload={}B bin/{}B json \
+                 engine={} bulk={}c/{}n",
                 w.addr,
                 w.parts,
                 w.oracle_evals,
@@ -415,7 +438,10 @@ fn cmd_run(args: &Args) -> Result<()> {
                 w.problem_misses,
                 w.problem_evictions,
                 w.payload_bytes_binary,
-                w.payload_bytes_json
+                w.payload_bytes_json,
+                if w.engine.is_empty() { "-" } else { &w.engine },
+                w.bulk_gain_calls,
+                w.bulk_gain_candidates
             );
         }
     }
@@ -518,8 +544,9 @@ fn print_lint_help() {
     println!("                   `// relaxed: <reason>` justification");
     println!("  lock-order       cross-function lock-acquisition cycles in the");
     println!("                   dispatcher files (static deadlock detection)");
-    println!("  panic-freedom    unwrap/expect/panic in non-test dist/, coordinator/ and");
-    println!("                   util/json/ (the wire decode paths) need an adjacent");
+    println!("  panic-freedom    unwrap/expect/panic in non-test dist/, coordinator/,");
+    println!("                   util/json/, runtime/ and linalg/ (the wire decode and");
+    println!("                   kernel paths) need an adjacent");
     println!("                   `// invariant: <reason>` justification");
     println!("  logging          raw print macros outside util/log.rs and main.rs");
     println!("  protocol-doc     wire field literals must appear in docs/PROTOCOL.md,");

@@ -5,7 +5,7 @@
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use crate::objectives::{EvalCounter, Oracle};
+use crate::objectives::{BulkCounter, EvalCounter, Oracle};
 
 /// Coverage instance: item `i` covers `covers[i] ⊆ {0..u}`, element `e`
 /// has weight `weights[e] > 0`; `f(S) = Σ_{e ∈ ∪covers} weights[e]`.
@@ -28,12 +28,26 @@ pub struct CoverageOracle {
     covered: Vec<bool>,
     value: f64,
     evals: EvalCounter,
+    bulk: BulkCounter,
 }
 
 impl CoverageOracle {
     pub fn new(data: Arc<CoverageData>, candidates: Vec<u32>, evals: EvalCounter) -> Self {
         let covered = vec![false; data.weights.len()];
-        CoverageOracle { data, candidates, covered, value: 0.0, evals }
+        CoverageOracle {
+            data,
+            candidates,
+            covered,
+            value: 0.0,
+            evals,
+            bulk: BulkCounter::default(),
+        }
+    }
+
+    /// Attach the shared bulk-stats sink.
+    pub fn with_bulk(mut self, bulk: BulkCounter) -> Self {
+        self.bulk = bulk;
+        self
     }
 
     fn gain_inner(&self, j: usize) -> f64 {
@@ -70,6 +84,19 @@ impl Oracle for CoverageOracle {
 
     fn value(&self) -> f64 {
         self.value
+    }
+
+    fn gains_for(&mut self, js: &[usize]) -> Vec<f64> {
+        // one pass per candidate over the shared covered bitmap — the
+        // bitmap stays cache-resident across the whole block
+        self.evals.fetch_add(js.len() as u64, Ordering::Relaxed); // relaxed: eval counter
+        self.bulk.record(js.len());
+        js.iter().map(|&j| self.gain_inner(j)).collect()
+    }
+
+    fn bulk_gains(&mut self) -> Vec<f64> {
+        let all: Vec<usize> = (0..self.candidates.len()).collect();
+        self.gains_for(&all)
     }
 }
 
@@ -120,6 +147,28 @@ mod tests {
         assert_eq!(o.commit(1), 4.0);
         assert_eq!(o.value(), 7.0);
         assert_eq!(o.gain(3), 0.0); // empty cover
+    }
+
+    #[test]
+    fn gains_for_matches_single_gains_bit_for_bit() {
+        let ev: EvalCounter = Arc::new(AtomicU64::new(0));
+        let mut o = CoverageOracle::new(Arc::new(inst()), vec![0, 1, 2, 3], ev);
+        o.commit(0);
+        let js: Vec<usize> = (0..o.len()).collect();
+        let batched = o.gains_for(&js);
+        for j in js {
+            assert_eq!(batched[j].to_bits(), o.gain(j).to_bits(), "candidate {j}");
+        }
+    }
+
+    #[test]
+    fn eval_counter_counts_batched_candidates_once() {
+        let ev: EvalCounter = Arc::new(AtomicU64::new(0));
+        let mut o = CoverageOracle::new(Arc::new(inst()), vec![0, 1, 2, 3], ev.clone());
+        o.gains_for(&[0, 2]);
+        o.gain(1);
+        o.bulk_gains();
+        assert_eq!(ev.load(Ordering::Relaxed), 2 + 1 + 4);
     }
 
     #[test]

@@ -13,7 +13,8 @@ use std::sync::Arc;
 
 use crate::data::DatasetRef;
 use crate::linalg::{sq_dist, sq_norm};
-use crate::objectives::{EvalCounter, Oracle};
+use crate::objectives::{BulkCounter, EvalCounter, Oracle};
+use crate::runtime::{native_engine, Engine};
 
 /// Pure-rust incremental exemplar oracle (f64 accumulation).
 pub struct ExemplarOracle {
@@ -26,6 +27,8 @@ pub struct ExemplarOracle {
     curmin: Vec<f64>,
     value: f64,
     evals: EvalCounter,
+    engine: Arc<dyn Engine>,
+    bulk: BulkCounter,
 }
 
 impl ExemplarOracle {
@@ -53,7 +56,17 @@ impl ExemplarOracle {
             curmin,
             value: 0.0,
             evals,
+            engine: native_engine(),
+            bulk: BulkCounter::default(),
         }
+    }
+
+    /// Select the compute engine and bulk-stats sink (see
+    /// [`crate::objectives::Problem::oracle`]).
+    pub fn with_compute(mut self, engine: Arc<dyn Engine>, bulk: BulkCounter) -> Self {
+        self.engine = engine;
+        self.bulk = bulk;
+        self
     }
 
     /// Current curmin vector (read-only view for accelerated bulk paths).
@@ -98,15 +111,9 @@ impl Oracle for ExemplarOracle {
 
     fn commit(&mut self, j: usize) -> f64 {
         let cand = self.dataset.row(self.candidates[j]);
-        let mut acc = 0.0;
-        for i in 0..self.m {
-            let d2 = sq_dist(self.eval_row(i), cand);
-            if d2 < self.curmin[i] {
-                acc += self.curmin[i] - d2;
-                self.curmin[i] = d2;
-            }
-        }
-        let g = acc / self.m as f64;
+        let g = self
+            .engine
+            .exemplar_commit(&self.eval_rows, self.d, &mut self.curmin, cand);
         self.value += g;
         g
     }
@@ -115,10 +122,20 @@ impl Oracle for ExemplarOracle {
         self.value
     }
 
+    fn gains_for(&mut self, js: &[usize]) -> Vec<f64> {
+        self.evals.fetch_add(js.len() as u64, Ordering::Relaxed); // relaxed: eval counter
+        self.bulk.record(js.len());
+        let cands: Vec<&[f32]> = js
+            .iter()
+            .map(|&j| self.dataset.row(self.candidates[j]))
+            .collect();
+        self.engine
+            .exemplar_gains(&self.eval_rows, self.d, &self.curmin, &cands)
+    }
+
     fn bulk_gains(&mut self) -> Vec<f64> {
-        self.evals
-            .fetch_add(self.candidates.len() as u64, Ordering::Relaxed); // relaxed: eval counter
-        (0..self.candidates.len()).map(|j| self.gain_inner(j)).collect()
+        let all: Vec<usize> = (0..self.candidates.len()).collect();
+        self.gains_for(&all)
     }
 }
 
@@ -213,7 +230,33 @@ mod tests {
         let mut o = ExemplarOracle::new(ds, eval, cands, ev.clone());
         o.bulk_gains();
         o.gain(0);
-        assert_eq!(ev.load(Ordering::Relaxed), 13);
+        // a block refresh counts each evaluated candidate exactly once
+        o.gains_for(&[2, 5, 7]);
+        assert_eq!(ev.load(Ordering::Relaxed), 12 + 1 + 3);
+    }
+
+    #[test]
+    fn gains_for_matches_single_gains_bit_for_bit_with_nan_rows() {
+        // one NaN-poisoned dataset row: the batched kernel must keep the
+        // scalar comparison semantics (NaN diffs never accumulate), and
+        // every finite gain must agree to the bit
+        let (n, d) = (90usize, 4usize); // n > BLOCK so the kernel tiles
+        let mut rng = crate::util::rng::Rng::seed_from(9);
+        let mut vals: Vec<f32> = (0..n * d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        for v in &mut vals[7 * d..8 * d] {
+            *v = f32::NAN;
+        }
+        let ds: DatasetRef =
+            Arc::new(crate::data::Dataset::new("nan-rows", n, d, vals));
+        let eval: Arc<Vec<u32>> = Arc::new((0..n as u32).collect());
+        let ev: EvalCounter = Arc::new(AtomicU64::new(0));
+        let mut o = ExemplarOracle::new(ds, eval, (0..n as u32).collect(), ev);
+        o.commit(11);
+        let js: Vec<usize> = (0..o.len()).collect();
+        let batched = o.gains_for(&js);
+        for j in js {
+            assert_eq!(batched[j].to_bits(), o.gain(j).to_bits(), "candidate {j}");
+        }
     }
 
     #[test]

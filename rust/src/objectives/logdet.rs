@@ -10,10 +10,12 @@
 //! XLA-precomputed Gram block (runtime path).
 
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 use crate::data::DatasetRef;
 use crate::linalg::rbf;
-use crate::objectives::{EvalCounter, Oracle};
+use crate::objectives::{BulkCounter, EvalCounter, Oracle};
+use crate::runtime::{native_engine, Engine};
 
 /// Source of kernel values between machine-local candidates.
 pub trait KernelSource: Send {
@@ -92,6 +94,9 @@ pub struct LogDetOracle<K: KernelSource> {
     kernel: K,
     n_cand: usize,
     inv_sigma2: f64,
+    /// Cached `k(j,j)` per candidate, so gains are O(1) with no kernel
+    /// round-trip — this is what makes the batched refresh path cheap.
+    diag: Vec<f64>,
     /// Rows of L⁻¹·(σ⁻²K(S,·)): `zrows[t][j]` for committed step t.
     zrows: Vec<Vec<f64>>,
     /// Per-candidate `‖z_j‖²`.
@@ -102,27 +107,41 @@ pub struct LogDetOracle<K: KernelSource> {
     selected: Vec<usize>,
     value: f64,
     evals: EvalCounter,
+    engine: Arc<dyn Engine>,
+    bulk: BulkCounter,
 }
 
 impl<K: KernelSource> LogDetOracle<K> {
     pub fn new(kernel: K, n_cand: usize, sigma2: f64, evals: EvalCounter) -> Self {
         assert_eq!(kernel.len(), n_cand);
+        let diag = (0..n_cand).map(|j| kernel.diag(j)).collect();
         LogDetOracle {
             kernel,
             n_cand,
             inv_sigma2: 1.0 / sigma2,
+            diag,
             zrows: Vec::new(),
             colnorm2: vec![0.0; n_cand],
             pivots: Vec::new(),
             selected: Vec::new(),
             value: 0.0,
             evals,
+            engine: native_engine(),
+            bulk: BulkCounter::default(),
         }
+    }
+
+    /// Select the compute engine and bulk-stats sink (see
+    /// [`crate::objectives::Problem::oracle`]).
+    pub fn with_compute(mut self, engine: Arc<dyn Engine>, bulk: BulkCounter) -> Self {
+        self.engine = engine;
+        self.bulk = bulk;
+        self
     }
 
     #[inline]
     fn schur(&self, j: usize) -> f64 {
-        let diag = 1.0 + self.inv_sigma2 * self.kernel.diag(j);
+        let diag = 1.0 + self.inv_sigma2 * self.diag[j];
         diag - self.colnorm2[j]
     }
 
@@ -158,17 +177,18 @@ impl<K: KernelSource> Oracle for LogDetOracle<K> {
         let t = self.zrows.len();
         // z-column of the newly selected item (over existing rows)
         let zj: Vec<f64> = (0..t).map(|u| self.zrows[u][j]).collect();
+        // σ⁻²-scaled kernel column of the pivot item
+        let kcol: Vec<f64> = (0..self.n_cand)
+            .map(|i| self.inv_sigma2 * self.kernel.kernel(j, i))
+            .collect();
         // new z-row: z_new[i] = (σ⁻²K(j,i) − <z_j, z_i>) / λ
-        let mut row = vec![0.0; self.n_cand];
-        for (i, r) in row.iter_mut().enumerate() {
-            let mut acc = self.inv_sigma2 * self.kernel.kernel(j, i);
-            for (u, zju) in zj.iter().enumerate() {
-                acc -= zju * self.zrows[u][i];
-            }
-            let z = acc / lambda;
-            *r = z;
-            self.colnorm2[i] += z * z;
-        }
+        let row = self.engine.cholesky_rank1_row(
+            &kcol,
+            &zj,
+            &self.zrows,
+            lambda,
+            &mut self.colnorm2,
+        );
         self.zrows.push(row);
         self.pivots.push(lambda);
         self.selected.push(j);
@@ -180,6 +200,19 @@ impl<K: KernelSource> Oracle for LogDetOracle<K> {
 
     fn value(&self) -> f64 {
         self.value
+    }
+
+    fn gains_for(&mut self, js: &[usize]) -> Vec<f64> {
+        // one shared Cholesky state (colnorm2 + cached diag) serves the
+        // whole block: each gain is an O(1) Schur-complement read
+        self.evals.fetch_add(js.len() as u64, Ordering::Relaxed); // relaxed: eval counter
+        self.bulk.record(js.len());
+        js.iter().map(|&j| self.gain_inner(j)).collect()
+    }
+
+    fn bulk_gains(&mut self) -> Vec<f64> {
+        let all: Vec<usize> = (0..self.n_cand).collect();
+        self.gains_for(&all)
     }
 }
 
@@ -278,6 +311,53 @@ mod tests {
         o.commit(9);
         let after = o.gain(4);
         assert!(after <= before + 1e-10);
+    }
+
+    #[test]
+    fn gains_for_matches_single_gains_bit_for_bit() {
+        let (ds, ev) = setup(40);
+        let mut o = oracle(&ds, (0..40).collect(), &ev);
+        for &j in &[3usize, 18] {
+            o.commit(j);
+        }
+        let js: Vec<usize> = (0..o.len()).collect();
+        let batched = o.gains_for(&js);
+        for j in js {
+            assert_eq!(batched[j].to_bits(), o.gain(j).to_bits(), "candidate {j}");
+        }
+    }
+
+    #[test]
+    fn gains_for_matches_single_gains_after_nan_commit() {
+        // a NaN-poisoned row drives kcol, the new z-row and colnorm2 to
+        // NaN on commit; the batched refresh must reproduce the scalar
+        // NaN propagation bit-for-bit
+        let (n, d) = (12usize, 3usize);
+        let mut rng = crate::util::rng::Rng::seed_from(17);
+        let mut vals: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+        for v in &mut vals[4 * d..5 * d] {
+            *v = f32::NAN;
+        }
+        let ds: DatasetRef =
+            Arc::new(crate::data::Dataset::new("nan-rows", n, d, vals));
+        let ev: EvalCounter = Arc::new(AtomicU64::new(0));
+        let mut o = oracle(&ds, (0..n as u32).collect(), &ev);
+        o.commit(4); // the NaN row
+        let js: Vec<usize> = (0..o.len()).collect();
+        let batched = o.gains_for(&js);
+        for j in js {
+            assert_eq!(batched[j].to_bits(), o.gain(j).to_bits(), "candidate {j}");
+        }
+    }
+
+    #[test]
+    fn eval_counter_counts_batched_candidates_once() {
+        let (ds, ev) = setup(20);
+        let mut o = oracle(&ds, (0..20).collect(), &ev);
+        o.gains_for(&[1, 2, 3]);
+        o.gain(0);
+        o.bulk_gains();
+        assert_eq!(ev.load(Ordering::Relaxed), 3 + 1 + 20);
     }
 
     #[test]

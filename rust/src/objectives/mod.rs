@@ -19,7 +19,7 @@ use std::sync::Arc;
 use crate::constraints::{Cardinality, Constraint};
 use crate::data::DatasetRef;
 use crate::error::Result;
-use crate::runtime::EngineHandle;
+use crate::runtime::{native_engine, Engine, EngineHandle, XlaEngine};
 use crate::util::rng::Rng;
 
 /// Incremental marginal-gain oracle over a fixed list of candidates
@@ -43,6 +43,16 @@ pub trait Oracle {
 
     /// Current objective value `f(S)`.
     fn value(&self) -> f64;
+
+    /// Exact gains of a batch of candidates against the current
+    /// selection — the block-refresh entry point of `lazy_greedy_over`.
+    /// Overrides route through the engine's batched kernels; results
+    /// must be **bit-identical** to `js.iter().map(|j| gain(j))`, and
+    /// each evaluated candidate must count exactly once against the
+    /// eval counter (the default delegates both to [`Oracle::gain`]).
+    fn gains_for(&mut self, js: &[usize]) -> Vec<f64> {
+        js.iter().map(|&j| self.gain(j)).collect()
+    }
 
     /// Gains of all candidates at once. Implementations may override
     /// with a vectorized/XLA path; the default loops over [`Oracle::gain`].
@@ -80,6 +90,40 @@ impl Objective {
 /// Shared oracle-evaluation counter.
 pub type EvalCounter = Arc<AtomicU64>;
 
+/// Shared batched-evaluation statistics: how many `gains_for` batch
+/// calls the oracles served and how many candidate evaluations those
+/// batches covered. Reported per worker request as the telemetry fields
+/// `bulk_gain_calls` / `bulk_gain_candidates` (docs/PROTOCOL.md §4.4) —
+/// the batched-vs-single split on top of the total `oracle_evals`.
+#[derive(Clone, Debug, Default)]
+pub struct BulkCounter(Arc<BulkCounts>);
+
+#[derive(Debug, Default)]
+struct BulkCounts {
+    calls: AtomicU64,
+    candidates: AtomicU64,
+}
+
+impl BulkCounter {
+    /// Record one batched gains call covering `candidates` evaluations.
+    pub fn record(&self, candidates: usize) {
+        // relaxed (both): monotone statistics counters, no ordering
+        // dependence between them
+        self.0.calls.fetch_add(1, Ordering::Relaxed); // relaxed: stats counter
+        self.0
+            .candidates
+            .fetch_add(candidates as u64, Ordering::Relaxed); // relaxed: stats counter
+    }
+
+    /// `(calls, candidates)` so far.
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.0.calls.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.0.candidates.load(Ordering::Relaxed), // relaxed: stats snapshot
+        )
+    }
+}
+
 /// A constrained submodular maximization instance: the unit of work the
 /// coordinator distributes across the simulated cluster.
 #[derive(Clone)]
@@ -93,10 +137,13 @@ pub struct Problem {
     /// algorithm (tree, baselines, centralized) scores against the same
     /// subsample so ratios are comparable.
     pub eval_ids: Arc<Vec<u32>>,
-    /// Optional XLA engine for the accelerated oracle paths.
-    pub engine: Option<EngineHandle>,
+    /// Compute engine backing the batched oracle kernels (default: the
+    /// shared [`crate::runtime::NativeEngine`]).
+    pub compute: Arc<dyn Engine>,
     /// Oracle-evaluation counter (Table 1 cost metric).
     pub evals: EvalCounter,
+    /// Batched-gains statistics (telemetry `bulk_gain_*` fields).
+    pub bulk: BulkCounter,
 }
 
 impl Problem {
@@ -128,8 +175,9 @@ impl Problem {
             k,
             seed,
             eval_ids,
-            engine: None,
+            compute: native_engine(),
             evals: Arc::new(AtomicU64::new(0)),
+            bulk: BulkCounter::default(),
         }
     }
 
@@ -142,8 +190,9 @@ impl Problem {
             k,
             seed,
             eval_ids: Arc::new(Vec::new()),
-            engine: None,
+            compute: native_engine(),
             evals: Arc::new(AtomicU64::new(0)),
+            bulk: BulkCounter::default(),
         }
     }
 
@@ -157,8 +206,9 @@ impl Problem {
             k,
             seed,
             eval_ids: Arc::new(Vec::new()),
-            engine: None,
+            compute: native_engine(),
             evals: Arc::new(AtomicU64::new(0)),
+            bulk: BulkCounter::default(),
         }
     }
 
@@ -172,14 +222,23 @@ impl Problem {
             k,
             seed,
             eval_ids: Arc::new(Vec::new()),
-            engine: None,
+            compute: native_engine(),
             evals: Arc::new(AtomicU64::new(0)),
+            bulk: BulkCounter::default(),
         }
     }
 
-    /// Attach an XLA engine (accelerated oracle paths become available).
+    /// Attach an already-started XLA device handle (the accelerated
+    /// fused-compressor paths become available through
+    /// [`Engine::xla_handle`]).
     pub fn with_engine(mut self, engine: EngineHandle) -> Self {
-        self.engine = Some(engine);
+        self.compute = Arc::new(XlaEngine::from_handle(engine));
+        self
+    }
+
+    /// Select the compute engine backing the batched oracle kernels.
+    pub fn with_compute(mut self, compute: Arc<dyn Engine>) -> Self {
+        self.compute = compute;
         self
     }
 
@@ -201,32 +260,45 @@ impl Problem {
         self.evals.load(Ordering::Relaxed)
     }
 
-    /// Build the pure-rust incremental oracle over `candidates`
-    /// (machine-local view).
+    /// Build the incremental oracle over `candidates` (machine-local
+    /// view), backed by this problem's compute engine and sharing its
+    /// eval/bulk counters.
     pub fn oracle(&self, candidates: &[u32]) -> Box<dyn Oracle> {
         match &self.objective {
-            Objective::Exemplar => Box::new(exemplar::ExemplarOracle::new(
-                self.dataset.clone(),
-                self.eval_ids.clone(),
-                candidates.to_vec(),
-                self.evals.clone(),
-            )),
-            Objective::LogDet { h2, sigma2 } => Box::new(logdet::LogDetOracle::new(
-                logdet::PureRbf::new(self.dataset.clone(), candidates.to_vec(), *h2),
-                candidates.len(),
-                *sigma2,
-                self.evals.clone(),
-            )),
-            Objective::Coverage(data) => Box::new(coverage::CoverageOracle::new(
-                data.clone(),
-                candidates.to_vec(),
-                self.evals.clone(),
-            )),
-            Objective::Modular(w) => Box::new(modular::ModularOracle::new(
-                w.clone(),
-                candidates.to_vec(),
-                self.evals.clone(),
-            )),
+            Objective::Exemplar => Box::new(
+                exemplar::ExemplarOracle::new(
+                    self.dataset.clone(),
+                    self.eval_ids.clone(),
+                    candidates.to_vec(),
+                    self.evals.clone(),
+                )
+                .with_compute(self.compute.clone(), self.bulk.clone()),
+            ),
+            Objective::LogDet { h2, sigma2 } => Box::new(
+                logdet::LogDetOracle::new(
+                    logdet::PureRbf::new(self.dataset.clone(), candidates.to_vec(), *h2),
+                    candidates.len(),
+                    *sigma2,
+                    self.evals.clone(),
+                )
+                .with_compute(self.compute.clone(), self.bulk.clone()),
+            ),
+            Objective::Coverage(data) => Box::new(
+                coverage::CoverageOracle::new(
+                    data.clone(),
+                    candidates.to_vec(),
+                    self.evals.clone(),
+                )
+                .with_bulk(self.bulk.clone()),
+            ),
+            Objective::Modular(w) => Box::new(
+                modular::ModularOracle::new(
+                    w.clone(),
+                    candidates.to_vec(),
+                    self.evals.clone(),
+                )
+                .with_bulk(self.bulk.clone()),
+            ),
         }
     }
 

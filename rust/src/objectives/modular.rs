@@ -6,7 +6,7 @@
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use crate::objectives::{EvalCounter, Oracle};
+use crate::objectives::{BulkCounter, EvalCounter, Oracle};
 
 /// Oracle for `f(S) = Σ_{i∈S} w_i` over a candidate list.
 pub struct ModularOracle {
@@ -15,12 +15,35 @@ pub struct ModularOracle {
     taken: Vec<bool>,
     value: f64,
     evals: EvalCounter,
+    bulk: BulkCounter,
 }
 
 impl ModularOracle {
     pub fn new(weights: Arc<Vec<f64>>, candidates: Vec<u32>, evals: EvalCounter) -> Self {
         let taken = vec![false; candidates.len()];
-        ModularOracle { weights, candidates, taken, value: 0.0, evals }
+        ModularOracle {
+            weights,
+            candidates,
+            taken,
+            value: 0.0,
+            evals,
+            bulk: BulkCounter::default(),
+        }
+    }
+
+    /// Attach the shared bulk-stats sink.
+    pub fn with_bulk(mut self, bulk: BulkCounter) -> Self {
+        self.bulk = bulk;
+        self
+    }
+
+    #[inline]
+    fn gain_inner(&self, j: usize) -> f64 {
+        if self.taken[j] {
+            0.0
+        } else {
+            self.weights[self.candidates[j] as usize]
+        }
     }
 }
 
@@ -32,11 +55,7 @@ impl Oracle for ModularOracle {
     fn gain(&mut self, j: usize) -> f64 {
         // relaxed: oracle-eval statistics counter, no ordering dependence
         self.evals.fetch_add(1, Ordering::Relaxed);
-        if self.taken[j] {
-            0.0
-        } else {
-            self.weights[self.candidates[j] as usize]
-        }
+        self.gain_inner(j)
     }
 
     fn commit(&mut self, j: usize) -> f64 {
@@ -51,6 +70,17 @@ impl Oracle for ModularOracle {
 
     fn value(&self) -> f64 {
         self.value
+    }
+
+    fn gains_for(&mut self, js: &[usize]) -> Vec<f64> {
+        self.evals.fetch_add(js.len() as u64, Ordering::Relaxed); // relaxed: eval counter
+        self.bulk.record(js.len());
+        js.iter().map(|&j| self.gain_inner(j)).collect()
+    }
+
+    fn bulk_gains(&mut self) -> Vec<f64> {
+        let all: Vec<usize> = (0..self.candidates.len()).collect();
+        self.gains_for(&all)
     }
 }
 
@@ -69,5 +99,29 @@ mod tests {
         o.commit(0);
         assert_eq!(o.value(), 101.0);
         assert_eq!(o.gain(2), 0.0); // already taken
+    }
+
+    #[test]
+    fn gains_for_matches_single_gains_bit_for_bit_with_nan_weights() {
+        let w = Arc::new(vec![1.5, f64::NAN, -3.0, 0.0, 7.25]);
+        let ev: EvalCounter = Arc::new(AtomicU64::new(0));
+        let mut o = ModularOracle::new(w, vec![0, 1, 2, 3, 4], ev);
+        o.commit(2);
+        let js: Vec<usize> = (0..o.len()).collect();
+        let batched = o.gains_for(&js);
+        for j in js {
+            assert_eq!(batched[j].to_bits(), o.gain(j).to_bits(), "candidate {j}");
+        }
+    }
+
+    #[test]
+    fn eval_counter_counts_batched_candidates_once() {
+        let w = Arc::new(vec![1.0, 2.0, 3.0, 4.0]);
+        let ev: EvalCounter = Arc::new(AtomicU64::new(0));
+        let mut o = ModularOracle::new(w, vec![0, 1, 2, 3], ev.clone());
+        o.gains_for(&[0, 3]);
+        o.gain(1);
+        o.bulk_gains();
+        assert_eq!(ev.load(Ordering::Relaxed), 2 + 1 + 4);
     }
 }

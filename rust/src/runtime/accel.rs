@@ -221,7 +221,8 @@ impl XlaExemplarOracle {
                 problem.eval_ids.clone(),
                 candidates.to_vec(),
                 problem.evals.clone(),
-            ),
+            )
+            .with_compute(problem.compute.clone(), problem.bulk.clone()),
             engine,
             art,
             w_padded,
@@ -248,6 +249,12 @@ impl crate::objectives::Oracle for XlaExemplarOracle {
 
     fn value(&self) -> f64 {
         self.inner.value()
+    }
+
+    fn gains_for(&mut self, js: &[usize]) -> Vec<f64> {
+        // block refreshes are small (≤ REFRESH_BLOCK); the batched
+        // native kernels beat a device round-trip at that size
+        self.inner.gains_for(js)
     }
 
     /// Chunked XLA bulk pass: one `dist` execution per µ-sized chunk of

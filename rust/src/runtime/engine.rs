@@ -1,426 +1,226 @@
-//! The device thread: owns the PJRT client, compiles HLO artifacts
-//! lazily, caches device-resident buffers, and serves execution requests
-//! from any number of coordinator threads.
+//! The pluggable compute substrate: an [`Engine`] is the set of batched
+//! kernels the oracle layer evaluates marginal gains through.
+//!
+//! Two implementations ship:
+//!
+//! * [`NativeEngine`] — dependency-free blocked CPU kernels
+//!   ([`crate::linalg::block`]). The default everywhere, including
+//!   workers: it needs no artifacts, no device, no negotiation.
+//! * [`XlaEngine`] — the XLA/PJRT device thread
+//!   ([`crate::runtime::XlaRuntime`]) behind the same interface. Its
+//!   batched *oracle* kernels run the identical blocked native code (the
+//!   bit-identity contract forbids substituting device math for the f64
+//!   reduction), while the device handle serves the fused whole-machine
+//!   compressor paths (`XlaGreedy`) via [`Engine::xla_handle`]. If the
+//!   device cannot start (no artifacts, no PJRT), the engine still
+//!   works — it simply has no handle to offer.
+//!
+//! Selection is by name (`native` / `xla`): `--engine` on `hss run` and
+//! `hss worker`, the `engine` token on the hello handshake, and
+//! [`EngineChoice::build`] tie the layers together. See docs/ENGINES.md.
 
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
-use crate::runtime::manifest::{Artifact, Manifest, Query};
+use crate::linalg::block;
+use crate::runtime::xla::{EngineHandle, XlaRuntime};
 
-/// A host-side tensor crossing the engine boundary.
-#[derive(Debug, Clone)]
-pub enum Tensor {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+/// Batched compute kernels for the oracle layer. Implementations must be
+/// **bit-identical** to the scalar oracle loops: the selection made by a
+/// batched lazy greedy must be byte-for-byte the selection of the
+/// one-at-a-time path, on every engine.
+pub trait Engine: Send + Sync {
+    /// Wire/display name (`native`, `xla`).
+    fn name(&self) -> &'static str;
+
+    /// Batched exemplar marginal gains over the gathered evaluation rows
+    /// (`eval_rows` row-major `[m, d]`, `curmin` length `m`), one result
+    /// per candidate row in `cands`.
+    fn exemplar_gains(
+        &self,
+        eval_rows: &[f32],
+        d: usize,
+        curmin: &[f64],
+        cands: &[&[f32]],
+    ) -> Vec<f64>;
+
+    /// Fold one selected candidate into `curmin`; returns the realized
+    /// exemplar gain.
+    fn exemplar_commit(
+        &self,
+        eval_rows: &[f32],
+        d: usize,
+        curmin: &mut [f64],
+        cand: &[f32],
+    ) -> f64;
+
+    /// Rank-1 Cholesky row update for the log-det commit: produce the new
+    /// z-row from the σ⁻²-scaled kernel column and fold `z²` into
+    /// `colnorm2` (see [`crate::linalg::block::cholesky_rank1_row`]).
+    fn cholesky_rank1_row(
+        &self,
+        kcol: &[f64],
+        zj: &[f64],
+        zrows: &[Vec<f64>],
+        lambda: f64,
+        colnorm2: &mut [f64],
+    ) -> Vec<f64>;
+
+    /// The XLA device handle, when this engine owns one — used by the
+    /// coordinator-side fused compressors (`XlaGreedy`). `None` for the
+    /// native engine and for an `xla` engine whose device failed to start.
+    fn xla_handle(&self) -> Option<&EngineHandle> {
+        None
+    }
 }
 
-impl Tensor {
-    pub fn f32(self) -> Result<Vec<f32>> {
+/// Dependency-free blocked CPU kernel backend — the default engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeEngine;
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn exemplar_gains(
+        &self,
+        eval_rows: &[f32],
+        d: usize,
+        curmin: &[f64],
+        cands: &[&[f32]],
+    ) -> Vec<f64> {
+        block::exemplar_gains(eval_rows, d, curmin, cands)
+    }
+
+    fn exemplar_commit(
+        &self,
+        eval_rows: &[f32],
+        d: usize,
+        curmin: &mut [f64],
+        cand: &[f32],
+    ) -> f64 {
+        block::exemplar_commit(eval_rows, d, curmin, cand)
+    }
+
+    fn cholesky_rank1_row(
+        &self,
+        kcol: &[f64],
+        zj: &[f64],
+        zrows: &[Vec<f64>],
+        lambda: f64,
+        colnorm2: &mut [f64],
+    ) -> Vec<f64> {
+        block::cholesky_rank1_row(kcol, zj, zrows, lambda, colnorm2)
+    }
+}
+
+/// The shared process-wide native engine (the kernels are stateless, so
+/// one instance serves every problem and worker connection).
+pub fn native_engine() -> Arc<dyn Engine> {
+    static NATIVE: OnceLock<Arc<dyn Engine>> = OnceLock::new();
+    NATIVE.get_or_init(|| Arc::new(NativeEngine)).clone()
+}
+
+/// The XLA device thread rehomed behind the [`Engine`] interface.
+pub struct XlaEngine {
+    handle: Option<EngineHandle>,
+}
+
+impl XlaEngine {
+    /// Start the device thread over the default artifact directory; a
+    /// device that fails to start (missing artifacts / PJRT) degrades to
+    /// the native kernels with no handle rather than failing the run.
+    pub fn create() -> Self {
+        XlaEngine { handle: XlaRuntime::start_default().ok() }
+    }
+
+    /// Wrap an already-started device handle.
+    pub fn from_handle(handle: EngineHandle) -> Self {
+        XlaEngine { handle: Some(handle) }
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    // The batched oracle kernels intentionally run the same blocked
+    // native code: the bit-identity contract pins the f64 reduction, so
+    // the device is only profitable for the fused compressor artifacts
+    // reached through `xla_handle`.
+    fn exemplar_gains(
+        &self,
+        eval_rows: &[f32],
+        d: usize,
+        curmin: &[f64],
+        cands: &[&[f32]],
+    ) -> Vec<f64> {
+        block::exemplar_gains(eval_rows, d, curmin, cands)
+    }
+
+    fn exemplar_commit(
+        &self,
+        eval_rows: &[f32],
+        d: usize,
+        curmin: &mut [f64],
+        cand: &[f32],
+    ) -> f64 {
+        block::exemplar_commit(eval_rows, d, curmin, cand)
+    }
+
+    fn cholesky_rank1_row(
+        &self,
+        kcol: &[f64],
+        zj: &[f64],
+        zrows: &[Vec<f64>],
+        lambda: f64,
+        colnorm2: &mut [f64],
+    ) -> Vec<f64> {
+        block::cholesky_rank1_row(kcol, zj, zrows, lambda, colnorm2)
+    }
+
+    fn xla_handle(&self) -> Option<&EngineHandle> {
+        self.handle.as_ref()
+    }
+}
+
+/// Engine selection, threaded from config/CLI through the handshake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineChoice {
+    #[default]
+    Native,
+    Xla,
+}
+
+impl EngineChoice {
+    /// Parse a CLI/config engine name.
+    pub fn parse(name: &str) -> Result<EngineChoice> {
+        match name {
+            "native" => Ok(EngineChoice::Native),
+            "xla" => Ok(EngineChoice::Xla),
+            other => Err(Error::invalid(format!(
+                "unknown engine '{other}' (known: native, xla)"
+            ))),
+        }
+    }
+
+    /// Canonical name — also the hello-handshake wire token.
+    pub fn wire_name(self) -> &'static str {
         match self {
-            Tensor::F32(v) => Ok(v),
-            Tensor::I32(_) => Err(Error::Xla("expected f32 tensor, got i32".into())),
+            EngineChoice::Native => "native",
+            EngineChoice::Xla => "xla",
         }
     }
 
-    pub fn i32(self) -> Result<Vec<i32>> {
+    /// Construct the engine this choice names.
+    pub fn build(self) -> Arc<dyn Engine> {
         match self {
-            Tensor::I32(v) => Ok(v),
-            Tensor::F32(_) => Err(Error::Xla("expected i32 tensor, got f32".into())),
+            EngineChoice::Native => native_engine(),
+            EngineChoice::Xla => Arc::new(XlaEngine::create()),
         }
     }
-}
-
-/// An execution input: either fresh host data (uploaded per call) or a
-/// device-cached buffer identified by `key` (uploaded once — used for
-/// the evaluation subsample `W`, identical across thousands of calls).
-pub enum Input {
-    Fresh(Tensor),
-    Cached { key: u64, data: Option<Vec<f32>> },
-}
-
-struct Job {
-    art: String,
-    inputs: Vec<Input>,
-    reply: mpsc::Sender<Result<Vec<Tensor>>>,
-}
-
-/// Engine counters (observability / the §Perf iteration log).
-#[derive(Debug, Default)]
-pub struct EngineStats {
-    pub calls: AtomicU64,
-    pub compiles: AtomicU64,
-    pub exec_ns: AtomicU64,
-    pub upload_bytes: AtomicU64,
-    pub cache_hits: AtomicU64,
-}
-
-impl EngineStats {
-    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
-        // relaxed (all five): monotone statistics counters snapshotted
-        // for display; no cross-counter consistency is required
-        (
-            self.calls.load(Ordering::Relaxed), // relaxed: stats snapshot
-            self.compiles.load(Ordering::Relaxed), // relaxed: stats snapshot
-            self.exec_ns.load(Ordering::Relaxed), // relaxed: stats snapshot
-            self.upload_bytes.load(Ordering::Relaxed), // relaxed: stats snapshot
-            self.cache_hits.load(Ordering::Relaxed), // relaxed: stats snapshot
-        )
-    }
-}
-
-/// Cloneable client handle; the engine thread exits when all handles drop.
-#[derive(Clone)]
-pub struct EngineHandle {
-    tx: mpsc::Sender<Job>,
-    manifest: Arc<Manifest>,
-    stats: Arc<EngineStats>,
-}
-
-/// Engine constructor namespace.
-pub struct Engine;
-
-impl Engine {
-    /// Start the device thread over the artifact directory. Fails fast if
-    /// the manifest is missing (i.e. `make artifacts` was not run).
-    pub fn start(artifact_dir: &std::path::Path) -> Result<EngineHandle> {
-        let manifest = Arc::new(Manifest::load(artifact_dir)?);
-        let stats = Arc::new(EngineStats::default());
-        let (tx, rx) = mpsc::channel::<Job>();
-        let thread_manifest = manifest.clone();
-        let thread_stats = stats.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        std::thread::Builder::new()
-            .name("hss-device".into())
-            .spawn(move || device_thread(thread_manifest, thread_stats, rx, ready_tx))
-            .map_err(|e| Error::EngineUnavailable(e.to_string()))?;
-        // surface client-creation errors synchronously
-        ready_rx
-            .recv()
-            .map_err(|_| Error::EngineUnavailable("device thread died".into()))??;
-        Ok(EngineHandle { tx, manifest, stats })
-    }
-
-    /// Start against the default artifact directory.
-    pub fn start_default() -> Result<EngineHandle> {
-        Self::start(&crate::runtime::default_artifact_dir())
-    }
-}
-
-impl EngineHandle {
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn stats(&self) -> &EngineStats {
-        &self.stats
-    }
-
-    /// Select an artifact (see [`Manifest::select`]).
-    pub fn select(&self, q: &Query) -> Result<Artifact> {
-        self.manifest.select(q).cloned()
-    }
-
-    /// Execute an artifact by name with the given inputs.
-    pub fn execute(&self, art: &str, inputs: Vec<Input>) -> Result<Vec<Tensor>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Job { art: art.to_string(), inputs, reply })
-            .map_err(|_| Error::EngineUnavailable("device thread gone".into()))?;
-        rx.recv()
-            .map_err(|_| Error::EngineUnavailable("device thread dropped reply".into()))?
-    }
-
-    // ---- typed wrappers over the artifact kinds --------------------------
-
-    /// Fused whole-machine exemplar greedy:
-    /// returns (selected local indices, per-step gains, final curmin).
-    pub fn exgreedy(
-        &self,
-        art: &Artifact,
-        w_key: u64,
-        w_padded: &[f32],
-        x_padded: Vec<f32>,
-        stepmask: Vec<f32>,
-    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
-        let mut out = self.execute(
-            &art.name,
-            vec![
-                Input::Cached { key: w_key, data: Some(w_padded.to_vec()) },
-                Input::Fresh(Tensor::F32(x_padded)),
-                Input::Fresh(Tensor::F32(stepmask)),
-            ],
-        )?;
-        if out.len() != 3 {
-            return Err(Error::Xla(format!("exgreedy: {} outputs", out.len())));
-        }
-        let curmin = out.pop().unwrap().f32()?;
-        let gains = out.pop().unwrap().f32()?;
-        let idxs = out.pop().unwrap().i32()?;
-        Ok((idxs, gains, curmin))
-    }
-
-    /// RBF Gram block `[p, q]`.
-    pub fn rbf(&self, art: &Artifact, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
-        let mut out = self.execute(
-            &art.name,
-            vec![Input::Fresh(Tensor::F32(a)), Input::Fresh(Tensor::F32(b))],
-        )?;
-        if out.len() != 1 {
-            return Err(Error::Xla(format!("rbf: {} outputs", out.len())));
-        }
-        out.pop().unwrap().f32()
-    }
-
-    /// Distance matrix `[m, mu]` with a cached eval-subsample buffer.
-    pub fn dist(
-        &self,
-        art: &Artifact,
-        w_key: u64,
-        w_padded: &[f32],
-        x_padded: Vec<f32>,
-    ) -> Result<Vec<f32>> {
-        let mut out = self.execute(
-            &art.name,
-            vec![
-                Input::Cached { key: w_key, data: Some(w_padded.to_vec()) },
-                Input::Fresh(Tensor::F32(x_padded)),
-            ],
-        )?;
-        out.pop()
-            .ok_or_else(|| Error::Xla("dist: no output".into()))?
-            .f32()
-    }
-
-    /// One greedy step over a precomputed distance matrix:
-    /// (gains, best, best_gain, new_curmin).
-    pub fn exstep(
-        &self,
-        art: &Artifact,
-        d2: Vec<f32>,
-        curmin: Vec<f32>,
-        mask: Vec<f32>,
-    ) -> Result<(Vec<f32>, i32, f32, Vec<f32>)> {
-        let mut out = self.execute(
-            &art.name,
-            vec![
-                Input::Fresh(Tensor::F32(d2)),
-                Input::Fresh(Tensor::F32(curmin)),
-                Input::Fresh(Tensor::F32(mask)),
-            ],
-        )?;
-        if out.len() != 4 {
-            return Err(Error::Xla(format!("exstep: {} outputs", out.len())));
-        }
-        let newcur = out.pop().unwrap().f32()?;
-        let bg = out.pop().unwrap().f32()?;
-        let best = out.pop().unwrap().i32()?;
-        let gains = out.pop().unwrap().f32()?;
-        Ok((
-            gains,
-            *best.first().ok_or_else(|| Error::Xla("empty best".into()))?,
-            *bg.first().ok_or_else(|| Error::Xla("empty best_gain".into()))?,
-            newcur,
-        ))
-    }
-
-    /// Commit an externally-chosen item: new_curmin.
-    pub fn exupd(
-        &self,
-        art: &Artifact,
-        d2: Vec<f32>,
-        curmin: Vec<f32>,
-        idx: i32,
-    ) -> Result<Vec<f32>> {
-        let mut out = self.execute(
-            &art.name,
-            vec![
-                Input::Fresh(Tensor::F32(d2)),
-                Input::Fresh(Tensor::F32(curmin)),
-                Input::Fresh(Tensor::I32(vec![idx])),
-            ],
-        )?;
-        out.pop()
-            .ok_or_else(|| Error::Xla("exupd: no output".into()))?
-            .f32()
-    }
-}
-
-// ---------------------------------------------------------------------------
-// device thread
-// ---------------------------------------------------------------------------
-
-fn device_thread(
-    manifest: Arc<Manifest>,
-    stats: Arc<EngineStats>,
-    rx: mpsc::Receiver<Job>,
-    ready: mpsc::Sender<Result<()>>,
-) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
-            let _ = ready.send(Ok(()));
-            c
-        }
-        Err(e) => {
-            let _ = ready.send(Err(Error::Xla(e.to_string())));
-            return;
-        }
-    };
-    let by_name: HashMap<String, Artifact> = manifest
-        .artifacts
-        .iter()
-        .map(|a| (a.name.clone(), a.clone()))
-        .collect();
-    let mut compiled: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
-    let mut buffer_cache: HashMap<(String, u64), xla::PjRtBuffer> = HashMap::new();
-
-    while let Ok(job) = rx.recv() {
-        let result = serve(
-            &client,
-            &manifest,
-            &by_name,
-            &mut compiled,
-            &mut buffer_cache,
-            &stats,
-            &job,
-        );
-        let _ = job.reply.send(result);
-    }
-}
-
-fn serve(
-    client: &xla::PjRtClient,
-    manifest: &Manifest,
-    by_name: &HashMap<String, Artifact>,
-    compiled: &mut HashMap<String, xla::PjRtLoadedExecutable>,
-    buffer_cache: &mut HashMap<(String, u64), xla::PjRtBuffer>,
-    stats: &EngineStats,
-    job: &Job,
-) -> Result<Vec<Tensor>> {
-    let art = by_name
-        .get(&job.art)
-        .ok_or_else(|| Error::NoArtifact(job.art.clone()))?;
-    if job.inputs.len() != art.inputs.len() {
-        return Err(Error::Xla(format!(
-            "{}: expected {} inputs, got {}",
-            art.name,
-            art.inputs.len(),
-            job.inputs.len()
-        )));
-    }
-
-    if !compiled.contains_key(&art.name) {
-        let path: PathBuf = manifest.hlo_path(art);
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        // relaxed: monotone stats counter, no ordering dependence
-        stats.compiles.fetch_add(1, Ordering::Relaxed);
-        compiled.insert(art.name.clone(), exe);
-    }
-    let exe = compiled.get(&art.name).unwrap();
-
-    // Materialize inputs as device buffers.
-    enum Slot {
-        Owned(usize),
-        Cached(String, u64),
-    }
-    let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-    let mut slots: Vec<Slot> = Vec::new();
-    for (i, input) in job.inputs.iter().enumerate() {
-        let spec = &art.inputs[i];
-        match input {
-            Input::Fresh(t) => {
-                let buf = upload(client, t, &spec.shape, stats)?;
-                owned.push(buf);
-                slots.push(Slot::Owned(owned.len() - 1));
-            }
-            Input::Cached { key, data } => {
-                let cache_key = (art.name.clone(), *key);
-                if !buffer_cache.contains_key(&cache_key) {
-                    let data = data.as_ref().ok_or_else(|| {
-                        Error::Xla(format!("{}: cache miss without data", art.name))
-                    })?;
-                    let buf =
-                        upload(client, &Tensor::F32(data.clone()), &spec.shape, stats)?;
-                    buffer_cache.insert(cache_key.clone(), buf);
-                } else {
-                    // relaxed: monotone stats counter, no ordering dependence
-                    stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-                }
-                slots.push(Slot::Cached(cache_key.0, cache_key.1));
-            }
-        }
-    }
-    let args: Vec<&xla::PjRtBuffer> = slots
-        .iter()
-        .map(|slot| match slot {
-            Slot::Owned(i) => &owned[*i],
-            Slot::Cached(name, key) => {
-                buffer_cache.get(&(name.clone(), *key)).unwrap()
-            }
-        })
-        .collect();
-
-    let t0 = std::time::Instant::now();
-    let result = exe.execute_b(&args)?;
-    // relaxed: monotone stats counter, no ordering dependence
-    stats.calls.fetch_add(1, Ordering::Relaxed);
-
-    // aot.py lowers with return_tuple=True: single tuple output.
-    let tuple = result
-        .first()
-        .and_then(|r| r.first())
-        .ok_or_else(|| Error::Xla("empty execution result".into()))?
-        .to_literal_sync()?;
-    stats
-        .exec_ns
-        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed); // relaxed: stats counter
-    let parts = tuple
-        .to_tuple()
-        .map_err(|e| Error::Xla(format!("tuple decompose: {e}")))?;
-    if parts.len() != art.outputs.len() {
-        return Err(Error::Xla(format!(
-            "{}: expected {} outputs, got {}",
-            art.name,
-            art.outputs.len(),
-            parts.len()
-        )));
-    }
-    parts
-        .into_iter()
-        .zip(art.outputs.iter())
-        .map(|(lit, spec)| match spec.dtype.as_str() {
-            "f32" => Ok(Tensor::F32(lit.to_vec::<f32>()?)),
-            "i32" => Ok(Tensor::I32(lit.to_vec::<i32>()?)),
-            other => Err(Error::Xla(format!("unsupported dtype {other}"))),
-        })
-        .collect()
-}
-
-fn upload(
-    client: &xla::PjRtClient,
-    t: &Tensor,
-    shape: &[usize],
-    stats: &EngineStats,
-) -> Result<xla::PjRtBuffer> {
-    let buf = match t {
-        Tensor::F32(v) => {
-            stats
-                .upload_bytes
-                .fetch_add((v.len() * 4) as u64, Ordering::Relaxed); // relaxed: stats counter
-            client.buffer_from_host_buffer::<f32>(v, shape, None)?
-        }
-        Tensor::I32(v) => {
-            stats
-                .upload_bytes
-                .fetch_add((v.len() * 4) as u64, Ordering::Relaxed); // relaxed: stats counter
-            client.buffer_from_host_buffer::<i32>(v, shape, None)?
-        }
-    };
-    Ok(buf)
 }
 
 #[cfg(test)]
@@ -428,16 +228,41 @@ mod tests {
     use super::*;
 
     #[test]
-    fn tensor_accessors() {
-        assert_eq!(Tensor::F32(vec![1.0]).f32().unwrap(), vec![1.0]);
-        assert!(Tensor::F32(vec![1.0]).i32().is_err());
-        assert_eq!(Tensor::I32(vec![3]).i32().unwrap(), vec![3]);
+    fn choice_parses_and_round_trips() {
+        for c in [EngineChoice::Native, EngineChoice::Xla] {
+            assert_eq!(EngineChoice::parse(c.wire_name()).unwrap(), c);
+        }
+        assert!(EngineChoice::parse("cuda").is_err());
+        assert_eq!(EngineChoice::default(), EngineChoice::Native);
     }
 
     #[test]
-    fn start_fails_without_manifest() {
-        let dir = std::env::temp_dir().join("hss_engine_nomanifest");
-        std::fs::create_dir_all(&dir).unwrap();
-        assert!(Engine::start(&dir).is_err());
+    fn native_engine_is_shared_and_named() {
+        let a = native_engine();
+        let b = native_engine();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.name(), "native");
+        assert!(a.xla_handle().is_none());
+    }
+
+    #[test]
+    fn engines_agree_bit_for_bit_on_every_kernel() {
+        let native = NativeEngine;
+        let xla = XlaEngine { handle: None };
+        let d = 4;
+        let m = 70;
+        let mut rng = crate::util::rng::Rng::seed_from(11);
+        let eval: Vec<f32> = (0..m * d).map(|_| rng.f32()).collect();
+        let curmin: Vec<f64> = (0..m).map(|_| rng.f64() * 3.0).collect();
+        let cand_rows: Vec<f32> = (0..3 * d).map(|_| rng.f32()).collect();
+        let cands: Vec<&[f32]> =
+            (0..3).map(|c| &cand_rows[c * d..(c + 1) * d]).collect();
+        let a = native.exemplar_gains(&eval, d, &curmin, &cands);
+        let b = xla.exemplar_gains(&eval, d, &curmin, &cands);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(xla.name(), "xla");
+        assert!(xla.xla_handle().is_none());
     }
 }

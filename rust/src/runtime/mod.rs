@@ -1,21 +1,28 @@
-//! XLA/PJRT runtime: loads the AOT artifacts produced by
-//! `python/compile/aot.py` and executes them from the coordinator's hot
-//! path. Python is never invoked here — the HLO text files and
-//! `manifest.json` are the entire contract.
+//! The compute runtime: the pluggable [`Engine`] trait and its two
+//! implementations, plus the XLA/PJRT device machinery.
 //!
-//! The PJRT client and its buffers are not `Send`, so a dedicated
-//! **device thread** owns them; the rest of the system talks to it
-//! through the cloneable [`EngineHandle`] (request/reply over mpsc).
-//! This also gives the simulated cluster a faithful shape: many machine
-//! threads funnel compute requests into one accelerator, like a
-//! single-host serving deployment.
+//! [`engine`] defines the substrate the oracle layer evaluates batched
+//! marginal gains through — [`NativeEngine`] (blocked CPU kernels in
+//! [`crate::linalg::block`], the default everywhere including workers)
+//! and [`XlaEngine`] (the device thread behind the same interface,
+//! selected by name and negotiated on the hello handshake).
+//!
+//! [`xla`] holds the device thread itself: it loads the AOT artifacts
+//! produced by `python/compile/aot.py` and executes them. Python is
+//! never invoked — the HLO text files and `manifest.json` are the
+//! entire contract. The PJRT client and its buffers are not `Send`, so
+//! a dedicated **device thread** owns them; the rest of the system
+//! talks to it through the cloneable [`EngineHandle`] (request/reply
+//! over mpsc).
 
 pub mod accel;
 pub mod engine;
 pub mod manifest;
+pub mod xla;
 
-pub use engine::{Engine, EngineHandle, EngineStats, Tensor};
+pub use engine::{native_engine, Engine, EngineChoice, NativeEngine, XlaEngine};
 pub use manifest::{Artifact, Manifest, TensorSpec};
+pub use xla::{EngineHandle, EngineStats, Tensor, XlaRuntime};
 
 /// Default artifact directory (overridable with HSS_ARTIFACT_DIR).
 pub fn default_artifact_dir() -> std::path::PathBuf {

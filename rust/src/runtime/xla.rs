@@ -1,0 +1,450 @@
+//! The device thread: owns the PJRT client, compiles HLO artifacts
+//! lazily, caches device-resident buffers, and serves execution requests
+//! from any number of coordinator threads.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{Artifact, Manifest, Query};
+
+/// A host-side tensor crossing the engine boundary.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => Err(Error::Xla("expected f32 tensor, got i32".into())),
+        }
+    }
+
+    pub fn i32(self) -> Result<Vec<i32>> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            Tensor::F32(_) => Err(Error::Xla("expected i32 tensor, got f32".into())),
+        }
+    }
+}
+
+/// An execution input: either fresh host data (uploaded per call) or a
+/// device-cached buffer identified by `key` (uploaded once — used for
+/// the evaluation subsample `W`, identical across thousands of calls).
+pub enum Input {
+    Fresh(Tensor),
+    Cached { key: u64, data: Option<Vec<f32>> },
+}
+
+struct Job {
+    art: String,
+    inputs: Vec<Input>,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// Engine counters (observability / the §Perf iteration log).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub calls: AtomicU64,
+    pub compiles: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub upload_bytes: AtomicU64,
+    pub cache_hits: AtomicU64,
+}
+
+impl EngineStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        // relaxed (all five): monotone statistics counters snapshotted
+        // for display; no cross-counter consistency is required
+        (
+            self.calls.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.compiles.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.exec_ns.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.upload_bytes.load(Ordering::Relaxed), // relaxed: stats snapshot
+            self.cache_hits.load(Ordering::Relaxed), // relaxed: stats snapshot
+        )
+    }
+}
+
+/// Cloneable client handle; the engine thread exits when all handles drop.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Job>,
+    manifest: Arc<Manifest>,
+    stats: Arc<EngineStats>,
+}
+
+/// XLA device-thread constructor namespace (the compute substrate behind
+/// [`crate::runtime::XlaEngine`]).
+pub struct XlaRuntime;
+
+impl XlaRuntime {
+    /// Start the device thread over the artifact directory. Fails fast if
+    /// the manifest is missing (i.e. `make artifacts` was not run).
+    pub fn start(artifact_dir: &std::path::Path) -> Result<EngineHandle> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let stats = Arc::new(EngineStats::default());
+        let (tx, rx) = mpsc::channel::<Job>();
+        let thread_manifest = manifest.clone();
+        let thread_stats = stats.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("hss-device".into())
+            .spawn(move || device_thread(thread_manifest, thread_stats, rx, ready_tx))
+            .map_err(|e| Error::EngineUnavailable(e.to_string()))?;
+        // surface client-creation errors synchronously
+        ready_rx
+            .recv()
+            .map_err(|_| Error::EngineUnavailable("device thread died".into()))??;
+        Ok(EngineHandle { tx, manifest, stats })
+    }
+
+    /// Start against the default artifact directory.
+    pub fn start_default() -> Result<EngineHandle> {
+        Self::start(&crate::runtime::default_artifact_dir())
+    }
+}
+
+impl EngineHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Select an artifact (see [`Manifest::select`]).
+    pub fn select(&self, q: &Query) -> Result<Artifact> {
+        self.manifest.select(q).cloned()
+    }
+
+    /// Execute an artifact by name with the given inputs.
+    pub fn execute(&self, art: &str, inputs: Vec<Input>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job { art: art.to_string(), inputs, reply })
+            .map_err(|_| Error::EngineUnavailable("device thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::EngineUnavailable("device thread dropped reply".into()))?
+    }
+
+    // ---- typed wrappers over the artifact kinds --------------------------
+
+    /// Fused whole-machine exemplar greedy:
+    /// returns (selected local indices, per-step gains, final curmin).
+    pub fn exgreedy(
+        &self,
+        art: &Artifact,
+        w_key: u64,
+        w_padded: &[f32],
+        x_padded: Vec<f32>,
+        stepmask: Vec<f32>,
+    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+        let mut out = self.execute(
+            &art.name,
+            vec![
+                Input::Cached { key: w_key, data: Some(w_padded.to_vec()) },
+                Input::Fresh(Tensor::F32(x_padded)),
+                Input::Fresh(Tensor::F32(stepmask)),
+            ],
+        )?;
+        if out.len() != 3 {
+            return Err(Error::Xla(format!("exgreedy: {} outputs", out.len())));
+        }
+        // invariant: len == 3 was just checked, so three pops succeed
+        let curmin = out.pop().unwrap().f32()?;
+        let gains = out.pop().unwrap().f32()?; // invariant: len checked above
+        let idxs = out.pop().unwrap().i32()?; // invariant: len checked above
+        Ok((idxs, gains, curmin))
+    }
+
+    /// RBF Gram block `[p, q]`.
+    pub fn rbf(&self, art: &Artifact, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
+        let mut out = self.execute(
+            &art.name,
+            vec![Input::Fresh(Tensor::F32(a)), Input::Fresh(Tensor::F32(b))],
+        )?;
+        if out.len() != 1 {
+            return Err(Error::Xla(format!("rbf: {} outputs", out.len())));
+        }
+        // invariant: len == 1 was just checked, so the pop succeeds
+        out.pop().unwrap().f32()
+    }
+
+    /// Distance matrix `[m, mu]` with a cached eval-subsample buffer.
+    pub fn dist(
+        &self,
+        art: &Artifact,
+        w_key: u64,
+        w_padded: &[f32],
+        x_padded: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let mut out = self.execute(
+            &art.name,
+            vec![
+                Input::Cached { key: w_key, data: Some(w_padded.to_vec()) },
+                Input::Fresh(Tensor::F32(x_padded)),
+            ],
+        )?;
+        out.pop()
+            .ok_or_else(|| Error::Xla("dist: no output".into()))?
+            .f32()
+    }
+
+    /// One greedy step over a precomputed distance matrix:
+    /// (gains, best, best_gain, new_curmin).
+    pub fn exstep(
+        &self,
+        art: &Artifact,
+        d2: Vec<f32>,
+        curmin: Vec<f32>,
+        mask: Vec<f32>,
+    ) -> Result<(Vec<f32>, i32, f32, Vec<f32>)> {
+        let mut out = self.execute(
+            &art.name,
+            vec![
+                Input::Fresh(Tensor::F32(d2)),
+                Input::Fresh(Tensor::F32(curmin)),
+                Input::Fresh(Tensor::F32(mask)),
+            ],
+        )?;
+        if out.len() != 4 {
+            return Err(Error::Xla(format!("exstep: {} outputs", out.len())));
+        }
+        // invariant: len == 4 was just checked, so four pops succeed
+        let newcur = out.pop().unwrap().f32()?;
+        let bg = out.pop().unwrap().f32()?; // invariant: len checked above
+        let best = out.pop().unwrap().i32()?; // invariant: len checked above
+        let gains = out.pop().unwrap().f32()?; // invariant: len checked above
+        Ok((
+            gains,
+            *best.first().ok_or_else(|| Error::Xla("empty best".into()))?,
+            *bg.first().ok_or_else(|| Error::Xla("empty best_gain".into()))?,
+            newcur,
+        ))
+    }
+
+    /// Commit an externally-chosen item: new_curmin.
+    pub fn exupd(
+        &self,
+        art: &Artifact,
+        d2: Vec<f32>,
+        curmin: Vec<f32>,
+        idx: i32,
+    ) -> Result<Vec<f32>> {
+        let mut out = self.execute(
+            &art.name,
+            vec![
+                Input::Fresh(Tensor::F32(d2)),
+                Input::Fresh(Tensor::F32(curmin)),
+                Input::Fresh(Tensor::I32(vec![idx])),
+            ],
+        )?;
+        out.pop()
+            .ok_or_else(|| Error::Xla("exupd: no output".into()))?
+            .f32()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// device thread
+// ---------------------------------------------------------------------------
+
+fn device_thread(
+    manifest: Arc<Manifest>,
+    stats: Arc<EngineStats>,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(Error::Xla(e.to_string())));
+            return;
+        }
+    };
+    let by_name: HashMap<String, Artifact> = manifest
+        .artifacts
+        .iter()
+        .map(|a| (a.name.clone(), a.clone()))
+        .collect();
+    let mut compiled: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut buffer_cache: HashMap<(String, u64), xla::PjRtBuffer> = HashMap::new();
+
+    while let Ok(job) = rx.recv() {
+        let result = serve(
+            &client,
+            &manifest,
+            &by_name,
+            &mut compiled,
+            &mut buffer_cache,
+            &stats,
+            &job,
+        );
+        let _ = job.reply.send(result);
+    }
+}
+
+fn serve(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    by_name: &HashMap<String, Artifact>,
+    compiled: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    buffer_cache: &mut HashMap<(String, u64), xla::PjRtBuffer>,
+    stats: &EngineStats,
+    job: &Job,
+) -> Result<Vec<Tensor>> {
+    let art = by_name
+        .get(&job.art)
+        .ok_or_else(|| Error::NoArtifact(job.art.clone()))?;
+    if job.inputs.len() != art.inputs.len() {
+        return Err(Error::Xla(format!(
+            "{}: expected {} inputs, got {}",
+            art.name,
+            art.inputs.len(),
+            job.inputs.len()
+        )));
+    }
+
+    if !compiled.contains_key(&art.name) {
+        let path: PathBuf = manifest.hlo_path(art);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        // relaxed: monotone stats counter, no ordering dependence
+        stats.compiles.fetch_add(1, Ordering::Relaxed);
+        compiled.insert(art.name.clone(), exe);
+    }
+    // invariant: the branch above inserted the key when it was absent
+    let exe = compiled.get(&art.name).unwrap();
+
+    // Materialize inputs as device buffers.
+    enum Slot {
+        Owned(usize),
+        Cached(String, u64),
+    }
+    let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+    let mut slots: Vec<Slot> = Vec::new();
+    for (i, input) in job.inputs.iter().enumerate() {
+        let spec = &art.inputs[i];
+        match input {
+            Input::Fresh(t) => {
+                let buf = upload(client, t, &spec.shape, stats)?;
+                owned.push(buf);
+                slots.push(Slot::Owned(owned.len() - 1));
+            }
+            Input::Cached { key, data } => {
+                let cache_key = (art.name.clone(), *key);
+                if !buffer_cache.contains_key(&cache_key) {
+                    let data = data.as_ref().ok_or_else(|| {
+                        Error::Xla(format!("{}: cache miss without data", art.name))
+                    })?;
+                    let buf =
+                        upload(client, &Tensor::F32(data.clone()), &spec.shape, stats)?;
+                    buffer_cache.insert(cache_key.clone(), buf);
+                } else {
+                    // relaxed: monotone stats counter, no ordering dependence
+                    stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                slots.push(Slot::Cached(cache_key.0, cache_key.1));
+            }
+        }
+    }
+    let args: Vec<&xla::PjRtBuffer> = slots
+        .iter()
+        .map(|slot| match slot {
+            Slot::Owned(i) => &owned[*i],
+            Slot::Cached(name, key) => {
+                // invariant: the materialization loop above inserted
+                // every Cached slot's key before pushing the slot
+                buffer_cache.get(&(name.clone(), *key)).unwrap()
+            }
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let result = exe.execute_b(&args)?;
+    // relaxed: monotone stats counter, no ordering dependence
+    stats.calls.fetch_add(1, Ordering::Relaxed);
+
+    // aot.py lowers with return_tuple=True: single tuple output.
+    let tuple = result
+        .first()
+        .and_then(|r| r.first())
+        .ok_or_else(|| Error::Xla("empty execution result".into()))?
+        .to_literal_sync()?;
+    stats
+        .exec_ns
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed); // relaxed: stats counter
+    let parts = tuple
+        .to_tuple()
+        .map_err(|e| Error::Xla(format!("tuple decompose: {e}")))?;
+    if parts.len() != art.outputs.len() {
+        return Err(Error::Xla(format!(
+            "{}: expected {} outputs, got {}",
+            art.name,
+            art.outputs.len(),
+            parts.len()
+        )));
+    }
+    parts
+        .into_iter()
+        .zip(art.outputs.iter())
+        .map(|(lit, spec)| match spec.dtype.as_str() {
+            "f32" => Ok(Tensor::F32(lit.to_vec::<f32>()?)),
+            "i32" => Ok(Tensor::I32(lit.to_vec::<i32>()?)),
+            other => Err(Error::Xla(format!("unsupported dtype {other}"))),
+        })
+        .collect()
+}
+
+fn upload(
+    client: &xla::PjRtClient,
+    t: &Tensor,
+    shape: &[usize],
+    stats: &EngineStats,
+) -> Result<xla::PjRtBuffer> {
+    let buf = match t {
+        Tensor::F32(v) => {
+            stats
+                .upload_bytes
+                .fetch_add((v.len() * 4) as u64, Ordering::Relaxed); // relaxed: stats counter
+            client.buffer_from_host_buffer::<f32>(v, shape, None)?
+        }
+        Tensor::I32(v) => {
+            stats
+                .upload_bytes
+                .fetch_add((v.len() * 4) as u64, Ordering::Relaxed); // relaxed: stats counter
+            client.buffer_from_host_buffer::<i32>(v, shape, None)?
+        }
+    };
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        assert_eq!(Tensor::F32(vec![1.0]).f32().unwrap(), vec![1.0]);
+        assert!(Tensor::F32(vec![1.0]).i32().is_err());
+        assert_eq!(Tensor::I32(vec![3]).i32().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn start_fails_without_manifest() {
+        let dir = std::env::temp_dir().join("hss_engine_nomanifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(XlaRuntime::start(&dir).is_err());
+    }
+}

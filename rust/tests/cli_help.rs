@@ -107,6 +107,24 @@ fn worker_help_documents_capacity_advertisement_and_grammars() {
 }
 
 #[test]
+fn run_and_worker_help_document_the_engine_flag() {
+    let run = run_hss(&["run", "--help"]);
+    assert!(run.contains("--engine"), "{run}");
+    assert!(run.contains("native|xla"), "{run}");
+    // the native default and the tcp handshake semantics are stated
+    assert!(run.contains("default native"), "{run}");
+    assert!(run.contains("requested from every worker at handshake"), "{run}");
+    assert!(run.contains("--no-engine"), "{run}");
+
+    let worker = run_hss(&["worker", "--help"]);
+    assert!(worker.contains("--engine"), "{worker}");
+    assert!(worker.contains("native|xla"), "{worker}");
+    // the pin-wins negotiation rule is stated where users set the pin
+    assert!(worker.contains("the pin wins"), "{worker}");
+    assert!(worker.contains("bit-identical across engines"), "{worker}");
+}
+
+#[test]
 fn plan_help_documents_the_capacity_grammar() {
     let text = run_hss(&["plan", "--help"]);
     assert!(text.contains("--capacity"), "{text}");

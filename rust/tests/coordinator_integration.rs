@@ -10,11 +10,11 @@ use hss::coordinator::{baselines, TreeBuilder};
 use hss::data::synthetic;
 use hss::objectives::Problem;
 use hss::runtime::accel::XlaGreedy;
-use hss::runtime::Engine;
+use hss::runtime::XlaRuntime;
 
 fn maybe_engine() -> Option<hss::runtime::EngineHandle> {
     let dir = hss::runtime::default_artifact_dir();
-    dir.join("manifest.json").exists().then(|| Engine::start(&dir).unwrap())
+    dir.join("manifest.json").exists().then(|| XlaRuntime::start(&dir).unwrap())
 }
 
 #[test]

@@ -472,6 +472,61 @@ fn tcp_mixed_payload_fleet_matches_local_including_binary_worker_kill() {
     tcp.shutdown_workers();
 }
 
+/// Mixed-engine fleet: one default worker (serving the coordinator's
+/// native request) and one worker pinned `--engine xla` must produce a
+/// run bit-identical to local — engines change how gains are computed,
+/// never what they are — and the per-connection engine split plus the
+/// batched-gains accounting must land in the worker stats.
+#[test]
+fn tcp_mixed_engine_fleet_matches_local_with_engine_split_in_stats() {
+    let (k, mu, seed) = (10usize, 100usize, 9u64);
+    let ds = registry::load("csn-2k", seed).unwrap();
+    let problem = Problem::exemplar(ds, k, seed);
+    let local = TreeBuilder::new(mu).build().run(&problem, 23).unwrap();
+
+    let native = WorkerProc::spawn(mu);
+    let xla = WorkerProc::spawn_args(mu, &["--engine", "xla"]);
+    let tcp = Arc::new(
+        TcpBackend::new(mu, vec![native.addr.clone(), xla.addr.clone()]).unwrap(),
+    );
+    let remote = TreeBuilder::new(mu)
+        .backend(tcp.clone())
+        .build()
+        .run(&problem, 23)
+        .unwrap();
+    assert_eq!(remote.best.items, local.best.items, "mixed-engine fleet changed the items");
+    assert_eq!(
+        remote.best.value.to_bits(),
+        local.best.value.to_bits(),
+        "objective value not bit-identical over a mixed-engine fleet"
+    );
+
+    let stats = tcp.worker_stats();
+    let by_addr = |addr: &str| {
+        stats
+            .iter()
+            .find(|w| w.addr == addr)
+            .unwrap_or_else(|| panic!("no stats for {addr}"))
+    };
+    let n = by_addr(&native.addr);
+    assert!(n.parts > 0, "native worker completed no parts");
+    assert_eq!(n.engine, "native", "unpinned worker follows the coordinator's request");
+    let x = by_addr(&xla.addr);
+    assert!(x.parts > 0, "xla-pinned worker completed no parts");
+    assert_eq!(x.engine, "xla", "pinned worker must answer with its own engine");
+    // the batched refresh path is exercised and reported per worker
+    for w in [n, x] {
+        assert!(w.bulk_gain_calls >= 1, "{}: no batched gains calls reported", w.addr);
+        assert!(
+            w.bulk_gain_candidates >= w.bulk_gain_calls,
+            "{}: fewer batched candidates than calls",
+            w.addr
+        );
+    }
+
+    tcp.shutdown_workers();
+}
+
 /// The two-round RANDGREEDI baseline also runs end-to-end on workers.
 #[test]
 fn randgreedi_runs_on_tcp_workers() {

@@ -34,6 +34,7 @@ use hss::data::spec::DatasetSpec;
 use hss::dist::protocol::{
     read_frame, write_frame, PayloadMode, ProblemSpec, Request, Response, Telemetry, MAX_FRAME,
 };
+use hss::runtime::EngineChoice;
 use hss::util::json::lazy::LazyDoc;
 use hss::util::json::Json;
 use hss::util::rng::Rng;
@@ -218,6 +219,7 @@ fn random_request(rng: &mut Rng) -> Request {
         0 => Request::Hello {
             clock_ms: rng.f64() * 1e4,
             payload: if rng.bool(0.5) { PayloadMode::Binary } else { PayloadMode::Json },
+            engine: if rng.bool(0.5) { EngineChoice::Native } else { EngineChoice::Xla },
         },
         1 => Request::DefineProblem { id: rng.next_u64(), problem: random_spec(rng) },
         2 => Request::Compress {
@@ -237,6 +239,7 @@ fn random_response(rng: &mut Rng) -> Response {
             capacity: rng.below(4096) as usize,
             clock_echo_ms: rng.f64() * 1e4,
             payload: if rng.bool(0.5) { PayloadMode::Binary } else { PayloadMode::Json },
+            engine: if rng.bool(0.5) { EngineChoice::Native } else { EngineChoice::Xla },
         },
         1 => Response::Defined { id: rng.next_u64() },
         2 => Response::Solution {
@@ -251,6 +254,9 @@ fn random_response(rng: &mut Rng) -> Response {
                 problem_hits: rng.below(1 << 30),
                 problem_misses: rng.below(1 << 30),
                 problem_evictions: rng.below(1 << 30),
+                engine: if rng.bool(0.5) { "native".into() } else { "xla".into() },
+                bulk_gain_calls: rng.below(1 << 30),
+                bulk_gain_candidates: rng.below(1 << 30),
             },
         },
         3 => Response::Error { msg: "worker exploded: part overruns µ".into() },

@@ -11,7 +11,7 @@ use hss::data::synthetic;
 use hss::objectives::Problem;
 use hss::runtime::accel::{XlaExemplarOracle, XlaGreedy};
 use hss::runtime::manifest::Query;
-use hss::runtime::{Engine, EngineHandle};
+use hss::runtime::{EngineHandle, XlaRuntime};
 
 fn engine() -> Option<EngineHandle> {
     let dir = hss::runtime::default_artifact_dir();
@@ -19,7 +19,7 @@ fn engine() -> Option<EngineHandle> {
         eprintln!("skipping: artifacts not built");
         return None;
     }
-    Some(Engine::start(&dir).expect("engine start"))
+    Some(XlaRuntime::start(&dir).expect("engine start"))
 }
 
 #[test]
