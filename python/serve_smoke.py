@@ -1,0 +1,192 @@
+"""CI smoke for the `hss serve` job service (stdlib only).
+
+Boots the daemon on an ephemeral port against the sim backend, drives
+the documented HTTP API end to end (docs/SERVE.md) and validates the
+result document schema plus every error path:
+
+* ``GET /healthz``  — 200, ``status: serving`` before drain
+* ``POST /jobs``    — 400 on malformed JSON, 400 on backend-selection
+  keys (the service owns the fleet), 201 on a valid spec
+* ``GET /jobs/:id`` — 404 on unknown ids, then polled to ``completed``
+* ``GET /jobs/:id/result`` — full schema check incl. per-trial
+  ``value_bits`` (lossless f64 bit pattern, must round-trip to the
+  reported ``value``)
+* ``POST /jobs/:id/cancel`` — 409 once the job is terminal
+* ``POST /shutdown`` — 202, in-flight job still finishes, new
+  submissions get 503, process exits 0 once drained
+
+Usage::
+
+    python3 python/serve_smoke.py [path/to/hss]
+
+Exit status 0 on success; any assertion failure or timeout is non-zero
+(the CI job is blocking).
+"""
+
+import json
+import http.client
+import struct
+import subprocess
+import sys
+import time
+
+JOB_TIMEOUT_S = 120
+POLL_S = 0.2
+
+
+def request(addr, method, path, body=None):
+    """One request against the daemon; returns (status_code, json_doc)."""
+    host, port = addr.rsplit(":", 1)
+    conn = http.client.HTTPConnection(host, int(port), timeout=15)
+    try:
+        conn.request(method, path, body=body)
+        resp = conn.getresponse()
+        raw = resp.read().decode("utf-8", "replace")
+        try:
+            doc = json.loads(raw)
+        except ValueError:
+            raise AssertionError(f"{method} {path}: non-JSON body {raw!r}")
+        return resp.status, doc
+    finally:
+        conn.close()
+
+
+def check(cond, what):
+    if not cond:
+        raise AssertionError(what)
+    print(f"  ok: {what}")
+
+
+def validate_result_doc(doc, job_id):
+    check(doc.get("id") == job_id, f"result.id == {job_id}")
+    check(doc.get("state") == "completed", "result.state == completed")
+    check(isinstance(doc.get("mean"), (int, float)), "result.mean is a number")
+    check(isinstance(doc.get("wall_ms"), (int, float)), "result.wall_ms is a number")
+    check("header" in doc, "result.header present")
+    trials = doc.get("trials")
+    check(isinstance(trials, list) and trials, "result.trials is a non-empty list")
+    for t in trials:
+        check(isinstance(t.get("trial"), int), "trial index is an int")
+        check(isinstance(t.get("value"), (int, float)), "trial value is a number")
+        bits = t.get("value_bits")
+        check(isinstance(bits, str) and bits.isdigit(), "value_bits is a decimal string")
+        # value_bits is the lossless channel: the f64 bit pattern must
+        # decode to (approximately — the JSON float is the lossy copy)
+        # the reported value
+        exact = struct.unpack("<d", struct.pack("<Q", int(bits)))[0]
+        check(
+            abs(exact - t["value"]) <= 1e-6 * max(1.0, abs(exact)),
+            "value_bits round-trips to the reported value",
+        )
+        check(isinstance(t.get("wall_ms"), (int, float)), "trial wall_ms is a number")
+    check(isinstance(doc.get("workers"), list), "result.workers is a list")
+
+
+def main():
+    binary = sys.argv[1] if len(sys.argv) > 1 else "target/release/hss"
+    proc = subprocess.Popen(
+        [
+            binary, "serve",
+            "--backend", "sim",
+            "--listen", "127.0.0.1:0",
+            "--capacity", "150",
+            "--max-jobs", "2",
+        ],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+    )
+    try:
+        run(proc)
+    except BaseException:
+        proc.kill()
+        out, err = proc.communicate()
+        print(f"--- daemon stdout ---\n{out}\n--- daemon stderr ---\n{err}")
+        raise
+    print("serve smoke OK")
+
+
+def run(proc):
+    # discovery line: "hss-serve listening on <addr> backend=..." —
+    # readline returns "" if the daemon dies before announcing
+    line = proc.stdout.readline()
+    check(line and "listening on" in line, f"boot announcement on stdout: {line!r}")
+    addr = line.split("listening on", 1)[1].split()[0]
+    print(f"daemon up at {addr}")
+
+    code, doc = request(addr, "GET", "/healthz")
+    check(code == 200 and doc.get("status") == "serving", "healthz reports serving")
+    check(isinstance(doc.get("jobs"), dict), "healthz carries job counts")
+
+    # error paths first: malformed body, fleet-owned keys, unknown ids
+    code, doc = request(addr, "POST", "/jobs", "{not json")
+    check(code == 400 and "error" in doc, "malformed spec is a 400")
+    code, doc = request(addr, "POST", "/jobs", json.dumps({"dataset": "csn-2k", "backend": "tcp"}))
+    check(code == 400, "backend-selection key is a 400")
+    check("service owns the backend" in doc.get("error", ""), "400 names the fleet-ownership rule")
+    code, doc = request(addr, "POST", "/jobs", json.dumps({"dataset": "no-such-dataset"}))
+    check(code == 400, "unknown dataset is a 400")
+    code, _ = request(addr, "GET", "/no/such/route")
+    check(code == 404, "unknown route is a 404")
+    code, _ = request(addr, "GET", "/jobs/999999")
+    check(code == 404, "unknown job id is a 404")
+
+    # a real job: submit, poll to completion, validate the result doc
+    spec = {"dataset": "csn-2k", "algo": "tree", "k": 10, "capacity": 150,
+            "trials": 1, "seed": 42}
+    code, doc = request(addr, "POST", "/jobs", json.dumps(spec))
+    check(code == 201, "valid spec is a 201")
+    job_id = doc.get("id")
+    check(isinstance(job_id, int), "201 body carries the job id")
+    check(doc.get("state") in ("queued", "running"), "fresh job is queued or running")
+
+    deadline = time.monotonic() + JOB_TIMEOUT_S
+    while True:
+        code, doc = request(addr, "GET", f"/jobs/{job_id}")
+        check(code == 200, f"status poll for job {job_id} is a 200")
+        if doc.get("state") in ("completed", "failed", "cancelled"):
+            break
+        if time.monotonic() > deadline:
+            raise AssertionError(f"job {job_id} did not finish: {doc}")
+        time.sleep(POLL_S)
+    check(doc.get("state") == "completed", f"job {job_id} completed: {doc}")
+
+    code, result = request(addr, "GET", f"/jobs/{job_id}/result")
+    check(code == 200, "result fetch is a 200")
+    validate_result_doc(result, job_id)
+
+    code, doc = request(addr, "GET", "/jobs")
+    check(code == 200 and any(j.get("id") == job_id for j in doc.get("jobs", [])),
+          "job listing includes the finished job")
+    code, _ = request(addr, "POST", f"/jobs/{job_id}/cancel")
+    check(code == 409, "cancelling a terminal job is a 409")
+    code, doc = request(addr, "GET", "/metrics")
+    check(code == 200 and doc.get("fleet", {}).get("backend") == "sim",
+          "metrics report the sim fleet")
+
+    # drain: keep one job in flight so the daemon stays up long enough
+    # to observe the draining state, then verify 503 + clean exit
+    slow = {"dataset": "csn-2k", "algo": "tree", "k": 10, "capacity": 150,
+            "trials": 3, "seed": 7}
+    code, doc = request(addr, "POST", "/jobs", json.dumps(slow))
+    check(code == 201, "pre-drain job admitted")
+    inflight = doc["id"]
+    code, doc = request(addr, "POST", "/shutdown")
+    check(code == 202 and doc.get("status") == "draining", "shutdown is a 202 draining")
+    try:
+        code, doc = request(addr, "POST", "/jobs", json.dumps(spec))
+        check(code == 503, "post-drain submission is a 503")
+    except (ConnectionError, OSError):
+        # the in-flight job finished first and the daemon already left —
+        # acceptable, the 503 window is only as wide as the job
+        print("  ok: daemon already drained before the 503 probe (in-flight job was fast)")
+
+    proc.wait(timeout=JOB_TIMEOUT_S)
+    check(proc.returncode == 0, f"daemon exited 0 after drain (got {proc.returncode})")
+    out = proc.stdout.read()
+    check("drained" in out, "daemon announced the drain on stdout")
+    print(f"in-flight job {inflight} finished under drain; daemon exited cleanly")
+
+
+if __name__ == "__main__":
+    main()

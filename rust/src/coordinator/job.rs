@@ -1,0 +1,450 @@
+//! A tree run as a first-class value: [`JobSpec`] → [`JobRunner`] →
+//! [`JobOutput`].
+//!
+//! Historically "a run" *was* the program — `hss run` built a backend,
+//! executed one experiment, printed lines, and exited. This module
+//! extracts the run's setup/metrics plumbing into a reusable layer so
+//! the same experiment can be executed by the one-shot CLI *or*
+//! submitted to a long-lived multi-tenant service (`hss serve`,
+//! [`crate::serve`]) over a shared fleet:
+//!
+//! * [`JobSpec`] — what to run: a [`RunConfig`] (the existing config
+//!   file schema). The service path ([`JobSpec::from_service_json`])
+//!   rejects backend-selection keys, because a service's jobs share
+//!   *its* fleet.
+//! * [`JobRunner`] — executes a spec against an injected
+//!   [`Backend`], streaming [`JobEvent`]s (header resolved, trial
+//!   finished) so the CLI can print progressively while the service
+//!   records state transitions.
+//! * [`JobOutput`] — everything the run produced: per-trial values and
+//!   detail strings, the mean/stddev summary, and the per-worker
+//!   [`WorkerStats`] **delta over the job's own interval** (via
+//!   [`stats_delta`]), so concurrent tenants never see each other's
+//!   utilization.
+//!
+//! Determinism: the runner is a verbatim extraction of the old
+//! `cmd_run` trial loop — compressor selection, seed derivation
+//! (`cfg.seed + trial`), and the formatted output lines
+//! ([`JobHeader::to_line`], [`TrialOutcome::to_line`]) are
+//! bit-identical to the pre-refactor CLI on every backend.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::algorithms::{Compressor, LazyGreedy, StochasticGreedy};
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::{baselines, TreeBuilder};
+use crate::dist::{stats_delta, Backend, WorkerStats};
+use crate::error::{Error, Result};
+use crate::runtime::accel::XlaGreedy;
+use crate::runtime::EngineHandle;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// What to run: the existing run-config schema, reused verbatim so a
+/// config file, a CLI invocation and a service submission all describe
+/// experiments the same way.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub config: RunConfig,
+}
+
+/// Keys a *service* submission may not set: the daemon owns the fleet,
+/// so a job has no say in where it executes.
+const SERVICE_REJECTED_KEYS: &[&str] = &["backend", "workers", "sim"];
+
+impl JobSpec {
+    /// Wrap an already-resolved config (the `hss run` path — the
+    /// config's own backend selection was used to build the backend the
+    /// runner receives).
+    pub fn from_config(config: RunConfig) -> JobSpec {
+        JobSpec { config }
+    }
+
+    /// Parse a job submitted to the service (`POST /jobs` body): the
+    /// run-config JSON schema, minus backend selection — the service
+    /// owns the fleet, so `backend`, `workers` and `sim` are rejected
+    /// with a clear error instead of silently ignored.
+    pub fn from_service_json(text: &str) -> Result<JobSpec> {
+        let doc = Json::parse(text)?;
+        if let Json::Obj(fields) = &doc {
+            for (key, _) in fields {
+                if SERVICE_REJECTED_KEYS.contains(&key.as_str()) {
+                    return Err(Error::invalid(format!(
+                        "job spec field '{key}' is not allowed: the service owns the \
+                         backend — submit only problem/algorithm fields \
+                         (dataset, algo, k, capacity, seed, trials, constraint, \
+                         partitioner, engine, threads, epsilon)"
+                    )));
+                }
+            }
+        } else {
+            return Err(Error::invalid("job spec must be a JSON object"));
+        }
+        Ok(JobSpec { config: RunConfig::from_json_text(text)? })
+    }
+
+    /// One-line description for logs and job listings.
+    pub fn summary(&self) -> String {
+        format!(
+            "dataset={} algo={} k={} trials={}",
+            self.config.dataset,
+            self.config.algo.name(),
+            self.config.k,
+            self.config.trials
+        )
+    }
+}
+
+/// The resolved experiment header — everything the classic
+/// `dataset=… n=… …` banner line reports, kept as a value so services
+/// can serve it as JSON while the CLI prints it.
+#[derive(Debug, Clone)]
+pub struct JobHeader {
+    pub dataset: String,
+    pub n: usize,
+    pub d: usize,
+    pub objective: String,
+    pub constraint: String,
+    pub k: usize,
+    pub capacity: String,
+    pub algo: String,
+    pub backend: String,
+    pub partitioner: String,
+    pub engine: String,
+}
+
+impl JobHeader {
+    /// The exact banner line `hss run` has always printed.
+    pub fn to_line(&self) -> String {
+        format!(
+            "dataset={} n={} d={} objective={} constraint={} k={} capacity={} algo={} backend={} partitioner={} engine={}",
+            self.dataset,
+            self.n,
+            self.d,
+            self.objective,
+            self.constraint,
+            self.k,
+            self.capacity,
+            self.algo,
+            self.backend,
+            self.partitioner,
+            self.engine,
+        )
+    }
+}
+
+/// One finished trial: the objective value, the algorithm-specific
+/// detail string (rounds, machines, shuffle bytes, …), and wall time.
+#[derive(Debug, Clone)]
+pub struct TrialOutcome {
+    pub trial: usize,
+    pub value: f64,
+    pub detail: String,
+    pub wall_ms: f64,
+}
+
+impl TrialOutcome {
+    /// The exact per-trial line `hss run` has always printed.
+    pub fn to_line(&self) -> String {
+        format!(
+            "trial {}: f(S) = {:.6}  [{}]  ({:.0} ms)",
+            self.trial, self.value, self.detail, self.wall_ms
+        )
+    }
+}
+
+/// Everything one executed job produced.
+pub struct JobOutput {
+    pub header: JobHeader,
+    pub trials: Vec<TrialOutcome>,
+    /// Mean/stddev of the trial values (the `mean f(S) = …` summary).
+    pub mean: f64,
+    pub stddev: f64,
+    /// Per-worker utilization over **this job's interval only**: the
+    /// scoped slice when the backend attributes per scope, otherwise
+    /// the delta between lifetime snapshots taken around the job.
+    pub worker_stats: Vec<WorkerStats>,
+    /// Job wall time (header resolution to last trial), milliseconds.
+    pub wall_ms: f64,
+    /// The XLA device handle the job ran with, if any — the CLI prints
+    /// its stats; services on non-local backends never get one.
+    pub engine: Option<EngineHandle>,
+}
+
+impl JobOutput {
+    /// The exact multi-trial summary line `hss run` has always printed
+    /// (callers print it only when more than one trial ran).
+    pub fn mean_line(&self) -> String {
+        format!(
+            "mean f(S) = {:.6} ± {:.6} over {} trials",
+            self.mean,
+            self.stddev,
+            self.trials.len()
+        )
+    }
+}
+
+/// Progress notifications streamed while a job runs, so the CLI prints
+/// lines the moment they happen and the service timestamps state
+/// transitions.
+pub enum JobEvent<'a> {
+    /// The problem is loaded and the experiment banner is resolved.
+    Started(&'a JobHeader),
+    /// One trial finished.
+    Trial(&'a TrialOutcome),
+}
+
+/// Executes [`JobSpec`]s against an injected backend. Stateless across
+/// jobs — one runner may execute many specs, sequentially or from
+/// several threads (the backend is the shared resource, the runner just
+/// drives it).
+pub struct JobRunner {
+    backend: Arc<dyn Backend>,
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+impl JobRunner {
+    pub fn new(backend: Arc<dyn Backend>) -> JobRunner {
+        JobRunner { backend, cancel: None }
+    }
+
+    /// Attach a cancellation flag: checked between trials (and, via a
+    /// scope-aware backend wrapper, at round boundaries inside one).
+    /// A set flag surfaces as [`Error::Cancelled`].
+    pub fn with_cancel(mut self, cancel: Arc<AtomicBool>) -> JobRunner {
+        self.cancel = Some(cancel);
+        self
+    }
+
+    /// Run to completion, discarding progress events.
+    pub fn run(&self, spec: &JobSpec) -> Result<JobOutput> {
+        self.run_with(spec, &mut |_| {})
+    }
+
+    /// Run to completion, streaming [`JobEvent`]s to `observe`.
+    pub fn run_with(
+        &self,
+        spec: &JobSpec,
+        observe: &mut dyn FnMut(JobEvent<'_>),
+    ) -> Result<JobOutput> {
+        let cfg = &spec.config;
+        let backend = &self.backend;
+        let (problem, engine) = cfg.problem_with_engine()?;
+        // XLA device compressors are not wire-representable; on
+        // non-local backends the device handle stays out of compressor
+        // dispatch and the engine choice instead rides the hello
+        // handshake to each worker
+        let engine = if backend.name() == "local" { engine } else { None };
+        let header = JobHeader {
+            dataset: cfg.dataset.clone(),
+            n: problem.n(),
+            d: problem.dataset.d,
+            objective: problem.objective.name().to_string(),
+            constraint: problem.constraint.name(),
+            k: cfg.k,
+            capacity: cfg.capacity.to_string(),
+            algo: cfg.algo.name().to_string(),
+            backend: backend.name().to_string(),
+            partitioner: cfg.partitioner.name().to_string(),
+            engine: problem.compute.name().to_string(),
+        };
+        observe(JobEvent::Started(&header));
+
+        let stats_before = backend.worker_stats();
+        let run_start = Instant::now();
+        let mut values = Summary::new();
+        let mut trials: Vec<TrialOutcome> = Vec::new();
+        for trial in 0..cfg.trials {
+            self.check_cancelled(trial)?;
+            let seed = cfg.seed + trial as u64;
+            let t0 = Instant::now();
+            let (value, detail) = match &cfg.algo {
+                Algo::Centralized => {
+                    let s = baselines::centralized(&problem)?;
+                    (s.value, format!("|S|={}", s.items.len()))
+                }
+                Algo::Random => {
+                    let s = baselines::random_subset(&problem, seed)?;
+                    (s.value, format!("|S|={}", s.items.len()))
+                }
+                Algo::RandGreedi | Algo::Greedi => {
+                    let run = |p: &_, c: &dyn Compressor| match cfg.algo {
+                        Algo::RandGreedi => {
+                            baselines::rand_greedi_on(p, backend.as_ref(), c, seed)
+                        }
+                        _ => baselines::greedi_on(p, backend.as_ref(), c, seed),
+                    };
+                    let res = match &engine {
+                        Some(e) => run(&problem, &XlaGreedy::new(e.clone()))?,
+                        None => run(&problem, &LazyGreedy::new())?,
+                    };
+                    (
+                        res.solution.value,
+                        format!("machines={} union={}", res.machines, res.union_size),
+                    )
+                }
+                Algo::Tree | Algo::StochasticTree { .. } => {
+                    let compressor: Arc<dyn Compressor> = match (&cfg.algo, &engine) {
+                        (Algo::Tree, Some(e)) => Arc::new(XlaGreedy::new(e.clone())),
+                        (Algo::Tree, None) => Arc::new(LazyGreedy::new()),
+                        (Algo::StochasticTree { epsilon }, Some(e)) => {
+                            Arc::new(XlaGreedy::stochastic(e.clone(), *epsilon))
+                        }
+                        (Algo::StochasticTree { epsilon }, None) => {
+                            Arc::new(StochasticGreedy::new(*epsilon))
+                        }
+                        // the outer arm admits only tree algorithms, so
+                        // this is unreachable; defaulting (rather than
+                        // panicking) keeps the coordinator panic-free
+                        _ => Arc::new(LazyGreedy::new()),
+                    };
+                    let res = TreeBuilder::for_profile(cfg.capacity.clone())
+                        .compressor(compressor)
+                        .partition_mode(cfg.partitioner)
+                        .threads(cfg.threads)
+                        .backend(backend.clone())
+                        .build()
+                        .run(&problem, seed)?;
+                    let requeue = if res.requeued_parts > 0 {
+                        format!(" requeued={}", res.requeued_parts)
+                    } else {
+                        String::new()
+                    };
+                    let overlap = if res.straggler_overlap_ms > 0.0 {
+                        format!(" overlapMs={:.1}", res.straggler_overlap_ms)
+                    } else {
+                        String::new()
+                    };
+                    // interning telemetry: after round 0 this stays
+                    // flat — compress requests ship an O(1) problem id,
+                    // not the spec
+                    let spec = if res.spec_bytes > 0 {
+                        format!(" specKB={:.1}", res.spec_bytes as f64 / 1e3)
+                    } else {
+                        String::new()
+                    };
+                    (
+                        res.best.value,
+                        format!(
+                            "rounds={}/{} machines={} evals={} shuffleKB={:.1} residentMB={:.1}{spec}{requeue}{overlap}",
+                            res.rounds,
+                            res.round_bound,
+                            res.total_machines,
+                            res.oracle_evals,
+                            res.bytes_shuffled as f64 / 1e3,
+                            res.rows_resident_bytes as f64 / 1e6
+                        ),
+                    )
+                }
+            };
+            values.push(value);
+            let outcome = TrialOutcome {
+                trial,
+                value,
+                detail,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            };
+            observe(JobEvent::Trial(&outcome));
+            trials.push(outcome);
+        }
+        let wall_ms = run_start.elapsed().as_secs_f64() * 1e3;
+        // the job's own interval: scoped backends report from zero, so
+        // the delta is the identity; lifetime-only backends subtract
+        // the snapshot taken before the first trial
+        let worker_stats = stats_delta(&backend.worker_stats(), &stats_before);
+        Ok(JobOutput {
+            header,
+            trials,
+            mean: values.mean(),
+            stddev: values.stddev(),
+            worker_stats,
+            wall_ms,
+            engine,
+        })
+    }
+
+    fn check_cancelled(&self, trial: usize) -> Result<()> {
+        if let Some(flag) = &self.cancel {
+            if flag.load(Ordering::SeqCst) {
+                return Err(Error::Cancelled(format!(
+                    "job cancelled before trial {trial}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::LocalBackend;
+
+    fn small_spec() -> JobSpec {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "tiny-2k".into();
+        cfg.k = 5;
+        cfg.capacity = crate::coordinator::capacity::CapacityProfile::uniform(200);
+        cfg.trials = 2;
+        JobSpec::from_config(cfg)
+    }
+
+    #[test]
+    fn runner_output_lines_match_the_classic_cli_format() {
+        let backend: Arc<dyn Backend> = Arc::new(LocalBackend::new(200));
+        let spec = small_spec();
+        let out = JobRunner::new(backend).run(&spec).unwrap();
+        let banner = out.header.to_line();
+        assert!(banner.starts_with("dataset=tiny-2k n="), "{banner}");
+        assert!(banner.contains(" backend=local "), "{banner}");
+        assert_eq!(out.trials.len(), 2);
+        let line = out.trials[0].to_line();
+        assert!(line.starts_with("trial 0: f(S) = "), "{line}");
+        assert!(line.contains("[rounds="), "{line}");
+        assert!(out.mean_line().contains("over 2 trials"), "{}", out.mean_line());
+        // two trials with different seeds: the mean is defined
+        assert!(out.mean.is_finite());
+    }
+
+    #[test]
+    fn runner_is_deterministic_for_a_fixed_spec() {
+        let backend: Arc<dyn Backend> = Arc::new(LocalBackend::new(200));
+        let runner = JobRunner::new(backend);
+        let spec = small_spec();
+        let a = runner.run(&spec).unwrap();
+        let b = runner.run(&spec).unwrap();
+        assert_eq!(a.trials[0].value.to_bits(), b.trials[0].value.to_bits());
+        assert_eq!(a.trials[0].detail, b.trials[0].detail);
+    }
+
+    #[test]
+    fn service_spec_rejects_backend_selection_keys() {
+        for body in [
+            r#"{"dataset":"tiny-2k","backend":"tcp"}"#,
+            r#"{"dataset":"tiny-2k","workers":["w:1"]}"#,
+            r#"{"dataset":"tiny-2k","sim":{}}"#,
+        ] {
+            let err = JobSpec::from_service_json(body).unwrap_err().to_string();
+            assert!(err.contains("service owns the backend"), "{err}");
+        }
+        assert!(JobSpec::from_service_json(r#"{"dataset":"tiny-2k","k":5}"#).is_ok());
+        assert!(JobSpec::from_service_json("[1,2]").is_err());
+    }
+
+    #[test]
+    fn a_pre_set_cancel_flag_stops_the_job_before_any_trial() {
+        let backend: Arc<dyn Backend> = Arc::new(LocalBackend::new(200));
+        let flag = Arc::new(AtomicBool::new(true));
+        let runner = JobRunner::new(backend).with_cancel(flag);
+        let err = match runner.run(&small_spec()) {
+            Err(e) => e,
+            Ok(_) => panic!("expected Cancelled, got a completed job"),
+        };
+        assert!(
+            matches!(err, Error::Cancelled(_)),
+            "expected Cancelled, got: {err}"
+        );
+    }
+}

@@ -12,11 +12,15 @@
 //!   so rounds also run on real `hss worker` processes or the fault
 //!   simulator);
 //! * [`tree`] — Algorithm 1 TREE-BASED COMPRESSION;
-//! * [`baselines`] — centralized GREEDY, GREEDI, RANDGREEDI, RANDOM.
+//! * [`baselines`] — centralized GREEDY, GREEDI, RANDGREEDI, RANDOM;
+//! * [`job`] — a run as a first-class value: [`JobSpec`] → [`JobRunner`]
+//!   → [`JobOutput`], the layer both the one-shot CLI and the
+//!   multi-tenant `hss serve` daemon ([`crate::serve`]) execute through.
 
 pub mod baselines;
 pub mod capacity;
 pub mod cluster;
+pub mod job;
 pub mod metrics;
 pub mod partitioner;
 pub mod planner;
@@ -24,6 +28,7 @@ pub mod tree;
 
 pub use capacity::CapacityProfile;
 pub use cluster::Cluster;
+pub use job::{JobEvent, JobHeader, JobOutput, JobRunner, JobSpec, TrialOutcome};
 pub use metrics::{Metrics, RoundMetrics};
 pub use partitioner::{
     balanced_random_partition, weighted_balanced_random_partition, PartitionStrategy,

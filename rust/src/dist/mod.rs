@@ -143,6 +143,55 @@ pub struct WorkerStats {
     pub bulk_gain_candidates: u64,
 }
 
+impl WorkerStats {
+    /// The stats accumulated *since* an earlier snapshot of the same
+    /// worker: sum counters subtract, gauge fields (cache counters,
+    /// `engine`) keep `self`'s latest value — the snapshot/delta API
+    /// that lets each job report only its own interval instead of the
+    /// backend's process-lifetime totals. Saturating, so a worker
+    /// reconnect that resets a sum never yields a negative delta.
+    pub fn delta_since(&self, earlier: &WorkerStats) -> WorkerStats {
+        WorkerStats {
+            addr: self.addr.clone(),
+            parts: self.parts.saturating_sub(earlier.parts),
+            oracle_evals: self.oracle_evals.saturating_sub(earlier.oracle_evals),
+            busy_ms: (self.busy_ms - earlier.busy_ms).max(0.0),
+            queue_wait_ms: (self.queue_wait_ms - earlier.queue_wait_ms).max(0.0),
+            // gauges: the worker's own cumulative counters and the
+            // connection's engine are latest-wins, not interval sums
+            dataset_hits: self.dataset_hits,
+            dataset_misses: self.dataset_misses,
+            problem_hits: self.problem_hits,
+            problem_misses: self.problem_misses,
+            problem_evictions: self.problem_evictions,
+            payload_bytes_binary: self
+                .payload_bytes_binary
+                .saturating_sub(earlier.payload_bytes_binary),
+            payload_bytes_json: self
+                .payload_bytes_json
+                .saturating_sub(earlier.payload_bytes_json),
+            engine: self.engine.clone(),
+            bulk_gain_calls: self.bulk_gain_calls.saturating_sub(earlier.bulk_gain_calls),
+            bulk_gain_candidates: self
+                .bulk_gain_candidates
+                .saturating_sub(earlier.bulk_gain_candidates),
+        }
+    }
+}
+
+/// Per-worker delta between two [`Backend::worker_stats`] snapshots,
+/// matched by address. Workers absent from `earlier` (joined since the
+/// snapshot) delta against a zero baseline; workers absent from `now`
+/// are dropped (they contributed nothing in the interval).
+pub fn stats_delta(now: &[WorkerStats], earlier: &[WorkerStats]) -> Vec<WorkerStats> {
+    now.iter()
+        .map(|w| match earlier.iter().find(|e| e.addr == w.addr) {
+            Some(e) => w.delta_since(e),
+            None => w.clone(),
+        })
+        .collect()
+}
+
 /// One observable state change of an in-flight round.
 ///
 /// Events stream out of a [`RoundHandle`] as they happen, so the
@@ -565,6 +614,39 @@ pub trait Backend: Send + Sync {
         Vec::new()
     }
 
+    /// [`Backend::open_round`] with a caller-chosen attribution *scope*
+    /// (`hss serve` uses one scope per job). Work executed under the
+    /// round is additionally accounted to the scope, retrievable via
+    /// [`Backend::worker_stats_scoped`] — attribution never affects
+    /// dispatch or the answer, so the default simply ignores the scope.
+    fn open_round_scoped(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        round_seed: u64,
+        _scope: u64,
+    ) -> Result<RoundSession> {
+        self.open_round(problem, compressor, round_seed)
+    }
+
+    /// Per-worker stats restricted to work submitted under `scope` via
+    /// [`Backend::open_round_scoped`]. Empty on backends without
+    /// per-scope accounting (jobs on those fall back to lifetime
+    /// snapshot deltas — see [`stats_delta`]).
+    fn worker_stats_scoped(&self, _scope: u64) -> Vec<WorkerStats> {
+        Vec::new()
+    }
+
+    /// Drop the per-scope accounting for `scope` (a job's stats were
+    /// recorded; the backend may reclaim the entries). No-op by default.
+    fn release_scope(&self, _scope: u64) {}
+
+    /// Permanently shut the backend's fleet down: [`TcpBackend`] sends
+    /// every worker the protocol `shutdown` frame and blocks until the
+    /// dispatchers exit; in-process backends have nothing to do. Called
+    /// by `hss serve` once a graceful drain completes.
+    fn shutdown_fleet(&self) {}
+
     /// Barrier wrapper over [`Backend::submit_round`]: block until every
     /// part completes and return one solution per part, order preserved.
     fn run_round(
@@ -815,6 +897,69 @@ mod tests {
             other => panic!("wrong error {other}"),
         }
         assert!(enforce_profile(&CapacityProfile::uniform(4), &parts).is_ok());
+    }
+
+    fn stats(addr: &str, parts: u64, busy: f64) -> WorkerStats {
+        WorkerStats {
+            addr: addr.into(),
+            parts,
+            oracle_evals: parts * 10,
+            busy_ms: busy,
+            queue_wait_ms: busy / 10.0,
+            dataset_hits: 7,
+            dataset_misses: 1,
+            problem_hits: 5,
+            problem_misses: 2,
+            problem_evictions: 0,
+            payload_bytes_binary: parts * 100,
+            payload_bytes_json: parts * 50,
+            engine: "native".into(),
+            bulk_gain_calls: parts * 3,
+            bulk_gain_candidates: parts * 30,
+        }
+    }
+
+    #[test]
+    fn delta_since_subtracts_sums_and_keeps_gauges() {
+        let earlier = stats("w:1", 4, 40.0);
+        let mut now = stats("w:1", 10, 100.0);
+        now.dataset_hits = 20; // gauge moved
+        now.engine = "xla".into();
+        let d = now.delta_since(&earlier);
+        assert_eq!(d.parts, 6);
+        assert_eq!(d.oracle_evals, 60);
+        assert!((d.busy_ms - 60.0).abs() < 1e-9);
+        assert!((d.queue_wait_ms - 6.0).abs() < 1e-9);
+        assert_eq!(d.payload_bytes_binary, 600);
+        assert_eq!(d.payload_bytes_json, 300);
+        assert_eq!(d.bulk_gain_calls, 18);
+        assert_eq!(d.bulk_gain_candidates, 180);
+        // gauges are latest-wins, not differences
+        assert_eq!(d.dataset_hits, 20);
+        assert_eq!(d.problem_hits, 5);
+        assert_eq!(d.engine, "xla");
+    }
+
+    #[test]
+    fn delta_since_saturates_after_a_counter_reset() {
+        let earlier = stats("w:1", 9, 90.0);
+        let now = stats("w:1", 2, 20.0); // worker restarted mid-interval
+        let d = now.delta_since(&earlier);
+        assert_eq!(d.parts, 0);
+        assert_eq!(d.busy_ms, 0.0);
+    }
+
+    #[test]
+    fn stats_delta_matches_by_addr_and_handles_joins() {
+        let earlier = vec![stats("w:1", 4, 40.0)];
+        let now = vec![stats("w:1", 6, 60.0), stats("w:2", 3, 30.0)];
+        let d = stats_delta(&now, &earlier);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].addr, "w:1");
+        assert_eq!(d[0].parts, 2);
+        // w:2 joined after the snapshot: full value is its own interval
+        assert_eq!(d[1].addr, "w:2");
+        assert_eq!(d[1].parts, 3);
     }
 
     #[test]

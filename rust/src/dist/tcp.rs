@@ -197,6 +197,11 @@ struct RoundCtx {
     /// across backends.
     evals: EvalCounter,
     tx: mpsc::Sender<Result<PartEvent>>,
+    /// Attribution scope this round was opened under
+    /// ([`Backend::open_round_scoped`]): work is *additionally*
+    /// accounted per `(scope, worker)`, so `hss serve` can report each
+    /// job's own interval. `None` for unscoped rounds (`hss run`).
+    scope: Option<u64>,
 }
 
 /// One queued (or requeued) part of an open round.
@@ -267,6 +272,11 @@ struct FleetState {
     /// Per-worker utilization/telemetry (protocol v5), keyed by address
     /// so [`Backend::worker_stats`] reports in a stable order.
     stats: BTreeMap<String, WorkerStats>,
+    /// The same accounting keyed by `(scope, addr)` for rounds opened
+    /// via [`Backend::open_round_scoped`] — each `hss serve` job reads
+    /// (and then releases) only its own slice. BTreeMap keeps per-scope
+    /// reports address-sorted like the global map.
+    scope_stats: BTreeMap<(u64, String), WorkerStats>,
     /// Compute engine requested in every worker handshake (v6) — each
     /// worker's pin may override it per connection, so a mixed fleet is
     /// fine; the granted engine lands in [`WorkerStats::engine`].
@@ -349,6 +359,7 @@ impl TcpBackend {
                 dispatchers_alive: count,
                 shutdown: None,
                 stats: BTreeMap::new(),
+                scope_stats: BTreeMap::new(),
                 engine: EngineChoice::Native,
             }),
             cv: Condvar::new(),
@@ -391,6 +402,60 @@ impl TcpBackend {
         while st.dispatchers_alive > 0 {
             st = self.fleet.wait(st);
         }
+    }
+
+    /// Shared body of [`Backend::open_round`] and
+    /// [`Backend::open_round_scoped`]: publish the round as a fleet job,
+    /// tagged with its attribution scope (if any).
+    fn open_round_inner(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        round_seed: u64,
+        scope: Option<u64>,
+    ) -> Result<RoundSession> {
+        // interned once per problem identity — NOT once per round
+        let interned = self.interner.intern(problem)?;
+        let comp_name = compressor_wire_name(compressor)?;
+        let (tx, rx) = mpsc::channel();
+        let mut st = self.fleet.lock();
+        if st.shutdown.is_some() {
+            return Err(Error::invalid("tcp backend is shut down"));
+        }
+        st.epoch += 1;
+        let epoch = st.epoch;
+        st.jobs.push_back(Job {
+            epoch,
+            ctx: Arc::new(RoundCtx {
+                spec: interned.spec,
+                spec_id: interned.id,
+                spec_bytes: interned.bytes,
+                comp_name,
+                evals: problem.evals.clone(),
+                tx,
+                scope,
+            }),
+            queue: VecDeque::new(),
+            in_flight: 0,
+            closed: false,
+            submitted: 0,
+            last_err: None,
+        });
+        drop(st);
+        // wake dispatchers now: connects and handshakes resolve while
+        // the caller is still partitioning its first parts
+        self.fleet.cv.notify_all();
+        Ok(RoundSession::new(
+            Box::new(TcpRoundSink {
+                fleet: Arc::clone(&self.fleet),
+                epoch,
+                profile: self.profile.clone(),
+                open: true,
+            }),
+            rx,
+            self.profile.clone(),
+            round_seed,
+        ))
     }
 }
 
@@ -492,47 +557,36 @@ impl Backend for TcpBackend {
         compressor: &dyn Compressor,
         round_seed: u64,
     ) -> Result<RoundSession> {
-        // interned once per problem identity — NOT once per round
-        let interned = self.interner.intern(problem)?;
-        let comp_name = compressor_wire_name(compressor)?;
-        let (tx, rx) = mpsc::channel();
+        self.open_round_inner(problem, compressor, round_seed, None)
+    }
+
+    fn open_round_scoped(
+        &self,
+        problem: &Problem,
+        compressor: &dyn Compressor,
+        round_seed: u64,
+        scope: u64,
+    ) -> Result<RoundSession> {
+        self.open_round_inner(problem, compressor, round_seed, Some(scope))
+    }
+
+    fn worker_stats_scoped(&self, scope: u64) -> Vec<WorkerStats> {
+        let st = self.fleet.lock();
+        // (scope, addr) key order → the scope's slice is address-sorted
+        st.scope_stats
+            .range((scope, String::new())..)
+            .take_while(|((s, _), _)| *s == scope)
+            .map(|(_, w)| w.clone())
+            .collect()
+    }
+
+    fn release_scope(&self, scope: u64) {
         let mut st = self.fleet.lock();
-        if st.shutdown.is_some() {
-            return Err(Error::invalid("tcp backend is shut down"));
-        }
-        st.epoch += 1;
-        let epoch = st.epoch;
-        st.jobs.push_back(Job {
-            epoch,
-            ctx: Arc::new(RoundCtx {
-                spec: interned.spec,
-                spec_id: interned.id,
-                spec_bytes: interned.bytes,
-                comp_name,
-                evals: problem.evals.clone(),
-                tx,
-            }),
-            queue: VecDeque::new(),
-            in_flight: 0,
-            closed: false,
-            submitted: 0,
-            last_err: None,
-        });
-        drop(st);
-        // wake dispatchers now: connects and handshakes resolve while
-        // the caller is still partitioning its first parts
-        self.fleet.cv.notify_all();
-        Ok(RoundSession::new(
-            Box::new(TcpRoundSink {
-                fleet: Arc::clone(&self.fleet),
-                epoch,
-                profile: self.profile.clone(),
-                open: true,
-            }),
-            rx,
-            self.profile.clone(),
-            round_seed,
-        ))
+        st.scope_stats.retain(|(s, _), _| *s != scope);
+    }
+
+    fn shutdown_fleet(&self) {
+        self.shutdown_workers();
     }
 }
 
@@ -571,14 +625,20 @@ fn check_stall(st: &mut FleetState) {
                         .last_err
                         .clone()
                         .unwrap_or_else(|| "no fitting worker".into());
+                    // a scoped round names its job, so a multi-tenant
+                    // stall report says *whose* round died
+                    let whose = match job.ctx.scope {
+                        Some(s) => format!("job scope {s}: "),
+                        None => String::new(),
+                    };
                     if avail.is_empty() {
                         format!(
-                            "part {} of {} unprocessed — all workers lost ({detail})",
+                            "{whose}part {} of {} unprocessed — all workers lost ({detail})",
                             t.idx, job.submitted
                         )
                     } else {
                         format!(
-                            "part {} of {} ({} items) exceeds every live worker's \
+                            "{whose}part {} of {} ({} items) exceeds every live worker's \
                              capacity ({detail})",
                             t.idx,
                             job.submitted,
@@ -598,6 +658,29 @@ fn check_stall(st: &mut FleetState) {
             None => pos += 1,
         }
     }
+}
+
+/// Fold one completed part's worker-reported numbers into a stats
+/// entry — shared between the global per-worker map and the per-scope
+/// slice so the two can never drift. Sums accumulate; worker-side
+/// cumulative gauges are latest-wins (an engine-silent pre-v6 frame
+/// parses as "" and must not wipe the handshake's answer).
+fn fold_done(entry: &mut WorkerStats, evals: u64, wall_ms: f64, telemetry: &Telemetry) {
+    entry.parts += 1;
+    entry.oracle_evals += evals;
+    entry.busy_ms += wall_ms;
+    entry.queue_wait_ms += telemetry.queue_wait_ms;
+    // per-request batched-eval sums (v6 engine telemetry)
+    entry.bulk_gain_calls += telemetry.bulk_gain_calls;
+    entry.bulk_gain_candidates += telemetry.bulk_gain_candidates;
+    if !telemetry.engine.is_empty() {
+        entry.engine = telemetry.engine.clone();
+    }
+    entry.dataset_hits = telemetry.dataset_hits;
+    entry.dataset_misses = telemetry.dataset_misses;
+    entry.problem_hits = telemetry.problem_hits;
+    entry.problem_misses = telemetry.problem_misses;
+    entry.problem_evictions = telemetry.problem_evictions;
 }
 
 /// What a dispatcher decided to do with the lock held.
@@ -841,11 +924,24 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                 if bytes_binary > 0 || bytes_json > 0 {
                     let addr = st.slots[id].addr.clone();
                     let entry = st.stats.entry(addr.clone()).or_insert_with(|| WorkerStats {
-                        addr,
+                        addr: addr.clone(),
                         ..WorkerStats::default()
                     });
                     entry.payload_bytes_binary += bytes_binary;
                     entry.payload_bytes_json += bytes_json;
+                    // per-scope attribution: the bytes moved on behalf
+                    // of this round's job, whatever the outcome
+                    if let Some(scope) = ctx.scope {
+                        let entry = st
+                            .scope_stats
+                            .entry((scope, addr.clone()))
+                            .or_insert_with(|| WorkerStats {
+                                addr,
+                                ..WorkerStats::default()
+                            });
+                        entry.payload_bytes_binary += bytes_binary;
+                        entry.payload_bytes_json += bytes_json;
+                    }
                 }
                 if spec_shipped {
                     // spec-byte telemetry rides the round's event
@@ -895,28 +991,23 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
                         }
                         let entry =
                             st.stats.entry(addr.clone()).or_insert_with(|| WorkerStats {
-                                addr,
+                                addr: addr.clone(),
                                 ..WorkerStats::default()
                             });
-                        entry.parts += 1;
-                        entry.oracle_evals += evals;
-                        entry.busy_ms += wall_ms;
-                        entry.queue_wait_ms += telemetry.queue_wait_ms;
-                        // per-request batched-eval sums (v6 engine
-                        // telemetry)
-                        entry.bulk_gain_calls += telemetry.bulk_gain_calls;
-                        entry.bulk_gain_candidates += telemetry.bulk_gain_candidates;
-                        // cumulative worker-side gauges: latest wins
-                        // (an engine-silent pre-v6 frame parses as ""
-                        // and must not wipe the handshake's answer)
-                        if !telemetry.engine.is_empty() {
-                            entry.engine = telemetry.engine.clone();
+                        fold_done(entry, evals, wall_ms, &telemetry);
+                        // the same completion folded into the round's
+                        // attribution scope, so a serve job's summary
+                        // covers exactly its own parts
+                        if let Some(scope) = ctx.scope {
+                            let entry = st
+                                .scope_stats
+                                .entry((scope, addr.clone()))
+                                .or_insert_with(|| WorkerStats {
+                                    addr: addr.clone(),
+                                    ..WorkerStats::default()
+                                });
+                            fold_done(entry, evals, wall_ms, &telemetry);
                         }
-                        entry.dataset_hits = telemetry.dataset_hits;
-                        entry.dataset_misses = telemetry.dataset_misses;
-                        entry.problem_hits = telemetry.problem_hits;
-                        entry.problem_misses = telemetry.problem_misses;
-                        entry.problem_evictions = telemetry.problem_evictions;
                         // fold remote oracle work in BEFORE announcing
                         // completion, so a consumer reading the shared
                         // counter at the last event sees all of it
@@ -979,10 +1070,11 @@ fn dispatcher(fleet: Arc<Fleet>, id: usize) {
             }
             Step::Exit(notify_addr) => {
                 if let Some(addr) = notify_addr {
+                    let engine = st.engine;
                     drop(st);
                     let c = match conn.take() {
                         Some(c) => Some(c),
-                        None => WorkerConn::connect(&addr).ok(),
+                        None => WorkerConn::connect(&addr, engine).ok(),
                     };
                     if let Some(mut c) = c {
                         let _ = c.roundtrip(&Request::Shutdown);

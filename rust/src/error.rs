@@ -49,6 +49,11 @@ pub enum Error {
     /// A peer spoke the `dist` protocol incorrectly (bad frame, bad
     /// message shape, version mismatch).
     Protocol(String),
+
+    /// A job was cancelled before it finished (`hss serve` cancel API
+    /// or service drain). Distinct from a failure: cancellation is a
+    /// caller decision, so nothing about the fleet is suspect.
+    Cancelled(String),
 }
 
 impl fmt::Display for Error {
@@ -72,6 +77,7 @@ impl fmt::Display for Error {
             Error::Worker(m) => write!(f, "worker panicked or disconnected: {m}"),
             Error::Transport(m) => write!(f, "transport error: {m}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
         }
     }
 }

@@ -42,6 +42,8 @@
 //! | [`data`] | §4.1 Table 2 | dataset registry, synthetic generators, wire specs |
 //! | [`bench`] | §4 | table/figure report generators |
 //! | [`lint`] | — (systems) | repo static analysis, `hss lint` (`docs/STATIC_ANALYSIS.md`) |
+//! | [`coordinator::job`] | — (systems) | a run as a first-class value: `JobSpec` → `JobRunner` → `JobOutput` |
+//! | [`serve`] | — (systems) | `hss serve` multi-tenant job service over a shared fleet (`docs/SERVE.md`) |
 //!
 //! ## Distributed execution
 //!
@@ -113,6 +115,7 @@ pub mod linalg;
 pub mod lint;
 pub mod objectives;
 pub mod runtime;
+pub mod serve;
 pub mod trace;
 pub mod util;
 

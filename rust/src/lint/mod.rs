@@ -15,7 +15,7 @@
 //! | `nan-ordering` | float comparisons go through `total_cmp` |
 //! | `relaxed-atomics` | `Ordering::Relaxed` carries a `// relaxed:` reason |
 //! | `lock-order` | the dispatcher's lock acquisition graph is acyclic |
-//! | `panic-freedom` | dist/coordinator/util-json/runtime/linalg panics carry an `// invariant:` reason |
+//! | `panic-freedom` | dist/coordinator/util-json/runtime/linalg/serve panics carry an `// invariant:` reason |
 //! | `logging` | print macros only in `util/log.rs` and `main.rs` |
 //! | `protocol-doc` | wire literals and docs/PROTOCOL.md agree both ways |
 //! | `suppression` | every `lint:allow` names a real rule and a reason |

@@ -167,14 +167,17 @@ pub fn relaxed_atomics(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) 
 /// `rust/tests/protocol_fuzz.rs`), or the compute substrate
 /// (`runtime/` engine dispatch and `linalg/` kernels now sit under
 /// every oracle call a worker serves, so a panic there is a fleet
-/// outage, not a local bug) — without an
+/// outage, not a local bug), or the job service (`serve/` threads
+/// multiplex every tenant over one fleet — a panic there takes the
+/// daemon down for all of them) — without an
 /// `// invariant: <why it holds>`.
 pub fn panic_freedom(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
     if !(relpath.starts_with("rust/src/dist/")
         || relpath.starts_with("rust/src/coordinator/")
         || relpath.starts_with("rust/src/util/json/")
         || relpath.starts_with("rust/src/runtime/")
-        || relpath.starts_with("rust/src/linalg/"))
+        || relpath.starts_with("rust/src/linalg/")
+        || relpath.starts_with("rust/src/serve/"))
     {
         return;
     }
@@ -203,8 +206,8 @@ pub fn panic_freedom(relpath: &str, lines: &[Line], out: &mut Vec<Violation>) {
                     i + 1,
                     PANIC_FREEDOM,
                     format!(
-                        "{tok} in dist/coordinator/util-json/runtime/linalg without \
-                         `// invariant:` justification"
+                        "{tok} in dist/coordinator/util-json/runtime/linalg/serve \
+                         without `// invariant:` justification"
                     ),
                 ));
             }
@@ -608,6 +611,12 @@ mod tests {
         );
         assert_eq!(
             rules_of(&lint_one("rust/src/linalg/block.rs", bad)),
+            vec![PANIC_FREEDOM]
+        );
+        // the job service joined with `hss serve`: a panic there takes
+        // every tenant down at once
+        assert_eq!(
+            rules_of(&lint_one("rust/src/serve/http.rs", bad)),
             vec![PANIC_FREEDOM]
         );
         assert!(lint_one("rust/src/algorithms/d.rs", bad).is_empty());

@@ -13,6 +13,9 @@
 //!            [--sim-straggler-prob 0.0] [--sim-straggler-ms 0] [--sim-seed 0]
 //! hss worker --listen 127.0.0.1:7070 --capacity 200 [--payload binary|json]
 //!            [--engine native|xla]
+//! hss serve  [--listen 127.0.0.1:8080] [--backend local|tcp|sim]
+//!            [--workers host:port,…] [--capacity 200] [--max-jobs 2]
+//!            [--threads 2] [--engine native|xla]   # multi-tenant job service
 //! hss plan   --n 100000 --k 50 --capacity 800    # round plan / bounds
 //! hss datasets                                    # list registry
 //! hss artifacts                                   # list AOT artifacts
@@ -22,16 +25,16 @@
 //! `hss <cmd> --help` prints the full flag reference, including the
 //! `--constraint` and `--capacity` grammars.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use hss::algorithms::{LazyGreedy, StochasticGreedy};
 use hss::config::{Algo, RunConfig};
 use hss::coordinator::capacity::CapacityProfile;
 use hss::coordinator::planner::RoundPlan;
-use hss::coordinator::{baselines, PartitionStrategy, TreeBuilder};
+use hss::coordinator::{baselines, JobEvent, JobRunner, JobSpec, PartitionStrategy};
 use hss::dist::{worker, Backend as _, BackendChoice};
 use hss::error::{Error, Result};
-use hss::runtime::accel::XlaGreedy;
+use hss::serve::{HttpServer, JobScheduler};
 use hss::util::cli::Args;
 use hss::util::log;
 
@@ -53,6 +56,7 @@ fn real_main() -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args),
         Some("worker") => cmd_worker(&args),
+        Some("serve") => cmd_serve(&args),
         Some("plan") => cmd_plan(&args),
         Some("datasets") => cmd_datasets(),
         Some("artifacts") => cmd_artifacts(),
@@ -78,11 +82,13 @@ const CAPACITY_GRAMMAR: &str =
     "MU | MU1,MU2,... | MUxCOUNT   (e.g. 200, or 500,200,200, or 200x8)";
 
 fn print_main_help() {
-    println!("usage: hss <run|worker|plan|datasets|artifacts> [flags]");
+    println!("usage: hss <run|worker|serve|plan|datasets|artifacts|lint> [flags]");
     println!();
     println!("  run        execute an experiment (see `hss run --help`)");
     println!("  worker     host one fixed-capacity machine for `run --backend tcp`");
     println!("             (see `hss worker --help`)");
+    println!("  serve      long-lived multi-tenant job service over a shared fleet");
+    println!("             (HTTP API; see `hss serve --help` and docs/SERVE.md)");
     println!("  plan       print the round plan and Prop 3.1 bounds for (n, k, capacity)");
     println!("  datasets   list the dataset registry");
     println!("  artifacts  list compiled XLA artifacts");
@@ -206,6 +212,115 @@ fn cmd_worker(args: &Args) -> Result<()> {
     worker::serve(&cfg)
 }
 
+fn print_serve_help() {
+    println!("usage: hss serve [flags]");
+    println!();
+    println!("long-lived multi-tenant job service: one shared execution backend,");
+    println!("many concurrent jobs, a dependency-free HTTP/1.1 + JSON API");
+    println!("(normative spec in docs/SERVE.md):");
+    println!("  POST /jobs            submit a job (run-config JSON minus backend keys)");
+    println!("  GET  /jobs            list jobs");
+    println!("  GET  /jobs/ID         one job's status");
+    println!("  GET  /jobs/ID/result  a completed job's result document");
+    println!("  POST /jobs/ID/cancel  request cancellation");
+    println!("  GET  /healthz         liveness + job-state counts");
+    println!("  GET  /metrics         uptime, fleet identity, global worker stats");
+    println!("  POST /shutdown        graceful drain (SIGTERM does the same)");
+    println!();
+    println!("  --listen ADDR      HTTP bind address (default 127.0.0.1:8080;");
+    println!("                     port 0 = ephemeral, announced on stdout)");
+    println!("  --backend B        local|tcp|sim — the shared fleet every job runs on");
+    println!("  --workers H:P,...  tcp worker addresses (required with --backend tcp)");
+    println!("  --capacity PROFILE fleet capacity profile (default 200):");
+    println!("                       {CAPACITY_GRAMMAR}");
+    println!("  --max-jobs N       concurrent-job cap; further jobs queue FIFO (default 2)");
+    println!("  --threads N        local thread-pool width (default 2)");
+    println!("  --engine E         compute engine requested from workers: native|xla");
+    println!("  --log-level L      error|warn|info|debug (default warn)");
+    println!();
+    println!("admission checks each job's (n, k) against the fleet profile up");
+    println!("front; concurrent jobs interleave round sessions fairly (ticket");
+    println!("FIFO) and report per-job worker utilization. On drain the fleet's");
+    println!("workers receive the protocol shutdown frame.");
+}
+
+/// SIGTERM observation for the serve loop, dependency-free: libc's
+/// `signal(2)` via a one-line FFI declaration, flipping an atomic the
+/// accept loop polls.
+static TERM_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_terminate(_signum: i32) {
+    TERM_REQUESTED.store(true, Ordering::SeqCst);
+}
+
+fn install_term_handler() {
+    const SIGTERM: i32 = 15;
+    const SIGINT: i32 = 2;
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    // best effort: if installation fails the default disposition
+    // (immediate exit) remains — no worse than not handling at all
+    unsafe {
+        signal(SIGTERM, on_terminate as usize);
+        signal(SIGINT, on_terminate as usize);
+    }
+}
+
+/// `hss serve`: host the multi-tenant job service (`docs/SERVE.md`).
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        print_serve_help();
+        return Ok(());
+    }
+    let listen = args.get_or("listen", "127.0.0.1:8080").to_string();
+    let max_jobs = args.usize("max-jobs", 2)?;
+    // the service's fleet is configured exactly like a run's backend —
+    // reuse RunConfig so grammar and defaults stay in one place
+    let mut cfg = RunConfig::default();
+    if let Some(text) = args.get("capacity") {
+        cfg.capacity = CapacityProfile::parse(text)?;
+    }
+    cfg.threads = args.usize("threads", cfg.threads)?;
+    if let Some(e) = args.get("engine") {
+        cfg.engine = hss::runtime::EngineChoice::parse(e)?;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendChoice::parse(b)?;
+    }
+    if let BackendChoice::Tcp { workers } = &mut cfg.backend {
+        if let Some(list) = args.get("workers") {
+            *workers = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+        }
+        if workers.is_empty() {
+            return Err(Error::invalid(
+                "--backend tcp requires --workers host:port[,host:port…]",
+            ));
+        }
+    }
+    let backend = cfg.build_backend()?;
+    let scheduler = JobScheduler::new(Arc::clone(&backend), max_jobs);
+    let server = HttpServer::bind(&listen, Arc::clone(&scheduler))?;
+    install_term_handler();
+    println!(
+        "hss-serve listening on {} backend={} capacity={} max-jobs={}",
+        server.local_addr(),
+        backend.name(),
+        cfg.capacity,
+        max_jobs
+    );
+    server.run(&|| TERM_REQUESTED.load(Ordering::SeqCst));
+    // drained: every admitted job finished — the shared fleet can go
+    // down for real (tcp workers receive the protocol shutdown frame)
+    backend.shutdown_fleet();
+    println!("hss-serve drained; fleet shut down");
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     if args.flag("help") {
         print_run_help();
@@ -301,126 +416,24 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let backend = cfg.build_backend()?;
 
-    let (problem, engine) = cfg.problem_with_engine()?;
-    // XLA device compressors are not wire-representable; on non-local
-    // backends the device handle stays out of compressor dispatch and
-    // the engine choice instead rides the hello handshake to each worker
-    let engine = if cfg.backend == BackendChoice::Local { engine } else { None };
-    println!(
-        "dataset={} n={} d={} objective={} constraint={} k={} capacity={} algo={} backend={} partitioner={} engine={}",
-        cfg.dataset,
-        problem.n(),
-        problem.dataset.d,
-        problem.objective.name(),
-        problem.constraint.name(),
-        cfg.k,
-        cfg.capacity,
-        cfg.algo.name(),
-        backend.name(),
-        cfg.partitioner.name(),
-        problem.compute.name(),
-    );
-
-    let run_start = std::time::Instant::now();
-    let mut values = hss::util::stats::Summary::new();
-    for trial in 0..cfg.trials {
-        let seed = cfg.seed + trial as u64;
-        let t0 = std::time::Instant::now();
-        let (value, detail) = match &cfg.algo {
-            Algo::Centralized => {
-                let s = baselines::centralized(&problem)?;
-                (s.value, format!("|S|={}", s.items.len()))
-            }
-            Algo::Random => {
-                let s = baselines::random_subset(&problem, seed)?;
-                (s.value, format!("|S|={}", s.items.len()))
-            }
-            Algo::RandGreedi | Algo::Greedi => {
-                let run = |p: &_, c: &dyn hss::algorithms::Compressor| match cfg.algo {
-                    Algo::RandGreedi => baselines::rand_greedi_on(p, backend.as_ref(), c, seed),
-                    _ => baselines::greedi_on(p, backend.as_ref(), c, seed),
-                };
-                let res = match &engine {
-                    Some(e) => run(&problem, &XlaGreedy::new(e.clone()))?,
-                    None => run(&problem, &LazyGreedy::new())?,
-                };
-                (
-                    res.solution.value,
-                    format!("machines={} union={}", res.machines, res.union_size),
-                )
-            }
-            Algo::Tree | Algo::StochasticTree { .. } => {
-                let compressor: Arc<dyn hss::algorithms::Compressor> =
-                    match (&cfg.algo, &engine) {
-                        (Algo::Tree, Some(e)) => Arc::new(XlaGreedy::new(e.clone())),
-                        (Algo::Tree, None) => Arc::new(LazyGreedy::new()),
-                        (Algo::StochasticTree { epsilon }, Some(e)) => {
-                            Arc::new(XlaGreedy::stochastic(e.clone(), *epsilon))
-                        }
-                        (Algo::StochasticTree { epsilon }, None) => {
-                            Arc::new(StochasticGreedy::new(*epsilon))
-                        }
-                        _ => unreachable!(),
-                    };
-                let res = TreeBuilder::for_profile(cfg.capacity.clone())
-                    .compressor(compressor)
-                    .partition_mode(cfg.partitioner)
-                    .threads(cfg.threads)
-                    .backend(backend.clone())
-                    .build()
-                    .run(&problem, seed)?;
-                let requeue = if res.requeued_parts > 0 {
-                    format!(" requeued={}", res.requeued_parts)
-                } else {
-                    String::new()
-                };
-                let overlap = if res.straggler_overlap_ms > 0.0 {
-                    format!(" overlapMs={:.1}", res.straggler_overlap_ms)
-                } else {
-                    String::new()
-                };
-                // interning telemetry: after round 0 this stays flat —
-                // compress requests ship an O(1) problem id, not the spec
-                let spec = if res.spec_bytes > 0 {
-                    format!(" specKB={:.1}", res.spec_bytes as f64 / 1e3)
-                } else {
-                    String::new()
-                };
-                (
-                    res.best.value,
-                    format!(
-                        "rounds={}/{} machines={} evals={} shuffleKB={:.1} residentMB={:.1}{spec}{requeue}{overlap}",
-                        res.rounds,
-                        res.round_bound,
-                        res.total_machines,
-                        res.oracle_evals,
-                        res.bytes_shuffled as f64 / 1e3,
-                        res.rows_resident_bytes as f64 / 1e6
-                    ),
-                )
-            }
-        };
-        values.push(value);
-        println!(
-            "trial {trial}: f(S) = {value:.6}  [{detail}]  ({:.0} ms)",
-            t0.elapsed().as_secs_f64() * 1e3
-        );
-    }
-    if cfg.trials > 1 {
-        println!(
-            "mean f(S) = {:.6} ± {:.6} over {} trials",
-            values.mean(),
-            values.stddev(),
-            cfg.trials
-        );
+    // a run is one Job: the CLI wraps its resolved config in a
+    // JobSpec and prints the runner's events as they stream — the
+    // same JobSpec → JobRunner layer `hss serve` executes through,
+    // so the one-shot path and the service path cannot drift
+    let spec = JobSpec::from_config(cfg);
+    let out = JobRunner::new(backend).run_with(&spec, &mut |event| match event {
+        JobEvent::Started(header) => println!("{}", header.to_line()),
+        JobEvent::Trial(trial) => println!("{}", trial.to_line()),
+    })?;
+    if out.trials.len() > 1 {
+        println!("{}", out.mean_line());
     }
     // protocol-v5 run summary: per-worker utilization and straggler
     // attribution (empty on backends without per-worker accounting)
-    let wstats = backend.worker_stats();
-    if !wstats.is_empty() {
-        let run_ms = run_start.elapsed().as_secs_f64() * 1e3;
+    if !out.worker_stats.is_empty() {
+        let run_ms = out.wall_ms;
         println!("worker utilization over {run_ms:.0} ms:");
-        for w in &wstats {
+        for w in &out.worker_stats {
             let util = if run_ms > 0.0 { 100.0 * w.busy_ms / run_ms } else { 0.0 };
             println!(
                 "  {:<21} parts={} evals={} busy={:.0}ms ({:.0}%) queueWait={:.1}ms \
@@ -461,7 +474,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         println!("trace: {events} events -> {path}");
     }
-    if let Some(e) = &engine {
+    if let Some(e) = &out.engine {
         let (calls, compiles, exec_ns, upload, hits) = e.stats().snapshot();
         println!(
             "engine: {calls} calls, {compiles} compiles, {:.1} ms exec, {:.1} MB uploaded, {hits} cache hits",
@@ -545,8 +558,8 @@ fn print_lint_help() {
     println!("  lock-order       cross-function lock-acquisition cycles in the");
     println!("                   dispatcher files (static deadlock detection)");
     println!("  panic-freedom    unwrap/expect/panic in non-test dist/, coordinator/,");
-    println!("                   util/json/, runtime/ and linalg/ (the wire decode and");
-    println!("                   kernel paths) need an adjacent");
+    println!("                   util/json/, runtime/, linalg/ and serve/ (the wire");
+    println!("                   decode, kernel and service paths) need an adjacent");
     println!("                   `// invariant: <reason>` justification");
     println!("  logging          raw print macros outside util/log.rs and main.rs");
     println!("  protocol-doc     wire field literals must appear in docs/PROTOCOL.md,");

@@ -1,0 +1,418 @@
+//! Hand-rolled HTTP/1.1 front-end for the job service — dependency
+//! free, like the rest of the crate. One short-lived thread per
+//! connection, `Connection: close` on every response, JSON bodies
+//! rendered by [`crate::util::json`]. The wire surface is documented
+//! normatively in `docs/SERVE.md`:
+//!
+//! | route                      | success | errors        |
+//! |----------------------------|---------|---------------|
+//! | `POST /jobs`               | 201     | 400, 503      |
+//! | `GET /jobs`                | 200     |               |
+//! | `GET /jobs/:id`            | 200     | 404           |
+//! | `GET /jobs/:id/result`     | 200     | 404, 409      |
+//! | `POST /jobs/:id/cancel`    | 200     | 404, 409      |
+//! | `GET /healthz`             | 200     |               |
+//! | `GET /metrics`             | 200     |               |
+//! | `POST /shutdown`           | 202     |               |
+//!
+//! The accept loop polls non-blocking so it can interleave three
+//! duties: accepting connections, noticing the caller's stop signal
+//! (SIGTERM in `hss serve`) and beginning a drain, and exiting once
+//! the scheduler reports [`JobScheduler::drained`].
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::serve::{status_json, JobScheduler, JobSpec, SubmitRejected};
+use crate::util::json::{self, Json};
+
+/// Largest request head (request line + headers) we accept.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Largest request body (job specs are small JSON documents).
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+/// Accept-loop poll interval while idle.
+const POLL: Duration = Duration::from_millis(25);
+/// Per-connection socket read/write budget.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The daemon: a bound listener plus the scheduler it fronts.
+pub struct HttpServer {
+    listener: TcpListener,
+    scheduler: Arc<JobScheduler>,
+}
+
+impl HttpServer {
+    /// Bind the service socket. `addr` is `host:port`; port 0 picks a
+    /// free port (tests use this).
+    pub fn bind(addr: &str, scheduler: Arc<JobScheduler>) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::invalid(format!("bind {addr}: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::invalid(format!("set_nonblocking: {e}")))?;
+        Ok(HttpServer { listener, scheduler })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> String {
+        match self.listener.local_addr() {
+            Ok(a) => a.to_string(),
+            Err(_) => "unknown".into(),
+        }
+    }
+
+    /// Serve until drained. `stop` is polled every loop tick; once it
+    /// returns true (e.g. SIGTERM observed) a drain begins, exactly as
+    /// if `POST /shutdown` had been received. The loop returns when
+    /// the scheduler is drained — the caller then shuts the fleet down.
+    pub fn run(&self, stop: &dyn Fn() -> bool) {
+        loop {
+            if stop() && !self.scheduler.draining() {
+                self.scheduler.begin_drain();
+            }
+            if self.scheduler.drained() {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let sched = Arc::clone(&self.scheduler);
+                    let handler = std::thread::Builder::new()
+                        .name("hss-serve-conn".into())
+                        .spawn(move || handle_connection(stream, &sched));
+                    // spawn failure just drops the connection; the
+                    // client sees a reset and retries
+                    drop(handler);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(POLL);
+                }
+                Err(_) => std::thread::sleep(POLL),
+            }
+        }
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+fn handle_connection(mut stream: TcpStream, scheduler: &Arc<JobScheduler>) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let (code, body) = match read_request(&mut stream) {
+        Ok(Some(req)) => route(scheduler, &req),
+        Ok(None) => (400, error_json("malformed HTTP request")),
+        Err(_) => return, // client went away mid-request
+    };
+    write_response(&mut stream, code, &body);
+}
+
+/// Read and parse one request. `Ok(None)` means the bytes arrived but
+/// were not parseable HTTP (the caller answers 400); `Err` means the
+/// socket failed.
+fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<Request>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 2048];
+    // read until the blank line terminating the head
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Ok(None);
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = match parts.next() {
+        Some(m) => m.to_string(),
+        None => return Ok(None),
+    };
+    let path = match parts.next() {
+        Some(p) => p.to_string(),
+        None => return Ok(None),
+    };
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Ok(None);
+    }
+    // body bytes: whatever followed the head in the buffer, then the rest
+    let mut body_bytes: Vec<u8> = buf[head_end + 4..].to_vec();
+    while body_bytes.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        body_bytes.extend_from_slice(&chunk[..n]);
+    }
+    body_bytes.truncate(content_length);
+    let body = String::from_utf8_lossy(&body_bytes).into_owned();
+    Ok(Some(Request { method, path, body }))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn write_response(stream: &mut TcpStream, code: u16, body: &Json) {
+    let reason = match code {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    let payload = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(payload.as_bytes());
+    let _ = stream.flush();
+}
+
+fn error_json(message: &str) -> Json {
+    json::obj(vec![("error", json::s(message))])
+}
+
+/// Dispatch one parsed request against the scheduler.
+fn route(scheduler: &Arc<JobScheduler>, req: &Request) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, scheduler.health_json()),
+        ("GET", "/metrics") => (200, scheduler.metrics_json()),
+        ("POST", "/shutdown") => {
+            scheduler.begin_drain();
+            (202, json::obj(vec![("status", json::s("draining"))]))
+        }
+        ("POST", "/jobs") => submit(scheduler, &req.body),
+        ("GET", "/jobs") => {
+            let jobs: Vec<Json> =
+                scheduler.list().iter().map(status_json).collect();
+            (200, json::obj(vec![("jobs", Json::Arr(jobs))]))
+        }
+        (method, path) => match parse_job_path(path) {
+            Some((id, action)) => job_route(scheduler, method, id, action),
+            None => (404, error_json("no such route")),
+        },
+    }
+}
+
+fn submit(scheduler: &Arc<JobScheduler>, body: &str) -> (u16, Json) {
+    let spec = match JobSpec::from_service_json(body) {
+        Ok(spec) => spec,
+        Err(e) => return (400, error_json(&e.to_string())),
+    };
+    match scheduler.submit(spec) {
+        Ok(id) => {
+            let doc = match scheduler.status(id) {
+                Some(st) => status_json(&st),
+                None => json::obj(vec![("id", json::num(id as f64))]),
+            };
+            (201, doc)
+        }
+        Err(SubmitRejected::Draining) => {
+            (503, error_json("service is draining; not accepting jobs"))
+        }
+        Err(SubmitRejected::Invalid(m)) => (400, error_json(&m)),
+    }
+}
+
+/// Split `/jobs/:id`, `/jobs/:id/result`, `/jobs/:id/cancel` into the
+/// id and the trailing action (`""` for the bare resource).
+fn parse_job_path(path: &str) -> Option<(u64, &str)> {
+    let rest = path.strip_prefix("/jobs/")?;
+    let (id_str, action) = match rest.split_once('/') {
+        Some((id, action)) => (id, action),
+        None => (rest, ""),
+    };
+    let id = id_str.parse::<u64>().ok()?;
+    Some((id, action))
+}
+
+fn job_route(
+    scheduler: &Arc<JobScheduler>,
+    method: &str,
+    id: u64,
+    action: &str,
+) -> (u16, Json) {
+    let status = match scheduler.status(id) {
+        Some(st) => st,
+        None => return (404, error_json(&format!("no such job: {id}"))),
+    };
+    match (method, action) {
+        ("GET", "") => (200, status_json(&status)),
+        ("GET", "result") => match scheduler.result(id) {
+            Some(doc) => (200, doc),
+            // known job, but nothing to fetch: still running, failed,
+            // or cancelled — the status document says which
+            None => (409, status_json(&status)),
+        },
+        ("POST", "cancel") => match scheduler.cancel(id) {
+            Ok(st) => (200, status_json(&st)),
+            // raced to terminal between the lookup and the cancel
+            Err(e) => (409, error_json(&e.to_string())),
+        },
+        _ => (405, error_json("method not allowed for this resource")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::capacity::CapacityProfile;
+    use crate::dist::{Backend, LocalBackend};
+
+    fn server() -> (HttpServer, Arc<JobScheduler>) {
+        let backend: Arc<dyn Backend> = Arc::new(LocalBackend::new(200));
+        let scheduler = JobScheduler::new(backend, 2);
+        let server = HttpServer::bind("127.0.0.1:0", Arc::clone(&scheduler))
+            .expect("bind on a free port");
+        (server, scheduler)
+    }
+
+    /// Minimal blocking HTTP client for the tests.
+    fn request(addr: &str, method: &str, path: &str, body: &str) -> (u16, Json) {
+        let mut stream = TcpStream::connect(addr).expect("connect to test server");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(head.as_bytes()).expect("send head");
+        stream.write_all(body.as_bytes()).expect("send body");
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).expect("read response");
+        let code: u16 = raw
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse().ok())
+            .expect("status code");
+        let payload = raw.split("\r\n\r\n").nth(1).unwrap_or("");
+        let json = Json::parse(payload).unwrap_or(Json::Null);
+        (code, json)
+    }
+
+    fn spec_json() -> String {
+        r#"{"dataset":"tiny-2k","algo":"tree","k":5,"capacity":"200","trials":1,"seed":7}"#
+            .to_string()
+    }
+
+    #[test]
+    fn end_to_end_submit_poll_result_and_error_paths() {
+        let (server, scheduler) = server();
+        let addr = server.local_addr();
+        let sched = Arc::clone(&scheduler);
+        let serving =
+            std::thread::spawn(move || server.run(&|| false));
+
+        // health before any job
+        let (code, health) = request(&addr, "GET", "/healthz", "");
+        assert_eq!(code, 200);
+        assert_eq!(health.get("status").and_then(Json::as_str), Some("serving"));
+
+        // bad spec → 400; unknown route → 404; unknown job → 404
+        let (code, _) = request(&addr, "POST", "/jobs", "{not json");
+        assert_eq!(code, 400);
+        let (code, _) = request(&addr, "GET", "/nope", "");
+        assert_eq!(code, 404);
+        let (code, _) = request(&addr, "GET", "/jobs/42", "");
+        assert_eq!(code, 404);
+
+        // a spec that names a backend is refused: the service owns it
+        let (code, err) = request(
+            &addr,
+            "POST",
+            "/jobs",
+            r#"{"dataset":"tiny-2k","k":5,"backend":"local"}"#,
+        );
+        assert_eq!(code, 400);
+        let msg = err.get("error").and_then(Json::as_str).unwrap_or("");
+        assert!(msg.contains("service owns the backend"), "got: {msg}");
+
+        // happy path: submit, poll to terminal, fetch the result
+        let (code, created) = request(&addr, "POST", "/jobs", &spec_json());
+        assert_eq!(code, 201);
+        let id = created
+            .get("id")
+            .and_then(Json::as_usize)
+            .expect("created id") as u64;
+        sched.wait_terminal(id);
+        let (code, status) = request(&addr, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(code, 200);
+        assert_eq!(
+            status.get("state").and_then(Json::as_str),
+            Some("completed")
+        );
+        let (code, result) =
+            request(&addr, "GET", &format!("/jobs/{id}/result"), "");
+        assert_eq!(code, 200);
+        assert!(result.get("mean").is_some());
+        assert!(result
+            .get("trials")
+            .and_then(Json::as_arr)
+            .map(|t| !t.is_empty())
+            .unwrap_or(false));
+
+        // cancel after completion conflicts
+        let (code, _) =
+            request(&addr, "POST", &format!("/jobs/{id}/cancel"), "");
+        assert_eq!(code, 409);
+
+        // drain: new submissions 503, then the loop exits once idle
+        let (code, _) = request(&addr, "POST", "/shutdown", "");
+        assert_eq!(code, 202);
+        let (code, _) = request(&addr, "POST", "/jobs", &spec_json());
+        assert_eq!(code, 503);
+        serving.join().expect("server thread exits after drain");
+        assert!(sched.drained());
+    }
+
+    #[test]
+    fn job_paths_parse_strictly() {
+        assert_eq!(parse_job_path("/jobs/7"), Some((7, "")));
+        assert_eq!(parse_job_path("/jobs/7/result"), Some((7, "result")));
+        assert_eq!(parse_job_path("/jobs/7/cancel"), Some((7, "cancel")));
+        assert_eq!(parse_job_path("/jobs/abc"), None);
+        assert_eq!(parse_job_path("/other"), None);
+    }
+
+    #[test]
+    fn capacity_profile_in_metrics_matches_backend() {
+        let (server, scheduler) = server();
+        let addr = server.local_addr();
+        let serving = std::thread::spawn(move || server.run(&|| false));
+        let (code, metrics) = request(&addr, "GET", "/metrics", "");
+        assert_eq!(code, 200);
+        let cap = metrics
+            .get("fleet")
+            .and_then(|f| f.get("capacity"))
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        assert_eq!(cap, Some(CapacityProfile::uniform(200).to_string()));
+        scheduler.begin_drain();
+        serving.join().expect("server thread exits after drain");
+    }
+}

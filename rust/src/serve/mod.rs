@@ -1,0 +1,795 @@
+//! `hss serve` — the multi-tenant job service over a shared fleet.
+//!
+//! The paper's framework assumes the *fleet* is the scarce, long-lived
+//! resource; this module gives it the matching deployment shape: a
+//! long-lived daemon that owns one [`Backend`] and runs many
+//! independent jobs ([`crate::coordinator::job`]) concurrently over it.
+//!
+//! * [`JobScheduler`] — admission, execution and lifecycle. Submissions
+//!   are validated against the fleet's [`CapacityProfile`] (a job whose
+//!   `(n, k)` cannot be planned on this fleet is rejected up front), at
+//!   most `max_jobs` run concurrently (the rest queue FIFO), and every
+//!   job gets a private cancel flag, per-job [`WorkerStats`] (scoped
+//!   attribution via [`Backend::open_round_scoped`]) and a per-job
+//!   trace track (`job-<id>`).
+//! * **Fairness** — concurrent jobs interleave their round sessions
+//!   through a ticket-FIFO [`RoundGate`]: each round-open takes a turn
+//!   in strict arrival order, so two ready jobs alternate rounds into
+//!   the backend's open-round FIFO instead of one starving the other.
+//! * **Determinism** — a job's answer is produced by the same
+//!   [`JobRunner`] the CLI uses, against the same backend contract;
+//!   scheduling, interleaving and attribution never touch seeds or
+//!   solutions, so a job's result is bit-identical to its serial
+//!   single-job run.
+//! * [`http`] — the hand-rolled dependency-free HTTP/1.1 + JSON API
+//!   (`POST /jobs`, `GET /jobs/:id`, `GET /jobs/:id/result`,
+//!   `POST /jobs/:id/cancel`, `GET /healthz`, `GET /metrics`,
+//!   `POST /shutdown`), documented normatively in `docs/SERVE.md`.
+//!
+//! Graceful drain: [`JobScheduler::begin_drain`] (the `POST /shutdown`
+//! route and SIGTERM both call it) stops admitting, lets queued and
+//! in-flight jobs finish, and [`JobScheduler::drained`] flips once the
+//! service is idle — at which point the daemon sends the fleet the
+//! protocol `shutdown` frame via [`Backend::shutdown_fleet`].
+
+pub mod http;
+
+pub use http::HttpServer;
+
+pub use crate::coordinator::job::JobSpec;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::algorithms::Compressor;
+use crate::coordinator::capacity::CapacityProfile;
+use crate::coordinator::job::{JobEvent, JobOutput, JobRunner};
+use crate::coordinator::planner::RoundPlan;
+use crate::data::registry;
+use crate::dist::{Backend, RoundSession, WorkerStats};
+use crate::error::{Error, Result};
+use crate::trace;
+use crate::util::json::{self, Json};
+
+/// Lifecycle of one submitted job. Transitions:
+/// `Queued → Running → {Completed, Failed, Cancelled}`, plus the
+/// short-circuit `Queued → Cancelled` for jobs cancelled before they
+/// start. Terminal states never change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Completed | JobState::Failed | JobState::Cancelled
+        )
+    }
+}
+
+/// Why a submission was refused — typed so the HTTP layer maps it to
+/// the right status code (503 while draining, 400 for a bad spec).
+#[derive(Debug)]
+pub enum SubmitRejected {
+    /// The service is draining: no new work is admitted.
+    Draining,
+    /// The spec cannot run on this fleet (unknown dataset, unplannable
+    /// `(n, k, capacity)`, …).
+    Invalid(String),
+}
+
+impl std::fmt::Display for SubmitRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitRejected::Draining => write!(f, "service is draining"),
+            SubmitRejected::Invalid(m) => write!(f, "invalid job spec: {m}"),
+        }
+    }
+}
+
+/// A point-in-time, lock-free view of one job, cheap to clone out of
+/// the scheduler for status endpoints and tests.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    pub id: u64,
+    pub state: JobState,
+    /// One-line spec summary (`dataset=… algo=… k=… trials=…`).
+    pub summary: String,
+    pub trials_done: usize,
+    pub trials_total: usize,
+    /// Failure detail once `state == Failed` (or the cancel reason).
+    pub error: Option<String>,
+    /// Milliseconds from service start to submission.
+    pub submitted_ms: f64,
+    /// Total job wall time once terminal.
+    pub wall_ms: Option<f64>,
+}
+
+struct JobRecord {
+    id: u64,
+    spec: JobSpec,
+    state: JobState,
+    cancel: Arc<AtomicBool>,
+    trials_done: usize,
+    error: Option<String>,
+    submitted_ms: f64,
+    wall_ms: Option<f64>,
+    /// The resolved experiment banner, once the job starts.
+    header_line: Option<String>,
+    /// The full result document, rendered at completion (so readers
+    /// never need the non-clonable [`JobOutput`] under a lock).
+    result: Option<Json>,
+}
+
+impl JobRecord {
+    fn status(&self) -> JobStatus {
+        JobStatus {
+            id: self.id,
+            state: self.state,
+            summary: self.spec.summary(),
+            trials_done: self.trials_done,
+            trials_total: self.spec.config.trials,
+            error: self.error.clone(),
+            submitted_ms: self.submitted_ms,
+            wall_ms: self.wall_ms,
+        }
+    }
+}
+
+struct SchedState {
+    jobs: BTreeMap<u64, JobRecord>,
+    /// Admitted jobs waiting for a run slot, FIFO.
+    queue: VecDeque<u64>,
+    running: usize,
+    draining: bool,
+    next_id: u64,
+}
+
+/// Ticket-FIFO turnstile over round opens: concurrent jobs' rounds
+/// enter the shared backend in strict arrival order, so ready jobs
+/// alternate (round-robin) instead of racing an unfair mutex. The turn
+/// is held only across the `open_round` call itself — never across a
+/// round's execution — so the gate orders admission without
+/// serializing compute.
+struct RoundGate {
+    state: Mutex<(u64, u64)>, // (next_ticket, now_serving)
+    cv: Condvar,
+}
+
+impl RoundGate {
+    fn new() -> RoundGate {
+        RoundGate { state: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) -> GateTurn<'_> {
+        let mut st = self
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        let ticket = st.0;
+        st.0 += 1;
+        while st.1 != ticket {
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        GateTurn { gate: self }
+    }
+}
+
+/// Holding a turn; dropping it serves the next ticket.
+struct GateTurn<'a> {
+    gate: &'a RoundGate,
+}
+
+impl Drop for GateTurn<'_> {
+    fn drop(&mut self) {
+        let mut st = self
+            .gate
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        st.1 += 1;
+        self.gate.cv.notify_all();
+    }
+}
+
+/// The backend one tenant job sees: every round it opens is tagged with
+/// the job's scope (per-job [`WorkerStats`] attribution), takes a fair
+/// turn through the shared [`RoundGate`], and observes the job's cancel
+/// flag at round boundaries. Stats queries return only the job's own
+/// slice. A tenant can never shut the shared fleet down.
+struct TenantBackend {
+    inner: Arc<dyn Backend>,
+    scope: u64,
+    gate: Arc<RoundGate>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl Backend for TenantBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn profile(&self) -> CapacityProfile {
+        self.inner.profile()
+    }
+
+    fn open_round(
+        &self,
+        problem: &crate::objectives::Problem,
+        compressor: &dyn Compressor,
+        round_seed: u64,
+    ) -> Result<RoundSession> {
+        if self.cancel.load(Ordering::SeqCst) {
+            return Err(Error::Cancelled(
+                "job cancelled at a round boundary".into(),
+            ));
+        }
+        let turn = self.gate.acquire();
+        let session =
+            self.inner
+                .open_round_scoped(problem, compressor, round_seed, self.scope);
+        drop(turn);
+        session
+    }
+
+    fn worker_stats(&self) -> Vec<WorkerStats> {
+        // the job's own slice; backends without scoped accounting
+        // return empty and the runner falls back to snapshot deltas
+        self.inner.worker_stats_scoped(self.scope)
+    }
+}
+
+/// The service core: admits, queues, executes and tracks jobs over one
+/// shared backend. All methods are callable from any thread.
+pub struct JobScheduler {
+    backend: Arc<dyn Backend>,
+    max_jobs: usize,
+    gate: Arc<RoundGate>,
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    started: Instant,
+}
+
+impl JobScheduler {
+    /// `max_jobs` is the concurrent-execution cap (further admitted
+    /// jobs queue FIFO); it is clamped to at least 1.
+    pub fn new(backend: Arc<dyn Backend>, max_jobs: usize) -> Arc<JobScheduler> {
+        Arc::new(JobScheduler {
+            backend,
+            max_jobs: max_jobs.max(1),
+            gate: Arc::new(RoundGate::new()),
+            state: Mutex::new(SchedState {
+                jobs: BTreeMap::new(),
+                queue: VecDeque::new(),
+                running: 0,
+                draining: false,
+                next_id: 1,
+            }),
+            cv: Condvar::new(),
+            started: Instant::now(),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, SchedState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn wait<'a>(
+        &'a self,
+        guard: MutexGuard<'a, SchedState>,
+    ) -> MutexGuard<'a, SchedState> {
+        self.cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn uptime_ms(&self) -> f64 {
+        self.started.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Admit a job: validate it against the fleet profile, queue it,
+    /// and start it if a run slot is free. Returns the job id.
+    pub fn submit(
+        self: &Arc<Self>,
+        spec: JobSpec,
+    ) -> std::result::Result<u64, SubmitRejected> {
+        // feasibility against THIS fleet, before anything queues: the
+        // dataset must resolve and (n, k) must be plannable on the
+        // fleet's capacity profile
+        let feasible = registry::spec(&spec.config.dataset)
+            .map_err(|e| SubmitRejected::Invalid(e.to_string()))?;
+        RoundPlan::for_profile(feasible.n(), spec.config.k, &self.backend.profile())
+            .map_err(|e| SubmitRejected::Invalid(e.to_string()))?;
+        let id = {
+            let mut st = self.lock();
+            if st.draining {
+                return Err(SubmitRejected::Draining);
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            st.jobs.insert(
+                id,
+                JobRecord {
+                    id,
+                    spec,
+                    state: JobState::Queued,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    trials_done: 0,
+                    error: None,
+                    submitted_ms: self.uptime_ms(),
+                    wall_ms: None,
+                    header_line: None,
+                    result: None,
+                },
+            );
+            st.queue.push_back(id);
+            id
+        };
+        if trace::enabled() {
+            trace::instant(
+                &format!("job-{id}"),
+                "job.submitted",
+                vec![("id", trace::ArgValue::U64(id))],
+            );
+        }
+        self.cv.notify_all();
+        self.pump();
+        Ok(id)
+    }
+
+    /// Start queued jobs while run slots are free.
+    fn pump(self: &Arc<Self>) {
+        loop {
+            let id = {
+                let mut st = self.lock();
+                if st.running >= self.max_jobs {
+                    return;
+                }
+                let id = match st.queue.pop_front() {
+                    Some(id) => id,
+                    None => return,
+                };
+                // a queued job cancelled before its slot never runs
+                if let Some(rec) = st.jobs.get_mut(&id) {
+                    if rec.state != JobState::Queued {
+                        continue;
+                    }
+                    rec.state = JobState::Running;
+                }
+                st.running += 1;
+                id
+            };
+            let me = Arc::clone(self);
+            let spawned = std::thread::Builder::new()
+                .name(format!("hss-job-{id}"))
+                .spawn(move || me.execute(id));
+            if spawned.is_err() {
+                let mut st = self.lock();
+                st.running -= 1;
+                if let Some(rec) = st.jobs.get_mut(&id) {
+                    rec.state = JobState::Failed;
+                    rec.error = Some("could not spawn job thread".into());
+                }
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// One job's whole life, on its own thread.
+    fn execute(self: &Arc<Self>, id: u64) {
+        let (spec, cancel) = {
+            let st = self.lock();
+            match st.jobs.get(&id) {
+                Some(rec) => (rec.spec.clone(), Arc::clone(&rec.cancel)),
+                None => return,
+            }
+        };
+        if trace::enabled() {
+            trace::instant(
+                &format!("job-{id}"),
+                "job.started",
+                vec![("id", trace::ArgValue::U64(id))],
+            );
+        }
+        let tenant: Arc<dyn Backend> = Arc::new(TenantBackend {
+            inner: Arc::clone(&self.backend),
+            scope: id,
+            gate: Arc::clone(&self.gate),
+            cancel: Arc::clone(&cancel),
+        });
+        let runner = JobRunner::new(tenant).with_cancel(Arc::clone(&cancel));
+        let t0 = Instant::now();
+        let outcome = runner.run_with(&spec, &mut |ev| match ev {
+            JobEvent::Started(header) => {
+                let mut st = self.lock();
+                if let Some(rec) = st.jobs.get_mut(&id) {
+                    rec.header_line = Some(header.to_line());
+                }
+                self.cv.notify_all();
+            }
+            JobEvent::Trial(trial) => {
+                if trace::enabled() {
+                    trace::instant(
+                        &format!("job-{id}"),
+                        "job.trial",
+                        vec![
+                            ("trial", trace::ArgValue::U64(trial.trial as u64)),
+                            ("value", trace::ArgValue::F64(trial.value)),
+                        ],
+                    );
+                }
+                let mut st = self.lock();
+                if let Some(rec) = st.jobs.get_mut(&id) {
+                    rec.trials_done += 1;
+                }
+                self.cv.notify_all();
+            }
+        });
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (event, state) = match &outcome {
+            Ok(_) => ("job.completed", JobState::Completed),
+            Err(Error::Cancelled(_)) => ("job.cancelled", JobState::Cancelled),
+            Err(_) => ("job.failed", JobState::Failed),
+        };
+        {
+            let mut st = self.lock();
+            st.running -= 1;
+            if let Some(rec) = st.jobs.get_mut(&id) {
+                rec.state = state;
+                rec.wall_ms = Some(wall_ms);
+                match outcome {
+                    Ok(out) => rec.result = Some(render_result(rec, &out)),
+                    Err(e) => rec.error = Some(e.to_string()),
+                }
+            }
+        }
+        // the job's per-scope stats are folded into its result document
+        // above; the backend may reclaim the slice now
+        self.backend.release_scope(id);
+        if trace::enabled() {
+            trace::instant(
+                &format!("job-{id}"),
+                event,
+                vec![("id", trace::ArgValue::U64(id))],
+            );
+        }
+        self.cv.notify_all();
+        self.pump();
+    }
+
+    /// Request cancellation. Queued jobs cancel immediately; running
+    /// jobs observe the flag between trials and at the next round
+    /// boundary. Errors on unknown ids and on jobs already terminal.
+    pub fn cancel(&self, id: u64) -> Result<JobStatus> {
+        let status = {
+            let mut st = self.lock();
+            let rec = st
+                .jobs
+                .get_mut(&id)
+                .ok_or_else(|| Error::invalid(format!("no such job: {id}")))?;
+            if rec.state.is_terminal() {
+                return Err(Error::invalid(format!(
+                    "job {id} already {}",
+                    rec.state.name()
+                )));
+            }
+            rec.cancel.store(true, Ordering::SeqCst);
+            if rec.state == JobState::Queued {
+                rec.state = JobState::Cancelled;
+                rec.error = Some("cancelled while queued".into());
+            }
+            rec.status()
+        };
+        self.cv.notify_all();
+        Ok(status)
+    }
+
+    /// Point-in-time view of one job.
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        self.lock().jobs.get(&id).map(JobRecord::status)
+    }
+
+    /// Point-in-time view of every job, id order.
+    pub fn list(&self) -> Vec<JobStatus> {
+        self.lock().jobs.values().map(JobRecord::status).collect()
+    }
+
+    /// The rendered result document of a completed job (`None` until
+    /// the job completes; failed/cancelled jobs never have one).
+    pub fn result(&self, id: u64) -> Option<Json> {
+        self.lock().jobs.get(&id).and_then(|r| r.result.clone())
+    }
+
+    /// Block until the job reaches a terminal state; `None` for
+    /// unknown ids.
+    pub fn wait_terminal(&self, id: u64) -> Option<JobStatus> {
+        let mut st = self.lock();
+        loop {
+            let status = st.jobs.get(&id).map(JobRecord::status)?;
+            if status.state.is_terminal() {
+                return Some(status);
+            }
+            st = self.wait(st);
+        }
+    }
+
+    /// Stop admitting jobs; queued and running jobs finish normally.
+    /// Non-blocking — poll [`JobScheduler::drained`] or block on
+    /// [`JobScheduler::wait_drained`].
+    pub fn begin_drain(&self) {
+        let mut st = self.lock();
+        st.draining = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub fn draining(&self) -> bool {
+        self.lock().draining
+    }
+
+    /// `true` once a drain was requested *and* the service is idle.
+    pub fn drained(&self) -> bool {
+        let st = self.lock();
+        st.draining && st.running == 0 && st.queue.is_empty()
+    }
+
+    /// Block until [`JobScheduler::drained`].
+    pub fn wait_drained(&self) {
+        let mut st = self.lock();
+        while !(st.draining && st.running == 0 && st.queue.is_empty()) {
+            st = self.wait(st);
+        }
+    }
+
+    /// Per-state job counts: (queued, running, completed, failed,
+    /// cancelled).
+    pub fn counts(&self) -> (usize, usize, usize, usize, usize) {
+        let st = self.lock();
+        let mut c = (0, 0, 0, 0, 0);
+        for rec in st.jobs.values() {
+            match rec.state {
+                JobState::Queued => c.0 += 1,
+                JobState::Running => c.1 += 1,
+                JobState::Completed => c.2 += 1,
+                JobState::Failed => c.3 += 1,
+                JobState::Cancelled => c.4 += 1,
+            }
+        }
+        c
+    }
+
+    /// The `GET /healthz` document.
+    pub fn health_json(&self) -> Json {
+        let (queued, running, completed, failed, cancelled) = self.counts();
+        json::obj(vec![
+            (
+                "status",
+                json::s(if self.draining() { "draining" } else { "serving" }),
+            ),
+            (
+                "jobs",
+                json::obj(vec![
+                    ("queued", json::num(queued as f64)),
+                    ("running", json::num(running as f64)),
+                    ("completed", json::num(completed as f64)),
+                    ("failed", json::num(failed as f64)),
+                    ("cancelled", json::num(cancelled as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// The `GET /metrics` document: job-state counts, fleet identity,
+    /// uptime, and the backend's *global* per-worker stats (per-job
+    /// slices live in each job's result document).
+    pub fn metrics_json(&self) -> Json {
+        let (queued, running, completed, failed, cancelled) = self.counts();
+        let workers: Vec<Json> =
+            self.backend.worker_stats().iter().map(worker_json).collect();
+        json::obj(vec![
+            ("uptime_ms", json::num(self.uptime_ms())),
+            ("max_jobs", json::num(self.max_jobs as f64)),
+            ("draining", Json::Bool(self.draining())),
+            (
+                "jobs",
+                json::obj(vec![
+                    ("queued", json::num(queued as f64)),
+                    ("running", json::num(running as f64)),
+                    ("completed", json::num(completed as f64)),
+                    ("failed", json::num(failed as f64)),
+                    ("cancelled", json::num(cancelled as f64)),
+                ]),
+            ),
+            (
+                "fleet",
+                json::obj(vec![
+                    ("backend", json::s(self.backend.name())),
+                    ("capacity", json::s(&self.backend.profile().to_string())),
+                ]),
+            ),
+            ("workers", Json::Arr(workers)),
+        ])
+    }
+}
+
+/// One job's status as the HTTP resource document.
+pub fn status_json(status: &JobStatus) -> Json {
+    let mut fields = vec![
+        ("id", json::num(status.id as f64)),
+        ("state", json::s(status.state.name())),
+        ("summary", json::s(&status.summary)),
+        ("trials_done", json::num(status.trials_done as f64)),
+        ("trials_total", json::num(status.trials_total as f64)),
+        ("submitted_ms", json::num(status.submitted_ms)),
+    ];
+    if let Some(w) = status.wall_ms {
+        fields.push(("wall_ms", json::num(w)));
+    }
+    if let Some(e) = &status.error {
+        fields.push(("error", json::s(e)));
+    }
+    json::obj(fields)
+}
+
+fn worker_json(w: &WorkerStats) -> Json {
+    json::obj(vec![
+        ("addr", json::s(&w.addr)),
+        ("parts", json::num(w.parts as f64)),
+        ("oracle_evals", json::num(w.oracle_evals as f64)),
+        ("busy_ms", json::num(w.busy_ms)),
+        ("queue_wait_ms", json::num(w.queue_wait_ms)),
+        ("payload_bytes_binary", json::num(w.payload_bytes_binary as f64)),
+        ("payload_bytes_json", json::num(w.payload_bytes_json as f64)),
+        ("engine", json::s(&w.engine)),
+    ])
+}
+
+/// Render a completed job's result document. Trial values carry both a
+/// human-readable float and the exact bit pattern (`value_bits`, a
+/// decimal u64 string) so clients can assert bit-identity against
+/// serial runs without trusting float round-trips.
+fn render_result(rec: &JobRecord, out: &JobOutput) -> Json {
+    let trials: Vec<Json> = out
+        .trials
+        .iter()
+        .map(|t| {
+            json::obj(vec![
+                ("trial", json::num(t.trial as f64)),
+                ("value", json::num(t.value)),
+                ("value_bits", json::s(&t.value.to_bits().to_string())),
+                ("detail", json::s(&t.detail)),
+                ("wall_ms", json::num(t.wall_ms)),
+            ])
+        })
+        .collect();
+    let workers: Vec<Json> = out.worker_stats.iter().map(worker_json).collect();
+    json::obj(vec![
+        ("id", json::num(rec.id as f64)),
+        ("state", json::s("completed")),
+        ("header", json::s(&out.header.to_line())),
+        ("mean", json::num(out.mean)),
+        ("stddev", json::num(out.stddev)),
+        ("wall_ms", json::num(out.wall_ms)),
+        ("trials", Json::Arr(trials)),
+        ("workers", Json::Arr(workers)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::LocalBackend;
+
+    fn sched(max_jobs: usize) -> Arc<JobScheduler> {
+        let backend: Arc<dyn Backend> = Arc::new(LocalBackend::new(200));
+        JobScheduler::new(backend, max_jobs)
+    }
+
+    fn spec(trials: usize) -> JobSpec {
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.dataset = "tiny-2k".into();
+        cfg.k = 5;
+        cfg.capacity = CapacityProfile::uniform(200);
+        cfg.trials = trials;
+        JobSpec::from_config(cfg)
+    }
+
+    #[test]
+    fn two_jobs_complete_with_matching_results() {
+        let s = sched(2);
+        let a = s.submit(spec(1)).unwrap();
+        let b = s.submit(spec(1)).unwrap();
+        assert_eq!(s.wait_terminal(a).unwrap().state, JobState::Completed);
+        assert_eq!(s.wait_terminal(b).unwrap().state, JobState::Completed);
+        let ra = s.result(a).unwrap();
+        let rb = s.result(b).unwrap();
+        // identical specs → identical answers, down to the bit pattern
+        let bits = |doc: &Json| {
+            doc.get("trials")
+                .and_then(Json::as_arr)
+                .and_then(|a| a.first())
+                .and_then(|t| t.get("value_bits"))
+                .and_then(Json::as_str)
+                .map(str::to_string)
+        };
+        assert_eq!(bits(&ra), bits(&rb));
+        assert!(bits(&ra).is_some());
+        assert!(ra.get("header").and_then(Json::as_str).is_some());
+    }
+
+    #[test]
+    fn infeasible_specs_are_rejected_up_front() {
+        let s = sched(1);
+        let mut bad = spec(1);
+        bad.config.dataset = "no-such-dataset".into();
+        match s.submit(bad) {
+            Err(SubmitRejected::Invalid(m)) => assert!(m.contains("no-such-dataset")),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn draining_rejects_new_jobs_but_finishes_admitted_ones() {
+        let s = sched(1);
+        let a = s.submit(spec(2)).unwrap();
+        let b = s.submit(spec(1)).unwrap(); // queued behind a
+        s.begin_drain();
+        assert!(matches!(s.submit(spec(1)), Err(SubmitRejected::Draining)));
+        assert_eq!(s.wait_terminal(a).unwrap().state, JobState::Completed);
+        assert_eq!(s.wait_terminal(b).unwrap().state, JobState::Completed);
+        s.wait_drained();
+        assert!(s.drained());
+    }
+
+    #[test]
+    fn cancelling_a_queued_job_never_runs_it() {
+        let s = sched(1);
+        // a long job holds the only slot…
+        let long = s.submit(spec(3)).unwrap();
+        // …so this one is queued and cancellable before it starts
+        let victim = s.submit(spec(1)).unwrap();
+        let st = s.cancel(victim).unwrap();
+        assert_eq!(st.state, JobState::Cancelled);
+        // terminal cancels conflict
+        assert!(s.cancel(victim).is_err());
+        assert!(s.cancel(9999).is_err());
+        assert_eq!(s.wait_terminal(long).unwrap().state, JobState::Completed);
+        let done = s.wait_terminal(victim).unwrap();
+        assert_eq!(done.state, JobState::Cancelled);
+        assert_eq!(done.trials_done, 0);
+    }
+
+    #[test]
+    fn health_and_metrics_render() {
+        let s = sched(1);
+        let id = s.submit(spec(1)).unwrap();
+        s.wait_terminal(id);
+        let h = s.health_json();
+        assert_eq!(h.get("status").and_then(Json::as_str), Some("serving"));
+        let m = s.metrics_json();
+        assert!(m.get("uptime_ms").is_some());
+        assert_eq!(
+            m.get("fleet").and_then(|f| f.get("backend")).and_then(Json::as_str),
+            Some("local")
+        );
+        let st = s.status(id).unwrap();
+        let doc = status_json(&st);
+        assert_eq!(doc.get("state").and_then(Json::as_str), Some("completed"));
+    }
+}

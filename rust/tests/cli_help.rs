@@ -125,6 +125,37 @@ fn run_and_worker_help_document_the_engine_flag() {
 }
 
 #[test]
+fn serve_help_documents_the_job_api_and_fleet_flags() {
+    let text = run_hss(&["serve", "--help"]);
+    // every route of the job API is discoverable from the CLI…
+    for route in [
+        "POST /jobs",
+        "GET  /jobs/ID",
+        "GET  /jobs/ID/result",
+        "POST /jobs/ID/cancel",
+        "GET  /healthz",
+        "GET  /metrics",
+        "POST /shutdown",
+    ] {
+        assert!(text.contains(route), "`hss serve --help` lacks route '{route}':\n{text}");
+    }
+    // …along with the fleet flags, the capacity grammar, and the
+    // admission/fairness/drain contract
+    assert!(text.contains("--listen"), "{text}");
+    assert!(text.contains("--max-jobs"), "{text}");
+    for needle in CAPACITY_FORMS {
+        assert!(
+            text.contains(needle),
+            "`hss serve --help` output lacks grammar string '{needle}':\n{text}"
+        );
+    }
+    assert!(text.contains("ticket"), "{text}");
+    assert!(text.contains("docs/SERVE.md"), "{text}");
+    // help must not boot a daemon
+    assert!(!text.contains("listening on"), "{text}");
+}
+
+#[test]
 fn plan_help_documents_the_capacity_grammar() {
     let text = run_hss(&["plan", "--help"]);
     assert!(text.contains("--capacity"), "{text}");

@@ -1,0 +1,373 @@
+//! `hss serve` end-to-end: concurrent jobs over ONE real TCP fleet
+//! must each be bit-identical to their serial runs, report their own
+//! (not each other's) worker utilization, survive a mid-run worker
+//! kill, ignore a neighbor's cancellation, and drain gracefully under
+//! load.
+//!
+//! Workers are real `hss worker` processes (CARGO_BIN_EXE_hss) on
+//! ephemeral ports, like `dist_integration.rs`.
+
+use std::io::{BufRead, BufReader, Read as _, Write as _};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use hss::config::RunConfig;
+use hss::coordinator::{CapacityProfile, JobOutput, JobRunner, JobSpec};
+use hss::dist::{Backend, LocalBackend, TcpBackend};
+use hss::serve::{HttpServer, JobScheduler, JobState};
+use hss::util::json::Json;
+
+const MU: usize = 200;
+
+/// A spawned worker process, killed on drop so failing tests don't
+/// leak listeners.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn(capacity: usize) -> WorkerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_hss"))
+            .args([
+                "worker",
+                "--listen",
+                "127.0.0.1:0",
+                "--capacity",
+                &capacity.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn hss worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read worker announcement");
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("bad announcement line: {line:?}"))
+            .to_string();
+        WorkerProc { child, addr }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// A job spec for these scenarios: tree algorithm, uniform µ=200 fleet.
+fn job_cfg(dataset: &str, k: usize, seed: u64, trials: usize, constraint: Option<&str>) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = dataset.to_string();
+    cfg.k = k;
+    cfg.capacity = CapacityProfile::uniform(MU);
+    cfg.seed = seed;
+    cfg.trials = trials;
+    cfg.constraint = constraint.map(str::to_string);
+    cfg
+}
+
+/// The serial reference: the same spec through the same JobRunner on a
+/// private local backend (the dist suite already proves local == tcp
+/// bit-identity for the runner's substrate).
+fn serial_run(cfg: &RunConfig) -> JobOutput {
+    let backend: Arc<dyn Backend> = Arc::new(LocalBackend::new(MU));
+    JobRunner::new(backend)
+        .run(&JobSpec::from_config(cfg.clone()))
+        .expect("serial reference run")
+}
+
+/// Pull `(value_bits, detail)` per trial out of a served result doc.
+fn served_trials(doc: &Json) -> Vec<(String, String)> {
+    doc.get("trials")
+        .and_then(Json::as_arr)
+        .expect("result has trials")
+        .iter()
+        .map(|t| {
+            (
+                t.get("value_bits")
+                    .and_then(Json::as_str)
+                    .expect("trial has value_bits")
+                    .to_string(),
+                t.get("detail")
+                    .and_then(Json::as_str)
+                    .expect("trial has detail")
+                    .to_string(),
+            )
+        })
+        .collect()
+}
+
+fn assert_bit_identical(doc: &Json, serial: &JobOutput, label: &str) {
+    let served = served_trials(doc);
+    assert_eq!(served.len(), serial.trials.len(), "{label}: trial count");
+    for (i, (bits, detail)) in served.iter().enumerate() {
+        assert_eq!(
+            bits,
+            &serial.trials[i].value.to_bits().to_string(),
+            "{label}: trial {i} value not bit-identical to the serial run"
+        );
+        assert_eq!(
+            detail, &serial.trials[i].detail,
+            "{label}: trial {i} detail drifted from the serial run"
+        );
+    }
+}
+
+/// `evals=N` out of a tree-run detail string.
+fn evals_of(detail: &str) -> u64 {
+    detail
+        .split("evals=")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|n| n.parse().ok())
+        .unwrap_or_else(|| panic!("no evals= in detail: {detail}"))
+}
+
+fn sum_worker_evals(doc: &Json) -> u64 {
+    doc.get("workers")
+        .and_then(Json::as_arr)
+        .expect("result has workers")
+        .iter()
+        .map(|w| {
+            w.get("oracle_evals")
+                .and_then(Json::as_usize)
+                .expect("worker has oracle_evals") as u64
+        })
+        .sum()
+}
+
+/// Tentpole acceptance: two jobs with different datasets and
+/// constraints run CONCURRENTLY over one real two-worker TCP fleet.
+/// Each must be bit-identical to its serial run, and each job's
+/// result must carry only its own worker utilization (the scoped
+/// per-job slice sums to the job's own oracle-eval total).
+#[test]
+fn two_concurrent_jobs_over_one_tcp_fleet_are_bit_identical_to_serial() {
+    let w1 = WorkerProc::spawn(MU);
+    let w2 = WorkerProc::spawn(MU);
+    let tcp = Arc::new(
+        TcpBackend::new(MU, vec![w1.addr.clone(), w2.addr.clone()]).unwrap(),
+    );
+    let backend: Arc<dyn Backend> = tcp.clone();
+    let scheduler = JobScheduler::new(backend, 2);
+
+    let cfg_a = job_cfg("csn-2k", 10, 42, 1, None);
+    let cfg_b = job_cfg("tiny-2k", 8, 7, 1, Some("knapsack:b=500,w=rownorm2"));
+    let serial_a = serial_run(&cfg_a);
+    let serial_b = serial_run(&cfg_b);
+
+    let a = scheduler.submit(JobSpec::from_config(cfg_a)).unwrap();
+    let b = scheduler.submit(JobSpec::from_config(cfg_b)).unwrap();
+    assert_eq!(scheduler.wait_terminal(a).unwrap().state, JobState::Completed);
+    assert_eq!(scheduler.wait_terminal(b).unwrap().state, JobState::Completed);
+
+    let doc_a = scheduler.result(a).expect("job a result");
+    let doc_b = scheduler.result(b).expect("job b result");
+    assert_bit_identical(&doc_a, &serial_a, "job a (csn-2k)");
+    assert_bit_identical(&doc_b, &serial_b, "job b (tiny-2k + knapsack)");
+
+    // per-job attribution: each result's worker slice sums to exactly
+    // that job's oracle work — not the fleet-lifetime total the two
+    // jobs produced together (the old conflation bug)
+    let evals_a = evals_of(&serial_a.trials[0].detail);
+    let evals_b = evals_of(&serial_b.trials[0].detail);
+    assert_eq!(sum_worker_evals(&doc_a), evals_a, "job a charged wrong evals");
+    assert_eq!(sum_worker_evals(&doc_b), evals_b, "job b charged wrong evals");
+    // and the global (lifetime) stats are the union of both
+    let global: u64 = tcp.worker_stats().iter().map(|w| w.oracle_evals).sum();
+    assert_eq!(global, evals_a + evals_b, "global stats are not the union");
+
+    tcp.shutdown_workers();
+}
+
+/// Satellite 2 regression: two SEQUENTIAL jobs on one backend must
+/// each report worker stats for their own interval only. Before the
+/// snapshot/delta API, job 2's report included job 1's work.
+#[test]
+fn sequential_jobs_report_their_own_interval_not_the_lifetime_total() {
+    let w = WorkerProc::spawn(MU);
+    let tcp = Arc::new(TcpBackend::new(MU, vec![w.addr.clone()]).unwrap());
+    let backend: Arc<dyn Backend> = tcp.clone();
+    let runner = JobRunner::new(backend);
+
+    let cfg = job_cfg("csn-2k", 10, 42, 1, None);
+    let out1 = runner.run(&JobSpec::from_config(cfg.clone())).unwrap();
+    let out2 = runner.run(&JobSpec::from_config(cfg)).unwrap();
+
+    let evals = evals_of(&out1.trials[0].detail);
+    assert_eq!(out2.trials[0].detail, out1.trials[0].detail);
+    let sum1: u64 = out1.worker_stats.iter().map(|s| s.oracle_evals).sum();
+    let sum2: u64 = out2.worker_stats.iter().map(|s| s.oracle_evals).sum();
+    assert_eq!(sum1, evals, "job 1 interval stats are wrong");
+    assert_eq!(
+        sum2, evals,
+        "job 2's report includes job 1's work — interval conflation regressed"
+    );
+    // lifetime stats keep accumulating underneath
+    let lifetime: u64 = tcp.worker_stats().iter().map(|s| s.oracle_evals).sum();
+    assert_eq!(lifetime, 2 * evals);
+
+    tcp.shutdown_workers();
+}
+
+/// Concurrent jobs keep their answers through a mid-run worker kill:
+/// the in-flight parts requeue on the survivor and both results stay
+/// bit-identical to their serial runs.
+#[test]
+fn concurrent_jobs_survive_a_mid_run_worker_kill_bit_identically() {
+    let victim = WorkerProc::spawn(MU);
+    let survivor = WorkerProc::spawn(MU);
+    let tcp = Arc::new(
+        TcpBackend::new(MU, vec![victim.addr.clone(), survivor.addr.clone()]).unwrap(),
+    );
+    let backend: Arc<dyn Backend> = tcp.clone();
+    let scheduler = JobScheduler::new(backend, 2);
+
+    // warm both connections so the kill breaks an in-flight dispatch
+    let warm = scheduler
+        .submit(JobSpec::from_config(job_cfg("tiny-2k", 5, 1, 1, None)))
+        .unwrap();
+    assert_eq!(
+        scheduler.wait_terminal(warm).unwrap().state,
+        JobState::Completed
+    );
+
+    let cfg_a = job_cfg("csn-2k", 10, 42, 1, None);
+    let cfg_b = job_cfg("tiny-2k", 8, 7, 1, None);
+    let serial_a = serial_run(&cfg_a);
+    let serial_b = serial_run(&cfg_b);
+
+    let a = scheduler.submit(JobSpec::from_config(cfg_a)).unwrap();
+    let b = scheduler.submit(JobSpec::from_config(cfg_b)).unwrap();
+    // kill one worker while both jobs are in flight
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    drop(victim);
+
+    assert_eq!(scheduler.wait_terminal(a).unwrap().state, JobState::Completed);
+    assert_eq!(scheduler.wait_terminal(b).unwrap().state, JobState::Completed);
+    assert_bit_identical(
+        &scheduler.result(a).unwrap(),
+        &serial_a,
+        "job a after worker kill",
+    );
+    assert_bit_identical(
+        &scheduler.result(b).unwrap(),
+        &serial_b,
+        "job b after worker kill",
+    );
+
+    tcp.shutdown_workers();
+}
+
+/// Cancelling one tenant must not disturb the other: the survivor's
+/// answer stays bit-identical to its serial run, and the cancelled
+/// job terminates as Cancelled without a result document.
+#[test]
+fn cancelling_one_job_does_not_disturb_its_neighbor() {
+    let w1 = WorkerProc::spawn(MU);
+    let w2 = WorkerProc::spawn(MU);
+    let tcp = Arc::new(
+        TcpBackend::new(MU, vec![w1.addr.clone(), w2.addr.clone()]).unwrap(),
+    );
+    let backend: Arc<dyn Backend> = tcp.clone();
+    let scheduler = JobScheduler::new(backend, 2);
+
+    // the victim is long (many trials) so the cancel lands mid-job
+    let victim_cfg = job_cfg("csn-2k", 25, 5, 8, None);
+    let keeper_cfg = job_cfg("tiny-2k", 8, 7, 1, None);
+    let serial_keeper = serial_run(&keeper_cfg);
+
+    let victim = scheduler.submit(JobSpec::from_config(victim_cfg)).unwrap();
+    let keeper = scheduler.submit(JobSpec::from_config(keeper_cfg)).unwrap();
+    scheduler.cancel(victim).unwrap();
+
+    let vs = scheduler.wait_terminal(victim).unwrap();
+    assert_eq!(vs.state, JobState::Cancelled, "victim should cancel");
+    assert!(scheduler.result(victim).is_none(), "cancelled jobs have no result");
+    assert_eq!(
+        scheduler.wait_terminal(keeper).unwrap().state,
+        JobState::Completed
+    );
+    assert_bit_identical(
+        &scheduler.result(keeper).unwrap(),
+        &serial_keeper,
+        "keeper next to a cancelled job",
+    );
+
+    tcp.shutdown_workers();
+}
+
+/// Minimal blocking HTTP client for the drain scenario.
+fn http(addr: &str, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect to serve");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).expect("send request head");
+    stream.write_all(body.as_bytes()).expect("send request body");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let code: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .expect("response status code");
+    let payload = raw.split("\r\n\r\n").nth(1).unwrap_or("");
+    (code, Json::parse(payload).unwrap_or(Json::Null))
+}
+
+/// Satellite 1: graceful drain UNDER LOAD over the real HTTP surface.
+/// With max_jobs=1 one job runs and one queues; `POST /shutdown` must
+/// reject new work with 503 while BOTH admitted jobs still finish,
+/// then the serve loop exits on its own.
+#[test]
+fn drain_under_load_finishes_admitted_jobs_and_rejects_new_ones() {
+    let backend: Arc<dyn Backend> = Arc::new(LocalBackend::new(MU));
+    let scheduler = JobScheduler::new(backend, 1);
+    let server = HttpServer::bind("127.0.0.1:0", Arc::clone(&scheduler))
+        .expect("bind ephemeral serve port");
+    let addr = server.local_addr();
+    let serving = std::thread::spawn(move || server.run(&|| false));
+
+    let spec = r#"{"dataset":"csn-2k","algo":"tree","k":10,"capacity":200,"trials":2,"seed":42}"#;
+    let (code, created_a) = http(&addr, "POST", "/jobs", spec);
+    assert_eq!(code, 201, "first submission admitted");
+    let (code, created_b) = http(&addr, "POST", "/jobs", spec);
+    assert_eq!(code, 201, "second submission queues behind the first");
+    let id_a = created_a.get("id").and_then(Json::as_usize).unwrap() as u64;
+    let id_b = created_b.get("id").and_then(Json::as_usize).unwrap() as u64;
+
+    // drain while job A runs and job B is still queued
+    let (code, doc) = http(&addr, "POST", "/shutdown", "");
+    assert_eq!(code, 202);
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("draining"));
+    let (code, _) = http(&addr, "POST", "/jobs", spec);
+    assert_eq!(code, 503, "draining service must reject new jobs");
+    let (code, health) = http(&addr, "GET", "/healthz", "");
+    assert_eq!(code, 200);
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("draining"));
+
+    // both admitted jobs still complete, then the loop exits
+    assert_eq!(
+        scheduler.wait_terminal(id_a).unwrap().state,
+        JobState::Completed,
+        "in-flight job must finish during drain"
+    );
+    assert_eq!(
+        scheduler.wait_terminal(id_b).unwrap().state,
+        JobState::Completed,
+        "queued job must finish during drain"
+    );
+    serving.join().expect("serve loop exits once drained");
+    assert!(scheduler.drained());
+}
